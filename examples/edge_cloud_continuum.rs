@@ -1,0 +1,81 @@
+//! Edge–cloud continuum — the paper's §2 motivation, interactive.
+//!
+//! Runs the four canonical Table-1 prompts (P1–P4) against the Jetson-1B,
+//! Ada-12B and cloud (Gemini-Flash-class) backends and prints the Fig. 1
+//! and Fig. 2 series side by side, then demonstrates the "key takeaway":
+//! a three-way complexity-aware split (simple → Jetson, moderate → Ada,
+//! complex → cloud) dominates any single backend on latency while staying
+//! near the edge-only carbon floor.
+//!
+//! Run:  cargo run --release --example edge_cloud_continuum
+
+use verdant::bench::{fig1, fig2};
+use verdant::cluster::{CarbonModel, DeviceProfile, LinkModel};
+use verdant::config::DeviceKind;
+use verdant::simulator::{simulate_batch, BatchWork};
+use verdant::workload::canonical;
+
+fn main() {
+    let (_, t1) = fig1::run();
+    println!("{}", t1.ascii());
+    let (_, t2) = fig2::run();
+    println!("{}", t2.ascii());
+
+    // the takeaway experiment: route each canonical prompt by complexity
+    let jetson = DeviceProfile::jetson();
+    let ada = DeviceProfile::ada();
+    let cloud = DeviceProfile::cloud();
+    let link = LinkModel::new(80.0, 50.0);
+    let carbon = CarbonModel::constant(69.0);
+
+    println!("== complexity-aware three-way split (the paper's 'key takeaway') ==");
+    let mut total_latency = 0.0;
+    let mut total_carbon = 0.0;
+    for p in canonical::ALL {
+        let cs = p.scored_cs();
+        let dev = if cs < 0.2 {
+            &jetson
+        } else if cs < 0.45 {
+            &ada
+        } else {
+            &cloud
+        };
+        let out = p.to_prompt(0).output_tokens_on(dev.output_median_tokens);
+        let work = BatchWork::new(vec![p.text.len()], vec![out]);
+        let t = simulate_batch(dev, &work, None);
+        let net = if dev.kind == DeviceKind::Cloud {
+            link.token_round_trip_s(p.text.len(), out)
+        } else {
+            0.0
+        };
+        let lat = t.total_s + net;
+        let kg = carbon.kg_co2e(t.energy_kwh, 0.0);
+        total_latency += lat;
+        total_carbon += kg;
+        println!(
+            "  {} (CS {:.2}) -> {:<14}  {:>6.2} s  {:.2e} kgCO2e",
+            p.id, cs, dev.name, lat, kg
+        );
+    }
+    println!("  split total:   {total_latency:.2} s, {total_carbon:.2e} kgCO2e");
+
+    // compare against each single backend
+    for dev in [&jetson, &ada, &cloud] {
+        let mut lat = 0.0;
+        let mut kg = 0.0;
+        for p in canonical::ALL {
+            let out = p.to_prompt(0).output_tokens_on(dev.output_median_tokens);
+            let work = BatchWork::new(vec![p.text.len()], vec![out]);
+            let t = simulate_batch(dev, &work, None);
+            let net = if dev.kind == DeviceKind::Cloud {
+                link.token_round_trip_s(p.text.len(), out)
+            } else {
+                0.0
+            };
+            lat += t.total_s + net;
+            kg += carbon.kg_co2e(t.energy_kwh, 0.0);
+        }
+        println!("  all-on-{:<14} {lat:>6.2} s, {kg:.2e} kgCO2e", dev.name);
+    }
+    println!("\n(relying solely on either compact edge models or large cloud LLMs is suboptimal — §2)");
+}

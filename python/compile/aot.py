@@ -1,0 +1,217 @@
+"""AOT compile path: lower the L2 model to HLO text + weight sidecars.
+
+Run once by ``make artifacts``; Python never appears on the request path.
+For every model variant and every paper batch size b in {1, 4, 8} this
+emits:
+
+  artifacts/<variant>/prefill_b<b>.hlo.txt
+  artifacts/<variant>/decode_b<b>.hlo.txt
+  artifacts/<variant>.weights.bin       (flat little-endian tensor dump)
+  artifacts/manifest.json               (geometry + param layout + entries)
+
+Interchange format is HLO **text**, not a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which the `xla`
+crate's xla_extension 0.5.1 rejects (proto.id() <= INT_MAX); the text
+parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md). Lowered with return_tuple=True; the Rust
+side unwraps with decompose_tuple().
+
+Weights are passed as runtime *parameters* (leading arguments, in
+cfg.param_layout() order) rather than baked constants: the sidecar binary
+is loaded once by rust/src/runtime/engine.rs and kept as PJRT literals.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import pathlib
+
+import numpy as np
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import configs, model
+
+DTYPE_NP = {"f32": np.float32, "i8": np.int8}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _param_specs(cfg: configs.ModelConfig) -> list[jax.ShapeDtypeStruct]:
+    return [
+        jax.ShapeDtypeStruct(shape, DTYPE_NP[dt])
+        for (_, dt, shape) in cfg.param_layout()
+    ]
+
+
+def _make_prefill_fn(cfg: configs.ModelConfig, n_params: int):
+    def f(*args):
+        params = list(args[:n_params])
+        tokens, lens = args[n_params], args[n_params + 1]
+        return model.prefill(cfg, params, tokens, lens)
+
+    return f
+
+
+def _make_decode_fn(cfg: configs.ModelConfig, n_params: int):
+    def f(*args):
+        params = list(args[:n_params])
+        token, pos, kv_k, kv_v = args[n_params : n_params + 4]
+        return model.decode_step(cfg, params, token, pos, kv_k, kv_v)
+
+    return f
+
+
+def _make_decode_chunk_fn(cfg: configs.ModelConfig, n_params: int, steps: int):
+    def f(*args):
+        params = list(args[:n_params])
+        token, pos, kv_k, kv_v = args[n_params : n_params + 4]
+        return model.decode_chunk(cfg, params, token, pos, kv_k, kv_v, steps)
+
+    return f
+
+
+def lower_variant(cfg: configs.ModelConfig, out_dir: pathlib.Path,
+                  batch_sizes=configs.BATCH_SIZES,
+                  prefill_len: int = configs.PREFILL_LEN) -> dict:
+    """Lower all (entry, batch) artifacts for one variant; return manifest."""
+    if cfg.max_seq < prefill_len:
+        raise ValueError(
+            f"{cfg.name}: max_seq={cfg.max_seq} < prefill_len={prefill_len}"
+        )
+    layout = cfg.param_layout()
+    n = len(layout)
+    pspecs = _param_specs(cfg)
+    vdir = out_dir / cfg.name
+    vdir.mkdir(parents=True, exist_ok=True)
+
+    kv_shape = (cfg.n_layers, None, cfg.max_seq, cfg.n_kv_heads, cfg.head_dim)
+    entries = {}
+    for b in batch_sizes:
+        kv = jax.ShapeDtypeStruct(
+            tuple(b if d is None else d for d in kv_shape), np.float32
+        )
+        # prefill(params..., tokens[b, S], lens[b])
+        pf = jax.jit(_make_prefill_fn(cfg, n)).lower(
+            *pspecs,
+            jax.ShapeDtypeStruct((b, prefill_len), np.int32),
+            jax.ShapeDtypeStruct((b,), np.int32),
+        )
+        path = vdir / f"prefill_b{b}.hlo.txt"
+        path.write_text(to_hlo_text(pf))
+        entries[f"prefill_b{b}"] = {
+            "file": f"{cfg.name}/prefill_b{b}.hlo.txt",
+            "kind": "prefill",
+            "batch": b,
+            "prefill_len": prefill_len,
+        }
+        # decode(params..., token[b], pos[b], kv_k, kv_v)
+        dc = jax.jit(_make_decode_fn(cfg, n)).lower(
+            *pspecs,
+            jax.ShapeDtypeStruct((b,), np.int32),
+            jax.ShapeDtypeStruct((b,), np.int32),
+            kv,
+            kv,
+        )
+        path = vdir / f"decode_b{b}.hlo.txt"
+        path.write_text(to_hlo_text(dc))
+        entries[f"decode_b{b}"] = {
+            "file": f"{cfg.name}/decode_b{b}.hlo.txt",
+            "kind": "decode",
+            "batch": b,
+        }
+        # chunked decode (§Perf): DECODE_CHUNK greedy steps per launch
+        dck = jax.jit(_make_decode_chunk_fn(cfg, n, configs.DECODE_CHUNK)).lower(
+            *pspecs,
+            jax.ShapeDtypeStruct((b,), np.int32),
+            jax.ShapeDtypeStruct((b,), np.int32),
+            kv,
+            kv,
+        )
+        path = vdir / f"decode_chunk_b{b}.hlo.txt"
+        path.write_text(to_hlo_text(dck))
+        entries[f"decode_chunk_b{b}"] = {
+            "file": f"{cfg.name}/decode_chunk_b{b}.hlo.txt",
+            "kind": "decode_chunk",
+            "batch": b,
+            "steps": configs.DECODE_CHUNK,
+        }
+
+    # Weight sidecar: flat little-endian dump in layout order.
+    params = model.init_params(cfg)
+    weights_file = f"{cfg.name}.weights.bin"
+    pmeta = []
+    offset = 0
+    with open(out_dir / weights_file, "wb") as f:
+        for (name, dt, shape), arr in zip(layout, params):
+            assert arr.dtype == DTYPE_NP[dt] and arr.shape == tuple(shape), name
+            raw = np.ascontiguousarray(arr).tobytes()
+            f.write(raw)
+            pmeta.append({
+                "name": name, "dtype": dt, "shape": list(shape),
+                "offset": offset, "bytes": len(raw),
+            })
+            offset += len(raw)
+
+    return {
+        "weights_file": weights_file,
+        "weights_bytes": offset,
+        "weights_sha256": hashlib.sha256(
+            (out_dir / weights_file).read_bytes()
+        ).hexdigest(),
+        "params": pmeta,
+        "config": {
+            "vocab": cfg.vocab, "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers, "n_heads": cfg.n_heads,
+            "n_kv_heads": cfg.n_kv_heads, "head_dim": cfg.head_dim,
+            "d_ff": cfg.d_ff, "max_seq": cfg.max_seq,
+            "rope_theta": cfg.rope_theta, "seed": cfg.seed,
+        },
+        "entries": entries,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifacts directory")
+    ap.add_argument("--variants", nargs="*", default=list(configs.VARIANTS),
+                    help="subset of variants to lower")
+    args = ap.parse_args()
+
+    out_dir = pathlib.Path(args.out).resolve()
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    manifest = {
+        "version": configs.MANIFEST_VERSION,
+        "prefill_len": configs.PREFILL_LEN,
+        "max_seq": configs.MAX_SEQ,
+        "vocab": configs.VOCAB,
+        "eos_id": configs.EOS_ID,
+        "batch_sizes": list(configs.BATCH_SIZES),
+        "variants": {},
+    }
+    for name in args.variants:
+        cfg = configs.VARIANTS[name]
+        print(f"[aot] lowering {name} ...", flush=True)
+        manifest["variants"][name] = lower_variant(cfg, out_dir)
+
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    total = sum(
+        (out_dir / e["file"]).stat().st_size
+        for v in manifest["variants"].values()
+        for e in v["entries"].values()
+    )
+    print(f"[aot] wrote manifest + {total/1e6:.1f} MB of HLO under {out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,133 @@
+"""Model variant configurations for the edge cluster.
+
+The paper serves Gemma-3-1B-it-qat (Jetson Orin NX 8GB) and
+Gemma-3-12B-it-qat (Ada 2000 16GB) via Ollama. We cannot ship real Gemma
+weights, so each variant here is a Gemma-*architecture* miniature
+(RMSNorm + RoPE + GQA + SwiGLU + tied embeddings + int8-quantized MLP)
+with deterministic seeded weights. The Rust coordinator serves these for
+real through PJRT; the calibrated device simulator supplies
+Jetson/Ada-scale timing and energy (DESIGN.md §Real-vs-calibrated-clock).
+
+Shared serving geometry (must match rust/src/runtime/):
+  PREFILL_LEN  — prompts are tokenized/truncated/padded to this length
+  MAX_SEQ      — KV-cache capacity (PREFILL_LEN + max new tokens)
+  BATCH_SIZES  — the paper's batch configurations {1, 4, 8}
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+PREFILL_LEN = 64
+MAX_SEQ = 192
+BATCH_SIZES = (1, 4, 8)
+# greedy decode steps fused into one executable (§Perf L2 optimization)
+DECODE_CHUNK = 8
+VOCAB = 256  # byte-level vocabulary; tokenizer must agree (rust workload::tokenizer)
+EOS_ID = 0
+MANIFEST_VERSION = 2
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Gemma-style decoder-only transformer geometry."""
+
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    rope_theta: float = 10_000.0
+    max_seq: int = MAX_SEQ
+    seed: int = 0
+
+    def __post_init__(self) -> None:
+        if self.n_heads % self.n_kv_heads != 0:
+            raise ValueError("n_heads must be a multiple of n_kv_heads (GQA)")
+        if self.head_dim % 2 != 0:
+            raise ValueError("head_dim must be even (RoPE pairs)")
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+    def param_layout(self) -> list[tuple[str, str, tuple[int, ...]]]:
+        """Flat (name, dtype, shape) list — THE param order contract.
+
+        The Rust runtime feeds execute() literals in exactly this order,
+        followed by the activations. aot.py serializes weights.bin in this
+        order too. Keep all three in sync.
+        """
+        c = self
+        layout: list[tuple[str, str, tuple[int, ...]]] = [
+            ("embed", "f32", (c.vocab, c.d_model)),
+        ]
+        for i in range(c.n_layers):
+            p = f"layer{i}."
+            layout += [
+                (p + "ln_attn", "f32", (c.d_model,)),
+                (p + "wq", "f32", (c.d_model, c.q_dim)),
+                (p + "wk", "f32", (c.d_model, c.kv_dim)),
+                (p + "wv", "f32", (c.d_model, c.kv_dim)),
+                (p + "wo", "f32", (c.q_dim, c.d_model)),
+                (p + "ln_mlp", "f32", (c.d_model,)),
+                (p + "w_gate_q", "i8", (c.d_model, c.d_ff)),
+                (p + "s_gate", "f32", (c.d_ff,)),
+                (p + "w_up_q", "i8", (c.d_model, c.d_ff)),
+                (p + "s_up", "f32", (c.d_ff,)),
+                (p + "w_down_q", "i8", (c.d_ff, c.d_model)),
+                (p + "s_down", "f32", (c.d_model,)),
+            ]
+        layout.append(("ln_final", "f32", (c.d_model,)))
+        return layout
+
+    def param_count(self) -> int:
+        return sum(
+            int.__mul__(1, 1) * _prod(shape) for _, _, shape in self.param_layout()
+        )
+
+
+def _prod(shape: tuple[int, ...]) -> int:
+    out = 1
+    for s in shape:
+        out *= s
+    return out
+
+
+# The two edge variants, mirroring the paper's Gemma-3-1B / Gemma-3-12B
+# capacity gap (~4.3x parameters here vs ~12x in the paper; the simulator's
+# per-device token rates carry the real performance gap).
+EDGE_1B_SIM = ModelConfig(
+    name="edge-1b-sim",
+    vocab=VOCAB,
+    d_model=128,
+    n_layers=2,
+    n_heads=4,
+    n_kv_heads=2,
+    head_dim=32,
+    d_ff=256,
+    seed=101,
+)
+
+EDGE_12B_SIM = ModelConfig(
+    name="edge-12b-sim",
+    vocab=VOCAB,
+    d_model=256,
+    n_layers=4,
+    n_heads=8,
+    n_kv_heads=4,
+    head_dim=32,
+    d_ff=512,
+    seed=102,
+)
+
+VARIANTS: dict[str, ModelConfig] = {
+    c.name: c for c in (EDGE_1B_SIM, EDGE_12B_SIM)
+}

@@ -1,0 +1,133 @@
+"""Pallas kernel: flash-decode GQA attention over the padded KV cache.
+
+The serving hot path: one query token per sequence attends over its KV
+cache. The paper's hardware does this with CUDA warp-per-row reductions;
+the TPU re-think (DESIGN.md §Hardware-Adaptation):
+
+- grid is (B, H): one program instance per (sequence, query-head), the
+  natural decode parallelism (no sequence-level parallelism to exploit —
+  there is exactly one query position);
+- the kv-head block for that instance is selected in the BlockSpec index
+  map (``h // group``), so GQA sharing is expressed as HBM->VMEM block
+  routing rather than an explicit gather;
+- inside the kernel an **online-softmax** loop walks the cache in
+  ``CHUNK``-sized slices (``pl.ds``), carrying the running max ``m``,
+  normalizer ``l`` and weighted accumulator — the flash-decode recurrence —
+  so the VMEM working set is one chunk of K and V, not the whole cache;
+- per-row valid lengths mask out cache padding (positions >= lens[b]).
+
+``interpret=True`` per the image constraint; block/chunk choices drive the
+§Perf VMEM analysis.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Cache positions processed per online-softmax step. 64 keeps the chunk
+# working set (2 * CHUNK * D f32) comfortably inside VMEM for D <= 256
+# while amortizing loop overhead over the small edge-model caches.
+CHUNK = 64
+
+_NEG_INF = -1e30
+
+
+def _decode_attn_kernel(q_ref, k_ref, v_ref, lens_ref, o_ref, *, scale: float, chunk: int):
+    """One (b, h) instance: online-softmax attention of a single query.
+
+    Block views:
+      q_ref:    (1, 1, D)       this row+head's query
+      k_ref:    (1, S, 1, D)    this row's kv-head key cache (S padded)
+      v_ref:    (1, S, 1, D)
+      lens_ref: (1,)            valid cache length for this row
+      o_ref:    (1, 1, D)
+    """
+    d = q_ref.shape[-1]
+    s_padded = k_ref.shape[1]
+    n_chunks = s_padded // chunk
+
+    q = q_ref[0, 0, :] * scale  # [D]
+    length = lens_ref[0]
+
+    def body(c, carry):
+        m_prev, l_prev, acc_prev = carry
+        start = c * chunk
+        k_blk = k_ref[0, pl.ds(start, chunk), 0, :]  # [chunk, D]
+        v_blk = v_ref[0, pl.ds(start, chunk), 0, :]  # [chunk, D]
+
+        s = k_blk @ q  # [chunk]
+        idx = start + jax.lax.iota(jnp.int32, chunk)
+        s = jnp.where(idx < length, s, _NEG_INF)
+
+        m_new = jnp.maximum(m_prev, jnp.max(s))
+        p = jnp.exp(s - m_new)  # [chunk]
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + jnp.sum(p)
+        acc_new = acc_prev * alpha + p @ v_blk  # [D]
+        return m_new, l_new, acc_new
+
+    m0 = jnp.float32(_NEG_INF)
+    l0 = jnp.float32(0.0)
+    acc0 = jnp.zeros((d,), jnp.float32)
+    m_f, l_f, acc_f = jax.lax.fori_loop(0, n_chunks, body, (m0, l0, acc0))
+
+    # l_f == 0 can only happen for an all-masked cache (length == 0, which
+    # the wrapper forbids); guard anyway so padding rows emit zeros.
+    o_ref[0, 0, :] = acc_f / jnp.maximum(l_f, 1e-30)
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "chunk"))
+def decode_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    lens: jax.Array,
+    *,
+    scale: float | None = None,
+    chunk: int = CHUNK,
+) -> jax.Array:
+    """Flash-decode attention. Semantics == ref.decode_attention_ref.
+
+    q: f32[B, H, D], k/v: f32[B, S, Hkv, D], lens: i32[B] -> f32[B, H, D].
+    The cache length S is zero-padded up to a multiple of ``chunk``; padded
+    positions are masked by the lens comparison.
+    """
+    b, h, d = q.shape
+    s, hkv = k.shape[1], k.shape[2]
+    if k.shape != (b, s, hkv, d) or v.shape != k.shape:
+        raise ValueError(f"bad kv shapes: q{q.shape} k{k.shape} v{v.shape}")
+    if h % hkv != 0:
+        raise ValueError(f"GQA requires H % Hkv == 0, got H={h} Hkv={hkv}")
+    if lens.shape != (b,):
+        raise ValueError(f"lens must be [B]; got {lens.shape}")
+    group = h // hkv
+    if scale is None:
+        scale = 1.0 / float(d) ** 0.5
+
+    ch = min(chunk, _ceil_to(s, 8))
+    sp = _ceil_to(s, ch)
+    kp = jnp.pad(k.astype(jnp.float32), ((0, 0), (0, sp - s), (0, 0), (0, 0)))
+    vp = jnp.pad(v.astype(jnp.float32), ((0, 0), (0, sp - s), (0, 0), (0, 0)))
+
+    out = pl.pallas_call(
+        functools.partial(_decode_attn_kernel, scale=float(scale), chunk=ch),
+        grid=(b, h),
+        in_specs=[
+            pl.BlockSpec((1, 1, d), lambda bb, hh: (bb, hh, 0)),
+            pl.BlockSpec((1, sp, 1, d), lambda bb, hh: (bb, 0, hh // group, 0)),
+            pl.BlockSpec((1, sp, 1, d), lambda bb, hh: (bb, 0, hh // group, 0)),
+            pl.BlockSpec((1,), lambda bb, hh: (bb,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, d), lambda bb, hh: (bb, hh, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, d), jnp.float32),
+        interpret=True,
+    )(q.astype(jnp.float32), kp, vp, lens.astype(jnp.int32))
+    return out

@@ -1,0 +1,115 @@
+"""Pallas kernel: int8-weight x f32-activation matmul with per-channel dequant.
+
+This is the QAT-GEMM hot spot of the paper's quantized Gemma checkpoints,
+re-thought for the TPU execution model (see DESIGN.md §Hardware-Adaptation):
+
+- instead of a CUDA threadblock dequantizing int8 tiles into shared memory
+  and issuing tensor-core WMMA, we tile the GEMM with ``BlockSpec``s so the
+  (bm, bk) activation tile and (bk, bn) int8 weight tile stream HBM->VMEM,
+  dequantize on the VPU, and accumulate on the MXU in f32;
+- the K grid dimension is innermost so the f32 accumulator lives in the
+  revisited output block across K steps (the canonical Pallas matmul
+  accumulation pattern) — no HBM round-trip for partial sums;
+- per-output-channel scales are applied once after the final K step, which
+  is exact because the scale factors out of the K-reduction.
+
+``interpret=True`` is mandatory on this image (CPU PJRT cannot run Mosaic
+custom-calls); the block structure is still what a real TPU lowering would
+use, and DESIGN.md §Perf derives the VMEM footprint / MXU utilisation
+estimates from these block shapes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _qmm_kernel(x_ref, wq_ref, scale_ref, o_ref):
+    """One (m, n, k) grid step: o[m, n] (+)= x[m, k] @ dequant(wq[k, n])."""
+    k_step = pl.program_id(2)
+
+    @pl.when(k_step == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]
+    w = wq_ref[...].astype(jnp.float32)
+    o_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+    @pl.when(k_step == pl.num_programs(2) - 1)
+    def _dequant():
+        o_ref[...] *= scale_ref[...][None, :]
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k"))
+def quant_matmul(
+    x: jax.Array,
+    w_q: jax.Array,
+    scales: jax.Array,
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,
+) -> jax.Array:
+    """f32[M,K] x i8[K,N] (+ f32[N] scales) -> f32[M,N].
+
+    Shapes need not be multiples of the block sizes: inputs are zero-padded
+    up to the block grid (zero K-padding contributes nothing to the
+    accumulation) and the result is sliced back to [M, N].
+    """
+    if x.ndim != 2 or w_q.ndim != 2 or scales.ndim != 1:
+        raise ValueError(
+            f"quant_matmul expects x[M,K], w_q[K,N], scales[N]; got "
+            f"{x.shape}, {w_q.shape}, {scales.shape}"
+        )
+    m, k = x.shape
+    k2, n = w_q.shape
+    if k != k2 or scales.shape[0] != n:
+        raise ValueError(
+            f"inconsistent shapes: x[{m},{k}] w_q[{k2},{n}] scales[{scales.shape[0]}]"
+        )
+
+    bm = min(block_m, _ceil_to(m, 8))
+    bn = min(block_n, _ceil_to(n, 8))
+    bk = min(block_k, _ceil_to(k, 8))
+    mp, kp, np_ = _ceil_to(m, bm), _ceil_to(k, bk), _ceil_to(n, bn)
+
+    xp = jnp.pad(x.astype(jnp.float32), ((0, mp - m), (0, kp - k)))
+    wp = jnp.pad(w_q.astype(jnp.int8), ((0, kp - k), (0, np_ - n)))
+    sp = jnp.pad(scales.astype(jnp.float32), (0, np_ - n))
+
+    grid = (mp // bm, np_ // bn, kp // bk)
+    out = pl.pallas_call(
+        _qmm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xp, wp, sp)
+    return out[:m, :n]
+
+
+def quantize_per_channel(w: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Symmetric per-output-channel int8 quantization of f32[K, N].
+
+    Returns (w_q i8[K,N], scales f32[N]) such that w ~= w_q * scales.
+    Columns that are entirely zero get scale 0 (and all-zero codes).
+    """
+    absmax = jnp.max(jnp.abs(w), axis=0)
+    scales = absmax / 127.0
+    safe = jnp.where(scales > 0, scales, 1.0)
+    w_q = jnp.clip(jnp.round(w / safe[None, :]), -127, 127).astype(jnp.int8)
+    return w_q, scales.astype(jnp.float32)

@@ -1,0 +1,72 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel in this package has a reference implementation here written
+with plain jax.numpy ops. pytest (python/tests/) asserts allclose between
+kernel and oracle across hypothesis-generated shapes/dtypes; this file is
+the single source of truth for kernel semantics.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quant_matmul_ref(x: jax.Array, w_q: jax.Array, scales: jax.Array) -> jax.Array:
+    """int8-weight x f32-activation matmul with per-output-channel dequant.
+
+    x:      f32[M, K]   activations
+    w_q:    i8 [K, N]   quantized weights
+    scales: f32[N]      per-output-channel dequantization scales
+    returns f32[M, N] = (x @ w_q) * scales  (dequant after accumulation,
+    which is exact because scales factor out of the K-sum)
+    """
+    acc = jnp.dot(x, w_q.astype(jnp.float32), preferred_element_type=jnp.float32)
+    return acc * scales[None, :]
+
+
+def rmsnorm_ref(x: jax.Array, weight: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """Gemma-style RMSNorm: x * rsqrt(mean(x^2) + eps) * (1 + weight).
+
+    x: f32[..., D], weight: f32[D].
+    """
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    normed = x * jax.lax.rsqrt(var + eps)
+    return normed * (1.0 + weight)
+
+
+def decode_attention_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    lens: jax.Array,
+    scale: float | None = None,
+) -> jax.Array:
+    """Single-step (decode) GQA attention over a padded KV cache.
+
+    q:    f32[B, H, D]        one query vector per (batch, head)
+    k:    f32[B, S, Hkv, D]   padded key cache (junk beyond lens[b])
+    v:    f32[B, S, Hkv, D]   padded value cache
+    lens: i32[B]              valid cache length per row (attend to < lens[b])
+    returns f32[B, H, D]
+
+    H must be a multiple of Hkv (grouped-query attention: query head h
+    reads kv head h // (H // Hkv)).
+    """
+    B, H, D = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    assert H % Hkv == 0, "GQA requires H % Hkv == 0"
+    group = H // Hkv
+    if scale is None:
+        scale = 1.0 / (D**0.5)
+
+    # Expand kv heads to query heads: [B, S, H, D]
+    k_e = jnp.repeat(k, group, axis=2)
+    v_e = jnp.repeat(v, group, axis=2)
+
+    # scores [B, H, S]
+    s = jnp.einsum("bhd,bshd->bhs", q, k_e) * scale
+    mask = jnp.arange(S)[None, None, :] < lens[:, None, None]
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhs,bshd->bhd", p, v_e)

@@ -1,0 +1,66 @@
+"""Pallas kernel: fused Gemma-style RMSNorm.
+
+Bandwidth-bound op: the naive jnp version (square -> mean -> rsqrt -> two
+multiplies) costs several HBM round-trips; fusing it keeps the (block_rows,
+D) tile resident in VMEM for the whole normalize-and-scale sequence. Grid
+is 1-D over row blocks; D stays whole inside the block (edge-model D <= 4k
+easily fits VMEM — see DESIGN.md §Perf for the footprint table).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps: float):
+    x = x_ref[...]
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    o_ref[...] = x * jax.lax.rsqrt(var + eps) * (1.0 + w_ref[...])[None, :]
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "eps"))
+def rmsnorm(
+    x: jax.Array,
+    weight: jax.Array,
+    *,
+    block_rows: int = 128,
+    eps: float = 1e-6,
+) -> jax.Array:
+    """f32[..., D] RMSNorm with (1 + weight) scaling, Gemma convention.
+
+    Leading dims are flattened to rows; rows are zero-padded to the block
+    grid (padded rows normalize garbage-free zeros and are sliced away).
+    """
+    if weight.ndim != 1 or x.shape[-1] != weight.shape[0]:
+        raise ValueError(f"weight[D] must match x[..., D]; got {x.shape} vs {weight.shape}")
+    orig_shape = x.shape
+    d = x.shape[-1]
+    rows = 1
+    for s in orig_shape[:-1]:
+        rows *= s
+    x2 = x.reshape(rows, d).astype(jnp.float32)
+
+    br = min(block_rows, _ceil_to(max(rows, 1), 8))
+    rp = _ceil_to(max(rows, 1), br)
+    xp = jnp.pad(x2, ((0, rp - rows), (0, 0)))
+
+    out = pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=(rp // br,),
+        in_specs=[
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rp, d), jnp.float32),
+        interpret=True,
+    )(xp, weight.astype(jnp.float32))
+    return out[:rows].reshape(orig_shape)

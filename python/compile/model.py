@@ -1,0 +1,277 @@
+"""L2: Gemma-style decoder-only transformer in JAX, calling the L1 kernels.
+
+Two entry points are AOT-lowered per (variant, batch) by aot.py:
+
+  prefill(params, tokens[B,S], lens[B])
+      -> (last_logits[B,V], kv_k[L,B,Smax,Hkv,Dh], kv_v[L,B,Smax,Hkv,Dh])
+
+  decode_step(params, token[B], pos[B], kv_k, kv_v)
+      -> (logits[B,V], kv_k', kv_v')
+
+Conventions (the Rust runtime mirrors all of these):
+  - prompts are right-padded to S = PREFILL_LEN; lens[b] gives the true
+    prompt length; prefill returns the logits at position lens[b]-1;
+  - the KV cache is allocated at Smax = cfg.max_seq and threaded through
+    decode steps as whole arrays (rust passes the previous step's outputs
+    back in as inputs);
+  - decode writes k/v at index pos[b] per row and attends over
+    [0, pos[b]] inclusive via the flash-decode Pallas kernel;
+  - weights arrive as a flat list in cfg.param_layout() order (int8 MLP
+    weights + f32 scales — the paper's QAT quantization — and f32
+    attention/embedding weights).
+
+The hot compute runs through the Pallas kernels: quant_matmul for every
+MLP projection, rmsnorm for every norm, decode_attention for the decode
+hot path. Prefill attention is plain jnp (one-shot, not the serving hot
+path; XLA fuses it fine — see DESIGN.md §Perf L2 audit).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .kernels.decode_attention import decode_attention
+from .kernels.quant_matmul import quant_matmul, quantize_per_channel
+from .kernels.rmsnorm import rmsnorm
+
+
+# --------------------------------------------------------------------------
+# Parameters
+# --------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig) -> list[np.ndarray]:
+    """Deterministic seeded weights in cfg.param_layout() order.
+
+    f32 tensors are N(0, 1/sqrt(fan_in)); i8 tensors are produced by
+    symmetric per-channel quantization of such a draw (scales follow in
+    the layout). Norm gains start at 0 (Gemma's (1+w) convention).
+    """
+    rng = np.random.default_rng(cfg.seed)
+    layout = cfg.param_layout()
+    params: list[np.ndarray] = []
+    pending_scale: np.ndarray | None = None
+    for name, dtype, shape in layout:
+        if name.endswith(("ln_attn", "ln_mlp", "ln_final")):
+            params.append(np.zeros(shape, np.float32))
+        elif dtype == "i8":
+            fan_in = shape[0]
+            w = rng.normal(0.0, fan_in**-0.5, size=shape).astype(np.float32)
+            w_q, scales = quantize_per_channel(jnp.asarray(w))
+            params.append(np.asarray(w_q))
+            pending_scale = np.asarray(scales)
+        elif name.split(".")[-1].startswith("s_"):
+            assert pending_scale is not None, f"scale {name} without weight"
+            assert pending_scale.shape == shape
+            params.append(pending_scale)
+            pending_scale = None
+        else:
+            fan_in = shape[0]
+            params.append(rng.normal(0.0, fan_in**-0.5, size=shape).astype(np.float32))
+    assert len(params) == len(layout)
+    return params
+
+
+def _unpack(cfg: ModelConfig, params: list[jax.Array]):
+    """Flat list -> (embed, per-layer dicts, ln_final)."""
+    layout = cfg.param_layout()
+    assert len(params) == len(layout), f"{len(params)} vs {len(layout)}"
+    by_name = {name: p for (name, _, _), p in zip(layout, params)}
+    layers = []
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        layers.append({k: by_name[p + k] for k in (
+            "ln_attn", "wq", "wk", "wv", "wo",
+            "ln_mlp", "w_gate_q", "s_gate", "w_up_q", "s_up", "w_down_q", "s_down",
+        )})
+    return by_name["embed"], layers, by_name["ln_final"]
+
+
+# --------------------------------------------------------------------------
+# Building blocks
+# --------------------------------------------------------------------------
+
+def _rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding. x: [..., T, H, D], positions broadcastable to [..., T]."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)  # [half]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [..., T, half]
+    cos = jnp.cos(ang)[..., None, :]  # [..., T, 1, half]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _mlp(cfg: ModelConfig, lp: dict, x2d: jax.Array) -> jax.Array:
+    """SwiGLU MLP over flattened rows via the quantized-GEMM kernel."""
+    gate = quant_matmul(x2d, lp["w_gate_q"], lp["s_gate"])
+    up = quant_matmul(x2d, lp["w_up_q"], lp["s_up"])
+    act = jax.nn.silu(gate) * up
+    return quant_matmul(act, lp["w_down_q"], lp["s_down"])
+
+
+# --------------------------------------------------------------------------
+# Prefill
+# --------------------------------------------------------------------------
+
+def prefill(cfg: ModelConfig, params: list[jax.Array], tokens: jax.Array, lens: jax.Array):
+    """Process a padded prompt batch; build the KV cache.
+
+    tokens: i32[B, S] right-padded; lens: i32[B] true lengths (>= 1).
+    Returns (last_logits f32[B, V], kv_k, kv_v f32[L, B, Smax, Hkv, Dh]).
+    """
+    embed, layers, ln_final = _unpack(cfg, params)
+    b, s = tokens.shape
+    smax = cfg.max_seq
+    scale = cfg.head_dim**-0.5
+
+    x = embed[tokens] * jnp.sqrt(jnp.float32(cfg.d_model))  # [B,S,D]
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+
+    kv_k = jnp.zeros((cfg.n_layers, b, smax, cfg.n_kv_heads, cfg.head_dim), jnp.float32)
+    kv_v = jnp.zeros_like(kv_k)
+
+    causal = jnp.tril(jnp.ones((s, s), bool))[None, None]  # [1,1,S,S]
+
+    for li, lp in enumerate(layers):
+        h = rmsnorm(x, lp["ln_attn"])
+        q = (h @ lp["wq"]).reshape(b, s, cfg.n_heads, cfg.head_dim)
+        k = (h @ lp["wk"]).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+        v = (h @ lp["wv"]).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+        q = _rope(q, positions, cfg.rope_theta)
+        k = _rope(k, positions, cfg.rope_theta)
+
+        kv_k = kv_k.at[li, :, :s].set(k)
+        kv_v = kv_v.at[li, :, :s].set(v)
+
+        # Plain-jnp causal GQA attention (prefill is one-shot, not the hot
+        # path); expand kv heads to query heads.
+        group = cfg.n_heads // cfg.n_kv_heads
+        k_e = jnp.repeat(k, group, axis=2)
+        v_e = jnp.repeat(v, group, axis=2)
+        att = jnp.einsum("bthd,bshd->bhts", q, k_e) * scale
+        att = jnp.where(causal, att, -1e30)
+        p = jax.nn.softmax(att, axis=-1)
+        o = jnp.einsum("bhts,bshd->bthd", p, v_e).reshape(b, s, cfg.q_dim)
+        x = x + o @ lp["wo"]
+
+        h2 = rmsnorm(x, lp["ln_mlp"])
+        x = x + _mlp(cfg, lp, h2.reshape(b * s, cfg.d_model)).reshape(b, s, cfg.d_model)
+
+    x = rmsnorm(x, ln_final)
+    last = jnp.take_along_axis(x, (lens - 1)[:, None, None], axis=1)[:, 0]  # [B,D]
+    logits = last @ embed.T  # tied embeddings
+    return logits, kv_k, kv_v
+
+
+# --------------------------------------------------------------------------
+# Decode step
+# --------------------------------------------------------------------------
+
+def decode_step(cfg: ModelConfig, params: list[jax.Array], token: jax.Array,
+                pos: jax.Array, kv_k: jax.Array, kv_v: jax.Array):
+    """One token per row: write kv at pos[b], attend over [0, pos[b]].
+
+    token: i32[B], pos: i32[B] (cache index of this token, == current
+    sequence length before the step). Returns (logits[B,V], kv_k', kv_v').
+    """
+    embed, layers, ln_final = _unpack(cfg, params)
+    b = token.shape[0]
+    scale = cfg.head_dim**-0.5
+
+    x = embed[token] * jnp.sqrt(jnp.float32(cfg.d_model))  # [B,D]
+    lens = pos + 1  # attend over [0, pos] inclusive
+
+    def write_row(cache_row, val_row, p):
+        # cache_row [Smax, Hkv, Dh], val_row [1, Hkv, Dh]
+        return jax.lax.dynamic_update_slice(cache_row, val_row, (p, 0, 0))
+
+    for li, lp in enumerate(layers):
+        h = rmsnorm(x, lp["ln_attn"])
+        q = (h @ lp["wq"]).reshape(b, cfg.n_heads, cfg.head_dim)
+        k = (h @ lp["wk"]).reshape(b, cfg.n_kv_heads, cfg.head_dim)
+        v = (h @ lp["wv"]).reshape(b, cfg.n_kv_heads, cfg.head_dim)
+        q = _rope(q[:, None], pos[:, None], cfg.rope_theta)[:, 0]
+        k = _rope(k[:, None], pos[:, None], cfg.rope_theta)[:, 0]
+
+        kv_k = kv_k.at[li].set(jax.vmap(write_row)(kv_k[li], k[:, None], pos))
+        kv_v = kv_v.at[li].set(jax.vmap(write_row)(kv_v[li], v[:, None], pos))
+
+        o = decode_attention(q, kv_k[li], kv_v[li], lens, scale=scale)  # [B,H,Dh]
+        x = x + o.reshape(b, cfg.q_dim) @ lp["wo"]
+
+        h2 = rmsnorm(x, lp["ln_mlp"])
+        x = x + _mlp(cfg, lp, h2)
+
+    x = rmsnorm(x, ln_final)
+    logits = x @ embed.T
+    return logits, kv_k, kv_v
+
+
+# --------------------------------------------------------------------------
+# Chunked decode (§Perf L2): K greedy steps inside one executable
+# --------------------------------------------------------------------------
+
+def decode_chunk(cfg: ModelConfig, params: list[jax.Array], token: jax.Array,
+                 pos: jax.Array, kv_k: jax.Array, kv_v: jax.Array, steps: int):
+    """Run `steps` greedy decode iterations in-graph (lax.scan).
+
+    Greedy sampling (argmax) is deterministic, so the whole
+    token -> logits -> argmax -> token recurrence can live inside the
+    compiled graph. One host<->device KV round-trip then amortizes over
+    `steps` tokens instead of one — the dominant request-path cost
+    through the PJRT literal interface (EXPERIMENTS.md §Perf).
+
+    token: i32[B] (the chunk's first input token, already *emitted*);
+    pos: i32[B] its cache slot. Returns (tokens i32[steps, B], kv_k',
+    kv_v', next_token i32[B], next_pos i32[B]) where tokens[k] is the
+    token generated AFTER consuming the k-th input. Rows that emit EOS
+    keep generating (garbage the Rust session truncates); positions
+    advance uniformly so the cache layout stays rectangular.
+    """
+    def step(carry, _):
+        cur, p, kk, kvv = carry
+        logits, kk, kvv = decode_step(cfg, params, cur, p, kk, kvv)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        # clamp so in-graph steps never write past the cache even when
+        # the Rust session asks for a full chunk near max_seq
+        p_next = jnp.minimum(p + 1, cfg.max_seq - 1)
+        return (nxt, p_next, kk, kvv), nxt
+
+    (next_token, next_pos, kv_k, kv_v), toks = jax.lax.scan(
+        step, (token, pos, kv_k, kv_v), None, length=steps
+    )
+    return toks, kv_k, kv_v, next_token, next_pos
+
+
+# --------------------------------------------------------------------------
+# Reference generation loop (used by tests; rust reimplements this loop)
+# --------------------------------------------------------------------------
+
+def generate_greedy(cfg: ModelConfig, params, tokens: np.ndarray, lens: np.ndarray,
+                    max_new: int, eos_id: int = 0) -> list[list[int]]:
+    """Greedy decode loop mirroring rust/src/runtime/session.rs."""
+    pj = [jnp.asarray(p) for p in params]
+    logits, kv_k, kv_v = prefill(cfg, pj, jnp.asarray(tokens, jnp.int32),
+                                 jnp.asarray(lens, jnp.int32))
+    b = tokens.shape[0]
+    out: list[list[int]] = [[] for _ in range(b)]
+    done = np.zeros(b, bool)
+    pos = np.asarray(lens, np.int32).copy()
+    cur = np.asarray(jnp.argmax(logits, -1), np.int32)
+    for _ in range(max_new):
+        for i in range(b):
+            if not done[i]:
+                out[i].append(int(cur[i]))
+                if cur[i] == eos_id:
+                    done[i] = True
+        if done.all() or int(pos.max()) >= cfg.max_seq:
+            break
+        logits, kv_k, kv_v = decode_step(cfg, pj, jnp.asarray(cur), jnp.asarray(pos),
+                                         kv_k, kv_v)
+        pos = pos + 1
+        cur = np.asarray(jnp.argmax(logits, -1), np.int32)
+    return out

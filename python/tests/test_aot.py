@@ -1,0 +1,121 @@
+"""AOT path integrity: manifest, weight sidecars, HLO text well-formedness.
+
+Lowers a throwaway tiny variant into a tmpdir (fast), so these tests do
+not depend on `make artifacts` having run.
+"""
+
+import json
+import pathlib
+
+import numpy as np
+import pytest
+
+from compile import aot, configs, model
+
+TINY = configs.ModelConfig(
+    name="tiny-aot", vocab=32, d_model=16, n_layers=1, n_heads=2,
+    n_kv_heads=1, head_dim=8, d_ff=16, max_seq=24, seed=3,
+)
+
+
+@pytest.fixture(scope="module")
+def lowered(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    manifest = aot.lower_variant(TINY, out, batch_sizes=(1, 2), prefill_len=8)
+    return out, manifest
+
+
+class TestLowerVariant:
+    def test_entries_exist(self, lowered):
+        out, man = lowered
+        assert set(man["entries"]) == {
+            "prefill_b1", "prefill_b2", "decode_b1", "decode_b2",
+            "decode_chunk_b1", "decode_chunk_b2",
+        }
+        for e in man["entries"].values():
+            p = out / e["file"]
+            assert p.exists() and p.stat().st_size > 0
+        assert man["entries"]["decode_chunk_b1"]["steps"] == configs.DECODE_CHUNK
+
+    def test_hlo_is_text_with_entry(self, lowered):
+        out, man = lowered
+        for e in man["entries"].values():
+            text = (out / e["file"]).read_text()
+            assert "HloModule" in text.splitlines()[0]
+            assert "ENTRY" in text
+            # serialized protos would not be valid UTF-8 text; also assert
+            # no stablehlo leaked through (must be classic HLO)
+            assert "stablehlo" not in text
+
+    def test_weight_sidecar_roundtrip(self, lowered):
+        out, man = lowered
+        blob = (out / man["weights_file"]).read_bytes()
+        assert len(blob) == man["weights_bytes"]
+        params = model.init_params(TINY)
+        for meta, arr in zip(man["params"], params):
+            lo, hi = meta["offset"], meta["offset"] + meta["bytes"]
+            got = np.frombuffer(blob[lo:hi], dtype=aot.DTYPE_NP[meta["dtype"]])
+            np.testing.assert_array_equal(got, np.ascontiguousarray(arr).ravel())
+
+    def test_param_meta_matches_layout(self, lowered):
+        _, man = lowered
+        layout = TINY.param_layout()
+        assert [m["name"] for m in man["params"]] == [n for n, _, _ in layout]
+        assert [tuple(m["shape"]) for m in man["params"]] == [s for _, _, s in layout]
+        # offsets contiguous
+        off = 0
+        for m in man["params"]:
+            assert m["offset"] == off
+            off += m["bytes"]
+
+    @staticmethod
+    def _entry_param_count(text: str) -> int:
+        import re
+        entry = text[text.index("ENTRY"):]
+        ids = {int(m) for m in re.findall(r"parameter\((\d+)\)", entry)}
+        assert ids == set(range(len(ids))), "non-contiguous parameter ids"
+        return len(ids)
+
+    def test_hlo_parameter_count(self, lowered):
+        """HLO entry must take n_params + activation args."""
+        out, man = lowered
+        n = len(TINY.param_layout())
+        text = (out / man["entries"]["prefill_b1"]["file"]).read_text()
+        assert self._entry_param_count(text) == n + 2  # + tokens, lens
+        text = (out / man["entries"]["decode_b1"]["file"]).read_text()
+        assert self._entry_param_count(text) == n + 4  # + token, pos, kv_k, kv_v
+
+    def test_deterministic_weights_sha(self, lowered, tmp_path):
+        _, man = lowered
+        man2 = aot.lower_variant(TINY, tmp_path, batch_sizes=(1,), prefill_len=8)
+        assert man["weights_sha256"] == man2["weights_sha256"]
+
+
+class TestShippedManifest:
+    """Checks against the real artifacts/ if `make artifacts` has run."""
+
+    ART = pathlib.Path(__file__).resolve().parents[2] / "artifacts"
+
+    @pytest.fixture()
+    def manifest(self):
+        p = self.ART / "manifest.json"
+        if not p.exists():
+            pytest.skip("artifacts not built (run `make artifacts`)")
+        return json.loads(p.read_text())
+
+    def test_versions_and_geometry(self, manifest):
+        assert manifest["version"] == configs.MANIFEST_VERSION
+        assert manifest["prefill_len"] == configs.PREFILL_LEN
+        assert manifest["max_seq"] == configs.MAX_SEQ
+        assert manifest["vocab"] == configs.VOCAB
+        assert set(manifest["batch_sizes"]) == set(configs.BATCH_SIZES)
+
+    def test_all_variants_present(self, manifest):
+        assert set(manifest["variants"]) == set(configs.VARIANTS)
+        for name, v in manifest["variants"].items():
+            cfg = configs.VARIANTS[name]
+            for b in configs.BATCH_SIZES:
+                assert f"prefill_b{b}" in v["entries"]
+                assert f"decode_b{b}" in v["entries"]
+            assert (self.ART / v["weights_file"]).stat().st_size == v["weights_bytes"]
+            assert len(v["params"]) == len(cfg.param_layout())

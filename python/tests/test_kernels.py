@@ -1,0 +1,261 @@
+"""Kernel-vs-oracle correctness: the CORE L1 signal.
+
+hypothesis sweeps shapes/dtypes; every Pallas kernel must match its
+pure-jnp oracle in compile/kernels/ref.py to tight tolerances.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.decode_attention import decode_attention
+from compile.kernels.quant_matmul import quant_matmul, quantize_per_channel
+from compile.kernels.rmsnorm import rmsnorm
+
+HYP = dict(max_examples=25, deadline=None)
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+# --------------------------------------------------------------------------
+# quant_matmul
+# --------------------------------------------------------------------------
+
+class TestQuantMatmul:
+    @given(
+        m=st.integers(1, 70), k=st.integers(1, 90), n=st.integers(1, 70),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    @settings(**HYP)
+    def test_matches_ref(self, m, k, n, seed):
+        rng = _rng(seed)
+        x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+        w = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+        wq, sc = quantize_per_channel(w)
+        got = quant_matmul(x, wq, sc)
+        want = ref.quant_matmul_ref(x, wq, sc)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    @given(
+        bm=st.sampled_from([8, 16, 32, 128]),
+        bn=st.sampled_from([8, 16, 64, 128]),
+        bk=st.sampled_from([8, 32, 128]),
+    )
+    @settings(**HYP)
+    def test_block_shape_invariance(self, bm, bn, bk):
+        """Result must not depend on the tiling choice."""
+        rng = _rng(7)
+        x = jnp.asarray(rng.normal(size=(33, 47)), jnp.float32)
+        w = jnp.asarray(rng.normal(size=(47, 29)), jnp.float32)
+        wq, sc = quantize_per_channel(w)
+        got = quant_matmul(x, wq, sc, block_m=bm, block_n=bn, block_k=bk)
+        want = ref.quant_matmul_ref(x, wq, sc)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_extreme_int8_codes(self):
+        """Full int8 code range including -127/127 saturation."""
+        k, n = 16, 8
+        wq = jnp.asarray(
+            _rng(3).integers(-127, 128, size=(k, n)), jnp.int8
+        )
+        sc = jnp.asarray(_rng(4).uniform(1e-4, 2.0, size=(n,)), jnp.float32)
+        x = jnp.asarray(_rng(5).normal(size=(5, k)), jnp.float32)
+        np.testing.assert_allclose(
+            quant_matmul(x, wq, sc), ref.quant_matmul_ref(x, wq, sc),
+            rtol=1e-5, atol=1e-5,
+        )
+
+    def test_zero_activation_gives_zero(self):
+        x = jnp.zeros((4, 12), jnp.float32)
+        wq = jnp.ones((12, 6), jnp.int8)
+        sc = jnp.ones((6,), jnp.float32)
+        assert np.abs(np.asarray(quant_matmul(x, wq, sc))).max() == 0.0
+
+    def test_quantize_roundtrip_error_bounded(self):
+        """Dequantized weights within half an LSB of the original."""
+        w = jnp.asarray(_rng(11).normal(size=(64, 32)), jnp.float32)
+        wq, sc = quantize_per_channel(w)
+        deq = np.asarray(wq, np.float32) * np.asarray(sc)[None, :]
+        lsb = np.asarray(sc)[None, :]
+        assert (np.abs(deq - np.asarray(w)) <= 0.5 * lsb + 1e-8).all()
+
+    def test_zero_column_scale_zero(self):
+        w = jnp.zeros((8, 3), jnp.float32)
+        wq, sc = quantize_per_channel(w)
+        assert np.asarray(sc).max() == 0.0
+        assert np.abs(np.asarray(wq)).max() == 0
+
+    def test_shape_errors(self):
+        with pytest.raises(ValueError):
+            quant_matmul(jnp.zeros((2, 3), jnp.float32),
+                         jnp.zeros((4, 5), jnp.int8),
+                         jnp.zeros((5,), jnp.float32))
+        with pytest.raises(ValueError):
+            quant_matmul(jnp.zeros((2, 3, 1), jnp.float32),
+                         jnp.zeros((3, 5), jnp.int8),
+                         jnp.zeros((5,), jnp.float32))
+
+
+# --------------------------------------------------------------------------
+# rmsnorm
+# --------------------------------------------------------------------------
+
+class TestRmsNorm:
+    @given(
+        rows=st.integers(1, 100), d=st.integers(1, 300),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    @settings(**HYP)
+    def test_matches_ref_2d(self, rows, d, seed):
+        rng = _rng(seed)
+        x = jnp.asarray(rng.normal(size=(rows, d)), jnp.float32)
+        w = jnp.asarray(rng.normal(size=(d,)), jnp.float32)
+        np.testing.assert_allclose(
+            rmsnorm(x, w), ref.rmsnorm_ref(x, w), rtol=1e-5, atol=1e-5
+        )
+
+    @given(
+        b=st.integers(1, 4), s=st.integers(1, 16), d=st.sampled_from([8, 64, 128]),
+    )
+    @settings(**HYP)
+    def test_matches_ref_3d(self, b, s, d):
+        rng = _rng(b * 1000 + s * 10 + d)
+        x = jnp.asarray(rng.normal(size=(b, s, d)), jnp.float32)
+        w = jnp.asarray(rng.normal(size=(d,)), jnp.float32)
+        np.testing.assert_allclose(
+            rmsnorm(x, w), ref.rmsnorm_ref(x, w), rtol=1e-5, atol=1e-5
+        )
+
+    def test_unit_rows_have_unit_rms(self):
+        """With zero gain, output rows have RMS ~= 1 for nonzero input."""
+        x = jnp.asarray(_rng(0).normal(size=(32, 64)), jnp.float32)
+        out = np.asarray(rmsnorm(x, jnp.zeros((64,), jnp.float32)))
+        rms = np.sqrt((out**2).mean(axis=-1))
+        np.testing.assert_allclose(rms, 1.0, rtol=1e-3)
+
+    def test_scale_equivariance(self):
+        """rmsnorm(c*x) == rmsnorm(x) for c > 0 (scale-invariant op)."""
+        x = jnp.asarray(_rng(1).normal(size=(8, 32)), jnp.float32)
+        w = jnp.asarray(_rng(2).normal(size=(32,)), jnp.float32)
+        a = np.asarray(rmsnorm(x, w))
+        b = np.asarray(rmsnorm(x * 7.5, w))
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
+
+    def test_zero_input_stays_finite(self):
+        out = np.asarray(rmsnorm(jnp.zeros((4, 16), jnp.float32),
+                                 jnp.zeros((16,), jnp.float32)))
+        assert np.isfinite(out).all() and np.abs(out).max() == 0.0
+
+    def test_shape_error(self):
+        with pytest.raises(ValueError):
+            rmsnorm(jnp.zeros((4, 16), jnp.float32), jnp.zeros((8,), jnp.float32))
+
+
+# --------------------------------------------------------------------------
+# decode_attention
+# --------------------------------------------------------------------------
+
+class TestDecodeAttention:
+    @given(
+        b=st.integers(1, 5),
+        hkv=st.sampled_from([1, 2, 4]),
+        group=st.sampled_from([1, 2, 4]),
+        d=st.sampled_from([8, 16, 32, 64]),
+        s=st.integers(1, 200),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    @settings(**HYP)
+    def test_matches_ref(self, b, hkv, group, d, s, seed):
+        h = hkv * group
+        rng = _rng(seed)
+        q = jnp.asarray(rng.normal(size=(b, h, d)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(b, s, hkv, d)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(b, s, hkv, d)), jnp.float32)
+        lens = jnp.asarray(rng.integers(1, s + 1, size=(b,)), jnp.int32)
+        got = decode_attention(q, k, v, lens)
+        want = ref.decode_attention_ref(q, k, v, lens)
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-5)
+
+    def test_padding_invariance(self):
+        """Garbage beyond lens must not affect the output."""
+        rng = _rng(42)
+        b, h, hkv, d, s = 2, 4, 2, 16, 50
+        q = jnp.asarray(rng.normal(size=(b, h, d)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(b, s, hkv, d)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(b, s, hkv, d)), jnp.float32)
+        lens = jnp.asarray([20, 37], jnp.int32)
+        base = decode_attention(q, k, v, lens)
+        k2 = k.at[:, 45:].set(1e6)
+        v2 = v.at[:, 45:].set(-1e6)
+        got = decode_attention(q, k2, v2, lens)
+        np.testing.assert_allclose(base, got, rtol=1e-6)
+
+    def test_single_position_returns_value(self):
+        """lens == 1: softmax over one key returns v[:, 0] exactly."""
+        rng = _rng(9)
+        b, h, hkv, d, s = 3, 4, 4, 8, 16
+        q = jnp.asarray(rng.normal(size=(b, h, d)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(b, s, hkv, d)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(b, s, hkv, d)), jnp.float32)
+        lens = jnp.ones((b,), jnp.int32)
+        got = np.asarray(decode_attention(q, k, v, lens))
+        np.testing.assert_allclose(got, np.asarray(v[:, 0]), rtol=1e-5, atol=1e-6)
+
+    def test_chunk_invariance(self):
+        """Online-softmax result independent of chunk size."""
+        rng = _rng(5)
+        b, h, hkv, d, s = 2, 4, 2, 16, 130
+        q = jnp.asarray(rng.normal(size=(b, h, d)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(b, s, hkv, d)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(b, s, hkv, d)), jnp.float32)
+        lens = jnp.asarray([130, 64], jnp.int32)
+        outs = [np.asarray(decode_attention(q, k, v, lens, chunk=c))
+                for c in (8, 16, 64, 256)]
+        for o in outs[1:]:
+            np.testing.assert_allclose(outs[0], o, rtol=2e-5, atol=1e-6)
+
+    def test_large_score_stability(self):
+        """Online softmax must survive large score magnitudes."""
+        b, h, hkv, d, s = 1, 2, 1, 8, 64
+        q = jnp.full((b, h, d), 50.0, jnp.float32)
+        k = jnp.full((b, s, hkv, d), 50.0, jnp.float32)
+        v = jnp.asarray(_rng(3).normal(size=(b, s, hkv, d)), jnp.float32)
+        lens = jnp.asarray([s], jnp.int32)
+        got = np.asarray(decode_attention(q, k, v, lens))
+        assert np.isfinite(got).all()
+        # equal scores -> uniform average of values
+        np.testing.assert_allclose(
+            got[0, 0], np.asarray(v[0, :, 0]).mean(0), rtol=1e-4, atol=1e-5
+        )
+
+    def test_gqa_group_routing(self):
+        """Query head h must read kv head h // group, not any other."""
+        rng = _rng(6)
+        b, hkv, group, d, s = 1, 2, 2, 8, 4
+        h = hkv * group
+        q = jnp.asarray(rng.normal(size=(b, h, d)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(b, s, hkv, d)), jnp.float32)
+        # kv head 0 values = +1, kv head 1 values = -1
+        v = jnp.concatenate([
+            jnp.ones((b, s, 1, d)), -jnp.ones((b, s, 1, d))
+        ], axis=2).astype(jnp.float32)
+        lens = jnp.asarray([s], jnp.int32)
+        got = np.asarray(decode_attention(q, k, v, lens))
+        np.testing.assert_allclose(got[0, :group], 1.0, rtol=1e-5)
+        np.testing.assert_allclose(got[0, group:], -1.0, rtol=1e-5)
+
+    def test_shape_errors(self):
+        f32 = jnp.float32
+        with pytest.raises(ValueError):  # H not multiple of Hkv
+            decode_attention(jnp.zeros((1, 3, 8), f32), jnp.zeros((1, 4, 2, 8), f32),
+                             jnp.zeros((1, 4, 2, 8), f32), jnp.ones((1,), jnp.int32))
+        with pytest.raises(ValueError):  # lens wrong shape
+            decode_attention(jnp.zeros((2, 4, 8), f32), jnp.zeros((2, 4, 2, 8), f32),
+                             jnp.zeros((2, 4, 2, 8), f32), jnp.ones((3,), jnp.int32))
+        with pytest.raises(ValueError):  # v mismatched
+            decode_attention(jnp.zeros((1, 4, 8), f32), jnp.zeros((1, 4, 2, 8), f32),
+                             jnp.zeros((1, 5, 2, 8), f32), jnp.ones((1,), jnp.int32))

@@ -1,0 +1,208 @@
+"""L2 model semantics: prefill/decode consistency, padding, determinism."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import configs, model
+
+TINY = configs.ModelConfig(
+    name="tiny-test", vocab=32, d_model=16, n_layers=2, n_heads=4,
+    n_kv_heads=2, head_dim=4, d_ff=24, max_seq=24, seed=7,
+)
+
+
+@pytest.fixture(scope="module")
+def tiny_params():
+    return [jnp.asarray(p) for p in model.init_params(TINY)]
+
+
+def _toks(rows, cfg=TINY, s=8):
+    """Right-padded token batch + lens from a list of python lists."""
+    b = len(rows)
+    t = np.zeros((b, s), np.int32)
+    lens = np.zeros((b,), np.int32)
+    for i, r in enumerate(rows):
+        t[i, : len(r)] = r
+        lens[i] = len(r)
+    return jnp.asarray(t), jnp.asarray(lens)
+
+
+class TestParams:
+    def test_layout_matches_init(self):
+        layout = TINY.param_layout()
+        params = model.init_params(TINY)
+        assert len(layout) == len(params)
+        for (name, dt, shape), p in zip(layout, params):
+            assert p.shape == tuple(shape), name
+            assert p.dtype == (np.int8 if dt == "i8" else np.float32), name
+
+    def test_init_deterministic(self):
+        a = model.init_params(TINY)
+        b = model.init_params(TINY)
+        for x, y in zip(a, b):
+            np.testing.assert_array_equal(x, y)
+
+    def test_different_seed_different_weights(self):
+        import dataclasses
+        other = dataclasses.replace(TINY, seed=8)
+        a, b = model.init_params(TINY), model.init_params(other)
+        assert any(not np.array_equal(x, y) for x, y in zip(a, b))
+
+    def test_gqa_validation(self):
+        with pytest.raises(ValueError):
+            configs.ModelConfig(name="bad", vocab=8, d_model=8, n_layers=1,
+                                n_heads=3, n_kv_heads=2, head_dim=4, d_ff=8)
+
+    def test_variant_layouts_well_formed(self):
+        for cfg in configs.VARIANTS.values():
+            layout = cfg.param_layout()
+            names = [n for n, _, _ in layout]
+            assert len(names) == len(set(names))
+            assert names[0] == "embed" and names[-1] == "ln_final"
+
+
+class TestPrefill:
+    def test_shapes(self, tiny_params):
+        toks, lens = _toks([[1, 2, 3], [4, 5, 6, 7]])
+        logits, kv_k, kv_v = model.prefill(TINY, tiny_params, toks, lens)
+        assert logits.shape == (2, TINY.vocab)
+        assert kv_k.shape == (TINY.n_layers, 2, TINY.max_seq,
+                              TINY.n_kv_heads, TINY.head_dim)
+        assert kv_v.shape == kv_k.shape
+        assert np.isfinite(np.asarray(logits)).all()
+
+    def test_padding_invariance(self, tiny_params):
+        """Logits at lens-1 must not depend on pad content/extra pad."""
+        toks_a, lens = _toks([[1, 2, 3]], s=8)
+        toks_b = toks_a.at[0, 3:].set(31)  # different pad garbage
+        la, *_ = model.prefill(TINY, tiny_params, toks_a, lens)
+        lb, *_ = model.prefill(TINY, tiny_params, toks_b, lens)
+        np.testing.assert_allclose(np.asarray(la), np.asarray(lb),
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_batch_row_independence(self, tiny_params):
+        """Row 0's logits identical whether row 1 exists or differs."""
+        t2, l2 = _toks([[1, 2, 3], [9, 9]])
+        t2b, _ = _toks([[1, 2, 3], [4, 4]])
+        a, *_ = model.prefill(TINY, tiny_params, t2, l2)
+        b, *_ = model.prefill(TINY, tiny_params, t2b, l2)
+        np.testing.assert_allclose(np.asarray(a)[0], np.asarray(b)[0],
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_kv_written_only_below_prefill_len(self, tiny_params):
+        toks, lens = _toks([[1, 2, 3]], s=8)
+        _, kv_k, _ = model.prefill(TINY, tiny_params, toks, lens)
+        tail = np.asarray(kv_k)[:, :, 8:]
+        assert np.abs(tail).max() == 0.0
+
+
+class TestDecodeStep:
+    def test_prefill_decode_agree(self, tiny_params):
+        """decode_step at position L must equal prefill over L+1 tokens.
+
+        This is the invariant the whole serving loop rests on: incremental
+        decode with the flash kernel reproduces one-shot prefill logits.
+        """
+        seq = [3, 7, 1, 12, 5]
+        # one-shot over the full sequence
+        toks_full, lens_full = _toks([seq], s=8)
+        want, *_ = model.prefill(TINY, tiny_params, toks_full, lens_full)
+        # prefill over the prefix, then decode the last token
+        toks_pre, lens_pre = _toks([seq[:-1]], s=8)
+        _, kv_k, kv_v = model.prefill(TINY, tiny_params, toks_pre, lens_pre)
+        got, _, _ = model.decode_step(
+            TINY, tiny_params,
+            jnp.asarray([seq[-1]], jnp.int32),
+            jnp.asarray([len(seq) - 1], jnp.int32),
+            kv_k, kv_v,
+        )
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=5e-3, atol=5e-4)
+
+    def test_decode_updates_kv_at_pos(self, tiny_params):
+        toks, lens = _toks([[1, 2]], s=8)
+        _, kv_k, kv_v = model.prefill(TINY, tiny_params, toks, lens)
+        _, kv_k2, _ = model.decode_step(
+            TINY, tiny_params, jnp.asarray([5], jnp.int32),
+            jnp.asarray([2], jnp.int32), kv_k, kv_v)
+        before, after = np.asarray(kv_k), np.asarray(kv_k2)
+        assert np.abs(after[:, 0, 2]).max() > 0.0          # written at pos 2
+        np.testing.assert_array_equal(before[:, 0, :2], after[:, 0, :2])
+        np.testing.assert_array_equal(before[:, 0, 3:], after[:, 0, 3:])
+
+    def test_ragged_batch_positions(self, tiny_params):
+        """Rows with different pos must write at their own cache slots only."""
+        toks, lens = _toks([[1, 2, 3], [4]], s=8)
+        _, kv_k, kv_v = model.prefill(TINY, tiny_params, toks, lens)
+        _, kv_k2, _ = model.decode_step(
+            TINY, tiny_params, jnp.asarray([9, 9], jnp.int32),
+            jnp.asarray(lens), kv_k, kv_v)
+        before, after = np.asarray(kv_k), np.asarray(kv_k2)
+        # row 0 wrote at pos 3, row 1 at pos 1; everything else untouched
+        assert not np.array_equal(before[:, 0, 3], after[:, 0, 3])
+        assert not np.array_equal(before[:, 1, 1], after[:, 1, 1])
+        mask = np.ones_like(before, bool)
+        mask[:, 0, 3] = False
+        mask[:, 1, 1] = False
+        np.testing.assert_array_equal(before[mask], after[mask])
+
+
+class TestDecodeChunk:
+    def test_chunk_equals_repeated_steps(self, tiny_params):
+        """decode_chunk(K) must replay K greedy decode_step iterations."""
+        toks, lens = _toks([[1, 2, 3], [4, 5]], s=8)
+        logits, kv_k, kv_v = model.prefill(TINY, tiny_params, toks, lens)
+        cur = jnp.argmax(logits, -1).astype(jnp.int32)
+        pos = jnp.asarray(lens)
+
+        # reference: K single steps
+        k = 5
+        ref_tokens = []
+        rk, rv, rcur, rpos = kv_k, kv_v, cur, pos
+        for _ in range(k):
+            lg, rk, rv = model.decode_step(TINY, tiny_params, rcur, rpos, rk, rv)
+            rcur = jnp.argmax(lg, -1).astype(jnp.int32)
+            rpos = rpos + 1
+            ref_tokens.append(np.asarray(rcur))
+
+        toks_c, ck, cv, ncur, npos = model.decode_chunk(
+            TINY, tiny_params, cur, pos, kv_k, kv_v, k)
+        np.testing.assert_array_equal(np.asarray(toks_c), np.stack(ref_tokens))
+        np.testing.assert_array_equal(np.asarray(ncur), np.asarray(rcur))
+        np.testing.assert_array_equal(np.asarray(npos), np.asarray(rpos))
+        np.testing.assert_allclose(np.asarray(ck), np.asarray(rk), rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(cv), np.asarray(rv), rtol=1e-5, atol=1e-6)
+
+    def test_chunk_clamps_at_cache_end(self, tiny_params):
+        """Positions freeze at max_seq-1 instead of writing out of bounds."""
+        toks, lens = _toks([[1, 2]], s=8)
+        _, kv_k, kv_v = model.prefill(TINY, tiny_params, toks, lens)
+        pos = jnp.asarray([TINY.max_seq - 2], jnp.int32)
+        _, _, _, _, npos = model.decode_chunk(
+            TINY, tiny_params, jnp.asarray([3], jnp.int32), pos, kv_k, kv_v, 6)
+        assert int(np.asarray(npos)[0]) == TINY.max_seq - 1
+
+
+class TestGenerate:
+    def test_greedy_deterministic(self, tiny_params):
+        params = model.init_params(TINY)
+        toks = np.zeros((2, 8), np.int32)
+        toks[0, :3] = [1, 2, 3]
+        toks[1, :2] = [4, 5]
+        lens = np.array([3, 2], np.int32)
+        a = model.generate_greedy(TINY, params, toks, lens, max_new=6)
+        b = model.generate_greedy(TINY, params, toks, lens, max_new=6)
+        assert a == b
+        assert all(len(row) <= 6 for row in a)
+
+    def test_eos_stops_row(self, tiny_params):
+        """A row that emits EOS must stop growing (EOS id = 0)."""
+        params = model.init_params(TINY)
+        toks = np.zeros((1, 8), np.int32)
+        toks[0, :2] = [1, 2]
+        lens = np.array([2], np.int32)
+        out = model.generate_greedy(TINY, params, toks, lens, max_new=10)
+        row = out[0]
+        if 0 in row:
+            assert row.index(0) == len(row) - 1

@@ -1,0 +1,27 @@
+//! Bench: regenerate the paper's Fig. 1 and Fig. 2 series (plus the
+//! cross-batch sweep and ablations) and time them.
+//! Run with `cargo bench --bench figures`.
+
+use verdant::bench::{ablation, fig1, fig2, harness, sweep, Env};
+
+fn main() {
+    harness::group("Fig. 1 / Fig. 2 — canonical prompt experiments");
+
+    let r = harness::bench("fig1/P1-P4 x 3 backends", 2, 20, fig1::run);
+    harness::report(&r);
+    let r = harness::bench("fig2/P1-P4 x 2 models", 2, 20, fig2::run);
+    harness::report(&r);
+
+    let env = Env::standard();
+    let r = harness::bench("sweep/3-strategies x 5 batches", 1, 3, || sweep::run(&env));
+    harness::report(&r);
+    let r = harness::bench("ablation/3-studies", 1, 3, || ablation::run(&env));
+    harness::report(&r);
+
+    for table in [fig1::run().1, fig2::run().1, sweep::run(&env).1, ablation::run(&env).1] {
+        println!("\n{}", table.ascii());
+        let name = table.name.clone();
+        let _ = table.save(std::path::Path::new("results"));
+        println!("saved results/{name}.{{csv,json}}");
+    }
+}

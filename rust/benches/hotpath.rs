@@ -1,0 +1,95 @@
+//! Bench: L3 coordinator hot paths in isolation (§Perf targets).
+//!
+//! The serving-relevant inner loops: routing 500 prompts, batch
+//! formation, one simulated batch, estimator lookups, benchmark-DB
+//! construction, the DES queue, and real PJRT decode steps when
+//! artifacts are present. Run with `cargo bench --bench hotpath`.
+
+use verdant::bench::{harness, Env};
+use verdant::coordinator::{build_strategy, estimator, form_batches, Grouping, RouteContext};
+use verdant::simulator::{simulate_batch, BatchWork, EventQueue};
+
+fn main() {
+    harness::group("L3 hot paths");
+
+    let env = Env::standard();
+    let ctx = RouteContext { cluster: &env.cluster, db: &env.db, batch_size: 4 };
+
+    for name in ["carbon-aware", "latency-aware", "round-robin"] {
+        let s = build_strategy(name, &env.cluster).unwrap();
+        let r = harness::bench(&format!("route/500/{name}"), 3, 50, || {
+            s.assign(&env.prompts, &ctx)
+        });
+        harness::report(&r);
+    }
+
+    let s = build_strategy("latency-aware", &env.cluster).unwrap();
+    let assignment = s.assign(&env.prompts, &ctx);
+    let r = harness::bench("batcher/500-prompts", 3, 100, || {
+        form_batches(&env.prompts, &assignment, 4, &env.cluster, Grouping::Fifo)
+    });
+    harness::report(&r);
+
+    let jetson = &env.cluster.devices[0];
+    let work = BatchWork::new(vec![150; 8], vec![148; 8]);
+    let r = harness::bench("simulate_batch/b8", 10, 10_000, || {
+        simulate_batch(jetson, &work, None)
+    });
+    harness::report(&r);
+
+    let p = &env.prompts[0];
+    let r = harness::bench("estimator/analytic", 10, 10_000, || {
+        estimator::estimate(jetson, p, 4, 69.0)
+    });
+    harness::report(&r);
+    let r = harness::bench("estimator/db-lookup", 10, 100_000, || {
+        env.db.cost(jetson, p, 4)
+    });
+    harness::report(&r);
+
+    let r = harness::bench("benchmark-db/build/6-per-cell", 1, 5, || {
+        estimator::BenchmarkDb::build(&env.cluster, &[1, 4, 8], 6, 69.0, 1)
+    });
+    harness::report(&r);
+
+    let r = harness::bench("event-queue/push+pop 10k", 3, 200, || {
+        let mut q = EventQueue::new();
+        for i in 0..10_000u32 {
+            q.push((i % 97) as f64, i);
+        }
+        let mut acc = 0u64;
+        while let Some(e) = q.pop() {
+            acc = acc.wrapping_add(e.event as u64);
+        }
+        acc
+    });
+    harness::report(&r);
+
+    // --- real PJRT decode hot path (needs artifacts) -------------------
+    let artifacts = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if artifacts.join("manifest.json").exists() {
+        harness::group("PJRT request path (edge-1b-sim)");
+        let mut engine = verdant::runtime::Engine::load(&artifacts).unwrap();
+        engine.warmup("edge-1b-sim", &[1, 4]).unwrap();
+
+        let prompts_b1 = vec!["Who painted the Mona Lisa?".to_string()];
+        let r = harness::bench("pjrt/generate/b1/8-new-tokens", 2, 20, || {
+            verdant::runtime::generate(&engine, "edge-1b-sim", 1, &prompts_b1, 8).unwrap()
+        });
+        harness::report(&r);
+
+        let r = harness::bench("pjrt/generate/b1/32-new-tokens", 2, 10, || {
+            verdant::runtime::generate(&engine, "edge-1b-sim", 1, &prompts_b1, 32).unwrap()
+        });
+        harness::report(&r);
+
+        let prompts_b4: Vec<String> =
+            (0..4).map(|i| format!("Edge prompt number {i} with some body text")).collect();
+        let r = harness::bench("pjrt/generate/b4/8-new-tokens", 2, 10, || {
+            verdant::runtime::generate(&engine, "edge-1b-sim", 4, &prompts_b4, 8).unwrap()
+        });
+        harness::report(&r);
+    } else {
+        println!("(skipping PJRT benches: run `make artifacts` first)");
+    }
+}

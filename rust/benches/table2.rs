@@ -1,0 +1,26 @@
+//! Bench: regenerate the paper's Table 2 (per-device, per-batch averages)
+//! and time the pipeline. Run with `cargo bench --bench table2`.
+
+use verdant::bench::{harness, table2, Env};
+
+fn main() {
+    harness::group("Table 2 — average inference metrics per (device, batch)");
+
+    // full paper-scale corpus
+    let env = Env::standard();
+    let r = harness::bench("table2/500-prompts/6-configs", 1, 5, || table2::run(&env));
+    harness::report(&r);
+
+    // scaling in corpus size
+    for n in [100usize, 1000] {
+        let env_n = Env::small(n);
+        let r = harness::bench(&format!("table2/{n}-prompts"), 1, 3, || table2::run(&env_n));
+        harness::report(&r);
+    }
+
+    // emit the actual table (the artefact this bench regenerates)
+    let (_, table) = table2::run(&env);
+    println!("\n{}", table.ascii());
+    let _ = table.save(std::path::Path::new("results"));
+    println!("saved results/table2.{{csv,json}}");
+}

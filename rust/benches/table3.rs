@@ -1,0 +1,39 @@
+//! Bench: regenerate the paper's Table 3 (strategy comparison) and time
+//! the full route→batch→execute→account pipeline per strategy.
+//! Run with `cargo bench --bench table3`.
+
+use verdant::bench::{harness, table3, Env};
+use verdant::config::ExecutionMode;
+use verdant::coordinator::{build_strategy, run, Grouping, RunConfig};
+
+fn main() {
+    harness::group("Table 3 — strategy comparison across batch sizes");
+
+    let env = Env::standard();
+
+    // per-strategy end-to-end pipeline cost at batch 4 (the hot path a
+    // deployment would re-run whenever the corpus changes)
+    for name in table3::PAPER_STRATEGIES {
+        let strategy = build_strategy(name, &env.cluster).unwrap();
+        let cfg = RunConfig {
+            batch_size: 4,
+            grouping: Grouping::Fifo,
+            execution: ExecutionMode::Calibrated,
+            max_new_tokens: 96,
+            stochastic_seed: None,
+        };
+        let r = harness::bench(&format!("table3/run/{name}"), 1, 10, || {
+            run(&env.cluster, &env.prompts, strategy.as_ref(), &env.db, &cfg, None).unwrap()
+        });
+        harness::report(&r);
+    }
+
+    // the whole table (12 paper rows + 9 extension rows)
+    let r = harness::bench("table3/full-table+extensions", 1, 3, || table3::run(&env, true));
+    harness::report(&r);
+
+    let (_, table) = table3::run(&env, true);
+    println!("\n{}", table.ascii());
+    let _ = table.save(std::path::Path::new("results"));
+    println!("saved results/table3.{{csv,json}}");
+}

@@ -1,0 +1,153 @@
+//! Ablations over the design choices DESIGN.md calls out:
+//!
+//! 1. **estimator fidelity** — routing on the measured BenchmarkDb vs
+//!    the analytic estimator vs a deliberately degraded DB (1 sample per
+//!    cell): how much does the offline benchmarking phase buy?
+//! 2. **batch grouping** — FIFO vs length-sorted batches (decode
+//!    stragglers waste device occupancy);
+//! 3. **complexity threshold** — sweep the complexity-aware strategy's
+//!    CS cut-point.
+
+use crate::config::ExecutionMode;
+use crate::coordinator::{build_strategy, run as run_sched, BenchmarkDb, Grouping, RunConfig};
+use crate::report::{fmt, Table};
+
+use super::Env;
+
+/// One ablation result row.
+#[derive(Debug, Clone)]
+pub struct AblationRow {
+    pub study: &'static str,
+    pub variant: String,
+    pub makespan_s: f64,
+    pub total_carbon_kg: f64,
+}
+
+fn cfg(batch: usize, grouping: Grouping) -> RunConfig {
+    RunConfig {
+        batch_size: batch,
+        grouping,
+        execution: ExecutionMode::Calibrated,
+        max_new_tokens: 96,
+        stochastic_seed: None,
+    }
+}
+
+/// Run all ablation studies at batch 4.
+pub fn run(env: &Env) -> (Vec<AblationRow>, Table) {
+    let mut rows = Vec::new();
+
+    // --- study 1: estimator fidelity --------------------------------
+    // full DB (6 samples/cell, what Env::standard builds)
+    let la = build_strategy("latency-aware", &env.cluster).unwrap();
+    let r = run_sched(&env.cluster, &env.prompts, la.as_ref(), &env.db, &cfg(4, Grouping::Fifo), None)
+        .unwrap();
+    rows.push(AblationRow {
+        study: "estimator",
+        variant: "benchmark-db (6 samples/cell)".into(),
+        makespan_s: r.makespan_s,
+        total_carbon_kg: r.total_carbon_kg,
+    });
+    // degraded DB: a single noisy sample per cell
+    let noisy = BenchmarkDb::build(&env.cluster, &[1, 4, 8], 1, 69.0, 0xBAD);
+    let r = run_sched(&env.cluster, &env.prompts, la.as_ref(), &noisy, &cfg(4, Grouping::Fifo), None)
+        .unwrap();
+    rows.push(AblationRow {
+        study: "estimator",
+        variant: "benchmark-db (1 sample/cell)".into(),
+        makespan_s: r.makespan_s,
+        total_carbon_kg: r.total_carbon_kg,
+    });
+    // analytic only: empty DB forces the fallback path
+    let analytic = BenchmarkDb::build(&env.cluster, &[], 0, 69.0, 0);
+    let r = run_sched(&env.cluster, &env.prompts, la.as_ref(), &analytic, &cfg(4, Grouping::Fifo), None)
+        .unwrap();
+    rows.push(AblationRow {
+        study: "estimator",
+        variant: "analytic (no benchmarking)".into(),
+        makespan_s: r.makespan_s,
+        total_carbon_kg: r.total_carbon_kg,
+    });
+
+    // --- study 2: batch grouping ------------------------------------
+    for (g, label) in [(Grouping::Fifo, "fifo"), (Grouping::LengthSorted, "length-sorted")] {
+        let r = run_sched(&env.cluster, &env.prompts, la.as_ref(), &env.db, &cfg(4, g), None)
+            .unwrap();
+        rows.push(AblationRow {
+            study: "grouping",
+            variant: label.into(),
+            makespan_s: r.makespan_s,
+            total_carbon_kg: r.total_carbon_kg,
+        });
+    }
+
+    // --- study 3: complexity threshold ------------------------------
+    for t in [0.1, 0.25, 0.35, 0.5, 0.7] {
+        let s = build_strategy(&format!("complexity-aware@{t}"), &env.cluster).unwrap();
+        let r = run_sched(&env.cluster, &env.prompts, s.as_ref(), &env.db, &cfg(4, Grouping::Fifo), None)
+            .unwrap();
+        rows.push(AblationRow {
+            study: "cs-threshold",
+            variant: format!("threshold {t}"),
+            makespan_s: r.makespan_s,
+            total_carbon_kg: r.total_carbon_kg,
+        });
+    }
+
+    let mut table = Table::new(
+        "ablation",
+        "Ablations — estimator fidelity, batch grouping, complexity threshold (batch 4)",
+        &["Study", "Variant", "Makespan (s)", "Total Carbon (kgCO2e)"],
+    );
+    for r in &rows {
+        table.row(vec![
+            r.study.to_string(),
+            r.variant.clone(),
+            fmt::secs(r.makespan_s),
+            fmt::sci(r.total_carbon_kg),
+        ]);
+    }
+    (rows, table)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_studies_present() {
+        let env = Env::small(80);
+        let (rows, table) = run(&env);
+        assert_eq!(rows.iter().filter(|r| r.study == "estimator").count(), 3);
+        assert_eq!(rows.iter().filter(|r| r.study == "grouping").count(), 2);
+        assert_eq!(rows.iter().filter(|r| r.study == "cs-threshold").count(), 5);
+        assert_eq!(table.rows.len(), rows.len());
+    }
+
+    #[test]
+    fn threshold_moves_the_tradeoff_monotonically_in_carbon() {
+        // higher threshold -> more prompts "simple" -> more carbon-minimal
+        // routing -> carbon falls (or holds), makespan rises (or holds)
+        let env = Env::small(120);
+        let (rows, _) = run(&env);
+        let th: Vec<&AblationRow> =
+            rows.iter().filter(|r| r.study == "cs-threshold").collect();
+        for w in th.windows(2) {
+            assert!(
+                w[1].total_carbon_kg <= w[0].total_carbon_kg * 1.001,
+                "{} -> {}",
+                w[0].variant,
+                w[1].variant
+            );
+        }
+    }
+
+    #[test]
+    fn all_rows_positive() {
+        let env = Env::small(60);
+        let (rows, _) = run(&env);
+        for r in &rows {
+            assert!(r.makespan_s > 0.0 && r.total_carbon_kg > 0.0, "{r:?}");
+        }
+    }
+}

@@ -1,0 +1,125 @@
+//! Fig. 1 reproduction: inference performance of P1–P4 across
+//! Jetson-1B, Ada-12B and the cloud API.
+//!
+//! The paper's figure plots IT (inference time), TTFT, TPS and TPOT for
+//! the four Table-1 prompts on the three backends. We run each prompt
+//! at batch 1 through the calibrated simulator (cloud requests pay the
+//! network link) and emit one row per (prompt, backend).
+//!
+//! Shape expectations (paper §2): the 12B Ada has the shortest TTFT but
+//! higher IT/TPOT on long generations; the cloud wins IT/TPS on complex
+//! prompts (P1, P2) but loses on short factual ones (P4) to dispatch +
+//! bandwidth overhead.
+
+use crate::cluster::DeviceProfile;
+use crate::config::DeviceKind;
+use crate::report::{fmt, Table};
+use crate::simulator::{simulate_batch, BatchWork};
+use crate::workload::canonical;
+
+/// One measured cell of the figure.
+#[derive(Debug, Clone)]
+pub struct Fig1Point {
+    pub prompt: &'static str,
+    pub backend: String,
+    pub it_s: f64,
+    pub ttft_s: f64,
+    pub tps: f64,
+    pub tpot_s: f64,
+}
+
+/// Run the experiment and return (points, rendered table).
+pub fn run() -> (Vec<Fig1Point>, Table) {
+    let backends = [DeviceProfile::jetson(), DeviceProfile::ada(), DeviceProfile::cloud()];
+    let link = crate::cluster::LinkModel::new(80.0, 50.0);
+
+    let mut points = Vec::new();
+    for p in canonical::ALL {
+        for dev in &backends {
+            let out = p.to_prompt(0).output_tokens_on(dev.output_median_tokens);
+            let work = BatchWork::new(vec![p.text.len()], vec![out]);
+            let t = simulate_batch(dev, &work, None);
+            let net = if dev.kind == DeviceKind::Cloud {
+                link.token_round_trip_s(p.text.len(), out)
+            } else {
+                0.0
+            };
+            let it = t.total_s + net;
+            points.push(Fig1Point {
+                prompt: p.id,
+                backend: dev.name.clone(),
+                it_s: it,
+                ttft_s: t.ttft_s + net * 0.5,
+                tps: out as f64 / it,
+                tpot_s: t.decode_s / out.max(1) as f64,
+            });
+        }
+    }
+
+    let mut table = Table::new(
+        "fig1",
+        "Fig. 1 — inference performance, P1-P4 x {Jetson 1B, Ada 12B, cloud}",
+        &["prompt", "backend", "IT (s)", "TTFT (s)", "TPS (tok/s)", "TPOT (s)"],
+    );
+    for pt in &points {
+        table.row(vec![
+            pt.prompt.to_string(),
+            pt.backend.clone(),
+            fmt::secs(pt.it_s),
+            fmt::secs(pt.ttft_s),
+            fmt::f2(pt.tps),
+            format!("{:.3}", pt.tpot_s),
+        ]);
+    }
+    table.note("batch size 1; cloud rows include the 80ms-RTT/50Mbps link");
+    (points, table)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn point<'a>(pts: &'a [Fig1Point], prompt: &str, backend: &str) -> &'a Fig1Point {
+        pts.iter()
+            .find(|p| p.prompt == prompt && p.backend.contains(backend))
+            .unwrap()
+    }
+
+    #[test]
+    fn shape_matches_paper_figure() {
+        let (pts, _) = run();
+        assert_eq!(pts.len(), 12);
+
+        // Ada has the shortest TTFT among edge devices on every prompt
+        for p in ["P1", "P2", "P3", "P4"] {
+            let ada = point(&pts, p, "ada");
+            let jet = point(&pts, p, "jetson");
+            assert!(ada.ttft_s < jet.ttft_s, "{p}");
+        }
+        // cloud wins IT on the complex prompts...
+        for p in ["P1", "P2"] {
+            let cloud = point(&pts, p, "gemini");
+            let jet = point(&pts, p, "jetson");
+            assert!(cloud.it_s < jet.it_s, "{p}");
+        }
+        // ...but loses to the edge on the trivial factual P4
+        let cloud = point(&pts, "P4", "gemini");
+        let ada = point(&pts, "P4", "ada");
+        assert!(cloud.ttft_s > ada.ttft_s, "cloud dispatch overhead must dominate P4");
+
+        // cloud decode is the fastest (Gemini-Flash class TPOT)
+        for p in ["P1", "P2", "P3", "P4"] {
+            let c = point(&pts, p, "gemini");
+            let j = point(&pts, p, "jetson");
+            assert!(c.tpot_s < j.tpot_s);
+        }
+    }
+
+    #[test]
+    fn table_renders_all_rows() {
+        let (_, table) = run();
+        assert_eq!(table.rows.len(), 12);
+        let ascii = table.ascii();
+        assert!(ascii.contains("P1") && ascii.contains("P4"));
+    }
+}

@@ -1,0 +1,113 @@
+//! Fig. 2 reproduction: carbon footprint + power draw for P1–P4 on the
+//! two edge models.
+//!
+//! The paper measures CO2eq and watts with JetPack/PyNVML while running
+//! each canonical prompt on Gemma-3-1B (Jetson) and Gemma-3-12B (Ada).
+//! Shape expectations (§2): the 1B model emits roughly one tenth of the
+//! 12B's carbon on the reasoning prompts (P1, P2); both are low on the
+//! factual ones (P3, P4); Ada draws ~60-70 W vs the Jetson's ~5 W.
+
+use crate::cluster::{CarbonModel, DeviceProfile};
+use crate::report::{fmt, Table};
+use crate::simulator::{simulate_batch, BatchWork};
+use crate::workload::canonical;
+
+/// One measured bar of the figure.
+#[derive(Debug, Clone)]
+pub struct Fig2Point {
+    pub prompt: &'static str,
+    pub model: String,
+    pub carbon_kg: f64,
+    pub power_w: f64,
+    pub energy_kwh: f64,
+}
+
+/// Run the experiment and return (points, rendered table).
+pub fn run() -> (Vec<Fig2Point>, Table) {
+    let carbon = CarbonModel::constant(69.0);
+    let devices = [
+        (DeviceProfile::jetson(), "Gemma3-1B-it (Jetson)"),
+        (DeviceProfile::ada(), "Gemma3-12B-it (Ada)"),
+    ];
+
+    let mut points = Vec::new();
+    for p in canonical::ALL {
+        for (dev, label) in &devices {
+            let out = p.to_prompt(0).output_tokens_on(dev.output_median_tokens);
+            let work = BatchWork::new(vec![p.text.len()], vec![out]);
+            let t = simulate_batch(dev, &work, None);
+            points.push(Fig2Point {
+                prompt: p.id,
+                model: label.to_string(),
+                carbon_kg: carbon.kg_co2e(t.energy_kwh, 0.0),
+                power_w: t.energy_kwh * 3.6e6 / t.total_s,
+                energy_kwh: t.energy_kwh,
+            });
+        }
+    }
+
+    let mut table = Table::new(
+        "fig2",
+        "Fig. 2 — carbon footprint and power draw, P1-P4 x {Gemma3-1B, Gemma3-12B}",
+        &["prompt", "model", "carbon (kgCO2e)", "energy (kWh)", "power (W)"],
+    );
+    for pt in &points {
+        table.row(vec![
+            pt.prompt.to_string(),
+            pt.model.clone(),
+            fmt::sci(pt.carbon_kg),
+            fmt::sci(pt.energy_kwh),
+            fmt::f2(pt.power_w),
+        ]);
+    }
+    table.note("batch size 1; 69 gCO2e/kWh grid intensity (back-derived from the paper)");
+    (points, table)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn point<'a>(pts: &'a [Fig2Point], prompt: &str, model: &str) -> &'a Fig2Point {
+        pts.iter().find(|p| p.prompt == prompt && p.model.contains(model)).unwrap()
+    }
+
+    #[test]
+    fn shape_matches_paper_figure() {
+        let (pts, _) = run();
+        assert_eq!(pts.len(), 8);
+
+        // 1B emits far less than 12B on the reasoning prompts (paper:
+        // "roughly one-tenth"); our calibration puts it in the 5-15x band
+        for p in ["P1", "P2"] {
+            let small = point(&pts, p, "1B");
+            let big = point(&pts, p, "12B");
+            let ratio = big.carbon_kg / small.carbon_kg;
+            assert!((3.0..30.0).contains(&ratio), "{p}: ratio {ratio}");
+        }
+        // factual prompts are low-emission on both models
+        for model in ["1B", "12B"] {
+            let p4 = point(&pts, "P4", model);
+            let p1 = point(&pts, "P1", model);
+            assert!(p4.carbon_kg < p1.carbon_kg / 2.0, "{model}");
+        }
+        // power hierarchy: Jetson ~5 W, Ada ~60-70 W
+        for p in ["P1", "P2", "P3", "P4"] {
+            let j = point(&pts, p, "1B");
+            let a = point(&pts, p, "12B");
+            assert!((2.0..12.0).contains(&j.power_w), "jetson {}", j.power_w);
+            assert!((40.0..80.0).contains(&a.power_w), "ada {}", a.power_w);
+        }
+        // carbon == energy x intensity
+        for pt in &pts {
+            assert!((pt.carbon_kg - pt.energy_kwh * 0.069).abs() < 1e-15);
+        }
+    }
+
+    #[test]
+    fn table_renders() {
+        let (_, t) = run();
+        assert_eq!(t.rows.len(), 8);
+        assert!(t.ascii().contains("Gemma3-12B"));
+    }
+}

@@ -1,0 +1,107 @@
+//! Micro-benchmark harness (criterion substitute, offline build).
+//!
+//! Wallclock timing with warmup, fixed iteration counts and summary
+//! statistics. Used by `rust/benches/*.rs` (harness = false binaries)
+//! for the L3 hot-path measurements recorded in EXPERIMENTS.md §Perf.
+
+use crate::util::stats::Summary;
+use std::time::Instant;
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+}
+
+impl BenchResult {
+    /// criterion-ish one-liner.
+    pub fn line(&self) -> String {
+        format!(
+            "{:<44} {:>12} / iter  (min {:>12}, max {:>12}, n={})",
+            self.name,
+            human_time(self.mean_s),
+            human_time(self.min_s),
+            human_time(self.max_s),
+            self.iters
+        )
+    }
+}
+
+/// Pretty-print a duration in s/ms/µs/ns.
+pub fn human_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` unmeasured runs.
+/// The closure's return value is black-boxed to keep the optimizer
+/// honest.
+pub fn bench<T>(name: &str, warmup: u64, iters: u64, mut f: impl FnMut() -> T) -> BenchResult {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut stats = Summary::new();
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        stats.add(t0.elapsed().as_secs_f64());
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_s: stats.mean(),
+        std_s: stats.std(),
+        min_s: stats.min(),
+        max_s: stats.max(),
+    }
+}
+
+/// Run and print a group of benches with a header.
+pub fn group(title: &str) {
+    println!("\n### {title}");
+}
+
+/// Print one result.
+pub fn report(r: &BenchResult) {
+    println!("{}", r.line());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench("spin", 2, 10, || {
+            let mut x = 0u64;
+            for i in 0..1000 {
+                x = x.wrapping_add(i);
+            }
+            x
+        });
+        assert_eq!(r.iters, 10);
+        assert!(r.mean_s > 0.0);
+        assert!(r.min_s <= r.mean_s && r.mean_s <= r.max_s);
+    }
+
+    #[test]
+    fn human_time_units() {
+        assert_eq!(human_time(2.5), "2.500 s");
+        assert_eq!(human_time(2.5e-3), "2.500 ms");
+        assert_eq!(human_time(2.5e-6), "2.500 µs");
+        assert_eq!(human_time(2.5e-9), "2.5 ns");
+    }
+}

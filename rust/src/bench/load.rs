@@ -1,0 +1,115 @@
+//! Open-loop load sweep (serving extension; paper future work).
+//!
+//! Sweeps the offered arrival rate and reports steady-state latency
+//! (mean/p50/p95), utilization and batch fill per routing strategy and
+//! batching policy — the latency-vs-load curve a deployment would use
+//! to size this cluster.
+
+use crate::config::{Arrival, ExperimentConfig};
+use crate::coordinator::online::{run_online, BatchPolicy, OnlineConfig};
+use crate::report::{fmt, Table};
+use crate::workload::{trace, Corpus};
+
+use super::Env;
+
+/// Offered loads (requests/second).
+pub const RATES: [f64; 5] = [0.05, 0.1, 0.2, 0.5, 1.0];
+
+/// One sweep point.
+#[derive(Debug, Clone)]
+pub struct LoadRow {
+    pub strategy: String,
+    pub policy: &'static str,
+    pub rate: f64,
+    pub latency_mean_s: f64,
+    pub latency_p95_s: f64,
+    pub mean_fill: f64,
+    pub max_utilization: f64,
+}
+
+/// Run the sweep and return (rows, rendered table).
+pub fn run(env: &Env) -> (Vec<LoadRow>, Table) {
+    let mut rows = Vec::new();
+    let base: ExperimentConfig = env.cfg.clone();
+
+    for (strategy, policy, label) in [
+        ("latency-aware", BatchPolicy::Immediate, "immediate"),
+        ("latency-aware", BatchPolicy::WaitFill { timeout_s: 10.0 }, "wait-fill@10s"),
+        ("round-robin", BatchPolicy::Immediate, "immediate"),
+    ] {
+        for &rate in &RATES {
+            let mut corpus = Corpus::generate(&base.workload);
+            trace::assign_arrivals(&mut corpus.prompts, Arrival::Open { rate }, base.workload.seed);
+            let cfg = OnlineConfig {
+                batch_size: base.serving.batch_size,
+                policy,
+                strategy: strategy.into(),
+            };
+            let r = run_online(&env.cluster, &corpus.prompts, &env.db, &cfg);
+            rows.push(LoadRow {
+                strategy: strategy.into(),
+                policy: label,
+                rate,
+                latency_mean_s: r.latency.mean(),
+                latency_p95_s: r.latency_hist.p95(),
+                mean_fill: r.batch_fill.mean(),
+                max_utilization: r
+                    .utilization
+                    .iter()
+                    .map(|(_, u)| *u)
+                    .fold(0.0, f64::max),
+            });
+        }
+    }
+
+    let mut table = Table::new(
+        "load",
+        "Open-loop load sweep — latency vs offered rate (batch 4)",
+        &["Strategy", "Policy", "Rate (req/s)", "Lat mean (s)", "Lat p95 (s)", "Fill", "Max util"],
+    );
+    for r in &rows {
+        table.row(vec![
+            r.strategy.clone(),
+            r.policy.to_string(),
+            format!("{:.2}", r.rate),
+            fmt::secs(r.latency_mean_s),
+            fmt::secs(r.latency_p95_s),
+            format!("{:.2}", r.mean_fill),
+            fmt::pct(r.max_utilization),
+        ]);
+    }
+    table.note("virtual-time DES over the calibrated devices; 500-prompt trace per point");
+    (rows, table)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_monotone_in_offered_load() {
+        let env = Env::small(150);
+        let (rows, table) = run(&env);
+        assert_eq!(rows.len(), 15);
+        assert_eq!(table.rows.len(), 15);
+        let la: Vec<&LoadRow> = rows
+            .iter()
+            .filter(|r| r.strategy == "latency-aware" && r.policy == "immediate")
+            .collect();
+        assert!(la.last().unwrap().latency_mean_s > la.first().unwrap().latency_mean_s);
+        // utilization rises with load
+        assert!(la.last().unwrap().max_utilization > la.first().unwrap().max_utilization);
+    }
+
+    #[test]
+    fn waitfill_fills_batches_better_at_low_load() {
+        let env = Env::small(150);
+        let (rows, _) = run(&env);
+        let find = |policy: &str, rate: f64| {
+            rows.iter()
+                .find(|r| r.strategy == "latency-aware" && r.policy == policy && r.rate == rate)
+                .unwrap()
+        };
+        assert!(find("wait-fill@10s", 0.2).mean_fill >= find("immediate", 0.2).mean_fill);
+    }
+}

@@ -1,0 +1,65 @@
+//! Experiment drivers: one per paper table/figure + extensions.
+//!
+//! | driver | paper artefact |
+//! |--------|----------------|
+//! | [`fig1`] | Fig. 1 — IT/TTFT/TPS/TPOT for P1–P4 on Jetson-1B, Ada-12B, cloud |
+//! | [`fig2`] | Fig. 2 — carbon + power for P1–P4 on both edge models |
+//! | [`table2`] | Table 2 — per-device per-batch average inference metrics |
+//! | [`table3`] | Table 3 — strategy comparison across batch 1/4/8 |
+//! | [`sweep`] | §3 cross-batch analysis (TTFT↑, carbon/prompt↓, errors) |
+//! | [`ablation`] | DESIGN.md ablations (estimator, grouping, threshold) |
+//! | [`load`] | open-loop latency-vs-load sweep (serving extension) |
+//!
+//! [`harness`] is the in-tree micro-benchmark timer used by
+//! `rust/benches/*` (criterion is not available offline).
+
+pub mod ablation;
+pub mod fig1;
+pub mod fig2;
+pub mod harness;
+pub mod load;
+pub mod sweep;
+pub mod table2;
+pub mod table3;
+
+use crate::cluster::Cluster;
+use crate::config::ExperimentConfig;
+use crate::coordinator::BenchmarkDb;
+use crate::workload::{trace, Corpus, Prompt};
+
+/// Shared experiment environment built once per bench invocation.
+pub struct Env {
+    pub cfg: ExperimentConfig,
+    pub cluster: Cluster,
+    pub prompts: Vec<Prompt>,
+    pub db: BenchmarkDb,
+}
+
+impl Env {
+    /// Standard environment: the paper's 500-prompt closed-loop setup.
+    pub fn standard() -> Self {
+        Self::with_config(ExperimentConfig::default())
+    }
+
+    /// Environment from an explicit config.
+    pub fn with_config(cfg: ExperimentConfig) -> Self {
+        let cluster = Cluster::from_config(&cfg.cluster);
+        let mut corpus = Corpus::generate(&cfg.workload);
+        trace::assign_arrivals(&mut corpus.prompts, cfg.workload.arrival, cfg.workload.seed);
+        let db = BenchmarkDb::build(
+            &cluster,
+            &[1, 4, 8],
+            6,
+            cfg.cluster.carbon_intensity_g_per_kwh,
+            cfg.workload.seed ^ 0x0FF1_CE,
+        );
+        Env { cfg, cluster, prompts: corpus.prompts, db }
+    }
+
+    /// Smaller corpus for fast tests.
+    pub fn small(prompts: usize) -> Self {
+        let mut cfg = ExperimentConfig::default();
+        cfg.workload.prompts = prompts;
+        Self::with_config(cfg)
+    }
+}

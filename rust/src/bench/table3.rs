@@ -1,0 +1,205 @@
+//! Table 3 reproduction: strategy comparison across batch sizes.
+//!
+//! The paper's headline table: total E2E latency (cluster makespan) and
+//! total carbon footprint for {All-on-Jetson, All-on-Ada, Carbon-Aware,
+//! Latency-Aware} at batch 1/4/8, over the 500-prompt sample. We add the
+//! extension strategies (round-robin, complexity-aware, carbon-cap) as
+//! extra rows, plus the device routing share the paper quotes in prose
+//! ("~85 % of prompts to the Jetson").
+
+use crate::config::ExecutionMode;
+use crate::coordinator::{build_strategy, run as run_sched, Grouping, RunConfig};
+use crate::report::{fmt, Table};
+
+use super::Env;
+
+/// Paper strategies, in Table 3 order.
+pub const PAPER_STRATEGIES: [&str; 4] =
+    ["all-on-jetson-orin-nx", "all-on-ada-2000", "carbon-aware", "latency-aware"];
+
+/// Extension strategies appended to each batch block.
+pub const EXTENSION_STRATEGIES: [&str; 3] =
+    ["round-robin", "complexity-aware", "carbon-cap@2e-5"];
+
+/// One row of Table 3.
+#[derive(Debug, Clone)]
+pub struct Table3Row {
+    pub batch: usize,
+    pub strategy: String,
+    pub total_e2e_s: f64,
+    pub total_carbon_kg: f64,
+    pub jetson_share: f64,
+    pub error_rate: f64,
+}
+
+/// Run the experiment. `extensions` appends the non-paper strategies.
+pub fn run(env: &Env, extensions: bool) -> (Vec<Table3Row>, Table) {
+    let mut rows = Vec::new();
+    let mut names: Vec<&str> = PAPER_STRATEGIES.to_vec();
+    if extensions {
+        names.extend(EXTENSION_STRATEGIES);
+    }
+    for &batch in &[1usize, 4, 8] {
+        for name in &names {
+            let strategy = build_strategy(name, &env.cluster).expect("strategy");
+            let cfg = RunConfig {
+                batch_size: batch,
+                grouping: Grouping::Fifo,
+                execution: ExecutionMode::Calibrated,
+                max_new_tokens: env.cfg.serving.max_new_tokens,
+                stochastic_seed: None,
+            };
+            let r = run_sched(&env.cluster, &env.prompts, strategy.as_ref(), &env.db, &cfg, None)
+                .expect("table3 run");
+            rows.push(Table3Row {
+                batch,
+                strategy: r.strategy.clone(),
+                total_e2e_s: r.makespan_s,
+                total_carbon_kg: r.total_carbon_kg,
+                jetson_share: r.share("jetson-orin-nx"),
+                error_rate: r.overall.error_rate(),
+            });
+        }
+    }
+
+    // mark the winners per batch block like the paper does
+    let mut table = Table::new(
+        "table3",
+        "Table 3 — LLM inference strategies across batch sizes 1, 4, 8 (500 prompts)",
+        &["Batch", "Strategy", "Total E2E latency (s)", "Total Carbon (kgCO2e)", "Jetson share", "Err"],
+    );
+    for &batch in &[1usize, 4, 8] {
+        let block: Vec<&Table3Row> = rows.iter().filter(|r| r.batch == batch).collect();
+        let best_lat = block
+            .iter()
+            .map(|r| r.total_e2e_s)
+            .fold(f64::MAX, f64::min);
+        let best_carbon = block
+            .iter()
+            .map(|r| r.total_carbon_kg)
+            .fold(f64::MAX, f64::min);
+        for r in block {
+            let lat = if (r.total_e2e_s - best_lat).abs() < 1e-9 {
+                format!("{} (lowest)", fmt::secs(r.total_e2e_s))
+            } else {
+                fmt::secs(r.total_e2e_s)
+            };
+            let carbon = if (r.total_carbon_kg - best_carbon).abs() < 1e-15 {
+                format!("{} (lowest)", fmt::sci(r.total_carbon_kg))
+            } else {
+                fmt::sci(r.total_carbon_kg)
+            };
+            table.row(vec![
+                r.batch.to_string(),
+                r.strategy.clone(),
+                lat,
+                carbon,
+                fmt::pct(r.jetson_share),
+                fmt::pct(r.error_rate),
+            ]);
+        }
+    }
+    table.note("total E2E = cluster makespan, all prompts queued at t=0 (closed loop)");
+    table.note("absolute values are calibrated to the paper's Table 2 per-request \
+                measurements; Table 3 of the paper is internally inconsistent with \
+                its own Table 2 (see EXPERIMENTS.md), orderings and ratios hold");
+    (rows, table)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn get<'a>(rows: &'a [Table3Row], b: usize, s: &str) -> &'a Table3Row {
+        rows.iter().find(|r| r.batch == b && r.strategy.contains(s)).unwrap()
+    }
+
+    #[test]
+    fn headline_claims_hold_at_every_batch() {
+        let env = Env::small(160);
+        let (rows, _) = run(&env, false);
+        assert_eq!(rows.len(), 12);
+
+        for b in [1usize, 4, 8] {
+            let jetson = get(&rows, b, "all-on-jetson");
+            let ada = get(&rows, b, "all-on-ada");
+            let carbon = get(&rows, b, "carbon-aware");
+            let latency = get(&rows, b, "latency-aware");
+
+            // claim 1: carbon-aware has the lowest carbon
+            for other in [jetson, ada, latency] {
+                assert!(
+                    carbon.total_carbon_kg <= other.total_carbon_kg * 1.0001,
+                    "b{b}: carbon-aware {} vs {} {}",
+                    carbon.total_carbon_kg,
+                    other.strategy,
+                    other.total_carbon_kg
+                );
+            }
+            // claim 2: latency-aware has the lowest total E2E
+            for other in [jetson, ada, carbon] {
+                assert!(
+                    latency.total_e2e_s < other.total_e2e_s,
+                    "b{b}: latency-aware {} vs {} {}",
+                    latency.total_e2e_s,
+                    other.strategy,
+                    other.total_e2e_s
+                );
+            }
+            // claim 3: 2-3x (or better) vs the Jetson-only baseline at
+            // batch 1/4; at batch 8 the Jetson-only baseline itself gets
+            // faster (Table 2: its b8 E2E ~= b4), compressing the gap
+            let speedup = jetson.total_e2e_s / latency.total_e2e_s;
+            let floor = if b == 8 { 1.6 } else { 2.0 };
+            assert!(speedup >= floor, "b{b}: speedup {speedup}");
+            // claim 4: Ada-only faster but dirtier than Jetson-only
+            assert!(ada.total_e2e_s < jetson.total_e2e_s, "b{b}");
+            assert!(ada.total_carbon_kg > jetson.total_carbon_kg, "b{b}");
+            // carbon-aware routes the bulk of prompts to the Jetson
+            assert!(carbon.jetson_share > 0.7, "b{b}: share {}", carbon.jetson_share);
+            // latency-aware genuinely uses both devices
+            assert!(
+                latency.jetson_share > 0.05 && latency.jetson_share < 0.95,
+                "b{b}: share {}",
+                latency.jetson_share
+            );
+        }
+    }
+
+    #[test]
+    fn carbon_reduction_vs_worst_baseline_is_large() {
+        // paper: "reduce emissions by up to 35 %" vs greedy baselines;
+        // with Table-2 physics the gap vs Ada-only is even larger
+        let env = Env::small(160);
+        let (rows, _) = run(&env, false);
+        for b in [1usize, 4, 8] {
+            let ada = get(&rows, b, "all-on-ada");
+            let carbon = get(&rows, b, "carbon-aware");
+            let reduction = 1.0 - carbon.total_carbon_kg / ada.total_carbon_kg;
+            assert!(reduction > 0.35, "b{b}: reduction {reduction}");
+        }
+    }
+
+    #[test]
+    fn extensions_append_rows() {
+        let env = Env::small(60);
+        let (rows, table) = run(&env, true);
+        assert_eq!(rows.len(), 21);
+        assert!(table.ascii().contains("round-robin"));
+        // carbon-cap sits between carbon-aware and latency-aware on carbon
+        for b in [4usize] {
+            let cap = get(&rows, b, "carbon-cap");
+            let carbon = get(&rows, b, "carbon-aware");
+            assert!(cap.total_carbon_kg >= carbon.total_carbon_kg * 0.9999);
+            assert!(cap.total_e2e_s <= carbon.total_e2e_s * 1.0001);
+        }
+    }
+
+    #[test]
+    fn winners_marked_in_render() {
+        let env = Env::small(60);
+        let (_, table) = run(&env, false);
+        let ascii = table.ascii();
+        assert!(ascii.matches("(lowest)").count() >= 6);
+    }
+}

@@ -1,0 +1,122 @@
+//! GPU memory model: weights + KV cache + activations vs capacity.
+//!
+//! Drives two paper behaviours:
+//! - admission control: a batch whose projected footprint exceeds
+//!   capacity is rejected/split before dispatch;
+//! - the batch-8 instability on the 8 GB Jetson ("errors due to memory
+//!   saturation", §3): utilization beyond `saturation_start` degrades
+//!   throughput and raises the failure-injection probability.
+//!
+//! Footprints model the *paper's* models (Gemma-3-1B/12B qat) rather
+//! than our miniature artifacts — the simulator works at paper scale.
+
+/// Memory footprint model for one device + the model it serves.
+#[derive(Debug, Clone)]
+pub struct MemoryModel {
+    /// Total GPU memory, GB.
+    pub capacity_gb: f64,
+    /// Resident model weights, GB (quantized checkpoint + runtime).
+    pub weights_gb: f64,
+    /// KV-cache per token per sequence, MB.
+    pub kv_mb_per_token: f64,
+    /// Activation scratch per in-flight sequence, MB.
+    pub activation_mb_per_seq: f64,
+    /// Utilization fraction where degradation begins (e.g. 0.85).
+    pub saturation_start: f64,
+}
+
+impl MemoryModel {
+    /// Projected footprint for a batch, GB.
+    pub fn footprint_gb(&self, batch_size: usize, max_seq_tokens: usize) -> f64 {
+        let kv = batch_size as f64 * max_seq_tokens as f64 * self.kv_mb_per_token / 1024.0;
+        let act = batch_size as f64 * self.activation_mb_per_seq / 1024.0;
+        self.weights_gb + kv + act
+    }
+
+    /// Utilization fraction for a batch (can exceed 1.0 = would OOM).
+    pub fn utilization(&self, batch_size: usize, max_seq_tokens: usize) -> f64 {
+        self.footprint_gb(batch_size, max_seq_tokens) / self.capacity_gb
+    }
+
+    /// Whether the batch fits at all.
+    pub fn fits(&self, batch_size: usize, max_seq_tokens: usize) -> bool {
+        self.utilization(batch_size, max_seq_tokens) <= 1.0
+    }
+
+    /// Saturation overshoot in [0, ∞): 0 below `saturation_start`,
+    /// rising linearly past it. Feeds the latency degradation and the
+    /// failure-injection probability.
+    pub fn saturation(&self, batch_size: usize, max_seq_tokens: usize) -> f64 {
+        let u = self.utilization(batch_size, max_seq_tokens);
+        ((u - self.saturation_start) / (1.0 - self.saturation_start).max(1e-9)).max(0.0)
+    }
+
+    /// Largest batch of sequences with `max_seq_tokens` that fits.
+    pub fn max_batch(&self, max_seq_tokens: usize) -> usize {
+        let mut b = 0;
+        while self.fits(b + 1, max_seq_tokens) && b < 1024 {
+            b += 1;
+        }
+        b
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Jetson Orin NX 8 GB serving Gemma-3-1B-qat (~1.3 GB resident
+    /// incl. runtime) — generous KV per token for a 1B model.
+    fn jetson() -> MemoryModel {
+        MemoryModel {
+            capacity_gb: 8.0,
+            weights_gb: 1.6,
+            kv_mb_per_token: 0.75,
+            activation_mb_per_seq: 320.0,
+            saturation_start: 0.80,
+        }
+    }
+
+    #[test]
+    fn footprint_monotone_in_batch_and_seq() {
+        let m = jetson();
+        assert!(m.footprint_gb(4, 512) > m.footprint_gb(1, 512));
+        assert!(m.footprint_gb(4, 1024) > m.footprint_gb(4, 512));
+    }
+
+    #[test]
+    fn batch8_long_sequences_saturate_jetson() {
+        let m = jetson();
+        // batch 8 × 1024-token sequences: 1.6 + 8*1024*0.75/1024 + 8*0.3125
+        // = 1.6 + 6.0 + 2.5 = 10.1 GB > 8 GB -> does not fit
+        assert!(!m.fits(8, 1024));
+        // batch 4 fits but sits in the saturation zone
+        assert!(m.fits(4, 1024));
+        assert!(m.saturation(4, 1024) >= 0.0);
+        // batch 1 is comfortable
+        assert!(m.utilization(1, 1024) < 0.5);
+        assert_eq!(m.saturation(1, 256), 0.0);
+    }
+
+    #[test]
+    fn max_batch_consistent_with_fits() {
+        let m = jetson();
+        let b = m.max_batch(1024);
+        assert!(m.fits(b, 1024));
+        assert!(!m.fits(b + 1, 1024));
+    }
+
+    #[test]
+    fn saturation_zero_below_threshold_positive_above() {
+        let m = jetson();
+        assert_eq!(m.saturation(1, 128), 0.0);
+        let heavy = m.saturation(7, 1024);
+        assert!(heavy > 0.0, "sat={heavy}");
+    }
+
+    #[test]
+    fn utilization_can_exceed_one() {
+        let m = jetson();
+        assert!(m.utilization(16, 2048) > 1.0);
+    }
+}

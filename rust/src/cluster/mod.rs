@@ -1,0 +1,86 @@
+//! Hardware models for the heterogeneous edge cluster.
+//!
+//! The paper's testbed is an NVIDIA Jetson Orin NX (8 GB) serving
+//! Gemma-3-1B-qat and an NVIDIA Ada 2000 (16 GB) serving Gemma-3-12B-qat,
+//! plus a cloud API point. We reproduce it as explicit models:
+//!
+//! - [`device::DeviceProfile`] — one per cluster device: identity,
+//!   memory, power, and the latency calibration anchors fitted to the
+//!   paper's Table 2;
+//! - [`power::PowerModel`] — idle + batch-dependent active draw (watts);
+//! - [`carbon::CarbonModel`] — grid intensity (gCO2e/kWh), optionally
+//!   diurnal, converting kWh to kgCO2e exactly as the paper does;
+//! - [`memory::MemoryModel`] — weights + KV-cache + activation footprint
+//!   against GPU capacity (drives admission and the batch-8 saturation
+//!   behaviour on the 8 GB device);
+//! - [`network::LinkModel`] — RTT/bandwidth in front of the cloud point.
+
+pub mod carbon;
+pub mod device;
+pub mod memory;
+pub mod network;
+pub mod power;
+
+pub use carbon::CarbonModel;
+pub use device::DeviceProfile;
+pub use memory::MemoryModel;
+pub use network::LinkModel;
+pub use power::PowerModel;
+
+use crate::config::{ClusterConfig, DeviceKind};
+
+/// A fully-instantiated cluster: device profiles + shared carbon model
+/// + the network link used by cloud-kind devices.
+#[derive(Debug, Clone)]
+pub struct Cluster {
+    pub devices: Vec<DeviceProfile>,
+    pub carbon: CarbonModel,
+    pub link: LinkModel,
+}
+
+impl Cluster {
+    /// Build profiles from config using the Table-2 calibration tables.
+    pub fn from_config(cfg: &ClusterConfig) -> Self {
+        let devices = cfg
+            .devices
+            .iter()
+            .map(|d| DeviceProfile::from_config(d))
+            .collect();
+        Cluster {
+            devices,
+            carbon: CarbonModel::constant(cfg.carbon_intensity_g_per_kwh),
+            link: LinkModel::new(cfg.cloud.rtt_ms, cfg.cloud.bandwidth_mbps),
+        }
+    }
+
+    pub fn device(&self, name: &str) -> Option<&DeviceProfile> {
+        self.devices.iter().find(|d| d.name == name)
+    }
+
+    pub fn device_index(&self, name: &str) -> Option<usize> {
+        self.devices.iter().position(|d| d.name == name)
+    }
+
+    /// Devices of a given kind (e.g. all Jetsons in a scaled cluster).
+    pub fn by_kind(&self, kind: DeviceKind) -> Vec<&DeviceProfile> {
+        self.devices.iter().filter(|d| d.kind == kind).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+
+    #[test]
+    fn builds_paper_testbed() {
+        let cfg = ExperimentConfig::default();
+        let cluster = Cluster::from_config(&cfg.cluster);
+        assert_eq!(cluster.devices.len(), 2);
+        assert!(cluster.device("jetson-orin-nx").is_some());
+        assert!(cluster.device("ada-2000").is_some());
+        assert_eq!(cluster.by_kind(DeviceKind::Jetson).len(), 1);
+        assert_eq!(cluster.device_index("ada-2000"), Some(1));
+        assert_eq!(cluster.device_index("nope"), None);
+    }
+}

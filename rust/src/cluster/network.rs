@@ -1,0 +1,81 @@
+//! Network link model for the cloud inference point.
+//!
+//! The paper's Fig. 1 compares edge devices against the Gemini 2.0 Flash
+//! API and attributes the cloud's poor showing on short factual prompts
+//! (P4) to "bandwidth and dispatch overheads". We model exactly those:
+//! a fixed RTT, serialization time over a finite uplink/downlink, and a
+//! provider-side dispatch overhead.
+
+/// Simple symmetric link: fixed RTT + bandwidth-limited transfer.
+#[derive(Debug, Clone)]
+pub struct LinkModel {
+    /// Round-trip time, milliseconds.
+    pub rtt_ms: f64,
+    /// Link bandwidth, megabits per second.
+    pub bandwidth_mbps: f64,
+}
+
+impl LinkModel {
+    pub fn new(rtt_ms: f64, bandwidth_mbps: f64) -> Self {
+        assert!(rtt_ms >= 0.0 && bandwidth_mbps > 0.0);
+        Self { rtt_ms, bandwidth_mbps }
+    }
+
+    /// Time to move `bytes` one way, seconds (no RTT component).
+    pub fn transfer_s(&self, bytes: usize) -> f64 {
+        (bytes as f64 * 8.0) / (self.bandwidth_mbps * 1e6)
+    }
+
+    /// One-way propagation, seconds.
+    pub fn one_way_s(&self) -> f64 {
+        self.rtt_ms / 2.0 / 1000.0
+    }
+
+    /// Total network time for a request/response exchange: upload the
+    /// prompt, download the response, plus one RTT of handshaking.
+    pub fn round_trip_s(&self, upload_bytes: usize, download_bytes: usize) -> f64 {
+        self.rtt_ms / 1000.0 + self.transfer_s(upload_bytes) + self.transfer_s(download_bytes)
+    }
+
+    /// Network time for a prompt/response measured in tokens (~4 bytes
+    /// of UTF-8 per token on average for English text + JSON overhead).
+    pub fn token_round_trip_s(&self, prompt_tokens: usize, output_tokens: usize) -> f64 {
+        const BYTES_PER_TOKEN: usize = 6; // text + protocol framing
+        self.round_trip_s(prompt_tokens * BYTES_PER_TOKEN, output_tokens * BYTES_PER_TOKEN)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfer_time_scales_with_size() {
+        let l = LinkModel::new(80.0, 50.0);
+        // 1 MB over 50 Mbps = 8e6 bits / 5e7 bps = 0.16 s
+        assert!((l.transfer_s(1_000_000) - 0.16).abs() < 1e-9);
+        assert_eq!(l.transfer_s(0), 0.0);
+    }
+
+    #[test]
+    fn round_trip_includes_rtt() {
+        let l = LinkModel::new(100.0, 1000.0);
+        assert!(l.round_trip_s(0, 0) >= 0.1);
+        assert!(l.round_trip_s(1000, 1000) > l.round_trip_s(0, 0));
+    }
+
+    #[test]
+    fn short_prompt_dominated_by_rtt() {
+        // the Fig. 1 effect: for P4-sized prompts the RTT dwarfs transfer
+        let l = LinkModel::new(80.0, 50.0);
+        let t = l.token_round_trip_s(10, 12);
+        let rtt = 0.08;
+        assert!((t - rtt) / t < 0.01, "t={t}");
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_bandwidth_rejected() {
+        LinkModel::new(10.0, 0.0);
+    }
+}

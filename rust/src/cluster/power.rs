@@ -1,0 +1,97 @@
+//! Device power model: idle floor + batch-dependent active draw.
+//!
+//! The paper measures power with JetPack/PyNVML; we back-derive average
+//! active watts per batch size from Table 2 (energy / time) and
+//! interpolate between the anchors. The Jetson sits near 5 W (rising at
+//! batch 8 under memory pressure); the Ada draws 50–67 W.
+
+use crate::util::interp;
+
+/// Piecewise-linear active-power curve over batch size, plus idle floor.
+#[derive(Debug, Clone)]
+pub struct PowerModel {
+    /// Draw when the device is idle (no batch in flight), watts.
+    pub idle_w: f64,
+    /// (batch_size, average active watts) anchors, sorted by batch.
+    pub active_anchors: Vec<(f64, f64)>,
+}
+
+impl PowerModel {
+    pub fn new(idle_w: f64, active_anchors: Vec<(f64, f64)>) -> Self {
+        assert!(!active_anchors.is_empty(), "power model needs anchors");
+        assert!(
+            active_anchors.windows(2).all(|w| w[0].0 < w[1].0),
+            "anchors must be sorted by batch size"
+        );
+        Self { idle_w, active_anchors }
+    }
+
+    /// Average draw while executing a batch of `batch_size` prompts.
+    /// Never below idle (interpolation cannot dip under the floor).
+    pub fn active_watts(&self, batch_size: usize) -> f64 {
+        interp(&self.active_anchors, batch_size as f64).max(self.idle_w)
+    }
+
+    /// Energy for an execution of `seconds` at `batch_size`, in kWh.
+    pub fn active_energy_kwh(&self, batch_size: usize, seconds: f64) -> f64 {
+        self.active_watts(batch_size) * seconds / 3.6e6
+    }
+
+    /// Energy for `seconds` of idling, in kWh.
+    pub fn idle_energy_kwh(&self, seconds: f64) -> f64 {
+        self.idle_w * seconds / 3.6e6
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn jetson_like() -> PowerModel {
+        PowerModel::new(1.5, vec![(1.0, 4.9), (4.0, 4.7), (8.0, 10.4)])
+    }
+
+    #[test]
+    fn anchors_reproduced_exactly() {
+        let p = jetson_like();
+        assert!((p.active_watts(1) - 4.9).abs() < 1e-12);
+        assert!((p.active_watts(4) - 4.7).abs() < 1e-12);
+        assert!((p.active_watts(8) - 10.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn interpolates_between_anchors() {
+        let p = jetson_like();
+        let w6 = p.active_watts(6);
+        assert!(w6 > 4.7 && w6 < 10.4);
+    }
+
+    #[test]
+    fn never_below_idle() {
+        // extrapolating batch=0 from the (1,4.9)-(4,4.7) segment stays >= idle
+        let p = PowerModel::new(5.0, vec![(1.0, 5.1), (4.0, 20.0)]);
+        assert!(p.active_watts(0) >= 5.0);
+    }
+
+    #[test]
+    fn energy_arithmetic() {
+        let p = jetson_like();
+        // 4.9 W for 3600 s = 4.9 Wh = 0.0049 kWh
+        assert!((p.active_energy_kwh(1, 3600.0) - 0.0049).abs() < 1e-12);
+        assert!((p.idle_energy_kwh(3600.0) - 0.0015).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn unsorted_anchors_rejected() {
+        PowerModel::new(1.0, vec![(4.0, 2.0), (1.0, 3.0)]);
+    }
+
+    #[test]
+    fn paper_table2_energy_recovered() {
+        // Ada b=1: 67.4 W over 3.39 s ~= 6.35e-5 kWh (Table 2)
+        let ada = PowerModel::new(7.0, vec![(1.0, 67.4), (4.0, 49.9), (8.0, 61.5)]);
+        let kwh = ada.active_energy_kwh(1, 3.39);
+        assert!((kwh - 6.35e-5).abs() / 6.35e-5 < 0.01, "kwh={kwh}");
+    }
+}

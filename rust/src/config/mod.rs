@@ -1,0 +1,436 @@
+//! Typed configuration system (TOML files -> validated structs).
+//!
+//! One `ExperimentConfig` drives everything: the cluster topology
+//! (devices + optional cloud point), the workload (corpus size, seed,
+//! arrival process), and serving parameters (batch size, strategy,
+//! execution mode). `configs/cluster.toml` ships the paper's testbed;
+//! every CLI subcommand accepts `--config <path>` plus flag overrides.
+
+pub mod toml;
+
+use crate::util::json::Value;
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::Path;
+
+/// How batches are executed (DESIGN.md §Real-vs-calibrated-clock).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecutionMode {
+    /// Run the AOT artifacts through PJRT for real token generation AND
+    /// use the calibrated device model for time/energy.
+    Real,
+    /// Skip PJRT; sample output token counts from the workload model.
+    /// Time/energy from the calibrated device model. Used for the
+    /// 500-prompt paper tables (fast, deterministic).
+    Calibrated,
+    /// PJRT for a deterministic subset of batches (spot-check), sampled
+    /// token counts for the rest.
+    Hybrid,
+}
+
+impl ExecutionMode {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "real" => Ok(Self::Real),
+            "calibrated" => Ok(Self::Calibrated),
+            "hybrid" => Ok(Self::Hybrid),
+            _ => bail!("unknown execution mode '{s}' (real|calibrated|hybrid)"),
+        }
+    }
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Real => "real",
+            Self::Calibrated => "calibrated",
+            Self::Hybrid => "hybrid",
+        }
+    }
+}
+
+/// Calibration profile family for a device (which anchor table to use).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DeviceKind {
+    /// NVIDIA Jetson Orin NX 8 GB serving the 1B-class model.
+    Jetson,
+    /// NVIDIA Ada 2000 16 GB serving the 12B-class model.
+    Ada,
+    /// Cloud API endpoint (Gemini-2.0-Flash-like) behind a network link.
+    Cloud,
+}
+
+impl DeviceKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "jetson" => Ok(Self::Jetson),
+            "ada" => Ok(Self::Ada),
+            "cloud" => Ok(Self::Cloud),
+            _ => bail!("unknown device kind '{s}' (jetson|ada|cloud)"),
+        }
+    }
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Jetson => "jetson",
+            Self::Ada => "ada",
+            Self::Cloud => "cloud",
+        }
+    }
+}
+
+/// One device entry in the cluster.
+#[derive(Debug, Clone)]
+pub struct DeviceConfig {
+    pub name: String,
+    pub kind: DeviceKind,
+    /// GPU memory capacity in GB (drives admission + saturation model).
+    pub gpu_mem_gb: f64,
+    /// Artifact variant served by this device (manifest key).
+    pub model: String,
+}
+
+/// Cloud API point (used by the Fig. 1 motivation experiment).
+#[derive(Debug, Clone)]
+pub struct CloudConfig {
+    pub enabled: bool,
+    pub rtt_ms: f64,
+    pub bandwidth_mbps: f64,
+}
+
+/// Cluster topology + grid carbon intensity.
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    pub name: String,
+    /// Grid carbon intensity in gCO2e per kWh. 69 g/kWh back-derived
+    /// from the paper's Table 2 (4.38e-6 kg / 6.35e-5 kWh).
+    pub carbon_intensity_g_per_kwh: f64,
+    pub devices: Vec<DeviceConfig>,
+    pub cloud: CloudConfig,
+}
+
+/// Arrival process for the request trace.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Arrival {
+    /// All prompts queued at t=0 (the paper's batch-evaluation setup).
+    Closed,
+    /// Poisson arrivals at `rate` req/s (serving extension experiments).
+    Open { rate: f64 },
+}
+
+/// Workload generation parameters.
+#[derive(Debug, Clone)]
+pub struct WorkloadConfig {
+    /// Number of prompts sampled from the composite corpus (paper: 500).
+    pub prompts: usize,
+    pub seed: u64,
+    /// Restrict to named categories; empty = all eight.
+    pub categories: Vec<String>,
+    pub arrival: Arrival,
+}
+
+/// Serving-loop parameters.
+#[derive(Debug, Clone)]
+pub struct ServingConfig {
+    /// Prompts per inference pass (paper sweeps 1/4/8).
+    pub batch_size: usize,
+    /// Max time the batcher waits to fill a batch (open-loop arrivals).
+    pub batch_timeout_ms: f64,
+    /// Routing strategy name, resolved by `coordinator::router::build`.
+    pub strategy: String,
+    pub execution: ExecutionMode,
+    /// Generation cap per request (must fit max_seq - prefill_len).
+    pub max_new_tokens: usize,
+}
+
+/// Top-level experiment configuration.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    pub cluster: ClusterConfig,
+    pub workload: WorkloadConfig,
+    pub serving: ServingConfig,
+    /// Directory containing manifest.json + HLO artifacts.
+    pub artifacts_dir: String,
+}
+
+impl Default for ExperimentConfig {
+    /// The paper's testbed: Jetson Orin NX 8 GB + Ada 2000 16 GB,
+    /// Austrian grid intensity, 500 prompts, batch 4, latency-aware.
+    fn default() -> Self {
+        Self {
+            cluster: ClusterConfig {
+                name: "edge-lab".into(),
+                carbon_intensity_g_per_kwh: 69.0,
+                devices: vec![
+                    DeviceConfig {
+                        name: "jetson-orin-nx".into(),
+                        kind: DeviceKind::Jetson,
+                        gpu_mem_gb: 8.0,
+                        model: "edge-1b-sim".into(),
+                    },
+                    DeviceConfig {
+                        name: "ada-2000".into(),
+                        kind: DeviceKind::Ada,
+                        gpu_mem_gb: 16.0,
+                        model: "edge-12b-sim".into(),
+                    },
+                ],
+                cloud: CloudConfig { enabled: false, rtt_ms: 80.0, bandwidth_mbps: 50.0 },
+            },
+            workload: WorkloadConfig {
+                prompts: 500,
+                seed: 42,
+                categories: Vec::new(),
+                arrival: Arrival::Closed,
+            },
+            serving: ServingConfig {
+                batch_size: 4,
+                batch_timeout_ms: 50.0,
+                strategy: "latency-aware".into(),
+                execution: ExecutionMode::Calibrated,
+                max_new_tokens: 96,
+            },
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Load from a TOML file; missing sections fall back to defaults.
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        let value = toml::parse(&text).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+        Self::from_value(&value)
+    }
+
+    /// Build from a parsed TOML value tree.
+    pub fn from_value(v: &Value) -> Result<Self> {
+        let mut cfg = Self::default();
+
+        if let Some(c) = v.get("cluster") {
+            if let Some(s) = c.get("name").and_then(Value::as_str) {
+                cfg.cluster.name = s.to_string();
+            }
+            if let Some(x) = c.get("carbon_intensity_g_per_kwh").and_then(Value::as_f64) {
+                cfg.cluster.carbon_intensity_g_per_kwh = x;
+            }
+        }
+        if let Some(devs) = v.get("device").and_then(Value::as_arr) {
+            cfg.cluster.devices = devs
+                .iter()
+                .map(|d| {
+                    let name = d
+                        .get("name")
+                        .and_then(Value::as_str)
+                        .ok_or_else(|| anyhow!("[[device]] missing name"))?
+                        .to_string();
+                    let kind = DeviceKind::parse(
+                        d.get("kind").and_then(Value::as_str).unwrap_or("jetson"),
+                    )?;
+                    let default_mem = match kind {
+                        DeviceKind::Jetson => 8.0,
+                        DeviceKind::Ada => 16.0,
+                        DeviceKind::Cloud => 80.0,
+                    };
+                    let default_model = match kind {
+                        DeviceKind::Jetson => "edge-1b-sim",
+                        _ => "edge-12b-sim",
+                    };
+                    Ok(DeviceConfig {
+                        name,
+                        kind,
+                        gpu_mem_gb: d
+                            .get("gpu_mem_gb")
+                            .and_then(Value::as_f64)
+                            .unwrap_or(default_mem),
+                        model: d
+                            .get("model")
+                            .and_then(Value::as_str)
+                            .unwrap_or(default_model)
+                            .to_string(),
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+        }
+        if let Some(c) = v.get("cloud") {
+            if let Some(b) = c.get("enabled").and_then(Value::as_bool) {
+                cfg.cluster.cloud.enabled = b;
+            }
+            if let Some(x) = c.get("rtt_ms").and_then(Value::as_f64) {
+                cfg.cluster.cloud.rtt_ms = x;
+            }
+            if let Some(x) = c.get("bandwidth_mbps").and_then(Value::as_f64) {
+                cfg.cluster.cloud.bandwidth_mbps = x;
+            }
+        }
+        if let Some(w) = v.get("workload") {
+            if let Some(n) = w.get("prompts").and_then(Value::as_usize) {
+                cfg.workload.prompts = n;
+            }
+            if let Some(s) = w.get("seed").and_then(Value::as_u64) {
+                cfg.workload.seed = s;
+            }
+            if let Some(cats) = w.get("categories").and_then(Value::as_arr) {
+                cfg.workload.categories = cats
+                    .iter()
+                    .filter_map(|c| c.as_str().map(str::to_string))
+                    .collect();
+            }
+            if let Some(rate) = w.get("arrival_rate").and_then(Value::as_f64) {
+                cfg.workload.arrival =
+                    if rate > 0.0 { Arrival::Open { rate } } else { Arrival::Closed };
+            }
+        }
+        if let Some(s) = v.get("serving") {
+            if let Some(b) = s.get("batch_size").and_then(Value::as_usize) {
+                cfg.serving.batch_size = b;
+            }
+            if let Some(t) = s.get("batch_timeout_ms").and_then(Value::as_f64) {
+                cfg.serving.batch_timeout_ms = t;
+            }
+            if let Some(st) = s.get("strategy").and_then(Value::as_str) {
+                cfg.serving.strategy = st.to_string();
+            }
+            if let Some(e) = s.get("execution").and_then(Value::as_str) {
+                cfg.serving.execution = ExecutionMode::parse(e)?;
+            }
+            if let Some(m) = s.get("max_new_tokens").and_then(Value::as_usize) {
+                cfg.serving.max_new_tokens = m;
+            }
+        }
+        if let Some(a) = v.get("artifacts_dir").and_then(Value::as_str) {
+            cfg.artifacts_dir = a.to_string();
+        }
+
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Reject configurations that would produce meaningless experiments.
+    pub fn validate(&self) -> Result<()> {
+        if self.cluster.devices.is_empty() {
+            bail!("cluster has no devices");
+        }
+        let mut names = std::collections::HashSet::new();
+        for d in &self.cluster.devices {
+            if !names.insert(&d.name) {
+                bail!("duplicate device name '{}'", d.name);
+            }
+            if d.gpu_mem_gb <= 0.0 {
+                bail!("device '{}' has non-positive memory", d.name);
+            }
+        }
+        if self.cluster.carbon_intensity_g_per_kwh <= 0.0 {
+            bail!("carbon intensity must be positive");
+        }
+        if self.workload.prompts == 0 {
+            bail!("workload.prompts must be >= 1");
+        }
+        if self.serving.batch_size == 0 || self.serving.batch_size > 64 {
+            bail!("serving.batch_size must be in 1..=64");
+        }
+        if self.serving.max_new_tokens == 0 {
+            bail!("serving.max_new_tokens must be >= 1");
+        }
+        if let Arrival::Open { rate } = self.workload.arrival {
+            if rate <= 0.0 {
+                bail!("open arrival rate must be positive");
+            }
+        }
+        Ok(())
+    }
+
+    /// Find a device by name.
+    pub fn device(&self, name: &str) -> Option<&DeviceConfig> {
+        self.cluster.devices.iter().find(|d| d.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid_and_matches_paper() {
+        let c = ExperimentConfig::default();
+        c.validate().unwrap();
+        assert_eq!(c.cluster.devices.len(), 2);
+        assert_eq!(c.workload.prompts, 500);
+        assert!((c.cluster.carbon_intensity_g_per_kwh - 69.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn load_full_toml() {
+        let doc = r#"
+[cluster]
+name = "lab"
+carbon_intensity_g_per_kwh = 100.0
+
+[[device]]
+name = "j1"
+kind = "jetson"
+gpu_mem_gb = 8.0
+model = "edge-1b-sim"
+
+[[device]]
+name = "a1"
+kind = "ada"
+
+[cloud]
+enabled = true
+rtt_ms = 120.0
+
+[workload]
+prompts = 64
+seed = 7
+arrival_rate = 2.5
+
+[serving]
+batch_size = 8
+strategy = "carbon-aware"
+execution = "hybrid"
+max_new_tokens = 32
+"#;
+        let v = toml::parse(doc).unwrap();
+        let c = ExperimentConfig::from_value(&v).unwrap();
+        assert_eq!(c.cluster.name, "lab");
+        assert_eq!(c.cluster.devices[1].name, "a1");
+        assert_eq!(c.cluster.devices[1].gpu_mem_gb, 16.0); // kind default
+        assert_eq!(c.cluster.devices[1].model, "edge-12b-sim");
+        assert!(c.cluster.cloud.enabled);
+        assert_eq!(c.workload.prompts, 64);
+        assert_eq!(c.workload.arrival, Arrival::Open { rate: 2.5 });
+        assert_eq!(c.serving.batch_size, 8);
+        assert_eq!(c.serving.execution, ExecutionMode::Hybrid);
+    }
+
+    #[test]
+    fn rejects_bad_configs() {
+        let mut c = ExperimentConfig::default();
+        c.serving.batch_size = 0;
+        assert!(c.validate().is_err());
+
+        let mut c = ExperimentConfig::default();
+        c.workload.prompts = 0;
+        assert!(c.validate().is_err());
+
+        let mut c = ExperimentConfig::default();
+        c.cluster.devices[1].name = c.cluster.devices[0].name.clone();
+        assert!(c.validate().is_err());
+
+        let mut c = ExperimentConfig::default();
+        c.cluster.carbon_intensity_g_per_kwh = 0.0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn execution_mode_roundtrip() {
+        for m in [ExecutionMode::Real, ExecutionMode::Calibrated, ExecutionMode::Hybrid] {
+            assert_eq!(ExecutionMode::parse(m.name()).unwrap(), m);
+        }
+        assert!(ExecutionMode::parse("gpu").is_err());
+    }
+
+    #[test]
+    fn device_lookup() {
+        let c = ExperimentConfig::default();
+        assert!(c.device("jetson-orin-nx").is_some());
+        assert!(c.device("nope").is_none());
+    }
+}

@@ -1,0 +1,369 @@
+//! TOML-subset parser (toml-crate substitute, offline build).
+//!
+//! Supports the full surface our config files use:
+//! - `[table]` and dotted `[table.sub]` headers
+//! - `[[array-of-tables]]`
+//! - `key = value` with bare or quoted keys, dotted keys
+//! - values: basic strings, integers, floats (incl. scientific), bools,
+//!   inline arrays `[1, 2, 3]`, inline tables `{a = 1}`
+//! - `#` comments, blank lines
+//!
+//! Unsupported (and rejected loudly rather than mis-parsed): multi-line
+//! strings, literal strings ('..'), dates.
+//!
+//! Output reuses [`crate::util::json::Value`] so downstream typed-config
+//! code shares one value model with the JSON manifest.
+
+use crate::util::json::Value;
+use std::collections::BTreeMap;
+
+/// Parse error with line number.
+#[derive(Debug, Clone)]
+pub struct TomlError {
+    pub line: usize,
+    pub message: String,
+}
+
+impl std::fmt::Display for TomlError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "toml parse error on line {}: {}", self.line, self.message)
+    }
+}
+impl std::error::Error for TomlError {}
+
+/// Parse a TOML document into a Value::Obj tree.
+pub fn parse(input: &str) -> Result<Value, TomlError> {
+    let mut root = BTreeMap::new();
+    // Current insertion path ([table] header); empty = root.
+    let mut current_path: Vec<String> = Vec::new();
+
+    for (lineno, raw) in input.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        let errl = |msg: &str| TomlError { line: lineno + 1, message: msg.to_string() };
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("[[") {
+            let name = rest.strip_suffix("]]").ok_or_else(|| errl("unterminated [[header]]"))?;
+            let path = parse_key_path(name).map_err(|m| errl(&m))?;
+            push_array_table(&mut root, &path).map_err(|m| errl(&m))?;
+            current_path = path;
+        } else if let Some(rest) = line.strip_prefix('[') {
+            let name = rest.strip_suffix(']').ok_or_else(|| errl("unterminated [header]"))?;
+            let path = parse_key_path(name).map_err(|m| errl(&m))?;
+            ensure_table(&mut root, &path).map_err(|m| errl(&m))?;
+            current_path = path;
+        } else {
+            let eq = find_unquoted(line, '=').ok_or_else(|| errl("expected key = value"))?;
+            let key_part = line[..eq].trim();
+            let val_part = line[eq + 1..].trim();
+            if val_part.is_empty() {
+                return Err(errl("missing value"));
+            }
+            let mut path = current_path.clone();
+            path.extend(parse_key_path(key_part).map_err(|m| errl(&m))?);
+            let value = parse_value(val_part).map_err(|m| errl(&m))?;
+            insert(&mut root, &path, value).map_err(|m| errl(&m))?;
+        }
+    }
+    Ok(Value::Obj(root))
+}
+
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn find_unquoted(s: &str, target: char) -> Option<usize> {
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            c if c == target && !in_str => return Some(i),
+            _ => {}
+        }
+    }
+    None
+}
+
+fn parse_key_path(s: &str) -> Result<Vec<String>, String> {
+    let mut out = Vec::new();
+    for part in split_dotted(s)? {
+        let part = part.trim();
+        let key = if let Some(q) = part.strip_prefix('"') {
+            q.strip_suffix('"').ok_or("unterminated quoted key")?.to_string()
+        } else {
+            if part.is_empty()
+                || !part.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-')
+            {
+                return Err(format!("invalid bare key '{part}'"));
+            }
+            part.to_string()
+        };
+        out.push(key);
+    }
+    Ok(out)
+}
+
+fn split_dotted(s: &str) -> Result<Vec<&str>, String> {
+    let mut parts = Vec::new();
+    let mut start = 0;
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '.' if !in_str => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    if in_str {
+        return Err("unterminated string in key".into());
+    }
+    parts.push(&s[start..]);
+    Ok(parts)
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    let s = s.trim();
+    if let Some(body) = s.strip_prefix('"') {
+        let body = body.strip_suffix('"').ok_or("unterminated string")?;
+        return unescape(body);
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if s.starts_with('[') {
+        let inner = s.strip_prefix('[').unwrap().strip_suffix(']').ok_or("unterminated array")?;
+        let mut items = Vec::new();
+        for piece in split_top_level(inner, ',') {
+            let piece = piece.trim();
+            if piece.is_empty() {
+                continue;
+            }
+            items.push(parse_value(piece)?);
+        }
+        return Ok(Value::Arr(items));
+    }
+    if s.starts_with('{') {
+        let inner = s.strip_prefix('{').unwrap().strip_suffix('}').ok_or("unterminated inline table")?;
+        let mut map = BTreeMap::new();
+        for piece in split_top_level(inner, ',') {
+            let piece = piece.trim();
+            if piece.is_empty() {
+                continue;
+            }
+            let eq = find_unquoted(piece, '=').ok_or("expected k = v in inline table")?;
+            let keys = parse_key_path(piece[..eq].trim())?;
+            if keys.len() != 1 {
+                return Err("dotted keys unsupported in inline tables".into());
+            }
+            map.insert(keys[0].clone(), parse_value(piece[eq + 1..].trim())?);
+        }
+        return Ok(Value::Obj(map));
+    }
+    if s.starts_with('\'') {
+        return Err("literal strings ('...') unsupported".into());
+    }
+    // number: allow underscores
+    let cleaned: String = s.chars().filter(|&c| c != '_').collect();
+    cleaned
+        .parse::<f64>()
+        .map(Value::Num)
+        .map_err(|_| format!("cannot parse value '{s}'"))
+}
+
+fn split_top_level(s: &str, sep: char) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut depth = 0i32;
+    let mut in_str = false;
+    let mut start = 0;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' | '{' if !in_str => depth += 1,
+            ']' | '}' if !in_str => depth -= 1,
+            c if c == sep && depth == 0 && !in_str => {
+                out.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    out.push(&s[start..]);
+    out
+}
+
+fn unescape(s: &str) -> Result<Value, String> {
+    let mut out = String::new();
+    let mut chars = s.chars();
+    while let Some(c) = chars.next() {
+        if c != '\\' {
+            out.push(c);
+            continue;
+        }
+        match chars.next() {
+            Some('n') => out.push('\n'),
+            Some('t') => out.push('\t'),
+            Some('r') => out.push('\r'),
+            Some('"') => out.push('"'),
+            Some('\\') => out.push('\\'),
+            Some(c) => return Err(format!("unsupported escape \\{c}")),
+            None => return Err("dangling backslash".into()),
+        }
+    }
+    Ok(Value::Str(out))
+}
+
+fn ensure_table<'a>(
+    root: &'a mut BTreeMap<String, Value>,
+    path: &[String],
+) -> Result<&'a mut BTreeMap<String, Value>, String> {
+    let mut cur = root;
+    for key in path {
+        let entry = cur
+            .entry(key.clone())
+            .or_insert_with(|| Value::Obj(BTreeMap::new()));
+        cur = match entry {
+            Value::Obj(m) => m,
+            Value::Arr(items) => match items.last_mut() {
+                Some(Value::Obj(m)) => m,
+                _ => return Err(format!("'{key}' is not a table")),
+            },
+            _ => return Err(format!("'{key}' already a non-table value")),
+        };
+    }
+    Ok(cur)
+}
+
+fn push_array_table(root: &mut BTreeMap<String, Value>, path: &[String]) -> Result<(), String> {
+    let (last, parents) = path.split_last().ok_or("empty [[header]]")?;
+    let parent = ensure_table(root, parents)?;
+    let entry = parent.entry(last.clone()).or_insert_with(|| Value::Arr(Vec::new()));
+    match entry {
+        Value::Arr(items) => {
+            items.push(Value::Obj(BTreeMap::new()));
+            Ok(())
+        }
+        _ => Err(format!("'{last}' already a non-array value")),
+    }
+}
+
+fn insert(root: &mut BTreeMap<String, Value>, path: &[String], value: Value) -> Result<(), String> {
+    let (last, parents) = path.split_last().ok_or("empty key")?;
+    let parent = ensure_table(root, parents)?;
+    if parent.contains_key(last) {
+        return Err(format!("duplicate key '{last}'"));
+    }
+    parent.insert(last.clone(), value);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalars_tables_and_arrays() {
+        let doc = r#"
+# top comment
+title = "verdant"   # trailing comment
+count = 500
+ratio = 6.35e-5
+flag = true
+batch_sizes = [1, 4, 8]
+
+[cluster]
+name = "edge-lab"
+carbon_intensity = 69.0
+
+[cluster.site]
+region = "AT"
+"#;
+        let v = parse(doc).unwrap();
+        assert_eq!(v.get("title").unwrap().as_str(), Some("verdant"));
+        assert_eq!(v.get("count").unwrap().as_f64(), Some(500.0));
+        assert_eq!(v.get("ratio").unwrap().as_f64(), Some(6.35e-5));
+        assert_eq!(v.get("flag").unwrap().as_bool(), Some(true));
+        assert_eq!(v.get("batch_sizes").unwrap().as_arr().unwrap().len(), 3);
+        assert_eq!(v.path(&["cluster", "name"]).unwrap().as_str(), Some("edge-lab"));
+        assert_eq!(v.path(&["cluster", "site", "region"]).unwrap().as_str(), Some("AT"));
+    }
+
+    #[test]
+    fn array_of_tables() {
+        let doc = r#"
+[[device]]
+name = "jetson"
+mem = 8
+
+[[device]]
+name = "ada"
+mem = 16
+sub = { a = 1, b = "x" }
+"#;
+        let v = parse(doc).unwrap();
+        let devs = v.get("device").unwrap().as_arr().unwrap();
+        assert_eq!(devs.len(), 2);
+        assert_eq!(devs[0].get("name").unwrap().as_str(), Some("jetson"));
+        assert_eq!(devs[1].path(&["sub", "a"]).unwrap().as_f64(), Some(1.0));
+    }
+
+    #[test]
+    fn keys_after_array_table_attach_to_last_element() {
+        let doc = "[[d]]\nx = 1\n[[d]]\nx = 2\n[d.inner]\ny = 3\n";
+        let v = parse(doc).unwrap();
+        let d = v.get("d").unwrap().as_arr().unwrap();
+        assert_eq!(d[0].get("x").unwrap().as_f64(), Some(1.0));
+        assert_eq!(d[1].path(&["inner", "y"]).unwrap().as_f64(), Some(3.0));
+    }
+
+    #[test]
+    fn dotted_and_quoted_keys() {
+        let v = parse("a.b.c = 1\n\"weird key\" = 2\n").unwrap();
+        assert_eq!(v.path(&["a", "b", "c"]).unwrap().as_f64(), Some(1.0));
+        assert_eq!(v.get("weird key").unwrap().as_f64(), Some(2.0));
+    }
+
+    #[test]
+    fn string_escapes_and_hash_inside_string() {
+        let v = parse(r#"s = "a # not comment \n\"q\"" "#).unwrap();
+        assert_eq!(v.get("s").unwrap().as_str(), Some("a # not comment \n\"q\""));
+    }
+
+    #[test]
+    fn numbers_with_underscores() {
+        let v = parse("n = 1_000_000\n").unwrap();
+        assert_eq!(v.get("n").unwrap().as_f64(), Some(1e6));
+    }
+
+    #[test]
+    fn errors_with_line_numbers() {
+        let e = parse("ok = 1\nbad line\n").unwrap_err();
+        assert_eq!(e.line, 2);
+        assert!(parse("k = 'lit'").is_err());
+        assert!(parse("[unclosed\n").is_err());
+        assert!(parse("a = 1\na = 2\n").is_err()); // duplicate
+        assert!(parse("k = \n").is_err());
+    }
+
+    #[test]
+    fn nested_inline_arrays() {
+        let v = parse("m = [[1, 2], [3, 4]]\n").unwrap();
+        let outer = v.get("m").unwrap().as_arr().unwrap();
+        assert_eq!(outer.len(), 2);
+        assert_eq!(outer[1].as_arr().unwrap()[0].as_f64(), Some(3.0));
+    }
+}

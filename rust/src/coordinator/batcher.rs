@@ -1,0 +1,206 @@
+//! Dynamic batcher: groups routed prompts into inference passes.
+//!
+//! The paper's batch size (1/4/8) is "the number of prompts processed in
+//! parallel during a single inference pass". After routing, each
+//! device's prompt list is chunked into batches; admission control
+//! splits any batch whose projected KV footprint would not fit device
+//! memory (the guard the paper's Ollama stack lacked — it OOMed instead,
+//! which our failure injection models when saturation still occurs).
+//!
+//! Grouping policies (ablation: `verdant bench ablation`):
+//! - [`Grouping::Fifo`] — arrival order (the paper's setup);
+//! - [`Grouping::LengthSorted`] — sort by output demand first, so batch
+//!   members finish together (less decode straggling).
+
+use crate::cluster::Cluster;
+use crate::workload::Prompt;
+
+/// Batch grouping policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Grouping {
+    /// Keep router order (paper default).
+    Fifo,
+    /// Sort each device's queue by descending output demand.
+    LengthSorted,
+}
+
+/// One planned inference pass.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Batch {
+    /// Device index in the cluster.
+    pub device: usize,
+    /// Indices into the prompt slice handed to `form_batches`.
+    pub members: Vec<usize>,
+}
+
+/// Plan batches per device from a routing assignment.
+///
+/// `prefill_len` is the serving prompt window (token budget per prompt
+/// used for the memory projection).
+pub fn form_batches(
+    prompts: &[Prompt],
+    assignment: &[usize],
+    batch_size: usize,
+    cluster: &Cluster,
+    grouping: Grouping,
+) -> Vec<Batch> {
+    assert_eq!(prompts.len(), assignment.len(), "assignment length mismatch");
+    assert!(batch_size >= 1);
+
+    let mut out = Vec::new();
+    for d in 0..cluster.devices.len() {
+        let mut queue: Vec<usize> =
+            (0..prompts.len()).filter(|&i| assignment[i] == d).collect();
+        if queue.is_empty() {
+            continue;
+        }
+        if grouping == Grouping::LengthSorted {
+            queue.sort_by(|&a, &b| {
+                prompts[b]
+                    .output_demand_tokens
+                    .cmp(&prompts[a].output_demand_tokens)
+                    .then(a.cmp(&b))
+            });
+        }
+        let dev = &cluster.devices[d];
+        for chunk in queue.chunks(batch_size) {
+            // admission: shrink until the projected footprint fits
+            let mut start = 0;
+            while start < chunk.len() {
+                let mut end = chunk.len();
+                loop {
+                    let members = &chunk[start..end];
+                    let max_seq = members
+                        .iter()
+                        .map(|&i| {
+                            prompts[i].prompt_tokens
+                                + prompts[i].output_tokens_on(dev.output_median_tokens)
+                        })
+                        .max()
+                        .unwrap_or(0);
+                    if members.len() == 1 || dev.memory.fits(members.len(), max_seq) {
+                        out.push(Batch { device: d, members: members.to_vec() });
+                        start = end;
+                        break;
+                    }
+                    end = start + (end - start) / 2;
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+    use crate::util::check::property;
+    use crate::util::rng::Rng;
+    use crate::workload::{Category, Corpus};
+
+    fn cluster() -> Cluster {
+        Cluster::from_config(&ExperimentConfig::default().cluster)
+    }
+
+    fn prompts(n: usize, seed: u64) -> Vec<Prompt> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|i| Corpus::sample_prompt(i as u64, Category::ALL[rng.below(8)], &mut rng))
+            .collect()
+    }
+
+    #[test]
+    fn batches_partition_the_assignment() {
+        property("batches form a partition", 32, |rng| {
+            let c = cluster();
+            let n = rng.below(60) + 1;
+            let ps = prompts(n, rng.next_u64());
+            let assignment: Vec<usize> = (0..n).map(|_| rng.below(2)).collect();
+            let b = rng.below(8) + 1;
+            let grouping = if rng.chance(0.5) { Grouping::Fifo } else { Grouping::LengthSorted };
+            let batches = form_batches(&ps, &assignment, b, &c, grouping);
+
+            let mut seen = vec![false; n];
+            for batch in &batches {
+                if batch.members.is_empty() || batch.members.len() > b {
+                    return Err(format!("bad batch size {}", batch.members.len()));
+                }
+                for &m in &batch.members {
+                    if seen[m] {
+                        return Err(format!("prompt {m} in two batches"));
+                    }
+                    seen[m] = true;
+                    if assignment[m] != batch.device {
+                        return Err(format!("prompt {m} on wrong device"));
+                    }
+                }
+            }
+            if !seen.iter().all(|&s| s) {
+                return Err("prompt dropped".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn fifo_preserves_order_within_device() {
+        let c = cluster();
+        let ps = prompts(10, 3);
+        let assignment = vec![0; 10];
+        let batches = form_batches(&ps, &assignment, 4, &c, Grouping::Fifo);
+        let flat: Vec<usize> = batches.iter().flat_map(|b| b.members.clone()).collect();
+        assert_eq!(flat, (0..10).collect::<Vec<_>>());
+        assert_eq!(batches[0].members.len(), 4);
+        assert_eq!(batches[2].members.len(), 2); // remainder batch
+    }
+
+    #[test]
+    fn length_sorted_descending_demand() {
+        let c = cluster();
+        let ps = prompts(12, 5);
+        let assignment = vec![1; 12];
+        let batches = form_batches(&ps, &assignment, 4, &c, Grouping::LengthSorted);
+        let flat: Vec<usize> = batches.iter().flat_map(|b| b.members.clone()).collect();
+        for w in flat.windows(2) {
+            assert!(
+                ps[w[0]].output_demand_tokens >= ps[w[1]].output_demand_tokens,
+                "not sorted"
+            );
+        }
+    }
+
+    #[test]
+    fn admission_splits_oversized_batches() {
+        let c = cluster();
+        // pathological prompts: enormous outputs on the Jetson
+        let mut ps = prompts(8, 7);
+        for p in &mut ps {
+            p.output_demand_tokens = 1800;
+            p.prompt_tokens = 500;
+        }
+        let assignment = vec![0; 8];
+        let batches = form_batches(&ps, &assignment, 8, &c, Grouping::Fifo);
+        // one batch of 8 × ~3300-token sequences would never fit 8 GB
+        assert!(batches.len() > 1, "admission failed to split");
+        for b in &batches {
+            let dev = &c.devices[b.device];
+            let max_seq = b
+                .members
+                .iter()
+                .map(|&i| ps[i].prompt_tokens + ps[i].output_tokens_on(dev.output_median_tokens))
+                .max()
+                .unwrap();
+            assert!(b.members.len() == 1 || dev.memory.fits(b.members.len(), max_seq));
+        }
+    }
+
+    #[test]
+    fn empty_device_queue_produces_no_batches() {
+        let c = cluster();
+        let ps = prompts(4, 9);
+        let assignment = vec![1; 4]; // nothing on device 0
+        let batches = form_batches(&ps, &assignment, 2, &c, Grouping::Fifo);
+        assert!(batches.iter().all(|b| b.device == 1));
+    }
+}

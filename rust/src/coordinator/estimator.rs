@@ -1,0 +1,251 @@
+//! Benchmark-informed cost estimator — the paper's "benchmarking
+//! information" that routing strategies consume.
+//!
+//! The paper benchmarks each (device, batch) configuration offline
+//! (its Table 2) and routes prompts using those measurements. We mirror
+//! that two ways:
+//!
+//! - [`estimate`] — an analytic per-prompt estimate straight from the
+//!   device profile (what a white-box scheduler could compute);
+//! - [`BenchmarkDb`] — an *empirical* per-(device, category, batch)
+//!   table built by actually running a calibration corpus through the
+//!   simulator, exactly like the paper's offline benchmarking phase.
+//!   Routing reads this DB; the ablation bench compares DB-driven vs
+//!   analytic routing.
+
+use crate::cluster::{Cluster, DeviceProfile};
+use crate::simulator::{simulate_batch, BatchWork};
+use crate::util::rng::Rng;
+use crate::workload::{Category, Corpus, Prompt};
+use std::collections::BTreeMap;
+
+/// Estimated per-prompt cost of running on a device at a batch size.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CostEstimate {
+    /// Per-prompt end-to-end seconds (batch-amortized device occupancy).
+    pub e2e_s: f64,
+    /// Per-prompt energy, kWh.
+    pub energy_kwh: f64,
+    /// Per-prompt carbon, kgCO2e.
+    pub carbon_kg: f64,
+}
+
+/// Analytic estimate from the device profile (expected-value failure).
+///
+/// `carbon_intensity` in gCO2e/kWh. The per-prompt E2E is the device
+/// occupancy of a homogeneous batch of this prompt divided by the batch
+/// size — the marginal load a scheduler adds when placing the prompt.
+pub fn estimate(
+    dev: &DeviceProfile,
+    prompt: &Prompt,
+    batch: usize,
+    carbon_intensity: f64,
+) -> CostEstimate {
+    let out = prompt.output_tokens_on(dev.output_median_tokens);
+    let work = BatchWork::new(vec![prompt.prompt_tokens; batch], vec![out; batch]);
+    let t = simulate_batch(dev, &work, None);
+    let e2e = t.total_s / batch as f64;
+    let energy = t.energy_kwh / batch as f64;
+    CostEstimate { e2e_s: e2e, energy_kwh: energy, carbon_kg: energy * carbon_intensity / 1000.0 }
+}
+
+/// One measured cell of the benchmark database.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct BenchCell {
+    pub samples: u64,
+    pub mean_e2e_s: f64,
+    pub mean_energy_kwh: f64,
+    pub mean_carbon_kg: f64,
+    pub mean_output_tokens: f64,
+    pub error_rate: f64,
+}
+
+/// Empirical benchmark DB: (device, category, batch) -> measured costs.
+///
+/// Built offline (the paper's benchmarking phase); read by strategies at
+/// routing time. Lookups fall back to the analytic estimate when a cell
+/// was never benchmarked.
+#[derive(Debug, Clone)]
+pub struct BenchmarkDb {
+    cells: BTreeMap<(String, Category, usize), BenchCell>,
+    carbon_intensity: f64,
+}
+
+impl BenchmarkDb {
+    /// Run the offline benchmarking phase: `per_cell` samples for every
+    /// (device, category, batch) over a seeded calibration corpus.
+    pub fn build(
+        cluster: &Cluster,
+        batches: &[usize],
+        per_cell: usize,
+        carbon_intensity: f64,
+        seed: u64,
+    ) -> Self {
+        let mut cells = BTreeMap::new();
+        let mut rng = Rng::new(seed ^ 0xBE9C_84A1);
+        for dev in &cluster.devices {
+            for &cat in &Category::ALL {
+                for &b in batches {
+                    let mut cell = BenchCell::default();
+                    for _ in 0..per_cell {
+                        // homogeneous batch of b samples from this category
+                        let samples: Vec<Prompt> = (0..b)
+                            .map(|i| Corpus::sample_prompt(i as u64, cat, &mut rng))
+                            .collect();
+                        let work = BatchWork::new(
+                            samples.iter().map(|p| p.prompt_tokens).collect(),
+                            samples
+                                .iter()
+                                .map(|p| p.output_tokens_on(dev.output_median_tokens))
+                                .collect(),
+                        );
+                        let t = simulate_batch(dev, &work, None);
+                        cell.samples += 1;
+                        cell.mean_e2e_s += t.total_s / b as f64;
+                        cell.mean_energy_kwh += t.energy_kwh / b as f64;
+                        cell.mean_output_tokens +=
+                            work.total_output_tokens() as f64 / b as f64;
+                        cell.error_rate += t.failure.errors / b as f64;
+                    }
+                    let n = cell.samples.max(1) as f64;
+                    cell.mean_e2e_s /= n;
+                    cell.mean_energy_kwh /= n;
+                    cell.mean_output_tokens /= n;
+                    cell.error_rate /= n;
+                    cell.mean_carbon_kg = cell.mean_energy_kwh * carbon_intensity / 1000.0;
+                    cells.insert((dev.name.clone(), cat, b), cell);
+                }
+            }
+        }
+        BenchmarkDb { cells, carbon_intensity }
+    }
+
+    /// Measured cell, if benchmarked.
+    pub fn cell(&self, device: &str, cat: Category, batch: usize) -> Option<&BenchCell> {
+        self.cells.get(&(device.to_string(), cat, batch))
+    }
+
+    /// Cost lookup for a prompt: measured cell when available, analytic
+    /// fallback otherwise.
+    pub fn cost(&self, dev: &DeviceProfile, prompt: &Prompt, batch: usize) -> CostEstimate {
+        match self.cell(&dev.name, prompt.category, batch) {
+            Some(c) => {
+                // rescale the category means by this prompt's relative
+                // output demand (measured DB + per-prompt refinement)
+                let cat_out = prompt.category.profile().output_median;
+                let scale = prompt.output_demand_tokens as f64 / cat_out;
+                CostEstimate {
+                    e2e_s: c.mean_e2e_s * blend(scale),
+                    energy_kwh: c.mean_energy_kwh * blend(scale),
+                    carbon_kg: c.mean_carbon_kg * blend(scale),
+                }
+            }
+            None => estimate(dev, prompt, batch, self.carbon_intensity),
+        }
+    }
+
+    pub fn carbon_intensity(&self) -> f64 {
+        self.carbon_intensity
+    }
+
+    pub fn len(&self) -> usize {
+        self.cells.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cells.is_empty()
+    }
+}
+
+/// Soften the per-prompt rescale: decode dominates but TTFT/overhead do
+/// not scale with output tokens, so use 0.5 + 0.5·scale.
+fn blend(scale: f64) -> f64 {
+    0.5 + 0.5 * scale.clamp(0.1, 10.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+    use crate::workload::generator::Corpus;
+
+    fn cluster() -> Cluster {
+        Cluster::from_config(&ExperimentConfig::default().cluster)
+    }
+
+    fn sample(cat: Category, seed: u64) -> Prompt {
+        let mut rng = Rng::new(seed);
+        Corpus::sample_prompt(0, cat, &mut rng)
+    }
+
+    #[test]
+    fn analytic_estimate_orderings() {
+        let c = cluster();
+        let jetson = &c.devices[0];
+        let ada = &c.devices[1];
+        let p = sample(Category::Squad, 3);
+        let ej = estimate(jetson, &p, 1, 69.0);
+        let ea = estimate(ada, &p, 1, 69.0);
+        // Ada faster, Jetson greener (the paper's core trade-off)
+        assert!(ea.e2e_s < ej.e2e_s, "ada {} vs jetson {}", ea.e2e_s, ej.e2e_s);
+        assert!(ej.carbon_kg < ea.carbon_kg);
+        // carbon = energy × intensity
+        assert!((ej.carbon_kg - ej.energy_kwh * 0.069).abs() < 1e-12);
+    }
+
+    #[test]
+    fn batching_amortizes_energy() {
+        let c = cluster();
+        let jetson = &c.devices[0];
+        let p = sample(Category::DailyDialog, 5);
+        let e1 = estimate(jetson, &p, 1, 69.0);
+        let e4 = estimate(jetson, &p, 4, 69.0);
+        assert!(e4.energy_kwh < e1.energy_kwh);
+    }
+
+    #[test]
+    fn db_build_covers_all_cells() {
+        let c = cluster();
+        let db = BenchmarkDb::build(&c, &[1, 4, 8], 3, 69.0, 7);
+        assert_eq!(db.len(), 2 * 8 * 3);
+        let cell = db.cell("jetson-orin-nx", Category::Gsm8k, 4).unwrap();
+        assert!(cell.mean_e2e_s > 0.0 && cell.mean_energy_kwh > 0.0);
+        assert!((cell.mean_carbon_kg - cell.mean_energy_kwh * 0.069).abs() < 1e-15);
+    }
+
+    #[test]
+    fn db_cost_falls_back_to_analytic() {
+        let c = cluster();
+        let db = BenchmarkDb::build(&c, &[4], 2, 69.0, 7);
+        let p = sample(Category::ArcChallenge, 9);
+        // batch 2 never benchmarked -> analytic fallback
+        let fallback = db.cost(&c.devices[0], &p, 2);
+        let analytic = estimate(&c.devices[0], &p, 2, 69.0);
+        assert_eq!(fallback, analytic);
+        // batch 4 benchmarked -> generally different from analytic
+        let measured = db.cost(&c.devices[0], &p, 4);
+        assert!(measured.e2e_s > 0.0);
+    }
+
+    #[test]
+    fn db_reflects_jetson_energy_advantage() {
+        let c = cluster();
+        let db = BenchmarkDb::build(&c, &[1, 4, 8], 4, 69.0, 11);
+        // for short-output categories the Jetson must win carbon at every batch
+        for b in [1usize, 4, 8] {
+            let j = db.cell("jetson-orin-nx", Category::Squad, b).unwrap();
+            let a = db.cell("ada-2000", Category::Squad, b).unwrap();
+            assert!(j.mean_carbon_kg < a.mean_carbon_kg, "batch {b}");
+        }
+    }
+
+    #[test]
+    fn db_deterministic_per_seed() {
+        let c = cluster();
+        let a = BenchmarkDb::build(&c, &[1], 2, 69.0, 3);
+        let b = BenchmarkDb::build(&c, &[1], 2, 69.0, 3);
+        let ca = a.cell("ada-2000", Category::CnnDm, 1).unwrap();
+        let cb = b.cell("ada-2000", Category::CnnDm, 1).unwrap();
+        assert_eq!(ca.mean_e2e_s, cb.mean_e2e_s);
+    }
+}

@@ -1,0 +1,21 @@
+//! L3 coordinator — the paper's system contribution.
+//!
+//! - [`estimator`] — the benchmarking database routing decisions consume
+//!   (the paper's offline Table-2 phase) + analytic per-prompt estimates;
+//! - [`router`] — the strategies: all-on-X baselines, carbon-aware,
+//!   latency-aware, plus round-robin / complexity-aware / carbon-cap
+//!   extensions;
+//! - [`batcher`] — dynamic batching (1/4/8) with memory admission;
+//! - [`scheduler`] — the closed-loop executor producing the paper's
+//!   makespan + carbon totals and per-request telemetry.
+
+pub mod batcher;
+pub mod online;
+pub mod estimator;
+pub mod router;
+pub mod scheduler;
+
+pub use batcher::{form_batches, Batch, Grouping};
+pub use estimator::{estimate, BenchmarkDb, CostEstimate};
+pub use router::{build as build_strategy, RouteContext, Strategy};
+pub use scheduler::{run, RunConfig, RunResult};

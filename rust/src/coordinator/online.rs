@@ -1,0 +1,389 @@
+//! Open-loop serving simulation on the discrete-event engine.
+//!
+//! The closed-loop scheduler answers the paper's Table-3 question
+//! (makespan of a fixed corpus); this module answers the *serving*
+//! question its future work points at: steady-state latency under an
+//! arrival stream. Virtual time, deterministic, paper-scale — the DES
+//! analogue of `server::serve` (which runs real PJRT on the wallclock).
+//!
+//! Model: prompts arrive per their trace; routing happens on arrival
+//! using the benchmark DB plus live queue backlog (the online form of
+//! latency-aware); each device, when free, launches a batch of up to
+//! `batch_size` queued prompts — or, under [`BatchPolicy::WaitFill`],
+//! waits up to the timeout for the batch to fill.
+
+use std::collections::VecDeque;
+
+use crate::cluster::Cluster;
+use crate::simulator::{simulate_batch, BatchWork, EventQueue};
+use crate::telemetry::EnergyLedger;
+use crate::util::stats::{Histogram, Summary};
+use crate::workload::Prompt;
+
+use super::estimator::BenchmarkDb;
+
+/// When does a free device launch a partial batch?
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum BatchPolicy {
+    /// Launch whatever is queued the moment the device frees up.
+    Immediate,
+    /// Wait up to `timeout_s` for the batch to fill (dynamic batching).
+    WaitFill { timeout_s: f64 },
+}
+
+/// Open-loop run parameters.
+#[derive(Debug, Clone)]
+pub struct OnlineConfig {
+    pub batch_size: usize,
+    pub policy: BatchPolicy,
+    /// Routing: "latency-aware" (backlog-aware), "carbon-aware",
+    /// "round-robin", or "all-on-<device>".
+    pub strategy: String,
+}
+
+impl Default for OnlineConfig {
+    fn default() -> Self {
+        OnlineConfig {
+            batch_size: 4,
+            policy: BatchPolicy::Immediate,
+            strategy: "latency-aware".into(),
+        }
+    }
+}
+
+/// Aggregated open-loop results.
+#[derive(Debug)]
+pub struct OnlineResult {
+    pub completed: usize,
+    /// Virtual time of the last completion.
+    pub span_s: f64,
+    pub latency: Summary,
+    pub latency_hist: Histogram,
+    pub queue_wait: Summary,
+    pub batch_fill: Summary,
+    /// Per-device utilization (busy / span).
+    pub utilization: Vec<(String, f64)>,
+    pub ledger: EnergyLedger,
+}
+
+#[derive(Debug)]
+enum Event {
+    Arrival(usize),
+    /// Device `d` finished its batch.
+    DeviceFree(usize),
+    /// WaitFill timeout expired for device d (epoch guards staleness).
+    BatchTimeout(usize, u64),
+}
+
+struct DeviceState {
+    queue: VecDeque<usize>,
+    busy: bool,
+    /// Virtual seconds of execution so far.
+    active_s: f64,
+    /// Estimated backlog seconds (for online latency-aware routing).
+    backlog_s: f64,
+    /// Timeout epoch (invalidates stale BatchTimeout events).
+    epoch: u64,
+    /// When the current wait window started, if waiting.
+    waiting_since: Option<f64>,
+}
+
+/// Run the open-loop simulation over prompts with assigned arrival times.
+pub fn run_online(
+    cluster: &Cluster,
+    prompts: &[Prompt],
+    db: &BenchmarkDb,
+    cfg: &OnlineConfig,
+) -> OnlineResult {
+    let n_dev = cluster.devices.len();
+    assert!(n_dev > 0 && !prompts.is_empty());
+
+    let mut q: EventQueue<Event> = EventQueue::new();
+    for (i, p) in prompts.iter().enumerate() {
+        q.push(p.arrival_s, Event::Arrival(i));
+    }
+
+    let mut devs: Vec<DeviceState> = (0..n_dev)
+        .map(|_| DeviceState {
+            queue: VecDeque::new(),
+            busy: false,
+            active_s: 0.0,
+            backlog_s: 0.0,
+            epoch: 0,
+            waiting_since: None,
+        })
+        .collect();
+
+    let mut latency = Summary::new();
+    let mut latency_hist = Histogram::latency();
+    let mut queue_wait = Summary::new();
+    let mut batch_fill = Summary::new();
+    let mut ledger = EnergyLedger::new(cluster.carbon.clone());
+    let mut completed = 0usize;
+    let mut span = 0.0f64;
+    // completion bookkeeping: (prompt idx, batch start) per in-flight batch
+    let mut inflight: Vec<Option<(Vec<usize>, f64)>> = vec![None; n_dev];
+
+    while let Some(ev) = q.pop() {
+        let now = ev.at;
+        match ev.event {
+            Event::Arrival(i) => {
+                let d = route(cluster, db, &devs, &prompts[i], cfg);
+                devs[d].backlog_s += db.cost(&cluster.devices[d], &prompts[i], cfg.batch_size).e2e_s;
+                devs[d].queue.push_back(i);
+                maybe_launch(cluster, prompts, db, cfg, &mut devs, d, now, &mut q, &mut inflight,
+                             &mut batch_fill, &mut queue_wait, &mut ledger);
+            }
+            Event::DeviceFree(d) => {
+                // account the finished batch
+                if let Some((members, start)) = inflight[d].take() {
+                    for &i in &members {
+                        let lat = now - prompts[i].arrival_s;
+                        latency.add(lat);
+                        latency_hist.add(lat);
+                        completed += 1;
+                    }
+                    span = span.max(now);
+                    devs[d].active_s += now - start;
+                }
+                devs[d].busy = false;
+                maybe_launch(cluster, prompts, db, cfg, &mut devs, d, now, &mut q, &mut inflight,
+                             &mut batch_fill, &mut queue_wait, &mut ledger);
+            }
+            Event::BatchTimeout(d, epoch) => {
+                if devs[d].epoch == epoch && !devs[d].busy && !devs[d].queue.is_empty() {
+                    devs[d].waiting_since = None;
+                    launch(cluster, prompts, db, cfg, &mut devs, d, now, &mut q, &mut inflight,
+                           &mut batch_fill, &mut queue_wait, &mut ledger);
+                }
+            }
+        }
+    }
+
+    OnlineResult {
+        completed,
+        span_s: span,
+        latency,
+        latency_hist,
+        queue_wait,
+        batch_fill,
+        utilization: cluster
+            .devices
+            .iter()
+            .zip(&devs)
+            .map(|(dev, st)| (dev.name.clone(), st.active_s / span.max(1e-9)))
+            .collect(),
+        ledger,
+    }
+}
+
+/// On-arrival routing (mirrors server::service::route_online).
+fn route(
+    cluster: &Cluster,
+    db: &BenchmarkDb,
+    devs: &[DeviceState],
+    p: &Prompt,
+    cfg: &OnlineConfig,
+) -> usize {
+    let n = cluster.devices.len();
+    if let Some(name) = cfg.strategy.strip_prefix("all-on-") {
+        return cluster.device_index(name).unwrap_or(0);
+    }
+    match cfg.strategy.as_str() {
+        "carbon-aware" => argmin(n, |d| db.cost(&cluster.devices[d], p, cfg.batch_size).carbon_kg),
+        "round-robin" => (p.id as usize) % n,
+        _ => argmin(n, |d| {
+            devs[d].backlog_s + db.cost(&cluster.devices[d], p, cfg.batch_size).e2e_s
+        }),
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn maybe_launch(
+    cluster: &Cluster,
+    prompts: &[Prompt],
+    db: &BenchmarkDb,
+    cfg: &OnlineConfig,
+    devs: &mut [DeviceState],
+    d: usize,
+    now: f64,
+    q: &mut EventQueue<Event>,
+    inflight: &mut [Option<(Vec<usize>, f64)>],
+    batch_fill: &mut Summary,
+    queue_wait: &mut Summary,
+    ledger: &mut EnergyLedger,
+) {
+    if devs[d].busy || devs[d].queue.is_empty() {
+        return;
+    }
+    let full = devs[d].queue.len() >= cfg.batch_size;
+    match cfg.policy {
+        BatchPolicy::Immediate => {
+            launch(cluster, prompts, db, cfg, devs, d, now, q, inflight, batch_fill, queue_wait, ledger)
+        }
+        BatchPolicy::WaitFill { timeout_s } => {
+            if full {
+                devs[d].waiting_since = None;
+                launch(cluster, prompts, db, cfg, devs, d, now, q, inflight, batch_fill, queue_wait, ledger)
+            } else if devs[d].waiting_since.is_none() {
+                devs[d].waiting_since = Some(now);
+                devs[d].epoch += 1;
+                let epoch = devs[d].epoch;
+                q.push(now + timeout_s, Event::BatchTimeout(d, epoch));
+            }
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn launch(
+    cluster: &Cluster,
+    prompts: &[Prompt],
+    db: &BenchmarkDb,
+    cfg: &OnlineConfig,
+    devs: &mut [DeviceState],
+    d: usize,
+    now: f64,
+    q: &mut EventQueue<Event>,
+    inflight: &mut [Option<(Vec<usize>, f64)>],
+    batch_fill: &mut Summary,
+    queue_wait: &mut Summary,
+    ledger: &mut EnergyLedger,
+) {
+    let dev = &cluster.devices[d];
+    let take = devs[d].queue.len().min(cfg.batch_size);
+    let members: Vec<usize> = devs[d].queue.drain(..take).collect();
+    for &i in &members {
+        queue_wait.add(now - prompts[i].arrival_s);
+        devs[d].backlog_s =
+            (devs[d].backlog_s - db.cost(dev, &prompts[i], cfg.batch_size).e2e_s).max(0.0);
+    }
+    batch_fill.add(members.len() as f64);
+
+    let work = BatchWork::new(
+        members.iter().map(|&i| prompts[i].prompt_tokens).collect(),
+        members
+            .iter()
+            .map(|&i| prompts[i].output_tokens_on(dev.output_median_tokens))
+            .collect(),
+    );
+    let timing = simulate_batch(dev, &work, None);
+    ledger.post_batch(&dev.name, timing.energy_kwh, timing.total_s, now + timing.total_s);
+    devs[d].busy = true;
+    inflight[d] = Some((members, now));
+    q.push(now + timing.total_s, Event::DeviceFree(d));
+}
+
+fn argmin(n: usize, mut f: impl FnMut(usize) -> f64) -> usize {
+    let mut best = 0;
+    let mut best_v = f(0);
+    for i in 1..n {
+        let v = f(i);
+        if v < best_v {
+            best_v = v;
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Arrival, ExperimentConfig};
+    use crate::workload::{trace, Corpus};
+
+    fn setup(n: usize, rate: f64) -> (Cluster, Vec<Prompt>, BenchmarkDb) {
+        let mut cfg = ExperimentConfig::default();
+        cfg.workload.prompts = n;
+        let cluster = Cluster::from_config(&cfg.cluster);
+        let mut corpus = Corpus::generate(&cfg.workload);
+        trace::assign_arrivals(&mut corpus.prompts, Arrival::Open { rate }, 7);
+        let db = BenchmarkDb::build(&cluster, &[1, 4, 8], 3, 69.0, 1);
+        (cluster, corpus.prompts, db)
+    }
+
+    #[test]
+    fn all_requests_complete() {
+        let (cluster, prompts, db) = setup(80, 0.5);
+        let r = run_online(&cluster, &prompts, &db, &OnlineConfig::default());
+        assert_eq!(r.completed, 80);
+        assert!(r.span_s > 0.0);
+        assert!(r.latency.mean() > 0.0);
+        let util_sum: f64 = r.utilization.iter().map(|(_, u)| u).sum();
+        assert!(util_sum > 0.0);
+    }
+
+    #[test]
+    fn deterministic() {
+        let (cluster, prompts, db) = setup(50, 1.0);
+        let a = run_online(&cluster, &prompts, &db, &OnlineConfig::default());
+        let b = run_online(&cluster, &prompts, &db, &OnlineConfig::default());
+        assert_eq!(a.latency.mean(), b.latency.mean());
+        assert_eq!(a.span_s, b.span_s);
+    }
+
+    #[test]
+    fn latency_rises_with_offered_load() {
+        let cfg = OnlineConfig::default();
+        let (cluster, light, db) = setup(120, 0.05);
+        let (_, heavy, _) = setup(120, 2.0);
+        let r_light = run_online(&cluster, &light, &db, &cfg);
+        let r_heavy = run_online(&cluster, &heavy, &db, &cfg);
+        assert!(
+            r_heavy.latency.mean() > r_light.latency.mean() * 1.5,
+            "light {} heavy {}",
+            r_light.latency.mean(),
+            r_heavy.latency.mean()
+        );
+    }
+
+    #[test]
+    fn waitfill_increases_fill_under_light_load() {
+        let (cluster, prompts, db) = setup(100, 0.4);
+        let imm = run_online(&cluster, &prompts, &db, &OnlineConfig::default());
+        let wait = run_online(
+            &cluster,
+            &prompts,
+            &db,
+            &OnlineConfig {
+                policy: BatchPolicy::WaitFill { timeout_s: 20.0 },
+                ..OnlineConfig::default()
+            },
+        );
+        assert_eq!(wait.completed, 100);
+        assert!(
+            wait.batch_fill.mean() > imm.batch_fill.mean(),
+            "imm {} wait {}",
+            imm.batch_fill.mean(),
+            wait.batch_fill.mean()
+        );
+    }
+
+    #[test]
+    fn backlog_aware_routing_beats_round_robin_under_load() {
+        let (cluster, prompts, db) = setup(150, 1.5);
+        let la = run_online(&cluster, &prompts, &db, &OnlineConfig::default());
+        let rr = run_online(
+            &cluster,
+            &prompts,
+            &db,
+            &OnlineConfig { strategy: "round-robin".into(), ..OnlineConfig::default() },
+        );
+        assert!(la.latency.mean() < rr.latency.mean());
+    }
+
+    #[test]
+    fn all_on_device_routes_everything_there() {
+        let (cluster, prompts, db) = setup(30, 0.5);
+        let r = run_online(
+            &cluster,
+            &prompts,
+            &db,
+            &OnlineConfig { strategy: "all-on-ada-2000".into(), ..OnlineConfig::default() },
+        );
+        assert_eq!(r.completed, 30);
+        let jetson_util = r.utilization.iter().find(|(n, _)| n.contains("jetson")).unwrap().1;
+        assert_eq!(jetson_util, 0.0);
+    }
+}

@@ -1,0 +1,432 @@
+//! Routing strategies — the paper's §3 contribution plus extensions.
+//!
+//! Paper strategies:
+//! - **all-on-\<device\>** — greedy single-device baselines ("All on
+//!   Jetson", "All on Ada" in Table 3);
+//! - **carbon-aware** — each prompt goes to the device with the lower
+//!   *measured* carbon footprint for its profile, "prioritizing emission
+//!   reduction even if it increases latency";
+//! - **latency-aware** — "sorts prompts by decreasing average latency
+//!   and assigns them to minimize total end-to-end execution time"
+//!   (LPT list scheduling onto earliest-finishing device).
+//!
+//! Extensions (paper's intro/future work):
+//! - **round-robin** — load-oblivious control;
+//! - **complexity-aware** — CS-threshold routing (simple → efficient
+//!   device, complex → capable device), the intro's "hybrid paradigm";
+//! - **carbon-cap** — latency-aware subject to a carbon budget: greedily
+//!   spends a carbon allowance where it buys the most speedup.
+//!
+//! Every strategy is a pure function from (prompts, context) to a device
+//! assignment — property-tested for totality and bounds.
+
+use crate::cluster::Cluster;
+use crate::workload::Prompt;
+use anyhow::{anyhow, bail, Result};
+
+use super::estimator::BenchmarkDb;
+
+/// Routing context handed to strategies.
+pub struct RouteContext<'a> {
+    pub cluster: &'a Cluster,
+    pub db: &'a BenchmarkDb,
+    /// Batch size the serving layer will use (costs are batch-dependent).
+    pub batch_size: usize,
+}
+
+/// A routing strategy: returns one device index per prompt.
+pub trait Strategy: Send + Sync {
+    fn name(&self) -> String;
+    fn assign(&self, prompts: &[Prompt], ctx: &RouteContext) -> Vec<usize>;
+}
+
+/// Baseline: everything on one device.
+pub struct AllOn {
+    pub device_index: usize,
+    pub device_name: String,
+}
+
+impl Strategy for AllOn {
+    fn name(&self) -> String {
+        format!("all-on-{}", self.device_name)
+    }
+    fn assign(&self, prompts: &[Prompt], _ctx: &RouteContext) -> Vec<usize> {
+        vec![self.device_index; prompts.len()]
+    }
+}
+
+/// Paper strategy (i): minimize measured carbon per prompt.
+pub struct CarbonAware;
+
+impl Strategy for CarbonAware {
+    fn name(&self) -> String {
+        "carbon-aware".into()
+    }
+    fn assign(&self, prompts: &[Prompt], ctx: &RouteContext) -> Vec<usize> {
+        prompts
+            .iter()
+            .map(|p| {
+                argmin(ctx.cluster.devices.len(), |d| {
+                    ctx.db.cost(&ctx.cluster.devices[d], p, ctx.batch_size).carbon_kg
+                })
+            })
+            .collect()
+    }
+}
+
+/// Paper strategy (ii): LPT list scheduling on estimated latency.
+///
+/// Prompts are sorted by decreasing estimated latency (on their fastest
+/// device); each is then placed on the device whose projected finish
+/// time after adding it is smallest. This is the greedy makespan
+/// heuristic the paper describes.
+pub struct LatencyAware;
+
+impl Strategy for LatencyAware {
+    fn name(&self) -> String {
+        "latency-aware".into()
+    }
+    fn assign(&self, prompts: &[Prompt], ctx: &RouteContext) -> Vec<usize> {
+        let n_dev = ctx.cluster.devices.len();
+        // per-prompt per-device amortized cost
+        let costs: Vec<Vec<f64>> = prompts
+            .iter()
+            .map(|p| {
+                (0..n_dev)
+                    .map(|d| ctx.db.cost(&ctx.cluster.devices[d], p, ctx.batch_size).e2e_s)
+                    .collect()
+            })
+            .collect();
+        // LPT order: hardest first (by min-device cost)
+        let mut order: Vec<usize> = (0..prompts.len()).collect();
+        order.sort_by(|&a, &b| {
+            let ka = costs[a].iter().cloned().fold(f64::MAX, f64::min);
+            let kb = costs[b].iter().cloned().fold(f64::MAX, f64::min);
+            kb.partial_cmp(&ka).unwrap_or(std::cmp::Ordering::Equal)
+        });
+        let mut load = vec![0.0f64; n_dev];
+        let mut out = vec![0usize; prompts.len()];
+        for idx in order {
+            let d = argmin(n_dev, |d| load[d] + costs[idx][d]);
+            load[d] += costs[idx][d];
+            out[idx] = d;
+        }
+        out
+    }
+}
+
+/// Extension: load-oblivious round-robin control.
+pub struct RoundRobin;
+
+impl Strategy for RoundRobin {
+    fn name(&self) -> String {
+        "round-robin".into()
+    }
+    fn assign(&self, prompts: &[Prompt], ctx: &RouteContext) -> Vec<usize> {
+        let n = ctx.cluster.devices.len();
+        (0..prompts.len()).map(|i| i % n).collect()
+    }
+}
+
+/// Extension: complexity-threshold routing (the intro's heuristic).
+/// Simple prompts (CS < threshold) go to the most energy-efficient
+/// device; complex ones to the fastest device.
+pub struct ComplexityAware {
+    pub threshold: f64,
+}
+
+impl Strategy for ComplexityAware {
+    fn name(&self) -> String {
+        format!("complexity-aware@{:.2}", self.threshold)
+    }
+    fn assign(&self, prompts: &[Prompt], ctx: &RouteContext) -> Vec<usize> {
+        // rank devices once using a reference mid-corpus prompt profile
+        let probe = |p: &Prompt, d: usize| ctx.db.cost(&ctx.cluster.devices[d], p, ctx.batch_size);
+        prompts
+            .iter()
+            .map(|p| {
+                if p.complexity < self.threshold {
+                    argmin(ctx.cluster.devices.len(), |d| probe(p, d).carbon_kg)
+                } else {
+                    argmin(ctx.cluster.devices.len(), |d| probe(p, d).e2e_s)
+                }
+            })
+            .collect()
+    }
+}
+
+/// Extension (future work): latency-aware under a carbon budget.
+///
+/// Start from the carbon-minimal assignment, then greedily re-route the
+/// prompts with the best latency-saved-per-extra-carbon ratio until the
+/// budget (kgCO2e above the carbon-minimal baseline) is exhausted.
+pub struct CarbonCap {
+    /// Extra carbon allowed above the carbon-minimal total, kgCO2e.
+    pub budget_kg: f64,
+}
+
+impl Strategy for CarbonCap {
+    fn name(&self) -> String {
+        format!("carbon-cap@{:.2e}", self.budget_kg)
+    }
+    fn assign(&self, prompts: &[Prompt], ctx: &RouteContext) -> Vec<usize> {
+        let n_dev = ctx.cluster.devices.len();
+        let cost =
+            |p: &Prompt, d: usize| ctx.db.cost(&ctx.cluster.devices[d], p, ctx.batch_size);
+        // start carbon-minimal
+        let mut assign: Vec<usize> =
+            prompts.iter().map(|p| argmin(n_dev, |d| cost(p, d).carbon_kg)).collect();
+        // candidate moves: (latency saved per carbon spent, idx, target)
+        let mut moves: Vec<(f64, f64, usize, usize)> = Vec::new();
+        for (i, p) in prompts.iter().enumerate() {
+            let cur = cost(p, assign[i]);
+            for d in 0..n_dev {
+                if d == assign[i] {
+                    continue;
+                }
+                let alt = cost(p, d);
+                let saved = cur.e2e_s - alt.e2e_s;
+                let extra = alt.carbon_kg - cur.carbon_kg;
+                if saved > 0.0 && extra > 0.0 {
+                    moves.push((saved / extra, extra, i, d));
+                }
+            }
+        }
+        moves.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap_or(std::cmp::Ordering::Equal));
+        let mut budget = self.budget_kg;
+        let mut moved = vec![false; prompts.len()];
+        for (_, extra, i, d) in moves {
+            if moved[i] || extra > budget {
+                continue;
+            }
+            budget -= extra;
+            assign[i] = d;
+            moved[i] = true;
+        }
+        assign
+    }
+}
+
+/// Build a strategy from its config name.
+///
+/// Recognized: `all-on-<device-name>`, `carbon-aware`, `latency-aware`,
+/// `round-robin`, `complexity-aware[@threshold]`, `carbon-cap@<kg>`.
+pub fn build(name: &str, cluster: &Cluster) -> Result<Box<dyn Strategy>> {
+    if let Some(dev) = name.strip_prefix("all-on-") {
+        let idx = cluster
+            .device_index(dev)
+            .ok_or_else(|| anyhow!("unknown device '{dev}' in strategy '{name}'"))?;
+        return Ok(Box::new(AllOn { device_index: idx, device_name: dev.to_string() }));
+    }
+    if name == "carbon-aware" {
+        return Ok(Box::new(CarbonAware));
+    }
+    if name == "latency-aware" {
+        return Ok(Box::new(LatencyAware));
+    }
+    if name == "round-robin" {
+        return Ok(Box::new(RoundRobin));
+    }
+    if name == "complexity-aware" {
+        return Ok(Box::new(ComplexityAware { threshold: 0.35 }));
+    }
+    if let Some(t) = name.strip_prefix("complexity-aware@") {
+        let threshold: f64 = t.parse().map_err(|_| anyhow!("bad threshold in '{name}'"))?;
+        return Ok(Box::new(ComplexityAware { threshold }));
+    }
+    if let Some(b) = name.strip_prefix("carbon-cap@") {
+        let budget_kg: f64 = b.parse().map_err(|_| anyhow!("bad budget in '{name}'"))?;
+        return Ok(Box::new(CarbonCap { budget_kg }));
+    }
+    bail!(
+        "unknown strategy '{name}' (all-on-<device>|carbon-aware|latency-aware|\
+         round-robin|complexity-aware[@t]|carbon-cap@<kg>)"
+    )
+}
+
+fn argmin(n: usize, mut f: impl FnMut(usize) -> f64) -> usize {
+    assert!(n > 0);
+    let mut best = 0;
+    let mut best_v = f(0);
+    for i in 1..n {
+        let v = f(i);
+        if v < best_v {
+            best_v = v;
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+    use crate::coordinator::estimator::BenchmarkDb;
+    use crate::util::check::property;
+    use crate::util::rng::Rng;
+    use crate::workload::{Category, Corpus};
+
+    fn setup() -> (Cluster, BenchmarkDb) {
+        let cluster = Cluster::from_config(&ExperimentConfig::default().cluster);
+        let db = BenchmarkDb::build(&cluster, &[1, 4, 8], 3, 69.0, 1);
+        (cluster, db)
+    }
+
+    fn prompts(n: usize, seed: u64) -> Vec<crate::workload::Prompt> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|i| {
+                let cat = Category::ALL[rng.below(8)];
+                Corpus::sample_prompt(i as u64, cat, &mut rng)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn all_strategies_total_and_in_bounds() {
+        let (cluster, db) = setup();
+        let names = [
+            "all-on-jetson-orin-nx",
+            "all-on-ada-2000",
+            "carbon-aware",
+            "latency-aware",
+            "round-robin",
+            "complexity-aware",
+            "complexity-aware@0.5",
+            "carbon-cap@1e-5",
+        ];
+        property("assignment totality", 24, |rng| {
+            let n = rng.below(40) + 1;
+            let ps = prompts(n, rng.next_u64());
+            for name in names {
+                let s = build(name, &cluster).unwrap();
+                let ctx = RouteContext { cluster: &cluster, db: &db, batch_size: rng.below(8) + 1 };
+                let a = s.assign(&ps, &ctx);
+                if a.len() != n {
+                    return Err(format!("{name}: len {} != {n}", a.len()));
+                }
+                if a.iter().any(|&d| d >= cluster.devices.len()) {
+                    return Err(format!("{name}: device index out of bounds"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn all_on_is_constant() {
+        let (cluster, db) = setup();
+        let s = build("all-on-ada-2000", &cluster).unwrap();
+        let ps = prompts(10, 3);
+        let ctx = RouteContext { cluster: &cluster, db: &db, batch_size: 4 };
+        assert!(s.assign(&ps, &ctx).iter().all(|&d| d == 1));
+    }
+
+    #[test]
+    fn carbon_aware_prefers_jetson() {
+        // Table-2 physics: the Jetson wins carbon almost everywhere
+        let (cluster, db) = setup();
+        let s = CarbonAware;
+        let ps = prompts(200, 5);
+        let ctx = RouteContext { cluster: &cluster, db: &db, batch_size: 4 };
+        let a = s.assign(&ps, &ctx);
+        let jetson_share = a.iter().filter(|&&d| d == 0).count() as f64 / a.len() as f64;
+        assert!(jetson_share > 0.7, "share={jetson_share}");
+    }
+
+    #[test]
+    fn latency_aware_uses_both_devices() {
+        let (cluster, db) = setup();
+        let s = LatencyAware;
+        let ps = prompts(100, 7);
+        let ctx = RouteContext { cluster: &cluster, db: &db, batch_size: 4 };
+        let a = s.assign(&ps, &ctx);
+        let jetson = a.iter().filter(|&&d| d == 0).count();
+        assert!(jetson > 0 && jetson < a.len(), "jetson={jetson}/{}", a.len());
+    }
+
+    #[test]
+    fn latency_aware_beats_single_device_makespan() {
+        let (cluster, db) = setup();
+        let ps = prompts(120, 11);
+        let ctx = RouteContext { cluster: &cluster, db: &db, batch_size: 4 };
+        let makespan = |assign: &[usize]| {
+            let mut load = vec![0.0; cluster.devices.len()];
+            for (i, &d) in assign.iter().enumerate() {
+                load[d] += db.cost(&cluster.devices[d], &ps[i], 4).e2e_s;
+            }
+            load.iter().cloned().fold(0.0, f64::max)
+        };
+        let la = makespan(&LatencyAware.assign(&ps, &ctx));
+        let jetson_only = makespan(&vec![0usize; ps.len()]);
+        let ada_only = makespan(&vec![1usize; ps.len()]);
+        assert!(la < jetson_only && la < ada_only, "{la} vs {jetson_only}/{ada_only}");
+    }
+
+    #[test]
+    fn complexity_threshold_splits() {
+        let (cluster, db) = setup();
+        let ps = prompts(200, 13);
+        let ctx = RouteContext { cluster: &cluster, db: &db, batch_size: 4 };
+        let low = ComplexityAware { threshold: 0.0 }.assign(&ps, &ctx); // all "complex"
+        let high = ComplexityAware { threshold: 1.1 }.assign(&ps, &ctx); // all "simple"
+        assert_ne!(low, high);
+        // all-simple == carbon-minimal assignment
+        let carbon = CarbonAware.assign(&ps, &ctx);
+        assert_eq!(high, carbon);
+    }
+
+    #[test]
+    fn carbon_cap_interpolates() {
+        let (cluster, db) = setup();
+        let ps = prompts(80, 17);
+        let ctx = RouteContext { cluster: &cluster, db: &db, batch_size: 4 };
+        let total_carbon = |assign: &[usize]| -> f64 {
+            assign
+                .iter()
+                .enumerate()
+                .map(|(i, &d)| db.cost(&cluster.devices[d], &ps[i], 4).carbon_kg)
+                .sum()
+        };
+        let zero = CarbonCap { budget_kg: 0.0 }.assign(&ps, &ctx);
+        let min_carbon = total_carbon(&CarbonAware.assign(&ps, &ctx));
+        assert!((total_carbon(&zero) - min_carbon).abs() < 1e-12);
+        let big = CarbonCap { budget_kg: 1.0 }.assign(&ps, &ctx);
+        // unlimited budget must not exceed baseline + budget, and should
+        // spend some of it (routing some prompts to the fast device)
+        assert!(total_carbon(&big) >= min_carbon);
+        let moved = big.iter().zip(&zero).filter(|(a, b)| a != b).count();
+        assert!(moved > 0);
+    }
+
+    #[test]
+    fn carbon_cap_respects_budget() {
+        let (cluster, db) = setup();
+        let ps = prompts(60, 19);
+        let ctx = RouteContext { cluster: &cluster, db: &db, batch_size: 4 };
+        let total_carbon = |assign: &[usize]| -> f64 {
+            assign
+                .iter()
+                .enumerate()
+                .map(|(i, &d)| db.cost(&cluster.devices[d], &ps[i], 4).carbon_kg)
+                .sum()
+        };
+        let min_carbon = total_carbon(&CarbonAware.assign(&ps, &ctx));
+        for budget in [1e-7, 1e-6, 1e-5] {
+            let a = CarbonCap { budget_kg: budget }.assign(&ps, &ctx);
+            assert!(
+                total_carbon(&a) <= min_carbon + budget + 1e-12,
+                "budget {budget} violated"
+            );
+        }
+    }
+
+    #[test]
+    fn build_rejects_unknown() {
+        let (cluster, _) = setup();
+        assert!(build("nope", &cluster).is_err());
+        assert!(build("all-on-unknown-device", &cluster).is_err());
+        assert!(build("complexity-aware@abc", &cluster).is_err());
+    }
+}

@@ -1,0 +1,61 @@
+//! # Verdant — sustainability-aware LLM inference on edge clusters
+//!
+//! A production-quality reproduction of *"Toward Sustainability-Aware LLM
+//! Inference on Edge Clusters"* (CS.DC 2025): carbon-aware and
+//! latency-aware prompt routing across a heterogeneous edge cluster
+//! (Jetson Orin NX 8 GB + NVIDIA Ada 2000 16 GB + a cloud API point),
+//! with dynamic batching (1/4/8) and full energy/carbon telemetry.
+//!
+//! ## Architecture (three layers, Python never on the request path)
+//!
+//! - **L3 (this crate)** — the coordinator: router strategies, dynamic
+//!   batcher, per-device schedulers, benchmark-informed cost estimator,
+//!   energy/carbon ledger, device simulator calibrated to the paper's
+//!   Table 2, serving loop, CLI, config system, and the bench harness
+//!   that regenerates every table and figure in the paper.
+//! - **L2 (python/compile/model.py)** — a Gemma-style decoder-only
+//!   transformer (RMSNorm, RoPE, GQA, SwiGLU, int8-quantized MLP),
+//!   AOT-lowered once to HLO text.
+//! - **L1 (python/compile/kernels/)** — Pallas kernels for the compute
+//!   hot spots (quantized GEMM, flash-decode attention, fused RMSNorm).
+//!
+//! The [`runtime`] module loads the AOT artifacts through the PJRT C API
+//! (`xla` crate) and performs real token generation; the [`simulator`]
+//! maps that work onto calibrated Jetson/Ada latency & power models so
+//! strategy comparisons happen at paper scale (see DESIGN.md
+//! §Real-vs-calibrated-clock).
+//!
+//! ## Quick start
+//!
+//! ```bash
+//! make artifacts          # AOT-lower the models (runs python once)
+//! cargo run --release -- serve --prompts 32
+//! cargo run --release -- bench table3   # regenerate the paper's Table 3
+//! ```
+//!
+//! ## Offline-build substitutions
+//!
+//! This crate is built fully offline against a vendored dependency set
+//! containing only `xla` and `anyhow`. Facilities that would normally be
+//! external crates are implemented in-tree and tested here:
+//! [`util::json`] (replacing serde_json), the TOML-subset [`config`]
+//! parser (replacing toml+serde), a thread+channel serving loop
+//! ([`server`], replacing tokio), a micro-benchmark harness
+//! ([`bench::harness`], replacing criterion) and a property-test runner
+//! ([`util::check`], replacing proptest).
+
+pub mod bench;
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod models;
+pub mod report;
+pub mod runtime;
+pub mod server;
+pub mod simulator;
+pub mod telemetry;
+pub mod util;
+pub mod workload;
+
+/// Crate version string (mirrors Cargo.toml).
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

@@ -1,0 +1,353 @@
+//! Verdant CLI — the launcher.
+//!
+//! ```text
+//! verdant bench <fig1|fig2|table2|table3|sweep|ablation|load|all> [--prompts N]
+//!         [--config path] [--save dir] [--extensions]
+//! verdant run   [--strategy S] [--batch B] [--prompts N] [--execution M]
+//!         [--seed N] [--config path]      one closed-loop run, full report
+//! verdant serve [--prompts N] [--batch B] [--strategy S] [--timeout-ms T]
+//!         [--max-new N]                   real-time PJRT serving demo
+//! verdant inspect <corpus|cluster|manifest> [--prompts N]
+//! ```
+//!
+//! (clap is unavailable offline; this is a small hand-rolled parser with
+//! the same ergonomics for our flag set.)
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::process::ExitCode;
+use std::time::Duration;
+
+use verdant::bench::{ablation, fig1, fig2, harness, load, sweep, table2, table3, Env};
+use verdant::cluster::Cluster;
+use verdant::config::{ExecutionMode, ExperimentConfig};
+use verdant::coordinator::{build_strategy, run as run_sched, Grouping, RunConfig};
+use verdant::report::fmt;
+use verdant::runtime::Engine;
+use verdant::server::{serve, ServeOptions};
+use verdant::workload::{trace, Corpus};
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match dispatch(&args) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+/// Parsed flags: everything after the positional arguments.
+struct Flags {
+    map: HashMap<String, String>,
+    switches: Vec<String>,
+}
+
+impl Flags {
+    fn parse(args: &[String]) -> (Vec<String>, Flags) {
+        let mut pos = Vec::new();
+        let mut map = HashMap::new();
+        let mut switches = Vec::new();
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some(eq) = name.find('=') {
+                    map.insert(name[..eq].to_string(), name[eq + 1..].to_string());
+                } else if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                    map.insert(name.to_string(), args[i + 1].clone());
+                    i += 1;
+                } else {
+                    switches.push(name.to_string());
+                }
+            } else {
+                pos.push(a.clone());
+            }
+            i += 1;
+        }
+        (pos, Flags { map, switches })
+    }
+
+    fn get(&self, k: &str) -> Option<&str> {
+        self.map.get(k).map(String::as_str)
+    }
+
+    fn usize(&self, k: &str, default: usize) -> anyhow::Result<usize> {
+        match self.get(k) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{k} wants an integer, got '{v}'")),
+        }
+    }
+
+    fn has(&self, k: &str) -> bool {
+        self.switches.iter().any(|s| s == k)
+    }
+}
+
+fn load_config(flags: &Flags) -> anyhow::Result<ExperimentConfig> {
+    let mut cfg = match flags.get("config") {
+        Some(p) => ExperimentConfig::load(std::path::Path::new(p))?,
+        None => {
+            // use configs/cluster.toml when present, defaults otherwise
+            let default = std::path::Path::new("configs/cluster.toml");
+            if default.exists() {
+                ExperimentConfig::load(default)?
+            } else {
+                ExperimentConfig::default()
+            }
+        }
+    };
+    if let Some(n) = flags.get("prompts") {
+        cfg.workload.prompts = n.parse()?;
+    }
+    if let Some(s) = flags.get("seed") {
+        cfg.workload.seed = s.parse()?;
+    }
+    if let Some(b) = flags.get("batch") {
+        cfg.serving.batch_size = b.parse()?;
+    }
+    if let Some(s) = flags.get("strategy") {
+        cfg.serving.strategy = s.to_string();
+    }
+    if let Some(e) = flags.get("execution") {
+        cfg.serving.execution = ExecutionMode::parse(e)?;
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn dispatch(args: &[String]) -> anyhow::Result<()> {
+    let (pos, flags) = Flags::parse(args);
+    match pos.first().map(String::as_str) {
+        Some("bench") => cmd_bench(pos.get(1).map(String::as_str).unwrap_or("all"), &flags),
+        Some("run") => cmd_run(&flags),
+        Some("serve") => cmd_serve(&flags),
+        Some("inspect") => cmd_inspect(pos.get(1).map(String::as_str).unwrap_or("cluster"), &flags),
+        Some("version") => {
+            println!("verdant {}", verdant::VERSION);
+            Ok(())
+        }
+        _ => {
+            print_usage();
+            Ok(())
+        }
+    }
+}
+
+fn print_usage() {
+    println!(
+        "verdant {} — sustainability-aware LLM inference on edge clusters\n\n\
+         USAGE:\n  verdant bench <fig1|fig2|table2|table3|sweep|ablation|load|all> [--prompts N] [--save dir] [--extensions]\n  \
+         verdant run   [--strategy S] [--batch B] [--prompts N] [--execution real|calibrated|hybrid]\n  \
+         verdant serve [--prompts N] [--batch B] [--strategy S] [--timeout-ms T] [--max-new N]\n  \
+         verdant inspect <corpus|cluster|manifest>\n  \
+         verdant version\n\n\
+         Common flags: --config <toml>, --seed <n>",
+        verdant::VERSION
+    );
+}
+
+fn cmd_bench(which: &str, flags: &Flags) -> anyhow::Result<()> {
+    let cfg = load_config(flags)?;
+    println!(
+        "building environment: {} prompts, seed {} ...",
+        cfg.workload.prompts, cfg.workload.seed
+    );
+    let t0 = std::time::Instant::now();
+    let env = Env::with_config(cfg);
+    println!("benchmark DB ready in {}\n", harness::human_time(t0.elapsed().as_secs_f64()));
+
+    let save_dir = flags.get("save").map(PathBuf::from);
+    let emit = |table: verdant::report::Table| -> anyhow::Result<()> {
+        println!("{}", table.ascii());
+        if let Some(dir) = &save_dir {
+            table.save(dir)?;
+            println!("  saved {}/{}.{{csv,json}}\n", dir.display(), table.name);
+        }
+        Ok(())
+    };
+
+    let all = which == "all";
+    if all || which == "fig1" {
+        emit(fig1::run().1)?;
+    }
+    if all || which == "fig2" {
+        emit(fig2::run().1)?;
+    }
+    if all || which == "table2" {
+        emit(table2::run(&env).1)?;
+    }
+    if all || which == "table3" {
+        emit(table3::run(&env, flags.has("extensions") || all).1)?;
+    }
+    if all || which == "sweep" {
+        emit(sweep::run(&env).1)?;
+    }
+    if all || which == "ablation" {
+        emit(ablation::run(&env).1)?;
+    }
+    if all || which == "load" {
+        emit(load::run(&env).1)?;
+    }
+    Ok(())
+}
+
+fn cmd_run(flags: &Flags) -> anyhow::Result<()> {
+    let cfg = load_config(flags)?;
+    let cluster = Cluster::from_config(&cfg.cluster);
+    let mut corpus = Corpus::generate(&cfg.workload);
+    trace::assign_arrivals(&mut corpus.prompts, cfg.workload.arrival, cfg.workload.seed);
+    let db = verdant::coordinator::BenchmarkDb::build(
+        &cluster,
+        &[1, 4, 8],
+        6,
+        cfg.cluster.carbon_intensity_g_per_kwh,
+        cfg.workload.seed ^ 0x0FF1_CE,
+    );
+    let strategy = build_strategy(&cfg.serving.strategy, &cluster)?;
+    let run_cfg = RunConfig {
+        batch_size: cfg.serving.batch_size,
+        grouping: Grouping::Fifo,
+        execution: cfg.serving.execution,
+        max_new_tokens: cfg.serving.max_new_tokens,
+        stochastic_seed: flags.get("stochastic").map(|s| s.parse()).transpose()?,
+    };
+
+    let engine = match cfg.serving.execution {
+        ExecutionMode::Calibrated => None,
+        _ => {
+            println!("loading PJRT engine from {} ...", cfg.artifacts_dir);
+            let mut e = Engine::load(std::path::Path::new(&cfg.artifacts_dir))?;
+            for dev in &cfg.cluster.devices {
+                let batches = e
+                    .manifest
+                    .variants
+                    .get(&dev.model)
+                    .map(|m| m.batch_sizes())
+                    .unwrap_or_default();
+                e.warmup(&dev.model, &batches)?;
+            }
+            println!("engine ready on {}", e.platform());
+            Some(e)
+        }
+    };
+
+    let r = run_sched(&cluster, &corpus.prompts, strategy.as_ref(), &db, &run_cfg, engine.as_ref())?;
+
+    println!("\n== run: {} | batch {} | {} prompts | {} ==", r.strategy, r.batch_size,
+             corpus.prompts.len(), cfg.serving.execution.name());
+    println!("  total E2E (makespan):   {} s", fmt::secs(r.makespan_s));
+    println!("  total carbon:           {} kgCO2e", fmt::sci(r.total_carbon_kg));
+    println!("  total energy:           {} kWh", fmt::sci(r.total_energy_kwh));
+    println!("  mean E2E / p50 / p95:   {} / {} / {} s",
+             fmt::secs(r.overall.e2e.mean()),
+             fmt::secs(r.overall.e2e_hist.p50()),
+             fmt::secs(r.overall.e2e_hist.p95()));
+    println!("  mean TTFT:              {} s", fmt::secs(r.overall.ttft.mean()));
+    println!("  error rate:             {}", fmt::pct(r.overall.error_rate()));
+    for (dev, agg) in &r.per_device {
+        let share = r.share(dev);
+        println!(
+            "  {dev}: {} prompts ({}), mean E2E {} s, energy {} kWh",
+            r.device_share[dev],
+            fmt::pct(share),
+            fmt::secs(agg.e2e.mean()),
+            fmt::sci(agg.energy_kwh.sum()),
+        );
+    }
+    for (dev, texts) in &r.spot_checks {
+        if let Some(t) = texts.first() {
+            let preview: String = t.chars().take(48).collect();
+            println!("  spot-check [{dev}]: {preview:?}");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_serve(flags: &Flags) -> anyhow::Result<()> {
+    let mut cfg = load_config(flags)?;
+    if flags.get("prompts").is_none() {
+        cfg.workload.prompts = 24; // serving demo default
+    }
+    // open-loop arrivals for serving
+    if matches!(cfg.workload.arrival, verdant::config::Arrival::Closed) {
+        cfg.workload.arrival = verdant::config::Arrival::Open { rate: 4.0 };
+    }
+    let cluster = Cluster::from_config(&cfg.cluster);
+    let mut corpus = Corpus::generate(&cfg.workload);
+    trace::assign_arrivals(&mut corpus.prompts, cfg.workload.arrival, cfg.workload.seed);
+
+    let opts = ServeOptions {
+        batch_size: cfg.serving.batch_size,
+        batch_timeout: Duration::from_millis(flags.usize("timeout-ms", 150)? as u64),
+        max_new_tokens: flags.usize("max-new", 16)?,
+        artifacts_dir: PathBuf::from(&cfg.artifacts_dir),
+        time_scale: 50.0,
+        strategy: cfg.serving.strategy.clone(),
+    };
+    println!(
+        "serving {} prompts through PJRT ({} workers, batch {}, strategy {}) ...",
+        corpus.prompts.len(),
+        cluster.devices.len(),
+        opts.batch_size,
+        opts.strategy
+    );
+    let report = serve(&cluster, &corpus.prompts, &opts)?;
+    println!("\n== serving report ==");
+    println!("  completed:        {} requests in {} s", report.completed, fmt::secs(report.wallclock_s));
+    println!("  throughput:       {:.2} req/s, {:.1} tok/s", report.requests_per_s, report.tokens_per_s);
+    println!("  latency mean/p50/p95: {} / {} / {} s",
+             fmt::secs(report.latency_mean_s), fmt::secs(report.latency_p50_s), fmt::secs(report.latency_p95_s));
+    println!("  batches:          {} (mean fill {:.2})", report.batches, report.mean_batch_fill);
+    for (dev, count) in &report.per_device {
+        println!("  {dev}: {count} requests");
+    }
+    Ok(())
+}
+
+fn cmd_inspect(what: &str, flags: &Flags) -> anyhow::Result<()> {
+    let cfg = load_config(flags)?;
+    match what {
+        "corpus" => {
+            let corpus = Corpus::generate(&cfg.workload);
+            println!("corpus: {} prompts, seed {}", corpus.prompts.len(), corpus.seed);
+            println!("  mean prompt tokens: {:.1}", corpus.mean_prompt_tokens());
+            println!("  mean output demand: {:.1}", corpus.mean_output_demand());
+            for (cat, count) in corpus.category_histogram() {
+                println!("  {:<14} {count}", cat.name());
+            }
+        }
+        "cluster" => {
+            let cluster = Cluster::from_config(&cfg.cluster);
+            for d in &cluster.devices {
+                println!(
+                    "{} [{}] — {} GB, model {}, idle {} W, active(b4) {:.1} W",
+                    d.name,
+                    d.kind.name(),
+                    d.memory.capacity_gb,
+                    d.model,
+                    d.power.idle_w,
+                    d.power.active_watts(4)
+                );
+            }
+        }
+        "manifest" => {
+            let m = verdant::runtime::Manifest::load(std::path::Path::new(&cfg.artifacts_dir))?;
+            println!(
+                "manifest v2: prefill_len {}, max_seq {}, vocab {}",
+                m.prefill_len, m.max_seq, m.vocab
+            );
+            for (name, v) in &m.variants {
+                println!(
+                    "  {name}: {} params, batches {:?}, weights {} KB",
+                    v.params.len(),
+                    v.batch_sizes(),
+                    v.weights_bytes / 1024
+                );
+            }
+        }
+        _ => anyhow::bail!("inspect what? (corpus|cluster|manifest)"),
+    }
+    Ok(())
+}

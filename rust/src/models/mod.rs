@@ -1,0 +1,88 @@
+//! Model registry: paper-scale model metadata ↔ AOT artifact variants.
+//!
+//! Two levels deliberately coexist (DESIGN.md §Real-vs-calibrated-clock):
+//!
+//! - **paper scale** — Gemma-3-1B-it-qat / Gemma-3-12B-it-qat metadata
+//!   (parameter counts, quantized checkpoint sizes) feeding the memory
+//!   and latency models;
+//! - **artifact scale** — the `edge-1b-sim` / `edge-12b-sim` miniatures
+//!   the runtime actually executes through PJRT.
+//!
+//! `ModelSpec::for_variant` maps an artifact variant name to its
+//! paper-scale stand-in.
+
+/// Quantization scheme of a checkpoint.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Quantization {
+    /// Quantization-aware-trained int4 (the paper's `-qat` checkpoints).
+    QatInt4,
+    /// Plain int8 weight-only (our artifact MLPs).
+    Int8,
+    /// Unquantized f32/bf16.
+    None,
+}
+
+/// Metadata for one servable model.
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    /// Artifact variant key in artifacts/manifest.json.
+    pub variant: &'static str,
+    /// Human name of the paper-scale model this stands in for.
+    pub paper_name: &'static str,
+    /// Paper-scale parameter count.
+    pub params: u64,
+    /// Quantized checkpoint size on disk / resident, GB (paper scale).
+    pub checkpoint_gb: f64,
+    pub quantization: Quantization,
+    /// Median output verbosity (tokens; Table 2: 1B ~148, 12B ~70).
+    pub output_median_tokens: f64,
+}
+
+/// The registry of models this reproduction serves.
+pub const REGISTRY: [ModelSpec; 2] = [
+    ModelSpec {
+        variant: "edge-1b-sim",
+        paper_name: "Gemma-3-1B-it-qat",
+        params: 1_000_000_000,
+        checkpoint_gb: 0.72,
+        quantization: Quantization::QatInt4,
+        output_median_tokens: 148.0,
+    },
+    ModelSpec {
+        variant: "edge-12b-sim",
+        paper_name: "Gemma-3-12B-it-qat",
+        params: 12_000_000_000,
+        checkpoint_gb: 7.6,
+        quantization: Quantization::QatInt4,
+        output_median_tokens: 69.6,
+    },
+];
+
+impl ModelSpec {
+    /// Look up by artifact variant name.
+    pub fn for_variant(variant: &str) -> Option<&'static ModelSpec> {
+        REGISTRY.iter().find(|m| m.variant == variant)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_lookup() {
+        let m = ModelSpec::for_variant("edge-1b-sim").unwrap();
+        assert_eq!(m.paper_name, "Gemma-3-1B-it-qat");
+        assert!(ModelSpec::for_variant("nope").is_none());
+    }
+
+    #[test]
+    fn capacity_gap_matches_paper() {
+        let small = ModelSpec::for_variant("edge-1b-sim").unwrap();
+        let big = ModelSpec::for_variant("edge-12b-sim").unwrap();
+        assert_eq!(big.params / small.params, 12);
+        assert!(big.checkpoint_gb > 8.0 * small.checkpoint_gb);
+        // verbosity asymmetry (1B rambles, 12B is terse)
+        assert!(small.output_median_tokens > 2.0 * big.output_median_tokens);
+    }
+}

@@ -1,0 +1,227 @@
+//! Report rendering: ASCII tables, CSV, and JSON for every experiment.
+//!
+//! Each bench driver builds a [`Table`]; the CLI renders it to stdout
+//! (ASCII), optionally writes `results/<name>.csv` and
+//! `results/<name>.json` so EXPERIMENTS.md numbers are regenerable.
+
+use crate::util::json::{self, Value};
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// A rendered experiment table.
+#[derive(Debug, Clone)]
+pub struct Table {
+    pub name: String,
+    pub title: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+    /// Free-form notes rendered under the table.
+    pub notes: Vec<String>,
+}
+
+impl Table {
+    pub fn new(name: &str, title: &str, columns: &[&str]) -> Self {
+        Table {
+            name: name.to_string(),
+            title: title.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            notes: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.columns.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn note(&mut self, n: impl Into<String>) {
+        self.notes.push(n.into());
+    }
+
+    /// Render as an aligned ASCII table.
+    pub fn ascii(&self) -> String {
+        let mut widths: Vec<usize> = self.columns.iter().map(|c| c.len()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "== {} ==", self.title);
+        let sep: String = widths
+            .iter()
+            .map(|w| "-".repeat(w + 2))
+            .collect::<Vec<_>>()
+            .join("+");
+        let fmt_row = |cells: &[String]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!(" {:<width$} ", c, width = widths[i]))
+                .collect::<Vec<_>>()
+                .join("|")
+        };
+        let _ = writeln!(out, "{}", fmt_row(&self.columns));
+        let _ = writeln!(out, "{sep}");
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", fmt_row(row));
+        }
+        for n in &self.notes {
+            let _ = writeln!(out, "  note: {n}");
+        }
+        out
+    }
+
+    /// Render as CSV (RFC-4180 quoting for commas/quotes).
+    pub fn csv(&self) -> String {
+        let esc = |s: &str| -> String {
+            if s.contains(',') || s.contains('"') || s.contains('\n') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "{}",
+            self.columns.iter().map(|c| esc(c)).collect::<Vec<_>>().join(",")
+        );
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+        }
+        out
+    }
+
+    /// Render as a JSON document (array of row objects).
+    pub fn to_json(&self) -> Value {
+        let rows: Vec<Value> = self
+            .rows
+            .iter()
+            .map(|row| {
+                let map: BTreeMap<String, Value> = self
+                    .columns
+                    .iter()
+                    .zip(row)
+                    .map(|(c, v)| {
+                        let val = v
+                            .parse::<f64>()
+                            .map(Value::Num)
+                            .unwrap_or_else(|_| Value::Str(v.clone()));
+                        (c.clone(), val)
+                    })
+                    .collect();
+                Value::Obj(map)
+            })
+            .collect();
+        let mut top = BTreeMap::new();
+        top.insert("name".to_string(), Value::Str(self.name.clone()));
+        top.insert("title".to_string(), Value::Str(self.title.clone()));
+        top.insert("rows".to_string(), Value::Arr(rows));
+        top.insert(
+            "notes".to_string(),
+            Value::Arr(self.notes.iter().map(|n| Value::Str(n.clone())).collect()),
+        );
+        Value::Obj(top)
+    }
+
+    /// Write `<dir>/<name>.csv` and `<dir>/<name>.json`.
+    pub fn save(&self, dir: &Path) -> std::io::Result<()> {
+        std::fs::create_dir_all(dir)?;
+        std::fs::write(dir.join(format!("{}.csv", self.name)), self.csv())?;
+        std::fs::write(
+            dir.join(format!("{}.json", self.name)),
+            json::to_string_pretty(&self.to_json()),
+        )?;
+        Ok(())
+    }
+}
+
+/// Format helpers shared by the bench drivers.
+pub mod fmt {
+    /// Seconds with sensible precision.
+    pub fn secs(x: f64) -> String {
+        if x >= 100.0 {
+            format!("{x:.1}")
+        } else if x >= 1.0 {
+            format!("{x:.2}")
+        } else {
+            format!("{x:.3}")
+        }
+    }
+    /// Scientific notation for energy/carbon.
+    pub fn sci(x: f64) -> String {
+        format!("{x:.2e}")
+    }
+    /// Percent.
+    pub fn pct(x: f64) -> String {
+        format!("{:.1}%", x * 100.0)
+    }
+    /// Plain float, 2 decimals.
+    pub fn f2(x: f64) -> String {
+        format!("{x:.2}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Table {
+        let mut t = Table::new("test", "Test Table", &["a", "b"]);
+        t.row(vec!["1".into(), "hello".into()]);
+        t.row(vec!["2.5".into(), "with,comma".into()]);
+        t.note("a note");
+        t
+    }
+
+    #[test]
+    fn ascii_contains_everything() {
+        let s = sample().ascii();
+        assert!(s.contains("Test Table"));
+        assert!(s.contains("hello"));
+        assert!(s.contains("note: a note"));
+    }
+
+    #[test]
+    fn csv_quotes_commas() {
+        let s = sample().csv();
+        assert!(s.lines().nth(2).unwrap().contains("\"with,comma\""));
+    }
+
+    #[test]
+    fn json_roundtrips_numbers() {
+        let v = sample().to_json();
+        let rows = v.get("rows").unwrap().as_arr().unwrap();
+        assert_eq!(rows[0].get("a").unwrap().as_f64(), Some(1.0));
+        assert_eq!(rows[1].get("a").unwrap().as_f64(), Some(2.5));
+        assert_eq!(rows[1].get("b").unwrap().as_str(), Some("with,comma"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_mismatch_panics() {
+        let mut t = Table::new("x", "x", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn save_writes_files() {
+        let dir = std::env::temp_dir().join("verdant-report-test");
+        let _ = std::fs::remove_dir_all(&dir);
+        sample().save(&dir).unwrap();
+        assert!(dir.join("test.csv").exists());
+        assert!(dir.join("test.json").exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn fmt_helpers() {
+        assert_eq!(fmt::secs(123.456), "123.5");
+        assert_eq!(fmt::secs(3.39), "3.39");
+        assert_eq!(fmt::secs(0.26), "0.260");
+        assert_eq!(fmt::pct(0.85), "85.0%");
+    }
+}

@@ -1,0 +1,363 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and
+//! the Rust runtime.
+//!
+//! `artifacts/manifest.json` describes, per model variant: the weight
+//! sidecar (flat little-endian tensor dump + per-tensor offsets in
+//! cfg.param_layout() order), the model geometry, and the HLO entries
+//! (prefill/decode × batch size). This module parses and validates it;
+//! [`super::engine`] consumes it.
+
+use crate::util::json::{self, Value};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Manifest version this runtime understands (configs.MANIFEST_VERSION).
+pub const SUPPORTED_VERSION: u64 = 2;
+
+/// Tensor dtype in the weight sidecar.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I8,
+}
+
+impl Dtype {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "i8" => Ok(Dtype::I8),
+            _ => bail!("unknown dtype '{s}'"),
+        }
+    }
+    pub fn size_bytes(&self) -> usize {
+        match self {
+            Dtype::F32 => 4,
+            Dtype::I8 => 1,
+        }
+    }
+    pub fn element_type(&self) -> xla::ElementType {
+        match self {
+            Dtype::F32 => xla::ElementType::F32,
+            Dtype::I8 => xla::ElementType::S8,
+        }
+    }
+}
+
+/// One parameter tensor in the sidecar.
+#[derive(Debug, Clone)]
+pub struct ParamMeta {
+    pub name: String,
+    pub dtype: Dtype,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub bytes: usize,
+}
+
+/// Model geometry (mirrors python/compile/configs.ModelConfig).
+#[derive(Debug, Clone)]
+pub struct Geometry {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+}
+
+/// One lowered HLO entry.
+#[derive(Debug, Clone)]
+pub struct EntryMeta {
+    /// Path relative to the artifacts dir.
+    pub file: PathBuf,
+    /// "prefill", "decode" or "decode_chunk".
+    pub kind: String,
+    pub batch: usize,
+    /// Decode steps fused into this executable (1 for plain entries).
+    pub steps: usize,
+}
+
+/// One model variant.
+#[derive(Debug, Clone)]
+pub struct VariantMeta {
+    pub name: String,
+    pub weights_file: PathBuf,
+    pub weights_bytes: usize,
+    pub params: Vec<ParamMeta>,
+    pub geometry: Geometry,
+    /// Keyed "prefill_b4" / "decode_b8" style.
+    pub entries: BTreeMap<String, EntryMeta>,
+}
+
+impl VariantMeta {
+    /// Batch sizes with both prefill and decode entries present.
+    pub fn batch_sizes(&self) -> Vec<usize> {
+        let mut out: Vec<usize> = self
+            .entries
+            .values()
+            .filter(|e| e.kind == "prefill")
+            .map(|e| e.batch)
+            .filter(|b| self.entries.contains_key(&format!("decode_b{b}")))
+            .collect();
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+
+    pub fn entry(&self, kind: &str, batch: usize) -> Option<&EntryMeta> {
+        self.entries.get(&format!("{kind}_b{batch}"))
+    }
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub prefill_len: usize,
+    pub max_seq: usize,
+    pub vocab: usize,
+    pub eos_id: i32,
+    pub variants: BTreeMap<String, VariantMeta>,
+}
+
+impl Manifest {
+    /// Load + validate `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`?)", path.display()))?;
+        let v = json::parse(&text).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+        Self::from_value(dir, &v)
+    }
+
+    pub fn from_value(dir: &Path, v: &Value) -> Result<Self> {
+        let version = field_u64(v, "version")?;
+        if version != SUPPORTED_VERSION {
+            bail!("manifest version {version} unsupported (want {SUPPORTED_VERSION})");
+        }
+        let mut variants = BTreeMap::new();
+        let vmap = v
+            .get("variants")
+            .and_then(Value::as_obj)
+            .ok_or_else(|| anyhow!("manifest missing variants"))?;
+        for (name, vv) in vmap {
+            variants.insert(name.clone(), parse_variant(name, vv)?);
+        }
+        let m = Manifest {
+            dir: dir.to_path_buf(),
+            prefill_len: field_u64(v, "prefill_len")? as usize,
+            max_seq: field_u64(v, "max_seq")? as usize,
+            vocab: field_u64(v, "vocab")? as usize,
+            eos_id: field_u64(v, "eos_id")? as i32,
+            variants,
+        };
+        m.validate()?;
+        Ok(m)
+    }
+
+    /// Structural validation: offsets contiguous, sizes consistent,
+    /// every entry's file referenced.
+    pub fn validate(&self) -> Result<()> {
+        if self.prefill_len == 0 || self.max_seq < self.prefill_len {
+            bail!("bad geometry: prefill_len {} max_seq {}", self.prefill_len, self.max_seq);
+        }
+        for (name, var) in &self.variants {
+            let mut offset = 0usize;
+            for p in &var.params {
+                if p.offset != offset {
+                    bail!("{name}: param {} offset {} != expected {offset}", p.name, p.offset);
+                }
+                let count: usize = p.shape.iter().product();
+                if count * p.dtype.size_bytes() != p.bytes {
+                    bail!("{name}: param {} byte size mismatch", p.name);
+                }
+                offset += p.bytes;
+            }
+            if offset != var.weights_bytes {
+                bail!("{name}: weights_bytes {} != sum {offset}", var.weights_bytes);
+            }
+            if var.batch_sizes().is_empty() {
+                bail!("{name}: no complete (prefill, decode) entry pair");
+            }
+            if var.geometry.max_seq != self.max_seq {
+                bail!("{name}: variant max_seq differs from manifest");
+            }
+        }
+        Ok(())
+    }
+
+    /// Check referenced files exist on disk (separate from parse so unit
+    /// tests can validate structure without a full artifact tree).
+    pub fn check_files(&self) -> Result<()> {
+        for var in self.variants.values() {
+            let w = self.dir.join(&var.weights_file);
+            let meta = std::fs::metadata(&w)
+                .with_context(|| format!("missing weights {}", w.display()))?;
+            if meta.len() as usize != var.weights_bytes {
+                bail!("{}: size {} != manifest {}", w.display(), meta.len(), var.weights_bytes);
+            }
+            for e in var.entries.values() {
+                let p = self.dir.join(&e.file);
+                if !p.exists() {
+                    bail!("missing HLO artifact {}", p.display());
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+fn field_u64(v: &Value, key: &str) -> Result<u64> {
+    v.get(key)
+        .and_then(Value::as_u64)
+        .ok_or_else(|| anyhow!("manifest missing numeric field '{key}'"))
+}
+
+fn parse_variant(name: &str, v: &Value) -> Result<VariantMeta> {
+    let params = v
+        .get("params")
+        .and_then(Value::as_arr)
+        .ok_or_else(|| anyhow!("{name}: missing params"))?
+        .iter()
+        .map(|p| {
+            Ok(ParamMeta {
+                name: p
+                    .get("name")
+                    .and_then(Value::as_str)
+                    .ok_or_else(|| anyhow!("param missing name"))?
+                    .to_string(),
+                dtype: Dtype::parse(p.get("dtype").and_then(Value::as_str).unwrap_or(""))?,
+                shape: p
+                    .get("shape")
+                    .and_then(Value::as_arr)
+                    .ok_or_else(|| anyhow!("param missing shape"))?
+                    .iter()
+                    .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad shape dim")))
+                    .collect::<Result<Vec<_>>>()?,
+                offset: p.get("offset").and_then(Value::as_usize).unwrap_or(usize::MAX),
+                bytes: p.get("bytes").and_then(Value::as_usize).unwrap_or(0),
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+
+    let g = v.get("config").ok_or_else(|| anyhow!("{name}: missing config"))?;
+    let geometry = Geometry {
+        vocab: field_u64(g, "vocab")? as usize,
+        d_model: field_u64(g, "d_model")? as usize,
+        n_layers: field_u64(g, "n_layers")? as usize,
+        n_heads: field_u64(g, "n_heads")? as usize,
+        n_kv_heads: field_u64(g, "n_kv_heads")? as usize,
+        head_dim: field_u64(g, "head_dim")? as usize,
+        d_ff: field_u64(g, "d_ff")? as usize,
+        max_seq: field_u64(g, "max_seq")? as usize,
+    };
+
+    let mut entries = BTreeMap::new();
+    for (key, e) in v
+        .get("entries")
+        .and_then(Value::as_obj)
+        .ok_or_else(|| anyhow!("{name}: missing entries"))?
+    {
+        entries.insert(
+            key.clone(),
+            EntryMeta {
+                file: PathBuf::from(
+                    e.get("file")
+                        .and_then(Value::as_str)
+                        .ok_or_else(|| anyhow!("entry missing file"))?,
+                ),
+                kind: e.get("kind").and_then(Value::as_str).unwrap_or("").to_string(),
+                batch: e
+                    .get("batch")
+                    .and_then(Value::as_usize)
+                    .ok_or_else(|| anyhow!("entry missing batch"))?,
+                steps: e.get("steps").and_then(Value::as_usize).unwrap_or(1),
+            },
+        );
+    }
+
+    Ok(VariantMeta {
+        name: name.to_string(),
+        weights_file: PathBuf::from(
+            v.get("weights_file")
+                .and_then(Value::as_str)
+                .ok_or_else(|| anyhow!("{name}: missing weights_file"))?,
+        ),
+        weights_bytes: v
+            .get("weights_bytes")
+            .and_then(Value::as_usize)
+            .ok_or_else(|| anyhow!("{name}: missing weights_bytes"))?,
+        params,
+        geometry,
+        entries,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn loads_real_manifest_when_built() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.variants.contains_key("edge-1b-sim"));
+        assert!(m.variants.contains_key("edge-12b-sim"));
+        m.check_files().unwrap();
+        let v = &m.variants["edge-1b-sim"];
+        assert_eq!(v.batch_sizes(), vec![1, 4, 8]);
+        assert!(v.entry("prefill", 4).is_some());
+        assert!(v.entry("decode", 16).is_none());
+        // param layout sanity: embed first, ln_final last
+        assert_eq!(v.params.first().unwrap().name, "embed");
+        assert_eq!(v.params.last().unwrap().name, "ln_final");
+    }
+
+    #[test]
+    fn rejects_wrong_version() {
+        let v = json::parse(r#"{"version": 99, "variants": {}}"#).unwrap();
+        assert!(Manifest::from_value(Path::new("/tmp"), &v).is_err());
+    }
+
+    #[test]
+    fn rejects_gapped_offsets() {
+        let doc = r#"{
+          "version": 2, "prefill_len": 4, "max_seq": 8, "vocab": 16, "eos_id": 0,
+          "variants": {
+            "x": {
+              "weights_file": "x.bin", "weights_bytes": 8,
+              "params": [
+                {"name": "a", "dtype": "f32", "shape": [1], "offset": 0, "bytes": 4},
+                {"name": "b", "dtype": "f32", "shape": [1], "offset": 5, "bytes": 4}
+              ],
+              "config": {"vocab":16,"d_model":4,"n_layers":1,"n_heads":1,
+                         "n_kv_heads":1,"head_dim":4,"d_ff":4,"max_seq":8},
+              "entries": {
+                "prefill_b1": {"file": "x/p.hlo.txt", "kind": "prefill", "batch": 1},
+                "decode_b1": {"file": "x/d.hlo.txt", "kind": "decode", "batch": 1}
+              }
+            }
+          }
+        }"#;
+        let v = json::parse(doc).unwrap();
+        let err = Manifest::from_value(Path::new("/tmp"), &v).unwrap_err();
+        assert!(err.to_string().contains("offset"), "{err}");
+    }
+
+    #[test]
+    fn dtype_parse_and_sizes() {
+        assert_eq!(Dtype::parse("f32").unwrap().size_bytes(), 4);
+        assert_eq!(Dtype::parse("i8").unwrap().size_bytes(), 1);
+        assert!(Dtype::parse("f64").is_err());
+    }
+}

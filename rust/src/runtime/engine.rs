@@ -1,0 +1,247 @@
+//! PJRT execution engine: load HLO artifacts, hold weights, execute.
+//!
+//! The AOT bridge (see /opt/xla-example and DESIGN.md): HLO **text** is
+//! parsed by `HloModuleProto::from_text_file`, compiled on the PJRT CPU
+//! client, and executed with weight literals (loaded once from the
+//! sidecar) followed by the activation literals. Outputs arrive as a
+//! single tuple buffer (we lower with return_tuple=True) and are
+//! decomposed on host.
+//!
+//! Compilation is cached per (variant, kind, batch); weight literals are
+//! shared across entries of a variant.
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+use super::artifacts::{Manifest, VariantMeta};
+
+/// A compiled (variant, kind, batch) executable.
+struct CompiledEntry {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// Weights + compiled entries for one variant.
+///
+/// Weights stay as host literals passed to every execute() call. The
+/// §Perf pass tried device-resident PjRtBuffers + execute_b (upload
+/// once, reuse across steps); the xla 0.1.6 C wrapper segfaults when
+/// input buffers are reused across executions (the PJRT CPU client
+/// consumes them), and outputs always arrive as ONE tuple buffer even
+/// with return_tuple=False, so zero-copy KV chaining is impossible at
+/// this wrapper version. Documented in EXPERIMENTS.md §Perf.
+pub struct VariantRuntime {
+    pub meta: VariantMeta,
+    weights: Vec<xla::Literal>,
+    compiled: HashMap<(String, usize), CompiledEntry>,
+}
+
+impl VariantRuntime {
+    /// Number of weight parameters (leading execute() arguments).
+    pub fn n_params(&self) -> usize {
+        self.weights.len()
+    }
+}
+
+/// The engine: one PJRT CPU client + loaded variants.
+pub struct Engine {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    variants: HashMap<String, VariantRuntime>,
+}
+
+impl Engine {
+    /// Create with a CPU PJRT client and parse the manifest (no
+    /// compilation yet — entries compile lazily or via `warmup`).
+    pub fn load(artifacts_dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        manifest.check_files()?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Engine { client, manifest, variants: HashMap::new() })
+    }
+
+    /// CPU platform string (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Ensure a variant's weights are loaded.
+    pub fn load_variant(&mut self, name: &str) -> Result<()> {
+        if self.variants.contains_key(name) {
+            return Ok(());
+        }
+        let meta = self
+            .manifest
+            .variants
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown variant '{name}'"))?
+            .clone();
+        let weights = load_weights(&self.manifest.dir, &meta)?;
+        self.variants
+            .insert(name.to_string(), VariantRuntime { meta, weights, compiled: HashMap::new() });
+        Ok(())
+    }
+
+    /// Compile (and cache) one entry.
+    pub fn compile_entry(&mut self, variant: &str, kind: &str, batch: usize) -> Result<()> {
+        self.load_variant(variant)?;
+        let vr = self.variants.get_mut(variant).unwrap();
+        let key = (kind.to_string(), batch);
+        if vr.compiled.contains_key(&key) {
+            return Ok(());
+        }
+        let entry = vr
+            .meta
+            .entry(kind, batch)
+            .ok_or_else(|| anyhow!("{variant}: no {kind} entry for batch {batch}"))?;
+        let path = self.manifest.dir.join(&entry.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e:?}", path.display()))?;
+        vr.compiled.insert(key, CompiledEntry { exe });
+        Ok(())
+    }
+
+    /// Compile every entry of a variant for the given batch sizes
+    /// (the fused decode_chunk entry too, when the manifest has one).
+    pub fn warmup(&mut self, variant: &str, batches: &[usize]) -> Result<()> {
+        for &b in batches {
+            self.compile_entry(variant, "prefill", b)?;
+            self.compile_entry(variant, "decode", b)?;
+            let has_chunk = self
+                .manifest
+                .variants
+                .get(variant)
+                .is_some_and(|m| m.entry("decode_chunk", b).is_some());
+            if has_chunk {
+                self.compile_entry(variant, "decode_chunk", b)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Fused decode steps available for (variant, batch), if the chunked
+    /// entry exists AND is compiled.
+    pub fn chunk_steps(&self, variant: &str, batch: usize) -> Option<usize> {
+        let vr = self.variants.get(variant)?;
+        if !vr.compiled.contains_key(&("decode_chunk".to_string(), batch)) {
+            return None;
+        }
+        vr.meta.entry("decode_chunk", batch).map(|e| e.steps)
+    }
+
+    pub fn variant(&self, name: &str) -> Option<&VariantRuntime> {
+        self.variants.get(name)
+    }
+
+    /// Execute an entry: weights ++ activations -> decomposed outputs.
+    ///
+    /// `activations` are the trailing arguments in lowering order
+    /// (prefill: tokens, lens; decode: token, pos, kv_k, kv_v).
+    pub fn execute(
+        &self,
+        variant: &str,
+        kind: &str,
+        batch: usize,
+        activations: &[xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let vr = self
+            .variants
+            .get(variant)
+            .ok_or_else(|| anyhow!("variant '{variant}' not loaded"))?;
+        let entry = vr
+            .compiled
+            .get(&(kind.to_string(), batch))
+            .ok_or_else(|| anyhow!("{variant}/{kind}_b{batch} not compiled"))?;
+
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(vr.weights.len() + activations.len());
+        args.extend(vr.weights.iter());
+        args.extend(activations.iter());
+
+        let result = entry
+            .exe
+            .execute::<&xla::Literal>(&args)
+            .map_err(|e| anyhow!("execute {variant}/{kind}_b{batch}: {e:?}"))?;
+        let tuple = result
+            .first()
+            .and_then(|r| r.first())
+            .ok_or_else(|| anyhow!("empty execution result"))?
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        let mut tuple = tuple;
+        let parts = tuple.decompose_tuple().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        if parts.is_empty() {
+            bail!("expected tuple output, got scalar");
+        }
+        Ok(parts)
+    }
+}
+
+/// Load the weight sidecar into literals (layout order).
+fn load_weights(dir: &Path, meta: &VariantMeta) -> Result<Vec<xla::Literal>> {
+    let path = dir.join(&meta.weights_file);
+    let blob = std::fs::read(&path)
+        .with_context(|| format!("reading weights {}", path.display()))?;
+    if blob.len() != meta.weights_bytes {
+        bail!("{}: {} bytes on disk, manifest says {}", path.display(), blob.len(), meta.weights_bytes);
+    }
+    meta.params
+        .iter()
+        .map(|p| {
+            let raw = &blob[p.offset..p.offset + p.bytes];
+            let lit = xla::Literal::create_from_shape_and_untyped_data(
+                p.dtype.element_type(),
+                &p.shape,
+                raw,
+            )
+            .map_err(|e| anyhow!("literal {}: {e:?}", p.name))?;
+            Ok(lit)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn artifacts_dir() -> PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        artifacts_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn engine_loads_and_compiles_b1() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let mut e = Engine::load(&artifacts_dir()).unwrap();
+        assert!(e.platform().to_lowercase().contains("cpu") || !e.platform().is_empty());
+        e.compile_entry("edge-1b-sim", "prefill", 1).unwrap();
+        e.compile_entry("edge-1b-sim", "decode", 1).unwrap();
+        let vr = e.variant("edge-1b-sim").unwrap();
+        assert_eq!(vr.n_params(), vr.meta.params.len());
+    }
+
+    #[test]
+    fn unknown_variant_and_entry_errors() {
+        if !have_artifacts() {
+            return;
+        }
+        let mut e = Engine::load(&artifacts_dir()).unwrap();
+        assert!(e.load_variant("nope").is_err());
+        assert!(e.compile_entry("edge-1b-sim", "prefill", 3).is_err());
+        let acts: Vec<xla::Literal> = vec![];
+        assert!(e.execute("edge-1b-sim", "prefill", 1, &acts).is_err()); // not compiled
+    }
+}

@@ -1,0 +1,17 @@
+//! PJRT runtime: load AOT artifacts, execute real inference from Rust.
+//!
+//! The request-path half of the AOT bridge (Python authored + lowered the
+//! models once; see python/compile/aot.py):
+//!
+//! - [`artifacts`] — manifest parsing/validation (the aot.py contract);
+//! - [`engine`] — PJRT CPU client, weight literals, compiled executables;
+//! - [`session`] — the prefill → greedy-decode loop with the KV cache
+//!   threaded between executions.
+
+pub mod artifacts;
+pub mod engine;
+pub mod session;
+
+pub use artifacts::Manifest;
+pub use engine::Engine;
+pub use session::{generate, GenerationOutput};

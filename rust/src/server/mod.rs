@@ -1,0 +1,13 @@
+//! Serving loop: threads + channels (tokio is unavailable offline; a
+//! thread-per-device worker pool is the natural shape here anyway —
+//! PJRT clients are not `Send`, so each worker owns its own engine).
+//!
+//! [`service`] implements the real-time loop used by the examples: an
+//! ingest thread replays the arrival trace on the wallclock, a router
+//! assigns devices on arrival, per-device workers pull batches (size- or
+//! timeout-triggered — the dynamic batcher) and execute them through
+//! their own PJRT engine, and a collector aggregates latency/throughput.
+
+pub mod service;
+
+pub use service::{serve, ServeOptions, ServeReport};

@@ -1,0 +1,352 @@
+//! The real-time serving service.
+//!
+//! Wiring:
+//!
+//! ```text
+//!  ingest thread ──(mpsc)──► per-device queues ──► worker threads
+//!   (replays the arrival                            (own PJRT engine,
+//!    trace on wallclock,                             dynamic batching:
+//!    routes on arrival)                              full batch OR timeout)
+//!                                         completions ──(mpsc)──► collector
+//! ```
+//!
+//! Routing happens *on arrival* (unlike the closed-loop scheduler, which
+//! sees the whole corpus): the strategy is consulted per prompt with the
+//! same BenchmarkDb. Latency-aware degenerates to
+//! earliest-finish-estimate placement using live queue depths, which is
+//! exactly the paper's greedy heuristic applied online.
+
+use anyhow::{anyhow, Result};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::cluster::Cluster;
+use crate::coordinator::estimator::BenchmarkDb;
+use crate::runtime::Engine;
+use crate::util::stats::{Histogram, Summary};
+use crate::workload::Prompt;
+
+/// Serving parameters.
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    pub batch_size: usize,
+    pub batch_timeout: Duration,
+    pub max_new_tokens: usize,
+    /// Artifacts directory (each worker loads its own engine from it).
+    pub artifacts_dir: std::path::PathBuf,
+    /// Compress the arrival trace by this factor (virtual seconds of
+    /// trace per wallclock second); keeps demos fast.
+    pub time_scale: f64,
+    /// Strategy name for on-arrival routing ("latency-aware",
+    /// "carbon-aware", "round-robin", "all-on-<dev>").
+    pub strategy: String,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions {
+            batch_size: 4,
+            batch_timeout: Duration::from_millis(150),
+            max_new_tokens: 16,
+            artifacts_dir: std::path::PathBuf::from("artifacts"),
+            time_scale: 50.0,
+            strategy: "latency-aware".into(),
+        }
+    }
+}
+
+/// Aggregated serving report.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    pub completed: usize,
+    pub wallclock_s: f64,
+    pub requests_per_s: f64,
+    pub output_tokens: usize,
+    pub tokens_per_s: f64,
+    pub latency_mean_s: f64,
+    pub latency_p50_s: f64,
+    pub latency_p95_s: f64,
+    pub batches: usize,
+    pub mean_batch_fill: f64,
+    /// Requests served per device name.
+    pub per_device: Vec<(String, usize)>,
+}
+
+struct QueueItem {
+    prompt: Prompt,
+    enqueued: Instant,
+}
+
+/// A per-device work queue with condvar signalling.
+struct DeviceQueue {
+    items: Mutex<VecDeque<QueueItem>>,
+    signal: Condvar,
+    /// Estimated backlog seconds (for online latency-aware placement).
+    backlog_ms: AtomicUsize,
+}
+
+impl DeviceQueue {
+    fn new() -> Self {
+        DeviceQueue {
+            items: Mutex::new(VecDeque::new()),
+            signal: Condvar::new(),
+            backlog_ms: AtomicUsize::new(0),
+        }
+    }
+
+    fn push(&self, item: QueueItem, est_ms: usize) {
+        self.backlog_ms.fetch_add(est_ms, Ordering::Relaxed);
+        self.items.lock().unwrap().push_back(item);
+        self.signal.notify_one();
+    }
+
+    /// Pull up to `max` items: returns once `max` are available OR the
+    /// timeout elapses with at least one item (dynamic batching rule).
+    fn pull_batch(&self, max: usize, timeout: Duration, done: &AtomicBool) -> Vec<QueueItem> {
+        let mut guard = self.items.lock().unwrap();
+        let deadline = Instant::now() + timeout;
+        loop {
+            if guard.len() >= max {
+                break;
+            }
+            if done.load(Ordering::Acquire) && !guard.is_empty() {
+                break;
+            }
+            if done.load(Ordering::Acquire) && guard.is_empty() {
+                return Vec::new();
+            }
+            let wait = if guard.is_empty() {
+                // nothing yet: wait for the first item (bounded poll so
+                // shutdown is observed)
+                Duration::from_millis(20)
+            } else {
+                match deadline.checked_duration_since(Instant::now()) {
+                    Some(d) if !d.is_zero() => d.min(Duration::from_millis(20)),
+                    _ => break, // timeout with >= 1 item -> fire the batch
+                }
+            };
+            let (g, _) = self.signal.wait_timeout(guard, wait).unwrap();
+            guard = g;
+        }
+        let n = guard.len().min(max);
+        guard.drain(..n).collect()
+    }
+}
+
+struct Completion {
+    device: usize,
+    latency_s: f64,
+    output_tokens: usize,
+    batch_fill: usize,
+}
+
+/// Serve a corpus end-to-end and report latency/throughput.
+///
+/// Real PJRT inference on every batch; each worker thread owns its own
+/// engine (PJRT clients are not Send). The arrival trace is replayed at
+/// `time_scale`× speed.
+pub fn serve(cluster: &Cluster, prompts: &[Prompt], opts: &ServeOptions) -> Result<ServeReport> {
+    let n_dev = cluster.devices.len();
+    if n_dev == 0 || prompts.is_empty() {
+        return Err(anyhow!("nothing to serve"));
+    }
+    let db = BenchmarkDb::build(cluster, &[1, 4, 8], 2, 69.0, 7);
+
+    let queues: Arc<Vec<DeviceQueue>> =
+        Arc::new((0..n_dev).map(|_| DeviceQueue::new()).collect());
+    let done = Arc::new(AtomicBool::new(false));
+    let (tx, rx) = mpsc::channel::<Completion>();
+
+    let started = Instant::now();
+
+    // --- workers ------------------------------------------------------
+    let mut workers = Vec::new();
+    for d in 0..n_dev {
+        let dev = cluster.devices[d].clone();
+        let queues = Arc::clone(&queues);
+        let done = Arc::clone(&done);
+        let tx = tx.clone();
+        let opts = opts.clone();
+        workers.push(std::thread::spawn(move || -> Result<()> {
+            let mut engine = Engine::load(&opts.artifacts_dir)?;
+            let batches: Vec<usize> = engine
+                .manifest
+                .variants
+                .get(&dev.model)
+                .map(|m| m.batch_sizes())
+                .unwrap_or_default();
+            engine.warmup(&dev.model, &batches)?;
+            loop {
+                let items =
+                    queues[d].pull_batch(opts.batch_size, opts.batch_timeout, &done);
+                if items.is_empty() {
+                    return Ok(());
+                }
+                let texts: Vec<String> =
+                    items.iter().map(|i| i.prompt.text.clone()).collect();
+                let exec_batch = batches
+                    .iter()
+                    .copied()
+                    .find(|&b| b >= texts.len())
+                    .ok_or_else(|| anyhow!("no compiled batch"))?;
+                let out =
+                    crate::runtime::generate(&engine, &dev.model, exec_batch, &texts, opts.max_new_tokens)?;
+                for (i, item) in items.iter().enumerate() {
+                    let _ = tx.send(Completion {
+                        device: d,
+                        latency_s: item.enqueued.elapsed().as_secs_f64(),
+                        output_tokens: out.tokens[i].len(),
+                        batch_fill: items.len(),
+                    });
+                }
+            }
+        }));
+    }
+    drop(tx);
+
+    // --- ingest (this thread) -----------------------------------------
+    for p in prompts {
+        let due = p.arrival_s / opts.time_scale;
+        let elapsed = started.elapsed().as_secs_f64();
+        if due > elapsed {
+            std::thread::sleep(Duration::from_secs_f64(due - elapsed));
+        }
+        let d = route_online(&cluster, &db, &queues, p, opts);
+        let est = db.cost(&cluster.devices[d], p, opts.batch_size).e2e_s;
+        queues[d].push(QueueItem { prompt: p.clone(), enqueued: Instant::now() }, (est * 1000.0) as usize);
+    }
+    done.store(true, Ordering::Release);
+
+    // --- collect --------------------------------------------------------
+    let mut latency = Summary::new();
+    let mut hist = Histogram::latency();
+    let mut tokens = 0usize;
+    let mut per_device = vec![0usize; n_dev];
+    let mut fills = Summary::new();
+    let mut completed = 0usize;
+    for c in rx {
+        completed += 1;
+        latency.add(c.latency_s);
+        hist.add(c.latency_s);
+        tokens += c.output_tokens;
+        per_device[c.device] += 1;
+        fills.add(c.batch_fill as f64);
+    }
+    for w in workers {
+        w.join().map_err(|_| anyhow!("worker panicked"))??;
+    }
+    let wallclock = started.elapsed().as_secs_f64();
+    let batches = (completed as f64 / fills.mean().max(1.0)).round() as usize;
+
+    Ok(ServeReport {
+        completed,
+        wallclock_s: wallclock,
+        requests_per_s: completed as f64 / wallclock.max(1e-9),
+        output_tokens: tokens,
+        tokens_per_s: tokens as f64 / wallclock.max(1e-9),
+        latency_mean_s: latency.mean(),
+        latency_p50_s: hist.p50(),
+        latency_p95_s: hist.p95(),
+        batches,
+        mean_batch_fill: fills.mean(),
+        per_device: cluster
+            .devices
+            .iter()
+            .zip(&per_device)
+            .map(|(d, &c)| (d.name.clone(), c))
+            .collect(),
+    })
+}
+
+/// On-arrival routing: strategy semantics applied to a single prompt
+/// with live queue backlog.
+fn route_online(
+    cluster: &Cluster,
+    db: &BenchmarkDb,
+    queues: &[DeviceQueue],
+    p: &Prompt,
+    opts: &ServeOptions,
+) -> usize {
+    let n = cluster.devices.len();
+    if let Some(dev) = opts.strategy.strip_prefix("all-on-") {
+        return cluster.device_index(dev).unwrap_or(0);
+    }
+    match opts.strategy.as_str() {
+        "carbon-aware" => (0..n)
+            .min_by(|&a, &b| {
+                let ca = db.cost(&cluster.devices[a], p, opts.batch_size).carbon_kg;
+                let cb = db.cost(&cluster.devices[b], p, opts.batch_size).carbon_kg;
+                ca.partial_cmp(&cb).unwrap()
+            })
+            .unwrap_or(0),
+        "round-robin" => (p.id as usize) % n,
+        // latency-aware (default): earliest projected finish = backlog +
+        // this prompt's estimated cost
+        _ => (0..n)
+            .min_by(|&a, &b| {
+                let fa = queues[a].backlog_ms.load(Ordering::Relaxed) as f64 / 1000.0
+                    + db.cost(&cluster.devices[a], p, opts.batch_size).e2e_s;
+                let fb = queues[b].backlog_ms.load(Ordering::Relaxed) as f64 / 1000.0
+                    + db.cost(&cluster.devices[b], p, opts.batch_size).e2e_s;
+                fa.partial_cmp(&fb).unwrap()
+            })
+            .unwrap_or(0),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicBool;
+
+    #[test]
+    fn queue_batches_by_size() {
+        let q = DeviceQueue::new();
+        let done = AtomicBool::new(false);
+        for i in 0..4 {
+            q.push(
+                QueueItem {
+                    prompt: crate::workload::canonical::P4.to_prompt(i),
+                    enqueued: Instant::now(),
+                },
+                1,
+            );
+        }
+        let batch = q.pull_batch(4, Duration::from_secs(5), &done);
+        assert_eq!(batch.len(), 4);
+    }
+
+    #[test]
+    fn queue_fires_partial_batch_on_timeout() {
+        let q = DeviceQueue::new();
+        let done = AtomicBool::new(false);
+        q.push(
+            QueueItem {
+                prompt: crate::workload::canonical::P3.to_prompt(0),
+                enqueued: Instant::now(),
+            },
+            1,
+        );
+        let t0 = Instant::now();
+        let batch = q.pull_batch(8, Duration::from_millis(60), &done);
+        assert_eq!(batch.len(), 1);
+        assert!(t0.elapsed() >= Duration::from_millis(55));
+    }
+
+    #[test]
+    fn queue_drains_on_shutdown() {
+        let q = DeviceQueue::new();
+        let done = AtomicBool::new(true);
+        assert!(q.pull_batch(4, Duration::from_millis(50), &done).is_empty());
+        q.push(
+            QueueItem {
+                prompt: crate::workload::canonical::P3.to_prompt(0),
+                enqueued: Instant::now(),
+            },
+            1,
+        );
+        assert_eq!(q.pull_batch(4, Duration::from_millis(50), &done).len(), 1);
+    }
+}

@@ -1,0 +1,267 @@
+//! Calibration anchors fitted to the paper's Table 2 measurements.
+//!
+//! The paper's entire methodology is "benchmarking-driven": it measures
+//! TTFT/TPOT/E2E/energy per (device, batch) on its physical testbed and
+//! routes prompts using those measurements. We do not have the hardware
+//! (repro band 0/5), so this module *is* the substitute testbed: every
+//! anchor below is back-derived from Table 2 of the paper, and both the
+//! simulator (ground truth) and the router's cost estimator (what the
+//! paper calls "benchmarking information") read from here.
+//!
+//! Derivations (Table 2, per-prompt averages):
+//!
+//! | device | b | TTFT | TPOT  | E2E   | tok  | kWh      | avg W            |
+//! |--------|---|------|-------|-------|------|----------|------------------|
+//! | Jetson | 1 | 0.36 | 0.061 | 13.06 | 148  | 1.79e-5  | 64.4 J/13.06=4.9 |
+//! | Jetson | 4 | 1.13 | 0.063 | 15.08 | 149  | 4.89e-6  | 70.4 J/15.08=4.7 |
+//! | Jetson | 8 | 4.87 | 0.057 | 14.12 | 136  | 5.12e-6  | 147 J/14.12=10.4 |
+//! | Ada    | 1 | 0.26 | 0.030 |  3.39 | 69.6 | 6.35e-5  | 229 J/3.39 =67.4 |
+//! | Ada    | 4 | 12.07| 0.020 | 14.58 | 56.8 | 5.05e-5  | 727 J/14.58=49.9 |
+//! | Ada    | 8 | 24.00| 0.030 | 26.82 | 64.0 | 5.73e-5  | 1650 J/26.8=61.5 |
+//!
+//! Carbon/energy ratios are constant at ≈69 gCO2e/kWh on both devices
+//! (the Austrian grid), which fixes the cluster's carbon intensity.
+//!
+//! TTFT grows superlinearly with batch because the paper's Ollama stack
+//! serializes prefill across batch members; we keep that behaviour (it
+//! is what the routing strategies saw) and expose it as per-batch TTFT
+//! anchors scaled by relative prompt length.
+
+use crate::config::DeviceKind;
+
+/// Reference prompt length the Table-2 averages correspond to. The
+/// composite corpus averages ~150 prompt tokens; TTFT scales ∝ prompt
+/// tokens around this reference.
+pub const REF_PROMPT_TOKENS: f64 = 150.0;
+
+/// Reference output length per device (Table 2 token counts); decode
+/// time scales ∝ output tokens around these.
+pub const REF_OUTPUT_TOKENS_JETSON: f64 = 148.0;
+pub const REF_OUTPUT_TOKENS_ADA: f64 = 69.6;
+
+/// Latency calibration for one device kind.
+#[derive(Debug, Clone)]
+pub struct LatencyCalibration {
+    /// (batch, seconds-to-first-token at REF_PROMPT_TOKENS) anchors.
+    pub ttft_anchors: Vec<(f64, f64)>,
+    /// (batch, seconds per output token) anchors.
+    pub tpot_anchors: Vec<(f64, f64)>,
+    /// (batch, seconds) anchors for the fixed per-batch dispatch/session
+    /// overhead (model wake, sampler setup, response assembly) — the
+    /// non-token-proportional residue of Table 2's E2E column. It is NOT
+    /// monotone in batch on the paper's testbed (Ollama reuses sessions
+    /// differently per batch size); we take the measurements as-is.
+    pub overhead_anchors: Vec<(f64, f64)>,
+    /// Dispatch floor inside TTFT (connection + queue pickup).
+    pub dispatch_s: f64,
+}
+
+/// Fraction of the TTFT anchor that scales with prompt length; the rest
+/// is fixed per-sequence session work (attention setup, cache alloc,
+/// sampler init) that the serialized-prefill stack pays regardless of
+/// length. Without this floor, homogeneous short-prompt benchmarks
+/// underestimate TTFT badly vs mixed traffic.
+pub const TTFT_LENGTH_FRACTION: f64 = 0.5;
+
+impl LatencyCalibration {
+    /// TTFT for a batch whose mean prompt length is `mean_prompt_tokens`.
+    pub fn ttft(&self, batch: usize, mean_prompt_tokens: f64) -> f64 {
+        let anchor = crate::util::interp(&self.ttft_anchors, batch as f64).max(self.dispatch_s);
+        let rel = mean_prompt_tokens / REF_PROMPT_TOKENS;
+        let scale = (1.0 - TTFT_LENGTH_FRACTION) + TTFT_LENGTH_FRACTION * rel;
+        (self.dispatch_s + (anchor - self.dispatch_s) * scale).max(1e-4)
+    }
+
+    /// Seconds per output token at this batch size.
+    pub fn tpot(&self, batch: usize) -> f64 {
+        crate::util::interp(&self.tpot_anchors, batch as f64).max(1e-4)
+    }
+
+    /// Fixed session overhead for this batch size (clamped: linear
+    /// extrapolation beyond the anchors must not go negative).
+    pub fn overhead(&self, batch: usize) -> f64 {
+        crate::util::interp(&self.overhead_anchors, batch as f64).max(0.25)
+    }
+}
+
+/// Saturation / instability calibration (the paper's batch-8 Jetson
+/// behaviour: "errors due to memory saturation", retries, degraded
+/// accuracy).
+#[derive(Debug, Clone)]
+pub struct SaturationCalibration {
+    /// Latency multiplier per unit of memory-saturation overshoot
+    /// (MemoryModel::saturation output).
+    pub latency_penalty_per_sat: f64,
+    /// Energy multiplier per unit of overshoot (thrashing costs joules).
+    pub energy_penalty_per_sat: f64,
+    /// Failure (OOM/retry) probability per unit of overshoot, clamped.
+    pub failure_prob_per_sat: f64,
+    /// Time lost to a failed attempt before the retry, seconds.
+    pub retry_penalty_s: f64,
+}
+
+/// Full calibration bundle for one device kind.
+#[derive(Debug, Clone)]
+pub struct DeviceCalibration {
+    pub latency: LatencyCalibration,
+    pub idle_w: f64,
+    /// (batch, average active watts) anchors.
+    pub power_anchors: Vec<(f64, f64)>,
+    pub saturation: SaturationCalibration,
+    /// Memory model parameters (paper-scale checkpoint):
+    pub weights_gb: f64,
+    pub kv_mb_per_token: f64,
+    pub activation_mb_per_seq: f64,
+    pub saturation_start: f64,
+    /// Typical output-token median for this device's model (Table 2) —
+    /// the 1B model rambles (~148 tokens), the 12B is terse (~70).
+    pub output_median_tokens: f64,
+}
+
+/// Calibration for a device kind, straight from the Table-2 derivation.
+pub fn for_kind(kind: DeviceKind) -> DeviceCalibration {
+    match kind {
+        DeviceKind::Jetson => DeviceCalibration {
+            latency: LatencyCalibration {
+                ttft_anchors: vec![(1.0, 0.36), (4.0, 1.13), (8.0, 4.87)],
+                tpot_anchors: vec![(1.0, 0.061), (4.0, 0.063), (8.0, 0.057)],
+                // E2E residue per batch: b1: 13.06-0.36-148*0.061 = 3.67;
+                // b4: 15.08-1.13-149*0.063 = 4.56; b8: 14.12-4.87-136*0.057
+                // = 1.50 (the Jetson's Ollama session cost is not monotone
+                // in batch — measured, taken as-is)
+                overhead_anchors: vec![(1.0, 3.67), (4.0, 4.56), (8.0, 1.50)],
+                dispatch_s: 0.05,
+            },
+            idle_w: 1.5,
+            power_anchors: vec![(1.0, 4.9), (4.0, 4.7), (8.0, 10.4)],
+            // The Table-2 power/overhead anchors already embed the
+            // *typical* batch-8 pressure; these penalties only price the
+            // overshoot beyond it (long-output batches, batch > 8).
+            saturation: SaturationCalibration {
+                latency_penalty_per_sat: 0.5,
+                energy_penalty_per_sat: 0.4,
+                failure_prob_per_sat: 0.30,
+                retry_penalty_s: 6.0,
+            },
+            weights_gb: 1.6,
+            kv_mb_per_token: 0.75,
+            activation_mb_per_seq: 450.0,
+            saturation_start: 0.85,
+            output_median_tokens: REF_OUTPUT_TOKENS_JETSON,
+        },
+        DeviceKind::Ada => DeviceCalibration {
+            latency: LatencyCalibration {
+                ttft_anchors: vec![(1.0, 0.26), (4.0, 12.07), (8.0, 24.0)],
+                tpot_anchors: vec![(1.0, 0.030), (4.0, 0.020), (8.0, 0.030)],
+                // b1: 3.39-0.26-69.6*0.03 = 1.04; b4: 14.58-12.07-
+                // 56.83*0.02 = 1.37; b8: 26.82-24.0-63.97*0.03 = 0.90
+                overhead_anchors: vec![(1.0, 1.04), (4.0, 1.37), (8.0, 0.90)],
+                dispatch_s: 0.05,
+            },
+            idle_w: 7.0,
+            power_anchors: vec![(1.0, 67.4), (4.0, 49.9), (8.0, 61.5)],
+            saturation: SaturationCalibration {
+                latency_penalty_per_sat: 0.3,
+                energy_penalty_per_sat: 0.3,
+                failure_prob_per_sat: 0.10,
+                retry_penalty_s: 4.0,
+            },
+            // Gemma-3-12B-qat ~ 8.1 GB resident on the 16 GB card
+            weights_gb: 8.9,
+            kv_mb_per_token: 0.55,
+            activation_mb_per_seq: 256.0,
+            saturation_start: 0.85,
+            output_median_tokens: REF_OUTPUT_TOKENS_ADA,
+        },
+        DeviceKind::Cloud => DeviceCalibration {
+            latency: LatencyCalibration {
+                // provider-side prefill is effectively instant at edge
+                // scale; TTFT dominated by dispatch + queueing
+                ttft_anchors: vec![(1.0, 0.9), (4.0, 1.1), (8.0, 1.3)],
+                // Gemini-Flash-class decode ~ 125 tok/s
+                tpot_anchors: vec![(1.0, 0.008), (4.0, 0.008), (8.0, 0.008)],
+                overhead_anchors: vec![(1.0, 0.55), (8.0, 0.55)],
+                dispatch_s: 0.35,
+            },
+            // Cloud power/carbon are the provider's; the paper does not
+            // report them (Fig. 2 covers edge models only). We attribute
+            // an effective marginal draw for completeness.
+            idle_w: 0.0,
+            power_anchors: vec![(1.0, 400.0), (8.0, 400.0)],
+            saturation: SaturationCalibration {
+                latency_penalty_per_sat: 0.0,
+                energy_penalty_per_sat: 0.0,
+                failure_prob_per_sat: 0.0,
+                retry_penalty_s: 0.0,
+            },
+            weights_gb: 0.0,
+            kv_mb_per_token: 0.0,
+            activation_mb_per_seq: 0.0,
+            saturation_start: 1.0,
+            output_median_tokens: 60.0,
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn jetson_anchors_reproduce_table2_e2e() {
+        let c = for_kind(DeviceKind::Jetson);
+        // b=1 at reference prompt/output: TTFT + tok*TPOT + overhead ≈ 13.06
+        let e2e = c.latency.ttft(1, REF_PROMPT_TOKENS)
+            + REF_OUTPUT_TOKENS_JETSON * c.latency.tpot(1)
+            + c.latency.overhead(1);
+        assert!((e2e - 13.06).abs() < 0.05, "e2e={e2e}");
+    }
+
+    #[test]
+    fn ada_anchors_reproduce_table2_e2e() {
+        let c = for_kind(DeviceKind::Ada);
+        let e2e = c.latency.ttft(1, REF_PROMPT_TOKENS)
+            + REF_OUTPUT_TOKENS_ADA * c.latency.tpot(1)
+            + c.latency.overhead(1);
+        assert!((e2e - 3.39).abs() < 0.05, "e2e={e2e}");
+    }
+
+    #[test]
+    fn ttft_scales_with_prompt_length() {
+        let c = for_kind(DeviceKind::Jetson);
+        let short = c.latency.ttft(1, 20.0);
+        let long = c.latency.ttft(1, 400.0);
+        // half the anchor is fixed per-sequence work, so 20x the prompt
+        // gives ~2.7x the TTFT
+        assert!(long > short * 2.0, "short={short} long={long}");
+    }
+
+    #[test]
+    fn ttft_grows_with_batch() {
+        for kind in [DeviceKind::Jetson, DeviceKind::Ada] {
+            let c = for_kind(kind);
+            let t1 = c.latency.ttft(1, REF_PROMPT_TOKENS);
+            let t4 = c.latency.ttft(4, REF_PROMPT_TOKENS);
+            let t8 = c.latency.ttft(8, REF_PROMPT_TOKENS);
+            assert!(t1 < t4 && t4 < t8, "{kind:?}: {t1} {t4} {t8}");
+        }
+    }
+
+    #[test]
+    fn jetson_cheaper_per_token_than_ada_in_energy() {
+        // The core sustainability asymmetry: Jetson ~5 W vs Ada ~60 W,
+        // TPOT only ~2x worse -> Jetson wins energy per token.
+        let j = for_kind(DeviceKind::Jetson);
+        let a = for_kind(DeviceKind::Ada);
+        let j_j_per_tok = j.power_anchors[0].1 * j.latency.tpot(1);
+        let a_j_per_tok = a.power_anchors[0].1 * a.latency.tpot(1);
+        assert!(j_j_per_tok < a_j_per_tok / 3.0);
+    }
+
+    #[test]
+    fn cloud_fast_decode_slow_dispatch() {
+        let c = for_kind(DeviceKind::Cloud);
+        assert!(c.latency.tpot(1) < 0.01);
+        assert!(c.latency.ttft(1, 10.0) > 0.3); // dispatch floor
+    }
+}

@@ -1,0 +1,175 @@
+//! Failure injection: memory-saturation instability (paper §3).
+//!
+//! The paper observes that batch 8 on the 8 GB Jetson "introduces
+//! instability and accuracy degradation ... errors due to memory
+//! saturation". We model it as an OOM/retry process driven by the
+//! memory model's saturation overshoot:
+//!
+//! - with probability `failure_prob_per_sat × saturation` an attempt
+//!   fails (clamped at 0.9);
+//! - each failed attempt costs `retry_penalty_s` wallclock (and the
+//!   corresponding active energy) before the retry;
+//! - a request that fails `MAX_ATTEMPTS` times is recorded as an error
+//!   (the paper's "accuracy degradation" shows up as our error rate).
+//!
+//! Two evaluation modes:
+//! - [`expected`] — deterministic expected-value penalties (used by the
+//!   table benches so rows replay exactly);
+//! - [`sample`] — stochastic injection from the experiment RNG (used by
+//!   failure-injection tests and the serving loop).
+
+use crate::cluster::DeviceProfile;
+use crate::util::rng::Rng;
+
+/// Retries after which the request is declared failed.
+pub const MAX_ATTEMPTS: usize = 3;
+/// Hard cap on per-attempt failure probability.
+pub const MAX_FAIL_PROB: f64 = 0.9;
+
+/// Result of failure evaluation for one batch attempt chain.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FailureOutcome {
+    /// Number of failed attempts before success (0 = clean).
+    pub retries: f64,
+    /// Extra wallclock spent on failed attempts, seconds.
+    pub extra_time_s: f64,
+    /// Probability-weighted count of requests that exhausted retries
+    /// (deterministic mode) or 0/1 (sampled mode), per batch.
+    pub errors: f64,
+}
+
+impl FailureOutcome {
+    pub const CLEAN: FailureOutcome =
+        FailureOutcome { retries: 0.0, extra_time_s: 0.0, errors: 0.0 };
+}
+
+/// Per-attempt failure probability for a device at a saturation level.
+pub fn fail_prob(dev: &DeviceProfile, saturation: f64) -> f64 {
+    (dev.saturation.failure_prob_per_sat * saturation).clamp(0.0, MAX_FAIL_PROB)
+}
+
+/// Deterministic expected-value outcome (geometric retry chain).
+pub fn expected(dev: &DeviceProfile, saturation: f64, batch_size: usize) -> FailureOutcome {
+    let p = fail_prob(dev, saturation);
+    if p <= 0.0 {
+        return FailureOutcome::CLEAN;
+    }
+    // expected failed attempts, capped at MAX_ATTEMPTS:
+    // E = Σ_{k=1..M} P(retries >= k) = Σ_{k=1..M} p^k
+    let mut retries = 0.0;
+    for k in 1..=MAX_ATTEMPTS {
+        retries += p.powi(k as i32);
+    }
+    let extra_time_s = retries * dev.saturation.retry_penalty_s;
+    // all MAX_ATTEMPTS fail -> error; errors counted per request in batch
+    let errors = p.powi(MAX_ATTEMPTS as i32) * batch_size as f64;
+    FailureOutcome { retries, extra_time_s, errors }
+}
+
+/// Stochastic outcome sampled from the experiment RNG.
+pub fn sample(dev: &DeviceProfile, saturation: f64, batch_size: usize, rng: &mut Rng) -> FailureOutcome {
+    let p = fail_prob(dev, saturation);
+    if p <= 0.0 {
+        return FailureOutcome::CLEAN;
+    }
+    let mut retries = 0.0;
+    let mut errors = 0.0;
+    for _ in 0..MAX_ATTEMPTS {
+        if !rng.chance(p) {
+            return FailureOutcome {
+                retries,
+                extra_time_s: retries * dev.saturation.retry_penalty_s,
+                errors,
+            };
+        }
+        retries += 1.0;
+    }
+    // exhausted: the whole batch attempt chain failed; count batch errors
+    errors += batch_size as f64;
+    FailureOutcome {
+        retries,
+        extra_time_s: retries * dev.saturation.retry_penalty_s,
+        errors,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::DeviceProfile;
+    use crate::util::check::property;
+
+    #[test]
+    fn zero_saturation_is_clean() {
+        let j = DeviceProfile::jetson();
+        assert_eq!(expected(&j, 0.0, 8), FailureOutcome::CLEAN);
+        let mut rng = Rng::new(1);
+        assert_eq!(sample(&j, 0.0, 8, &mut rng), FailureOutcome::CLEAN);
+    }
+
+    #[test]
+    fn expected_monotone_in_saturation() {
+        let j = DeviceProfile::jetson();
+        let low = expected(&j, 0.2, 8);
+        let high = expected(&j, 1.5, 8);
+        assert!(high.retries > low.retries);
+        assert!(high.extra_time_s > low.extra_time_s);
+        assert!(high.errors > low.errors);
+    }
+
+    #[test]
+    fn jetson_more_fragile_than_ada() {
+        let j = DeviceProfile::jetson();
+        let a = DeviceProfile::ada();
+        assert!(fail_prob(&j, 1.0) > fail_prob(&a, 1.0));
+    }
+
+    #[test]
+    fn prob_clamped() {
+        let j = DeviceProfile::jetson();
+        assert!(fail_prob(&j, 1e9) <= MAX_FAIL_PROB);
+    }
+
+    #[test]
+    fn sampled_mean_matches_expected() {
+        let j = DeviceProfile::jetson();
+        let sat = 1.0;
+        let exp = expected(&j, sat, 4);
+        let mut rng = Rng::new(99);
+        let n = 20_000;
+        let mut retries = 0.0;
+        let mut errors = 0.0;
+        for _ in 0..n {
+            let o = sample(&j, sat, 4, &mut rng);
+            retries += o.retries;
+            errors += o.errors;
+        }
+        let mean_retries = retries / n as f64;
+        let mean_errors = errors / n as f64;
+        assert!(
+            (mean_retries - exp.retries).abs() / exp.retries.max(1e-9) < 0.05,
+            "retries {mean_retries} vs {}",
+            exp.retries
+        );
+        assert!(
+            (mean_errors - exp.errors).abs() / exp.errors.max(1e-9) < 0.15,
+            "errors {mean_errors} vs {}",
+            exp.errors
+        );
+    }
+
+    #[test]
+    fn outcomes_always_nonnegative() {
+        property("failure outcomes nonnegative", 128, |rng| {
+            let dev = if rng.chance(0.5) { DeviceProfile::jetson() } else { DeviceProfile::ada() };
+            let sat = rng.range(0.0, 3.0);
+            let b = rng.below(8) + 1;
+            let o = sample(&dev, sat, b, rng);
+            if o.retries >= 0.0 && o.extra_time_s >= 0.0 && o.errors >= 0.0 {
+                Ok(())
+            } else {
+                Err(format!("{o:?}"))
+            }
+        });
+    }
+}

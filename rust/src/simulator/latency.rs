@@ -1,0 +1,253 @@
+//! Batch execution timing + energy on a calibrated device.
+//!
+//! Maps a batch's *work* (per-sequence prompt/output token counts) to
+//! the wallclock and energy the paper's hardware exhibits:
+//!
+//! ```text
+//! TTFT(B, p̄)   = dispatch + serialized-prefill anchor scaled by p̄
+//! decode        = max_i(out_i) · TPOT(B) · (1 + sat·latency_penalty)
+//! total         = TTFT + decode + overhead + failure retries
+//! energy        = activeW(B) · total · (1 + sat·energy_penalty)
+//! ```
+//!
+//! Saturation comes from the device memory model over the batch's
+//! longest (prompt+output) sequence; failures from [`super::failure`].
+//! With `rng = None` the failure chain is evaluated in expectation
+//! (deterministic, used by the table benches); with `Some(rng)` it is
+//! sampled (serving loop / failure-injection tests).
+
+use crate::cluster::DeviceProfile;
+use crate::util::rng::Rng;
+
+use super::failure::{self, FailureOutcome};
+
+/// The work content of one batch: per-sequence token counts.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BatchWork {
+    pub prompt_tokens: Vec<usize>,
+    pub output_tokens: Vec<usize>,
+}
+
+impl BatchWork {
+    pub fn new(prompt_tokens: Vec<usize>, output_tokens: Vec<usize>) -> Self {
+        assert_eq!(prompt_tokens.len(), output_tokens.len(), "ragged batch work");
+        assert!(!prompt_tokens.is_empty(), "empty batch");
+        BatchWork { prompt_tokens, output_tokens }
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.prompt_tokens.len()
+    }
+
+    pub fn mean_prompt_tokens(&self) -> f64 {
+        self.prompt_tokens.iter().sum::<usize>() as f64 / self.prompt_tokens.len() as f64
+    }
+
+    pub fn max_output_tokens(&self) -> usize {
+        self.output_tokens.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Longest total sequence (prompt + output) — the KV high-water mark.
+    pub fn max_seq_tokens(&self) -> usize {
+        self.prompt_tokens
+            .iter()
+            .zip(&self.output_tokens)
+            .map(|(p, o)| p + o)
+            .max()
+            .unwrap_or(0)
+    }
+
+    pub fn total_output_tokens(&self) -> usize {
+        self.output_tokens.iter().sum()
+    }
+}
+
+/// Simulated execution result for one batch.
+#[derive(Debug, Clone)]
+pub struct BatchTiming {
+    /// Time to first token (prefill completion), seconds.
+    pub ttft_s: f64,
+    /// Decode phase duration (longest sequence), seconds.
+    pub decode_s: f64,
+    /// End-to-end batch occupancy on the device, seconds (incl.
+    /// overhead and retry time).
+    pub total_s: f64,
+    /// Per-sequence completion offsets from batch start, seconds.
+    pub seq_done_s: Vec<f64>,
+    /// Memory saturation overshoot during this batch.
+    pub saturation: f64,
+    /// Active energy consumed, kWh (incl. saturation penalty).
+    pub energy_kwh: f64,
+    /// Failure-injection outcome.
+    pub failure: FailureOutcome,
+}
+
+impl BatchTiming {
+    /// Average seconds per output token across the batch (the paper's
+    /// TPOT metric as measured, incl. penalties).
+    pub fn measured_tpot(&self, work: &BatchWork) -> f64 {
+        let toks = work.max_output_tokens().max(1) as f64;
+        self.decode_s / toks
+    }
+
+    /// Batch throughput in output tokens/second (paper's Tokens/s).
+    pub fn throughput_tps(&self, work: &BatchWork) -> f64 {
+        work.total_output_tokens() as f64 / self.total_s.max(1e-9)
+    }
+}
+
+/// Simulate one batch on a device.
+pub fn simulate_batch(dev: &DeviceProfile, work: &BatchWork, rng: Option<&mut Rng>) -> BatchTiming {
+    let b = work.batch_size();
+    let sat = dev.memory.saturation(b, work.max_seq_tokens());
+
+    let ttft = dev.latency.ttft(b, work.mean_prompt_tokens());
+    let tpot = dev.latency.tpot(b);
+    let sat_latency = 1.0 + sat * dev.saturation.latency_penalty_per_sat;
+    let decode = work.max_output_tokens() as f64 * tpot * sat_latency;
+
+    let failure = match rng {
+        Some(r) => failure::sample(dev, sat, b, r),
+        None => failure::expected(dev, sat, b),
+    };
+
+    let overhead = dev.latency.overhead(b);
+    let total = ttft + decode + overhead + failure.extra_time_s;
+
+    // per-sequence completion: prefill completes for everyone at TTFT
+    // (serialized prefill, first tokens stream together), then each
+    // sequence finishes after its own decode run
+    let seq_done_s = work
+        .output_tokens
+        .iter()
+        .map(|&o| ttft + o as f64 * tpot * sat_latency + overhead)
+        .collect();
+
+    let sat_energy = 1.0 + sat * dev.saturation.energy_penalty_per_sat;
+    let energy_kwh = dev.power.active_energy_kwh(b, total) * sat_energy;
+
+    BatchTiming { ttft_s: ttft, decode_s: decode, total_s: total, seq_done_s, saturation: sat, energy_kwh, failure }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simulator::calibration::{
+        REF_OUTPUT_TOKENS_ADA, REF_OUTPUT_TOKENS_JETSON, REF_PROMPT_TOKENS,
+    };
+    use crate::util::check::{close, property};
+
+    fn ref_work(b: usize, prompt: f64, out: f64) -> BatchWork {
+        BatchWork::new(vec![prompt as usize; b], vec![out as usize; b])
+    }
+
+    #[test]
+    fn jetson_b1_reproduces_table2_row() {
+        let dev = crate::cluster::DeviceProfile::jetson();
+        let w = ref_work(1, REF_PROMPT_TOKENS, REF_OUTPUT_TOKENS_JETSON);
+        let t = simulate_batch(&dev, &w, None);
+        close(t.ttft_s, 0.36, 0.02).unwrap();
+        close(t.total_s, 13.06, 0.02).unwrap();
+        close(t.energy_kwh, 1.79e-5, 0.05).unwrap();
+        assert_eq!(t.failure, FailureOutcome::CLEAN);
+    }
+
+    #[test]
+    fn ada_b1_reproduces_table2_row() {
+        let dev = crate::cluster::DeviceProfile::ada();
+        let w = ref_work(1, REF_PROMPT_TOKENS, REF_OUTPUT_TOKENS_ADA);
+        let t = simulate_batch(&dev, &w, None);
+        close(t.ttft_s, 0.26, 0.02).unwrap();
+        close(t.total_s, 3.39, 0.02).unwrap();
+        close(t.energy_kwh, 6.35e-5, 0.05).unwrap();
+    }
+
+    #[test]
+    fn ada_b4_b8_ttft_growth() {
+        let dev = crate::cluster::DeviceProfile::ada();
+        let t4 = simulate_batch(&dev, &ref_work(4, REF_PROMPT_TOKENS, 57.0), None);
+        let t8 = simulate_batch(&dev, &ref_work(8, REF_PROMPT_TOKENS, 64.0), None);
+        close(t4.ttft_s, 12.07, 0.02).unwrap();
+        close(t8.ttft_s, 24.0, 0.02).unwrap();
+    }
+
+    #[test]
+    fn per_prompt_energy_falls_with_batching_on_jetson() {
+        // the paper's amortization effect (Table 2 energy column)
+        let dev = crate::cluster::DeviceProfile::jetson();
+        let e1 = simulate_batch(&dev, &ref_work(1, 150.0, 148.0), None).energy_kwh / 1.0;
+        let e4 = simulate_batch(&dev, &ref_work(4, 150.0, 148.0), None).energy_kwh / 4.0;
+        assert!(e4 < e1 * 0.5, "e1={e1} e4={e4}");
+    }
+
+    #[test]
+    fn jetson_batch8_long_outputs_saturate_and_fail() {
+        let dev = crate::cluster::DeviceProfile::jetson();
+        // 8 × (300 prompt + 700 output) ≈ 1000-token sequences
+        let w = ref_work(8, 300.0, 700.0);
+        let t = simulate_batch(&dev, &w, None);
+        assert!(t.saturation > 0.0, "sat={}", t.saturation);
+        assert!(t.failure.retries > 0.0);
+        assert!(t.failure.errors > 0.0);
+        // and the same work on the Ada is stable
+        let ada = crate::cluster::DeviceProfile::ada();
+        let ta = simulate_batch(&ada, &w, None);
+        assert!(ta.saturation < t.saturation);
+    }
+
+    #[test]
+    fn seq_done_bounded_by_total() {
+        property("per-seq completion <= batch total", 64, |rng| {
+            let dev = if rng.chance(0.5) {
+                crate::cluster::DeviceProfile::jetson()
+            } else {
+                crate::cluster::DeviceProfile::ada()
+            };
+            let b = rng.below(8) + 1;
+            let w = BatchWork::new(
+                (0..b).map(|_| rng.below(400) + 10).collect(),
+                (0..b).map(|_| rng.below(300) + 1).collect(),
+            );
+            let t = simulate_batch(&dev, &w, None);
+            for &d in &t.seq_done_s {
+                if d > t.total_s + 1e-9 {
+                    return Err(format!("seq done {d} > total {}", t.total_s));
+                }
+            }
+            if t.seq_done_s.iter().cloned().fold(f64::MIN, f64::max) > t.total_s + 1e-9 {
+                return Err("max seq beyond total".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn timing_positive_and_monotone_in_output() {
+        property("timing sane", 64, |rng| {
+            let dev = crate::cluster::DeviceProfile::ada();
+            let b = rng.below(8) + 1;
+            let p = rng.below(300) + 20;
+            let o1 = rng.below(100) + 1;
+            let o2 = o1 + rng.below(200) + 10;
+            let t1 = simulate_batch(&dev, &BatchWork::new(vec![p; b], vec![o1; b]), None);
+            let t2 = simulate_batch(&dev, &BatchWork::new(vec![p; b], vec![o2; b]), None);
+            if t1.total_s <= 0.0 || t1.energy_kwh <= 0.0 {
+                return Err("non-positive timing".into());
+            }
+            if t2.decode_s <= t1.decode_s {
+                return Err("decode not monotone in output tokens".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn measured_metrics_helpers() {
+        let dev = crate::cluster::DeviceProfile::ada();
+        let w = ref_work(2, 100.0, 50.0);
+        let t = simulate_batch(&dev, &w, None);
+        assert!(t.measured_tpot(&w) > 0.0);
+        let tps = t.throughput_tps(&w);
+        assert!((tps - 100.0 / t.total_s).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,22 @@
+//! Calibrated device simulator (the substitute testbed).
+//!
+//! The paper measures batches on physical Jetson/Ada devices; we do not
+//! have them (repro band 0/5), so this module maps *real work* — token
+//! counts produced by the PJRT runtime or sampled from the workload
+//! model — onto the wallclock, energy and failure behaviour those
+//! devices exhibit, using the Table-2 anchors in [`calibration`].
+//!
+//! - [`latency`] — batch execution timing (TTFT, decode, overhead,
+//!   saturation penalties) + energy integration;
+//! - [`failure`] — the Jetson batch-8 instability: OOM/retry injection
+//!   with latency/energy/accuracy consequences;
+//! - [`event`] — a deterministic discrete-event queue driving cluster
+//!   simulations (virtual clock, stable tie-breaking).
+
+pub mod calibration;
+pub mod event;
+pub mod failure;
+pub mod latency;
+
+pub use event::EventQueue;
+pub use latency::{simulate_batch, BatchTiming, BatchWork};

@@ -1,0 +1,176 @@
+//! Energy & carbon ledger: the cluster-wide sustainability account.
+//!
+//! Every batch execution posts (device, time, active kWh); idle energy
+//! is integrated over device idle gaps at close. Carbon conversion uses
+//! the cluster's [`crate::cluster::CarbonModel`] at the posting time, so
+//! diurnal-intensity experiments attribute emissions correctly.
+//!
+//! Conservation invariant (property-tested): total ledger energy equals
+//! the sum of posted batch energies + idle energy, and carbon equals
+//! energy × intensity for the constant model.
+
+use crate::cluster::CarbonModel;
+use std::collections::BTreeMap;
+
+/// One device's running account.
+#[derive(Debug, Clone, Default)]
+pub struct DeviceAccount {
+    pub active_kwh: f64,
+    pub idle_kwh: f64,
+    pub carbon_kg: f64,
+    pub batches: u64,
+    /// Device-busy seconds (for utilization reporting).
+    pub busy_s: f64,
+}
+
+impl DeviceAccount {
+    pub fn total_kwh(&self) -> f64 {
+        self.active_kwh + self.idle_kwh
+    }
+}
+
+/// Cluster-wide energy/carbon ledger.
+#[derive(Debug, Clone)]
+pub struct EnergyLedger {
+    carbon: CarbonModel,
+    accounts: BTreeMap<String, DeviceAccount>,
+}
+
+impl EnergyLedger {
+    pub fn new(carbon: CarbonModel) -> Self {
+        EnergyLedger { carbon, accounts: BTreeMap::new() }
+    }
+
+    /// Post a batch execution: `kwh` active energy on `device`,
+    /// occupying `busy_s` seconds, finishing at simulation time `t`.
+    pub fn post_batch(&mut self, device: &str, kwh: f64, busy_s: f64, t: f64) {
+        assert!(kwh >= 0.0 && busy_s >= 0.0, "negative ledger post");
+        let acc = self.accounts.entry(device.to_string()).or_default();
+        acc.active_kwh += kwh;
+        acc.carbon_kg += self.carbon.kg_co2e(kwh, t);
+        acc.batches += 1;
+        acc.busy_s += busy_s;
+    }
+
+    /// Post idle energy for a device (integration done by the caller,
+    /// who knows the idle windows and the device's idle draw).
+    pub fn post_idle(&mut self, device: &str, kwh: f64, t: f64) {
+        assert!(kwh >= 0.0, "negative idle post");
+        let acc = self.accounts.entry(device.to_string()).or_default();
+        acc.idle_kwh += kwh;
+        acc.carbon_kg += self.carbon.kg_co2e(kwh, t);
+    }
+
+    pub fn account(&self, device: &str) -> Option<&DeviceAccount> {
+        self.accounts.get(device)
+    }
+
+    pub fn accounts(&self) -> impl Iterator<Item = (&String, &DeviceAccount)> {
+        self.accounts.iter()
+    }
+
+    /// Cluster totals: (active kWh, idle kWh, kgCO2e).
+    pub fn totals(&self) -> (f64, f64, f64) {
+        let mut a = 0.0;
+        let mut i = 0.0;
+        let mut c = 0.0;
+        for acc in self.accounts.values() {
+            a += acc.active_kwh;
+            i += acc.idle_kwh;
+            c += acc.carbon_kg;
+        }
+        (a, i, c)
+    }
+
+    /// Total carbon, kgCO2e (active + idle).
+    pub fn total_carbon_kg(&self) -> f64 {
+        self.totals().2
+    }
+
+    /// Total energy, kWh.
+    pub fn total_kwh(&self) -> f64 {
+        let (a, i, _) = self.totals();
+        a + i
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::{close, property};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn constant_model_carbon_is_energy_times_intensity() {
+        let mut l = EnergyLedger::new(CarbonModel::constant(69.0));
+        l.post_batch("jetson", 1e-4, 10.0, 0.0);
+        l.post_idle("jetson", 5e-5, 100.0);
+        let (a, i, c) = l.totals();
+        close(a, 1e-4, 1e-9).unwrap();
+        close(i, 5e-5, 1e-9).unwrap();
+        close(c, 1.5e-4 * 69.0 / 1000.0, 1e-9).unwrap();
+    }
+
+    #[test]
+    fn per_device_accounts_isolated() {
+        let mut l = EnergyLedger::new(CarbonModel::constant(100.0));
+        l.post_batch("a", 1.0, 1.0, 0.0);
+        l.post_batch("b", 2.0, 2.0, 0.0);
+        assert_eq!(l.account("a").unwrap().batches, 1);
+        assert!((l.account("b").unwrap().active_kwh - 2.0).abs() < 1e-12);
+        assert!(l.account("c").is_none());
+    }
+
+    #[test]
+    fn conservation_property() {
+        property("ledger conserves energy", 64, |rng: &mut Rng| {
+            let mut l = EnergyLedger::new(CarbonModel::constant(69.0));
+            let mut expect_active = 0.0;
+            let mut expect_idle = 0.0;
+            let n = rng.below(50) + 1;
+            for k in 0..n {
+                let dev = if rng.chance(0.5) { "j" } else { "a" };
+                let kwh = rng.range(0.0, 1e-3);
+                if k % 3 == 0 {
+                    l.post_idle(dev, kwh, k as f64);
+                    expect_idle += kwh;
+                } else {
+                    l.post_batch(dev, kwh, rng.range(0.0, 30.0), k as f64);
+                    expect_active += kwh;
+                }
+            }
+            let (a, i, c) = l.totals();
+            close(a, expect_active, 1e-9).map_err(|e| format!("active: {e}"))?;
+            close(i, expect_idle, 1e-9).map_err(|e| format!("idle: {e}"))?;
+            close(c, (expect_active + expect_idle) * 0.069, 1e-9)
+                .map_err(|e| format!("carbon: {e}"))?;
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn diurnal_attribution_varies_with_time() {
+        let model = CarbonModel::diurnal(69.0, 0.3);
+        // find two hours with different intensity
+        let t_clean = (0..24)
+            .map(|h| h as f64 * 3600.0)
+            .min_by(|a, b| model.intensity_at(*a).partial_cmp(&model.intensity_at(*b)).unwrap())
+            .unwrap();
+        let t_dirty = (0..24)
+            .map(|h| h as f64 * 3600.0)
+            .max_by(|a, b| model.intensity_at(*a).partial_cmp(&model.intensity_at(*b)).unwrap())
+            .unwrap();
+        let mut l1 = EnergyLedger::new(model.clone());
+        let mut l2 = EnergyLedger::new(model);
+        l1.post_batch("d", 1e-3, 1.0, t_clean);
+        l2.post_batch("d", 1e-3, 1.0, t_dirty);
+        assert!(l2.total_carbon_kg() > l1.total_carbon_kg());
+    }
+
+    #[test]
+    #[should_panic]
+    fn negative_post_rejected() {
+        let mut l = EnergyLedger::new(CarbonModel::constant(69.0));
+        l.post_batch("d", -1.0, 1.0, 0.0);
+    }
+}

@@ -1,0 +1,174 @@
+//! Per-request metrics (the paper's IT / TTFT / TPS / TPOT) and
+//! streaming aggregation for the table reports.
+
+use crate::util::stats::{Histogram, Summary};
+
+/// Everything measured for one completed request.
+#[derive(Debug, Clone)]
+pub struct RequestMetrics {
+    pub prompt_id: u64,
+    pub device: String,
+    pub batch_size: usize,
+    /// Queue wait before the batch launched, seconds.
+    pub queue_s: f64,
+    /// Time to first token from arrival, seconds (queue + prefill).
+    pub ttft_s: f64,
+    /// Arrival-to-completion, seconds (the paper's IT / E2E latency).
+    pub e2e_s: f64,
+    /// Output tokens generated.
+    pub output_tokens: usize,
+    /// Seconds per output token during decode.
+    pub tpot_s: f64,
+    /// Energy attributed to this request, kWh.
+    pub energy_kwh: f64,
+    /// Carbon attributed, kgCO2e.
+    pub carbon_kg: f64,
+    /// Error indicator: 1.0/0.0 in sampled runs, the expected error
+    /// probability in deterministic (expected-value) runs.
+    pub error_p: f64,
+}
+
+impl RequestMetrics {
+    /// Output tokens per second of end-to-end time (paper's Tokens/s).
+    pub fn tps(&self) -> f64 {
+        self.output_tokens as f64 / self.e2e_s.max(1e-9)
+    }
+}
+
+/// Streaming aggregate over many requests (one per report cell).
+#[derive(Debug, Clone)]
+pub struct MetricsAggregate {
+    pub e2e: Summary,
+    pub ttft: Summary,
+    pub tpot: Summary,
+    pub queue: Summary,
+    pub tokens: Summary,
+    pub tps: Summary,
+    pub energy_kwh: Summary,
+    pub carbon_kg: Summary,
+    pub e2e_hist: Histogram,
+    /// Sum of error indicators/probabilities.
+    pub errors: f64,
+    pub requests: u64,
+}
+
+impl Default for MetricsAggregate {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl MetricsAggregate {
+    pub fn new() -> Self {
+        MetricsAggregate {
+            e2e: Summary::new(),
+            ttft: Summary::new(),
+            tpot: Summary::new(),
+            queue: Summary::new(),
+            tokens: Summary::new(),
+            tps: Summary::new(),
+            energy_kwh: Summary::new(),
+            carbon_kg: Summary::new(),
+            e2e_hist: Histogram::latency(),
+            errors: 0.0,
+            requests: 0,
+        }
+    }
+
+    pub fn add(&mut self, m: &RequestMetrics) {
+        self.requests += 1;
+        self.errors += m.error_p;
+        self.e2e.add(m.e2e_s);
+        self.ttft.add(m.ttft_s);
+        self.tpot.add(m.tpot_s);
+        self.queue.add(m.queue_s);
+        self.tokens.add(m.output_tokens as f64);
+        self.tps.add(m.tps());
+        self.energy_kwh.add(m.energy_kwh);
+        self.carbon_kg.add(m.carbon_kg);
+        self.e2e_hist.add(m.e2e_s);
+    }
+
+    pub fn merge(&mut self, other: &MetricsAggregate) {
+        self.requests += other.requests;
+        self.errors += other.errors;
+        self.e2e.merge(&other.e2e);
+        self.ttft.merge(&other.ttft);
+        self.tpot.merge(&other.tpot);
+        self.queue.merge(&other.queue);
+        self.tokens.merge(&other.tokens);
+        self.tps.merge(&other.tps);
+        self.energy_kwh.merge(&other.energy_kwh);
+        self.carbon_kg.merge(&other.carbon_kg);
+        self.e2e_hist.merge(&other.e2e_hist);
+    }
+
+    /// Error fraction in [0,1].
+    pub fn error_rate(&self) -> f64 {
+        if self.requests == 0 {
+            0.0
+        } else {
+            self.errors / self.requests as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(id: u64, e2e: f64, err: bool) -> RequestMetrics {
+        RequestMetrics {
+            prompt_id: id,
+            device: "d".into(),
+            batch_size: 4,
+            queue_s: 0.1,
+            ttft_s: 0.5,
+            e2e_s: e2e,
+            output_tokens: 100,
+            tpot_s: 0.03,
+            energy_kwh: 1e-5,
+            carbon_kg: 6.9e-7,
+            error_p: if err { 1.0 } else { 0.0 },
+        }
+    }
+
+    #[test]
+    fn aggregate_counts_and_means() {
+        let mut agg = MetricsAggregate::new();
+        agg.add(&sample(1, 2.0, false));
+        agg.add(&sample(2, 4.0, true));
+        assert_eq!(agg.requests, 2);
+        assert_eq!(agg.errors, 1.0);
+        assert!((agg.e2e.mean() - 3.0).abs() < 1e-12);
+        assert!((agg.error_rate() - 0.5).abs() < 1e-12);
+        assert!((agg.energy_kwh.sum() - 2e-5).abs() < 1e-18);
+    }
+
+    #[test]
+    fn tps_derived_from_e2e() {
+        let m = sample(1, 10.0, false);
+        assert!((m.tps() - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_equals_sequential() {
+        let mut a = MetricsAggregate::new();
+        let mut b = MetricsAggregate::new();
+        let mut all = MetricsAggregate::new();
+        for i in 0..10 {
+            let m = sample(i, i as f64 + 1.0, i % 3 == 0);
+            all.add(&m);
+            if i < 5 { a.add(&m) } else { b.add(&m) }
+        }
+        a.merge(&b);
+        assert_eq!(a.requests, all.requests);
+        assert_eq!(a.errors, all.errors);
+        assert!((a.e2e.mean() - all.e2e.mean()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_error_rate_is_zero() {
+        assert_eq!(MetricsAggregate::new().error_rate(), 0.0);
+    }
+}

@@ -1,0 +1,7 @@
+//! Telemetry: per-request metrics and the energy/carbon ledger.
+
+pub mod ledger;
+pub mod metrics;
+
+pub use ledger::EnergyLedger;
+pub use metrics::{RequestMetrics, MetricsAggregate};

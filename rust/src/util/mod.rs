@@ -1,0 +1,78 @@
+//! Shared utilities: deterministic RNG, statistics, JSON, property tests.
+//!
+//! Everything here replaces a crate we cannot fetch offline (rand,
+//! serde_json, proptest); each submodule is small, dependency-free and
+//! unit-tested.
+
+pub mod check;
+pub mod json;
+pub mod rng;
+pub mod stats;
+
+/// Clamp `x` into `[lo, hi]` (f64; total-order safe for our finite use).
+pub fn clamp(x: f64, lo: f64, hi: f64) -> f64 {
+    x.max(lo).min(hi)
+}
+
+/// Linear interpolation between `(x0, y0)` and `(x1, y1)` at `x`,
+/// extrapolating beyond the endpoints.
+pub fn lerp(x0: f64, y0: f64, x1: f64, y1: f64, x: f64) -> f64 {
+    if (x1 - x0).abs() < f64::EPSILON {
+        return (y0 + y1) * 0.5;
+    }
+    y0 + (y1 - y0) * (x - x0) / (x1 - x0)
+}
+
+/// Piecewise-linear interpolation over sorted `(x, y)` anchor points.
+/// Values outside the anchor range are linearly extrapolated from the
+/// nearest segment (the calibration tables use anchors at batch 1/4/8).
+pub fn interp(anchors: &[(f64, f64)], x: f64) -> f64 {
+    assert!(!anchors.is_empty(), "interp needs at least one anchor");
+    if anchors.len() == 1 {
+        return anchors[0].1;
+    }
+    // find the segment; clamp to the first/last for extrapolation
+    let mut i = 0;
+    while i + 2 < anchors.len() && x > anchors[i + 1].0 {
+        i += 1;
+    }
+    let (x0, y0) = anchors[i];
+    let (x1, y1) = anchors[i + 1];
+    lerp(x0, y0, x1, y1, x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clamp_basic() {
+        assert_eq!(clamp(5.0, 0.0, 1.0), 1.0);
+        assert_eq!(clamp(-5.0, 0.0, 1.0), 0.0);
+        assert_eq!(clamp(0.5, 0.0, 1.0), 0.5);
+    }
+
+    #[test]
+    fn lerp_midpoint() {
+        assert_eq!(lerp(0.0, 0.0, 2.0, 4.0, 1.0), 2.0);
+    }
+
+    #[test]
+    fn interp_hits_anchors_and_extrapolates() {
+        let a = [(1.0, 10.0), (4.0, 40.0), (8.0, 100.0)];
+        assert_eq!(interp(&a, 1.0), 10.0);
+        assert_eq!(interp(&a, 4.0), 40.0);
+        assert_eq!(interp(&a, 8.0), 100.0);
+        assert_eq!(interp(&a, 2.0), 20.0);
+        assert_eq!(interp(&a, 6.0), 70.0);
+        // extrapolation beyond 8 continues the last segment's slope (15/unit)
+        assert_eq!(interp(&a, 10.0), 130.0);
+        // and below 1 continues the first segment
+        assert_eq!(interp(&a, 0.0), 0.0);
+    }
+
+    #[test]
+    fn interp_single_anchor() {
+        assert_eq!(interp(&[(3.0, 7.0)], 100.0), 7.0);
+    }
+}

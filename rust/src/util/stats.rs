@@ -1,0 +1,236 @@
+//! Streaming statistics: Welford summaries and fixed-bound histograms.
+//!
+//! Telemetry aggregation (per-request TTFT/TPOT/E2E, energy per prompt)
+//! uses [`Summary`] for mean/std/min/max and [`Histogram`] for
+//! percentile reporting in the latency tables.
+
+/// Online mean/variance/min/max via Welford's algorithm.
+#[derive(Debug, Clone, Default)]
+pub struct Summary {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+    sum: f64,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Self { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY, sum: 0.0 }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.n += 1;
+        self.sum += x;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    /// Merge another summary (parallel aggregation).
+    pub fn merge(&mut self, other: &Summary) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n1 = self.n as f64;
+        let n2 = other.n as f64;
+        let delta = other.mean - self.mean;
+        let n = n1 + n2;
+        self.mean += delta * n2 / n;
+        self.m2 += other.m2 + delta * delta * n1 * n2 / n;
+        self.n += other.n;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 { f64::NAN } else { self.mean }
+    }
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 { 0.0 } else { self.m2 / (self.n - 1) as f64 }
+    }
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+}
+
+/// Log-bucketed histogram for latency percentiles (HdrHistogram-lite).
+///
+/// Buckets are geometric between `lo` and `hi` with `buckets_per_decade`
+/// resolution; out-of-range samples clamp to the edge buckets. Relative
+/// quantile error is bounded by the bucket ratio (~2.6% at 90/decade).
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    lo: f64,
+    ratio: f64,
+    counts: Vec<u64>,
+    total: u64,
+    underflow: u64,
+}
+
+impl Histogram {
+    /// `lo`..`hi` value range (must be positive), e.g. 1e-4..1e4 seconds.
+    pub fn new(lo: f64, hi: f64, buckets_per_decade: usize) -> Self {
+        assert!(lo > 0.0 && hi > lo && buckets_per_decade > 0);
+        let decades = (hi / lo).log10();
+        let n = (decades * buckets_per_decade as f64).ceil() as usize + 1;
+        let ratio = 10f64.powf(1.0 / buckets_per_decade as f64);
+        Self { lo, ratio, counts: vec![0; n], total: 0, underflow: 0 }
+    }
+
+    /// Default latency histogram: 100 µs .. 10 ks, 90 buckets/decade.
+    pub fn latency() -> Self {
+        Self::new(1e-4, 1e4, 90)
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.total += 1;
+        if x < self.lo {
+            self.underflow += 1;
+            return;
+        }
+        let idx = ((x / self.lo).ln() / self.ratio.ln()) as usize;
+        let idx = idx.min(self.counts.len() - 1);
+        self.counts[idx] += 1;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    /// Quantile in [0,1]; returns the bucket's upper edge.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return f64::NAN;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.total as f64).ceil() as u64;
+        let mut seen = self.underflow;
+        if seen >= target && self.underflow > 0 {
+            return self.lo;
+        }
+        for (i, c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return self.lo * self.ratio.powi(i as i32 + 1);
+            }
+        }
+        self.lo * self.ratio.powi(self.counts.len() as i32)
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.quantile(0.50)
+    }
+    pub fn p95(&self) -> f64 {
+        self.quantile(0.95)
+    }
+    pub fn p99(&self) -> f64 {
+        self.quantile(0.99)
+    }
+
+    pub fn merge(&mut self, other: &Histogram) {
+        assert_eq!(self.counts.len(), other.counts.len(), "histogram shape mismatch");
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.underflow += other.underflow;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_known_values() {
+        let mut s = Summary::new();
+        for x in [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0] {
+            s.add(x);
+        }
+        assert_eq!(s.count(), 8);
+        assert!((s.mean() - 5.0).abs() < 1e-12);
+        assert!((s.variance() - 32.0 / 7.0).abs() < 1e-12);
+        assert_eq!(s.min(), 2.0);
+        assert_eq!(s.max(), 9.0);
+        assert_eq!(s.sum(), 40.0);
+    }
+
+    #[test]
+    fn summary_merge_equals_sequential() {
+        let xs: Vec<f64> = (0..100).map(|i| (i as f64).sin() * 10.0 + 20.0).collect();
+        let mut all = Summary::new();
+        xs.iter().for_each(|&x| all.add(x));
+        let mut a = Summary::new();
+        let mut b = Summary::new();
+        xs[..37].iter().for_each(|&x| a.add(x));
+        xs[37..].iter().for_each(|&x| b.add(x));
+        a.merge(&b);
+        assert_eq!(a.count(), all.count());
+        assert!((a.mean() - all.mean()).abs() < 1e-9);
+        assert!((a.variance() - all.variance()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn summary_empty_is_nan_mean() {
+        assert!(Summary::new().mean().is_nan());
+    }
+
+    #[test]
+    fn histogram_quantiles_within_bucket_error() {
+        let mut h = Histogram::latency();
+        // uniform 1..=1000 ms
+        for i in 1..=1000 {
+            h.add(i as f64 * 1e-3);
+        }
+        let p50 = h.p50();
+        assert!((p50 - 0.5).abs() / 0.5 < 0.06, "p50={p50}");
+        let p99 = h.p99();
+        assert!((p99 - 0.99).abs() / 0.99 < 0.06, "p99={p99}");
+    }
+
+    #[test]
+    fn histogram_underflow_and_clamp() {
+        let mut h = Histogram::new(1.0, 10.0, 10);
+        h.add(0.001); // underflow
+        h.add(1e9); // clamps to top bucket
+        assert_eq!(h.count(), 2);
+        assert!(h.quantile(0.01) <= 1.0);
+        assert!(h.quantile(1.0) >= 10.0);
+    }
+
+    #[test]
+    fn histogram_merge() {
+        let mut a = Histogram::new(1.0, 100.0, 10);
+        let mut b = Histogram::new(1.0, 100.0, 10);
+        for i in 1..=50 {
+            a.add(i as f64);
+        }
+        for i in 51..=100 {
+            b.add(i as f64);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), 100);
+        let p50 = a.p50();
+        assert!((p50 - 50.0).abs() / 50.0 < 0.3, "p50={p50}");
+    }
+}

@@ -1,0 +1,127 @@
+//! The paper's Table 1 prompts (P1–P4), verbatim, with their published
+//! complexity scores. These drive the Fig. 1 / Fig. 2 motivation
+//! experiments and calibrate the complexity judge substitute.
+
+use super::{complexity, Category, Prompt};
+
+/// One canonical prompt with the paper's metadata.
+#[derive(Debug, Clone)]
+pub struct CanonicalPrompt {
+    pub id: &'static str,
+    pub text: &'static str,
+    /// CS published in Table 1.
+    pub paper_cs: f64,
+    /// Expected output demand (tokens) implied by the task.
+    pub output_demand_tokens: usize,
+    /// Closest composite-benchmark category.
+    pub category: Category,
+}
+
+/// P1 — constraint-satisfaction reasoning (Table 1, CS 0.47).
+pub const P1: CanonicalPrompt = CanonicalPrompt {
+    id: "P1",
+    text: "A group of five friends (Alice, Bob, Carol, David, Emily) are trying \
+to decide who will buy tickets for a concert, prepare snacks, drive, and pick \
+up drinks. Alice hates driving. Bob can only pick up drinks if he's not \
+preparing snacks. Carol loves concerts and wants to buy tickets. David can \
+only drive if Emily prepares snacks. Emily will not pick up drinks. Each \
+friend must take exactly one task, and each task must be assigned to exactly \
+one friend. Assign the tasks to each friend and explain your logical \
+deduction step by step.",
+    paper_cs: 0.47,
+    output_demand_tokens: 260,
+    category: Category::Gsm8k,
+};
+
+/// P2 — generative writing (Table 1, CS 0.39).
+pub const P2: CanonicalPrompt = CanonicalPrompt {
+    id: "P2",
+    text: "Write a short story, approximately 500 words, about a sentient, \
+self-repairing antique grandfather clock that secretly orchestrates minor, \
+benevolent 'time anomalies' in a quiet, forgotten library. Introduce a \
+skeptical new librarian who slowly uncovers the clock's secret. The story \
+must include: The clock's motivation for its actions. Three distinct 'time \
+anomalies' are caused. A moment of direct, non-verbal communication between \
+the clock and the librarian. A surprising twist where the librarian, instead \
+of exposing the clock, aids its efforts for an unexpected reason.",
+    paper_cs: 0.39,
+    output_demand_tokens: 520,
+    category: Category::CnnDm,
+};
+
+/// P3 — factual lookup (Table 1, CS 0.08).
+pub const P3: CanonicalPrompt = CanonicalPrompt {
+    id: "P3",
+    text: "What is the boiling point of water at standard atmospheric pressure?",
+    paper_cs: 0.08,
+    output_demand_tokens: 14,
+    category: Category::Squad,
+};
+
+/// P4 — factual lookup (Table 1, CS 0.07).
+pub const P4: CanonicalPrompt = CanonicalPrompt {
+    id: "P4",
+    text: "Who painted the Mona Lisa?",
+    paper_cs: 0.07,
+    output_demand_tokens: 10,
+    category: Category::ArcChallenge,
+};
+
+/// All four canonical prompts in paper order.
+pub const ALL: [&CanonicalPrompt; 4] = [&P1, &P2, &P3, &P4];
+
+impl CanonicalPrompt {
+    /// Our judge substitute's CS for this prompt.
+    pub fn scored_cs(&self) -> f64 {
+        complexity::score(self.text, self.output_demand_tokens)
+    }
+
+    /// Convert into a workload [`Prompt`] (arrival t=0, given id).
+    pub fn to_prompt(&self, id: u64) -> Prompt {
+        Prompt {
+            id,
+            category: self.category,
+            text: self.text.to_string(),
+            prompt_tokens: super::tokenizer::count(self.text),
+            output_demand_tokens: self.output_demand_tokens,
+            complexity: self.scored_cs(),
+            arrival_s: 0.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn judge_reproduces_paper_scores() {
+        // the scorer was calibrated against these; tolerance ±0.06 abs
+        for p in ALL {
+            let cs = p.scored_cs();
+            assert!(
+                (cs - p.paper_cs).abs() < 0.06,
+                "{}: scored {cs:.3} vs paper {}",
+                p.id,
+                p.paper_cs
+            );
+        }
+    }
+
+    #[test]
+    fn ordering_matches_paper() {
+        // P1 > P2 >> P3 > P4
+        let cs: Vec<f64> = ALL.iter().map(|p| p.scored_cs()).collect();
+        assert!(cs[0] > cs[1], "P1 {} vs P2 {}", cs[0], cs[1]);
+        assert!(cs[1] > cs[2] + 0.2);
+        assert!(cs[2] > cs[3]);
+    }
+
+    #[test]
+    fn to_prompt_is_consistent() {
+        let p = P1.to_prompt(7);
+        assert_eq!(p.id, 7);
+        assert_eq!(p.prompt_tokens, P1.text.len());
+        assert!(p.complexity > 0.4);
+    }
+}

@@ -1,0 +1,219 @@
+//! The eight prompt categories of the paper's composite benchmark.
+//!
+//! Each category carries the distribution parameters the synthetic
+//! generator needs: corpus mix weight, log-normal prompt/output token
+//! distributions, and a base complexity level. Values are chosen to
+//! match the qualitative description in §3 of the paper (e.g. python
+//! coding = low prompt / high output "compute-intensive" tasks; SQuAD =
+//! long context / short extract; arXiv = long-form summarization).
+
+/// Prompt category (source dataset in the paper's composite benchmark).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Category {
+    /// GSM8K math word problems — multi-step reasoning.
+    Gsm8k,
+    /// SQuAD extractive question answering — long context, short answer.
+    Squad,
+    /// DialogSum dialogue summarization.
+    DialogSum,
+    /// python_code_instructions_18k — code generation.
+    PythonCode,
+    /// ARC-Challenge multiple-choice science reasoning.
+    ArcChallenge,
+    /// Long-form summarization of arXiv papers.
+    ArxivSumm,
+    /// DailyDialog multi-turn dialogue continuation.
+    DailyDialog,
+    /// CNN/DailyMail general long-form summarization.
+    CnnDm,
+}
+
+/// Distribution parameters for one category.
+#[derive(Debug, Clone, Copy)]
+pub struct CategoryProfile {
+    /// Mix weight in the composite corpus.
+    pub weight: f64,
+    /// Median prompt length, tokens (log-normal).
+    pub prompt_median: f64,
+    /// Log-normal sigma for prompt length.
+    pub prompt_sigma: f64,
+    /// Median output demand, tokens (log-normal, model-independent).
+    pub output_median: f64,
+    /// Log-normal sigma for output demand.
+    pub output_sigma: f64,
+    /// Base complexity contribution (judge substitute feature).
+    pub base_complexity: f64,
+}
+
+impl Category {
+    pub const ALL: [Category; 8] = [
+        Category::Gsm8k,
+        Category::Squad,
+        Category::DialogSum,
+        Category::PythonCode,
+        Category::ArcChallenge,
+        Category::ArxivSumm,
+        Category::DailyDialog,
+        Category::CnnDm,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Category::Gsm8k => "gsm8k",
+            Category::Squad => "squad",
+            Category::DialogSum => "dialogsum",
+            Category::PythonCode => "python-code",
+            Category::ArcChallenge => "arc-challenge",
+            Category::ArxivSumm => "arxiv-summ",
+            Category::DailyDialog => "dailydialog",
+            Category::CnnDm => "cnn-dm",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Category> {
+        Category::ALL.iter().copied().find(|c| c.name() == s)
+    }
+
+    pub fn profile(&self) -> CategoryProfile {
+        match self {
+            Category::Gsm8k => CategoryProfile {
+                weight: 0.15,
+                prompt_median: 90.0,
+                prompt_sigma: 0.30,
+                output_median: 110.0,
+                output_sigma: 0.30,
+                base_complexity: 0.55,
+            },
+            Category::Squad => CategoryProfile {
+                weight: 0.15,
+                prompt_median: 160.0,
+                prompt_sigma: 0.35,
+                output_median: 18.0,
+                output_sigma: 0.40,
+                base_complexity: 0.15,
+            },
+            Category::DialogSum => CategoryProfile {
+                weight: 0.12,
+                prompt_median: 220.0,
+                prompt_sigma: 0.40,
+                output_median: 70.0,
+                output_sigma: 0.30,
+                base_complexity: 0.35,
+            },
+            Category::PythonCode => CategoryProfile {
+                weight: 0.13,
+                prompt_median: 60.0,
+                prompt_sigma: 0.40,
+                output_median: 190.0,
+                output_sigma: 0.35,
+                base_complexity: 0.60,
+            },
+            Category::ArcChallenge => CategoryProfile {
+                weight: 0.12,
+                prompt_median: 80.0,
+                prompt_sigma: 0.30,
+                output_median: 12.0,
+                output_sigma: 0.40,
+                base_complexity: 0.30,
+            },
+            Category::ArxivSumm => CategoryProfile {
+                weight: 0.10,
+                prompt_median: 380.0,
+                prompt_sigma: 0.35,
+                output_median: 160.0,
+                output_sigma: 0.30,
+                base_complexity: 0.50,
+            },
+            Category::DailyDialog => CategoryProfile {
+                weight: 0.13,
+                prompt_median: 110.0,
+                prompt_sigma: 0.40,
+                output_median: 45.0,
+                output_sigma: 0.40,
+                base_complexity: 0.25,
+            },
+            Category::CnnDm => CategoryProfile {
+                weight: 0.10,
+                prompt_median: 300.0,
+                prompt_sigma: 0.35,
+                output_median: 90.0,
+                output_sigma: 0.30,
+                base_complexity: 0.40,
+            },
+        }
+    }
+
+    /// Seed phrase used by the synthetic text generator.
+    pub fn seed_phrase(&self) -> &'static str {
+        match self {
+            Category::Gsm8k => {
+                "Solve the following math word problem step by step and show your reasoning:"
+            }
+            Category::Squad => {
+                "Answer the question using only the passage below. Passage:"
+            }
+            Category::DialogSum => {
+                "Summarize the following dialogue in two sentences. Dialogue:"
+            }
+            Category::PythonCode => {
+                "Write a Python function with docstring and tests that"
+            }
+            Category::ArcChallenge => {
+                "Choose the correct answer (A, B, C or D) for this science question:"
+            }
+            Category::ArxivSumm => {
+                "Provide a detailed summary of the key contributions of this paper. Abstract:"
+            }
+            Category::DailyDialog => {
+                "Continue this conversation naturally. Conversation so far:"
+            }
+            Category::CnnDm => {
+                "Summarize this news article, highlighting the main events. Article:"
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn weights_sum_to_one() {
+        let total: f64 = Category::ALL.iter().map(|c| c.profile().weight).sum();
+        assert!((total - 1.0).abs() < 1e-9, "total={total}");
+    }
+
+    #[test]
+    fn names_roundtrip() {
+        for c in Category::ALL {
+            assert_eq!(Category::parse(c.name()), Some(c));
+        }
+        assert_eq!(Category::parse("nope"), None);
+    }
+
+    #[test]
+    fn profiles_are_sane() {
+        for c in Category::ALL {
+            let p = c.profile();
+            assert!(p.weight > 0.0 && p.weight < 1.0);
+            assert!(p.prompt_median >= 10.0);
+            assert!(p.output_median >= 5.0);
+            assert!((0.0..=1.0).contains(&p.base_complexity));
+            assert!(p.prompt_sigma > 0.0 && p.output_sigma > 0.0);
+        }
+    }
+
+    #[test]
+    fn paper_asymmetries_present() {
+        // python coding: low prompt, high output ("compute-intensive")
+        let py = Category::PythonCode.profile();
+        assert!(py.output_median > 2.0 * py.prompt_median);
+        // squad: long context, short extraction
+        let sq = Category::Squad.profile();
+        assert!(sq.prompt_median > 5.0 * sq.output_median);
+        // arxiv: heavy on both ends (memory-intensive long-form)
+        let ax = Category::ArxivSumm.profile();
+        assert!(ax.prompt_median > 300.0 && ax.output_median > 100.0);
+    }
+}

@@ -1,0 +1,145 @@
+//! Complexity judge substitute (the paper uses a cloud judge model).
+//!
+//! The paper's judge "rates expected reasoning depth and token footprint"
+//! into CS ∈ [0,1]. We replace it with a deterministic feature scorer
+//! over the prompt text + expected output demand:
+//!
+//! - reasoning-marker density (imperatives like "step by step",
+//!   "explain", constraint words like "exactly one", "only if");
+//! - generative-demand markers ("write", "story", word-count asks);
+//! - token footprint (prompt length + output demand, linear with cap);
+//!
+//! Weights are calibrated so the paper's Table 1 prompts reproduce their
+//! published scores: P1 ≈ 0.47, P2 ≈ 0.39, P3 ≈ 0.08, P4 ≈ 0.07
+//! (asserted in canonical.rs tests).
+
+/// Markers indicating multi-step/logical reasoning demand.
+const REASONING_MARKERS: [&str; 11] = [
+    "step by step",
+    "explain",
+    "deduc",
+    "assign",
+    "only if",
+    "exactly one",
+    "solve",
+    "choose the correct",
+    "reasoning",
+    "logic",
+    "prove",
+];
+
+/// Markers indicating long-form generation demand.
+const GENERATIVE_MARKERS: [&str; 10] = [
+    "write",
+    "story",
+    "words",
+    "summar",
+    "continue",
+    "compose",
+    "detailed",
+    "function",
+    "docstring",
+    "twist",
+];
+
+const BASE: f64 = 0.06;
+const W_REASONING: f64 = 0.22;
+const W_GENERATIVE: f64 = 0.07;
+const W_FOOTPRINT: f64 = 0.42;
+/// Token footprint that counts as "maximal" (saturation cap).
+const FOOTPRINT_CAP_TOKENS: f64 = 2000.0;
+
+/// Score a prompt's complexity: CS ∈ [0, 1], higher = harder.
+///
+/// `output_demand_tokens` is the expected generation length (the paper's
+/// judge sees this implicitly as "token footprint").
+pub fn score(text: &str, output_demand_tokens: usize) -> f64 {
+    let lower = text.to_lowercase();
+
+    let reasoning_hits = REASONING_MARKERS.iter().filter(|m| lower.contains(**m)).count();
+    let generative_hits = GENERATIVE_MARKERS.iter().filter(|m| lower.contains(**m)).count();
+
+    // saturating marker terms
+    let reasoning = 1.0 - (-0.50 * reasoning_hits as f64).exp();
+    let generative = 1.0 - (-0.35 * generative_hits as f64).exp();
+
+    // token footprint: prompt (byte tokens) + output demand, capped
+    let footprint_tokens = text.len() as f64 + output_demand_tokens as f64;
+    let footprint = (footprint_tokens / FOOTPRINT_CAP_TOKENS).min(1.0);
+
+    let cs = BASE + W_REASONING * reasoning + W_GENERATIVE * generative + W_FOOTPRINT * footprint;
+    crate::util::clamp(cs, 0.0, 1.0)
+}
+
+/// Complexity bands used in reports and the complexity-aware strategy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Band {
+    /// CS < 0.2 — factual lookups (P3/P4-like).
+    Simple,
+    /// 0.2 <= CS < 0.45 — moderate tasks.
+    Moderate,
+    /// CS >= 0.45 — multi-step reasoning / heavy generation.
+    Complex,
+}
+
+pub fn band(cs: f64) -> Band {
+    if cs < 0.2 {
+        Band::Simple
+    } else if cs < 0.45 {
+        Band::Moderate
+    } else {
+        Band::Complex
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn factual_scores_low() {
+        let cs = score("What is the boiling point of water at standard atmospheric pressure?", 12);
+        assert!(cs < 0.2, "cs={cs}");
+        assert_eq!(band(cs), Band::Simple);
+    }
+
+    #[test]
+    fn reasoning_scores_high() {
+        let text = "A group of five friends must each take exactly one task. \
+                    Alice hates driving. Assign the tasks and explain your \
+                    logical deduction step by step. Solve it with careful reasoning.";
+        let cs = score(text, 250);
+        // well above any factual lookup, below the footprint-heavy P1
+        assert!(cs > 0.35, "cs={cs}");
+        let factual = score("Who painted the Mona Lisa?", 10);
+        assert!(cs > factual + 0.25);
+    }
+
+    #[test]
+    fn monotone_in_output_demand() {
+        let text = "Summarize this article.";
+        assert!(score(text, 400) > score(text, 10));
+    }
+
+    #[test]
+    fn bounded_in_unit_interval() {
+        let huge = "explain solve write story summarize ".repeat(100);
+        let cs = score(&huge, 10_000);
+        assert!((0.0..=1.0).contains(&cs));
+        assert!(score("", 0) >= 0.0);
+    }
+
+    #[test]
+    fn deterministic() {
+        let t = "Write a short story about a clock.";
+        assert_eq!(score(t, 500), score(t, 500));
+    }
+
+    #[test]
+    fn band_edges() {
+        assert_eq!(band(0.0), Band::Simple);
+        assert_eq!(band(0.2), Band::Moderate);
+        assert_eq!(band(0.45), Band::Complex);
+        assert_eq!(band(1.0), Band::Complex);
+    }
+}

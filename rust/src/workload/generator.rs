@@ -1,0 +1,243 @@
+//! Synthetic composite-corpus generator.
+//!
+//! Reproduces the *marginals* of the paper's ~5000-prompt composite
+//! benchmark (DESIGN.md substitution table): category mix weights,
+//! per-category log-normal prompt/output token distributions, and
+//! complexity scores. Prompt text is synthesized from the category's
+//! seed phrase plus deterministic filler so the byte-level token count
+//! matches the sampled length — the same text is served verbatim through
+//! the PJRT path in real execution mode.
+
+use crate::config::WorkloadConfig;
+use crate::util::rng::Rng;
+
+use super::categories::Category;
+use super::{complexity, tokenizer, Prompt};
+
+/// Mean output demand across the corpus (tokens); devices scale their
+/// verbosity relative to this (Prompt::output_tokens_on).
+pub const CORPUS_MEAN_OUTPUT_TOKENS: f64 = 95.0;
+
+/// Filler vocabulary for synthetic prompt bodies (content-free but
+/// realistic byte statistics).
+const FILLER: [&str; 24] = [
+    "the", "system", "value", "number", "people", "model", "result", "question",
+    "data", "energy", "process", "work", "time", "long", "given", "under",
+    "report", "describe", "section", "details", "context", "first", "second", "final",
+];
+
+/// A generated corpus: prompts plus bookkeeping for reports.
+#[derive(Debug, Clone)]
+pub struct Corpus {
+    pub prompts: Vec<Prompt>,
+    pub seed: u64,
+}
+
+impl Corpus {
+    /// Generate per the workload config (category filter honoured;
+    /// closed-loop arrivals at t=0 — `trace` reassigns arrival times for
+    /// open-loop experiments).
+    pub fn generate(cfg: &WorkloadConfig) -> Self {
+        let cats: Vec<Category> = if cfg.categories.is_empty() {
+            Category::ALL.to_vec()
+        } else {
+            cfg.categories
+                .iter()
+                .filter_map(|name| Category::parse(name))
+                .collect()
+        };
+        assert!(!cats.is_empty(), "no valid categories selected");
+        let weights: Vec<f64> = cats.iter().map(|c| c.profile().weight).collect();
+
+        let mut rng = Rng::new(cfg.seed);
+        let prompts = (0..cfg.prompts)
+            .map(|i| {
+                let cat = cats[rng.choose_weighted(&weights)];
+                Self::sample_prompt(i as u64, cat, &mut rng)
+            })
+            .collect();
+        Corpus { prompts, seed: cfg.seed }
+    }
+
+    /// Sample one prompt from a category's distributions.
+    pub fn sample_prompt(id: u64, cat: Category, rng: &mut Rng) -> Prompt {
+        let prof = cat.profile();
+        let prompt_tokens =
+            (rng.lognormal(prof.prompt_median, prof.prompt_sigma).round() as usize).clamp(12, 4000);
+        let output_demand =
+            (rng.lognormal(prof.output_median, prof.output_sigma).round() as usize).clamp(4, 2000);
+
+        let text = synth_text(cat, prompt_tokens, rng);
+        // judge substitute + category prior + small deterministic jitter
+        let scored = complexity::score(&text, output_demand);
+        let cs = crate::util::clamp(
+            0.55 * scored + 0.45 * prof.base_complexity + rng.normal(0.0, 0.02),
+            0.0,
+            1.0,
+        );
+
+        Prompt {
+            id,
+            category: cat,
+            prompt_tokens: tokenizer::count(&text),
+            text,
+            output_demand_tokens: output_demand,
+            complexity: cs,
+            arrival_s: 0.0,
+        }
+    }
+
+    /// Per-category counts (report support).
+    pub fn category_histogram(&self) -> Vec<(Category, usize)> {
+        let mut counts: Vec<(Category, usize)> =
+            Category::ALL.iter().map(|&c| (c, 0)).collect();
+        for p in &self.prompts {
+            if let Some(slot) = counts.iter_mut().find(|(c, _)| *c == p.category) {
+                slot.1 += 1;
+            }
+        }
+        counts
+    }
+
+    /// Mean prompt tokens across the corpus.
+    pub fn mean_prompt_tokens(&self) -> f64 {
+        if self.prompts.is_empty() {
+            return 0.0;
+        }
+        self.prompts.iter().map(|p| p.prompt_tokens as f64).sum::<f64>()
+            / self.prompts.len() as f64
+    }
+
+    /// Mean output demand across the corpus.
+    pub fn mean_output_demand(&self) -> f64 {
+        if self.prompts.is_empty() {
+            return 0.0;
+        }
+        self.prompts.iter().map(|p| p.output_demand_tokens as f64).sum::<f64>()
+            / self.prompts.len() as f64
+    }
+}
+
+/// Synthesize text of ~`target_tokens` bytes starting from the category
+/// seed phrase.
+fn synth_text(cat: Category, target_tokens: usize, rng: &mut Rng) -> String {
+    let mut text = String::with_capacity(target_tokens + 16);
+    text.push_str(cat.seed_phrase());
+    while text.len() < target_tokens {
+        text.push(' ');
+        text.push_str(FILLER[rng.below(FILLER.len())]);
+    }
+    text.truncate(target_tokens.max(cat.seed_phrase().len()));
+    // avoid trailing partial-word weirdness mattering anywhere: it's
+    // synthetic filler; byte count is what the models consume.
+    text
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::WorkloadConfig;
+    use crate::util::check::property;
+
+    fn cfg(prompts: usize, seed: u64) -> WorkloadConfig {
+        WorkloadConfig {
+            prompts,
+            seed,
+            categories: Vec::new(),
+            arrival: crate::config::Arrival::Closed,
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = Corpus::generate(&cfg(50, 7));
+        let b = Corpus::generate(&cfg(50, 7));
+        for (x, y) in a.prompts.iter().zip(&b.prompts) {
+            assert_eq!(x.text, y.text);
+            assert_eq!(x.output_demand_tokens, y.output_demand_tokens);
+            assert!((x.complexity - y.complexity).abs() < 1e-12);
+        }
+        let c = Corpus::generate(&cfg(50, 8));
+        assert!(a.prompts.iter().zip(&c.prompts).any(|(x, y)| x.text != y.text));
+    }
+
+    #[test]
+    fn corpus_marginals_match_profiles() {
+        let corpus = Corpus::generate(&cfg(3000, 42));
+        // overall prompt-token mean near the calibration reference (~164
+        // from the weighted medians; lognormal mean slightly above)
+        let mean_p = corpus.mean_prompt_tokens();
+        assert!((120.0..230.0).contains(&mean_p), "mean prompt tokens {mean_p}");
+        let mean_o = corpus.mean_output_demand();
+        assert!(
+            (CORPUS_MEAN_OUTPUT_TOKENS * 0.75..CORPUS_MEAN_OUTPUT_TOKENS * 1.25)
+                .contains(&mean_o),
+            "mean output demand {mean_o}"
+        );
+        // every category present, roughly at its weight
+        for (cat, count) in corpus.category_histogram() {
+            let frac = count as f64 / 3000.0;
+            let w = cat.profile().weight;
+            assert!(
+                (frac - w).abs() < 0.03,
+                "{}: frac {frac} vs weight {w}",
+                cat.name()
+            );
+        }
+    }
+
+    #[test]
+    fn complexity_tracks_category_difficulty() {
+        let corpus = Corpus::generate(&cfg(3000, 1));
+        let mean_cs = |c: Category| {
+            let xs: Vec<f64> = corpus
+                .prompts
+                .iter()
+                .filter(|p| p.category == c)
+                .map(|p| p.complexity)
+                .collect();
+            xs.iter().sum::<f64>() / xs.len() as f64
+        };
+        // reasoning/code-heavy categories must outrank factual ones
+        assert!(mean_cs(Category::Gsm8k) > mean_cs(Category::ArcChallenge));
+        assert!(mean_cs(Category::PythonCode) > mean_cs(Category::Squad));
+        assert!(mean_cs(Category::ArxivSumm) > mean_cs(Category::Squad));
+    }
+
+    #[test]
+    fn category_filter_respected() {
+        let mut c = cfg(100, 3);
+        c.categories = vec!["squad".into(), "gsm8k".into()];
+        let corpus = Corpus::generate(&c);
+        assert!(corpus
+            .prompts
+            .iter()
+            .all(|p| matches!(p.category, Category::Squad | Category::Gsm8k)));
+    }
+
+    #[test]
+    fn prompt_text_token_count_consistent() {
+        property("text length == prompt_tokens", 64, |rng| {
+            let cat = *rng.choose(&Category::ALL);
+            let p = Corpus::sample_prompt(0, cat, rng);
+            if p.prompt_tokens == p.text.len() {
+                Ok(())
+            } else {
+                Err(format!("{} != {}", p.prompt_tokens, p.text.len()))
+            }
+        });
+    }
+
+    #[test]
+    fn complexity_in_unit_interval() {
+        property("cs in [0,1]", 128, |rng| {
+            let cat = *rng.choose(&Category::ALL);
+            let p = Corpus::sample_prompt(0, cat, rng);
+            if (0.0..=1.0).contains(&p.complexity) {
+                Ok(())
+            } else {
+                Err(format!("cs={}", p.complexity))
+            }
+        });
+    }
+}

@@ -1,0 +1,72 @@
+//! Workload substrate: the paper's composite prompt benchmark, rebuilt.
+//!
+//! The paper samples 500 prompts from a ~5000-prompt composite of eight
+//! public datasets (GSM8K, SQuAD, DialogSum, python-code-instructions,
+//! ARC-Challenge, arXiv summarization, DailyDialog, CNN/DailyMail) and
+//! scores each with a cloud judge model (complexity score CS ∈ [0,1]).
+//! We cannot ship those datasets, so [`generator`] synthesizes a corpus
+//! with the same *marginals the routing layer consumes*: category mix,
+//! per-category prompt/output token distributions, and CS. The judge is
+//! replaced by the deterministic feature scorer in [`complexity`]
+//! (calibrated to reproduce the paper's P1–P4 scores).
+
+pub mod canonical;
+pub mod categories;
+pub mod complexity;
+pub mod generator;
+pub mod tokenizer;
+pub mod trace;
+
+pub use categories::Category;
+pub use generator::Corpus;
+
+/// One inference request flowing through the system.
+#[derive(Debug, Clone)]
+pub struct Prompt {
+    /// Stable id (generation order).
+    pub id: u64,
+    pub category: Category,
+    /// Synthetic prompt text (tokenizable; used verbatim in real mode).
+    pub text: String,
+    /// Prompt length in tokens (byte-level tokenizer).
+    pub prompt_tokens: usize,
+    /// Model-independent output-length demand in tokens; devices scale
+    /// it by their model's verbosity (Table 2: the 1B model averages
+    /// ~148 output tokens, the 12B ~70 for the same prompts).
+    pub output_demand_tokens: usize,
+    /// Complexity score CS ∈ [0,1] from the judge substitute.
+    pub complexity: f64,
+    /// Arrival time in seconds (0.0 for the paper's closed-loop runs).
+    pub arrival_s: f64,
+}
+
+impl Prompt {
+    /// Output tokens this prompt will generate on a device whose model
+    /// has `output_median_tokens` verbosity (see generator docs).
+    pub fn output_tokens_on(&self, output_median_tokens: f64) -> usize {
+        let scale = output_median_tokens / generator::CORPUS_MEAN_OUTPUT_TOKENS;
+        ((self.output_demand_tokens as f64 * scale).round() as usize).max(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn output_scaling_matches_device_verbosity() {
+        let p = Prompt {
+            id: 0,
+            category: Category::Gsm8k,
+            text: "x".into(),
+            prompt_tokens: 10,
+            output_demand_tokens: 90,
+            complexity: 0.5,
+            arrival_s: 0.0,
+        };
+        let jetson = p.output_tokens_on(148.0);
+        let ada = p.output_tokens_on(69.6);
+        assert!(jetson > ada, "1B model must be more verbose");
+        assert!(jetson >= 1 && ada >= 1);
+    }
+}

@@ -1,0 +1,96 @@
+//! Byte-level tokenizer shared with the AOT models (vocab = 256).
+//!
+//! The L2 artifacts are lowered with a 256-entry vocabulary, so the
+//! tokenizer is a byte mapping: token id = byte value, with id 0
+//! reserved as EOS/pad (NUL never appears in prompt text). This keeps
+//! the Rust request path and the Python compile path trivially in sync
+//! (python/compile/configs.py: VOCAB = 256, EOS_ID = 0).
+
+/// Vocabulary size baked into the artifacts.
+pub const VOCAB: usize = 256;
+/// EOS / padding token id.
+pub const EOS_ID: i32 = 0;
+
+/// Encode text to token ids (bytes). NUL bytes are mapped to 1 so the
+/// EOS id can never appear inside a prompt.
+pub fn encode(text: &str) -> Vec<i32> {
+    text.bytes().map(|b| if b == 0 { 1 } else { b as i32 }).collect()
+}
+
+/// Decode ids back to text; EOS terminates, invalid UTF-8 is replaced.
+pub fn decode(ids: &[i32]) -> String {
+    let bytes: Vec<u8> = ids
+        .iter()
+        .take_while(|&&id| id != EOS_ID)
+        .map(|&id| (id.clamp(0, 255)) as u8)
+        .collect();
+    String::from_utf8_lossy(&bytes).into_owned()
+}
+
+/// Number of tokens in a text (byte count).
+pub fn count(text: &str) -> usize {
+    text.len()
+}
+
+/// Truncate-or-right-pad to exactly `len` ids, returning (ids, true_len).
+/// The true length is always >= 1 (empty prompts become a single pad-1
+/// token) because prefill gathers logits at index len-1.
+pub fn to_fixed(text: &str, len: usize) -> (Vec<i32>, usize) {
+    let mut ids = encode(text);
+    ids.truncate(len);
+    if ids.is_empty() {
+        ids.push(1);
+    }
+    let true_len = ids.len();
+    ids.resize(len, EOS_ID);
+    (ids, true_len)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_ascii() {
+        let text = "Who painted the Mona Lisa?";
+        assert_eq!(decode(&encode(text)), text);
+        assert_eq!(count(text), text.len());
+    }
+
+    #[test]
+    fn eos_terminates_decode() {
+        let ids = vec![72, 105, EOS_ID, 33];
+        assert_eq!(decode(&ids), "Hi");
+    }
+
+    #[test]
+    fn nul_bytes_remapped() {
+        let ids = encode("a\0b");
+        assert!(!ids.contains(&EOS_ID));
+    }
+
+    #[test]
+    fn to_fixed_pads_and_truncates() {
+        let (ids, len) = to_fixed("abc", 6);
+        assert_eq!(ids, vec![97, 98, 99, 0, 0, 0]);
+        assert_eq!(len, 3);
+
+        let (ids, len) = to_fixed("abcdefgh", 4);
+        assert_eq!(ids.len(), 4);
+        assert_eq!(len, 4);
+        assert_eq!(ids, vec![97, 98, 99, 100]);
+    }
+
+    #[test]
+    fn empty_prompt_gets_sentinel() {
+        let (ids, len) = to_fixed("", 4);
+        assert_eq!(len, 1);
+        assert_eq!(ids[0], 1);
+    }
+
+    #[test]
+    fn ids_in_vocab_range() {
+        let ids = encode("héllo 😀");
+        assert!(ids.iter().all(|&i| i > 0 && i < VOCAB as i32));
+    }
+}

@@ -1,0 +1,89 @@
+//! Arrival traces: closed-loop (the paper's setup) and open-loop Poisson.
+//!
+//! The paper queues all 500 prompts at t=0 and measures makespan
+//! (closed). The serving extension experiments replay the same corpus as
+//! a Poisson stream to study batching timeouts and queueing delay under
+//! load (open).
+
+use crate::config::Arrival;
+use crate::util::rng::Rng;
+
+use super::Prompt;
+
+/// Assign arrival times to a corpus in place according to the process.
+pub fn assign_arrivals(prompts: &mut [Prompt], arrival: Arrival, seed: u64) {
+    match arrival {
+        Arrival::Closed => {
+            for p in prompts.iter_mut() {
+                p.arrival_s = 0.0;
+            }
+        }
+        Arrival::Open { rate } => {
+            let mut rng = Rng::new(seed ^ 0xA881_77E5);
+            let mut t = 0.0;
+            for p in prompts.iter_mut() {
+                t += rng.exponential(rate);
+                p.arrival_s = t;
+            }
+        }
+    }
+}
+
+/// Total span of the trace (last arrival), seconds.
+pub fn span(prompts: &[Prompt]) -> f64 {
+    prompts.iter().map(|p| p.arrival_s).fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::WorkloadConfig;
+    use crate::workload::Corpus;
+
+    fn corpus(n: usize) -> Vec<Prompt> {
+        Corpus::generate(&WorkloadConfig {
+            prompts: n,
+            seed: 5,
+            categories: Vec::new(),
+            arrival: Arrival::Closed,
+        })
+        .prompts
+    }
+
+    #[test]
+    fn closed_all_at_zero() {
+        let mut ps = corpus(20);
+        assign_arrivals(&mut ps, Arrival::Closed, 1);
+        assert!(ps.iter().all(|p| p.arrival_s == 0.0));
+        assert_eq!(span(&ps), 0.0);
+    }
+
+    #[test]
+    fn open_monotone_nondecreasing() {
+        let mut ps = corpus(200);
+        assign_arrivals(&mut ps, Arrival::Open { rate: 5.0 }, 1);
+        for w in ps.windows(2) {
+            assert!(w[1].arrival_s >= w[0].arrival_s);
+        }
+        assert!(span(&ps) > 0.0);
+    }
+
+    #[test]
+    fn open_rate_approximately_respected() {
+        let mut ps = corpus(2000);
+        assign_arrivals(&mut ps, Arrival::Open { rate: 10.0 }, 2);
+        let mean_gap = span(&ps) / 2000.0;
+        assert!((mean_gap - 0.1).abs() < 0.01, "gap={mean_gap}");
+    }
+
+    #[test]
+    fn open_deterministic_per_seed() {
+        let mut a = corpus(50);
+        let mut b = corpus(50);
+        assign_arrivals(&mut a, Arrival::Open { rate: 2.0 }, 9);
+        assign_arrivals(&mut b, Arrival::Open { rate: 2.0 }, 9);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.arrival_s, y.arrival_s);
+        }
+    }
+}

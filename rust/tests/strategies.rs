@@ -1,0 +1,179 @@
+//! Property-based strategy invariants at the integration level:
+//! routing totality, Pareto structure, batching integrity, and ledger
+//! conservation under randomized cluster/workload configurations.
+
+use verdant::cluster::Cluster;
+use verdant::config::{DeviceConfig, DeviceKind, ExperimentConfig};
+use verdant::coordinator::{build_strategy, run, BenchmarkDb, RunConfig};
+use verdant::util::check::property;
+use verdant::util::rng::Rng;
+use verdant::workload::{Category, Corpus, Prompt};
+
+fn random_cluster(rng: &mut Rng) -> Cluster {
+    // 1-3 jetsons + 1-2 adas with jittered memory sizes
+    let mut cfg = ExperimentConfig::default().cluster;
+    cfg.devices.clear();
+    let n_jetson = rng.below(3) + 1;
+    let n_ada = rng.below(2) + 1;
+    for i in 0..n_jetson {
+        cfg.devices.push(DeviceConfig {
+            name: format!("jetson-{i}"),
+            kind: DeviceKind::Jetson,
+            gpu_mem_gb: 8.0 + rng.range(-1.0, 4.0),
+            model: "edge-1b-sim".into(),
+        });
+    }
+    for i in 0..n_ada {
+        cfg.devices.push(DeviceConfig {
+            name: format!("ada-{i}"),
+            kind: DeviceKind::Ada,
+            gpu_mem_gb: 16.0 + rng.range(-2.0, 8.0),
+            model: "edge-12b-sim".into(),
+        });
+    }
+    Cluster::from_config(&cfg)
+}
+
+fn random_prompts(rng: &mut Rng, n: usize) -> Vec<Prompt> {
+    (0..n)
+        .map(|i| {
+            let cat = Category::ALL[rng.below(8)];
+            Corpus::sample_prompt(i as u64, cat, rng)
+        })
+        .collect()
+}
+
+#[test]
+fn every_strategy_total_on_random_clusters() {
+    property("strategies total on random clusters", 16, |rng| {
+        let cluster = random_cluster(rng);
+        let n = rng.below(60) + 1;
+        let prompts = random_prompts(rng, n);
+        let db = BenchmarkDb::build(&cluster, &[1, 4], 2, 69.0, rng.next_u64());
+        for name in ["carbon-aware", "latency-aware", "round-robin", "complexity-aware"] {
+            let s = build_strategy(name, &cluster).map_err(|e| e.to_string())?;
+            let mut cfg = RunConfig::default();
+            cfg.batch_size = rng.below(8) + 1;
+            let r = run(&cluster, &prompts, s.as_ref(), &db, &cfg, None)
+                .map_err(|e| format!("{name}: {e}"))?;
+            if r.metrics.len() != prompts.len() {
+                return Err(format!("{name}: {} metrics for {} prompts", r.metrics.len(), prompts.len()));
+            }
+            if r.makespan_s <= 0.0 || !r.makespan_s.is_finite() {
+                return Err(format!("{name}: bad makespan {}", r.makespan_s));
+            }
+            let ids: std::collections::HashSet<u64> =
+                r.metrics.iter().map(|m| m.prompt_id).collect();
+            if ids.len() != prompts.len() {
+                return Err(format!("{name}: duplicate/missing prompt ids"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn latency_aware_never_worse_than_both_baselines() {
+    property("latency-aware <= max(single-device baselines)", 12, |rng| {
+        let cluster = random_cluster(rng);
+        let n = rng.below(80) + 20;
+        let prompts = random_prompts(rng, n);
+        let db = BenchmarkDb::build(&cluster, &[1, 4, 8], 3, 69.0, rng.next_u64());
+        let mut cfg = RunConfig::default();
+        cfg.batch_size = [1, 4, 8][rng.below(3)];
+
+        let mk = |name: &str| -> Result<f64, String> {
+            let s = build_strategy(name, &cluster).map_err(|e| e.to_string())?;
+            Ok(run(&cluster, &prompts, s.as_ref(), &db, &cfg, None)
+                .map_err(|e| e.to_string())?
+                .makespan_s)
+        };
+        let la = mk("latency-aware")?;
+        let first = mk(&format!("all-on-{}", cluster.devices[0].name))?;
+        let last = mk(&format!("all-on-{}", cluster.devices.last().unwrap().name))?;
+        // LPT with estimates is a heuristic; allow 10% slack vs the
+        // BETTER single device, but it must never lose to the worse one
+        if la > first.max(last) * 1.001 {
+            return Err(format!("la {la} worse than worst baseline {}", first.max(last)));
+        }
+        if la > first.min(last) * 1.10 {
+            return Err(format!("la {la} vs best single {}", first.min(last)));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn carbon_aware_is_carbon_minimal_among_strategies() {
+    property("carbon-aware minimal carbon", 12, |rng| {
+        let cluster = random_cluster(rng);
+        let n = rng.below(60) + 20;
+        let prompts = random_prompts(rng, n);
+        let db = BenchmarkDb::build(&cluster, &[1, 4, 8], 3, 69.0, rng.next_u64());
+        let mut cfg = RunConfig::default();
+        cfg.batch_size = [1, 4][rng.below(2)];
+
+        let carbon_of = |name: &str| -> Result<f64, String> {
+            let s = build_strategy(name, &cluster).map_err(|e| e.to_string())?;
+            Ok(run(&cluster, &prompts, s.as_ref(), &db, &cfg, None)
+                .map_err(|e| e.to_string())?
+                .total_carbon_kg)
+        };
+        let ca = carbon_of("carbon-aware")?;
+        for other in ["latency-aware", "round-robin"] {
+            let c = carbon_of(other)?;
+            // 5% slack: realized mixed batches vs homogeneous DB cells
+            if ca > c * 1.05 {
+                return Err(format!("carbon-aware {ca} vs {other} {c}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn makespan_equals_max_device_busy() {
+    property("makespan = max busy", 16, |rng| {
+        let cluster = random_cluster(rng);
+        let n = rng.below(40) + 1;
+        let prompts = random_prompts(rng, n);
+        let db = BenchmarkDb::build(&cluster, &[4], 2, 69.0, 3);
+        let s = build_strategy("round-robin", &cluster).map_err(|e| e.to_string())?;
+        let r = run(&cluster, &prompts, s.as_ref(), &db, &RunConfig::default(), None)
+            .map_err(|e| e.to_string())?;
+        let max_busy = r
+            .ledger
+            .accounts()
+            .map(|(_, a)| a.busy_s)
+            .fold(0.0f64, f64::max);
+        if (r.makespan_s - max_busy).abs() > 1e-9 {
+            return Err(format!("makespan {} vs max busy {max_busy}", r.makespan_s));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn request_e2e_at_least_queue_plus_ttft_component() {
+    property("e2e >= ttft >= queue", 16, |rng| {
+        let cluster = random_cluster(rng);
+        let n = rng.below(50) + 1;
+        let prompts = random_prompts(rng, n);
+        let db = BenchmarkDb::build(&cluster, &[4], 2, 69.0, 5);
+        let s = build_strategy("latency-aware", &cluster).map_err(|e| e.to_string())?;
+        let r = run(&cluster, &prompts, s.as_ref(), &db, &RunConfig::default(), None)
+            .map_err(|e| e.to_string())?;
+        for m in &r.metrics {
+            if !(m.e2e_s >= m.ttft_s - 1e-9 && m.ttft_s >= m.queue_s - 1e-9) {
+                return Err(format!(
+                    "ordering violated: queue {} ttft {} e2e {}",
+                    m.queue_s, m.ttft_s, m.e2e_s
+                ));
+            }
+            if m.energy_kwh <= 0.0 || m.carbon_kg <= 0.0 {
+                return Err("non-positive energy/carbon".into());
+            }
+        }
+        Ok(())
+    });
+}
