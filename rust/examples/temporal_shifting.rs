@@ -1,0 +1,73 @@
+//! Temporal shifting end-to-end: forecast the grid, hold deferrable
+//! prompts, release them into clean windows, and audit the realized
+//! savings against the run-at-arrival counterfactual.
+//!
+//! Run:  cargo run --release --example temporal_shifting
+
+use verdant::bench::Env;
+use verdant::cluster::{CarbonModel, Cluster};
+use verdant::config::{Arrival, ExperimentConfig};
+use verdant::coordinator::online::{run_online, GridShiftConfig, OnlineConfig};
+use verdant::grid::{score, ForecastKind, SyntheticTrace};
+use verdant::workload::trace;
+
+fn main() {
+    // --- the grid signal ------------------------------------------------
+    let grid_trace = SyntheticTrace {
+        name: "demo-week".into(),
+        mean_g_per_kwh: 69.0,
+        diurnal_swing: 0.3,
+        weekly_swing: 0.1,
+        noise_frac: 0.05,
+        days: 7,
+        step_s: 900.0,
+        seed: 7,
+    }
+    .generate();
+    println!("grid trace: {} samples @ {}s, mean {:.1} g/kWh", grid_trace.len(),
+             grid_trace.step_s, grid_trace.mean());
+
+    // --- which forecaster earns the job? --------------------------------
+    println!("\n== forecaster scoreboard (25% held-out tail) ==");
+    println!("{:<22} {:>8} {:>14}", "forecaster", "MAPE", "bias (g/kWh)");
+    let period = grid_trace.steps_per_day();
+    for kind in ForecastKind::ALL {
+        let s = score(kind.build(period).as_ref(), &grid_trace, 0.25);
+        println!("{:<22} {:>7.1}% {:>14.2}", s.forecaster, s.mape * 100.0, s.bias_g);
+    }
+
+    // --- shifting vs arrival-time routing -------------------------------
+    let mut cfg = ExperimentConfig::default();
+    cfg.workload.prompts = 300;
+    let env = Env::with_config(cfg.clone());
+    let mut cluster = Cluster::from_config(&cfg.cluster);
+    cluster.carbon = CarbonModel::from_trace(grid_trace.clone());
+
+    let mut prompts = env.prompts.clone();
+    // arrivals over 18 h; half the corpus tolerates a 10 h deadline
+    trace::assign_arrivals(&mut prompts, Arrival::Open { rate: 300.0 / 64_800.0 }, 42);
+    trace::assign_slos(&mut prompts, 0.5, 10.0 * 3600.0, 42);
+
+    println!("\n== 300 prompts, 50% deferrable, diurnal+noise grid ==");
+    println!("{:<28} {:>16} {:>12} {:>8} {:>12}",
+             "strategy", "carbon (kgCO2e)", "saved", "held", "int lat (s)");
+    for (strategy, shifting) in [("carbon-aware", false), ("forecast-carbon-aware", true)] {
+        let run_cfg = OnlineConfig {
+            strategy: strategy.into(),
+            grid: shifting
+                .then(|| GridShiftConfig::new(grid_trace.clone(), ForecastKind::Harmonic)),
+            ..OnlineConfig::default()
+        };
+        let r = run_online(&cluster, &prompts, &env.db, &run_cfg);
+        let (_, _, carbon) = r.ledger.totals();
+        let saved = r.ledger.realized_savings_kg();
+        let saved_pct = 100.0 * saved / r.ledger.counterfactual_kg().max(1e-30);
+        println!(
+            "{:<28} {:>16.3e} {:>11.1}% {:>8} {:>12.2}",
+            strategy, carbon, saved_pct, r.deferred, r.latency_interactive.mean()
+        );
+        assert_eq!(r.deadline_violations, 0, "deadline violated");
+    }
+    println!("\n(same prompts, same devices — the second row simply runs the deferrable \
+              half in cleaner hours; zero deadline violations either way)");
+}

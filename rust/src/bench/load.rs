@@ -44,6 +44,7 @@ pub fn run(env: &Env) -> (Vec<LoadRow>, Table) {
                 batch_size: base.serving.batch_size,
                 policy,
                 strategy: strategy.into(),
+                grid: None,
             };
             let r = run_online(&env.cluster, &corpus.prompts, &env.db, &cfg);
             rows.push(LoadRow {

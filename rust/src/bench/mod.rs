@@ -9,6 +9,7 @@
 //! | [`sweep`] | §3 cross-batch analysis (TTFT↑, carbon/prompt↓, errors) |
 //! | [`ablation`] | DESIGN.md ablations (estimator, grouping, threshold) |
 //! | [`load`] | open-loop latency-vs-load sweep (serving extension) |
+//! | [`shifting`] | temporal-shifting sweep: strategy × grid trace × deferrable fraction |
 //!
 //! [`harness`] is the in-tree micro-benchmark timer used by
 //! `rust/benches/*` (criterion is not available offline).
@@ -18,6 +19,7 @@ pub mod fig1;
 pub mod fig2;
 pub mod harness;
 pub mod load;
+pub mod shifting;
 pub mod sweep;
 pub mod table2;
 pub mod table3;

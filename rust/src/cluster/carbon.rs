@@ -3,18 +3,25 @@
 //! The paper converts measured energy to carbon at a single grid
 //! intensity; dividing its Table 2 carbon by energy gives ~69 gCO2e/kWh
 //! on both devices (consistent with the Austrian grid). We support that
-//! constant model plus a diurnal profile used by the carbon-cap
-//! extension example (route more aggressively to the efficient device
-//! when the grid is dirty).
+//! constant model, a diurnal profile (piecewise-linear between hourly
+//! anchors), and arbitrary [`GridTrace`] time series — the general case
+//! the grid subsystem forecasts and shifts against. Constant and
+//! diurnal are the degenerate trace cases (one sample / 24 samples);
+//! [`CarbonModel::to_trace`] performs that conversion explicitly.
+
+use crate::grid::trace::{diurnal_shape_at, GridTrace};
 
 /// Grid carbon intensity model.
 #[derive(Debug, Clone)]
 pub enum CarbonModel {
     /// Fixed intensity in gCO2e/kWh.
     Constant { g_per_kwh: f64 },
-    /// 24-hour piecewise profile, `hourly[h]` = gCO2e/kWh during hour h.
-    /// `t` is interpreted as seconds since local midnight, wrapping.
+    /// 24-hour profile, `hourly[h]` = gCO2e/kWh at the top of hour h;
+    /// intensity between anchors is linearly interpolated (wrapping
+    /// midnight). `t` is seconds since local midnight, wrapping.
     Diurnal { hourly: [f64; 24] },
+    /// An explicit intensity time series (periodic, interpolated).
+    Trace(GridTrace),
 }
 
 impl CarbonModel {
@@ -26,23 +33,21 @@ impl CarbonModel {
     /// A plausible diurnal curve around a mean: the classic duck shape —
     /// cleanest at midday (solar), dirtiest in the evening ramp, mildly
     /// elevated overnight. `swing` is the fractional amplitude
-    /// (e.g. 0.3 = ±30 %). The shape vector below is zero-mean with
-    /// max |shape| = 1, so the hourly mean equals `mean_g_per_kwh` and
-    /// excursions stay within ±swing.
+    /// (e.g. 0.3 = ±30 %). The shape (see [`diurnal_shape_at`]) is
+    /// zero-mean with max |shape| = 1, so the hourly mean equals
+    /// `mean_g_per_kwh` and excursions stay within ±swing.
     pub fn diurnal(mean_g_per_kwh: f64, swing: f64) -> Self {
         assert!(mean_g_per_kwh > 0.0 && (0.0..1.0).contains(&swing));
-        // hours 0..23; trough 12-15, peak 18-21
-        const SHAPE: [f64; 24] = [
-            0.35, 0.30, 0.25, 0.20, 0.15, 0.10, 0.00, -0.20, //  0- 7
-            -0.40, -0.60, -0.80, -0.95, -1.00, -1.00, -0.90, -0.70, //  8-15
-            -0.20, 0.40, 0.85, 1.00, 0.95, 0.80, 0.60, 0.45, // 16-23
-        ];
-        let mean_shape: f64 = SHAPE.iter().sum::<f64>() / 24.0;
         let mut hourly = [0.0; 24];
         for (h, slot) in hourly.iter_mut().enumerate() {
-            *slot = mean_g_per_kwh * (1.0 + swing * (SHAPE[h] - mean_shape));
+            *slot = mean_g_per_kwh * (1.0 + swing * diurnal_shape_at(h as f64));
         }
         CarbonModel::Diurnal { hourly }
+    }
+
+    /// Wrap an explicit grid trace.
+    pub fn from_trace(trace: GridTrace) -> Self {
+        CarbonModel::Trace(trace)
     }
 
     /// Intensity at simulation time `t` (seconds), gCO2e/kWh.
@@ -50,15 +55,35 @@ impl CarbonModel {
         match self {
             CarbonModel::Constant { g_per_kwh } => *g_per_kwh,
             CarbonModel::Diurnal { hourly } => {
-                let sec = t.rem_euclid(86_400.0);
-                hourly[(sec / 3600.0) as usize % 24]
+                let h = t.rem_euclid(86_400.0) / 3600.0;
+                let i = (h.floor() as usize) % 24;
+                let frac = h - h.floor();
+                let a = hourly[i];
+                let b = hourly[(i + 1) % 24];
+                a + (b - a) * frac
             }
+            CarbonModel::Trace(trace) => trace.intensity_at(t),
         }
     }
 
     /// Emissions for `kwh` of energy consumed at time `t`, in kgCO2e.
     pub fn kg_co2e(&self, kwh: f64, t: f64) -> f64 {
         kwh * self.intensity_at(t) / 1000.0
+    }
+
+    /// Flatten any model into an explicit trace sampled at `step_s`
+    /// over one day (constant models collapse to a single sample) —
+    /// the degenerate-case absorption the grid subsystem builds on.
+    pub fn to_trace(&self, step_s: f64) -> GridTrace {
+        match self {
+            CarbonModel::Constant { g_per_kwh } => GridTrace::constant(*g_per_kwh),
+            CarbonModel::Diurnal { .. } => {
+                assert!(step_s > 0.0);
+                let n = ((86_400.0 / step_s).round() as usize).max(1);
+                GridTrace::from_fn("diurnal", step_s, n, |t| self.intensity_at(t))
+            }
+            CarbonModel::Trace(trace) => trace.clone(),
+        }
     }
 }
 
@@ -100,6 +125,60 @@ mod tests {
         let m = CarbonModel::diurnal(50.0, 0.2);
         assert_eq!(m.intensity_at(3600.0), m.intensity_at(3600.0 + 86_400.0));
         assert_eq!(m.intensity_at(-3600.0), m.intensity_at(82_800.0));
+    }
+
+    #[test]
+    fn diurnal_interpolates_between_hourly_anchors() {
+        let m = CarbonModel::diurnal(69.0, 0.3);
+        let CarbonModel::Diurnal { hourly } = m.clone() else { unreachable!() };
+        // anchor values are hit exactly at the top of each hour
+        for (h, &v) in hourly.iter().enumerate() {
+            assert!((m.intensity_at(h as f64 * 3600.0) - v).abs() < 1e-12, "hour {h}");
+        }
+        // half past sits midway between neighbouring anchors
+        let mid = m.intensity_at(17.5 * 3600.0);
+        assert!((mid - 0.5 * (hourly[17] + hourly[18])).abs() < 1e-9);
+        // no step discontinuities: fine steps move intensity smoothly
+        let mut prev = m.intensity_at(0.0);
+        for k in 1..(24 * 60) {
+            let cur = m.intensity_at(k as f64 * 60.0);
+            let max_hourly_gap = 69.0 * 0.3 * 2.05; // largest anchor-to-anchor move
+            assert!(
+                (cur - prev).abs() <= max_hourly_gap / 60.0 + 1e-9,
+                "jump at minute {k}: {prev} -> {cur}"
+            );
+            prev = cur;
+        }
+        // ... including across midnight
+        let before = m.intensity_at(86_399.0);
+        let after = m.intensity_at(86_401.0);
+        assert!((before - after).abs() < 0.1, "{before} vs {after}");
+    }
+
+    #[test]
+    fn trace_model_follows_its_trace() {
+        let trace = GridTrace::new("t", 1800.0, vec![50.0, 100.0, 75.0, 60.0]);
+        let m = CarbonModel::from_trace(trace.clone());
+        for k in 0..8 {
+            let t = k as f64 * 450.0;
+            assert_eq!(m.intensity_at(t), trace.intensity_at(t));
+        }
+        assert!((m.kg_co2e(1.0, 0.0) - 0.05).abs() < 1e-12);
+    }
+
+    #[test]
+    fn to_trace_absorbs_constant_and_diurnal() {
+        let c = CarbonModel::constant(80.0).to_trace(900.0);
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.intensity_at(12345.0), 80.0);
+
+        let m = CarbonModel::diurnal(69.0, 0.3);
+        let t = m.to_trace(3600.0);
+        assert_eq!(t.len(), 24);
+        for h in 0..24 {
+            let at = h as f64 * 3600.0;
+            assert!((t.intensity_at(at) - m.intensity_at(at)).abs() < 1e-12, "hour {h}");
+        }
     }
 
     #[test]

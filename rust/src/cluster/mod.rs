@@ -27,7 +27,8 @@ pub use memory::MemoryModel;
 pub use network::LinkModel;
 pub use power::PowerModel;
 
-use crate::config::{ClusterConfig, DeviceKind};
+use crate::config::{CarbonModelConfig, ClusterConfig, DeviceKind};
+use crate::grid::{GridTrace, SyntheticTrace};
 
 /// A fully-instantiated cluster: device profiles + shared carbon model
 /// + the network link used by cloud-kind devices.
@@ -48,7 +49,7 @@ impl Cluster {
             .collect();
         Cluster {
             devices,
-            carbon: CarbonModel::constant(cfg.carbon_intensity_g_per_kwh),
+            carbon: build_carbon_model(&cfg.carbon),
             link: LinkModel::new(cfg.cloud.rtt_ms, cfg.cloud.bandwidth_mbps),
         }
     }
@@ -67,6 +68,41 @@ impl Cluster {
     }
 }
 
+/// Instantiate the configured carbon model (validated by
+/// `ExperimentConfig::validate`).
+pub fn build_carbon_model(cfg: &CarbonModelConfig) -> CarbonModel {
+    match cfg {
+        CarbonModelConfig::Constant { g_per_kwh } => CarbonModel::constant(*g_per_kwh),
+        CarbonModelConfig::Diurnal { mean_g_per_kwh, swing } => {
+            CarbonModel::diurnal(*mean_g_per_kwh, *swing)
+        }
+        CarbonModelConfig::Trace { step_s, samples } => {
+            CarbonModel::from_trace(GridTrace::new("config-trace", *step_s, samples.clone()))
+        }
+        CarbonModelConfig::Synthetic {
+            mean_g_per_kwh,
+            swing,
+            weekly_swing,
+            noise,
+            days,
+            step_s,
+            seed,
+        } => CarbonModel::from_trace(
+            SyntheticTrace {
+                name: "config-synthetic".into(),
+                mean_g_per_kwh: *mean_g_per_kwh,
+                diurnal_swing: *swing,
+                weekly_swing: *weekly_swing,
+                noise_frac: *noise,
+                days: *days,
+                step_s: *step_s,
+                seed: *seed,
+            }
+            .generate(),
+        ),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -82,5 +118,40 @@ mod tests {
         assert_eq!(cluster.by_kind(DeviceKind::Jetson).len(), 1);
         assert_eq!(cluster.device_index("ada-2000"), Some(1));
         assert_eq!(cluster.device_index("nope"), None);
+    }
+
+    #[test]
+    fn config_carbon_models_instantiate() {
+        use crate::config::CarbonModelConfig;
+
+        let mut cfg = ExperimentConfig::default();
+        cfg.cluster.carbon =
+            CarbonModelConfig::Diurnal { mean_g_per_kwh: 69.0, swing: 0.3 };
+        let cluster = Cluster::from_config(&cfg.cluster);
+        // diurnal: midday cleaner than evening
+        assert!(
+            cluster.carbon.intensity_at(13.0 * 3600.0)
+                < cluster.carbon.intensity_at(19.0 * 3600.0)
+        );
+
+        cfg.cluster.carbon =
+            CarbonModelConfig::Trace { step_s: 1800.0, samples: vec![30.0, 90.0] };
+        let cluster = Cluster::from_config(&cfg.cluster);
+        assert_eq!(cluster.carbon.intensity_at(0.0), 30.0);
+        assert_eq!(cluster.carbon.intensity_at(1800.0), 90.0);
+
+        cfg.cluster.carbon = CarbonModelConfig::Synthetic {
+            mean_g_per_kwh: 69.0,
+            swing: 0.3,
+            weekly_swing: 0.1,
+            noise: 0.05,
+            days: 2,
+            step_s: 900.0,
+            seed: 9,
+        };
+        let a = Cluster::from_config(&cfg.cluster);
+        let b = Cluster::from_config(&cfg.cluster);
+        // deterministic per seed
+        assert_eq!(a.carbon.intensity_at(12_345.0), b.carbon.intensity_at(12_345.0));
     }
 }

@@ -93,13 +93,60 @@ pub struct CloudConfig {
     pub bandwidth_mbps: f64,
 }
 
+/// Grid carbon-intensity model, as expressed in the `[cluster.carbon]`
+/// TOML table (`cluster::Cluster::from_config` instantiates it).
+#[derive(Debug, Clone, PartialEq)]
+pub enum CarbonModelConfig {
+    /// `model = "constant"` — fixed gCO2e/kWh (the paper's setting).
+    Constant { g_per_kwh: f64 },
+    /// `model = "diurnal"` — duck curve around a mean with fractional
+    /// swing (interpolated hourly anchors).
+    Diurnal { mean_g_per_kwh: f64, swing: f64 },
+    /// `model = "trace"` — explicit samples on a fixed step, extended
+    /// periodically.
+    Trace { step_s: f64, samples: Vec<f64> },
+    /// `model = "synthetic"` — seeded diurnal + weekly + AR(1)-noise
+    /// generator (see `grid::SyntheticTrace`).
+    Synthetic {
+        mean_g_per_kwh: f64,
+        swing: f64,
+        weekly_swing: f64,
+        noise: f64,
+        days: usize,
+        step_s: f64,
+        seed: u64,
+    },
+}
+
+impl CarbonModelConfig {
+    /// Mean intensity implied by the model (drives the benchmark DB's
+    /// scalar carbon estimates).
+    pub fn mean_g_per_kwh(&self) -> f64 {
+        match self {
+            CarbonModelConfig::Constant { g_per_kwh } => *g_per_kwh,
+            CarbonModelConfig::Diurnal { mean_g_per_kwh, .. }
+            | CarbonModelConfig::Synthetic { mean_g_per_kwh, .. } => *mean_g_per_kwh,
+            CarbonModelConfig::Trace { samples, .. } => {
+                if samples.is_empty() {
+                    0.0
+                } else {
+                    samples.iter().sum::<f64>() / samples.len() as f64
+                }
+            }
+        }
+    }
+}
+
 /// Cluster topology + grid carbon intensity.
 #[derive(Debug, Clone)]
 pub struct ClusterConfig {
     pub name: String,
     /// Grid carbon intensity in gCO2e per kWh. 69 g/kWh back-derived
-    /// from the paper's Table 2 (4.38e-6 kg / 6.35e-5 kWh).
+    /// from the paper's Table 2 (4.38e-6 kg / 6.35e-5 kWh). Kept as the
+    /// scalar the routing estimates use; `carbon` is the full model.
     pub carbon_intensity_g_per_kwh: f64,
+    /// Time-resolved carbon model (defaults to constant at the scalar).
+    pub carbon: CarbonModelConfig,
     pub devices: Vec<DeviceConfig>,
     pub cloud: CloudConfig,
 }
@@ -156,6 +203,7 @@ impl Default for ExperimentConfig {
             cluster: ClusterConfig {
                 name: "edge-lab".into(),
                 carbon_intensity_g_per_kwh: 69.0,
+                carbon: CarbonModelConfig::Constant { g_per_kwh: 69.0 },
                 devices: vec![
                     DeviceConfig {
                         name: "jetson-orin-nx".into(),
@@ -209,6 +257,14 @@ impl ExperimentConfig {
             }
             if let Some(x) = c.get("carbon_intensity_g_per_kwh").and_then(Value::as_f64) {
                 cfg.cluster.carbon_intensity_g_per_kwh = x;
+            }
+            cfg.cluster.carbon =
+                CarbonModelConfig::Constant { g_per_kwh: cfg.cluster.carbon_intensity_g_per_kwh };
+            if let Some(cm) = c.get("carbon") {
+                cfg.cluster.carbon =
+                    parse_carbon_model(cm, cfg.cluster.carbon_intensity_g_per_kwh)?;
+                // keep the routing-estimate scalar consistent with the model
+                cfg.cluster.carbon_intensity_g_per_kwh = cfg.cluster.carbon.mean_g_per_kwh();
             }
         }
         if let Some(devs) = v.get("device").and_then(Value::as_arr) {
@@ -304,6 +360,7 @@ impl ExperimentConfig {
 
     /// Reject configurations that would produce meaningless experiments.
     pub fn validate(&self) -> Result<()> {
+        validate_carbon_model(&self.cluster.carbon)?;
         if self.cluster.devices.is_empty() {
             bail!("cluster has no devices");
         }
@@ -339,6 +396,99 @@ impl ExperimentConfig {
     /// Find a device by name.
     pub fn device(&self, name: &str) -> Option<&DeviceConfig> {
         self.cluster.devices.iter().find(|d| d.name == name)
+    }
+}
+
+/// Parse the `[cluster.carbon]` table; `default_mean` is the cluster's
+/// scalar intensity (used when the table omits a mean).
+fn parse_carbon_model(cm: &Value, default_mean: f64) -> Result<CarbonModelConfig> {
+    let model = cm.get("model").and_then(Value::as_str).unwrap_or("constant");
+    let mean = cm
+        .get("mean_g_per_kwh")
+        .and_then(Value::as_f64)
+        .unwrap_or(default_mean);
+    let swing = cm.get("swing").and_then(Value::as_f64).unwrap_or(0.3);
+    let step_s = cm.get("step_s").and_then(Value::as_f64).unwrap_or(900.0);
+    match model {
+        "constant" => Ok(CarbonModelConfig::Constant { g_per_kwh: mean }),
+        "diurnal" => Ok(CarbonModelConfig::Diurnal { mean_g_per_kwh: mean, swing }),
+        "trace" => {
+            let samples: Vec<f64> = cm
+                .get("samples")
+                .and_then(Value::as_arr)
+                .ok_or_else(|| anyhow!("[cluster.carbon] model=trace needs samples = [..]"))?
+                .iter()
+                .map(|s| {
+                    s.as_f64().ok_or_else(|| {
+                        anyhow!("[cluster.carbon] samples must all be numbers, got {s:?}")
+                    })
+                })
+                .collect::<Result<_>>()?;
+            Ok(CarbonModelConfig::Trace { step_s, samples })
+        }
+        "synthetic" => Ok(CarbonModelConfig::Synthetic {
+            mean_g_per_kwh: mean,
+            swing,
+            weekly_swing: cm.get("weekly_swing").and_then(Value::as_f64).unwrap_or(0.0),
+            noise: cm.get("noise").and_then(Value::as_f64).unwrap_or(0.0),
+            days: cm.get("days").and_then(Value::as_usize).unwrap_or(2),
+            step_s,
+            seed: cm.get("seed").and_then(Value::as_u64).unwrap_or(42),
+        }),
+        other => bail!("unknown carbon model '{other}' (constant|diurnal|trace|synthetic)"),
+    }
+}
+
+fn validate_carbon_model(cm: &CarbonModelConfig) -> Result<()> {
+    let positive = |x: f64, what: &str| -> Result<()> {
+        if x > 0.0 && x.is_finite() {
+            Ok(())
+        } else {
+            bail!("carbon model: {what} must be positive, got {x}")
+        }
+    };
+    match cm {
+        CarbonModelConfig::Constant { g_per_kwh } => positive(*g_per_kwh, "intensity"),
+        CarbonModelConfig::Diurnal { mean_g_per_kwh, swing } => {
+            positive(*mean_g_per_kwh, "mean intensity")?;
+            if !(0.0..1.0).contains(swing) {
+                bail!("carbon model: swing must be in [0,1), got {swing}");
+            }
+            Ok(())
+        }
+        CarbonModelConfig::Trace { step_s, samples } => {
+            positive(*step_s, "step_s")?;
+            if samples.is_empty() {
+                bail!("carbon model: trace needs at least one sample");
+            }
+            for s in samples {
+                positive(*s, "trace sample")?;
+            }
+            Ok(())
+        }
+        CarbonModelConfig::Synthetic {
+            mean_g_per_kwh,
+            swing,
+            weekly_swing,
+            noise,
+            days,
+            step_s,
+            ..
+        } => {
+            positive(*mean_g_per_kwh, "mean intensity")?;
+            positive(*step_s, "step_s")?;
+            for (x, what) in
+                [(swing, "swing"), (weekly_swing, "weekly_swing"), (noise, "noise")]
+            {
+                if !(0.0..1.0).contains(x) {
+                    bail!("carbon model: {what} must be in [0,1), got {x}");
+                }
+            }
+            if *days == 0 {
+                bail!("carbon model: synthetic trace needs days >= 1");
+            }
+            Ok(())
+        }
     }
 }
 
@@ -416,6 +566,88 @@ max_new_tokens = 32
 
         let mut c = ExperimentConfig::default();
         c.cluster.carbon_intensity_g_per_kwh = 0.0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn carbon_model_toml_roundtrip() {
+        // diurnal
+        let doc = r#"
+[cluster]
+carbon_intensity_g_per_kwh = 50.0
+
+[cluster.carbon]
+model = "diurnal"
+mean_g_per_kwh = 80.0
+swing = 0.25
+"#;
+        let c = ExperimentConfig::from_value(&toml::parse(doc).unwrap()).unwrap();
+        assert_eq!(
+            c.cluster.carbon,
+            CarbonModelConfig::Diurnal { mean_g_per_kwh: 80.0, swing: 0.25 }
+        );
+        // the routing scalar follows the model's mean
+        assert_eq!(c.cluster.carbon_intensity_g_per_kwh, 80.0);
+
+        // explicit trace with inline samples
+        let doc = r#"
+[cluster.carbon]
+model = "trace"
+step_s = 1800.0
+samples = [40.0, 90.0, 60.0]
+"#;
+        let c = ExperimentConfig::from_value(&toml::parse(doc).unwrap()).unwrap();
+        let CarbonModelConfig::Trace { step_s, ref samples } = c.cluster.carbon else {
+            panic!("expected trace model, got {:?}", c.cluster.carbon)
+        };
+        assert_eq!(step_s, 1800.0);
+        assert_eq!(samples, &vec![40.0, 90.0, 60.0]);
+        let mean = (40.0 + 90.0 + 60.0) / 3.0;
+        assert!((c.cluster.carbon_intensity_g_per_kwh - mean).abs() < 1e-12);
+
+        // synthetic with defaults filled in
+        let doc = r#"
+[cluster.carbon]
+model = "synthetic"
+noise = 0.05
+days = 3
+seed = 7
+"#;
+        let c = ExperimentConfig::from_value(&toml::parse(doc).unwrap()).unwrap();
+        assert_eq!(
+            c.cluster.carbon,
+            CarbonModelConfig::Synthetic {
+                mean_g_per_kwh: 69.0,
+                swing: 0.3,
+                weekly_swing: 0.0,
+                noise: 0.05,
+                days: 3,
+                step_s: 900.0,
+                seed: 7,
+            }
+        );
+
+        // no [cluster.carbon] table: constant at the scalar (back-compat)
+        let doc = "[cluster]\ncarbon_intensity_g_per_kwh = 120.0\n";
+        let c = ExperimentConfig::from_value(&toml::parse(doc).unwrap()).unwrap();
+        assert_eq!(c.cluster.carbon, CarbonModelConfig::Constant { g_per_kwh: 120.0 });
+    }
+
+    #[test]
+    fn carbon_model_rejects_bad_configs() {
+        let parse = |doc: &str| ExperimentConfig::from_value(&toml::parse(doc).unwrap());
+        assert!(parse("[cluster.carbon]\nmodel = \"volcanic\"\n").is_err());
+        assert!(parse("[cluster.carbon]\nmodel = \"trace\"\n").is_err()); // no samples
+        assert!(parse("[cluster.carbon]\nmodel = \"trace\"\nsamples = [10.0, -1.0]\n").is_err());
+        // non-numeric samples are rejected, not silently dropped
+        assert!(
+            parse("[cluster.carbon]\nmodel = \"trace\"\nsamples = [10.0, \"oops\"]\n").is_err()
+        );
+        assert!(parse("[cluster.carbon]\nmodel = \"diurnal\"\nswing = 1.5\n").is_err());
+        assert!(parse("[cluster.carbon]\nmodel = \"synthetic\"\ndays = 0\n").is_err());
+
+        let mut c = ExperimentConfig::default();
+        c.cluster.carbon = CarbonModelConfig::Constant { g_per_kwh: -3.0 };
         assert!(c.validate().is_err());
     }
 

@@ -11,10 +11,24 @@
 //! latency-aware); each device, when free, launches a batch of up to
 //! `batch_size` queued prompts — or, under [`BatchPolicy::WaitFill`],
 //! waits up to the timeout for the batch to fill.
+//!
+//! ## Temporal shifting
+//!
+//! With a [`GridShiftConfig`] present, the coordinator adds the *time*
+//! axis (see `grid` module docs): `Deferrable` prompts are held in a
+//! deferral queue and released into the forecast low-carbon window that
+//! still fits their deadline (a safety margin covering batch occupancy
+//! and current backlog guards against violations); the
+//! `forecast-carbon-aware` strategy prices each (device, start-time)
+//! pair as `energy × forecast intensity at projected execution time`.
+//! Every batch posts its run-at-arrival counterfactual to the
+//! [`EnergyLedger`], so results report *realized* savings rather than
+//! promised ones.
 
 use std::collections::VecDeque;
 
 use crate::cluster::Cluster;
+use crate::grid::{shift, ForecastKind, Forecaster, GridTrace};
 use crate::simulator::{simulate_batch, BatchWork, EventQueue};
 use crate::telemetry::EnergyLedger;
 use crate::util::stats::{Histogram, Summary};
@@ -31,14 +45,49 @@ pub enum BatchPolicy {
     WaitFill { timeout_s: f64 },
 }
 
+/// Grid context for temporal shifting and forecast-aware routing.
+#[derive(Debug, Clone)]
+pub struct GridShiftConfig {
+    /// Ground-truth intensity signal. Pair it with
+    /// `CarbonModel::Trace` of the same trace on the cluster so
+    /// planning and carbon accounting agree.
+    pub trace: GridTrace,
+    pub forecaster: ForecastKind,
+    /// History steps the forecaster sees at each decision (≥ one day
+    /// keeps seasonal models useful from t = 0; operators have
+    /// yesterday's grid data).
+    pub lookback_steps: usize,
+    /// Planning horizon cap, steps.
+    pub horizon_steps: usize,
+    /// Hold `Deferrable` prompts for forecast low-carbon windows.
+    pub defer: bool,
+}
+
+impl GridShiftConfig {
+    /// Defaults: two days of lookback, two days of horizon, deferral on.
+    pub fn new(trace: GridTrace, forecaster: ForecastKind) -> Self {
+        let day = trace.steps_per_day();
+        GridShiftConfig {
+            trace,
+            forecaster,
+            lookback_steps: 2 * day,
+            horizon_steps: 2 * day,
+            defer: true,
+        }
+    }
+}
+
 /// Open-loop run parameters.
 #[derive(Debug, Clone)]
 pub struct OnlineConfig {
     pub batch_size: usize,
     pub policy: BatchPolicy,
     /// Routing: "latency-aware" (backlog-aware), "carbon-aware",
-    /// "round-robin", or "all-on-<device>".
+    /// "forecast-carbon-aware", "round-robin", or "all-on-<device>".
     pub strategy: String,
+    /// Grid trace + forecaster for temporal shifting; None restores the
+    /// purely spatial behaviour.
+    pub grid: Option<GridShiftConfig>,
 }
 
 impl Default for OnlineConfig {
@@ -47,6 +96,7 @@ impl Default for OnlineConfig {
             batch_size: 4,
             policy: BatchPolicy::Immediate,
             strategy: "latency-aware".into(),
+            grid: None,
         }
     }
 }
@@ -59,8 +109,18 @@ pub struct OnlineResult {
     pub span_s: f64,
     pub latency: Summary,
     pub latency_hist: Histogram,
+    /// Latency split by SLO class (deferrable latency includes the
+    /// intentional hold time).
+    pub latency_interactive: Summary,
+    pub latency_deferrable: Summary,
+    /// Wait between queue admission and batch launch (the intentional
+    /// deferral hold is *not* counted — see `latency_deferrable`).
     pub queue_wait: Summary,
     pub batch_fill: Summary,
+    /// Prompts held by the deferral queue (released later than arrival).
+    pub deferred: usize,
+    /// Deferrable prompts completing after their deadline.
+    pub deadline_violations: usize,
     /// Per-device utilization (busy / span).
     pub utilization: Vec<(String, f64)>,
     pub ledger: EnergyLedger,
@@ -69,6 +129,8 @@ pub struct OnlineResult {
 #[derive(Debug)]
 enum Event {
     Arrival(usize),
+    /// Deferred prompt `i` released for routing.
+    Release(usize),
     /// Device `d` finished its batch.
     DeviceFree(usize),
     /// WaitFill timeout expired for device d (epoch guards staleness).
@@ -76,7 +138,13 @@ enum Event {
 }
 
 struct DeviceState {
-    queue: VecDeque<usize>,
+    /// Interactive / on-deadline work, as (prompt idx, admit time):
+    /// drained first.
+    queue_hi: VecDeque<(usize, f64)>,
+    /// Released deferred work: yields to interactive traffic, so
+    /// shifting cannot degrade interactive latency beyond the residual
+    /// blocking of one in-flight batch.
+    queue_lo: VecDeque<(usize, f64)>,
     busy: bool,
     /// Virtual seconds of execution so far.
     active_s: f64,
@@ -86,6 +154,12 @@ struct DeviceState {
     epoch: u64,
     /// When the current wait window started, if waiting.
     waiting_since: Option<f64>,
+}
+
+impl DeviceState {
+    fn queued(&self) -> usize {
+        self.queue_hi.len() + self.queue_lo.len()
+    }
 }
 
 /// Run the open-loop simulation over prompts with assigned arrival times.
@@ -105,7 +179,8 @@ pub fn run_online(
 
     let mut devs: Vec<DeviceState> = (0..n_dev)
         .map(|_| DeviceState {
-            queue: VecDeque::new(),
+            queue_hi: VecDeque::new(),
+            queue_lo: VecDeque::new(),
             busy: false,
             active_s: 0.0,
             backlog_s: 0.0,
@@ -114,12 +189,22 @@ pub fn run_online(
         })
         .collect();
 
+    // one forecaster instance per run (deterministic, stateless)
+    let forecaster: Option<Box<dyn Forecaster>> = cfg
+        .grid
+        .as_ref()
+        .map(|g| g.forecaster.build(g.trace.steps_per_day()));
+
     let mut latency = Summary::new();
     let mut latency_hist = Histogram::latency();
+    let mut latency_interactive = Summary::new();
+    let mut latency_deferrable = Summary::new();
     let mut queue_wait = Summary::new();
     let mut batch_fill = Summary::new();
     let mut ledger = EnergyLedger::new(cluster.carbon.clone());
     let mut completed = 0usize;
+    let mut deferred = 0usize;
+    let mut deadline_violations = 0usize;
     let mut span = 0.0f64;
     // completion bookkeeping: (prompt idx, batch start) per in-flight batch
     let mut inflight: Vec<Option<(Vec<usize>, f64)>> = vec![None; n_dev];
@@ -128,11 +213,38 @@ pub fn run_online(
         let now = ev.at;
         match ev.event {
             Event::Arrival(i) => {
-                let d = route(cluster, db, &devs, &prompts[i], cfg);
-                devs[d].backlog_s += db.cost(&cluster.devices[d], &prompts[i], cfg.batch_size).e2e_s;
-                devs[d].queue.push_back(i);
-                maybe_launch(cluster, prompts, db, cfg, &mut devs, d, now, &mut q, &mut inflight,
-                             &mut batch_fill, &mut queue_wait, &mut ledger);
+                let hold = cfg.grid.as_ref().and_then(|g| {
+                    if !g.defer || !prompts[i].slo.is_deferrable() {
+                        return None;
+                    }
+                    let release = plan_release(
+                        g,
+                        forecaster.as_deref().unwrap(),
+                        cluster,
+                        db,
+                        &devs,
+                        &prompts[i],
+                        cfg.batch_size,
+                        now,
+                    );
+                    (release > now + 1e-9).then_some(release)
+                });
+                match hold {
+                    Some(release) => {
+                        deferred += 1;
+                        q.push(release, Event::Release(i));
+                    }
+                    None => {
+                        admit(cluster, prompts, db, cfg, forecaster.as_deref(), &mut devs, i,
+                              false, now, &mut q, &mut inflight, &mut batch_fill,
+                              &mut queue_wait, &mut ledger);
+                    }
+                }
+            }
+            Event::Release(i) => {
+                admit(cluster, prompts, db, cfg, forecaster.as_deref(), &mut devs, i, true,
+                      now, &mut q, &mut inflight, &mut batch_fill, &mut queue_wait,
+                      &mut ledger);
             }
             Event::DeviceFree(d) => {
                 // account the finished batch
@@ -141,6 +253,15 @@ pub fn run_online(
                         let lat = now - prompts[i].arrival_s;
                         latency.add(lat);
                         latency_hist.add(lat);
+                        match prompts[i].slo.deadline_s() {
+                            Some(deadline) => {
+                                latency_deferrable.add(lat);
+                                if lat > deadline + 1e-6 {
+                                    deadline_violations += 1;
+                                }
+                            }
+                            None => latency_interactive.add(lat),
+                        }
                         completed += 1;
                     }
                     span = span.max(now);
@@ -151,7 +272,7 @@ pub fn run_online(
                              &mut batch_fill, &mut queue_wait, &mut ledger);
             }
             Event::BatchTimeout(d, epoch) => {
-                if devs[d].epoch == epoch && !devs[d].busy && !devs[d].queue.is_empty() {
+                if devs[d].epoch == epoch && !devs[d].busy && devs[d].queued() > 0 {
                     devs[d].waiting_since = None;
                     launch(cluster, prompts, db, cfg, &mut devs, d, now, &mut q, &mut inflight,
                            &mut batch_fill, &mut queue_wait, &mut ledger);
@@ -165,8 +286,12 @@ pub fn run_online(
         span_s: span,
         latency,
         latency_hist,
+        latency_interactive,
+        latency_deferrable,
         queue_wait,
         batch_fill,
+        deferred,
+        deadline_violations,
         utilization: cluster
             .devices
             .iter()
@@ -177,13 +302,101 @@ pub fn run_online(
     }
 }
 
-/// On-arrival routing (mirrors server::service::route_online).
+/// Route prompt `i` onto a device queue (`lo` = released deferred work,
+/// which yields to interactive traffic) and try to launch.
+#[allow(clippy::too_many_arguments)]
+fn admit(
+    cluster: &Cluster,
+    prompts: &[Prompt],
+    db: &BenchmarkDb,
+    cfg: &OnlineConfig,
+    forecaster: Option<&dyn Forecaster>,
+    devs: &mut [DeviceState],
+    i: usize,
+    lo: bool,
+    now: f64,
+    q: &mut EventQueue<Event>,
+    inflight: &mut [Option<(Vec<usize>, f64)>],
+    batch_fill: &mut Summary,
+    queue_wait: &mut Summary,
+    ledger: &mut EnergyLedger,
+) {
+    let d = route(cluster, db, devs, &prompts[i], cfg, forecaster, now);
+    devs[d].backlog_s += db.cost(&cluster.devices[d], &prompts[i], cfg.batch_size).e2e_s;
+    if lo {
+        devs[d].queue_lo.push_back((i, now));
+    } else {
+        devs[d].queue_hi.push_back((i, now));
+    }
+    maybe_launch(cluster, prompts, db, cfg, devs, d, now, q, inflight, batch_fill, queue_wait,
+                 ledger);
+}
+
+/// Pick the release time for a deferrable prompt: the cleanest forecast
+/// window reachable before `arrival + deadline − safety`. The safety
+/// margin covers worst-case batch occupancy plus the backlog already in
+/// the cluster, so honoring the release time honours the deadline.
+#[allow(clippy::too_many_arguments)]
+fn plan_release(
+    grid: &GridShiftConfig,
+    forecaster: &dyn Forecaster,
+    cluster: &Cluster,
+    db: &BenchmarkDb,
+    devs: &[DeviceState],
+    p: &Prompt,
+    batch_size: usize,
+    now: f64,
+) -> f64 {
+    let deadline_s = match p.slo.deadline_s() {
+        Some(d) => d,
+        None => return now,
+    };
+    let est = (0..cluster.devices.len())
+        .map(|d| db.cost(&cluster.devices[d], p, batch_size).e2e_s)
+        .fold(f64::MAX, f64::min);
+    let backlog: f64 = devs.iter().map(|d| d.backlog_s).sum();
+    // the margin must absorb worst-case batch occupancy, today's
+    // backlog, AND the pile-up of other deferred prompts releasing into
+    // the same clean window — 10 % of the deadline covers that pile-up
+    // generously at any sane load while barely shrinking the set of
+    // reachable clean windows
+    let safety = (3.0 * batch_size as f64 * est + backlog)
+        .max(0.10 * deadline_s)
+        .max(120.0);
+    let latest_start = p.arrival_s + deadline_s - safety;
+    if latest_start <= now {
+        return now; // no slack: behave like an interactive prompt
+    }
+    let step = grid.trace.step_s;
+    let horizon = ((((latest_start - now) / step).floor() as usize) + 1).min(grid.horizon_steps);
+    if horizon == 0 {
+        return now;
+    }
+    let step_now = grid.trace.step_of(now);
+    let history = grid.trace.history(step_now, grid.lookback_steps);
+    let forecast = forecaster.forecast(&history, horizon);
+    let run_steps = ((est * batch_size as f64 / step).ceil() as usize).max(1);
+    let j = shift::best_start_step(&forecast, horizon - 1, run_steps);
+    if j == 0 {
+        // the very next step is already the cleanest reachable window:
+        // no predicted benefit to waiting, dispatch immediately
+        return now;
+    }
+    // forecast[j] predicts trace step `step_now + 1 + j` (history ends
+    // at step_now inclusive), so release at that step's start
+    ((step_now + 1 + j as i64) as f64 * step).max(now).min(latest_start)
+}
+
+/// On-arrival routing (mirrors server::service::route_online, plus the
+/// forecast-carbon-aware strategy).
 fn route(
     cluster: &Cluster,
     db: &BenchmarkDb,
     devs: &[DeviceState],
     p: &Prompt,
     cfg: &OnlineConfig,
+    forecaster: Option<&dyn Forecaster>,
+    now: f64,
 ) -> usize {
     let n = cluster.devices.len();
     if let Some(name) = cfg.strategy.strip_prefix("all-on-") {
@@ -191,6 +404,36 @@ fn route(
     }
     match cfg.strategy.as_str() {
         "carbon-aware" => argmin(n, |d| db.cost(&cluster.devices[d], p, cfg.batch_size).carbon_kg),
+        "forecast-carbon-aware" => match (&cfg.grid, forecaster) {
+            (Some(g), Some(f)) => {
+                // one forecast per routing decision: fit once on the
+                // history up to now, then index per device. forecast[k]
+                // predicts trace step `step_now + 1 + k`; an execution
+                // landing inside the current step uses the observed
+                // current sample (history's last entry).
+                let step_now = g.trace.step_of(now);
+                let history = g.trace.history(step_now, g.lookback_steps);
+                let current = history.last().copied().unwrap_or(0.0);
+                let per_dev: Vec<(f64, usize)> = (0..n)
+                    .map(|d| {
+                        let c = db.cost(&cluster.devices[d], p, cfg.batch_size);
+                        let exec_t = now + devs[d].backlog_s + 0.5 * c.e2e_s;
+                        let ahead = (g.trace.step_of(exec_t) - step_now).max(0) as usize;
+                        (c.energy_kwh, ahead.min(g.horizon_steps.max(1)))
+                    })
+                    .collect();
+                let max_ahead = per_dev.iter().map(|&(_, a)| a).max().unwrap_or(0);
+                let forecast =
+                    if max_ahead > 0 { f.forecast(&history, max_ahead) } else { Vec::new() };
+                argmin(n, |d| {
+                    let (energy, ahead) = per_dev[d];
+                    let intensity = if ahead == 0 { current } else { forecast[ahead - 1] };
+                    energy * intensity
+                })
+            }
+            // degenerate case without a grid signal: arrival-time pricing
+            _ => argmin(n, |d| db.cost(&cluster.devices[d], p, cfg.batch_size).carbon_kg),
+        },
         "round-robin" => (p.id as usize) % n,
         _ => argmin(n, |d| {
             devs[d].backlog_s + db.cost(&cluster.devices[d], p, cfg.batch_size).e2e_s
@@ -213,10 +456,10 @@ fn maybe_launch(
     queue_wait: &mut Summary,
     ledger: &mut EnergyLedger,
 ) {
-    if devs[d].busy || devs[d].queue.is_empty() {
+    if devs[d].busy || devs[d].queued() == 0 {
         return;
     }
-    let full = devs[d].queue.len() >= cfg.batch_size;
+    let full = devs[d].queued() >= cfg.batch_size;
     match cfg.policy {
         BatchPolicy::Immediate => {
             launch(cluster, prompts, db, cfg, devs, d, now, q, inflight, batch_fill, queue_wait, ledger)
@@ -251,10 +494,22 @@ fn launch(
     ledger: &mut EnergyLedger,
 ) {
     let dev = &cluster.devices[d];
-    let take = devs[d].queue.len().min(cfg.batch_size);
-    let members: Vec<usize> = devs[d].queue.drain(..take).collect();
-    for &i in &members {
-        queue_wait.add(now - prompts[i].arrival_s);
+    let take = devs[d].queued().min(cfg.batch_size);
+    let mut members: Vec<usize> = Vec::with_capacity(take);
+    let mut admitted: Vec<f64> = Vec::with_capacity(take);
+    while members.len() < take {
+        match devs[d].queue_hi.pop_front().or_else(|| devs[d].queue_lo.pop_front()) {
+            Some((i, at)) => {
+                members.push(i);
+                admitted.push(at);
+            }
+            None => break,
+        }
+    }
+    for (&i, &at) in members.iter().zip(&admitted) {
+        // wait measured from admission, so the intentional deferral
+        // hold does not masquerade as queueing contention
+        queue_wait.add(now - at);
         devs[d].backlog_s =
             (devs[d].backlog_s - db.cost(dev, &prompts[i], cfg.batch_size).e2e_s).max(0.0);
     }
@@ -268,7 +523,14 @@ fn launch(
             .collect(),
     );
     let timing = simulate_batch(dev, &work, None);
-    ledger.post_batch(&dev.name, timing.energy_kwh, timing.total_s, now + timing.total_s);
+    let arrivals: Vec<f64> = members.iter().map(|&i| prompts[i].arrival_s).collect();
+    ledger.post_batch_shifted(
+        &dev.name,
+        timing.energy_kwh,
+        timing.total_s,
+        now + timing.total_s,
+        &arrivals,
+    );
     devs[d].busy = true;
     inflight[d] = Some((members, now));
     q.push(now + timing.total_s, Event::DeviceFree(d));
@@ -290,6 +552,7 @@ fn argmin(n: usize, mut f: impl FnMut(usize) -> f64) -> usize {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cluster::CarbonModel;
     use crate::config::{Arrival, ExperimentConfig};
     use crate::workload::{trace, Corpus};
 
@@ -303,6 +566,26 @@ mod tests {
         (cluster, corpus.prompts, db)
     }
 
+    /// Diurnal-trace cluster with arrivals spread over a day and a
+    /// seeded deferrable fraction.
+    fn shifting_setup(
+        n: usize,
+        deferrable_frac: f64,
+    ) -> (Cluster, Vec<Prompt>, BenchmarkDb, GridShiftConfig) {
+        let mut cfg = ExperimentConfig::default();
+        cfg.workload.prompts = n;
+        let mut cluster = Cluster::from_config(&cfg.cluster);
+        let grid_trace = CarbonModel::diurnal(69.0, 0.3).to_trace(900.0);
+        cluster.carbon = CarbonModel::from_trace(grid_trace.clone());
+        let mut corpus = Corpus::generate(&cfg.workload);
+        // ~one arrival every 3 min: the trace spans most of a day
+        trace::assign_arrivals(&mut corpus.prompts, Arrival::Open { rate: 1.0 / 180.0 }, 7);
+        trace::assign_slos(&mut corpus.prompts, deferrable_frac, 10.0 * 3600.0, 21);
+        let db = BenchmarkDb::build(&cluster, &[1, 4, 8], 3, 69.0, 1);
+        let grid = GridShiftConfig::new(grid_trace, ForecastKind::Harmonic);
+        (cluster, corpus.prompts, db, grid)
+    }
+
     #[test]
     fn all_requests_complete() {
         let (cluster, prompts, db) = setup(80, 0.5);
@@ -312,6 +595,10 @@ mod tests {
         assert!(r.latency.mean() > 0.0);
         let util_sum: f64 = r.utilization.iter().map(|(_, u)| u).sum();
         assert!(util_sum > 0.0);
+        // no grid context: nothing deferred, nothing violated
+        assert_eq!(r.deferred, 0);
+        assert_eq!(r.deadline_violations, 0);
+        assert_eq!(r.latency_interactive.count() as usize, 80);
     }
 
     #[test]
@@ -385,5 +672,104 @@ mod tests {
         assert_eq!(r.completed, 30);
         let jetson_util = r.utilization.iter().find(|(n, _)| n.contains("jetson")).unwrap().1;
         assert_eq!(jetson_util, 0.0);
+    }
+
+    #[test]
+    fn shifting_defers_and_saves_carbon_with_zero_violations() {
+        let (cluster, prompts, db, grid) = shifting_setup(200, 0.5);
+        let baseline = run_online(
+            &cluster,
+            &prompts,
+            &db,
+            &OnlineConfig { strategy: "carbon-aware".into(), ..OnlineConfig::default() },
+        );
+        let shifted = run_online(
+            &cluster,
+            &prompts,
+            &db,
+            &OnlineConfig {
+                strategy: "forecast-carbon-aware".into(),
+                grid: Some(grid),
+                ..OnlineConfig::default()
+            },
+        );
+        assert_eq!(shifted.completed, 200);
+        assert!(shifted.deferred > 0, "nothing was deferred");
+        assert_eq!(shifted.deadline_violations, 0);
+        // deferral must realize positive savings vs run-at-arrival…
+        assert!(
+            shifted.ledger.realized_savings_kg() > 0.0,
+            "savings {}",
+            shifted.ledger.realized_savings_kg()
+        );
+        // …and beat the arrival-time carbon-aware baseline outright
+        let (_, _, base_kg) = baseline.ledger.totals();
+        let (_, _, shift_kg) = shifted.ledger.totals();
+        assert!(
+            shift_kg < base_kg,
+            "shifted {shift_kg} vs baseline {base_kg}"
+        );
+        // interactive prompts were not sacrificed for the savings
+        assert!(shifted.latency_interactive.count() > 0);
+        assert!(
+            shifted.latency_interactive.mean() < baseline.latency_interactive.mean() * 1.15,
+            "interactive latency {} vs baseline {}",
+            shifted.latency_interactive.mean(),
+            baseline.latency_interactive.mean()
+        );
+        // deferrable latency includes the hold, so it dwarfs interactive
+        assert!(shifted.latency_deferrable.mean() > shifted.latency_interactive.mean());
+    }
+
+    #[test]
+    fn shifting_deterministic() {
+        let (cluster, prompts, db, grid) = shifting_setup(80, 0.4);
+        let cfg = OnlineConfig {
+            strategy: "forecast-carbon-aware".into(),
+            grid: Some(grid),
+            ..OnlineConfig::default()
+        };
+        let a = run_online(&cluster, &prompts, &db, &cfg);
+        let b = run_online(&cluster, &prompts, &db, &cfg);
+        assert_eq!(a.span_s, b.span_s);
+        assert_eq!(a.deferred, b.deferred);
+        assert_eq!(a.ledger.realized_savings_kg(), b.ledger.realized_savings_kg());
+    }
+
+    #[test]
+    fn deferral_off_leaves_trace_runs_unshifted() {
+        let (cluster, prompts, db, mut grid) = shifting_setup(60, 0.5);
+        grid.defer = false;
+        let r = run_online(
+            &cluster,
+            &prompts,
+            &db,
+            &OnlineConfig {
+                strategy: "forecast-carbon-aware".into(),
+                grid: Some(grid),
+                ..OnlineConfig::default()
+            },
+        );
+        assert_eq!(r.completed, 60);
+        assert_eq!(r.deferred, 0);
+    }
+
+    #[test]
+    fn tight_deadlines_run_immediately() {
+        let (cluster, mut prompts, db, grid) = shifting_setup(40, 1.0);
+        // deadlines shorter than the safety margin: nothing can shift
+        trace::assign_slos(&mut prompts, 1.0, 60.0, 3);
+        let r = run_online(
+            &cluster,
+            &prompts,
+            &db,
+            &OnlineConfig {
+                strategy: "forecast-carbon-aware".into(),
+                grid: Some(grid),
+                ..OnlineConfig::default()
+            },
+        );
+        assert_eq!(r.completed, 40);
+        assert_eq!(r.deferred, 0);
     }
 }

@@ -15,16 +15,22 @@
 //! - **complexity-aware** — CS-threshold routing (simple → efficient
 //!   device, complex → capable device), the intro's "hybrid paradigm";
 //! - **carbon-cap** — latency-aware subject to a carbon budget: greedily
-//!   spends a carbon allowance where it buys the most speedup.
+//!   spends a carbon allowance where it buys the most speedup;
+//! - **forecast-carbon-aware** — prices each (device, start-time) pair
+//!   with *forecast* grid intensity at the projected execution time
+//!   (the grid subsystem's spatial+temporal strategy): under a
+//!   time-varying carbon model, placing a prompt on a device also picks
+//!   *when* it runs, and this strategy is the first to exploit that.
 //!
 //! Every strategy is a pure function from (prompts, context) to a device
 //! assignment — property-tested for totality and bounds.
 
 use crate::cluster::Cluster;
+use crate::grid::{ForecastKind, Forecaster};
 use crate::workload::Prompt;
 use anyhow::{anyhow, bail, Result};
 
-use super::estimator::BenchmarkDb;
+use super::estimator::{BenchmarkDb, CostEstimate};
 
 /// Routing context handed to strategies.
 pub struct RouteContext<'a> {
@@ -207,10 +213,84 @@ impl Strategy for CarbonCap {
     }
 }
 
+/// Extension (grid subsystem): forecast-priced spatio-temporal routing.
+///
+/// The cluster's carbon model doubles as the observed grid signal: the
+/// strategy samples its past (two days up to the first arrival), fits
+/// the configured forecaster, and then greedily places prompts — in
+/// LPT order, mirroring [`LatencyAware`] — on the device minimizing
+/// `energy × forecast intensity at the projected mid-execution time`
+/// given the load already packed onto that device. Under a constant
+/// model this degenerates to carbon-aware placement; under a diurnal or
+/// trace model it trades devices *and* hours.
+pub struct ForecastCarbonAware {
+    pub forecaster: ForecastKind,
+    /// Discretization of the forecast curve, seconds.
+    pub step_s: f64,
+}
+
+impl Strategy for ForecastCarbonAware {
+    fn name(&self) -> String {
+        format!("forecast-carbon-aware@{}", self.forecaster.name())
+    }
+    fn assign(&self, prompts: &[Prompt], ctx: &RouteContext) -> Vec<usize> {
+        let n_dev = ctx.cluster.devices.len();
+        let t0 = prompts.iter().map(|p| p.arrival_s).fold(f64::INFINITY, f64::min);
+        let t0 = if t0.is_finite() { t0 } else { 0.0 };
+        // flatten the cluster's carbon model into the planning trace the
+        // grid subsystem already knows how to sample and forecast
+        let planning = ctx.cluster.carbon.to_trace(self.step_s);
+        let steps_per_day = planning.steps_per_day();
+        let step0 = planning.step_of(t0);
+        let history = planning.history(step0, 2 * steps_per_day);
+        let current = history.last().copied().unwrap_or(0.0);
+        let forecast = self.forecaster.build(steps_per_day).forecast(&history, 2 * steps_per_day);
+        // forecast[k] predicts trace step `step0 + 1 + k`; offsets inside
+        // the current step use the observed current sample
+        let intensity_after = |dt: f64| -> f64 {
+            let ahead = planning.step_of(t0 + dt.max(0.0)) - step0;
+            if ahead <= 0 {
+                current
+            } else {
+                forecast[(ahead as usize - 1).min(forecast.len() - 1)]
+            }
+        };
+
+        let costs: Vec<Vec<CostEstimate>> = prompts
+            .iter()
+            .map(|p| {
+                (0..n_dev)
+                    .map(|d| ctx.db.cost(&ctx.cluster.devices[d], p, ctx.batch_size))
+                    .collect()
+            })
+            .collect();
+        // LPT order (hardest first), then place at the cheapest
+        // projected (device, start-time) carbon price
+        let mut order: Vec<usize> = (0..prompts.len()).collect();
+        order.sort_by(|&a, &b| {
+            let ka = costs[a].iter().map(|c| c.e2e_s).fold(f64::MAX, f64::min);
+            let kb = costs[b].iter().map(|c| c.e2e_s).fold(f64::MAX, f64::min);
+            kb.partial_cmp(&ka).unwrap_or(std::cmp::Ordering::Equal)
+        });
+        let mut load = vec![0.0f64; n_dev];
+        let mut out = vec![0usize; prompts.len()];
+        for idx in order {
+            let d = argmin(n_dev, |d| {
+                let c = &costs[idx][d];
+                c.energy_kwh * intensity_after(load[d] + 0.5 * c.e2e_s)
+            });
+            load[d] += costs[idx][d].e2e_s;
+            out[idx] = d;
+        }
+        out
+    }
+}
+
 /// Build a strategy from its config name.
 ///
 /// Recognized: `all-on-<device-name>`, `carbon-aware`, `latency-aware`,
-/// `round-robin`, `complexity-aware[@threshold]`, `carbon-cap@<kg>`.
+/// `round-robin`, `complexity-aware[@threshold]`, `carbon-cap@<kg>`,
+/// `forecast-carbon-aware[@<forecaster>]`.
 pub fn build(name: &str, cluster: &Cluster) -> Result<Box<dyn Strategy>> {
     if let Some(dev) = name.strip_prefix("all-on-") {
         let idx = cluster
@@ -238,9 +318,20 @@ pub fn build(name: &str, cluster: &Cluster) -> Result<Box<dyn Strategy>> {
         let budget_kg: f64 = b.parse().map_err(|_| anyhow!("bad budget in '{name}'"))?;
         return Ok(Box::new(CarbonCap { budget_kg }));
     }
+    if name == "forecast-carbon-aware" {
+        return Ok(Box::new(ForecastCarbonAware {
+            forecaster: ForecastKind::Harmonic,
+            step_s: 900.0,
+        }));
+    }
+    if let Some(f) = name.strip_prefix("forecast-carbon-aware@") {
+        let forecaster = ForecastKind::parse(f)
+            .ok_or_else(|| anyhow!("unknown forecaster '{f}' in '{name}'"))?;
+        return Ok(Box::new(ForecastCarbonAware { forecaster, step_s: 900.0 }));
+    }
     bail!(
         "unknown strategy '{name}' (all-on-<device>|carbon-aware|latency-aware|\
-         round-robin|complexity-aware[@t]|carbon-cap@<kg>)"
+         round-robin|complexity-aware[@t]|carbon-cap@<kg>|forecast-carbon-aware[@f])"
     )
 }
 
@@ -295,6 +386,8 @@ mod tests {
             "complexity-aware",
             "complexity-aware@0.5",
             "carbon-cap@1e-5",
+            "forecast-carbon-aware",
+            "forecast-carbon-aware@seasonal-naive",
         ];
         property("assignment totality", 24, |rng| {
             let n = rng.below(40) + 1;
@@ -428,5 +521,39 @@ mod tests {
         assert!(build("nope", &cluster).is_err());
         assert!(build("all-on-unknown-device", &cluster).is_err());
         assert!(build("complexity-aware@abc", &cluster).is_err());
+        assert!(build("forecast-carbon-aware@lstm", &cluster).is_err());
+    }
+
+    #[test]
+    fn forecast_carbon_aware_degenerates_under_constant_grid() {
+        // constant intensity cancels out of the price: the strategy must
+        // pick the carbon-minimal device for every prompt
+        let (cluster, db) = setup();
+        let ps = prompts(80, 23);
+        let ctx = RouteContext { cluster: &cluster, db: &db, batch_size: 4 };
+        let fca = build("forecast-carbon-aware", &cluster).unwrap().assign(&ps, &ctx);
+        let ca = CarbonAware.assign(&ps, &ctx);
+        assert_eq!(fca, ca);
+    }
+
+    #[test]
+    fn forecast_carbon_aware_prices_hours_under_diurnal_grid() {
+        use crate::cluster::CarbonModel;
+        // a dirty->clean step trace: queueing into the later (cleaner)
+        // hours must make the strategy spread work differently than
+        // arrival-time carbon-aware does
+        let (mut cluster, db) = setup();
+        cluster.carbon = CarbonModel::diurnal(69.0, 0.3);
+        let mut ps = prompts(300, 29);
+        for p in &mut ps {
+            p.arrival_s = 17.0 * 3600.0; // the evening ramp
+        }
+        let ctx = RouteContext { cluster: &cluster, db: &db, batch_size: 4 };
+        let s = build("forecast-carbon-aware", &cluster).unwrap();
+        let a = s.assign(&ps, &ctx);
+        assert_eq!(a.len(), ps.len());
+        assert!(a.iter().all(|&d| d < cluster.devices.len()));
+        // determinism
+        assert_eq!(a, s.assign(&ps, &ctx));
     }
 }

@@ -1,0 +1,388 @@
+//! Grid-intensity forecasters + held-out scoring.
+//!
+//! A [`Forecaster`] maps an observed history (one intensity sample per
+//! trace step, oldest first) to predictions for the next `horizon`
+//! steps. Four classical baselines are implemented:
+//!
+//! - [`Persistence`] — tomorrow looks like this instant;
+//! - [`Ewma`] — exponentially-weighted level, flat forecast;
+//! - [`SeasonalNaive`] — same step one period (24 h) ago, the standard
+//!   strong baseline for grid signals;
+//! - [`HarmonicLs`] — least-squares fit of a truncated Fourier basis at
+//!   the daily period, extrapolated analytically.
+//!
+//! [`score`] evaluates any forecaster against the held-out tail of a
+//! [`GridTrace`] with MAPE (relative accuracy) and mean bias (signed
+//! g/kWh error) — the two numbers that matter for shifting decisions:
+//! MAPE bounds how wrong window ranking can be, bias says whether the
+//! planner systematically over- or under-estimates intensity.
+
+use super::trace::GridTrace;
+
+/// A grid-intensity forecaster.
+pub trait Forecaster {
+    fn name(&self) -> String;
+
+    /// Predict the `horizon` samples following `history` (oldest
+    /// first). Implementations return exactly `horizon` non-negative
+    /// values; an empty history yields zeros.
+    fn forecast(&self, history: &[f64], horizon: usize) -> Vec<f64>;
+}
+
+/// Repeat the last observation.
+pub struct Persistence;
+
+impl Forecaster for Persistence {
+    fn name(&self) -> String {
+        "persistence".into()
+    }
+    fn forecast(&self, history: &[f64], horizon: usize) -> Vec<f64> {
+        let last = history.last().copied().unwrap_or(0.0).max(0.0);
+        vec![last; horizon]
+    }
+}
+
+/// Exponentially-weighted moving average level, forecast flat.
+pub struct Ewma {
+    pub alpha: f64,
+}
+
+impl Forecaster for Ewma {
+    fn name(&self) -> String {
+        format!("ewma@{:.2}", self.alpha)
+    }
+    fn forecast(&self, history: &[f64], horizon: usize) -> Vec<f64> {
+        let mut level = match history.first() {
+            Some(&x) => x,
+            None => return vec![0.0; horizon],
+        };
+        for &x in &history[1..] {
+            level += self.alpha * (x - level);
+        }
+        vec![level.max(0.0); horizon]
+    }
+}
+
+/// The value at the same step one period ago (recursing into earlier
+/// periods for horizons beyond one period). Falls back to persistence
+/// while the history is shorter than a period.
+pub struct SeasonalNaive {
+    /// Season length in steps (24 h for daily grid patterns).
+    pub period: usize,
+}
+
+impl Forecaster for SeasonalNaive {
+    fn name(&self) -> String {
+        format!("seasonal-naive@{}", self.period)
+    }
+    fn forecast(&self, history: &[f64], horizon: usize) -> Vec<f64> {
+        let n = history.len();
+        if n == 0 {
+            return vec![0.0; horizon];
+        }
+        let m = self.period.max(1);
+        (0..horizon)
+            .map(|j| {
+                // forecast step index (0-based from end of history): n + j;
+                // step back whole periods until inside the observations
+                let target = n + j;
+                let back = (j / m + 1) * m;
+                if back <= target && target - back < n {
+                    history[target - back].max(0.0)
+                } else {
+                    history[n - 1].max(0.0)
+                }
+            })
+            .collect()
+    }
+}
+
+/// Least-squares harmonic regression at the daily period:
+/// `y(t) ≈ c0 + Σ_h a_h·cos(2πht/P) + b_h·sin(2πht/P)`.
+pub struct HarmonicLs {
+    pub period: usize,
+    pub harmonics: usize,
+}
+
+impl Forecaster for HarmonicLs {
+    fn name(&self) -> String {
+        format!("harmonic@{}x{}", self.period, self.harmonics)
+    }
+    fn forecast(&self, history: &[f64], horizon: usize) -> Vec<f64> {
+        let n = history.len();
+        let k = 1 + 2 * self.harmonics; // basis size
+        if n == 0 {
+            return vec![0.0; horizon];
+        }
+        if n < k * 2 {
+            // under-determined: flat mean is the honest fallback
+            let mean = history.iter().sum::<f64>() / n as f64;
+            return vec![mean.max(0.0); horizon];
+        }
+        let omega = 2.0 * std::f64::consts::PI / self.period.max(1) as f64;
+        let basis = |t: f64| -> Vec<f64> {
+            let mut row = Vec::with_capacity(k);
+            row.push(1.0);
+            for h in 1..=self.harmonics {
+                row.push((omega * h as f64 * t).cos());
+                row.push((omega * h as f64 * t).sin());
+            }
+            row
+        };
+        // normal equations: (XᵀX) c = Xᵀy
+        let mut ata = vec![vec![0.0f64; k]; k];
+        let mut aty = vec![0.0f64; k];
+        for (t, &y) in history.iter().enumerate() {
+            let row = basis(t as f64);
+            for i in 0..k {
+                aty[i] += row[i] * y;
+                for j in 0..k {
+                    ata[i][j] += row[i] * row[j];
+                }
+            }
+        }
+        let coef = match solve(ata, aty) {
+            Some(c) => c,
+            None => {
+                let mean = history.iter().sum::<f64>() / n as f64;
+                return vec![mean.max(0.0); horizon];
+            }
+        };
+        (0..horizon)
+            .map(|j| {
+                let row = basis((n + j) as f64);
+                row.iter().zip(&coef).map(|(x, c)| x * c).sum::<f64>().max(0.0)
+            })
+            .collect()
+    }
+}
+
+/// Gaussian elimination with partial pivoting for the (tiny) normal
+/// equations; None when singular.
+fn solve(mut a: Vec<Vec<f64>>, mut b: Vec<f64>) -> Option<Vec<f64>> {
+    let n = b.len();
+    for col in 0..n {
+        let pivot = (col..n).max_by(|&i, &j| {
+            a[i][col].abs().partial_cmp(&a[j][col].abs()).unwrap_or(std::cmp::Ordering::Equal)
+        })?;
+        if a[pivot][col].abs() < 1e-9 {
+            return None;
+        }
+        a.swap(col, pivot);
+        b.swap(col, pivot);
+        for row in (col + 1)..n {
+            let f = a[row][col] / a[col][col];
+            for k in col..n {
+                a[row][k] -= f * a[col][k];
+            }
+            b[row] -= f * b[col];
+        }
+    }
+    let mut x = vec![0.0; n];
+    for col in (0..n).rev() {
+        let mut s = b[col];
+        for k in (col + 1)..n {
+            s -= a[col][k] * x[k];
+        }
+        x[col] = s / a[col][col];
+    }
+    Some(x)
+}
+
+/// Named forecaster kinds (config / CLI / bench sweeps).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ForecastKind {
+    Persistence,
+    Ewma,
+    SeasonalNaive,
+    Harmonic,
+}
+
+impl ForecastKind {
+    pub const ALL: [ForecastKind; 4] =
+        [Self::Persistence, Self::Ewma, Self::SeasonalNaive, Self::Harmonic];
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "persistence" => Some(Self::Persistence),
+            "ewma" => Some(Self::Ewma),
+            "seasonal-naive" => Some(Self::SeasonalNaive),
+            "harmonic" => Some(Self::Harmonic),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Persistence => "persistence",
+            Self::Ewma => "ewma",
+            Self::SeasonalNaive => "seasonal-naive",
+            Self::Harmonic => "harmonic",
+        }
+    }
+
+    /// Instantiate with sensible defaults for a trace whose daily
+    /// period is `period_steps` steps.
+    pub fn build(&self, period_steps: usize) -> Box<dyn Forecaster> {
+        match self {
+            Self::Persistence => Box::new(Persistence),
+            Self::Ewma => Box::new(Ewma { alpha: 0.3 }),
+            Self::SeasonalNaive => Box::new(SeasonalNaive { period: period_steps }),
+            Self::Harmonic => Box::new(HarmonicLs { period: period_steps, harmonics: 3 }),
+        }
+    }
+}
+
+/// Held-out accuracy of a forecaster on a trace tail.
+#[derive(Debug, Clone)]
+pub struct ForecastScore {
+    pub forecaster: String,
+    /// Mean absolute percentage error over the holdout, in [0, ∞).
+    pub mape: f64,
+    /// Mean signed error (forecast − truth), g/kWh.
+    pub bias_g: f64,
+    /// Holdout length, steps.
+    pub horizon: usize,
+}
+
+/// Score a forecaster against the last `holdout_frac` of `trace`: the
+/// model sees only the leading samples and predicts the tail in one
+/// shot (the hardest, no-feedback setting).
+pub fn score(f: &dyn Forecaster, trace: &GridTrace, holdout_frac: f64) -> ForecastScore {
+    let n = trace.len();
+    let n_test = ((n as f64 * holdout_frac).round() as usize).clamp(1, n.saturating_sub(1).max(1));
+    let split = n - n_test;
+    let train = &trace.samples()[..split];
+    let test = &trace.samples()[split..];
+    let preds = f.forecast(train, n_test);
+    let mut abs_pct = 0.0;
+    let mut bias = 0.0;
+    for (p, y) in preds.iter().zip(test) {
+        abs_pct += (p - y).abs() / y.max(1e-9);
+        bias += p - y;
+    }
+    ForecastScore {
+        forecaster: f.name(),
+        mape: abs_pct / n_test as f64,
+        bias_g: bias / n_test as f64,
+        horizon: n_test,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grid::trace::SyntheticTrace;
+    use crate::util::check::property;
+    use crate::util::rng::Rng;
+
+    fn periodic_trace(days: usize) -> GridTrace {
+        SyntheticTrace { days, ..SyntheticTrace::default() }.generate()
+    }
+
+    #[test]
+    fn persistence_repeats_last() {
+        let f = Persistence;
+        assert_eq!(f.forecast(&[3.0, 5.0], 3), vec![5.0, 5.0, 5.0]);
+        assert_eq!(f.forecast(&[], 2), vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn ewma_tracks_level() {
+        let f = Ewma { alpha: 0.5 };
+        let out = f.forecast(&[10.0, 20.0], 1);
+        assert!((out[0] - 15.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn seasonal_naive_exact_on_periodic_traces() {
+        property("seasonal-naive exact on periodic traces", 24, |rng: &mut Rng| {
+            // a perfectly periodic trace: 2+ identical days, no noise
+            let days = rng.below(3) + 2;
+            let trace = SyntheticTrace {
+                seed: rng.next_u64(),
+                diurnal_swing: rng.range(0.05, 0.5),
+                days,
+                ..SyntheticTrace::default()
+            }
+            .generate();
+            let period = trace.steps_per_day();
+            let f = SeasonalNaive { period };
+            let hold = period; // predict one full day
+            let split = trace.len() - hold;
+            let preds = f.forecast(&trace.samples()[..split], hold);
+            for (p, y) in preds.iter().zip(&trace.samples()[split..]) {
+                if (p - y).abs() > 1e-9 {
+                    return Err(format!("{p} != {y}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn forecasts_non_negative() {
+        property("forecasts are non-negative", 48, |rng: &mut Rng| {
+            let n = rng.below(120) + 4;
+            let history: Vec<f64> = (0..n).map(|_| rng.range(0.0, 200.0)).collect();
+            let horizon = rng.below(96) + 1;
+            for kind in ForecastKind::ALL {
+                let f = kind.build(24);
+                let out = f.forecast(&history, horizon);
+                if out.len() != horizon {
+                    return Err(format!("{}: {} values for horizon {horizon}", kind.name(), out.len()));
+                }
+                if out.iter().any(|v| !v.is_finite() || *v < 0.0) {
+                    return Err(format!("{}: negative/non-finite forecast", kind.name()));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn harmonic_beats_persistence_on_clean_diurnal() {
+        let trace = periodic_trace(4);
+        let period = trace.steps_per_day();
+        let h = score(&HarmonicLs { period, harmonics: 3 }, &trace, 0.25);
+        let p = score(&Persistence, &trace, 0.25);
+        assert!(
+            h.mape < p.mape * 0.6,
+            "harmonic {:.3} vs persistence {:.3}",
+            h.mape,
+            p.mape
+        );
+        assert!(h.mape < 0.12, "harmonic mape {:.3}", h.mape);
+    }
+
+    #[test]
+    fn seasonal_matches_day_ahead_on_clean_diurnal() {
+        let trace = periodic_trace(3);
+        let s = score(&SeasonalNaive { period: trace.steps_per_day() }, &trace, 0.3);
+        assert!(s.mape < 1e-9, "seasonal mape {}", s.mape);
+        assert!(s.bias_g.abs() < 1e-9);
+    }
+
+    #[test]
+    fn scoring_reports_holdout_length() {
+        let trace = periodic_trace(2);
+        let s = score(&Persistence, &trace, 0.25);
+        assert_eq!(s.horizon, trace.len() / 4);
+        assert!(s.mape > 0.0); // diurnal trace, flat forecast must err
+    }
+
+    #[test]
+    fn kind_roundtrip() {
+        for k in ForecastKind::ALL {
+            assert_eq!(ForecastKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(ForecastKind::parse("lstm"), None);
+    }
+
+    #[test]
+    fn solver_handles_singular() {
+        assert!(solve(vec![vec![1.0, 1.0], vec![1.0, 1.0]], vec![1.0, 2.0]).is_none());
+        let x = solve(vec![vec![2.0, 0.0], vec![0.0, 4.0]], vec![2.0, 8.0]).unwrap();
+        assert!((x[0] - 1.0).abs() < 1e-12 && (x[1] - 2.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,48 @@
+//! Grid-intensity forecasting & temporal shifting.
+//!
+//! The paper converts energy to carbon at a single grid intensity and
+//! routes purely in *space* (which device runs a prompt). The bigger
+//! sustainability lever is *time*: grid intensity swings ±30 % or more
+//! over a day, so a deferrable prompt executed in the midday solar
+//! trough emits a fraction of the same prompt executed in the evening
+//! ramp. This module adds that axis:
+//!
+//! - [`trace`] — [`GridTrace`]: the ground-truth intensity time series
+//!   (periodic, linearly interpolated), synthetic generators (diurnal
+//!   duck + weekly pattern + seeded AR(1) noise), absorbing the old
+//!   `cluster::CarbonModel` cases as degenerate one-sample / 24-sample
+//!   traces;
+//! - [`forecast`] — the [`Forecaster`] trait with persistence, EWMA,
+//!   seasonal-naive and harmonic least-squares baselines, plus
+//!   MAPE/bias scoring against held-out trace tails;
+//! - [`shift`] — the planner that turns a forecast into a start time:
+//!   cleanest feasible window within the deadline slack.
+//!
+//! ## Deferral model
+//!
+//! Prompts carry an SLO class ([`crate::workload::SloClass`]):
+//! `Interactive` prompts route the instant they arrive, exactly as
+//! before; `Deferrable { deadline_s }` prompts may be *held* by the
+//! open-loop coordinator (`coordinator::online`) and released into a
+//! forecast low-carbon window. The planner never schedules a release
+//! later than `arrival + deadline − safety`, where the safety margin is
+//! a multiple of the prompt's estimated service time, so deadline
+//! violations indicate a real bug rather than an unlucky forecast.
+//!
+//! ## Counterfactual accounting
+//!
+//! Shifting claims are only meaningful against a baseline. The
+//! [`crate::telemetry::EnergyLedger`] therefore records, alongside the
+//! realized carbon of every batch, the *run-at-arrival counterfactual*:
+//! the same energy priced at each member's arrival instant. The
+//! difference (`realized_savings_kg`) is the carbon the scheduler
+//! actually moved out of dirty hours — it is zero for non-shifting
+//! schedulers (up to batching delay) and strictly positive when
+//! deferral works.
+
+pub mod forecast;
+pub mod shift;
+pub mod trace;
+
+pub use forecast::{score, ForecastKind, ForecastScore, Forecaster};
+pub use trace::{GridTrace, SyntheticTrace};

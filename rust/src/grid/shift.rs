@@ -1,0 +1,77 @@
+//! Temporal-shifting planner: pick the cleanest feasible start window.
+//!
+//! Given a forecast intensity curve (one value per trace step, starting
+//! at "now"), a deferrable prompt's planning problem is: choose a start
+//! offset within its deadline slack that minimizes the mean forecast
+//! intensity over the job's run window. [`best_start_step`] solves it
+//! exactly by scanning every candidate offset — forecast horizons are a
+//! few hundred steps, so brute force is both simplest and fast enough
+//! for the DES hot path.
+//!
+//! Determinism: ties break toward the *earliest* start, so identical
+//! forecasts always produce identical plans (and bias the system toward
+//! lower latency when carbon is indifferent).
+
+/// Mean forecast intensity over a `run_steps` window starting at `j`
+/// (clamped to the forecast tail; the forecast's last value stands in
+/// for anything beyond the horizon).
+pub fn window_mean(forecast: &[f64], j: usize, run_steps: usize) -> f64 {
+    assert!(!forecast.is_empty() && run_steps > 0);
+    let last = *forecast.last().unwrap();
+    let mut sum = 0.0;
+    for k in 0..run_steps {
+        sum += forecast.get(j + k).copied().unwrap_or(last);
+    }
+    sum / run_steps as f64
+}
+
+/// The start offset in `0..=latest` (steps from the forecast origin)
+/// whose `run_steps` window has the lowest mean forecast intensity.
+/// `latest` is clamped to the forecast length; ties break earliest.
+pub fn best_start_step(forecast: &[f64], latest: usize, run_steps: usize) -> usize {
+    assert!(!forecast.is_empty());
+    let latest = latest.min(forecast.len() - 1);
+    let mut best = 0usize;
+    let mut best_mean = window_mean(forecast, 0, run_steps.max(1));
+    for j in 1..=latest {
+        let m = window_mean(forecast, j, run_steps.max(1));
+        if m < best_mean {
+            best_mean = m;
+            best = j;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn finds_the_trough() {
+        let f = [90.0, 80.0, 40.0, 45.0, 85.0];
+        assert_eq!(best_start_step(&f, 4, 1), 2);
+        // two-step window: mean over [2,3] = 42.5 beats everything
+        assert_eq!(best_start_step(&f, 4, 2), 2);
+    }
+
+    #[test]
+    fn ties_break_earliest() {
+        let f = [50.0, 50.0, 50.0];
+        assert_eq!(best_start_step(&f, 2, 1), 0);
+    }
+
+    #[test]
+    fn latest_clamps_search() {
+        let f = [90.0, 80.0, 10.0];
+        assert_eq!(best_start_step(&f, 1, 1), 1); // trough out of reach
+        assert_eq!(best_start_step(&f, 99, 1), 2); // clamped to len-1
+    }
+
+    #[test]
+    fn window_extends_past_horizon_with_last_value() {
+        let f = [10.0, 30.0];
+        // window of 3 from offset 1: [30, 30, 30]
+        assert!((window_mean(&f, 1, 3) - 30.0).abs() < 1e-12);
+    }
+}

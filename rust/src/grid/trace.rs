@@ -1,0 +1,313 @@
+//! Grid-intensity time series.
+//!
+//! A [`GridTrace`] is the ground-truth carbon signal a simulation runs
+//! against: intensity samples (gCO2e/kWh) on a fixed step, extended
+//! periodically and linearly interpolated between samples. The old
+//! `cluster::CarbonModel` cases are degenerate traces — a constant model
+//! is a one-sample trace, the hourly diurnal profile is a 24-sample
+//! trace — and `CarbonModel::to_trace` converts any model into one.
+//!
+//! [`SyntheticTrace`] generates realistic signals: the diurnal duck
+//! curve (shared with `CarbonModel::diurnal` through
+//! [`diurnal_shape_at`]), a weekday/weekend swing, and seeded AR(1)
+//! noise via [`crate::util::rng::Rng`] so every trace is reproducible
+//! from its seed.
+
+use crate::util::rng::Rng;
+
+/// Raw duck-curve anchors, hour 0..23: cleanest at midday (solar),
+/// dirtiest in the evening ramp, mildly elevated overnight. Shared by
+/// `CarbonModel::diurnal` and the synthetic trace generator.
+pub const DIURNAL_SHAPE: [f64; 24] = [
+    0.35, 0.30, 0.25, 0.20, 0.15, 0.10, 0.00, -0.20, //  0- 7
+    -0.40, -0.60, -0.80, -0.95, -1.00, -1.00, -0.90, -0.70, //  8-15
+    -0.20, 0.40, 0.85, 1.00, 0.95, 0.80, 0.60, 0.45, // 16-23
+];
+
+/// Zero-mean duck shape at a fractional hour of day (piecewise-linear
+/// between the hourly anchors, wrapping midnight). At integer hours this
+/// equals `DIURNAL_SHAPE[h] - mean(DIURNAL_SHAPE)` exactly, which is
+/// what keeps `CarbonModel::diurnal`'s anchor values stable.
+pub fn diurnal_shape_at(hour: f64) -> f64 {
+    let mean: f64 = DIURNAL_SHAPE.iter().sum::<f64>() / 24.0;
+    let h = hour.rem_euclid(24.0);
+    let i = (h.floor() as usize) % 24;
+    let frac = h - h.floor();
+    let a = DIURNAL_SHAPE[i] - mean;
+    let b = DIURNAL_SHAPE[(i + 1) % 24] - mean;
+    a + (b - a) * frac
+}
+
+/// A periodic grid-intensity time series (gCO2e/kWh per step).
+#[derive(Debug, Clone, PartialEq)]
+pub struct GridTrace {
+    pub name: String,
+    /// Seconds between samples.
+    pub step_s: f64,
+    samples: Vec<f64>,
+}
+
+impl GridTrace {
+    /// Build from explicit samples. Panics on empty/non-positive input —
+    /// config loading validates before constructing.
+    pub fn new(name: impl Into<String>, step_s: f64, samples: Vec<f64>) -> Self {
+        assert!(step_s > 0.0, "trace step must be positive");
+        assert!(!samples.is_empty(), "trace needs at least one sample");
+        assert!(
+            samples.iter().all(|s| s.is_finite() && *s > 0.0),
+            "trace samples must be finite and positive"
+        );
+        GridTrace { name: name.into(), step_s, samples }
+    }
+
+    /// Degenerate constant trace (the old `CarbonModel::Constant`).
+    pub fn constant(g_per_kwh: f64) -> Self {
+        Self::new("constant", 3600.0, vec![g_per_kwh])
+    }
+
+    /// Sample a closure over `n` steps: `f(t_seconds) -> g/kWh`.
+    pub fn from_fn(
+        name: impl Into<String>,
+        step_s: f64,
+        n: usize,
+        mut f: impl FnMut(f64) -> f64,
+    ) -> Self {
+        let samples = (0..n).map(|k| f(k as f64 * step_s)).collect();
+        Self::new(name, step_s, samples)
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false // the constructor guarantees at least one sample
+    }
+
+    pub fn samples(&self) -> &[f64] {
+        &self.samples
+    }
+
+    /// One full period of the trace, seconds.
+    pub fn duration_s(&self) -> f64 {
+        self.step_s * self.samples.len() as f64
+    }
+
+    /// Mean intensity over one period.
+    pub fn mean(&self) -> f64 {
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    /// Intensity at time `t` (seconds): periodic extension, linear
+    /// interpolation between neighbouring samples.
+    pub fn intensity_at(&self, t: f64) -> f64 {
+        let n = self.samples.len();
+        if n == 1 {
+            return self.samples[0];
+        }
+        let x = t.rem_euclid(self.duration_s()) / self.step_s; // [0, n)
+        let i = (x.floor() as usize).min(n - 1);
+        let frac = x - i as f64;
+        let a = self.samples[i];
+        let b = self.samples[(i + 1) % n];
+        a + (b - a) * frac
+    }
+
+    /// The sample for step `k` under periodic extension (negative steps
+    /// wrap into the previous period).
+    pub fn sample_at_step(&self, k: i64) -> f64 {
+        let n = self.samples.len() as i64;
+        self.samples[k.rem_euclid(n) as usize]
+    }
+
+    /// The step index containing time `t` (may be negative).
+    pub fn step_of(&self, t: f64) -> i64 {
+        (t / self.step_s).floor() as i64
+    }
+
+    /// The last `lookback` samples ending at `now_step` inclusive —
+    /// what a forecaster is allowed to see at that moment.
+    pub fn history(&self, now_step: i64, lookback: usize) -> Vec<f64> {
+        (0..lookback)
+            .map(|j| self.sample_at_step(now_step - (lookback as i64 - 1 - j as i64)))
+            .collect()
+    }
+
+    /// Steps per 24 h (the seasonal period for daily patterns).
+    pub fn steps_per_day(&self) -> usize {
+        ((86_400.0 / self.step_s).round() as usize).max(1)
+    }
+}
+
+/// Parameters for a synthetic grid trace.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SyntheticTrace {
+    pub name: String,
+    pub mean_g_per_kwh: f64,
+    /// Fractional amplitude of the diurnal duck curve (0.3 = ±30 %).
+    pub diurnal_swing: f64,
+    /// Fractional weekday/weekend modulation (weekdays dirtier).
+    pub weekly_swing: f64,
+    /// Std-dev of the multiplicative AR(1) noise, as a fraction of mean.
+    pub noise_frac: f64,
+    pub days: usize,
+    pub step_s: f64,
+    pub seed: u64,
+}
+
+impl Default for SyntheticTrace {
+    fn default() -> Self {
+        SyntheticTrace {
+            name: "synthetic".into(),
+            mean_g_per_kwh: 69.0,
+            diurnal_swing: 0.3,
+            weekly_swing: 0.0,
+            noise_frac: 0.0,
+            days: 2,
+            step_s: 900.0,
+            seed: 42,
+        }
+    }
+}
+
+impl SyntheticTrace {
+    /// Generate the trace: diurnal + weekly pattern + seeded AR(1)
+    /// noise, clamped away from zero so intensities stay physical.
+    pub fn generate(&self) -> GridTrace {
+        assert!(self.mean_g_per_kwh > 0.0 && self.days > 0 && self.step_s > 0.0);
+        assert!((0.0..1.0).contains(&self.diurnal_swing));
+        assert!((0.0..1.0).contains(&self.weekly_swing));
+        assert!((0.0..1.0).contains(&self.noise_frac));
+        let n = ((self.days as f64 * 86_400.0) / self.step_s).round() as usize;
+        let mut rng = Rng::new(self.seed ^ 0x6_12D_7_12ACE);
+        let mut ar = 0.0f64; // AR(1) state, unit variance in steady state
+        const RHO: f64 = 0.9;
+        // weekday/weekend pattern (+0.4 weekdays, -1.0 weekend — zero
+        // mean over a full week), re-centred over the days actually
+        // generated so the trace mean stays at mean_g_per_kwh even for
+        // partial weeks
+        let weekly_raw: Vec<f64> = (0..self.days)
+            .map(|d| if d % 7 < 5 { 0.4 } else { -1.0 })
+            .collect();
+        let weekly_mean = weekly_raw.iter().sum::<f64>() / self.days as f64;
+        let mut samples = Vec::with_capacity(n);
+        for k in 0..n {
+            let t = k as f64 * self.step_s;
+            let hour = (t / 3600.0) % 24.0;
+            let day = (((t / 86_400.0).floor() as usize) % self.days.max(1)).min(self.days - 1);
+            let weekly = weekly_raw[day] - weekly_mean;
+            ar = RHO * ar + (1.0 - RHO * RHO).sqrt() * rng.gaussian();
+            let noise = (self.noise_frac * ar).clamp(-0.9, 0.9);
+            let v = self.mean_g_per_kwh
+                * (1.0 + self.diurnal_swing * diurnal_shape_at(hour) + self.weekly_swing * weekly)
+                * (1.0 + noise);
+            samples.push(v.max(self.mean_g_per_kwh * 0.02));
+        }
+        GridTrace::new(self.name.clone(), self.step_s, samples)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::property;
+
+    #[test]
+    fn constant_trace_is_flat() {
+        let t = GridTrace::constant(69.0);
+        assert_eq!(t.intensity_at(0.0), 69.0);
+        assert_eq!(t.intensity_at(1e7), 69.0);
+        assert_eq!(t.intensity_at(-5.0), 69.0);
+        assert_eq!(t.mean(), 69.0);
+    }
+
+    #[test]
+    fn interpolates_between_samples_and_wraps() {
+        let t = GridTrace::new("tri", 100.0, vec![10.0, 30.0, 20.0]);
+        assert_eq!(t.intensity_at(0.0), 10.0);
+        assert_eq!(t.intensity_at(50.0), 20.0); // midway 10 -> 30
+        assert_eq!(t.intensity_at(100.0), 30.0);
+        // last segment wraps back to the first sample: 20 -> 10
+        assert!((t.intensity_at(250.0) - 15.0).abs() < 1e-12);
+        // periodic extension
+        assert!((t.intensity_at(350.0) - t.intensity_at(50.0)).abs() < 1e-12);
+        assert!((t.intensity_at(-250.0) - t.intensity_at(50.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn step_indexing_wraps_negative() {
+        let t = GridTrace::new("tri", 100.0, vec![1.0, 2.0, 3.0]);
+        assert_eq!(t.sample_at_step(0), 1.0);
+        assert_eq!(t.sample_at_step(4), 2.0);
+        assert_eq!(t.sample_at_step(-1), 3.0);
+        assert_eq!(t.step_of(250.0), 2);
+        assert_eq!(t.step_of(-1.0), -1);
+    }
+
+    #[test]
+    fn history_ends_at_now_step() {
+        let t = GridTrace::new("tri", 100.0, vec![1.0, 2.0, 3.0]);
+        assert_eq!(t.history(1, 2), vec![1.0, 2.0]);
+        assert_eq!(t.history(0, 3), vec![2.0, 3.0, 1.0]); // wraps back
+    }
+
+    #[test]
+    fn diurnal_shape_matches_anchors_and_is_continuous() {
+        let mean: f64 = DIURNAL_SHAPE.iter().sum::<f64>() / 24.0;
+        for h in 0..24 {
+            assert!(
+                (diurnal_shape_at(h as f64) - (DIURNAL_SHAPE[h] - mean)).abs() < 1e-12,
+                "hour {h}"
+            );
+        }
+        // continuity across midnight
+        let before = diurnal_shape_at(23.999);
+        let after = diurnal_shape_at(0.001);
+        assert!((before - after).abs() < 0.01, "{before} vs {after}");
+    }
+
+    #[test]
+    fn synthetic_deterministic_per_seed_and_plausible() {
+        let spec = SyntheticTrace {
+            weekly_swing: 0.1,
+            noise_frac: 0.05,
+            days: 7,
+            ..SyntheticTrace::default()
+        };
+        let a = spec.generate();
+        let b = spec.generate();
+        assert_eq!(a, b);
+        let c = SyntheticTrace { seed: 43, ..spec }.generate();
+        assert_ne!(a, c);
+        assert_eq!(a.len(), 7 * 96);
+        // mean near the target, midday cleaner than evening on day 0
+        assert!((a.mean() - 69.0).abs() / 69.0 < 0.1, "mean {}", a.mean());
+        assert!(a.intensity_at(13.0 * 3600.0) < a.intensity_at(19.0 * 3600.0));
+    }
+
+    #[test]
+    fn synthetic_positive_under_heavy_noise() {
+        property("synthetic traces stay positive", 32, |rng| {
+            let spec = SyntheticTrace {
+                noise_frac: rng.range(0.0, 0.9),
+                diurnal_swing: rng.range(0.0, 0.9),
+                weekly_swing: rng.range(0.0, 0.5),
+                days: rng.below(3) + 1,
+                seed: rng.next_u64(),
+                ..SyntheticTrace::default()
+            };
+            let t = spec.generate();
+            if t.samples().iter().all(|&s| s > 0.0) {
+                Ok(())
+            } else {
+                Err("non-positive sample".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_non_positive_samples() {
+        GridTrace::new("bad", 60.0, vec![10.0, 0.0]);
+    }
+}

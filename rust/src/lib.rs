@@ -12,7 +12,14 @@
 //!   batcher, per-device schedulers, benchmark-informed cost estimator,
 //!   energy/carbon ledger, device simulator calibrated to the paper's
 //!   Table 2, serving loop, CLI, config system, and the bench harness
-//!   that regenerates every table and figure in the paper.
+//!   that regenerates every table and figure in the paper. The [`grid`]
+//!   subsystem adds the *temporal* axis on top of the paper's spatial
+//!   routing: grid-intensity traces (synthetic diurnal/weekly/noise
+//!   generators, TOML-configurable), forecasters (persistence, EWMA,
+//!   seasonal-naive, harmonic least-squares, scored by MAPE/bias), and
+//!   temporal shifting — deferrable prompts are held and released into
+//!   forecast low-carbon windows with realized savings audited against
+//!   a run-at-arrival counterfactual (`verdant bench shifting`).
 //! - **L2 (python/compile/model.py)** — a Gemma-style decoder-only
 //!   transformer (RMSNorm, RoPE, GQA, SwiGLU, int8-quantized MLP),
 //!   AOT-lowered once to HLO text.
@@ -48,6 +55,7 @@ pub mod bench;
 pub mod cluster;
 pub mod config;
 pub mod coordinator;
+pub mod grid;
 pub mod models;
 pub mod report;
 pub mod runtime;

@@ -1,8 +1,8 @@
 //! Verdant CLI — the launcher.
 //!
 //! ```text
-//! verdant bench <fig1|fig2|table2|table3|sweep|ablation|load|all> [--prompts N]
-//!         [--config path] [--save dir] [--extensions]
+//! verdant bench <fig1|fig2|table2|table3|sweep|ablation|load|shifting|all>
+//!         [--prompts N] [--config path] [--save dir] [--extensions]
 //! verdant run   [--strategy S] [--batch B] [--prompts N] [--execution M]
 //!         [--seed N] [--config path]      one closed-loop run, full report
 //! verdant serve [--prompts N] [--batch B] [--strategy S] [--timeout-ms T]
@@ -18,7 +18,7 @@ use std::path::PathBuf;
 use std::process::ExitCode;
 use std::time::Duration;
 
-use verdant::bench::{ablation, fig1, fig2, harness, load, sweep, table2, table3, Env};
+use verdant::bench::{ablation, fig1, fig2, harness, load, shifting, sweep, table2, table3, Env};
 use verdant::cluster::Cluster;
 use verdant::config::{ExecutionMode, ExperimentConfig};
 use verdant::coordinator::{build_strategy, run as run_sched, Grouping, RunConfig};
@@ -138,7 +138,7 @@ fn dispatch(args: &[String]) -> anyhow::Result<()> {
 fn print_usage() {
     println!(
         "verdant {} — sustainability-aware LLM inference on edge clusters\n\n\
-         USAGE:\n  verdant bench <fig1|fig2|table2|table3|sweep|ablation|load|all> [--prompts N] [--save dir] [--extensions]\n  \
+         USAGE:\n  verdant bench <fig1|fig2|table2|table3|sweep|ablation|load|shifting|all> [--prompts N] [--save dir] [--extensions]\n  \
          verdant run   [--strategy S] [--batch B] [--prompts N] [--execution real|calibrated|hybrid]\n  \
          verdant serve [--prompts N] [--batch B] [--strategy S] [--timeout-ms T] [--max-new N]\n  \
          verdant inspect <corpus|cluster|manifest>\n  \
@@ -189,6 +189,10 @@ fn cmd_bench(which: &str, flags: &Flags) -> anyhow::Result<()> {
     }
     if all || which == "load" {
         emit(load::run(&env).1)?;
+    }
+    if all || which == "shifting" {
+        emit(shifting::run(&env).1)?;
+        emit(shifting::scores(&env).1)?;
     }
     Ok(())
 }

@@ -159,6 +159,10 @@ pub mod fmt {
     pub fn pct(x: f64) -> String {
         format!("{:.1}%", x * 100.0)
     }
+    /// Signed percent (savings/regressions: "+12.3%" / "-0.4%").
+    pub fn signed_pct(x: f64) -> String {
+        format!("{:+.1}%", x * 100.0)
+    }
     /// Plain float, 2 decimals.
     pub fn f2(x: f64) -> String {
         format!("{x:.2}")
@@ -223,5 +227,7 @@ mod tests {
         assert_eq!(fmt::secs(3.39), "3.39");
         assert_eq!(fmt::secs(0.26), "0.260");
         assert_eq!(fmt::pct(0.85), "85.0%");
+        assert_eq!(fmt::signed_pct(0.123), "+12.3%");
+        assert_eq!(fmt::signed_pct(-0.004), "-0.4%");
     }
 }

@@ -7,7 +7,15 @@
 //!
 //! Conservation invariant (property-tested): total ledger energy equals
 //! the sum of posted batch energies + idle energy, and carbon equals
-//! energy × intensity for the constant model.
+//! energy × intensity at the posting times for every model (constant,
+//! diurnal, trace).
+//!
+//! Temporal-shifting runs additionally post a *run-at-arrival
+//! counterfactual* through [`EnergyLedger::post_batch_shifted`]: the
+//! batch energy is also priced at each member's arrival instant, and
+//! [`EnergyLedger::realized_savings_kg`] reports how much carbon the
+//! scheduler moved out of dirty hours relative to that baseline (see
+//! `grid` module docs §Counterfactual accounting).
 
 use crate::cluster::CarbonModel;
 use std::collections::BTreeMap;
@@ -34,11 +42,21 @@ impl DeviceAccount {
 pub struct EnergyLedger {
     carbon: CarbonModel,
     accounts: BTreeMap<String, DeviceAccount>,
+    /// Carbon the same batches would have emitted at their members'
+    /// arrival instants (the no-shifting baseline).
+    counterfactual_kg: f64,
+    /// Realized carbon of the batches posted with a counterfactual.
+    shifted_kg: f64,
 }
 
 impl EnergyLedger {
     pub fn new(carbon: CarbonModel) -> Self {
-        EnergyLedger { carbon, accounts: BTreeMap::new() }
+        EnergyLedger {
+            carbon,
+            accounts: BTreeMap::new(),
+            counterfactual_kg: 0.0,
+            shifted_kg: 0.0,
+        }
     }
 
     /// Post a batch execution: `kwh` active energy on `device`,
@@ -50,6 +68,45 @@ impl EnergyLedger {
         acc.carbon_kg += self.carbon.kg_co2e(kwh, t);
         acc.batches += 1;
         acc.busy_s += busy_s;
+    }
+
+    /// Post a batch *and* its run-at-arrival counterfactual: the energy
+    /// is attributed at completion time `t` exactly as [`Self::post_batch`]
+    /// does, while an equal per-member share is also priced at each
+    /// member's arrival instant. The difference between the two
+    /// accumulates into [`Self::realized_savings_kg`] — zero when
+    /// nothing was shifted (up to batching delay), positive when the
+    /// scheduler moved work into cleaner hours.
+    pub fn post_batch_shifted(
+        &mut self,
+        device: &str,
+        kwh: f64,
+        busy_s: f64,
+        t: f64,
+        arrival_times: &[f64],
+    ) {
+        self.post_batch(device, kwh, busy_s, t);
+        if arrival_times.is_empty() {
+            return;
+        }
+        let share = kwh / arrival_times.len() as f64;
+        for &a in arrival_times {
+            self.counterfactual_kg += self.carbon.kg_co2e(share, a);
+        }
+        self.shifted_kg += self.carbon.kg_co2e(kwh, t);
+    }
+
+    /// Carbon of the shifted batches priced at their arrival instants.
+    pub fn counterfactual_kg(&self) -> f64 {
+        self.counterfactual_kg
+    }
+
+    /// Carbon avoided relative to running every prompt at its arrival
+    /// instant (only batches posted via [`Self::post_batch_shifted`]
+    /// participate). Can be negative if scheduling moved work into
+    /// *dirtier* hours — a signal the planner or forecast is wrong.
+    pub fn realized_savings_kg(&self) -> f64 {
+        self.counterfactual_kg - self.shifted_kg
     }
 
     /// Post idle energy for a device (integration done by the caller,
@@ -172,5 +229,85 @@ mod tests {
     fn negative_post_rejected() {
         let mut l = EnergyLedger::new(CarbonModel::constant(69.0));
         l.post_batch("d", -1.0, 1.0, 0.0);
+    }
+
+    #[test]
+    fn conservation_under_time_varying_intensity() {
+        use crate::grid::{GridTrace, SyntheticTrace};
+        property("ledger conserves energy+carbon on traces", 48, |rng: &mut Rng| {
+            let model = match rng.below(3) {
+                0 => CarbonModel::diurnal(rng.range(20.0, 200.0), rng.range(0.05, 0.6)),
+                1 => CarbonModel::from_trace(
+                    SyntheticTrace {
+                        seed: rng.next_u64(),
+                        noise_frac: 0.2,
+                        ..SyntheticTrace::default()
+                    }
+                    .generate(),
+                ),
+                _ => CarbonModel::from_trace(GridTrace::new(
+                    "step",
+                    900.0,
+                    (0..8).map(|_| rng.range(10.0, 300.0)).collect(),
+                )),
+            };
+            let mut l = EnergyLedger::new(model.clone());
+            let mut expect_kwh = 0.0;
+            let mut expect_kg = 0.0;
+            let n = rng.below(40) + 1;
+            for _ in 0..n {
+                let dev = if rng.chance(0.5) { "j" } else { "a" };
+                let kwh = rng.range(0.0, 1e-3);
+                let t = rng.range(0.0, 4.0 * 86_400.0);
+                if rng.chance(0.3) {
+                    l.post_idle(dev, kwh, t);
+                } else {
+                    l.post_batch(dev, kwh, rng.range(0.0, 30.0), t);
+                }
+                expect_kwh += kwh;
+                expect_kg += kwh * model.intensity_at(t) / 1000.0;
+            }
+            let (a, i, c) = l.totals();
+            close(a + i, expect_kwh, 1e-9).map_err(|e| format!("energy: {e}"))?;
+            close(c, expect_kg, 1e-9).map_err(|e| format!("carbon: {e}"))?;
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn counterfactual_savings_sign_and_zero_cases() {
+        let model = CarbonModel::diurnal(69.0, 0.3);
+        let dirty = 19.0 * 3600.0; // evening ramp
+        let clean = 13.0 * 3600.0; // solar trough
+
+        // no shift: completion == arrival -> zero savings
+        let mut l = EnergyLedger::new(model.clone());
+        l.post_batch_shifted("d", 1e-3, 5.0, dirty, &[dirty]);
+        assert!(l.realized_savings_kg().abs() < 1e-15);
+
+        // shifted from dirty arrival into the clean trough -> positive
+        let mut l = EnergyLedger::new(model.clone());
+        l.post_batch_shifted("d", 1e-3, 5.0, clean, &[dirty]);
+        let gain = l.realized_savings_kg();
+        let expect = 1e-3 * (model.intensity_at(dirty) - model.intensity_at(clean)) / 1000.0;
+        assert!((gain - expect).abs() < 1e-12, "gain {gain} vs {expect}");
+        assert!(gain > 0.0);
+        assert!((l.counterfactual_kg() - 1e-3 * model.intensity_at(dirty) / 1000.0).abs() < 1e-15);
+
+        // anti-shift (clean arrival executed in the ramp) -> negative
+        let mut l = EnergyLedger::new(model);
+        l.post_batch_shifted("d", 1e-3, 5.0, dirty, &[clean]);
+        assert!(l.realized_savings_kg() < 0.0);
+    }
+
+    #[test]
+    fn shifted_post_still_feeds_accounts() {
+        let mut l = EnergyLedger::new(CarbonModel::constant(100.0));
+        l.post_batch_shifted("d", 2e-3, 7.0, 50.0, &[0.0, 10.0]);
+        let acc = l.account("d").unwrap();
+        assert_eq!(acc.batches, 1);
+        assert!((acc.active_kwh - 2e-3).abs() < 1e-15);
+        // constant intensity: counterfactual == realized -> zero savings
+        assert!(l.realized_savings_kg().abs() < 1e-15);
     }
 }

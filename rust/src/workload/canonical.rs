@@ -2,7 +2,7 @@
 //! complexity scores. These drive the Fig. 1 / Fig. 2 motivation
 //! experiments and calibrate the complexity judge substitute.
 
-use super::{complexity, Category, Prompt};
+use super::{complexity, Category, Prompt, SloClass};
 
 /// One canonical prompt with the paper's metadata.
 #[derive(Debug, Clone)]
@@ -86,6 +86,7 @@ impl CanonicalPrompt {
             output_demand_tokens: self.output_demand_tokens,
             complexity: self.scored_cs(),
             arrival_s: 0.0,
+            slo: SloClass::Interactive,
         }
     }
 }

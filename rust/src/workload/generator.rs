@@ -12,7 +12,7 @@ use crate::config::WorkloadConfig;
 use crate::util::rng::Rng;
 
 use super::categories::Category;
-use super::{complexity, tokenizer, Prompt};
+use super::{complexity, tokenizer, Prompt, SloClass};
 
 /// Mean output demand across the corpus (tokens); devices scale their
 /// verbosity relative to this (Prompt::output_tokens_on).
@@ -84,6 +84,7 @@ impl Corpus {
             output_demand_tokens: output_demand,
             complexity: cs,
             arrival_s: 0.0,
+            slo: SloClass::Interactive,
         }
     }
 

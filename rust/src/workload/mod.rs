@@ -20,6 +20,31 @@ pub mod trace;
 pub use categories::Category;
 pub use generator::Corpus;
 
+/// Service-level objective class of a request — the temporal-shifting
+/// contract (see `grid` module docs §Deferral model).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SloClass {
+    /// Latency-sensitive: route and execute the moment it arrives.
+    Interactive,
+    /// Batch-style: may be held and executed any time within
+    /// `deadline_s` seconds of arrival (completion deadline).
+    Deferrable { deadline_s: f64 },
+}
+
+impl SloClass {
+    pub fn is_deferrable(&self) -> bool {
+        matches!(self, SloClass::Deferrable { .. })
+    }
+
+    /// Completion deadline relative to arrival, if any.
+    pub fn deadline_s(&self) -> Option<f64> {
+        match self {
+            SloClass::Interactive => None,
+            SloClass::Deferrable { deadline_s } => Some(*deadline_s),
+        }
+    }
+}
+
 /// One inference request flowing through the system.
 #[derive(Debug, Clone)]
 pub struct Prompt {
@@ -38,6 +63,9 @@ pub struct Prompt {
     pub complexity: f64,
     /// Arrival time in seconds (0.0 for the paper's closed-loop runs).
     pub arrival_s: f64,
+    /// SLO class; `Interactive` unless `trace::assign_slos` marks the
+    /// prompt deferrable.
+    pub slo: SloClass,
 }
 
 impl Prompt {
@@ -63,10 +91,20 @@ mod tests {
             output_demand_tokens: 90,
             complexity: 0.5,
             arrival_s: 0.0,
+            slo: SloClass::Interactive,
         };
         let jetson = p.output_tokens_on(148.0);
         let ada = p.output_tokens_on(69.6);
         assert!(jetson > ada, "1B model must be more verbose");
         assert!(jetson >= 1 && ada >= 1);
+    }
+
+    #[test]
+    fn slo_class_helpers() {
+        assert!(!SloClass::Interactive.is_deferrable());
+        assert_eq!(SloClass::Interactive.deadline_s(), None);
+        let d = SloClass::Deferrable { deadline_s: 3600.0 };
+        assert!(d.is_deferrable());
+        assert_eq!(d.deadline_s(), Some(3600.0));
     }
 }

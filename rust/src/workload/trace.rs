@@ -8,7 +8,7 @@
 use crate::config::Arrival;
 use crate::util::rng::Rng;
 
-use super::Prompt;
+use super::{Prompt, SloClass};
 
 /// Assign arrival times to a corpus in place according to the process.
 pub fn assign_arrivals(prompts: &mut [Prompt], arrival: Arrival, seed: u64) {
@@ -32,6 +32,24 @@ pub fn assign_arrivals(prompts: &mut [Prompt], arrival: Arrival, seed: u64) {
 /// Total span of the trace (last arrival), seconds.
 pub fn span(prompts: &[Prompt]) -> f64 {
     prompts.iter().map(|p| p.arrival_s).fold(0.0, f64::max)
+}
+
+/// Mark a seeded `deferrable_frac` of the corpus as
+/// [`SloClass::Deferrable`] with the given completion deadline; the
+/// rest stay `Interactive`. Deterministic per seed, independent of the
+/// arrival process so the same corpus can be replayed across
+/// deferrable fractions.
+pub fn assign_slos(prompts: &mut [Prompt], deferrable_frac: f64, deadline_s: f64, seed: u64) {
+    assert!((0.0..=1.0).contains(&deferrable_frac), "fraction in [0,1]");
+    assert!(deadline_s > 0.0, "deadline must be positive");
+    let mut rng = Rng::new(seed ^ 0x510_C1A55);
+    for p in prompts.iter_mut() {
+        p.slo = if rng.chance(deferrable_frac) {
+            SloClass::Deferrable { deadline_s }
+        } else {
+            SloClass::Interactive
+        };
+    }
 }
 
 #[cfg(test)]
@@ -74,6 +92,30 @@ mod tests {
         assign_arrivals(&mut ps, Arrival::Open { rate: 10.0 }, 2);
         let mean_gap = span(&ps) / 2000.0;
         assert!((mean_gap - 0.1).abs() < 0.01, "gap={mean_gap}");
+    }
+
+    #[test]
+    fn slo_assignment_fraction_and_determinism() {
+        let mut a = corpus(2000);
+        assign_slos(&mut a, 0.4, 7200.0, 11);
+        let frac = a.iter().filter(|p| p.slo.is_deferrable()).count() as f64 / 2000.0;
+        assert!((frac - 0.4).abs() < 0.05, "frac={frac}");
+        assert!(a
+            .iter()
+            .all(|p| p.slo.deadline_s().map(|d| d == 7200.0).unwrap_or(true)));
+
+        let mut b = corpus(2000);
+        assign_slos(&mut b, 0.4, 7200.0, 11);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.slo, y.slo);
+        }
+
+        // extremes
+        let mut c = corpus(50);
+        assign_slos(&mut c, 0.0, 60.0, 1);
+        assert!(c.iter().all(|p| !p.slo.is_deferrable()));
+        assign_slos(&mut c, 1.0, 60.0, 1);
+        assert!(c.iter().all(|p| p.slo.is_deferrable()));
     }
 
     #[test]
