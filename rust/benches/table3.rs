@@ -4,7 +4,7 @@
 
 use verdant::bench::{harness, table3, Env};
 use verdant::config::ExecutionMode;
-use verdant::coordinator::{build_strategy, run, Grouping, RunConfig};
+use verdant::coordinator::{run, Grouping, PlacementPolicy, RunConfig};
 
 fn main() {
     harness::group("Table 3 — strategy comparison across batch sizes");
@@ -14,7 +14,7 @@ fn main() {
     // per-strategy end-to-end pipeline cost at batch 4 (the hot path a
     // deployment would re-run whenever the corpus changes)
     for name in table3::PAPER_STRATEGIES {
-        let strategy = build_strategy(name, &env.cluster).unwrap();
+        let strategy = PlacementPolicy::spatial(name, &env.cluster).unwrap();
         let cfg = RunConfig {
             batch_size: 4,
             grouping: Grouping::Fifo,
@@ -23,7 +23,7 @@ fn main() {
             stochastic_seed: None,
         };
         let r = harness::bench(&format!("table3/run/{name}"), 1, 10, || {
-            run(&env.cluster, &env.prompts, strategy.as_ref(), &env.db, &cfg, None).unwrap()
+            run(&env.cluster, &env.prompts, &strategy, &env.db, &cfg, None).unwrap()
         });
         harness::report(&r);
     }

@@ -13,7 +13,7 @@
 use verdant::bench::Env;
 use verdant::cluster::{CarbonModel, Cluster};
 use verdant::config::ExperimentConfig;
-use verdant::coordinator::{build_strategy, run, RunConfig};
+use verdant::coordinator::{run, PlacementPolicy, RunConfig};
 
 fn main() -> anyhow::Result<()> {
     let mut cfg = ExperimentConfig::default();
@@ -25,14 +25,14 @@ fn main() -> anyhow::Result<()> {
     println!("== carbon-cap Pareto front (batch 4, 200 prompts) ==");
     println!("{:<24} {:>14} {:>20}", "strategy", "makespan (s)", "carbon (kgCO2e)");
     for name in ["carbon-aware", "latency-aware"] {
-        let s = build_strategy(name, &env.cluster)?;
-        let r = run(&env.cluster, &env.prompts, s.as_ref(), &env.db, &run_cfg, None)?;
+        let s = PlacementPolicy::spatial(name, &env.cluster)?;
+        let r = run(&env.cluster, &env.prompts, &s, &env.db, &run_cfg, None)?;
         println!("{:<24} {:>14.1} {:>20.3e}", r.strategy, r.makespan_s, r.total_carbon_kg);
     }
     let mut front = Vec::new();
     for budget in [0.0, 2e-6, 5e-6, 1e-5, 2e-5, 5e-5, 1e-4, 3e-4] {
-        let s = build_strategy(&format!("carbon-cap@{budget}"), &env.cluster)?;
-        let r = run(&env.cluster, &env.prompts, s.as_ref(), &env.db, &run_cfg, None)?;
+        let s = PlacementPolicy::spatial(&format!("carbon-cap@{budget}"), &env.cluster)?;
+        let r = run(&env.cluster, &env.prompts, &s, &env.db, &run_cfg, None)?;
         println!("{:<24} {:>14.1} {:>20.3e}", r.strategy, r.makespan_s, r.total_carbon_kg);
         front.push((budget, r.makespan_s, r.total_carbon_kg));
     }
@@ -45,7 +45,7 @@ fn main() -> anyhow::Result<()> {
     println!("\n== same budget, diurnal grid (69 g/kWh mean, ±30 %) ==");
     let mut cluster = Cluster::from_config(&cfg.cluster);
     cluster.carbon = CarbonModel::diurnal(69.0, 0.3);
-    let s = build_strategy("carbon-cap@2e-5", &cluster)?;
+    let s = PlacementPolicy::spatial("carbon-cap@2e-5", &cluster)?;
     println!("{:>6} {:>16} {:>20}", "hour", "intensity g/kWh", "carbon (kgCO2e)");
     for hour in [3usize, 13, 19] {
         // shift the whole workload into that hour
@@ -53,7 +53,7 @@ fn main() -> anyhow::Result<()> {
         for p in &mut prompts {
             p.arrival_s = hour as f64 * 3600.0;
         }
-        let r = run(&cluster, &prompts, s.as_ref(), &env.db, &run_cfg, None)?;
+        let r = run(&cluster, &prompts, &s, &env.db, &run_cfg, None)?;
         println!(
             "{:>6} {:>16.1} {:>20.3e}",
             hour,

@@ -12,7 +12,7 @@ use std::collections::BTreeMap;
 
 use verdant::bench::Env;
 use verdant::config::ExperimentConfig;
-use verdant::coordinator::{build_strategy, run, RunConfig};
+use verdant::coordinator::{run, PlacementPolicy, RunConfig};
 use verdant::workload::Category;
 
 fn main() -> anyhow::Result<()> {
@@ -43,8 +43,8 @@ fn main() -> anyhow::Result<()> {
         "carbon-cap@1e-5",
         "latency-aware",
     ] {
-        let s = build_strategy(name, &env.cluster)?;
-        let r = run(&env.cluster, &env.prompts, s.as_ref(), &env.db, &run_cfg, None)?;
+        let s = PlacementPolicy::spatial(name, &env.cluster)?;
+        let r = run(&env.cluster, &env.prompts, &s, &env.db, &run_cfg, None)?;
         println!(
             "{:<26} {:>12.1} {:>16.3e} {:>13.1}% {:>7.1}%",
             r.strategy,
@@ -56,8 +56,8 @@ fn main() -> anyhow::Result<()> {
     }
 
     // per-category device placement under latency-aware
-    let s = build_strategy("latency-aware", &env.cluster)?;
-    let r = run(&env.cluster, &env.prompts, s.as_ref(), &env.db, &run_cfg, None)?;
+    let s = PlacementPolicy::spatial("latency-aware", &env.cluster)?;
+    let r = run(&env.cluster, &env.prompts, &s, &env.db, &run_cfg, None)?;
     let mut split: BTreeMap<(Category, String), usize> = BTreeMap::new();
     for m in &r.metrics {
         let cat = env.prompts.iter().find(|p| p.id == m.prompt_id).unwrap().category;

@@ -58,7 +58,7 @@ fn main() {
                 .then(|| GridShiftConfig::new(grid_trace.clone(), ForecastKind::Harmonic)),
             ..OnlineConfig::default()
         };
-        let r = run_online(&cluster, &prompts, &env.db, &run_cfg);
+        let r = run_online(&cluster, &prompts, &env.db, &run_cfg).expect("known strategy");
         let (_, _, carbon) = r.ledger.totals();
         let saved = r.ledger.realized_savings_kg();
         let saved_pct = 100.0 * saved / r.ledger.counterfactual_kg().max(1e-30);

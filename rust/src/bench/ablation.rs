@@ -9,7 +9,7 @@
 //!    CS cut-point.
 
 use crate::config::ExecutionMode;
-use crate::coordinator::{build_strategy, run as run_sched, BenchmarkDb, Grouping, RunConfig};
+use crate::coordinator::{run as run_sched, BenchmarkDb, Grouping, PlacementPolicy, RunConfig};
 use crate::report::{fmt, Table};
 
 use super::Env;
@@ -39,8 +39,8 @@ pub fn run(env: &Env) -> (Vec<AblationRow>, Table) {
 
     // --- study 1: estimator fidelity --------------------------------
     // full DB (6 samples/cell, what Env::standard builds)
-    let la = build_strategy("latency-aware", &env.cluster).unwrap();
-    let r = run_sched(&env.cluster, &env.prompts, la.as_ref(), &env.db, &cfg(4, Grouping::Fifo), None)
+    let la = PlacementPolicy::spatial("latency-aware", &env.cluster).unwrap();
+    let r = run_sched(&env.cluster, &env.prompts, &la, &env.db, &cfg(4, Grouping::Fifo), None)
         .unwrap();
     rows.push(AblationRow {
         study: "estimator",
@@ -50,7 +50,7 @@ pub fn run(env: &Env) -> (Vec<AblationRow>, Table) {
     });
     // degraded DB: a single noisy sample per cell
     let noisy = BenchmarkDb::build(&env.cluster, &[1, 4, 8], 1, 69.0, 0xBAD);
-    let r = run_sched(&env.cluster, &env.prompts, la.as_ref(), &noisy, &cfg(4, Grouping::Fifo), None)
+    let r = run_sched(&env.cluster, &env.prompts, &la, &noisy, &cfg(4, Grouping::Fifo), None)
         .unwrap();
     rows.push(AblationRow {
         study: "estimator",
@@ -60,7 +60,7 @@ pub fn run(env: &Env) -> (Vec<AblationRow>, Table) {
     });
     // analytic only: empty DB forces the fallback path
     let analytic = BenchmarkDb::build(&env.cluster, &[], 0, 69.0, 0);
-    let r = run_sched(&env.cluster, &env.prompts, la.as_ref(), &analytic, &cfg(4, Grouping::Fifo), None)
+    let r = run_sched(&env.cluster, &env.prompts, &la, &analytic, &cfg(4, Grouping::Fifo), None)
         .unwrap();
     rows.push(AblationRow {
         study: "estimator",
@@ -71,7 +71,7 @@ pub fn run(env: &Env) -> (Vec<AblationRow>, Table) {
 
     // --- study 2: batch grouping ------------------------------------
     for (g, label) in [(Grouping::Fifo, "fifo"), (Grouping::LengthSorted, "length-sorted")] {
-        let r = run_sched(&env.cluster, &env.prompts, la.as_ref(), &env.db, &cfg(4, g), None)
+        let r = run_sched(&env.cluster, &env.prompts, &la, &env.db, &cfg(4, g), None)
             .unwrap();
         rows.push(AblationRow {
             study: "grouping",
@@ -83,8 +83,8 @@ pub fn run(env: &Env) -> (Vec<AblationRow>, Table) {
 
     // --- study 3: complexity threshold ------------------------------
     for t in [0.1, 0.25, 0.35, 0.5, 0.7] {
-        let s = build_strategy(&format!("complexity-aware@{t}"), &env.cluster).unwrap();
-        let r = run_sched(&env.cluster, &env.prompts, s.as_ref(), &env.db, &cfg(4, Grouping::Fifo), None)
+        let s = PlacementPolicy::spatial(&format!("complexity-aware@{t}"), &env.cluster).unwrap();
+        let r = run_sched(&env.cluster, &env.prompts, &s, &env.db, &cfg(4, Grouping::Fifo), None)
             .unwrap();
         rows.push(AblationRow {
             study: "cs-threshold",

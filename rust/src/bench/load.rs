@@ -46,7 +46,8 @@ pub fn run(env: &Env) -> (Vec<LoadRow>, Table) {
                 strategy: strategy.into(),
                 grid: None,
             };
-            let r = run_online(&env.cluster, &corpus.prompts, &env.db, &cfg);
+            let r = run_online(&env.cluster, &corpus.prompts, &env.db, &cfg)
+                .expect("bench strategies resolve");
             rows.push(LoadRow {
                 strategy: strategy.into(),
                 policy: label,

@@ -93,19 +93,15 @@ pub fn run(env: &Env) -> (Vec<ShiftingRow>, Table) {
                     grid: shifting
                         .then(|| GridShiftConfig::new(grid_trace.clone(), ForecastKind::Harmonic)),
                 };
-                let r = run_online(&cluster, &corpus.prompts, &env.db, &cfg);
+                let r = run_online(&cluster, &corpus.prompts, &env.db, &cfg)
+                    .expect("bench strategies resolve");
                 let (_, _, carbon_kg) = r.ledger.totals();
-                let counterfactual = r.ledger.counterfactual_kg();
                 rows.push(ShiftingRow {
                     trace: grid_trace.name.clone(),
                     strategy: strategy.into(),
                     defer_frac: frac,
                     carbon_kg,
-                    savings_frac: if counterfactual > 0.0 {
-                        r.ledger.realized_savings_kg() / counterfactual
-                    } else {
-                        0.0
-                    },
+                    savings_frac: r.ledger.savings_frac(),
                     deferred: r.deferred,
                     deadline_violations: r.deadline_violations,
                     interactive_lat_s: if r.latency_interactive.count() > 0 {

@@ -13,7 +13,7 @@
 //! both single-device baselines.
 
 use crate::config::ExecutionMode;
-use crate::coordinator::{build_strategy, run as run_sched, Grouping, RunConfig};
+use crate::coordinator::{run as run_sched, Grouping, PlacementPolicy, RunConfig};
 use crate::report::{fmt, Table};
 
 use super::Env;
@@ -38,7 +38,7 @@ pub fn run(env: &Env) -> (Vec<SweepRow>, Table) {
     let mut rows = Vec::new();
     for name in strategies {
         for &batch in &BATCHES {
-            let strategy = build_strategy(name, &env.cluster).expect("strategy");
+            let strategy = PlacementPolicy::spatial(name, &env.cluster).expect("strategy");
             let cfg = RunConfig {
                 batch_size: batch,
                 grouping: Grouping::Fifo,
@@ -46,7 +46,7 @@ pub fn run(env: &Env) -> (Vec<SweepRow>, Table) {
                 max_new_tokens: env.cfg.serving.max_new_tokens,
                 stochastic_seed: None,
             };
-            let r = run_sched(&env.cluster, &env.prompts, strategy.as_ref(), &env.db, &cfg, None)
+            let r = run_sched(&env.cluster, &env.prompts, &strategy, &env.db, &cfg, None)
                 .expect("sweep run");
             let n = r.metrics.len() as f64;
             let ttft: f64 =

@@ -8,7 +8,7 @@
 //! in the paper's offline benchmarking).
 
 use crate::config::ExecutionMode;
-use crate::coordinator::{build_strategy, run as run_sched, Grouping, RunConfig};
+use crate::coordinator::{run as run_sched, Grouping, PlacementPolicy, RunConfig};
 use crate::report::{fmt, Table};
 
 use super::Env;
@@ -33,7 +33,7 @@ pub fn run(env: &Env) -> (Vec<Table2Row>, Table) {
     let mut rows = Vec::new();
     for dev in &env.cluster.devices {
         for &batch in &[1usize, 4, 8] {
-            let strategy = build_strategy(&format!("all-on-{}", dev.name), &env.cluster)
+            let strategy = PlacementPolicy::spatial(&format!("all-on-{}", dev.name), &env.cluster)
                 .expect("device strategy");
             let cfg = RunConfig {
                 batch_size: batch,
@@ -42,7 +42,7 @@ pub fn run(env: &Env) -> (Vec<Table2Row>, Table) {
                 max_new_tokens: env.cfg.serving.max_new_tokens,
                 stochastic_seed: None,
             };
-            let r = run_sched(&env.cluster, &env.prompts, strategy.as_ref(), &env.db, &cfg, None)
+            let r = run_sched(&env.cluster, &env.prompts, &strategy, &env.db, &cfg, None)
                 .expect("table2 run");
             // within-batch latency: strip the closed-loop queue wait
             let n = r.metrics.len() as f64;

@@ -8,7 +8,7 @@
 //! ("~85 % of prompts to the Jetson").
 
 use crate::config::ExecutionMode;
-use crate::coordinator::{build_strategy, run as run_sched, Grouping, RunConfig};
+use crate::coordinator::{run as run_sched, Grouping, PlacementPolicy, RunConfig};
 use crate::report::{fmt, Table};
 
 use super::Env;
@@ -41,7 +41,7 @@ pub fn run(env: &Env, extensions: bool) -> (Vec<Table3Row>, Table) {
     }
     for &batch in &[1usize, 4, 8] {
         for name in &names {
-            let strategy = build_strategy(name, &env.cluster).expect("strategy");
+            let strategy = PlacementPolicy::spatial(name, &env.cluster).expect("strategy");
             let cfg = RunConfig {
                 batch_size: batch,
                 grouping: Grouping::Fifo,
@@ -49,7 +49,7 @@ pub fn run(env: &Env, extensions: bool) -> (Vec<Table3Row>, Table) {
                 max_new_tokens: env.cfg.serving.max_new_tokens,
                 stochastic_seed: None,
             };
-            let r = run_sched(&env.cluster, &env.prompts, strategy.as_ref(), &env.db, &cfg, None)
+            let r = run_sched(&env.cluster, &env.prompts, &strategy, &env.db, &cfg, None)
                 .expect("table3 run");
             rows.push(Table3Row {
                 batch,

@@ -183,6 +183,17 @@ pub struct ServingConfig {
     pub execution: ExecutionMode,
     /// Generation cap per request (must fit max_seq - prefill_len).
     pub max_new_tokens: usize,
+    /// Fraction of the workload marked `Deferrable` (0 = every prompt
+    /// `Interactive`, the paper's setting).
+    pub deferrable_frac: f64,
+    /// Completion deadline for `Deferrable` prompts, seconds.
+    pub deferrable_deadline_s: f64,
+    /// Hold `Deferrable` prompts for forecast clean windows (only
+    /// effective with a time-varying `[cluster.carbon]` model).
+    pub defer: bool,
+    /// Carbon-aware batch sizing: a free device holding only a partial
+    /// batch of `Deferrable` prompts may wait for a cleaner window.
+    pub carbon_sizing: bool,
 }
 
 /// Top-level experiment configuration.
@@ -232,6 +243,10 @@ impl Default for ExperimentConfig {
                 strategy: "latency-aware".into(),
                 execution: ExecutionMode::Calibrated,
                 max_new_tokens: 96,
+                deferrable_frac: 0.0,
+                deferrable_deadline_s: 4.0 * 3600.0,
+                defer: true,
+                carbon_sizing: false,
             },
             artifacts_dir: "artifacts".into(),
         }
@@ -349,6 +364,18 @@ impl ExperimentConfig {
             if let Some(m) = s.get("max_new_tokens").and_then(Value::as_usize) {
                 cfg.serving.max_new_tokens = m;
             }
+            if let Some(f) = s.get("deferrable_frac").and_then(Value::as_f64) {
+                cfg.serving.deferrable_frac = f;
+            }
+            if let Some(d) = s.get("deferrable_deadline_s").and_then(Value::as_f64) {
+                cfg.serving.deferrable_deadline_s = d;
+            }
+            if let Some(b) = s.get("defer").and_then(Value::as_bool) {
+                cfg.serving.defer = b;
+            }
+            if let Some(b) = s.get("carbon_sizing").and_then(Value::as_bool) {
+                cfg.serving.carbon_sizing = b;
+            }
         }
         if let Some(a) = v.get("artifacts_dir").and_then(Value::as_str) {
             cfg.artifacts_dir = a.to_string();
@@ -385,6 +412,15 @@ impl ExperimentConfig {
         if self.serving.max_new_tokens == 0 {
             bail!("serving.max_new_tokens must be >= 1");
         }
+        if !(0.0..=1.0).contains(&self.serving.deferrable_frac) {
+            bail!(
+                "serving.deferrable_frac must be in [0,1], got {}",
+                self.serving.deferrable_frac
+            );
+        }
+        if self.serving.deferrable_deadline_s <= 0.0 {
+            bail!("serving.deferrable_deadline_s must be positive");
+        }
         if let Arrival::Open { rate } = self.workload.arrival {
             if rate <= 0.0 {
                 bail!("open arrival rate must be positive");
@@ -413,10 +449,22 @@ fn parse_carbon_model(cm: &Value, default_mean: f64) -> Result<CarbonModelConfig
         "constant" => Ok(CarbonModelConfig::Constant { g_per_kwh: mean }),
         "diurnal" => Ok(CarbonModelConfig::Diurnal { mean_g_per_kwh: mean, swing }),
         "trace" => {
+            // real-world CSV ingestion: `trace_file` points at an
+            // ElectricityMaps/WattTime-style timestamp,gCO2/kWh file
+            if let Some(path) = cm.get("trace_file").and_then(Value::as_str) {
+                let trace = crate::grid::GridTrace::from_csv(Path::new(path))
+                    .map_err(|e| e.context(format!("[cluster.carbon] trace_file = \"{path}\"")))?;
+                return Ok(CarbonModelConfig::Trace {
+                    step_s: trace.step_s,
+                    samples: trace.samples().to_vec(),
+                });
+            }
             let samples: Vec<f64> = cm
                 .get("samples")
                 .and_then(Value::as_arr)
-                .ok_or_else(|| anyhow!("[cluster.carbon] model=trace needs samples = [..]"))?
+                .ok_or_else(|| {
+                    anyhow!("[cluster.carbon] model=trace needs samples = [..] or trace_file = \"...\"")
+                })?
                 .iter()
                 .map(|s| {
                     s.as_f64().ok_or_else(|| {
@@ -649,6 +697,70 @@ seed = 7
         let mut c = ExperimentConfig::default();
         c.cluster.carbon = CarbonModelConfig::Constant { g_per_kwh: -3.0 };
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn serving_slo_and_sizing_knobs() {
+        // defaults preserve the paper's behaviour exactly
+        let d = ExperimentConfig::default();
+        assert_eq!(d.serving.deferrable_frac, 0.0);
+        assert!(d.serving.defer);
+        assert!(!d.serving.carbon_sizing);
+
+        let doc = r#"
+[serving]
+deferrable_frac = 0.4
+deferrable_deadline_s = 7200.0
+defer = false
+carbon_sizing = true
+"#;
+        let c = ExperimentConfig::from_value(&toml::parse(doc).unwrap()).unwrap();
+        assert_eq!(c.serving.deferrable_frac, 0.4);
+        assert_eq!(c.serving.deferrable_deadline_s, 7200.0);
+        assert!(!c.serving.defer);
+        assert!(c.serving.carbon_sizing);
+
+        let parse = |doc: &str| ExperimentConfig::from_value(&toml::parse(doc).unwrap());
+        assert!(parse("[serving]\ndeferrable_frac = 1.5\n").is_err());
+        assert!(parse("[serving]\ndeferrable_deadline_s = 0.0\n").is_err());
+    }
+
+    #[test]
+    fn carbon_trace_file_roundtrip_and_error_paths() {
+        let dir = std::env::temp_dir();
+        let good = dir.join("verdant_cfg_trace.csv");
+        std::fs::write(&good, "timestamp,gCO2/kWh\n0,40.0\n1800,90.0\n3600,60.0\n").unwrap();
+        let doc = format!(
+            "[cluster.carbon]\nmodel = \"trace\"\ntrace_file = \"{}\"\n",
+            good.display()
+        );
+        let c = ExperimentConfig::from_value(&toml::parse(&doc).unwrap()).unwrap();
+        let CarbonModelConfig::Trace { step_s, ref samples } = c.cluster.carbon else {
+            panic!("expected trace model, got {:?}", c.cluster.carbon)
+        };
+        assert_eq!(step_s, 1800.0);
+        assert_eq!(samples, &vec![40.0, 90.0, 60.0]);
+        // the routing scalar follows the file's mean
+        let mean = (40.0 + 90.0 + 60.0) / 3.0;
+        assert!((c.cluster.carbon_intensity_g_per_kwh - mean).abs() < 1e-12);
+        std::fs::remove_file(&good).ok();
+
+        // malformed file: the error names the offending path
+        let bad = dir.join("verdant_cfg_trace_bad.csv");
+        std::fs::write(&bad, "0,40.0\n900,-3.0\n").unwrap();
+        let doc = format!(
+            "[cluster.carbon]\nmodel = \"trace\"\ntrace_file = \"{}\"\n",
+            bad.display()
+        );
+        let err = ExperimentConfig::from_value(&toml::parse(&doc).unwrap())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("trace_file"), "{err}");
+        std::fs::remove_file(&bad).ok();
+
+        // missing file errors instead of silently falling back
+        let doc = "[cluster.carbon]\nmodel = \"trace\"\ntrace_file = \"/nonexistent/x.csv\"\n";
+        assert!(ExperimentConfig::from_value(&toml::parse(doc).unwrap()).is_err());
     }
 
     #[test]

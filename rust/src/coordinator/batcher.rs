@@ -44,13 +44,32 @@ pub fn form_batches(
     cluster: &Cluster,
     grouping: Grouping,
 ) -> Vec<Batch> {
+    let order: Vec<usize> = (0..prompts.len()).collect();
+    form_batches_ordered(prompts, assignment, &order, batch_size, cluster, grouping)
+}
+
+/// Like [`form_batches`], but drains each device's queue in the given
+/// `order` (prompt indices, no duplicates) — the policy core uses this
+/// to impose SLO-aware (release-time) ordering. `order` may be a
+/// *subset* of the prompts: indices absent from it are simply not
+/// batched (the policy core calls this once per release cohort). With
+/// the identity order this is exactly [`form_batches`].
+pub fn form_batches_ordered(
+    prompts: &[Prompt],
+    assignment: &[usize],
+    order: &[usize],
+    batch_size: usize,
+    cluster: &Cluster,
+    grouping: Grouping,
+) -> Vec<Batch> {
     assert_eq!(prompts.len(), assignment.len(), "assignment length mismatch");
+    assert!(order.len() <= prompts.len(), "order has duplicate or excess indices");
     assert!(batch_size >= 1);
 
     let mut out = Vec::new();
     for d in 0..cluster.devices.len() {
         let mut queue: Vec<usize> =
-            (0..prompts.len()).filter(|&i| assignment[i] == d).collect();
+            order.iter().copied().filter(|&i| assignment[i] == d).collect();
         if queue.is_empty() {
             continue;
         }
@@ -193,6 +212,23 @@ mod tests {
                 .unwrap();
             assert!(b.members.len() == 1 || dev.memory.fits(b.members.len(), max_seq));
         }
+    }
+
+    #[test]
+    fn ordered_identity_matches_form_batches_and_reorders_queues() {
+        let c = cluster();
+        let ps = prompts(15, 11);
+        let assignment: Vec<usize> = (0..15).map(|i| i % 2).collect();
+        let identity: Vec<usize> = (0..15).collect();
+        assert_eq!(
+            form_batches(&ps, &assignment, 4, &c, Grouping::Fifo),
+            form_batches_ordered(&ps, &assignment, &identity, 4, &c, Grouping::Fifo)
+        );
+        // a reversed order drains device queues back-to-front
+        let reversed: Vec<usize> = (0..15).rev().collect();
+        let batches = form_batches_ordered(&ps, &assignment, &reversed, 4, &c, Grouping::Fifo);
+        let first_dev0 = batches.iter().find(|b| b.device == 0).unwrap();
+        assert_eq!(first_dev0.members[0], 14); // highest index on device 0
     }
 
     #[test]

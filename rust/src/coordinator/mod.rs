@@ -1,21 +1,30 @@
 //! L3 coordinator — the paper's system contribution.
 //!
+//! - [`policy`] — the plane-agnostic scheduling core: ONE
+//!   [`PlacementPolicy`] owns routing, SLO deferral planning,
+//!   SLO-aware batch formation and carbon-aware batch sizing, and all
+//!   three execution planes (closed-loop [`scheduler`], open-loop DES
+//!   [`online`], wallclock `server::serve`) drive it;
 //! - [`estimator`] — the benchmarking database routing decisions consume
 //!   (the paper's offline Table-2 phase) + analytic per-prompt estimates;
 //! - [`router`] — the strategies: all-on-X baselines, carbon-aware,
-//!   latency-aware, plus round-robin / complexity-aware / carbon-cap
-//!   extensions;
+//!   latency-aware, plus round-robin / complexity-aware / carbon-cap /
+//!   forecast-carbon-aware extensions, each with batch (`assign`) and
+//!   on-arrival (`route_one`) forms;
 //! - [`batcher`] — dynamic batching (1/4/8) with memory admission;
 //! - [`scheduler`] — the closed-loop executor producing the paper's
-//!   makespan + carbon totals and per-request telemetry.
+//!   makespan + carbon totals and per-request telemetry;
+//! - [`online`] — the open-loop discrete-event serving simulation.
 
 pub mod batcher;
-pub mod online;
 pub mod estimator;
+pub mod online;
+pub mod policy;
 pub mod router;
 pub mod scheduler;
 
-pub use batcher::{form_batches, Batch, Grouping};
+pub use batcher::{form_batches, form_batches_ordered, Batch, Grouping};
 pub use estimator::{estimate, BenchmarkDb, CostEstimate};
-pub use router::{build as build_strategy, RouteContext, Strategy};
+pub use policy::{CorpusPlan, GridShiftConfig, PlacementPolicy};
+pub use router::{build as build_strategy, OnlineView, RouteContext, Strategy};
 pub use scheduler::{run, RunConfig, RunResult};

@@ -6,35 +6,44 @@
 //! arrival stream. Virtual time, deterministic, paper-scale — the DES
 //! analogue of `server::serve` (which runs real PJRT on the wallclock).
 //!
-//! Model: prompts arrive per their trace; routing happens on arrival
-//! using the benchmark DB plus live queue backlog (the online form of
-//! latency-aware); each device, when free, launches a batch of up to
-//! `batch_size` queued prompts — or, under [`BatchPolicy::WaitFill`],
-//! waits up to the timeout for the batch to fill.
+//! This module is deliberately thin: it owns the event plumbing
+//! (arrivals, releases, device-free and timeout events) and defers
+//! every *decision* to the plane-agnostic policy core
+//! ([`PlacementPolicy`]): on-arrival routing
+//! ([`PlacementPolicy::route_arrival`]), deferral release planning
+//! ([`PlacementPolicy::plan_release`]) and carbon-aware batch sizing
+//! ([`PlacementPolicy::plan_batch_hold`]). The strategy name resolves
+//! through `router::build`, so an unknown strategy is a loud error
+//! here exactly as it is in `run` and `serve`.
 //!
 //! ## Temporal shifting
 //!
 //! With a [`GridShiftConfig`] present, the coordinator adds the *time*
 //! axis (see `grid` module docs): `Deferrable` prompts are held in a
 //! deferral queue and released into the forecast low-carbon window that
-//! still fits their deadline (a safety margin covering batch occupancy
-//! and current backlog guards against violations); the
-//! `forecast-carbon-aware` strategy prices each (device, start-time)
-//! pair as `energy × forecast intensity at projected execution time`.
-//! Every batch posts its run-at-arrival counterfactual to the
-//! [`EnergyLedger`], so results report *realized* savings rather than
-//! promised ones.
+//! still fits their deadline; the `forecast-carbon-aware` strategy
+//! prices each (device, start-time) pair as `energy × forecast
+//! intensity at projected execution time`; and with sizing enabled, a
+//! free device holding only a partial batch of `Deferrable` prompts
+//! waits for a forecast clean window instead of launching immediately
+//! (interactive arrivals pre-empt the hold). Every batch posts its
+//! run-at-arrival counterfactual to the [`EnergyLedger`], so results
+//! report *realized* savings rather than promised ones.
 
 use std::collections::VecDeque;
 
+use anyhow::{anyhow, Result};
+
 use crate::cluster::Cluster;
-use crate::grid::{shift, ForecastKind, Forecaster, GridTrace};
 use crate::simulator::{simulate_batch, BatchWork, EventQueue};
 use crate::telemetry::EnergyLedger;
 use crate::util::stats::{Histogram, Summary};
 use crate::workload::Prompt;
 
 use super::estimator::BenchmarkDb;
+use super::policy::PlacementPolicy;
+
+pub use super::policy::GridShiftConfig;
 
 /// When does a free device launch a partial batch?
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -45,45 +54,13 @@ pub enum BatchPolicy {
     WaitFill { timeout_s: f64 },
 }
 
-/// Grid context for temporal shifting and forecast-aware routing.
-#[derive(Debug, Clone)]
-pub struct GridShiftConfig {
-    /// Ground-truth intensity signal. Pair it with
-    /// `CarbonModel::Trace` of the same trace on the cluster so
-    /// planning and carbon accounting agree.
-    pub trace: GridTrace,
-    pub forecaster: ForecastKind,
-    /// History steps the forecaster sees at each decision (≥ one day
-    /// keeps seasonal models useful from t = 0; operators have
-    /// yesterday's grid data).
-    pub lookback_steps: usize,
-    /// Planning horizon cap, steps.
-    pub horizon_steps: usize,
-    /// Hold `Deferrable` prompts for forecast low-carbon windows.
-    pub defer: bool,
-}
-
-impl GridShiftConfig {
-    /// Defaults: two days of lookback, two days of horizon, deferral on.
-    pub fn new(trace: GridTrace, forecaster: ForecastKind) -> Self {
-        let day = trace.steps_per_day();
-        GridShiftConfig {
-            trace,
-            forecaster,
-            lookback_steps: 2 * day,
-            horizon_steps: 2 * day,
-            defer: true,
-        }
-    }
-}
-
 /// Open-loop run parameters.
 #[derive(Debug, Clone)]
 pub struct OnlineConfig {
     pub batch_size: usize,
     pub policy: BatchPolicy,
-    /// Routing: "latency-aware" (backlog-aware), "carbon-aware",
-    /// "forecast-carbon-aware", "round-robin", or "all-on-<device>".
+    /// Routing strategy name, resolved by `router::build` (any
+    /// strategy the closed-loop scheduler accepts works here too).
     pub strategy: String,
     /// Grid trace + forecaster for temporal shifting; None restores the
     /// purely spatial behaviour.
@@ -119,6 +96,9 @@ pub struct OnlineResult {
     pub batch_fill: Summary,
     /// Prompts held by the deferral queue (released later than arrival).
     pub deferred: usize,
+    /// Carbon-aware batch-sizing holds (partial all-deferrable batches
+    /// that waited for a cleaner window).
+    pub held_partial: usize,
     /// Deferrable prompts completing after their deadline.
     pub deadline_violations: usize,
     /// Per-device utilization (busy / span).
@@ -135,6 +115,8 @@ enum Event {
     DeviceFree(usize),
     /// WaitFill timeout expired for device d (epoch guards staleness).
     BatchTimeout(usize, u64),
+    /// Carbon-sizing hold expired for device d (epoch guards staleness).
+    SizingHold(usize, u64),
 }
 
 struct DeviceState {
@@ -150,16 +132,47 @@ struct DeviceState {
     active_s: f64,
     /// Estimated backlog seconds (for online latency-aware routing).
     backlog_s: f64,
-    /// Timeout epoch (invalidates stale BatchTimeout events).
+    /// Timeout epoch (invalidates stale BatchTimeout/SizingHold events;
+    /// bumped on every launch and every new wait window).
     epoch: u64,
     /// When the current wait window started, if waiting.
     waiting_since: Option<f64>,
+    /// A carbon-sizing hold is pending (cleared on launch or when the
+    /// hold stops being justified — e.g. an interactive arrival).
+    sizing_hold: bool,
 }
 
 impl DeviceState {
     fn queued(&self) -> usize {
         self.queue_hi.len() + self.queue_lo.len()
     }
+
+    fn queued_indices(&self) -> Vec<usize> {
+        self.queue_hi.iter().chain(self.queue_lo.iter()).map(|&(i, _)| i).collect()
+    }
+}
+
+/// Immutable simulation environment (the DES "plumbing" around the
+/// policy core).
+struct Ctx<'a> {
+    cluster: &'a Cluster,
+    prompts: &'a [Prompt],
+    db: &'a BenchmarkDb,
+    cfg: &'a OnlineConfig,
+    policy: &'a PlacementPolicy,
+}
+
+/// Mutable simulation state.
+struct State {
+    q: EventQueue<Event>,
+    devs: Vec<DeviceState>,
+    /// Completion bookkeeping: (prompt idx, batch start) per in-flight batch.
+    inflight: Vec<Option<(Vec<usize>, f64)>>,
+    queue_wait: Summary,
+    batch_fill: Summary,
+    ledger: EnergyLedger,
+    deferred: usize,
+    held_partial: usize,
 }
 
 /// Run the open-loop simulation over prompts with assigned arrival times.
@@ -168,87 +181,74 @@ pub fn run_online(
     prompts: &[Prompt],
     db: &BenchmarkDb,
     cfg: &OnlineConfig,
-) -> OnlineResult {
+) -> Result<OnlineResult> {
     let n_dev = cluster.devices.len();
-    assert!(n_dev > 0 && !prompts.is_empty());
-
-    let mut q: EventQueue<Event> = EventQueue::new();
-    for (i, p) in prompts.iter().enumerate() {
-        q.push(p.arrival_s, Event::Arrival(i));
+    if n_dev == 0 || prompts.is_empty() {
+        return Err(anyhow!("nothing to simulate"));
     }
+    // the single place this plane turns a name into a placement policy
+    let policy = PlacementPolicy::new(&cfg.strategy, cluster, cfg.grid.clone())?;
+    let ctx = Ctx { cluster, prompts, db, cfg, policy: &policy };
 
-    let mut devs: Vec<DeviceState> = (0..n_dev)
-        .map(|_| DeviceState {
-            queue_hi: VecDeque::new(),
-            queue_lo: VecDeque::new(),
-            busy: false,
-            active_s: 0.0,
-            backlog_s: 0.0,
-            epoch: 0,
-            waiting_since: None,
-        })
-        .collect();
-
-    // one forecaster instance per run (deterministic, stateless)
-    let forecaster: Option<Box<dyn Forecaster>> = cfg
-        .grid
-        .as_ref()
-        .map(|g| g.forecaster.build(g.trace.steps_per_day()));
+    let mut st = State {
+        q: EventQueue::new(),
+        devs: (0..n_dev)
+            .map(|_| DeviceState {
+                queue_hi: VecDeque::new(),
+                queue_lo: VecDeque::new(),
+                busy: false,
+                active_s: 0.0,
+                backlog_s: 0.0,
+                epoch: 0,
+                waiting_since: None,
+                sizing_hold: false,
+            })
+            .collect(),
+        inflight: vec![None; n_dev],
+        queue_wait: Summary::new(),
+        batch_fill: Summary::new(),
+        ledger: EnergyLedger::new(cluster.carbon.clone()),
+        deferred: 0,
+        held_partial: 0,
+    };
+    for (i, p) in prompts.iter().enumerate() {
+        st.q.push(p.arrival_s, Event::Arrival(i));
+    }
 
     let mut latency = Summary::new();
     let mut latency_hist = Histogram::latency();
     let mut latency_interactive = Summary::new();
     let mut latency_deferrable = Summary::new();
-    let mut queue_wait = Summary::new();
-    let mut batch_fill = Summary::new();
-    let mut ledger = EnergyLedger::new(cluster.carbon.clone());
     let mut completed = 0usize;
-    let mut deferred = 0usize;
     let mut deadline_violations = 0usize;
     let mut span = 0.0f64;
-    // completion bookkeeping: (prompt idx, batch start) per in-flight batch
-    let mut inflight: Vec<Option<(Vec<usize>, f64)>> = vec![None; n_dev];
 
-    while let Some(ev) = q.pop() {
+    while let Some(ev) = st.q.pop() {
         let now = ev.at;
         match ev.event {
             Event::Arrival(i) => {
-                let hold = cfg.grid.as_ref().and_then(|g| {
-                    if !g.defer || !prompts[i].slo.is_deferrable() {
-                        return None;
-                    }
-                    let release = plan_release(
-                        g,
-                        forecaster.as_deref().unwrap(),
-                        cluster,
-                        db,
-                        &devs,
-                        &prompts[i],
-                        cfg.batch_size,
-                        now,
-                    );
-                    (release > now + 1e-9).then_some(release)
-                });
-                match hold {
-                    Some(release) => {
-                        deferred += 1;
-                        q.push(release, Event::Release(i));
-                    }
-                    None => {
-                        admit(cluster, prompts, db, cfg, forecaster.as_deref(), &mut devs, i,
-                              false, now, &mut q, &mut inflight, &mut batch_fill,
-                              &mut queue_wait, &mut ledger);
-                    }
+                let backlog: f64 = st.devs.iter().map(|d| d.backlog_s).sum();
+                let release = policy.plan_release(
+                    &prompts[i],
+                    cluster,
+                    db,
+                    cfg.batch_size,
+                    backlog,
+                    now,
+                );
+                if release > now + 1e-9 {
+                    st.deferred += 1;
+                    st.q.push(release, Event::Release(i));
+                } else {
+                    admit(&ctx, &mut st, i, false, now);
                 }
             }
             Event::Release(i) => {
-                admit(cluster, prompts, db, cfg, forecaster.as_deref(), &mut devs, i, true,
-                      now, &mut q, &mut inflight, &mut batch_fill, &mut queue_wait,
-                      &mut ledger);
+                admit(&ctx, &mut st, i, true, now);
             }
             Event::DeviceFree(d) => {
                 // account the finished batch
-                if let Some((members, start)) = inflight[d].take() {
+                if let Some((members, start)) = st.inflight[d].take() {
                     for &i in &members {
                         let lat = now - prompts[i].arrival_s;
                         latency.add(lat);
@@ -265,240 +265,140 @@ pub fn run_online(
                         completed += 1;
                     }
                     span = span.max(now);
-                    devs[d].active_s += now - start;
+                    st.devs[d].active_s += now - start;
                 }
-                devs[d].busy = false;
-                maybe_launch(cluster, prompts, db, cfg, &mut devs, d, now, &mut q, &mut inflight,
-                             &mut batch_fill, &mut queue_wait, &mut ledger);
+                st.devs[d].busy = false;
+                maybe_launch(&ctx, &mut st, d, now);
             }
             Event::BatchTimeout(d, epoch) => {
-                if devs[d].epoch == epoch && !devs[d].busy && devs[d].queued() > 0 {
-                    devs[d].waiting_since = None;
-                    launch(cluster, prompts, db, cfg, &mut devs, d, now, &mut q, &mut inflight,
-                           &mut batch_fill, &mut queue_wait, &mut ledger);
+                if st.devs[d].epoch == epoch && !st.devs[d].busy && st.devs[d].queued() > 0 {
+                    st.devs[d].waiting_since = None;
+                    launch(&ctx, &mut st, d, now);
+                }
+            }
+            Event::SizingHold(d, epoch) => {
+                if st.devs[d].epoch == epoch && !st.devs[d].busy && st.devs[d].queued() > 0 {
+                    st.devs[d].waiting_since = None;
+                    launch(&ctx, &mut st, d, now);
                 }
             }
         }
     }
 
-    OnlineResult {
+    Ok(OnlineResult {
         completed,
         span_s: span,
         latency,
         latency_hist,
         latency_interactive,
         latency_deferrable,
-        queue_wait,
-        batch_fill,
-        deferred,
+        queue_wait: st.queue_wait,
+        batch_fill: st.batch_fill,
+        deferred: st.deferred,
+        held_partial: st.held_partial,
         deadline_violations,
         utilization: cluster
             .devices
             .iter()
-            .zip(&devs)
-            .map(|(dev, st)| (dev.name.clone(), st.active_s / span.max(1e-9)))
+            .zip(&st.devs)
+            .map(|(dev, d)| (dev.name.clone(), d.active_s / span.max(1e-9)))
             .collect(),
-        ledger,
-    }
+        ledger: st.ledger,
+    })
 }
 
 /// Route prompt `i` onto a device queue (`lo` = released deferred work,
 /// which yields to interactive traffic) and try to launch.
-#[allow(clippy::too_many_arguments)]
-fn admit(
-    cluster: &Cluster,
-    prompts: &[Prompt],
-    db: &BenchmarkDb,
-    cfg: &OnlineConfig,
-    forecaster: Option<&dyn Forecaster>,
-    devs: &mut [DeviceState],
-    i: usize,
-    lo: bool,
-    now: f64,
-    q: &mut EventQueue<Event>,
-    inflight: &mut [Option<(Vec<usize>, f64)>],
-    batch_fill: &mut Summary,
-    queue_wait: &mut Summary,
-    ledger: &mut EnergyLedger,
-) {
-    let d = route(cluster, db, devs, &prompts[i], cfg, forecaster, now);
-    devs[d].backlog_s += db.cost(&cluster.devices[d], &prompts[i], cfg.batch_size).e2e_s;
+fn admit(ctx: &Ctx, st: &mut State, i: usize, lo: bool, now: f64) {
+    let backlog: Vec<f64> = st.devs.iter().map(|d| d.backlog_s).collect();
+    let d = ctx.policy.route_arrival(
+        &ctx.prompts[i],
+        ctx.cluster,
+        ctx.db,
+        ctx.cfg.batch_size,
+        &backlog,
+        now,
+    );
+    st.devs[d].backlog_s +=
+        ctx.db.cost(&ctx.cluster.devices[d], &ctx.prompts[i], ctx.cfg.batch_size).e2e_s;
     if lo {
-        devs[d].queue_lo.push_back((i, now));
+        st.devs[d].queue_lo.push_back((i, now));
     } else {
-        devs[d].queue_hi.push_back((i, now));
+        st.devs[d].queue_hi.push_back((i, now));
     }
-    maybe_launch(cluster, prompts, db, cfg, devs, d, now, q, inflight, batch_fill, queue_wait,
-                 ledger);
+    maybe_launch(ctx, st, d, now);
 }
 
-/// Pick the release time for a deferrable prompt: the cleanest forecast
-/// window reachable before `arrival + deadline − safety`. The safety
-/// margin covers worst-case batch occupancy plus the backlog already in
-/// the cluster, so honoring the release time honours the deadline.
-#[allow(clippy::too_many_arguments)]
-fn plan_release(
-    grid: &GridShiftConfig,
-    forecaster: &dyn Forecaster,
-    cluster: &Cluster,
-    db: &BenchmarkDb,
-    devs: &[DeviceState],
-    p: &Prompt,
-    batch_size: usize,
-    now: f64,
-) -> f64 {
-    let deadline_s = match p.slo.deadline_s() {
-        Some(d) => d,
-        None => return now,
-    };
-    let est = (0..cluster.devices.len())
-        .map(|d| db.cost(&cluster.devices[d], p, batch_size).e2e_s)
-        .fold(f64::MAX, f64::min);
-    let backlog: f64 = devs.iter().map(|d| d.backlog_s).sum();
-    // the margin must absorb worst-case batch occupancy, today's
-    // backlog, AND the pile-up of other deferred prompts releasing into
-    // the same clean window — 10 % of the deadline covers that pile-up
-    // generously at any sane load while barely shrinking the set of
-    // reachable clean windows
-    let safety = (3.0 * batch_size as f64 * est + backlog)
-        .max(0.10 * deadline_s)
-        .max(120.0);
-    let latest_start = p.arrival_s + deadline_s - safety;
-    if latest_start <= now {
-        return now; // no slack: behave like an interactive prompt
-    }
-    let step = grid.trace.step_s;
-    let horizon = ((((latest_start - now) / step).floor() as usize) + 1).min(grid.horizon_steps);
-    if horizon == 0 {
-        return now;
-    }
-    let step_now = grid.trace.step_of(now);
-    let history = grid.trace.history(step_now, grid.lookback_steps);
-    let forecast = forecaster.forecast(&history, horizon);
-    let run_steps = ((est * batch_size as f64 / step).ceil() as usize).max(1);
-    let j = shift::best_start_step(&forecast, horizon - 1, run_steps);
-    if j == 0 {
-        // the very next step is already the cleanest reachable window:
-        // no predicted benefit to waiting, dispatch immediately
-        return now;
-    }
-    // forecast[j] predicts trace step `step_now + 1 + j` (history ends
-    // at step_now inclusive), so release at that step's start
-    ((step_now + 1 + j as i64) as f64 * step).max(now).min(latest_start)
-}
-
-/// On-arrival routing (mirrors server::service::route_online, plus the
-/// forecast-carbon-aware strategy).
-fn route(
-    cluster: &Cluster,
-    db: &BenchmarkDb,
-    devs: &[DeviceState],
-    p: &Prompt,
-    cfg: &OnlineConfig,
-    forecaster: Option<&dyn Forecaster>,
-    now: f64,
-) -> usize {
-    let n = cluster.devices.len();
-    if let Some(name) = cfg.strategy.strip_prefix("all-on-") {
-        return cluster.device_index(name).unwrap_or(0);
-    }
-    match cfg.strategy.as_str() {
-        "carbon-aware" => argmin(n, |d| db.cost(&cluster.devices[d], p, cfg.batch_size).carbon_kg),
-        "forecast-carbon-aware" => match (&cfg.grid, forecaster) {
-            (Some(g), Some(f)) => {
-                // one forecast per routing decision: fit once on the
-                // history up to now, then index per device. forecast[k]
-                // predicts trace step `step_now + 1 + k`; an execution
-                // landing inside the current step uses the observed
-                // current sample (history's last entry).
-                let step_now = g.trace.step_of(now);
-                let history = g.trace.history(step_now, g.lookback_steps);
-                let current = history.last().copied().unwrap_or(0.0);
-                let per_dev: Vec<(f64, usize)> = (0..n)
-                    .map(|d| {
-                        let c = db.cost(&cluster.devices[d], p, cfg.batch_size);
-                        let exec_t = now + devs[d].backlog_s + 0.5 * c.e2e_s;
-                        let ahead = (g.trace.step_of(exec_t) - step_now).max(0) as usize;
-                        (c.energy_kwh, ahead.min(g.horizon_steps.max(1)))
-                    })
-                    .collect();
-                let max_ahead = per_dev.iter().map(|&(_, a)| a).max().unwrap_or(0);
-                let forecast =
-                    if max_ahead > 0 { f.forecast(&history, max_ahead) } else { Vec::new() };
-                argmin(n, |d| {
-                    let (energy, ahead) = per_dev[d];
-                    let intensity = if ahead == 0 { current } else { forecast[ahead - 1] };
-                    energy * intensity
-                })
-            }
-            // degenerate case without a grid signal: arrival-time pricing
-            _ => argmin(n, |d| db.cost(&cluster.devices[d], p, cfg.batch_size).carbon_kg),
-        },
-        "round-robin" => (p.id as usize) % n,
-        _ => argmin(n, |d| {
-            devs[d].backlog_s + db.cost(&cluster.devices[d], p, cfg.batch_size).e2e_s
-        }),
-    }
-}
-
-#[allow(clippy::too_many_arguments)]
-fn maybe_launch(
-    cluster: &Cluster,
-    prompts: &[Prompt],
-    db: &BenchmarkDb,
-    cfg: &OnlineConfig,
-    devs: &mut [DeviceState],
-    d: usize,
-    now: f64,
-    q: &mut EventQueue<Event>,
-    inflight: &mut [Option<(Vec<usize>, f64)>],
-    batch_fill: &mut Summary,
-    queue_wait: &mut Summary,
-    ledger: &mut EnergyLedger,
-) {
-    if devs[d].busy || devs[d].queued() == 0 {
+fn maybe_launch(ctx: &Ctx, st: &mut State, d: usize, now: f64) {
+    if st.devs[d].busy || st.devs[d].queued() == 0 {
         return;
     }
-    let full = devs[d].queued() >= cfg.batch_size;
-    match cfg.policy {
-        BatchPolicy::Immediate => {
-            launch(cluster, prompts, db, cfg, devs, d, now, q, inflight, batch_fill, queue_wait, ledger)
+    let full = st.devs[d].queued() >= ctx.cfg.batch_size;
+    // carbon-aware batch sizing: a free device holding only a partial
+    // batch of deferrable prompts may wait for a forecast clean window
+    // (an interactive arrival re-enters here and launches immediately)
+    if !full {
+        let queued = st.devs[d].queued_indices();
+        match ctx.policy.plan_batch_hold(
+            ctx.cluster,
+            ctx.db,
+            ctx.prompts,
+            &queued,
+            d,
+            ctx.cfg.batch_size,
+            now,
+        ) {
+            Some(until) => {
+                if !st.devs[d].sizing_hold {
+                    // count held batches, not re-plans of the same hold
+                    st.held_partial += 1;
+                }
+                st.devs[d].sizing_hold = true;
+                st.devs[d].epoch += 1;
+                st.devs[d].waiting_since = Some(now);
+                let epoch = st.devs[d].epoch;
+                st.q.push(until, Event::SizingHold(d, epoch));
+                return;
+            }
+            None if st.devs[d].sizing_hold => {
+                // the pending hold is no longer justified (an
+                // interactive prompt joined, or the slack vanished):
+                // pre-empt it and launch immediately — under ANY
+                // batch policy, so WaitFill cannot strand the queue
+                // behind a stale hold
+                st.devs[d].waiting_since = None;
+                launch(ctx, st, d, now);
+                return;
+            }
+            None => {}
         }
+    }
+    match ctx.cfg.policy {
+        BatchPolicy::Immediate => launch(ctx, st, d, now),
         BatchPolicy::WaitFill { timeout_s } => {
             if full {
-                devs[d].waiting_since = None;
-                launch(cluster, prompts, db, cfg, devs, d, now, q, inflight, batch_fill, queue_wait, ledger)
-            } else if devs[d].waiting_since.is_none() {
-                devs[d].waiting_since = Some(now);
-                devs[d].epoch += 1;
-                let epoch = devs[d].epoch;
-                q.push(now + timeout_s, Event::BatchTimeout(d, epoch));
+                st.devs[d].waiting_since = None;
+                launch(ctx, st, d, now);
+            } else if st.devs[d].waiting_since.is_none() {
+                st.devs[d].waiting_since = Some(now);
+                st.devs[d].epoch += 1;
+                let epoch = st.devs[d].epoch;
+                st.q.push(now + timeout_s, Event::BatchTimeout(d, epoch));
             }
         }
     }
 }
 
-#[allow(clippy::too_many_arguments)]
-fn launch(
-    cluster: &Cluster,
-    prompts: &[Prompt],
-    db: &BenchmarkDb,
-    cfg: &OnlineConfig,
-    devs: &mut [DeviceState],
-    d: usize,
-    now: f64,
-    q: &mut EventQueue<Event>,
-    inflight: &mut [Option<(Vec<usize>, f64)>],
-    batch_fill: &mut Summary,
-    queue_wait: &mut Summary,
-    ledger: &mut EnergyLedger,
-) {
-    let dev = &cluster.devices[d];
-    let take = devs[d].queued().min(cfg.batch_size);
+fn launch(ctx: &Ctx, st: &mut State, d: usize, now: f64) {
+    let dev = &ctx.cluster.devices[d];
+    // launching invalidates any pending timeout/hold for this device
+    st.devs[d].epoch += 1;
+    st.devs[d].sizing_hold = false;
+    let take = st.devs[d].queued().min(ctx.cfg.batch_size);
     let mut members: Vec<usize> = Vec::with_capacity(take);
     let mut admitted: Vec<f64> = Vec::with_capacity(take);
     while members.len() < take {
-        match devs[d].queue_hi.pop_front().or_else(|| devs[d].queue_lo.pop_front()) {
+        match st.devs[d].queue_hi.pop_front().or_else(|| st.devs[d].queue_lo.pop_front()) {
             Some((i, at)) => {
                 members.push(i);
                 admitted.push(at);
@@ -509,44 +409,32 @@ fn launch(
     for (&i, &at) in members.iter().zip(&admitted) {
         // wait measured from admission, so the intentional deferral
         // hold does not masquerade as queueing contention
-        queue_wait.add(now - at);
-        devs[d].backlog_s =
-            (devs[d].backlog_s - db.cost(dev, &prompts[i], cfg.batch_size).e2e_s).max(0.0);
+        st.queue_wait.add(now - at);
+        st.devs[d].backlog_s = (st.devs[d].backlog_s
+            - ctx.db.cost(dev, &ctx.prompts[i], ctx.cfg.batch_size).e2e_s)
+            .max(0.0);
     }
-    batch_fill.add(members.len() as f64);
+    st.batch_fill.add(members.len() as f64);
 
     let work = BatchWork::new(
-        members.iter().map(|&i| prompts[i].prompt_tokens).collect(),
+        members.iter().map(|&i| ctx.prompts[i].prompt_tokens).collect(),
         members
             .iter()
-            .map(|&i| prompts[i].output_tokens_on(dev.output_median_tokens))
+            .map(|&i| ctx.prompts[i].output_tokens_on(dev.output_median_tokens))
             .collect(),
     );
     let timing = simulate_batch(dev, &work, None);
-    let arrivals: Vec<f64> = members.iter().map(|&i| prompts[i].arrival_s).collect();
-    ledger.post_batch_shifted(
+    let arrivals: Vec<f64> = members.iter().map(|&i| ctx.prompts[i].arrival_s).collect();
+    st.ledger.post_batch_shifted(
         &dev.name,
         timing.energy_kwh,
         timing.total_s,
         now + timing.total_s,
         &arrivals,
     );
-    devs[d].busy = true;
-    inflight[d] = Some((members, now));
-    q.push(now + timing.total_s, Event::DeviceFree(d));
-}
-
-fn argmin(n: usize, mut f: impl FnMut(usize) -> f64) -> usize {
-    let mut best = 0;
-    let mut best_v = f(0);
-    for i in 1..n {
-        let v = f(i);
-        if v < best_v {
-            best_v = v;
-            best = i;
-        }
-    }
-    best
+    st.devs[d].busy = true;
+    st.inflight[d] = Some((members, now));
+    st.q.push(now + timing.total_s, Event::DeviceFree(d));
 }
 
 #[cfg(test)]
@@ -554,6 +442,7 @@ mod tests {
     use super::*;
     use crate::cluster::CarbonModel;
     use crate::config::{Arrival, ExperimentConfig};
+    use crate::grid::ForecastKind;
     use crate::workload::{trace, Corpus};
 
     fn setup(n: usize, rate: f64) -> (Cluster, Vec<Prompt>, BenchmarkDb) {
@@ -589,7 +478,7 @@ mod tests {
     #[test]
     fn all_requests_complete() {
         let (cluster, prompts, db) = setup(80, 0.5);
-        let r = run_online(&cluster, &prompts, &db, &OnlineConfig::default());
+        let r = run_online(&cluster, &prompts, &db, &OnlineConfig::default()).unwrap();
         assert_eq!(r.completed, 80);
         assert!(r.span_s > 0.0);
         assert!(r.latency.mean() > 0.0);
@@ -597,15 +486,24 @@ mod tests {
         assert!(util_sum > 0.0);
         // no grid context: nothing deferred, nothing violated
         assert_eq!(r.deferred, 0);
+        assert_eq!(r.held_partial, 0);
         assert_eq!(r.deadline_violations, 0);
         assert_eq!(r.latency_interactive.count() as usize, 80);
     }
 
     #[test]
+    fn unknown_strategy_fails_loudly() {
+        let (cluster, prompts, db) = setup(4, 0.5);
+        let cfg = OnlineConfig { strategy: "warp-speed".into(), ..OnlineConfig::default() };
+        let err = run_online(&cluster, &prompts, &db, &cfg).unwrap_err().to_string();
+        assert!(err.contains("unknown strategy"), "{err}");
+    }
+
+    #[test]
     fn deterministic() {
         let (cluster, prompts, db) = setup(50, 1.0);
-        let a = run_online(&cluster, &prompts, &db, &OnlineConfig::default());
-        let b = run_online(&cluster, &prompts, &db, &OnlineConfig::default());
+        let a = run_online(&cluster, &prompts, &db, &OnlineConfig::default()).unwrap();
+        let b = run_online(&cluster, &prompts, &db, &OnlineConfig::default()).unwrap();
         assert_eq!(a.latency.mean(), b.latency.mean());
         assert_eq!(a.span_s, b.span_s);
     }
@@ -615,8 +513,8 @@ mod tests {
         let cfg = OnlineConfig::default();
         let (cluster, light, db) = setup(120, 0.05);
         let (_, heavy, _) = setup(120, 2.0);
-        let r_light = run_online(&cluster, &light, &db, &cfg);
-        let r_heavy = run_online(&cluster, &heavy, &db, &cfg);
+        let r_light = run_online(&cluster, &light, &db, &cfg).unwrap();
+        let r_heavy = run_online(&cluster, &heavy, &db, &cfg).unwrap();
         assert!(
             r_heavy.latency.mean() > r_light.latency.mean() * 1.5,
             "light {} heavy {}",
@@ -628,7 +526,7 @@ mod tests {
     #[test]
     fn waitfill_increases_fill_under_light_load() {
         let (cluster, prompts, db) = setup(100, 0.4);
-        let imm = run_online(&cluster, &prompts, &db, &OnlineConfig::default());
+        let imm = run_online(&cluster, &prompts, &db, &OnlineConfig::default()).unwrap();
         let wait = run_online(
             &cluster,
             &prompts,
@@ -637,7 +535,8 @@ mod tests {
                 policy: BatchPolicy::WaitFill { timeout_s: 20.0 },
                 ..OnlineConfig::default()
             },
-        );
+        )
+        .unwrap();
         assert_eq!(wait.completed, 100);
         assert!(
             wait.batch_fill.mean() > imm.batch_fill.mean(),
@@ -650,13 +549,14 @@ mod tests {
     #[test]
     fn backlog_aware_routing_beats_round_robin_under_load() {
         let (cluster, prompts, db) = setup(150, 1.5);
-        let la = run_online(&cluster, &prompts, &db, &OnlineConfig::default());
+        let la = run_online(&cluster, &prompts, &db, &OnlineConfig::default()).unwrap();
         let rr = run_online(
             &cluster,
             &prompts,
             &db,
             &OnlineConfig { strategy: "round-robin".into(), ..OnlineConfig::default() },
-        );
+        )
+        .unwrap();
         assert!(la.latency.mean() < rr.latency.mean());
     }
 
@@ -668,7 +568,8 @@ mod tests {
             &prompts,
             &db,
             &OnlineConfig { strategy: "all-on-ada-2000".into(), ..OnlineConfig::default() },
-        );
+        )
+        .unwrap();
         assert_eq!(r.completed, 30);
         let jetson_util = r.utilization.iter().find(|(n, _)| n.contains("jetson")).unwrap().1;
         assert_eq!(jetson_util, 0.0);
@@ -682,7 +583,8 @@ mod tests {
             &prompts,
             &db,
             &OnlineConfig { strategy: "carbon-aware".into(), ..OnlineConfig::default() },
-        );
+        )
+        .unwrap();
         let shifted = run_online(
             &cluster,
             &prompts,
@@ -692,7 +594,8 @@ mod tests {
                 grid: Some(grid),
                 ..OnlineConfig::default()
             },
-        );
+        )
+        .unwrap();
         assert_eq!(shifted.completed, 200);
         assert!(shifted.deferred > 0, "nothing was deferred");
         assert_eq!(shifted.deadline_violations, 0);
@@ -729,8 +632,8 @@ mod tests {
             grid: Some(grid),
             ..OnlineConfig::default()
         };
-        let a = run_online(&cluster, &prompts, &db, &cfg);
-        let b = run_online(&cluster, &prompts, &db, &cfg);
+        let a = run_online(&cluster, &prompts, &db, &cfg).unwrap();
+        let b = run_online(&cluster, &prompts, &db, &cfg).unwrap();
         assert_eq!(a.span_s, b.span_s);
         assert_eq!(a.deferred, b.deferred);
         assert_eq!(a.ledger.realized_savings_kg(), b.ledger.realized_savings_kg());
@@ -749,7 +652,8 @@ mod tests {
                 grid: Some(grid),
                 ..OnlineConfig::default()
             },
-        );
+        )
+        .unwrap();
         assert_eq!(r.completed, 60);
         assert_eq!(r.deferred, 0);
     }
@@ -768,8 +672,61 @@ mod tests {
                 grid: Some(grid),
                 ..OnlineConfig::default()
             },
-        );
+        )
+        .unwrap();
         assert_eq!(r.completed, 40);
         assert_eq!(r.deferred, 0);
+    }
+
+    #[test]
+    fn sizing_holds_partial_deferrable_batches_into_cleaner_windows() {
+        // 100 % deferrable, deferral OFF: carbon-aware batch sizing is
+        // the only temporal lever, and it must both hold partial
+        // batches and realize savings without violating a deadline
+        let (cluster, prompts, db, grid) = shifting_setup(80, 1.0);
+        let base_cfg = OnlineConfig {
+            strategy: "carbon-aware".into(),
+            grid: Some(grid.clone().with_defer(false)),
+            ..OnlineConfig::default()
+        };
+        let sized_cfg = OnlineConfig {
+            strategy: "carbon-aware".into(),
+            grid: Some(grid.with_defer(false).with_sizing(true)),
+            ..OnlineConfig::default()
+        };
+        let base = run_online(&cluster, &prompts, &db, &base_cfg).unwrap();
+        let sized = run_online(&cluster, &prompts, &db, &sized_cfg).unwrap();
+        assert_eq!(base.held_partial, 0);
+        assert_eq!(sized.completed, 80);
+        assert!(sized.held_partial > 0, "no partial batch was held");
+        assert_eq!(sized.deadline_violations, 0);
+        let (_, _, base_kg) = base.ledger.totals();
+        let (_, _, sized_kg) = sized.ledger.totals();
+        assert!(sized_kg < base_kg, "sized {sized_kg} vs base {base_kg}");
+        assert!(sized.ledger.realized_savings_kg() > base.ledger.realized_savings_kg());
+    }
+
+    #[test]
+    fn sizing_is_inert_without_deferrable_load() {
+        // 0 % deferrable: sizing on must be decision-identical to off
+        let (cluster, prompts, db, grid) = shifting_setup(60, 0.0);
+        let off = run_online(
+            &cluster,
+            &prompts,
+            &db,
+            &OnlineConfig { grid: Some(grid.clone()), ..OnlineConfig::default() },
+        )
+        .unwrap();
+        let on = run_online(
+            &cluster,
+            &prompts,
+            &db,
+            &OnlineConfig { grid: Some(grid.with_sizing(true)), ..OnlineConfig::default() },
+        )
+        .unwrap();
+        assert_eq!(on.held_partial, 0);
+        assert_eq!(on.span_s, off.span_s);
+        assert_eq!(on.latency.mean(), off.latency.mean());
+        assert_eq!(on.ledger.total_carbon_kg(), off.ledger.total_carbon_kg());
     }
 }

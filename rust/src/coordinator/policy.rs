@@ -1,0 +1,685 @@
+//! Plane-agnostic scheduling core: ONE placement policy for all three
+//! execution planes.
+//!
+//! Before this module existed the repo had three divergent placement
+//! implementations — the closed-loop scheduler, the open-loop DES and
+//! the wallclock server each re-implemented routing (the server by
+//! string-matching strategy names, silently falling back to
+//! latency-aware on a typo). [`PlacementPolicy`] now owns the full
+//! placement decision and every plane drives it:
+//!
+//! - **routing** — strategy resolution goes through
+//!   [`router::build`], so an unknown name fails loudly and identically
+//!   in `run`, `serve` and `bench`; whole-corpus placement uses
+//!   [`Strategy::assign`], on-arrival placement uses
+//!   [`Strategy::route_one`] with live backlog;
+//! - **SLO deferral** — [`PlacementPolicy::plan_release`] picks the
+//!   cleanest forecast window inside a `Deferrable` prompt's deadline
+//!   slack (the temporal-shifting planner, shared verbatim by the DES,
+//!   the wallclock ingest and the closed-loop corpus plan);
+//! - **batch formation** — [`PlacementPolicy::plan_corpus`] orders each
+//!   device queue by release time (SLO-aware ordering) and forms
+//!   admission-controlled batches;
+//! - **carbon-aware batch sizing** —
+//!   [`PlacementPolicy::plan_batch_hold`]: a free device holding only a
+//!   *partial* batch of `Deferrable` prompts may wait for a forecast
+//!   clean window instead of launching immediately. Interactive traffic
+//!   always pre-empts a hold, and the hold is bounded by every member's
+//!   deadline minus a service-time safety margin.
+//!
+//! ## Equivalence guarantee
+//!
+//! Under the default configuration (no grid context, every prompt
+//! `Interactive`) the policy core reproduces the pre-refactor pipeline
+//! decision-for-decision: `plan_corpus` sorts by release time, which is
+//! arrival order, so the batch plan equals
+//! `form_batches(strategy.assign(..))` exactly — pinned by the
+//! cross-plane equivalence test in `tests/planes.rs`.
+
+use anyhow::Result;
+
+use crate::cluster::{CarbonModel, Cluster};
+use crate::grid::{shift, ForecastKind, Forecaster, GridTrace};
+use crate::workload::Prompt;
+
+use super::batcher::{form_batches_ordered, Batch, Grouping};
+use super::estimator::BenchmarkDb;
+use super::router::{self, OnlineView, RouteContext, Strategy};
+
+/// Grid context for temporal shifting, forecast-aware routing, and
+/// carbon-aware batch sizing. Shared by every plane.
+#[derive(Debug, Clone)]
+pub struct GridShiftConfig {
+    /// Ground-truth intensity signal. Pair it with
+    /// `CarbonModel::Trace` of the same trace on the cluster so
+    /// planning and carbon accounting agree.
+    pub trace: GridTrace,
+    pub forecaster: ForecastKind,
+    /// History steps the forecaster sees at each decision (≥ one day
+    /// keeps seasonal models useful from t = 0; operators have
+    /// yesterday's grid data).
+    pub lookback_steps: usize,
+    /// Planning horizon cap, steps.
+    pub horizon_steps: usize,
+    /// Hold `Deferrable` prompts for forecast low-carbon windows.
+    pub defer: bool,
+    /// Carbon-aware batch *sizing*: a free device holding only a
+    /// partial batch of `Deferrable` prompts may wait for a forecast
+    /// clean window instead of launching immediately.
+    pub sizing: bool,
+}
+
+impl GridShiftConfig {
+    /// Defaults: two days of lookback, two days of horizon, deferral
+    /// on, sizing off.
+    pub fn new(trace: GridTrace, forecaster: ForecastKind) -> Self {
+        let day = trace.steps_per_day();
+        GridShiftConfig {
+            trace,
+            forecaster,
+            lookback_steps: 2 * day,
+            horizon_steps: 2 * day,
+            defer: true,
+            sizing: false,
+        }
+    }
+
+    /// Build from the cluster's carbon model when it is time-varying;
+    /// `None` under a constant model (there is nothing to shift
+    /// against, so every plane degrades to purely spatial placement).
+    pub fn from_model(carbon: &CarbonModel, forecaster: ForecastKind, step_s: f64) -> Option<Self> {
+        let trace = carbon.to_trace(step_s);
+        if trace.len() <= 1 {
+            return None;
+        }
+        Some(Self::new(trace, forecaster))
+    }
+
+    pub fn with_defer(mut self, defer: bool) -> Self {
+        self.defer = defer;
+        self
+    }
+
+    pub fn with_sizing(mut self, sizing: bool) -> Self {
+        self.sizing = sizing;
+        self
+    }
+}
+
+/// The closed-loop corpus plan: routing + release times + batches.
+#[derive(Debug, Clone)]
+pub struct CorpusPlan {
+    /// Device index per prompt (the routing decision).
+    pub assignment: Vec<usize>,
+    /// Earliest-start time per prompt: the arrival time unless the
+    /// deferral planner shifted the prompt into a cleaner window.
+    pub release_s: Vec<f64>,
+    /// Admission-controlled batches, per-device queues drained in
+    /// release order.
+    pub batches: Vec<Batch>,
+    /// Prompts whose release was shifted past their arrival.
+    pub deferred: usize,
+}
+
+/// The full placement decision, shared by the closed-loop scheduler,
+/// the open-loop DES and the wallclock server.
+pub struct PlacementPolicy {
+    strategy: Box<dyn Strategy>,
+    /// Grid context; `None` restores purely spatial placement.
+    pub grid: Option<GridShiftConfig>,
+}
+
+impl PlacementPolicy {
+    /// Resolve a strategy name through [`router::build`] — the single
+    /// place any plane turns a name into a placement policy. Unknown
+    /// names error here, loudly, for every plane.
+    pub fn new(strategy: &str, cluster: &Cluster, grid: Option<GridShiftConfig>) -> Result<Self> {
+        Ok(PlacementPolicy { strategy: router::build(strategy, cluster)?, grid })
+    }
+
+    /// A purely spatial policy (no grid context) — the paper's setup.
+    pub fn spatial(strategy: &str, cluster: &Cluster) -> Result<Self> {
+        Self::new(strategy, cluster, None)
+    }
+
+    /// Wrap an already-built strategy.
+    pub fn from_strategy(strategy: Box<dyn Strategy>, grid: Option<GridShiftConfig>) -> Self {
+        PlacementPolicy { strategy, grid }
+    }
+
+    pub fn name(&self) -> String {
+        self.strategy.name()
+    }
+
+    pub fn strategy(&self) -> &dyn Strategy {
+        self.strategy.as_ref()
+    }
+
+    /// Whole-corpus routing (the closed-loop plane).
+    pub fn route_corpus(
+        &self,
+        prompts: &[Prompt],
+        cluster: &Cluster,
+        db: &BenchmarkDb,
+        batch_size: usize,
+    ) -> Vec<usize> {
+        let ctx = RouteContext { cluster, db, batch_size };
+        self.strategy.assign(prompts, &ctx)
+    }
+
+    /// On-arrival routing with live per-device backlog (the DES and
+    /// wallclock planes).
+    pub fn route_arrival(
+        &self,
+        p: &Prompt,
+        cluster: &Cluster,
+        db: &BenchmarkDb,
+        batch_size: usize,
+        backlog_s: &[f64],
+        now: f64,
+    ) -> usize {
+        let ctx = RouteContext { cluster, db, batch_size };
+        let view = OnlineView { backlog_s, now, grid: self.grid.as_ref() };
+        self.strategy.route_one(p, &ctx, &view)
+    }
+
+    /// Pick the release time for a prompt: the cleanest forecast window
+    /// reachable before `arrival + deadline − safety`, or `now` when
+    /// the prompt is interactive, deferral is off, there is no slack,
+    /// or waiting predicts no benefit. The safety margin covers
+    /// worst-case batch occupancy plus the backlog already in the
+    /// cluster, so honoring the release time honours the deadline.
+    pub fn plan_release(
+        &self,
+        p: &Prompt,
+        cluster: &Cluster,
+        db: &BenchmarkDb,
+        batch_size: usize,
+        backlog_s: f64,
+        now: f64,
+    ) -> f64 {
+        let g = match &self.grid {
+            Some(g) if g.defer => g,
+            _ => return now,
+        };
+        let deadline_s = match p.slo.deadline_s() {
+            Some(d) => d,
+            None => return now,
+        };
+        let est = min_cost_e2e(p, cluster, db, batch_size);
+        // the margin must absorb worst-case batch occupancy, today's
+        // backlog, AND the pile-up of other deferred prompts releasing
+        // into the same clean window — 10 % of the deadline covers that
+        // pile-up generously at any sane load while barely shrinking
+        // the set of reachable clean windows
+        let safety = (3.0 * batch_size as f64 * est + backlog_s)
+            .max(0.10 * deadline_s)
+            .max(120.0);
+        let latest_start = p.arrival_s + deadline_s - safety;
+        let run_steps = ((est * batch_size as f64 / g.trace.step_s).ceil() as usize).max(1);
+        // no slack, or no predicted benefit to waiting: run now
+        clean_window(g, latest_start, run_steps, now).unwrap_or(now)
+    }
+
+    /// Carbon-aware batch sizing: should `device` launch the partial
+    /// batch `queued` now, or hold it for a cleaner window?
+    ///
+    /// Returns `Some(hold_until)` only when sizing is enabled, the
+    /// batch is partial, *every* member is `Deferrable` with slack, and
+    /// the forecast predicts a strictly cleaner window inside the
+    /// tightest member's deadline bound. The safety margin is priced on
+    /// `device` itself (the batch will run there — the cluster's
+    /// fastest device is irrelevant to its deadline risk). Any
+    /// interactive member — or an interactive arrival during the hold —
+    /// forces an immediate launch, so sizing can never delay
+    /// interactive traffic.
+    #[allow(clippy::too_many_arguments)]
+    pub fn plan_batch_hold(
+        &self,
+        cluster: &Cluster,
+        db: &BenchmarkDb,
+        prompts: &[Prompt],
+        queued: &[usize],
+        device: usize,
+        batch_size: usize,
+        now: f64,
+    ) -> Option<f64> {
+        let g = self.grid.as_ref()?;
+        if !g.sizing || queued.is_empty() || queued.len() >= batch_size {
+            return None;
+        }
+        let mut bound = f64::INFINITY;
+        let mut est_max = 0.0f64;
+        for &i in queued {
+            let p = &prompts[i];
+            let deadline_s = p.slo.deadline_s()?; // interactive member: launch now
+            let est = db.cost(&cluster.devices[device], p, batch_size).e2e_s;
+            est_max = est_max.max(est);
+            let safety = (3.0 * batch_size as f64 * est).max(0.05 * deadline_s).max(60.0);
+            bound = bound.min(p.arrival_s + deadline_s - safety);
+        }
+        if !bound.is_finite() {
+            return None;
+        }
+        let run_steps =
+            ((est_max * queued.len() as f64 / g.trace.step_s).ceil() as usize).max(1);
+        clean_window(g, bound, run_steps, now)
+    }
+
+    /// The closed-loop corpus plan: route the whole corpus, plan
+    /// deferral releases, order each device queue by release time
+    /// (SLO-aware ordering) and form admission-controlled batches.
+    ///
+    /// With no grid context every release equals its arrival and the
+    /// order is arrival order — the plan is byte-identical to the
+    /// pre-refactor `form_batches(strategy.assign(..))` pipeline.
+    pub fn plan_corpus(
+        &self,
+        prompts: &[Prompt],
+        cluster: &Cluster,
+        db: &BenchmarkDb,
+        batch_size: usize,
+        grouping: Grouping,
+    ) -> CorpusPlan {
+        let assignment = self.route_corpus(prompts, cluster, db, batch_size);
+        let mut release_s: Vec<f64> = prompts.iter().map(|p| p.arrival_s).collect();
+        let mut deferred = 0usize;
+        if matches!(&self.grid, Some(g) if g.defer) {
+            // closed-loop "backlog" at plan time: the whole corpus is
+            // already queued, so charge each deferral decision the mean
+            // per-device share of total estimated work
+            let n_dev = cluster.devices.len().max(1);
+            let backlog_s: f64 = prompts
+                .iter()
+                .map(|p| min_cost_e2e(p, cluster, db, batch_size))
+                .sum::<f64>()
+                / n_dev as f64;
+            for (i, p) in prompts.iter().enumerate() {
+                let r = self.plan_release(p, cluster, db, batch_size, backlog_s, p.arrival_s);
+                if r > p.arrival_s + 1e-9 {
+                    release_s[i] = r;
+                    deferred += 1;
+                }
+            }
+        }
+        let mut order: Vec<usize> = (0..prompts.len()).collect();
+        order.sort_by(|&a, &b| {
+            release_s[a]
+                .partial_cmp(&release_s[b])
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(&b))
+        });
+        // Batch per release cohort: prompts running at arrival form one
+        // cohort, shifted prompts one cohort per release window (trace
+        // step). A batch launches at its LATEST member's release, so
+        // mixing cohorts would drag interactive prompts into a deferred
+        // member's clean window hours away; within one window cohort
+        // the spread is below a single trace step, inside every
+        // member's safety margin. With no grid every prompt is in the
+        // run-at-arrival cohort and this is one plain form_batches
+        // pass — the pre-refactor plan, exactly.
+        let batches = match &self.grid {
+            Some(g) if deferred > 0 => {
+                let cohort = |i: usize| -> i64 {
+                    if release_s[i] <= prompts[i].arrival_s + 1e-9 {
+                        i64::MIN // run-at-arrival cohort
+                    } else {
+                        g.trace.step_of(release_s[i])
+                    }
+                };
+                let mut cohorts: Vec<(i64, Vec<usize>)> = Vec::new();
+                for &i in &order {
+                    let key = cohort(i);
+                    match cohorts.iter_mut().find(|(k, _)| *k == key) {
+                        Some((_, members)) => members.push(i),
+                        None => cohorts.push((key, vec![i])),
+                    }
+                }
+                let mut out = Vec::new();
+                for (_, members) in &cohorts {
+                    out.extend(form_batches_ordered(
+                        prompts, &assignment, members, batch_size, cluster, grouping,
+                    ));
+                }
+                out
+            }
+            _ => form_batches_ordered(prompts, &assignment, &order, batch_size, cluster, grouping),
+        };
+        if matches!(&self.grid, Some(g) if g.sizing) {
+            // carbon-aware batch sizing in the closed loop: each
+            // device's TRAILING batch — the only partial one the
+            // chunker produces at the queue tail, so holding it delays
+            // nothing behind it — may start in a cleaner window when
+            // every member is deferrable with slack
+            let mut tail: std::collections::BTreeMap<usize, usize> = std::collections::BTreeMap::new();
+            for (k, b) in batches.iter().enumerate() {
+                tail.insert(b.device, k);
+            }
+            for &k in tail.values() {
+                let batch = &batches[k];
+                let ready = batch
+                    .members
+                    .iter()
+                    .map(|&i| release_s[i])
+                    .fold(0.0f64, f64::max);
+                if let Some(until) = self.plan_batch_hold(
+                    cluster,
+                    db,
+                    prompts,
+                    &batch.members,
+                    batch.device,
+                    batch_size,
+                    ready,
+                ) {
+                    for &i in &batch.members {
+                        if until > release_s[i] + 1e-9 {
+                            if release_s[i] <= prompts[i].arrival_s + 1e-9 {
+                                deferred += 1;
+                            }
+                            release_s[i] = until;
+                        }
+                    }
+                }
+            }
+        }
+        CorpusPlan { assignment, release_s, batches, deferred }
+    }
+}
+
+/// The shared clean-window search: the cleanest forecast window start
+/// in `(now, bound]`, or `None` when there is no slack (`bound <= now`)
+/// or `now` is already the cleanest reachable start. `run_steps` sizes
+/// the averaging window over the forecast. Both the per-prompt deferral
+/// planner and the batch-sizing planner resolve through here, so the
+/// forecast indexing (`forecast[j]` predicts trace step
+/// `step_now + 1 + j` — history ends at `step_now` inclusive) lives in
+/// exactly one place.
+fn clean_window(g: &GridShiftConfig, bound: f64, run_steps: usize, now: f64) -> Option<f64> {
+    if bound <= now {
+        return None;
+    }
+    let step = g.trace.step_s;
+    let horizon = ((((bound - now) / step).floor() as usize) + 1).min(g.horizon_steps);
+    if horizon == 0 {
+        return None;
+    }
+    let step_now = g.trace.step_of(now);
+    let history = g.trace.history(step_now, g.lookback_steps);
+    let forecast = g.forecaster.build(g.trace.steps_per_day()).forecast(&history, horizon);
+    let j = shift::best_start_step(&forecast, horizon - 1, run_steps.max(1));
+    if j == 0 {
+        return None;
+    }
+    Some(((step_now + 1 + j as i64) as f64 * step).min(bound).max(now))
+}
+
+/// Cheapest estimated per-prompt occupancy across devices.
+fn min_cost_e2e(p: &Prompt, cluster: &Cluster, db: &BenchmarkDb, batch_size: usize) -> f64 {
+    (0..cluster.devices.len())
+        .map(|d| db.cost(&cluster.devices[d], p, batch_size).e2e_s)
+        .fold(f64::MAX, f64::min)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+    use crate::coordinator::batcher::form_batches;
+    use crate::workload::{trace, Corpus, SloClass};
+
+    fn setup(n: usize) -> (Cluster, Vec<Prompt>, BenchmarkDb) {
+        let mut cfg = ExperimentConfig::default();
+        cfg.workload.prompts = n;
+        let cluster = Cluster::from_config(&cfg.cluster);
+        let mut corpus = Corpus::generate(&cfg.workload);
+        trace::assign_arrivals(&mut corpus.prompts, cfg.workload.arrival, cfg.workload.seed);
+        let db = BenchmarkDb::build(&cluster, &[1, 4, 8], 3, 69.0, 1);
+        (cluster, corpus.prompts, db)
+    }
+
+    fn diurnal_grid() -> GridShiftConfig {
+        GridShiftConfig::from_model(
+            &CarbonModel::diurnal(69.0, 0.3),
+            ForecastKind::Harmonic,
+            900.0,
+        )
+        .expect("diurnal model is time-varying")
+    }
+
+    #[test]
+    fn unknown_strategy_is_rejected() {
+        let (cluster, _, _) = setup(1);
+        assert!(PlacementPolicy::spatial("nope", &cluster).is_err());
+        assert!(PlacementPolicy::spatial("latency-aware", &cluster).is_ok());
+    }
+
+    #[test]
+    fn default_plan_matches_prerefactor_pipeline() {
+        let (cluster, prompts, db) = setup(60);
+        for name in ["latency-aware", "carbon-aware", "round-robin", "all-on-ada-2000"] {
+            let policy = PlacementPolicy::spatial(name, &cluster).unwrap();
+            let plan = policy.plan_corpus(&prompts, &cluster, &db, 4, Grouping::Fifo);
+            let ctx = RouteContext { cluster: &cluster, db: &db, batch_size: 4 };
+            let direct = policy.strategy().assign(&prompts, &ctx);
+            assert_eq!(plan.assignment, direct, "{name}: routing changed");
+            let direct_batches = form_batches(&prompts, &direct, 4, &cluster, Grouping::Fifo);
+            assert_eq!(plan.batches, direct_batches, "{name}: batch plan changed");
+            assert_eq!(plan.deferred, 0);
+            for (r, p) in plan.release_s.iter().zip(&prompts) {
+                assert_eq!(*r, p.arrival_s);
+            }
+        }
+    }
+
+    #[test]
+    fn plan_release_noop_cases() {
+        let (cluster, mut prompts, db) = setup(4);
+        let policy =
+            PlacementPolicy::new("carbon-aware", &cluster, Some(diurnal_grid())).unwrap();
+        // interactive prompts are never shifted
+        assert_eq!(
+            policy.plan_release(&prompts[0], &cluster, &db, 4, 0.0, prompts[0].arrival_s),
+            prompts[0].arrival_s
+        );
+        // a deadline tighter than the safety margin leaves no slack
+        prompts[1].slo = SloClass::Deferrable { deadline_s: 60.0 };
+        assert_eq!(
+            policy.plan_release(&prompts[1], &cluster, &db, 4, 0.0, prompts[1].arrival_s),
+            prompts[1].arrival_s
+        );
+        // constant grid: waiting predicts no benefit
+        let flat = PlacementPolicy::new(
+            "carbon-aware",
+            &cluster,
+            Some(GridShiftConfig::new(GridTrace::constant(69.0), ForecastKind::Persistence)),
+        )
+        .unwrap();
+        prompts[2].slo = SloClass::Deferrable { deadline_s: 8.0 * 3600.0 };
+        assert_eq!(
+            flat.plan_release(&prompts[2], &cluster, &db, 4, 0.0, prompts[2].arrival_s),
+            prompts[2].arrival_s
+        );
+    }
+
+    #[test]
+    fn plan_release_shifts_evening_arrivals_toward_cleaner_hours() {
+        let (cluster, mut prompts, db) = setup(4);
+        let policy =
+            PlacementPolicy::new("carbon-aware", &cluster, Some(diurnal_grid())).unwrap();
+        let arrival = 18.0 * 3600.0; // evening ramp
+        prompts[0].arrival_s = arrival;
+        prompts[0].slo = SloClass::Deferrable { deadline_s: 12.0 * 3600.0 };
+        let r = policy.plan_release(&prompts[0], &cluster, &db, 4, 0.0, arrival);
+        assert!(r > arrival, "release {r} not shifted");
+        // never past the deadline slack
+        assert!(r <= arrival + 12.0 * 3600.0);
+        // the model is cleaner at the release than at arrival
+        let m = CarbonModel::diurnal(69.0, 0.3);
+        assert!(m.intensity_at(r) < m.intensity_at(arrival));
+    }
+
+    #[test]
+    fn batch_hold_respects_gates() {
+        let (cluster, mut prompts, db) = setup(8);
+        for p in &mut prompts {
+            p.arrival_s = 18.0 * 3600.0;
+            p.slo = SloClass::Deferrable { deadline_s: 12.0 * 3600.0 };
+        }
+        let grid = diurnal_grid().with_sizing(true);
+        let policy = PlacementPolicy::new("carbon-aware", &cluster, Some(grid)).unwrap();
+        let now = 18.0 * 3600.0;
+
+        // a partial all-deferrable batch in the evening ramp holds
+        let hold = policy.plan_batch_hold(&cluster, &db, &prompts, &[0, 1], 0, 4, now);
+        let until = hold.expect("partial deferrable batch should hold");
+        assert!(until > now);
+        assert!(until <= now + 12.0 * 3600.0);
+
+        // sizing disabled -> no hold
+        let off = PlacementPolicy::new("carbon-aware", &cluster, Some(diurnal_grid())).unwrap();
+        assert!(off.plan_batch_hold(&cluster, &db, &prompts, &[0, 1], 0, 4, now).is_none());
+
+        // a full batch launches
+        let policy2 = PlacementPolicy::new(
+            "carbon-aware",
+            &cluster,
+            Some(diurnal_grid().with_sizing(true)),
+        )
+        .unwrap();
+        assert!(policy2
+            .plan_batch_hold(&cluster, &db, &prompts, &[0, 1, 2, 3], 0, 4, now)
+            .is_none());
+
+        // an interactive member forces an immediate launch
+        let mut mixed = prompts.clone();
+        mixed[1].slo = SloClass::Interactive;
+        assert!(policy2.plan_batch_hold(&cluster, &db, &mixed, &[0, 1], 0, 4, now).is_none());
+
+        // the safety bound is priced on the device that will run the
+        // batch: a slower device leaves less slack, so its hold can
+        // never end later than the faster device's
+        let h_jetson = policy2.plan_batch_hold(&cluster, &db, &prompts, &[0, 1], 0, 4, now);
+        let h_ada = policy2.plan_batch_hold(&cluster, &db, &prompts, &[0, 1], 1, 4, now);
+        if let (Some(hj), Some(ha)) = (h_jetson, h_ada) {
+            assert!(hj <= ha + 1e-9, "slower device held longer: {hj} vs {ha}");
+        }
+    }
+
+    #[test]
+    fn corpus_plan_sizing_holds_the_partial_tail_batch() {
+        // 5 all-deferrable prompts at batch 4 on one device: the tail
+        // batch of 1 is the only partial one — sizing shifts it into a
+        // cleaner window without touching the full leading batch
+        let (cluster, mut prompts, db) = setup(5);
+        for p in &mut prompts {
+            p.arrival_s = 18.0 * 3600.0;
+            p.slo = SloClass::Deferrable { deadline_s: 12.0 * 3600.0 };
+        }
+        let base = PlacementPolicy::new(
+            "all-on-jetson-orin-nx",
+            &cluster,
+            Some(diurnal_grid().with_defer(false)),
+        )
+        .unwrap();
+        let sized = PlacementPolicy::new(
+            "all-on-jetson-orin-nx",
+            &cluster,
+            Some(diurnal_grid().with_defer(false).with_sizing(true)),
+        )
+        .unwrap();
+        let a = base.plan_corpus(&prompts, &cluster, &db, 4, Grouping::Fifo);
+        let b = sized.plan_corpus(&prompts, &cluster, &db, 4, Grouping::Fifo);
+        assert_eq!(a.batches, b.batches, "sizing must not reshape batches");
+        assert_eq!(a.deferred, 0);
+        let tail = b.batches.last().unwrap();
+        assert_eq!(tail.members.len(), 1, "expected a partial tail batch");
+        for &i in &tail.members {
+            assert!(b.release_s[i] > a.release_s[i], "tail batch not held");
+            assert!(b.release_s[i] <= prompts[i].arrival_s + 12.0 * 3600.0);
+        }
+        for &i in &b.batches[0].members {
+            assert_eq!(b.release_s[i], a.release_s[i], "full batch must not move");
+        }
+        assert_eq!(b.deferred, tail.members.len());
+    }
+
+    #[test]
+    fn corpus_plan_defers_on_diurnal_grid() {
+        let (cluster, mut prompts, db) = setup(40);
+        for p in &mut prompts {
+            p.arrival_s = 18.0 * 3600.0;
+        }
+        trace::assign_slos(&mut prompts, 0.5, 12.0 * 3600.0, 7);
+        let policy =
+            PlacementPolicy::new("carbon-aware", &cluster, Some(diurnal_grid())).unwrap();
+        let plan = policy.plan_corpus(&prompts, &cluster, &db, 4, Grouping::Fifo);
+        assert!(plan.deferred > 0, "nothing deferred");
+        // releases never precede arrivals, and only deferrables move
+        for (i, p) in prompts.iter().enumerate() {
+            assert!(plan.release_s[i] >= p.arrival_s);
+            if !p.slo.is_deferrable() {
+                assert_eq!(plan.release_s[i], p.arrival_s);
+            }
+        }
+        // every prompt still appears in exactly one batch
+        let mut seen = vec![false; prompts.len()];
+        for b in &plan.batches {
+            for &m in &b.members {
+                assert!(!seen[m]);
+                seen[m] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn deferred_prompts_never_share_a_batch_with_interactive() {
+        let (cluster, mut prompts, db) = setup(40);
+        for p in &mut prompts {
+            p.arrival_s = 18.0 * 3600.0;
+        }
+        trace::assign_slos(&mut prompts, 0.5, 12.0 * 3600.0, 7);
+        let policy =
+            PlacementPolicy::new("carbon-aware", &cluster, Some(diurnal_grid())).unwrap();
+        let plan = policy.plan_corpus(&prompts, &cluster, &db, 4, Grouping::Fifo);
+        assert!(plan.deferred > 0, "scenario must defer something");
+        let step = policy.grid.as_ref().unwrap().trace.step_s;
+        for b in &plan.batches {
+            let shifted: Vec<bool> = b
+                .members
+                .iter()
+                .map(|&i| plan.release_s[i] > prompts[i].arrival_s + 1e-9)
+                .collect();
+            // a batch is entirely run-at-arrival or entirely shifted:
+            // an interactive prompt can never wait on a clean window
+            assert!(
+                shifted.iter().all(|&s| s) || shifted.iter().all(|&s| !s),
+                "mixed batch {:?}",
+                b.members
+            );
+            // a shifted batch shares one release window, so no member
+            // waits more than a trace step past its own plan
+            if shifted[0] {
+                let lo = b.members.iter().map(|&i| plan.release_s[i]).fold(f64::MAX, f64::min);
+                let hi = b.members.iter().map(|&i| plan.release_s[i]).fold(0.0f64, f64::max);
+                assert!(hi - lo <= step + 1e-9, "window spread {} > step", hi - lo);
+            }
+        }
+    }
+
+    #[test]
+    fn from_model_rejects_constant() {
+        assert!(GridShiftConfig::from_model(
+            &CarbonModel::constant(69.0),
+            ForecastKind::Harmonic,
+            900.0
+        )
+        .is_none());
+        assert!(GridShiftConfig::from_model(
+            &CarbonModel::diurnal(69.0, 0.3),
+            ForecastKind::Harmonic,
+            900.0
+        )
+        .is_some());
+    }
+}

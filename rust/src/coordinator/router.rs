@@ -31,6 +31,7 @@ use crate::workload::Prompt;
 use anyhow::{anyhow, bail, Result};
 
 use super::estimator::{BenchmarkDb, CostEstimate};
+use super::policy::GridShiftConfig;
 
 /// Routing context handed to strategies.
 pub struct RouteContext<'a> {
@@ -40,10 +41,33 @@ pub struct RouteContext<'a> {
     pub batch_size: usize,
 }
 
+/// Live cluster view for on-arrival routing (the DES and wallclock
+/// planes): per-device backlog, current time, and the optional grid
+/// context for forecast-priced placement.
+pub struct OnlineView<'a> {
+    /// Estimated backlog seconds per device.
+    pub backlog_s: &'a [f64],
+    /// Current time (virtual DES time, or scaled wallclock), seconds.
+    pub now: f64,
+    /// Grid context, when the plane plans against a forecast.
+    pub grid: Option<&'a GridShiftConfig>,
+}
+
 /// A routing strategy: returns one device index per prompt.
 pub trait Strategy: Send + Sync {
     fn name(&self) -> String;
     fn assign(&self, prompts: &[Prompt], ctx: &RouteContext) -> Vec<usize>;
+
+    /// On-arrival routing of a single prompt with live backlog — the
+    /// online form every serving plane consults through
+    /// [`super::policy::PlacementPolicy::route_arrival`]. The default
+    /// applies the batch semantics to a one-prompt corpus, which is
+    /// exact for per-prompt strategies; load- and forecast-aware
+    /// strategies override it.
+    fn route_one(&self, p: &Prompt, ctx: &RouteContext, view: &OnlineView) -> usize {
+        let _ = view;
+        self.assign(std::slice::from_ref(p), ctx)[0]
+    }
 }
 
 /// Baseline: everything on one device.
@@ -119,6 +143,14 @@ impl Strategy for LatencyAware {
         }
         out
     }
+    /// Online form: earliest projected finish = live backlog + this
+    /// prompt's estimated cost (the paper's greedy heuristic applied
+    /// on arrival).
+    fn route_one(&self, p: &Prompt, ctx: &RouteContext, view: &OnlineView) -> usize {
+        argmin(ctx.cluster.devices.len(), |d| {
+            view.backlog_s[d] + ctx.db.cost(&ctx.cluster.devices[d], p, ctx.batch_size).e2e_s
+        })
+    }
 }
 
 /// Extension: load-oblivious round-robin control.
@@ -131,6 +163,10 @@ impl Strategy for RoundRobin {
     fn assign(&self, prompts: &[Prompt], ctx: &RouteContext) -> Vec<usize> {
         let n = ctx.cluster.devices.len();
         (0..prompts.len()).map(|i| i % n).collect()
+    }
+    /// Online form: rotate on the prompt id (stable across planes).
+    fn route_one(&self, p: &Prompt, ctx: &RouteContext, _view: &OnlineView) -> usize {
+        (p.id as usize) % ctx.cluster.devices.len()
     }
 }
 
@@ -211,6 +247,17 @@ impl Strategy for CarbonCap {
         }
         assign
     }
+
+    /// Online form: the budget is a *corpus-level* allowance with no
+    /// meaningful per-arrival split (granting every arrival the full
+    /// budget would overrun the cap by up to N×), so the online planes
+    /// spend nothing and place carbon-minimally — the cap is honoured
+    /// by construction.
+    fn route_one(&self, p: &Prompt, ctx: &RouteContext, _view: &OnlineView) -> usize {
+        argmin(ctx.cluster.devices.len(), |d| {
+            ctx.db.cost(&ctx.cluster.devices[d], p, ctx.batch_size).carbon_kg
+        })
+    }
 }
 
 /// Extension (grid subsystem): forecast-priced spatio-temporal routing.
@@ -283,6 +330,46 @@ impl Strategy for ForecastCarbonAware {
             out[idx] = d;
         }
         out
+    }
+
+    /// Online form: one forecast per routing decision — fit on the grid
+    /// trace's history up to now, then price each device at its
+    /// projected mid-execution step (`now + backlog + e2e/2`). An
+    /// execution landing inside the current step uses the observed
+    /// current sample. Without a grid context this degenerates to
+    /// arrival-time carbon pricing.
+    fn route_one(&self, p: &Prompt, ctx: &RouteContext, view: &OnlineView) -> usize {
+        let n = ctx.cluster.devices.len();
+        let g = match view.grid {
+            Some(g) => g,
+            None => {
+                return argmin(n, |d| {
+                    ctx.db.cost(&ctx.cluster.devices[d], p, ctx.batch_size).carbon_kg
+                })
+            }
+        };
+        let step_now = g.trace.step_of(view.now);
+        let history = g.trace.history(step_now, g.lookback_steps);
+        let current = history.last().copied().unwrap_or(0.0);
+        let per_dev: Vec<(f64, usize)> = (0..n)
+            .map(|d| {
+                let c = ctx.db.cost(&ctx.cluster.devices[d], p, ctx.batch_size);
+                let exec_t = view.now + view.backlog_s[d] + 0.5 * c.e2e_s;
+                let ahead = (g.trace.step_of(exec_t) - step_now).max(0) as usize;
+                (c.energy_kwh, ahead.min(g.horizon_steps.max(1)))
+            })
+            .collect();
+        let max_ahead = per_dev.iter().map(|&(_, a)| a).max().unwrap_or(0);
+        let forecast = if max_ahead > 0 {
+            g.forecaster.build(g.trace.steps_per_day()).forecast(&history, max_ahead)
+        } else {
+            Vec::new()
+        };
+        argmin(n, |d| {
+            let (energy, ahead) = per_dev[d];
+            let intensity = if ahead == 0 { current } else { forecast[ahead - 1] };
+            energy * intensity
+        })
     }
 }
 
@@ -534,6 +621,78 @@ mod tests {
         let fca = build("forecast-carbon-aware", &cluster).unwrap().assign(&ps, &ctx);
         let ca = CarbonAware.assign(&ps, &ctx);
         assert_eq!(fca, ca);
+    }
+
+    #[test]
+    fn route_one_matches_online_semantics() {
+        let (cluster, db) = setup();
+        let ps = prompts(6, 31);
+        let ctx = RouteContext { cluster: &cluster, db: &db, batch_size: 4 };
+        let idle = vec![0.0; cluster.devices.len()];
+
+        // per-prompt strategies: the online form equals the batch form
+        for name in ["carbon-aware", "all-on-ada-2000", "complexity-aware"] {
+            let s = build(name, &cluster).unwrap();
+            let batch = s.assign(&ps, &ctx);
+            for (i, p) in ps.iter().enumerate() {
+                let view = OnlineView { backlog_s: &idle, now: 0.0, grid: None };
+                assert_eq!(s.route_one(p, &ctx, &view), batch[i], "{name} prompt {i}");
+            }
+        }
+
+        // round-robin rotates on the id, not the (single-element) index
+        let rr = build("round-robin", &cluster).unwrap();
+        let view = OnlineView { backlog_s: &idle, now: 0.0, grid: None };
+        for p in &ps {
+            assert_eq!(rr.route_one(p, &ctx, &view), (p.id as usize) % cluster.devices.len());
+        }
+
+        // latency-aware avoids the backlogged device
+        let la = build("latency-aware", &cluster).unwrap();
+        for target in 0..cluster.devices.len() {
+            let mut backlog = vec![1e6; cluster.devices.len()];
+            backlog[target] = 0.0;
+            let view = OnlineView { backlog_s: &backlog, now: 0.0, grid: None };
+            assert_eq!(la.route_one(&ps[0], &ctx, &view), target);
+        }
+
+        // forecast-carbon-aware without a grid degenerates to carbon
+        let fca = build("forecast-carbon-aware", &cluster).unwrap();
+        let ca = build("carbon-aware", &cluster).unwrap();
+        let view = OnlineView { backlog_s: &idle, now: 0.0, grid: None };
+        for p in &ps {
+            assert_eq!(fca.route_one(p, &ctx, &view), ca.route_one(p, &ctx, &view));
+        }
+
+        // carbon-cap online spends nothing (the budget is corpus-level):
+        // placement is carbon-minimal, so the cap cannot be overrun
+        let cap = build("carbon-cap@1.0", &cluster).unwrap();
+        for p in &ps {
+            assert_eq!(cap.route_one(p, &ctx, &view), ca.route_one(p, &ctx, &view));
+        }
+    }
+
+    #[test]
+    fn route_one_with_grid_is_deterministic_and_in_bounds() {
+        use crate::cluster::CarbonModel;
+        use crate::coordinator::policy::GridShiftConfig;
+        let (cluster, db) = setup();
+        let ps = prompts(10, 37);
+        let ctx = RouteContext { cluster: &cluster, db: &db, batch_size: 4 };
+        let grid = GridShiftConfig::new(
+            CarbonModel::diurnal(69.0, 0.3).to_trace(900.0),
+            ForecastKind::Harmonic,
+        );
+        let fca = build("forecast-carbon-aware", &cluster).unwrap();
+        let backlog = vec![120.0, 30.0];
+        for p in &ps {
+            let view =
+                OnlineView { backlog_s: &backlog, now: 17.0 * 3600.0, grid: Some(&grid) };
+            let a = fca.route_one(p, &ctx, &view);
+            let b = fca.route_one(p, &ctx, &view);
+            assert_eq!(a, b);
+            assert!(a < cluster.devices.len());
+        }
     }
 
     #[test]

@@ -9,9 +9,12 @@
 //!
 //! - [`trace`] — [`GridTrace`]: the ground-truth intensity time series
 //!   (periodic, linearly interpolated), synthetic generators (diurnal
-//!   duck + weekly pattern + seeded AR(1) noise), absorbing the old
-//!   `cluster::CarbonModel` cases as degenerate one-sample / 24-sample
-//!   traces;
+//!   duck + weekly pattern + seeded AR(1) noise), real-world CSV
+//!   ingestion ([`GridTrace::from_csv`] for
+//!   ElectricityMaps/WattTime-style `timestamp,gCO2/kWh` files, wired
+//!   to the `trace_file` key under `[cluster.carbon]`), absorbing the
+//!   old `cluster::CarbonModel` cases as degenerate one-sample /
+//!   24-sample traces;
 //! - [`forecast`] — the [`Forecaster`] trait with persistence, EWMA,
 //!   seasonal-naive and harmonic least-squares baselines, plus
 //!   MAPE/bias scoring against held-out trace tails;
@@ -23,11 +26,15 @@
 //! Prompts carry an SLO class ([`crate::workload::SloClass`]):
 //! `Interactive` prompts route the instant they arrive, exactly as
 //! before; `Deferrable { deadline_s }` prompts may be *held* by the
-//! open-loop coordinator (`coordinator::online`) and released into a
-//! forecast low-carbon window. The planner never schedules a release
-//! later than `arrival + deadline − safety`, where the safety margin is
-//! a multiple of the prompt's estimated service time, so deadline
-//! violations indicate a real bug rather than an unlucky forecast.
+//! shared scheduling core (`coordinator::policy`, consumed by all
+//! three planes — closed-loop, DES and wallclock server) and released
+//! into a forecast low-carbon window. The planner never schedules a
+//! release later than `arrival + deadline − safety`, where the safety
+//! margin is a multiple of the prompt's estimated service time, so
+//! deadline violations indicate a real bug rather than an unlucky
+//! forecast. Carbon-aware batch *sizing* extends the same idea to
+//! partial batches: a free device holding only deferrable work may
+//! wait for a cleaner window, pre-empted by any interactive arrival.
 //!
 //! ## Counterfactual accounting
 //!

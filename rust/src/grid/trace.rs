@@ -13,6 +13,8 @@
 //! noise via [`crate::util::rng::Rng`] so every trace is reproducible
 //! from its seed.
 
+use anyhow::{anyhow, bail, Context, Result};
+
 use crate::util::rng::Rng;
 
 /// Raw duck-curve anchors, hour 0..23: cleanest at midday (solar),
@@ -137,6 +139,120 @@ impl GridTrace {
     pub fn steps_per_day(&self) -> usize {
         ((86_400.0 / self.step_s).round() as usize).max(1)
     }
+
+    /// Load a real-world intensity trace from an
+    /// ElectricityMaps/WattTime-style CSV of `timestamp,gCO2/kWh` rows.
+    ///
+    /// Timestamps may be epoch seconds or ISO-8601
+    /// (`YYYY-MM-DDTHH:MM[:SS]`, trailing zone designator ignored) and
+    /// must be uniformly spaced; intensities must be positive and
+    /// finite. A leading header row and `#` comment lines are skipped.
+    /// The trace is anchored at t = 0 (simulation time is relative);
+    /// the step is inferred from the first two rows.
+    pub fn from_csv(path: &std::path::Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading grid trace {}", path.display()))?;
+        let name = path
+            .file_stem()
+            .and_then(|s| s.to_str())
+            .unwrap_or("csv-trace")
+            .to_string();
+        Self::parse_csv(&name, &text)
+            .map_err(|e| e.context(format!("parsing grid trace {}", path.display())))
+    }
+
+    /// Parse the CSV body of [`GridTrace::from_csv`].
+    pub fn parse_csv(name: &str, text: &str) -> Result<Self> {
+        let mut times: Vec<f64> = Vec::new();
+        let mut samples: Vec<f64> = Vec::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut fields = line.split(',').map(str::trim);
+            let ts_field = fields.next().unwrap_or("");
+            let val_field = fields
+                .next()
+                .ok_or_else(|| anyhow!("line {}: expected 'timestamp,gCO2/kWh'", lineno + 1))?;
+            let Some(ts) = parse_timestamp(ts_field) else {
+                if times.is_empty() && samples.is_empty() && val_field.parse::<f64>().is_err() {
+                    continue; // header row ("timestamp,intensity")
+                }
+                bail!("line {}: unparseable timestamp '{ts_field}'", lineno + 1);
+            };
+            let v: f64 = val_field
+                .parse()
+                .map_err(|_| anyhow!("line {}: unparseable intensity '{val_field}'", lineno + 1))?;
+            if !v.is_finite() || v <= 0.0 {
+                bail!("line {}: intensity must be positive and finite, got {v}", lineno + 1);
+            }
+            times.push(ts);
+            samples.push(v);
+        }
+        if samples.len() < 2 {
+            bail!("need at least two samples to infer the trace step, got {}", samples.len());
+        }
+        let step_s = times[1] - times[0];
+        if !(step_s.is_finite() && step_s > 0.0) {
+            bail!("timestamps must be strictly increasing (step {step_s})");
+        }
+        for (k, w) in times.windows(2).enumerate() {
+            let d = w[1] - w[0];
+            if (d - step_s).abs() > step_s * 1e-6 + 1e-6 {
+                bail!(
+                    "non-uniform step between rows {} and {}: {d} s vs {step_s} s",
+                    k + 1,
+                    k + 2
+                );
+            }
+        }
+        Ok(Self::new(name, step_s, samples))
+    }
+}
+
+/// Parse a CSV timestamp: epoch seconds, or ISO-8601
+/// `YYYY-MM-DDTHH:MM[:SS]` (a space instead of `T` is accepted and any
+/// trailing zone designator is ignored — only differences matter, and
+/// the step-uniformity check rejects mixed offsets).
+fn parse_timestamp(s: &str) -> Option<f64> {
+    if let Ok(x) = s.parse::<f64>() {
+        return x.is_finite().then_some(x);
+    }
+    let b = s.as_bytes();
+    if b.len() < 16 || b[4] != b'-' || b[7] != b'-' || (b[10] != b'T' && b[10] != b' ') || b[13] != b':' {
+        return None;
+    }
+    let year: i64 = s.get(0..4)?.parse().ok()?;
+    let month: i64 = s.get(5..7)?.parse().ok()?;
+    let day: i64 = s.get(8..10)?.parse().ok()?;
+    let hour: i64 = s.get(11..13)?.parse().ok()?;
+    let minute: i64 = s.get(14..16)?.parse().ok()?;
+    let second: i64 = if b.len() >= 19 && b[16] == b':' {
+        s.get(17..19)?.parse().ok()?
+    } else {
+        0
+    };
+    if !(1..=12).contains(&month)
+        || !(1..=31).contains(&day)
+        || !(0..24).contains(&hour)
+        || !(0..60).contains(&minute)
+        || !(0..60).contains(&second)
+    {
+        return None;
+    }
+    Some((days_from_civil(year, month, day) * 86_400 + hour * 3600 + minute * 60 + second) as f64)
+}
+
+/// Days since 1970-01-01 for a proleptic-Gregorian civil date
+/// (Howard Hinnant's `days_from_civil` algorithm).
+fn days_from_civil(y: i64, m: i64, d: i64) -> i64 {
+    let y = if m <= 2 { y - 1 } else { y };
+    let era = if y >= 0 { y } else { y - 399 } / 400;
+    let yoe = y - era * 400;
+    let doy = (153 * (if m > 2 { m - 3 } else { m + 9 }) + 2) / 5 + d - 1;
+    let doe = yoe * 365 + yoe / 4 - yoe / 100 + doy;
+    era * 146_097 + doe - 719_468
 }
 
 /// Parameters for a synthetic grid trace.
@@ -309,5 +425,83 @@ mod tests {
     #[should_panic]
     fn rejects_non_positive_samples() {
         GridTrace::new("bad", 60.0, vec![10.0, 0.0]);
+    }
+
+    #[test]
+    fn csv_epoch_seconds_roundtrip() {
+        let t = GridTrace::parse_csv(
+            "em",
+            "# comment\n0,40.0\n900, 90.0 \n1800,60.0\n",
+        )
+        .unwrap();
+        assert_eq!(t.step_s, 900.0);
+        assert_eq!(t.samples(), &[40.0, 90.0, 60.0]);
+        assert_eq!(t.name, "em");
+    }
+
+    #[test]
+    fn csv_iso_timestamps_with_header() {
+        let doc = "timestamp,gCO2/kWh\n\
+                   2025-06-01T00:00:00Z,120.5\n\
+                   2025-06-01T01:00:00Z,110.0\n\
+                   2025-06-01T02:00:00Z,95.25\n";
+        let t = GridTrace::parse_csv("watttime", doc).unwrap();
+        assert_eq!(t.step_s, 3600.0);
+        assert_eq!(t.len(), 3);
+        assert_eq!(t.samples()[2], 95.25);
+        // space-separated datetime and minute-only precision also parse
+        let t2 = GridTrace::parse_csv(
+            "em2",
+            "2025-06-01 00:00,50\n2025-06-01 00:30,60\n",
+        )
+        .unwrap();
+        assert_eq!(t2.step_s, 1800.0);
+    }
+
+    #[test]
+    fn csv_malformed_inputs_error_loudly() {
+        // too few samples
+        assert!(GridTrace::parse_csv("x", "0,50.0\n").is_err());
+        // missing intensity column
+        assert!(GridTrace::parse_csv("x", "0,50.0\n900\n").is_err());
+        // garbage timestamp mid-file
+        assert!(GridTrace::parse_csv("x", "0,50.0\nlater,60.0\n").is_err());
+        // garbage intensity
+        assert!(GridTrace::parse_csv("x", "0,50.0\n900,dirty\n").is_err());
+        // non-positive intensity
+        assert!(GridTrace::parse_csv("x", "0,50.0\n900,-1.0\n").is_err());
+        // non-uniform step
+        let e = GridTrace::parse_csv("x", "0,50.0\n900,60.0\n2700,70.0\n")
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("non-uniform"), "{e}");
+        // decreasing timestamps
+        assert!(GridTrace::parse_csv("x", "900,50.0\n0,60.0\n").is_err());
+        // empty file
+        assert!(GridTrace::parse_csv("x", "").is_err());
+    }
+
+    #[test]
+    fn from_csv_reads_and_reports_path_errors() {
+        let dir = std::env::temp_dir();
+        let path = dir.join("verdant_test_trace.csv");
+        std::fs::write(&path, "0,42.0\n3600,84.0\n").unwrap();
+        let t = GridTrace::from_csv(&path).unwrap();
+        assert_eq!(t.step_s, 3600.0);
+        assert_eq!(t.name, "verdant_test_trace");
+        std::fs::remove_file(&path).ok();
+        assert!(GridTrace::from_csv(&dir.join("verdant_no_such_file.csv")).is_err());
+    }
+
+    #[test]
+    fn civil_day_arithmetic_matches_known_epochs() {
+        assert_eq!(super::days_from_civil(1970, 1, 1), 0);
+        assert_eq!(super::days_from_civil(1970, 1, 2), 1);
+        assert_eq!(super::days_from_civil(2000, 3, 1), 11017);
+        // 2024 is a leap year: Mar 1 is day 60
+        assert_eq!(
+            super::days_from_civil(2024, 3, 1) - super::days_from_civil(2024, 1, 1),
+            60
+        );
     }
 }

@@ -6,20 +6,44 @@
 //! (Jetson Orin NX 8 GB + NVIDIA Ada 2000 16 GB + a cloud API point),
 //! with dynamic batching (1/4/8) and full energy/carbon telemetry.
 //!
-//! ## Architecture (three layers, Python never on the request path)
+//! ## Architecture: one scheduling core, three execution planes
 //!
-//! - **L3 (this crate)** — the coordinator: router strategies, dynamic
-//!   batcher, per-device schedulers, benchmark-informed cost estimator,
-//!   energy/carbon ledger, device simulator calibrated to the paper's
-//!   Table 2, serving loop, CLI, config system, and the bench harness
-//!   that regenerates every table and figure in the paper. The [`grid`]
-//!   subsystem adds the *temporal* axis on top of the paper's spatial
-//!   routing: grid-intensity traces (synthetic diurnal/weekly/noise
-//!   generators, TOML-configurable), forecasters (persistence, EWMA,
-//!   seasonal-naive, harmonic least-squares, scored by MAPE/bias), and
-//!   temporal shifting — deferrable prompts are held and released into
-//!   forecast low-carbon windows with realized savings audited against
-//!   a run-at-arrival counterfactual (`verdant bench shifting`).
+//! Every way this system can place a prompt goes through the same
+//! plane-agnostic scheduling core, [`coordinator::policy`]. A
+//! `PlacementPolicy` owns the full placement decision — strategy
+//! resolution (via `router::build`, so an unknown strategy fails
+//! loudly everywhere), whole-corpus and on-arrival routing, SLO
+//! classification and deferral release planning against a grid
+//! forecast, SLO-aware admission-controlled batch formation, and
+//! carbon-aware batch sizing (partial all-deferrable batches may wait
+//! for a forecast clean window). Three planes drive it:
+//!
+//! - **closed-loop** ([`coordinator::scheduler`], `verdant run` /
+//!   `bench table3`) — the paper's batch evaluation: whole corpus,
+//!   serial device queues, makespan + carbon totals, now with SLO
+//!   deferral and "saved vs run-at-arrival" reporting;
+//! - **open-loop DES** ([`coordinator::online`], `bench load` /
+//!   `bench shifting`) — virtual-time serving under an arrival stream:
+//!   steady-state latency, deferral queues, batch-sizing holds;
+//! - **wallclock server** ([`server`], `verdant serve`) — real PJRT
+//!   inference behind per-device worker threads, replaying the arrival
+//!   trace in compressed real time with the same routing, deferral and
+//!   counterfactual carbon accounting.
+//!
+//! The [`grid`] subsystem supplies the temporal signal all three plan
+//! against: grid-intensity traces (synthetic diurnal/weekly/noise
+//! generators, real-world ElectricityMaps/WattTime CSV ingestion via
+//! `trace_file`, TOML-configurable), forecasters (persistence, EWMA,
+//! seasonal-naive, harmonic least-squares, scored by MAPE/bias) and
+//! the clean-window planner; the [`telemetry`] ledger audits realized
+//! savings against a run-at-arrival counterfactual in every plane.
+//!
+//! ## Layers below (Python never on the request path)
+//!
+//! - **L3 (this crate)** — everything above, plus the
+//!   benchmark-informed cost estimator, device simulator calibrated to
+//!   the paper's Table 2, config system, CLI, and the bench harness
+//!   that regenerates every table and figure in the paper.
 //! - **L2 (python/compile/model.py)** — a Gemma-style decoder-only
 //!   transformer (RMSNorm, RoPE, GQA, SwiGLU, int8-quantized MLP),
 //!   AOT-lowered once to HLO text.

@@ -2,11 +2,16 @@
 //!
 //! ```text
 //! verdant bench <fig1|fig2|table2|table3|sweep|ablation|load|shifting|all>
-//!         [--prompts N] [--config path] [--save dir] [--extensions]
+//!         [--prompts N] [--config path] [--save dir] [--json dir] [--extensions]
 //! verdant run   [--strategy S] [--batch B] [--prompts N] [--execution M]
 //!         [--seed N] [--config path]      one closed-loop run, full report
 //! verdant serve [--prompts N] [--batch B] [--strategy S] [--timeout-ms T]
 //!         [--max-new N]                   real-time PJRT serving demo
+//!
+//! `run` and `serve` accept the SLO/carbon knobs (--defer-frac,
+//! --deadline-s, --sizing, --no-defer): with a time-varying
+//! [cluster.carbon] model both planes defer marked prompts into
+//! forecast clean windows through the shared scheduling core.
 //! verdant inspect <corpus|cluster|manifest> [--prompts N]
 //! ```
 //!
@@ -21,7 +26,8 @@ use std::time::Duration;
 use verdant::bench::{ablation, fig1, fig2, harness, load, shifting, sweep, table2, table3, Env};
 use verdant::cluster::Cluster;
 use verdant::config::{ExecutionMode, ExperimentConfig};
-use verdant::coordinator::{build_strategy, run as run_sched, Grouping, RunConfig};
+use verdant::coordinator::{run as run_sched, GridShiftConfig, Grouping, PlacementPolicy, RunConfig};
+use verdant::grid::ForecastKind;
 use verdant::report::fmt;
 use verdant::runtime::Engine;
 use verdant::server::{serve, ServeOptions};
@@ -113,8 +119,40 @@ fn load_config(flags: &Flags) -> anyhow::Result<ExperimentConfig> {
     if let Some(e) = flags.get("execution") {
         cfg.serving.execution = ExecutionMode::parse(e)?;
     }
+    if let Some(f) = flags.get("defer-frac") {
+        cfg.serving.deferrable_frac = f.parse()?;
+    }
+    if let Some(d) = flags.get("deadline-s") {
+        cfg.serving.deferrable_deadline_s = d.parse()?;
+    }
+    if flags.has("sizing") {
+        cfg.serving.carbon_sizing = true;
+    }
+    if flags.has("no-defer") {
+        cfg.serving.defer = false;
+    }
     cfg.validate()?;
     Ok(cfg)
+}
+
+/// Mark the configured deferrable fraction on a freshly generated
+/// corpus (shared by `run` and `serve`).
+fn apply_slos(cfg: &ExperimentConfig, prompts: &mut [verdant::workload::Prompt]) {
+    if cfg.serving.deferrable_frac > 0.0 {
+        trace::assign_slos(
+            prompts,
+            cfg.serving.deferrable_frac,
+            cfg.serving.deferrable_deadline_s,
+            cfg.workload.seed ^ 0x51,
+        );
+    }
+}
+
+/// Grid context from the configured carbon model: present whenever the
+/// model is time-varying, honoring the `[serving]` defer/sizing knobs.
+fn grid_from_config(cfg: &ExperimentConfig, cluster: &Cluster) -> Option<GridShiftConfig> {
+    GridShiftConfig::from_model(&cluster.carbon, ForecastKind::Harmonic, 900.0)
+        .map(|g| g.with_defer(cfg.serving.defer).with_sizing(cfg.serving.carbon_sizing))
 }
 
 fn dispatch(args: &[String]) -> anyhow::Result<()> {
@@ -138,12 +176,15 @@ fn dispatch(args: &[String]) -> anyhow::Result<()> {
 fn print_usage() {
     println!(
         "verdant {} — sustainability-aware LLM inference on edge clusters\n\n\
-         USAGE:\n  verdant bench <fig1|fig2|table2|table3|sweep|ablation|load|shifting|all> [--prompts N] [--save dir] [--extensions]\n  \
+         USAGE:\n  verdant bench <fig1|fig2|table2|table3|sweep|ablation|load|shifting|all> [--prompts N] [--save dir] [--json dir] [--extensions]\n  \
          verdant run   [--strategy S] [--batch B] [--prompts N] [--execution real|calibrated|hybrid]\n  \
          verdant serve [--prompts N] [--batch B] [--strategy S] [--timeout-ms T] [--max-new N]\n  \
          verdant inspect <corpus|cluster|manifest>\n  \
          verdant version\n\n\
-         Common flags: --config <toml>, --seed <n>",
+         Common flags: --config <toml>, --seed <n>\n\
+         SLO/carbon flags (run+serve): --defer-frac F, --deadline-s S, --no-defer;\n\
+         --sizing enables carbon-aware batch sizing (run + bench planes; serve defers only).\n\
+         Deferral and sizing need a time-varying [cluster.carbon] model.",
         verdant::VERSION
     );
 }
@@ -159,11 +200,16 @@ fn cmd_bench(which: &str, flags: &Flags) -> anyhow::Result<()> {
     println!("benchmark DB ready in {}\n", harness::human_time(t0.elapsed().as_secs_f64()));
 
     let save_dir = flags.get("save").map(PathBuf::from);
+    let json_dir = flags.get("json").map(PathBuf::from);
     let emit = |table: verdant::report::Table| -> anyhow::Result<()> {
         println!("{}", table.ascii());
         if let Some(dir) = &save_dir {
             table.save(dir)?;
             println!("  saved {}/{}.{{csv,json}}\n", dir.display(), table.name);
+        }
+        if let Some(dir) = &json_dir {
+            table.save_json(dir)?;
+            println!("  wrote {}/{}.json\n", dir.display(), table.name);
         }
         Ok(())
     };
@@ -202,6 +248,7 @@ fn cmd_run(flags: &Flags) -> anyhow::Result<()> {
     let cluster = Cluster::from_config(&cfg.cluster);
     let mut corpus = Corpus::generate(&cfg.workload);
     trace::assign_arrivals(&mut corpus.prompts, cfg.workload.arrival, cfg.workload.seed);
+    apply_slos(&cfg, &mut corpus.prompts);
     let db = verdant::coordinator::BenchmarkDb::build(
         &cluster,
         &[1, 4, 8],
@@ -209,7 +256,8 @@ fn cmd_run(flags: &Flags) -> anyhow::Result<()> {
         cfg.cluster.carbon_intensity_g_per_kwh,
         cfg.workload.seed ^ 0x0FF1_CE,
     );
-    let strategy = build_strategy(&cfg.serving.strategy, &cluster)?;
+    let policy =
+        PlacementPolicy::new(&cfg.serving.strategy, &cluster, grid_from_config(&cfg, &cluster))?;
     let run_cfg = RunConfig {
         batch_size: cfg.serving.batch_size,
         grouping: Grouping::Fifo,
@@ -237,7 +285,7 @@ fn cmd_run(flags: &Flags) -> anyhow::Result<()> {
         }
     };
 
-    let r = run_sched(&cluster, &corpus.prompts, strategy.as_ref(), &db, &run_cfg, engine.as_ref())?;
+    let r = run_sched(&cluster, &corpus.prompts, &policy, &db, &run_cfg, engine.as_ref())?;
 
     println!("\n== run: {} | batch {} | {} prompts | {} ==", r.strategy, r.batch_size,
              corpus.prompts.len(), cfg.serving.execution.name());
@@ -250,6 +298,14 @@ fn cmd_run(flags: &Flags) -> anyhow::Result<()> {
              fmt::secs(r.overall.e2e_hist.p95()));
     println!("  mean TTFT:              {} s", fmt::secs(r.overall.ttft.mean()));
     println!("  error rate:             {}", fmt::pct(r.overall.error_rate()));
+    if r.deferred > 0 {
+        println!("  deferred (SLO shift):   {} prompts", r.deferred);
+        println!(
+            "  saved vs run-at-arrival: {} kgCO2e ({})",
+            fmt::sci(r.ledger.realized_savings_kg()),
+            fmt::signed_pct(r.ledger.savings_frac())
+        );
+    }
     for (dev, agg) in &r.per_device {
         let share = r.share(dev);
         println!(
@@ -281,6 +337,7 @@ fn cmd_serve(flags: &Flags) -> anyhow::Result<()> {
     let cluster = Cluster::from_config(&cfg.cluster);
     let mut corpus = Corpus::generate(&cfg.workload);
     trace::assign_arrivals(&mut corpus.prompts, cfg.workload.arrival, cfg.workload.seed);
+    apply_slos(&cfg, &mut corpus.prompts);
 
     let opts = ServeOptions {
         batch_size: cfg.serving.batch_size,
@@ -289,6 +346,7 @@ fn cmd_serve(flags: &Flags) -> anyhow::Result<()> {
         artifacts_dir: PathBuf::from(&cfg.artifacts_dir),
         time_scale: 50.0,
         strategy: cfg.serving.strategy.clone(),
+        grid: grid_from_config(&cfg, &cluster),
     };
     println!(
         "serving {} prompts through PJRT ({} workers, batch {}, strategy {}) ...",
@@ -304,6 +362,19 @@ fn cmd_serve(flags: &Flags) -> anyhow::Result<()> {
     println!("  latency mean/p50/p95: {} / {} / {} s",
              fmt::secs(report.latency_mean_s), fmt::secs(report.latency_p50_s), fmt::secs(report.latency_p95_s));
     println!("  batches:          {} (mean fill {:.2})", report.batches, report.mean_batch_fill);
+    println!(
+        "  est energy/carbon: {} kWh / {} kgCO2e",
+        fmt::sci(report.est_energy_kwh),
+        fmt::sci(report.est_carbon_kg)
+    );
+    if report.deferred > 0 {
+        println!(
+            "  deferred:         {} prompts, est saved {} kgCO2e vs arrival, {} deadline violations",
+            report.deferred,
+            fmt::sci(report.est_saved_kg),
+            report.deadline_violations
+        );
+    }
     for (dev, count) in &report.per_device {
         println!("  {dev}: {count} requests");
     }

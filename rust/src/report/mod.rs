@@ -131,11 +131,17 @@ impl Table {
     pub fn save(&self, dir: &Path) -> std::io::Result<()> {
         std::fs::create_dir_all(dir)?;
         std::fs::write(dir.join(format!("{}.csv", self.name)), self.csv())?;
+        self.save_json(dir)
+    }
+
+    /// Write only `<dir>/<name>.json` (machine-readable bench output
+    /// for CI archival — `verdant bench ... --json <dir>`).
+    pub fn save_json(&self, dir: &Path) -> std::io::Result<()> {
+        std::fs::create_dir_all(dir)?;
         std::fs::write(
             dir.join(format!("{}.json", self.name)),
             json::to_string_pretty(&self.to_json()),
-        )?;
-        Ok(())
+        )
     }
 }
 

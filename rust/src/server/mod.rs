@@ -3,10 +3,13 @@
 //! PJRT clients are not `Send`, so each worker owns its own engine).
 //!
 //! [`service`] implements the real-time loop used by the examples: an
-//! ingest thread replays the arrival trace on the wallclock, a router
-//! assigns devices on arrival, per-device workers pull batches (size- or
-//! timeout-triggered — the dynamic batcher) and execute them through
-//! their own PJRT engine, and a collector aggregates latency/throughput.
+//! ingest thread replays the arrival trace on the wallclock and places
+//! every prompt through the shared scheduling core
+//! (`coordinator::policy` — routing, SLO deferral, forecast pricing),
+//! per-device workers pull batches (size- or timeout-triggered — the
+//! dynamic batcher) and execute them through their own PJRT engine, and
+//! a collector aggregates latency/throughput plus estimated
+//! energy/carbon with the run-at-arrival counterfactual.
 
 pub mod service;
 

@@ -6,15 +6,27 @@
 //!  ingest thread ──(mpsc)──► per-device queues ──► worker threads
 //!   (replays the arrival                            (own PJRT engine,
 //!    trace on wallclock,                             dynamic batching:
-//!    routes on arrival)                              full batch OR timeout)
+//!    defers + routes via the                         full batch OR timeout)
+//!    shared policy core)
 //!                                         completions ──(mpsc)──► collector
 //! ```
 //!
-//! Routing happens *on arrival* (unlike the closed-loop scheduler, which
-//! sees the whole corpus): the strategy is consulted per prompt with the
-//! same BenchmarkDb. Latency-aware degenerates to
-//! earliest-finish-estimate placement using live queue depths, which is
-//! exactly the paper's greedy heuristic applied online.
+//! Placement is owned by the plane-agnostic policy core
+//! ([`PlacementPolicy`]): the strategy name resolves through
+//! `router::build` (an unknown strategy errors before a single thread
+//! spawns — no silent fallback), routing happens *on arrival* via
+//! [`PlacementPolicy::route_arrival`] with live queue backlog, and with
+//! a grid context the ingest thread holds `Deferrable` prompts for
+//! forecast clean windows via [`PlacementPolicy::plan_release`] —
+//! temporal shifting on the wallclock, at `time_scale` compression.
+//! Every strategy the closed-loop scheduler accepts (including
+//! `forecast-carbon-aware`) is servable here.
+//!
+//! Energy is not measured on the wallclock; the collector instead
+//! posts *calibrated estimates* to an [`EnergyLedger`] at virtual
+//! completion times, with the run-at-arrival counterfactual, so the
+//! serving report carries the same carbon accounting as the other two
+//! planes.
 
 use anyhow::{anyhow, Result};
 use std::collections::VecDeque;
@@ -24,7 +36,9 @@ use std::time::{Duration, Instant};
 
 use crate::cluster::Cluster;
 use crate::coordinator::estimator::BenchmarkDb;
+use crate::coordinator::policy::{GridShiftConfig, PlacementPolicy};
 use crate::runtime::Engine;
+use crate::telemetry::EnergyLedger;
 use crate::util::stats::{Histogram, Summary};
 use crate::workload::Prompt;
 
@@ -39,9 +53,12 @@ pub struct ServeOptions {
     /// Compress the arrival trace by this factor (virtual seconds of
     /// trace per wallclock second); keeps demos fast.
     pub time_scale: f64,
-    /// Strategy name for on-arrival routing ("latency-aware",
-    /// "carbon-aware", "round-robin", "all-on-<dev>").
+    /// Strategy name for on-arrival routing, resolved by
+    /// `router::build` (any strategy `verdant run` accepts).
     pub strategy: String,
+    /// Grid context enabling deferral and forecast-priced routing on
+    /// the wallclock; None restores purely spatial serving.
+    pub grid: Option<GridShiftConfig>,
 }
 
 impl Default for ServeOptions {
@@ -53,6 +70,7 @@ impl Default for ServeOptions {
             artifacts_dir: std::path::PathBuf::from("artifacts"),
             time_scale: 50.0,
             strategy: "latency-aware".into(),
+            grid: None,
         }
     }
 }
@@ -72,18 +90,37 @@ pub struct ServeReport {
     pub mean_batch_fill: f64,
     /// Requests served per device name.
     pub per_device: Vec<(String, usize)>,
+    /// Prompts the ingest thread held for a cleaner window. Note the
+    /// `latency_*` fields measure dispatch→completion wallclock time
+    /// (service latency); the intentional deferral hold is not in them
+    /// — deadline safety is audited in virtual time via
+    /// [`Self::deadline_violations`].
+    pub deferred: usize,
+    /// Deferrable prompts whose virtual completion missed their
+    /// deadline (arrival + deadline, virtual seconds).
+    pub deadline_violations: usize,
+    /// Calibrated-estimate energy of the served corpus, kWh.
+    pub est_energy_kwh: f64,
+    /// Calibrated-estimate carbon at virtual completion times, kgCO2e.
+    pub est_carbon_kg: f64,
+    /// Estimated carbon avoided vs running every prompt at arrival.
+    pub est_saved_kg: f64,
 }
 
 struct QueueItem {
     prompt: Prompt,
     enqueued: Instant,
+    /// The backlog milliseconds this item added on push — subtracted
+    /// when a worker pulls it, so `backlog_ms` tracks *queued* work
+    /// (matching the DES plane's backlog semantics).
+    est_ms: usize,
 }
 
 /// A per-device work queue with condvar signalling.
 struct DeviceQueue {
     items: Mutex<VecDeque<QueueItem>>,
     signal: Condvar,
-    /// Estimated backlog seconds (for online latency-aware placement).
+    /// Estimated backlog milliseconds (for online latency-aware placement).
     backlog_ms: AtomicUsize,
 }
 
@@ -96,10 +133,14 @@ impl DeviceQueue {
         }
     }
 
-    fn push(&self, item: QueueItem, est_ms: usize) {
-        self.backlog_ms.fetch_add(est_ms, Ordering::Relaxed);
+    fn push(&self, item: QueueItem) {
+        self.backlog_ms.fetch_add(item.est_ms, Ordering::Relaxed);
         self.items.lock().unwrap().push_back(item);
         self.signal.notify_one();
+    }
+
+    fn backlog_s(&self) -> f64 {
+        self.backlog_ms.load(Ordering::Relaxed) as f64 / 1000.0
     }
 
     /// Pull up to `max` items: returns once `max` are available OR the
@@ -131,7 +172,13 @@ impl DeviceQueue {
             guard = g;
         }
         let n = guard.len().min(max);
-        guard.drain(..n).collect()
+        let items: Vec<QueueItem> = guard.drain(..n).collect();
+        drop(guard);
+        // pulled work is no longer queued: release its backlog share
+        // (each item is subtracted exactly once, so no underflow)
+        let drained: usize = items.iter().map(|i| i.est_ms).sum();
+        self.backlog_ms.fetch_sub(drained, Ordering::Relaxed);
+        items
     }
 }
 
@@ -140,6 +187,15 @@ struct Completion {
     latency_s: f64,
     output_tokens: usize,
     batch_fill: usize,
+    /// Calibrated per-prompt energy estimate at the executed fill, kWh.
+    est_energy_kwh: f64,
+    /// Member arrival (virtual seconds) for counterfactual pricing.
+    arrival_s: f64,
+    /// Virtual completion time (scaled wallclock), seconds.
+    vfinish_s: f64,
+    /// Completion deadline for deferrable members (virtual seconds
+    /// from arrival), for the violation audit.
+    deadline_s: Option<f64>,
 }
 
 /// Serve a corpus end-to-end and report latency/throughput.
@@ -152,7 +208,10 @@ pub fn serve(cluster: &Cluster, prompts: &[Prompt], opts: &ServeOptions) -> Resu
     if n_dev == 0 || prompts.is_empty() {
         return Err(anyhow!("nothing to serve"));
     }
-    let db = BenchmarkDb::build(cluster, &[1, 4, 8], 2, 69.0, 7);
+    // resolve the strategy BEFORE spawning anything: an unknown name
+    // must fail loudly here, exactly as it does in `run` and `bench`
+    let policy = PlacementPolicy::new(&opts.strategy, cluster, opts.grid.clone())?;
+    let db = Arc::new(BenchmarkDb::build(cluster, &[1, 4, 8], 2, 69.0, 7));
 
     let queues: Arc<Vec<DeviceQueue>> =
         Arc::new((0..n_dev).map(|_| DeviceQueue::new()).collect());
@@ -167,6 +226,7 @@ pub fn serve(cluster: &Cluster, prompts: &[Prompt], opts: &ServeOptions) -> Resu
         let dev = cluster.devices[d].clone();
         let queues = Arc::clone(&queues);
         let done = Arc::clone(&done);
+        let db = Arc::clone(&db);
         let tx = tx.clone();
         let opts = opts.clone();
         workers.push(std::thread::spawn(move || -> Result<()> {
@@ -193,12 +253,19 @@ pub fn serve(cluster: &Cluster, prompts: &[Prompt], opts: &ServeOptions) -> Resu
                     .ok_or_else(|| anyhow!("no compiled batch"))?;
                 let out =
                     crate::runtime::generate(&engine, &dev.model, exec_batch, &texts, opts.max_new_tokens)?;
+                let vfinish_s = started.elapsed().as_secs_f64() * opts.time_scale;
                 for (i, item) in items.iter().enumerate() {
                     let _ = tx.send(Completion {
                         device: d,
                         latency_s: item.enqueued.elapsed().as_secs_f64(),
                         output_tokens: out.tokens[i].len(),
                         batch_fill: items.len(),
+                        est_energy_kwh: db
+                            .cost(&dev, &item.prompt, items.len().max(1))
+                            .energy_kwh,
+                        arrival_s: item.prompt.arrival_s,
+                        vfinish_s,
+                        deadline_s: item.prompt.slo.deadline_s(),
                     });
                 }
             }
@@ -206,17 +273,25 @@ pub fn serve(cluster: &Cluster, prompts: &[Prompt], opts: &ServeOptions) -> Resu
     }
     drop(tx);
 
-    // --- ingest (this thread) -----------------------------------------
+    // --- ingest (this thread): replay, defer, route -------------------
+    let mut held: Vec<(f64, Prompt)> = Vec::new();
+    let mut deferred = 0usize;
     for p in prompts {
-        let due = p.arrival_s / opts.time_scale;
-        let elapsed = started.elapsed().as_secs_f64();
-        if due > elapsed {
-            std::thread::sleep(Duration::from_secs_f64(due - elapsed));
+        // dispatch any held prompts whose window opens before this arrival
+        flush_held(&mut held, p.arrival_s, cluster, &db, &policy, &queues, opts, started);
+        sleep_until_virtual(p.arrival_s, opts.time_scale, started);
+        let now_v = started.elapsed().as_secs_f64() * opts.time_scale;
+        let backlog_total: f64 = queues.iter().map(|q| q.backlog_s()).sum();
+        let release = policy.plan_release(p, cluster, &db, opts.batch_size, backlog_total, now_v);
+        if release > now_v + 1e-6 {
+            deferred += 1;
+            held.push((release, p.clone()));
+        } else {
+            dispatch(p, cluster, &db, &policy, &queues, opts, started);
         }
-        let d = route_online(&cluster, &db, &queues, p, opts);
-        let est = db.cost(&cluster.devices[d], p, opts.batch_size).e2e_s;
-        queues[d].push(QueueItem { prompt: p.clone(), enqueued: Instant::now() }, (est * 1000.0) as usize);
     }
+    // drain the deferral queue in release order
+    flush_held(&mut held, f64::INFINITY, cluster, &db, &policy, &queues, opts, started);
     done.store(true, Ordering::Release);
 
     // --- collect --------------------------------------------------------
@@ -226,6 +301,8 @@ pub fn serve(cluster: &Cluster, prompts: &[Prompt], opts: &ServeOptions) -> Resu
     let mut per_device = vec![0usize; n_dev];
     let mut fills = Summary::new();
     let mut completed = 0usize;
+    let mut deadline_violations = 0usize;
+    let mut ledger = EnergyLedger::new(cluster.carbon.clone());
     for c in rx {
         completed += 1;
         latency.add(c.latency_s);
@@ -233,12 +310,25 @@ pub fn serve(cluster: &Cluster, prompts: &[Prompt], opts: &ServeOptions) -> Resu
         tokens += c.output_tokens;
         per_device[c.device] += 1;
         fills.add(c.batch_fill as f64);
+        if let Some(dl) = c.deadline_s {
+            if c.vfinish_s - c.arrival_s > dl + 1e-6 {
+                deadline_violations += 1;
+            }
+        }
+        ledger.post_batch_shifted(
+            &cluster.devices[c.device].name,
+            c.est_energy_kwh,
+            0.0,
+            c.vfinish_s,
+            &[c.arrival_s],
+        );
     }
     for w in workers {
         w.join().map_err(|_| anyhow!("worker panicked"))??;
     }
     let wallclock = started.elapsed().as_secs_f64();
     let batches = (completed as f64 / fills.mean().max(1.0)).round() as usize;
+    let (est_active_kwh, _, est_carbon_kg) = ledger.totals();
 
     Ok(ServeReport {
         completed,
@@ -257,48 +347,79 @@ pub fn serve(cluster: &Cluster, prompts: &[Prompt], opts: &ServeOptions) -> Resu
             .zip(&per_device)
             .map(|(d, &c)| (d.name.clone(), c))
             .collect(),
+        deferred,
+        deadline_violations,
+        est_energy_kwh: est_active_kwh,
+        est_carbon_kg,
+        est_saved_kg: ledger.realized_savings_kg(),
     })
 }
 
-/// On-arrival routing: strategy semantics applied to a single prompt
-/// with live queue backlog.
-fn route_online(
+/// Sleep the ingest thread until virtual time `due` (scaled wallclock).
+fn sleep_until_virtual(due_virtual_s: f64, time_scale: f64, started: Instant) {
+    let due = due_virtual_s / time_scale;
+    let elapsed = started.elapsed().as_secs_f64();
+    if due > elapsed {
+        std::thread::sleep(Duration::from_secs_f64(due - elapsed));
+    }
+}
+
+/// Route one prompt through the shared policy core and enqueue it.
+#[allow(clippy::too_many_arguments)]
+fn dispatch(
+    p: &Prompt,
     cluster: &Cluster,
     db: &BenchmarkDb,
+    policy: &PlacementPolicy,
     queues: &[DeviceQueue],
-    p: &Prompt,
     opts: &ServeOptions,
-) -> usize {
-    let n = cluster.devices.len();
-    if let Some(dev) = opts.strategy.strip_prefix("all-on-") {
-        return cluster.device_index(dev).unwrap_or(0);
-    }
-    match opts.strategy.as_str() {
-        "carbon-aware" => (0..n)
-            .min_by(|&a, &b| {
-                let ca = db.cost(&cluster.devices[a], p, opts.batch_size).carbon_kg;
-                let cb = db.cost(&cluster.devices[b], p, opts.batch_size).carbon_kg;
-                ca.partial_cmp(&cb).unwrap()
-            })
-            .unwrap_or(0),
-        "round-robin" => (p.id as usize) % n,
-        // latency-aware (default): earliest projected finish = backlog +
-        // this prompt's estimated cost
-        _ => (0..n)
-            .min_by(|&a, &b| {
-                let fa = queues[a].backlog_ms.load(Ordering::Relaxed) as f64 / 1000.0
-                    + db.cost(&cluster.devices[a], p, opts.batch_size).e2e_s;
-                let fb = queues[b].backlog_ms.load(Ordering::Relaxed) as f64 / 1000.0
-                    + db.cost(&cluster.devices[b], p, opts.batch_size).e2e_s;
-                fa.partial_cmp(&fb).unwrap()
-            })
-            .unwrap_or(0),
+    started: Instant,
+) {
+    let now_v = started.elapsed().as_secs_f64() * opts.time_scale;
+    let backlog: Vec<f64> = queues.iter().map(|q| q.backlog_s()).collect();
+    let d = policy.route_arrival(p, cluster, db, opts.batch_size, &backlog, now_v);
+    let est = db.cost(&cluster.devices[d], p, opts.batch_size).e2e_s;
+    queues[d].push(QueueItem {
+        prompt: p.clone(),
+        enqueued: Instant::now(),
+        est_ms: (est * 1000.0) as usize,
+    });
+}
+
+/// Dispatch every held prompt whose release falls before `before`
+/// (virtual seconds), earliest first, sleeping up to each window.
+#[allow(clippy::too_many_arguments)]
+fn flush_held(
+    held: &mut Vec<(f64, Prompt)>,
+    before: f64,
+    cluster: &Cluster,
+    db: &BenchmarkDb,
+    policy: &PlacementPolicy,
+    queues: &[DeviceQueue],
+    opts: &ServeOptions,
+    started: Instant,
+) {
+    loop {
+        let mut due: Option<(usize, f64)> = None;
+        for (k, (r, _)) in held.iter().enumerate() {
+            if *r <= before {
+                match due {
+                    Some((_, best)) if best <= *r => {}
+                    _ => due = Some((k, *r)),
+                }
+            }
+        }
+        let Some((k, _)) = due else { return };
+        let (release, p) = held.swap_remove(k);
+        sleep_until_virtual(release, opts.time_scale, started);
+        dispatch(&p, cluster, db, policy, queues, opts, started);
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::ExperimentConfig;
     use std::sync::atomic::AtomicBool;
 
     #[test]
@@ -306,13 +427,11 @@ mod tests {
         let q = DeviceQueue::new();
         let done = AtomicBool::new(false);
         for i in 0..4 {
-            q.push(
-                QueueItem {
-                    prompt: crate::workload::canonical::P4.to_prompt(i),
-                    enqueued: Instant::now(),
-                },
-                1,
-            );
+            q.push(QueueItem {
+                prompt: crate::workload::canonical::P4.to_prompt(i),
+                enqueued: Instant::now(),
+                est_ms: 1,
+            });
         }
         let batch = q.pull_batch(4, Duration::from_secs(5), &done);
         assert_eq!(batch.len(), 4);
@@ -322,13 +441,11 @@ mod tests {
     fn queue_fires_partial_batch_on_timeout() {
         let q = DeviceQueue::new();
         let done = AtomicBool::new(false);
-        q.push(
-            QueueItem {
-                prompt: crate::workload::canonical::P3.to_prompt(0),
-                enqueued: Instant::now(),
-            },
-            1,
-        );
+        q.push(QueueItem {
+            prompt: crate::workload::canonical::P3.to_prompt(0),
+            enqueued: Instant::now(),
+            est_ms: 1,
+        });
         let t0 = Instant::now();
         let batch = q.pull_batch(8, Duration::from_millis(60), &done);
         assert_eq!(batch.len(), 1);
@@ -340,13 +457,21 @@ mod tests {
         let q = DeviceQueue::new();
         let done = AtomicBool::new(true);
         assert!(q.pull_batch(4, Duration::from_millis(50), &done).is_empty());
-        q.push(
-            QueueItem {
-                prompt: crate::workload::canonical::P3.to_prompt(0),
-                enqueued: Instant::now(),
-            },
-            1,
-        );
+        q.push(QueueItem {
+            prompt: crate::workload::canonical::P3.to_prompt(0),
+            enqueued: Instant::now(),
+            est_ms: 1,
+        });
         assert_eq!(q.pull_batch(4, Duration::from_millis(50), &done).len(), 1);
+    }
+
+    #[test]
+    fn serve_rejects_unknown_strategy_before_spawning() {
+        let cfg = ExperimentConfig::default();
+        let cluster = Cluster::from_config(&cfg.cluster);
+        let prompts = vec![crate::workload::canonical::P3.to_prompt(0)];
+        let opts = ServeOptions { strategy: "warp-speed".into(), ..ServeOptions::default() };
+        let err = serve(&cluster, &prompts, &opts).unwrap_err().to_string();
+        assert!(err.contains("unknown strategy"), "{err}");
     }
 }

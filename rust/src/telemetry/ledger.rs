@@ -109,6 +109,17 @@ impl EnergyLedger {
         self.counterfactual_kg - self.shifted_kg
     }
 
+    /// Fractional realized savings vs the run-at-arrival counterfactual
+    /// (0 when no counterfactual was posted). The number every plane's
+    /// report quotes as "saved vs arrival".
+    pub fn savings_frac(&self) -> f64 {
+        if self.counterfactual_kg > 0.0 {
+            self.realized_savings_kg() / self.counterfactual_kg
+        } else {
+            0.0
+        }
+    }
+
     /// Post idle energy for a device (integration done by the caller,
     /// who knows the idle windows and the device's idle draw).
     pub fn post_idle(&mut self, device: &str, kwh: f64, t: f64) {
@@ -298,6 +309,24 @@ mod tests {
         let mut l = EnergyLedger::new(model);
         l.post_batch_shifted("d", 1e-3, 5.0, dirty, &[clean]);
         assert!(l.realized_savings_kg() < 0.0);
+        assert!(l.savings_frac() < 0.0);
+    }
+
+    #[test]
+    fn savings_frac_normalizes_against_counterfactual() {
+        // nothing posted with a counterfactual -> 0, not NaN
+        let mut l = EnergyLedger::new(CarbonModel::constant(69.0));
+        l.post_batch("d", 1e-3, 1.0, 0.0);
+        assert_eq!(l.savings_frac(), 0.0);
+
+        let model = CarbonModel::diurnal(69.0, 0.3);
+        let dirty = 19.0 * 3600.0;
+        let clean = 13.0 * 3600.0;
+        let mut l = EnergyLedger::new(model.clone());
+        l.post_batch_shifted("d", 1e-3, 5.0, clean, &[dirty]);
+        let expect = (model.intensity_at(dirty) - model.intensity_at(clean))
+            / model.intensity_at(dirty);
+        assert!((l.savings_frac() - expect).abs() < 1e-9);
     }
 
     #[test]

@@ -4,7 +4,7 @@
 use verdant::bench::Env;
 use verdant::cluster::Cluster;
 use verdant::config::{Arrival, ExecutionMode, ExperimentConfig};
-use verdant::coordinator::{build_strategy, run, BenchmarkDb, Grouping, RunConfig};
+use verdant::coordinator::{run, BenchmarkDb, Grouping, PlacementPolicy, RunConfig};
 use verdant::workload::{trace, Corpus};
 
 fn small_env(n: usize) -> Env {
@@ -40,8 +40,8 @@ strategy = "latency-aware"
     let mut corpus = Corpus::generate(&cfg.workload);
     trace::assign_arrivals(&mut corpus.prompts, cfg.workload.arrival, cfg.workload.seed);
     let db = BenchmarkDb::build(&cluster, &[4], 2, 100.0, 1);
-    let s = build_strategy(&cfg.serving.strategy, &cluster).unwrap();
-    let r = run(&cluster, &corpus.prompts, s.as_ref(), &db, &RunConfig::default(), None).unwrap();
+    let s = PlacementPolicy::spatial(&cfg.serving.strategy, &cluster).unwrap();
+    let r = run(&cluster, &corpus.prompts, &s, &db, &RunConfig::default(), None).unwrap();
     assert_eq!(r.metrics.len(), 30);
     // carbon at 100 g/kWh: ratio energy->carbon must be 0.1
     let m = &r.metrics[0];
@@ -51,8 +51,8 @@ strategy = "latency-aware"
 #[test]
 fn ledger_consistent_with_metrics() {
     let env = small_env(60);
-    let s = build_strategy("latency-aware", &env.cluster).unwrap();
-    let r = run(&env.cluster, &env.prompts, s.as_ref(), &env.db, &RunConfig::default(), None)
+    let s = PlacementPolicy::spatial("latency-aware", &env.cluster).unwrap();
+    let r = run(&env.cluster, &env.prompts, &s, &env.db, &RunConfig::default(), None)
         .unwrap();
     // ledger active energy == sum of per-request attributions
     let (active, _idle, _carbon) = r.ledger.totals();
@@ -72,17 +72,17 @@ fn open_loop_arrivals_reduce_queueing() {
     cfg.workload.prompts = 60;
     let cluster = Cluster::from_config(&cfg.cluster);
     let db = BenchmarkDb::build(&cluster, &[1, 4, 8], 3, 69.0, 2);
-    let s = build_strategy("latency-aware", &cluster).unwrap();
+    let s = PlacementPolicy::spatial("latency-aware", &cluster).unwrap();
 
     let mut closed = Corpus::generate(&cfg.workload);
     trace::assign_arrivals(&mut closed.prompts, Arrival::Closed, 1);
     let r_closed =
-        run(&cluster, &closed.prompts, s.as_ref(), &db, &RunConfig::default(), None).unwrap();
+        run(&cluster, &closed.prompts, &s, &db, &RunConfig::default(), None).unwrap();
 
     let mut open = Corpus::generate(&cfg.workload);
     trace::assign_arrivals(&mut open.prompts, Arrival::Open { rate: 0.2 }, 1);
     let r_open =
-        run(&cluster, &open.prompts, s.as_ref(), &db, &RunConfig::default(), None).unwrap();
+        run(&cluster, &open.prompts, &s, &db, &RunConfig::default(), None).unwrap();
 
     // with slow arrivals the queue wait collapses vs the closed stampede
     assert!(r_open.overall.queue.mean() < r_closed.overall.queue.mean());
@@ -92,17 +92,17 @@ fn open_loop_arrivals_reduce_queueing() {
 fn stochastic_failure_injection_converges_to_expected() {
     // mean over many seeds ~= deterministic expected-value run
     let env = small_env(50);
-    let s = build_strategy("all-on-jetson-orin-nx", &env.cluster).unwrap();
+    let s = PlacementPolicy::spatial("all-on-jetson-orin-nx", &env.cluster).unwrap();
     let mut cfg = RunConfig::default();
     cfg.batch_size = 8;
-    let det = run(&env.cluster, &env.prompts, s.as_ref(), &env.db, &cfg, None).unwrap();
+    let det = run(&env.cluster, &env.prompts, &s, &env.db, &cfg, None).unwrap();
 
     let mut sum_err = 0.0;
     let runs = 40;
     for seed in 0..runs {
         let mut c = cfg.clone();
         c.stochastic_seed = Some(seed);
-        let r = run(&env.cluster, &env.prompts, s.as_ref(), &env.db, &c, None).unwrap();
+        let r = run(&env.cluster, &env.prompts, &s, &env.db, &c, None).unwrap();
         sum_err += r.overall.error_rate();
     }
     let mean_err = sum_err / runs as f64;
@@ -118,30 +118,30 @@ fn extreme_configs_do_not_break() {
     // batch 1 with one prompt
     let env = small_env(1);
     for name in ["carbon-aware", "latency-aware", "round-robin"] {
-        let s = build_strategy(name, &env.cluster).unwrap();
+        let s = PlacementPolicy::spatial(name, &env.cluster).unwrap();
         let mut cfg = RunConfig::default();
         cfg.batch_size = 1;
-        let r = run(&env.cluster, &env.prompts, s.as_ref(), &env.db, &cfg, None).unwrap();
+        let r = run(&env.cluster, &env.prompts, &s, &env.db, &cfg, None).unwrap();
         assert_eq!(r.metrics.len(), 1);
     }
     // batch far larger than the corpus
     let env = small_env(3);
-    let s = build_strategy("latency-aware", &env.cluster).unwrap();
+    let s = PlacementPolicy::spatial("latency-aware", &env.cluster).unwrap();
     let mut cfg = RunConfig::default();
     cfg.batch_size = 64;
-    let r = run(&env.cluster, &env.prompts, s.as_ref(), &env.db, &cfg, None).unwrap();
+    let r = run(&env.cluster, &env.prompts, &s, &env.db, &cfg, None).unwrap();
     assert_eq!(r.metrics.len(), 3);
 }
 
 #[test]
 fn grouping_preserves_totals() {
     let env = small_env(80);
-    let s = build_strategy("latency-aware", &env.cluster).unwrap();
+    let s = PlacementPolicy::spatial("latency-aware", &env.cluster).unwrap();
     let mut totals = Vec::new();
     for g in [Grouping::Fifo, Grouping::LengthSorted] {
         let mut cfg = RunConfig::default();
         cfg.grouping = g;
-        let r = run(&env.cluster, &env.prompts, s.as_ref(), &env.db, &cfg, None).unwrap();
+        let r = run(&env.cluster, &env.prompts, &s, &env.db, &cfg, None).unwrap();
         assert_eq!(r.metrics.len(), 80);
         totals.push(r.overall.tokens.sum());
     }
@@ -152,10 +152,10 @@ fn grouping_preserves_totals() {
 #[test]
 fn execution_mode_gate() {
     let env = small_env(4);
-    let s = build_strategy("round-robin", &env.cluster).unwrap();
+    let s = PlacementPolicy::spatial("round-robin", &env.cluster).unwrap();
     for mode in [ExecutionMode::Real, ExecutionMode::Hybrid] {
         let mut cfg = RunConfig::default();
         cfg.execution = mode;
-        assert!(run(&env.cluster, &env.prompts, s.as_ref(), &env.db, &cfg, None).is_err());
+        assert!(run(&env.cluster, &env.prompts, &s, &env.db, &cfg, None).is_err());
     }
 }

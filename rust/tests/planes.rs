@@ -1,0 +1,201 @@
+//! Cross-plane guarantees of the unified scheduling core
+//! (`coordinator::policy`):
+//!
+//! 1. **Equivalence** — under the default configuration the policy core
+//!    reproduces the pre-refactor closed-loop pipeline
+//!    (`strategy.assign` → `form_batches`) decision-for-decision:
+//!    identical routing, identical batch plan, identical per-prompt
+//!    device binding, deterministic makespan.
+//! 2. **Uniform strategy resolution** — an unknown strategy name fails
+//!    loudly and identically in the closed-loop, DES and wallclock
+//!    planes (no plane silently falls back to latency-aware).
+//! 3. **Sizing safety** — carbon-aware batch sizing never violates a
+//!    `Deferrable` deadline and never delays an `Interactive` prompt
+//!    (zero deferrable load ⇒ decision-identical to sizing off).
+
+use verdant::cluster::{CarbonModel, Cluster};
+use verdant::config::{Arrival, ExperimentConfig};
+use verdant::coordinator::online::{run_online, OnlineConfig};
+use verdant::coordinator::{
+    form_batches, run, BenchmarkDb, GridShiftConfig, Grouping, PlacementPolicy, RouteContext,
+    RunConfig,
+};
+use verdant::grid::ForecastKind;
+use verdant::server::{serve, ServeOptions};
+use verdant::util::check::property;
+use verdant::workload::{trace, Corpus, Prompt};
+
+fn setup(n: usize) -> (Cluster, Vec<Prompt>, BenchmarkDb) {
+    let mut cfg = ExperimentConfig::default();
+    cfg.workload.prompts = n;
+    let cluster = Cluster::from_config(&cfg.cluster);
+    let mut corpus = Corpus::generate(&cfg.workload);
+    trace::assign_arrivals(&mut corpus.prompts, cfg.workload.arrival, cfg.workload.seed);
+    let db = BenchmarkDb::build(&cluster, &[1, 4, 8], 3, 69.0, 1);
+    (cluster, corpus.prompts, db)
+}
+
+#[test]
+fn closed_loop_default_config_is_equivalent_to_prerefactor_pipeline() {
+    let (cluster, prompts, db) = setup(120);
+    for name in [
+        "latency-aware",
+        "carbon-aware",
+        "round-robin",
+        "complexity-aware",
+        "all-on-jetson-orin-nx",
+    ] {
+        let policy = PlacementPolicy::spatial(name, &cluster).unwrap();
+        // the seed pipeline: strategy.assign → form_batches, in index order
+        let ctx = RouteContext { cluster: &cluster, db: &db, batch_size: 4 };
+        let direct_assign = policy.strategy().assign(&prompts, &ctx);
+        let direct_batches = form_batches(&prompts, &direct_assign, 4, &cluster, Grouping::Fifo);
+
+        let plan = policy.plan_corpus(&prompts, &cluster, &db, 4, Grouping::Fifo);
+        assert_eq!(plan.assignment, direct_assign, "{name}: routing diverged");
+        assert_eq!(plan.batches, direct_batches, "{name}: batch plan diverged");
+        assert_eq!(plan.deferred, 0, "{name}: spurious deferral");
+
+        // the executed run binds each prompt to exactly the planned device
+        let r = run(&cluster, &prompts, &policy, &db, &RunConfig::default(), None).unwrap();
+        assert_eq!(r.deferred, 0);
+        for m in &r.metrics {
+            let i = prompts.iter().position(|p| p.id == m.prompt_id).unwrap();
+            assert_eq!(
+                m.device, cluster.devices[direct_assign[i]].name,
+                "{name}: prompt {i} ran on the wrong device"
+            );
+        }
+        // makespan is a pure function of the (pinned) plan
+        let r2 = run(&cluster, &prompts, &policy, &db, &RunConfig::default(), None).unwrap();
+        assert_eq!(r.makespan_s, r2.makespan_s, "{name}: makespan not deterministic");
+        assert_eq!(r.total_carbon_kg, r2.total_carbon_kg);
+    }
+}
+
+#[test]
+fn grid_without_deferrable_load_changes_nothing_in_closed_loop() {
+    // a time-varying grid with zero deferrable prompts must leave the
+    // closed-loop plan and results untouched
+    let (mut cluster, prompts, db) = setup(60);
+    cluster.carbon = CarbonModel::diurnal(69.0, 0.3);
+    let grid =
+        GridShiftConfig::from_model(&cluster.carbon, ForecastKind::Harmonic, 900.0).unwrap();
+    let spatial = PlacementPolicy::spatial("latency-aware", &cluster).unwrap();
+    let shifted =
+        PlacementPolicy::new("latency-aware", &cluster, Some(grid.with_sizing(true))).unwrap();
+    let a = run(&cluster, &prompts, &spatial, &db, &RunConfig::default(), None).unwrap();
+    let b = run(&cluster, &prompts, &shifted, &db, &RunConfig::default(), None).unwrap();
+    assert_eq!(a.makespan_s, b.makespan_s);
+    assert_eq!(a.total_carbon_kg, b.total_carbon_kg);
+    assert_eq!(b.deferred, 0);
+}
+
+#[test]
+fn unknown_strategy_fails_identically_across_all_three_planes() {
+    let (cluster, prompts, db) = setup(4);
+
+    // closed-loop plane (verdant run)
+    let closed = PlacementPolicy::spatial("warp-speed", &cluster)
+        .err()
+        .expect("closed loop must reject")
+        .to_string();
+
+    // DES plane (verdant bench load/shifting)
+    let cfg = OnlineConfig { strategy: "warp-speed".into(), ..OnlineConfig::default() };
+    let des = run_online(&cluster, &prompts, &db, &cfg)
+        .err()
+        .expect("DES must reject")
+        .to_string();
+
+    // wallclock plane (verdant serve) — rejected before any thread spawns
+    let opts = ServeOptions { strategy: "warp-speed".into(), ..ServeOptions::default() };
+    let wall = serve(&cluster, &prompts, &opts)
+        .err()
+        .expect("server must reject")
+        .to_string();
+
+    for (plane, err) in [("closed", &closed), ("des", &des), ("wall", &wall)] {
+        assert!(err.contains("unknown strategy 'warp-speed'"), "{plane}: {err}");
+    }
+    assert_eq!(closed, des, "closed-loop and DES error text diverged");
+    assert_eq!(des, wall, "DES and server error text diverged");
+}
+
+/// DES harness over a diurnal grid for the sizing properties.
+fn sizing_run(
+    n: usize,
+    deferrable_frac: f64,
+    deadline_s: f64,
+    rate: f64,
+    defer: bool,
+    sizing: bool,
+) -> verdant::coordinator::online::OnlineResult {
+    let mut cfg = ExperimentConfig::default();
+    cfg.workload.prompts = n;
+    let mut cluster = Cluster::from_config(&cfg.cluster);
+    let grid_trace = CarbonModel::diurnal(69.0, 0.3).to_trace(900.0);
+    cluster.carbon = CarbonModel::from_trace(grid_trace.clone());
+    let mut corpus = Corpus::generate(&cfg.workload);
+    trace::assign_arrivals(&mut corpus.prompts, Arrival::Open { rate }, 7);
+    trace::assign_slos(&mut corpus.prompts, deferrable_frac, deadline_s, 21);
+    let db = BenchmarkDb::build(&cluster, &[1, 4, 8], 2, 69.0, 1);
+    let grid = GridShiftConfig::new(grid_trace, ForecastKind::Harmonic)
+        .with_defer(defer)
+        .with_sizing(sizing);
+    let online = OnlineConfig {
+        strategy: "carbon-aware".into(),
+        grid: Some(grid),
+        ..OnlineConfig::default()
+    };
+    run_online(&cluster, &corpus.prompts, &db, &online).unwrap()
+}
+
+#[test]
+fn sizing_never_violates_deferrable_deadlines() {
+    property("carbon sizing honours deadlines", 10, |rng| {
+        let frac = rng.range(0.1, 1.0);
+        let deadline = rng.range(1800.0, 12.0 * 3600.0);
+        let rate = 1.0 / rng.range(60.0, 900.0);
+        let defer = rng.chance(0.5);
+        let r = sizing_run(50, frac, deadline, rate, defer, true);
+        if r.completed != 50 {
+            return Err(format!("only {} of 50 completed", r.completed));
+        }
+        if r.deadline_violations != 0 {
+            return Err(format!(
+                "{} deadline violations (frac {frac:.2}, deadline {deadline:.0}s, \
+                 rate {rate:.4}, defer {defer})",
+                r.deadline_violations
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn sizing_never_delays_interactive_prompts() {
+    // with zero deferrable load, sizing has no lever: the run must be
+    // decision-identical to sizing off — interactive latency included
+    let off = sizing_run(60, 0.0, 3600.0, 1.0 / 120.0, true, false);
+    let on = sizing_run(60, 0.0, 3600.0, 1.0 / 120.0, true, true);
+    assert_eq!(on.held_partial, 0);
+    assert_eq!(on.span_s, off.span_s);
+    assert_eq!(on.latency.mean(), off.latency.mean());
+    assert_eq!(on.latency_interactive.mean(), off.latency_interactive.mean());
+    assert_eq!(on.ledger.total_carbon_kg(), off.ledger.total_carbon_kg());
+
+    // and in a mixed workload a hold is only ever placed on an
+    // all-deferrable queue, so an arriving interactive prompt launches
+    // at once (it may share the batch with held deferrables — a larger
+    // fill, never a wait for a clean window)
+    let mixed_off = sizing_run(60, 0.5, 8.0 * 3600.0, 1.0 / 300.0, false, false);
+    let mixed_on = sizing_run(60, 0.5, 8.0 * 3600.0, 1.0 / 300.0, false, true);
+    assert_eq!(mixed_on.deadline_violations, 0);
+    assert!(
+        mixed_on.latency_interactive.mean() <= mixed_off.latency_interactive.mean() * 2.0 + 5.0,
+        "interactive latency {} vs {} — an interactive prompt waited for a hold",
+        mixed_on.latency_interactive.mean(),
+        mixed_off.latency_interactive.mean()
+    );
+}

@@ -4,7 +4,7 @@
 
 use verdant::cluster::Cluster;
 use verdant::config::{DeviceConfig, DeviceKind, ExperimentConfig};
-use verdant::coordinator::{build_strategy, run, BenchmarkDb, RunConfig};
+use verdant::coordinator::{run, BenchmarkDb, PlacementPolicy, RunConfig};
 use verdant::util::check::property;
 use verdant::util::rng::Rng;
 use verdant::workload::{Category, Corpus, Prompt};
@@ -51,10 +51,10 @@ fn every_strategy_total_on_random_clusters() {
         let prompts = random_prompts(rng, n);
         let db = BenchmarkDb::build(&cluster, &[1, 4], 2, 69.0, rng.next_u64());
         for name in ["carbon-aware", "latency-aware", "round-robin", "complexity-aware"] {
-            let s = build_strategy(name, &cluster).map_err(|e| e.to_string())?;
+            let s = PlacementPolicy::spatial(name, &cluster).map_err(|e| e.to_string())?;
             let mut cfg = RunConfig::default();
             cfg.batch_size = rng.below(8) + 1;
-            let r = run(&cluster, &prompts, s.as_ref(), &db, &cfg, None)
+            let r = run(&cluster, &prompts, &s, &db, &cfg, None)
                 .map_err(|e| format!("{name}: {e}"))?;
             if r.metrics.len() != prompts.len() {
                 return Err(format!("{name}: {} metrics for {} prompts", r.metrics.len(), prompts.len()));
@@ -83,8 +83,8 @@ fn latency_aware_never_worse_than_both_baselines() {
         cfg.batch_size = [1, 4, 8][rng.below(3)];
 
         let mk = |name: &str| -> Result<f64, String> {
-            let s = build_strategy(name, &cluster).map_err(|e| e.to_string())?;
-            Ok(run(&cluster, &prompts, s.as_ref(), &db, &cfg, None)
+            let s = PlacementPolicy::spatial(name, &cluster).map_err(|e| e.to_string())?;
+            Ok(run(&cluster, &prompts, &s, &db, &cfg, None)
                 .map_err(|e| e.to_string())?
                 .makespan_s)
         };
@@ -114,8 +114,8 @@ fn carbon_aware_is_carbon_minimal_among_strategies() {
         cfg.batch_size = [1, 4][rng.below(2)];
 
         let carbon_of = |name: &str| -> Result<f64, String> {
-            let s = build_strategy(name, &cluster).map_err(|e| e.to_string())?;
-            Ok(run(&cluster, &prompts, s.as_ref(), &db, &cfg, None)
+            let s = PlacementPolicy::spatial(name, &cluster).map_err(|e| e.to_string())?;
+            Ok(run(&cluster, &prompts, &s, &db, &cfg, None)
                 .map_err(|e| e.to_string())?
                 .total_carbon_kg)
         };
@@ -138,8 +138,8 @@ fn makespan_equals_max_device_busy() {
         let n = rng.below(40) + 1;
         let prompts = random_prompts(rng, n);
         let db = BenchmarkDb::build(&cluster, &[4], 2, 69.0, 3);
-        let s = build_strategy("round-robin", &cluster).map_err(|e| e.to_string())?;
-        let r = run(&cluster, &prompts, s.as_ref(), &db, &RunConfig::default(), None)
+        let s = PlacementPolicy::spatial("round-robin", &cluster).map_err(|e| e.to_string())?;
+        let r = run(&cluster, &prompts, &s, &db, &RunConfig::default(), None)
             .map_err(|e| e.to_string())?;
         let max_busy = r
             .ledger
@@ -160,8 +160,8 @@ fn request_e2e_at_least_queue_plus_ttft_component() {
         let n = rng.below(50) + 1;
         let prompts = random_prompts(rng, n);
         let db = BenchmarkDb::build(&cluster, &[4], 2, 69.0, 5);
-        let s = build_strategy("latency-aware", &cluster).map_err(|e| e.to_string())?;
-        let r = run(&cluster, &prompts, s.as_ref(), &db, &RunConfig::default(), None)
+        let s = PlacementPolicy::spatial("latency-aware", &cluster).map_err(|e| e.to_string())?;
+        let r = run(&cluster, &prompts, &s, &db, &RunConfig::default(), None)
             .map_err(|e| e.to_string())?;
         for m in &r.metrics {
             if !(m.e2e_s >= m.ttft_s - 1e-9 && m.ttft_s >= m.queue_s - 1e-9) {
