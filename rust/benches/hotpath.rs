@@ -6,7 +6,12 @@
 //! artifacts are present. Run with `cargo bench --bench hotpath`.
 
 use verdant::bench::{harness, Env};
-use verdant::coordinator::{build_strategy, estimator, form_batches, Grouping, RouteContext};
+use verdant::cluster::CarbonModel;
+use verdant::coordinator::{
+    build_strategy, estimator, form_batches, GridShiftConfig, Grouping, OnlineView, RouteContext,
+    Strategy,
+};
+use verdant::grid::ForecastKind;
 use verdant::simulator::{simulate_batch, BatchWork, EventQueue};
 
 fn main() {
@@ -47,6 +52,21 @@ fn main() {
     });
     harness::report(&r);
 
+    // forecast-priced on-arrival routing: per-step memo vs refitting
+    // the forecaster on every decision (the pre-cache hot path)
+    let trace = CarbonModel::diurnal(69.0, 0.3).to_trace(900.0);
+    let grid_memo = GridShiftConfig::new(trace.clone(), ForecastKind::Harmonic);
+    let grid_refit = GridShiftConfig::new(trace, ForecastKind::Harmonic).with_memoize(false);
+    let fca = build_strategy("forecast-carbon-aware", &env.cluster).unwrap();
+    let backlog = vec![120.0; env.cluster.devices.len()];
+    for (label, grid) in [("memoized", &grid_memo), ("refit", &grid_refit)] {
+        let r = harness::bench(&format!("route-one/forecast/{label}"), 3, 2_000, || {
+            let view = OnlineView { backlog_s: &backlog, now: 17.0 * 3600.0, grid: Some(grid) };
+            Strategy::route_one(fca.as_ref(), p, &ctx, &view)
+        });
+        harness::report(&r);
+    }
+
     let r = harness::bench("benchmark-db/build/6-per-cell", 1, 5, || {
         estimator::BenchmarkDb::build(&env.cluster, &[1, 4, 8], 6, 69.0, 1)
     });
@@ -72,7 +92,7 @@ fn main() {
         let mut engine = verdant::runtime::Engine::load(&artifacts).unwrap();
         engine.warmup("edge-1b-sim", &[1, 4]).unwrap();
 
-        let prompts_b1 = vec!["Who painted the Mona Lisa?".to_string()];
+        let prompts_b1 = ["Who painted the Mona Lisa?"];
         let r = harness::bench("pjrt/generate/b1/8-new-tokens", 2, 20, || {
             verdant::runtime::generate(&engine, "edge-1b-sim", 1, &prompts_b1, 8).unwrap()
         });
@@ -83,8 +103,9 @@ fn main() {
         });
         harness::report(&r);
 
-        let prompts_b4: Vec<String> =
+        let owned_b4: Vec<String> =
             (0..4).map(|i| format!("Edge prompt number {i} with some body text")).collect();
+        let prompts_b4: Vec<&str> = owned_b4.iter().map(String::as_str).collect();
         let r = harness::bench("pjrt/generate/b4/8-new-tokens", 2, 10, || {
             verdant::runtime::generate(&engine, "edge-1b-sim", 4, &prompts_b4, 8).unwrap()
         });

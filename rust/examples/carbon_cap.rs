@@ -44,7 +44,7 @@ fn main() -> anyhow::Result<()> {
     // --- diurnal grid ---------------------------------------------------
     println!("\n== same budget, diurnal grid (69 g/kWh mean, ±30 %) ==");
     let mut cluster = Cluster::from_config(&cfg.cluster);
-    cluster.carbon = CarbonModel::diurnal(69.0, 0.3);
+    cluster.carbon = CarbonModel::diurnal(69.0, 0.3).into();
     let s = PlacementPolicy::spatial("carbon-cap@2e-5", &cluster)?;
     println!("{:>6} {:>16} {:>20}", "hour", "intensity g/kWh", "carbon (kgCO2e)");
     for hour in [3usize, 13, 19] {

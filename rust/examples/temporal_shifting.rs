@@ -41,7 +41,7 @@ fn main() {
     cfg.workload.prompts = 300;
     let env = Env::with_config(cfg.clone());
     let mut cluster = Cluster::from_config(&cfg.cluster);
-    cluster.carbon = CarbonModel::from_trace(grid_trace.clone());
+    cluster.carbon = CarbonModel::from_trace(grid_trace.clone()).into();
 
     let mut prompts = env.prompts.clone();
     // arrivals over 18 h; half the corpus tolerates a 10 h deadline

@@ -10,6 +10,7 @@
 //! | [`ablation`] | DESIGN.md ablations (estimator, grouping, threshold) |
 //! | [`load`] | open-loop latency-vs-load sweep (serving extension) |
 //! | [`shifting`] | temporal-shifting sweep: strategy × grid trace × deferrable fraction |
+//! | [`scale`] | hot-path scale harness: decisions/sec at 1k/10k/100k prompts (perf trajectory) |
 //!
 //! [`harness`] is the in-tree micro-benchmark timer used by
 //! `rust/benches/*` (criterion is not available offline).
@@ -19,6 +20,7 @@ pub mod fig1;
 pub mod fig2;
 pub mod harness;
 pub mod load;
+pub mod scale;
 pub mod shifting;
 pub mod sweep;
 pub mod table2;

@@ -1,0 +1,195 @@
+//! Hot-path scale harness: `verdant bench scale`.
+//!
+//! Sweeps corpus sizes × routing strategies through the open-loop DES
+//! and the closed-loop scheduler on a diurnal grid (half the corpus
+//! deferrable), timing each whole run and reporting **decisions/sec**
+//! — prompts placed per wall-clock second, end to end through the
+//! plane. This is the perf trajectory every future PR measures itself
+//! against: `--json` writes `BENCH_scale.json`, which CI archives per
+//! PR.
+//!
+//! `forecast-carbon-aware` runs twice: with the per-step forecast memo
+//! (the default) and with `memoize` off, the refit-every-decision path
+//! this PR retired. The two rows make the cache's speedup — and, via
+//! the identical `deferred` counts, its decision-equivalence — visible
+//! in the same table. Decision equivalence is pinned bit-for-bit by
+//! `tests/planes.rs`; this harness only has to prove the speed.
+
+use std::time::Instant;
+
+use crate::cluster::{CarbonModel, Cluster};
+use crate::config::Arrival;
+use crate::coordinator::online::{run_online, OnlineConfig};
+use crate::coordinator::{run as run_sched, GridShiftConfig, PlacementPolicy, RunConfig};
+use crate::grid::ForecastKind;
+use crate::report::{fmt, Table};
+use crate::workload::{trace, Corpus};
+
+use super::Env;
+
+/// Corpus sizes swept by `verdant bench scale`.
+pub const SCALE_COUNTS: [usize; 3] = [1_000, 10_000, 100_000];
+
+/// Arrival window the corpus is spread over (18 h of one day) and the
+/// SLO marking, mirroring `bench shifting` so the planner has real
+/// deferrable load to forecast for.
+pub const ARRIVAL_SPAN_S: f64 = 18.0 * 3600.0;
+pub const DEFER_FRAC: f64 = 0.5;
+pub const DEADLINE_S: f64 = 10.0 * 3600.0;
+
+/// One timed run.
+#[derive(Debug, Clone)]
+pub struct ScaleRow {
+    /// Execution plane: "des" (open loop) or "closed" (corpus plan).
+    pub plane: &'static str,
+    /// Strategy label (the uncached forecast variant is marked).
+    pub strategy: String,
+    pub prompts: usize,
+    pub wall_s: f64,
+    /// Prompts placed per wall-clock second, whole-plane.
+    pub decisions_per_s: f64,
+    /// Prompts the policy shifted past arrival (equal between the
+    /// cached and uncached forecast rows — the equivalence signal).
+    pub deferred: usize,
+}
+
+/// The strategy variants swept: label, strategy name, grid context.
+fn variants(grid_trace: &crate::grid::GridTrace) -> Vec<(String, String, Option<GridShiftConfig>)> {
+    vec![
+        ("latency-aware".into(), "latency-aware".into(), None),
+        ("carbon-aware".into(), "carbon-aware".into(), None),
+        (
+            "forecast-carbon-aware".into(),
+            "forecast-carbon-aware".into(),
+            Some(GridShiftConfig::new(grid_trace.clone(), ForecastKind::Harmonic)),
+        ),
+        (
+            "forecast-carbon-aware (uncached)".into(),
+            "forecast-carbon-aware".into(),
+            Some(
+                GridShiftConfig::new(grid_trace.clone(), ForecastKind::Harmonic)
+                    .with_memoize(false),
+            ),
+        ),
+    ]
+}
+
+/// Run the sweep over `counts` and return (rows, rendered table).
+/// The CLI passes [`SCALE_COUNTS`]; tests pass smaller corpora.
+pub fn run(env: &Env, counts: &[usize]) -> (Vec<ScaleRow>, Table) {
+    let mut rows = Vec::new();
+    let grid_trace = CarbonModel::diurnal(69.0, 0.3).to_trace(900.0);
+    let mut cluster = Cluster::from_config(&env.cfg.cluster);
+    cluster.carbon = CarbonModel::from_trace(grid_trace.clone()).into();
+
+    for &n in counts {
+        let mut wl = env.cfg.workload.clone();
+        wl.prompts = n;
+        let mut corpus = Corpus::generate(&wl);
+        trace::assign_arrivals(
+            &mut corpus.prompts,
+            Arrival::Open { rate: n as f64 / ARRIVAL_SPAN_S },
+            wl.seed,
+        );
+        trace::assign_slos(&mut corpus.prompts, DEFER_FRAC, DEADLINE_S, wl.seed ^ 0x51);
+        let prompts = corpus.prompts;
+
+        for (label, strategy, grid) in variants(&grid_trace) {
+            // open-loop DES
+            let cfg = OnlineConfig {
+                strategy: strategy.clone(),
+                grid: grid.clone(),
+                ..OnlineConfig::default()
+            };
+            let t0 = Instant::now();
+            let r = run_online(&cluster, &prompts, &env.db, &cfg)
+                .expect("bench strategies resolve");
+            let wall = t0.elapsed().as_secs_f64();
+            assert_eq!(r.completed, n, "DES dropped prompts");
+            rows.push(ScaleRow {
+                plane: "des",
+                strategy: label.clone(),
+                prompts: n,
+                wall_s: wall,
+                decisions_per_s: n as f64 / wall.max(1e-9),
+                deferred: r.deferred,
+            });
+
+            // closed-loop corpus plan + execution
+            let policy = PlacementPolicy::new(&strategy, &cluster, grid)
+                .expect("bench strategies resolve");
+            let t0 = Instant::now();
+            let r = run_sched(&cluster, &prompts, &policy, &env.db, &RunConfig::default(), None)
+                .expect("closed-loop run");
+            let wall = t0.elapsed().as_secs_f64();
+            assert_eq!(r.metrics.len(), n, "closed loop dropped prompts");
+            rows.push(ScaleRow {
+                plane: "closed",
+                strategy: label,
+                prompts: n,
+                wall_s: wall,
+                decisions_per_s: n as f64 / wall.max(1e-9),
+                deferred: r.deferred,
+            });
+        }
+    }
+
+    let mut table = Table::new(
+        "BENCH_scale",
+        "Hot-path scale — decisions/sec by plane × strategy × corpus size",
+        &["Plane", "Strategy", "Prompts", "Wall (s)", "Decisions/s", "Deferred"],
+    );
+    for r in &rows {
+        table.row(vec![
+            r.plane.to_string(),
+            r.strategy.clone(),
+            r.prompts.to_string(),
+            fmt::secs(r.wall_s),
+            format!("{:.0}", r.decisions_per_s),
+            r.deferred.to_string(),
+        ]);
+    }
+    table.note(format!(
+        "arrivals over {:.0} h, {:.0}% deferrable (deadline {:.0} h), diurnal grid, \
+         harmonic forecaster; decisions/s = prompts / whole-plane wall time; the \
+         (uncached) rows refit the forecaster per decision — the pre-memoization \
+         hot path, decision-identical by tests/planes.rs",
+        ARRIVAL_SPAN_S / 3600.0,
+        DEFER_FRAC * 100.0,
+        DEADLINE_S / 3600.0
+    ));
+    (rows, table)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scale_rows_cover_both_planes_and_agree_on_deferrals() {
+        let env = Env::small(40);
+        let (rows, table) = run(&env, &[60]);
+        // 2 planes × 4 strategy variants
+        assert_eq!(rows.len(), 8);
+        assert!(table.ascii().contains("forecast-carbon-aware (uncached)"));
+        for r in &rows {
+            assert!(r.wall_s >= 0.0);
+            assert!(r.decisions_per_s > 0.0, "{}/{}", r.plane, r.strategy);
+            assert_eq!(r.prompts, 60);
+        }
+        // the memo must be decision-invisible: identical deferral
+        // counts between the cached and uncached forecast rows
+        for plane in ["des", "closed"] {
+            let cached = rows
+                .iter()
+                .find(|r| r.plane == plane && r.strategy == "forecast-carbon-aware")
+                .unwrap();
+            let uncached = rows
+                .iter()
+                .find(|r| r.plane == plane && r.strategy == "forecast-carbon-aware (uncached)")
+                .unwrap();
+            assert_eq!(cached.deferred, uncached.deferred, "{plane}");
+            assert!(cached.deferred > 0, "{plane}: scenario must defer something");
+        }
+    }
+}

@@ -76,7 +76,7 @@ pub fn run(env: &Env) -> (Vec<ShiftingRow>, Table) {
 
     for grid_trace in traces() {
         let mut cluster = Cluster::from_config(&base.cluster);
-        cluster.carbon = CarbonModel::from_trace(grid_trace.clone());
+        cluster.carbon = CarbonModel::from_trace(grid_trace.clone()).into();
         for &frac in &DEFER_FRACS {
             // identical corpus + SLO marking for every strategy at this point
             let mut corpus = Corpus::generate(&base.workload);

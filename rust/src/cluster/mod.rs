@@ -27,15 +27,22 @@ pub use memory::MemoryModel;
 pub use network::LinkModel;
 pub use power::PowerModel;
 
+use std::sync::Arc;
+
 use crate::config::{CarbonModelConfig, ClusterConfig, DeviceKind};
 use crate::grid::{GridTrace, SyntheticTrace};
 
 /// A fully-instantiated cluster: device profiles + shared carbon model
 /// + the network link used by cloud-kind devices.
+///
+/// The carbon model is behind an `Arc`: trace-backed models carry a
+/// full intensity time series, and every `EnergyLedger` shares the
+/// cluster's model by reference count instead of deep-cloning the
+/// trace per run.
 #[derive(Debug, Clone)]
 pub struct Cluster {
     pub devices: Vec<DeviceProfile>,
-    pub carbon: CarbonModel,
+    pub carbon: Arc<CarbonModel>,
     pub link: LinkModel,
 }
 
@@ -49,7 +56,7 @@ impl Cluster {
             .collect();
         Cluster {
             devices,
-            carbon: build_carbon_model(&cfg.carbon),
+            carbon: Arc::new(build_carbon_model(&cfg.carbon)),
             link: LinkModel::new(cfg.cloud.rtt_ms, cfg.cloud.bandwidth_mbps),
         }
     }

@@ -168,7 +168,7 @@ mod tests {
         let ps = prompts(10, 3);
         let assignment = vec![0; 10];
         let batches = form_batches(&ps, &assignment, 4, &c, Grouping::Fifo);
-        let flat: Vec<usize> = batches.iter().flat_map(|b| b.members.clone()).collect();
+        let flat: Vec<usize> = batches.iter().flat_map(|b| b.members.iter().copied()).collect();
         assert_eq!(flat, (0..10).collect::<Vec<_>>());
         assert_eq!(batches[0].members.len(), 4);
         assert_eq!(batches[2].members.len(), 2); // remainder batch
@@ -180,7 +180,7 @@ mod tests {
         let ps = prompts(12, 5);
         let assignment = vec![1; 12];
         let batches = form_batches(&ps, &assignment, 4, &c, Grouping::LengthSorted);
-        let flat: Vec<usize> = batches.iter().flat_map(|b| b.members.clone()).collect();
+        let flat: Vec<usize> = batches.iter().flat_map(|b| b.members.iter().copied()).collect();
         for w in flat.windows(2) {
             assert!(
                 ps[w[0]].output_demand_tokens >= ps[w[1]].output_demand_tokens,

@@ -17,7 +17,20 @@ use crate::cluster::{Cluster, DeviceProfile};
 use crate::simulator::{simulate_batch, BatchWork};
 use crate::util::rng::Rng;
 use crate::workload::{Category, Corpus, Prompt};
-use std::collections::BTreeMap;
+
+/// Interned device identity: the device's index in its cluster's
+/// `devices` vector, which is also its row in the [`BenchmarkDb`]'s
+/// dense cost table (the DB interns devices in cluster order at build
+/// time). A typed wrapper so hot-path cost lookups are O(1) integer
+/// indexing — no `String` key is ever built per decision.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct DeviceId(pub usize);
+
+impl From<usize> for DeviceId {
+    fn from(i: usize) -> Self {
+        DeviceId(i)
+    }
+}
 
 /// Estimated per-prompt cost of running on a device at a batch size.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -65,9 +78,20 @@ pub struct BenchCell {
 /// Built offline (the paper's benchmarking phase); read by strategies at
 /// routing time. Lookups fall back to the analytic estimate when a cell
 /// was never benchmarked.
+///
+/// The cell table is precomputed *dense*: one flat `[device][category]
+/// [batch]` vector in cluster order, so the per-decision lookup on the
+/// hot path ([`BenchmarkDb::cost_id`]) is pure integer indexing — the
+/// string-keyed map (and its `name.to_string()` per lookup) this
+/// replaced was the single most-executed allocation in the DES.
 #[derive(Debug, Clone)]
 pub struct BenchmarkDb {
-    cells: BTreeMap<(String, Category, usize), BenchCell>,
+    /// Intern table: device names in build (cluster) order.
+    device_names: Vec<String>,
+    /// Benchmarked batch sizes, in build order.
+    batches: Vec<usize>,
+    /// Dense cell table, `[device][category][batch]` row-major.
+    cells: Vec<BenchCell>,
     carbon_intensity: f64,
 }
 
@@ -81,7 +105,8 @@ impl BenchmarkDb {
         carbon_intensity: f64,
         seed: u64,
     ) -> Self {
-        let mut cells = BTreeMap::new();
+        let n_cells = cluster.devices.len() * Category::ALL.len() * batches.len();
+        let mut cells = Vec::with_capacity(n_cells);
         let mut rng = Rng::new(seed ^ 0xBE9C_84A1);
         for dev in &cluster.devices {
             for &cat in &Category::ALL {
@@ -113,23 +138,75 @@ impl BenchmarkDb {
                     cell.mean_output_tokens /= n;
                     cell.error_rate /= n;
                     cell.mean_carbon_kg = cell.mean_energy_kwh * carbon_intensity / 1000.0;
-                    cells.insert((dev.name.clone(), cat, b), cell);
+                    cells.push(cell);
                 }
             }
         }
-        BenchmarkDb { cells, carbon_intensity }
+        BenchmarkDb {
+            device_names: cluster.devices.iter().map(|d| d.name.clone()).collect(),
+            batches: batches.to_vec(),
+            cells,
+            carbon_intensity,
+        }
+    }
+
+    /// Flat index of a cell (`[device][category][batch]` row-major —
+    /// `Category::ALL` order matches the enum discriminants).
+    #[inline]
+    fn cell_index(&self, dev: usize, cat: Category, batch_idx: usize) -> usize {
+        (dev * Category::ALL.len() + cat as usize) * self.batches.len() + batch_idx
+    }
+
+    /// Interned id for a device name: a linear scan over the tiny
+    /// intern table (clusters have a handful of devices), done once per
+    /// run by the planes — the per-decision path uses the id directly.
+    pub fn device_id(&self, name: &str) -> Option<DeviceId> {
+        self.device_names.iter().position(|n| n == name).map(DeviceId)
+    }
+
+    #[inline]
+    fn batch_index(&self, batch: usize) -> Option<usize> {
+        self.batches.iter().position(|&b| b == batch)
     }
 
     /// Measured cell, if benchmarked.
     pub fn cell(&self, device: &str, cat: Category, batch: usize) -> Option<&BenchCell> {
-        self.cells.get(&(device.to_string(), cat, batch))
+        let d = self.device_id(device)?;
+        let bi = self.batch_index(batch)?;
+        Some(&self.cells[self.cell_index(d.0, cat, bi)])
     }
 
     /// Cost lookup for a prompt: measured cell when available, analytic
-    /// fallback otherwise.
+    /// fallback otherwise. Resolves the device by name; hot paths that
+    /// already know the cluster index use [`Self::cost_id`].
     pub fn cost(&self, dev: &DeviceProfile, prompt: &Prompt, batch: usize) -> CostEstimate {
-        match self.cell(&dev.name, prompt.category, batch) {
-            Some(c) => {
+        match self.device_id(&dev.name) {
+            Some(id) => self.cost_id(id, dev, prompt, batch),
+            None => estimate(dev, prompt, batch, self.carbon_intensity),
+        }
+    }
+
+    /// Hot-path cost lookup by interned id: O(1) indexing, no
+    /// allocation, no string key. `dev` must be the profile interned as
+    /// `id` (the DB interns in cluster order, so `cluster.devices[id.0]`
+    /// is it); a mismatched pairing — a DB built against a different
+    /// cluster — falls back to name resolution, preserving the
+    /// name-keyed semantics exactly.
+    #[inline]
+    pub fn cost_id(
+        &self,
+        id: DeviceId,
+        dev: &DeviceProfile,
+        prompt: &Prompt,
+        batch: usize,
+    ) -> CostEstimate {
+        match self.device_names.get(id.0) {
+            Some(name) if *name == dev.name => {}
+            _ => return self.cost(dev, prompt, batch),
+        }
+        match self.batch_index(batch) {
+            Some(bi) => {
+                let c = &self.cells[self.cell_index(id.0, prompt.category, bi)];
                 // rescale the category means by this prompt's relative
                 // output demand (measured DB + per-prompt refinement)
                 let cat_out = prompt.category.profile().output_median;
@@ -237,6 +314,50 @@ mod tests {
             let a = db.cell("ada-2000", Category::Squad, b).unwrap();
             assert!(j.mean_carbon_kg < a.mean_carbon_kg, "batch {b}");
         }
+    }
+
+    #[test]
+    fn cost_id_matches_name_keyed_cost_exactly() {
+        let c = cluster();
+        let db = BenchmarkDb::build(&c, &[1, 4, 8], 3, 69.0, 5);
+        for (d, dev) in c.devices.iter().enumerate() {
+            assert_eq!(db.device_id(&dev.name), Some(DeviceId(d)));
+            for cat in Category::ALL {
+                let p = sample(cat, 17 + d as u64);
+                for b in [1usize, 2, 4, 8] {
+                    // b=2 exercises the analytic fallback on both paths
+                    assert_eq!(
+                        db.cost_id(DeviceId(d), dev, &p, b),
+                        db.cost(dev, &p, b),
+                        "{} {:?} b={b}",
+                        dev.name,
+                        cat
+                    );
+                }
+            }
+        }
+        assert_eq!(db.device_id("not-a-device"), None);
+    }
+
+    #[test]
+    fn cost_id_with_mismatched_id_resolves_by_name() {
+        // a DB built on one cluster, queried with another cluster's
+        // index order: the name check must reroute to the right cells
+        let c = cluster();
+        let db = BenchmarkDb::build(&c, &[4], 2, 69.0, 7);
+        let p = sample(Category::Squad, 3);
+        let jetson = &c.devices[0];
+        // wrong index for the jetson profile -> same answer as by name
+        assert_eq!(db.cost_id(DeviceId(1), jetson, &p, 4), db.cost(jetson, &p, 4));
+        // out-of-range id -> same answer as by name
+        assert_eq!(db.cost_id(DeviceId(9), jetson, &p, 4), db.cost(jetson, &p, 4));
+        // a profile the DB never interned -> analytic estimate
+        let mut foreign = jetson.clone();
+        foreign.name = "foreign-device".into();
+        assert_eq!(
+            db.cost_id(DeviceId(0), &foreign, &p, 4),
+            estimate(&foreign, &p, 4, 69.0)
+        );
     }
 
     #[test]

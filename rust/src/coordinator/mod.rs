@@ -7,6 +7,8 @@
 //!   [`online`], wallclock `server::serve`) drive it;
 //! - [`estimator`] — the benchmarking database routing decisions consume
 //!   (the paper's offline Table-2 phase) + analytic per-prompt estimates;
+//!   devices are interned ([`estimator::DeviceId`]) and the cell table is
+//!   dense, so hot-path cost lookups are O(1) integer indexing;
 //! - [`router`] — the strategies: all-on-X baselines, carbon-aware,
 //!   latency-aware, plus round-robin / complexity-aware / carbon-cap /
 //!   forecast-carbon-aware extensions, each with batch (`assign`) and
@@ -24,7 +26,7 @@ pub mod router;
 pub mod scheduler;
 
 pub use batcher::{form_batches, form_batches_ordered, Batch, Grouping};
-pub use estimator::{estimate, BenchmarkDb, CostEstimate};
+pub use estimator::{estimate, BenchmarkDb, CostEstimate, DeviceId};
 pub use policy::{CorpusPlan, GridShiftConfig, PlacementPolicy};
 pub use router::{build as build_strategy, OnlineView, RouteContext, Strategy};
 pub use scheduler::{run, RunConfig, RunResult};

@@ -40,7 +40,7 @@ use crate::telemetry::EnergyLedger;
 use crate::util::stats::{Histogram, Summary};
 use crate::workload::Prompt;
 
-use super::estimator::BenchmarkDb;
+use super::estimator::{BenchmarkDb, DeviceId};
 use super::policy::PlacementPolicy;
 
 pub use super::policy::GridShiftConfig;
@@ -130,8 +130,6 @@ struct DeviceState {
     busy: bool,
     /// Virtual seconds of execution so far.
     active_s: f64,
-    /// Estimated backlog seconds (for online latency-aware routing).
-    backlog_s: f64,
     /// Timeout epoch (invalidates stale BatchTimeout/SizingHold events;
     /// bumped on every launch and every new wait window).
     epoch: u64,
@@ -166,6 +164,10 @@ struct Ctx<'a> {
 struct State {
     q: EventQueue<Event>,
     devs: Vec<DeviceState>,
+    /// Estimated backlog seconds per device — the indexed counters the
+    /// online router's `OnlineView` reads directly (maintained
+    /// incrementally on admit/launch; no per-arrival collection).
+    backlog: Vec<f64>,
     /// Completion bookkeeping: (prompt idx, batch start) per in-flight batch.
     inflight: Vec<Option<(Vec<usize>, f64)>>,
     queue_wait: Summary,
@@ -198,12 +200,12 @@ pub fn run_online(
                 queue_lo: VecDeque::new(),
                 busy: false,
                 active_s: 0.0,
-                backlog_s: 0.0,
                 epoch: 0,
                 waiting_since: None,
                 sizing_hold: false,
             })
             .collect(),
+        backlog: vec![0.0; n_dev],
         inflight: vec![None; n_dev],
         queue_wait: Summary::new(),
         batch_fill: Summary::new(),
@@ -227,7 +229,7 @@ pub fn run_online(
         let now = ev.at;
         match ev.event {
             Event::Arrival(i) => {
-                let backlog: f64 = st.devs.iter().map(|d| d.backlog_s).sum();
+                let backlog: f64 = st.backlog.iter().sum();
                 let release = policy.plan_release(
                     &prompts[i],
                     cluster,
@@ -308,19 +310,22 @@ pub fn run_online(
 }
 
 /// Route prompt `i` onto a device queue (`lo` = released deferred work,
-/// which yields to interactive traffic) and try to launch.
+/// which yields to interactive traffic) and try to launch. The live
+/// backlog view is the state's per-device counter vector, handed to the
+/// router as a slice — no per-arrival collection or allocation.
 fn admit(ctx: &Ctx, st: &mut State, i: usize, lo: bool, now: f64) {
-    let backlog: Vec<f64> = st.devs.iter().map(|d| d.backlog_s).collect();
     let d = ctx.policy.route_arrival(
         &ctx.prompts[i],
         ctx.cluster,
         ctx.db,
         ctx.cfg.batch_size,
-        &backlog,
+        &st.backlog,
         now,
     );
-    st.devs[d].backlog_s +=
-        ctx.db.cost(&ctx.cluster.devices[d], &ctx.prompts[i], ctx.cfg.batch_size).e2e_s;
+    st.backlog[d] += ctx
+        .db
+        .cost_id(DeviceId(d), &ctx.cluster.devices[d], &ctx.prompts[i], ctx.cfg.batch_size)
+        .e2e_s;
     if lo {
         st.devs[d].queue_lo.push_back((i, now));
     } else {
@@ -410,8 +415,8 @@ fn launch(ctx: &Ctx, st: &mut State, d: usize, now: f64) {
         // wait measured from admission, so the intentional deferral
         // hold does not masquerade as queueing contention
         st.queue_wait.add(now - at);
-        st.devs[d].backlog_s = (st.devs[d].backlog_s
-            - ctx.db.cost(dev, &ctx.prompts[i], ctx.cfg.batch_size).e2e_s)
+        st.backlog[d] = (st.backlog[d]
+            - ctx.db.cost_id(DeviceId(d), dev, &ctx.prompts[i], ctx.cfg.batch_size).e2e_s)
             .max(0.0);
     }
     st.batch_fill.add(members.len() as f64);
@@ -465,7 +470,7 @@ mod tests {
         cfg.workload.prompts = n;
         let mut cluster = Cluster::from_config(&cfg.cluster);
         let grid_trace = CarbonModel::diurnal(69.0, 0.3).to_trace(900.0);
-        cluster.carbon = CarbonModel::from_trace(grid_trace.clone());
+        cluster.carbon = CarbonModel::from_trace(grid_trace.clone()).into();
         let mut corpus = Corpus::generate(&cfg.workload);
         // ~one arrival every 3 min: the trace spans most of a day
         trace::assign_arrivals(&mut corpus.prompts, Arrival::Open { rate: 1.0 / 180.0 }, 7);
@@ -622,6 +627,33 @@ mod tests {
         );
         // deferrable latency includes the hold, so it dwarfs interactive
         assert!(shifted.latency_deferrable.mean() > shifted.latency_interactive.mean());
+    }
+
+    #[test]
+    fn memoized_forecasts_do_not_change_des_decisions() {
+        // the per-step fit cache must be invisible to every DES
+        // decision: spans, holds, deferrals and carbon all identical
+        let (cluster, prompts, db, grid) = shifting_setup(120, 0.5);
+        let cached_cfg = OnlineConfig {
+            strategy: "forecast-carbon-aware".into(),
+            grid: Some(grid.clone().with_sizing(true)),
+            ..OnlineConfig::default()
+        };
+        let refit_cfg = OnlineConfig {
+            strategy: "forecast-carbon-aware".into(),
+            grid: Some(grid.with_sizing(true).with_memoize(false)),
+            ..OnlineConfig::default()
+        };
+        let a = run_online(&cluster, &prompts, &db, &cached_cfg).unwrap();
+        let b = run_online(&cluster, &prompts, &db, &refit_cfg).unwrap();
+        assert!(a.deferred > 0, "scenario must exercise the forecast path");
+        assert_eq!(a.span_s, b.span_s);
+        assert_eq!(a.deferred, b.deferred);
+        assert_eq!(a.held_partial, b.held_partial);
+        assert_eq!(a.deadline_violations, b.deadline_violations);
+        assert_eq!(a.latency.mean(), b.latency.mean());
+        assert_eq!(a.ledger.totals(), b.ledger.totals());
+        assert_eq!(a.ledger.realized_savings_kg(), b.ledger.realized_savings_kg());
     }
 
     #[test]

@@ -36,14 +36,16 @@
 //! `form_batches(strategy.assign(..))` exactly — pinned by the
 //! cross-plane equivalence test in `tests/planes.rs`.
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
 use crate::cluster::{CarbonModel, Cluster};
-use crate::grid::{shift, ForecastKind, Forecaster, GridTrace};
+use crate::grid::{shift, ForecastCache, ForecastKind, GridTrace};
 use crate::workload::Prompt;
 
 use super::batcher::{form_batches_ordered, Batch, Grouping};
-use super::estimator::BenchmarkDb;
+use super::estimator::{BenchmarkDb, DeviceId};
 use super::router::{self, OnlineView, RouteContext, Strategy};
 
 /// Grid context for temporal shifting, forecast-aware routing, and
@@ -67,6 +69,14 @@ pub struct GridShiftConfig {
     /// partial batch of `Deferrable` prompts may wait for a forecast
     /// clean window instead of launching immediately.
     pub sizing: bool,
+    /// Memoize the forecaster fit per trace step (the hot-path cache).
+    /// `false` restores the refit-every-decision path — kept only for
+    /// the equivalence tests and the `bench scale` cached-vs-uncached
+    /// rows; decisions are bit-for-bit identical either way.
+    pub memoize: bool,
+    /// The per-step fit memo (a pure accelerator: clones start cold and
+    /// it never participates in a config's identity).
+    cache: ForecastCache,
 }
 
 impl GridShiftConfig {
@@ -81,6 +91,8 @@ impl GridShiftConfig {
             horizon_steps: 2 * day,
             defer: true,
             sizing: false,
+            memoize: true,
+            cache: ForecastCache::new(),
         }
     }
 
@@ -103,6 +115,45 @@ impl GridShiftConfig {
     pub fn with_sizing(mut self, sizing: bool) -> Self {
         self.sizing = sizing;
         self
+    }
+
+    pub fn with_memoize(mut self, memoize: bool) -> Self {
+        self.memoize = memoize;
+        self
+    }
+
+    /// The fitted forecast at trace step `step_now`, long enough to
+    /// index `horizon` steps ahead: `(current, forecast)` where
+    /// `current` is the observed sample at `step_now` (history ends at
+    /// `step_now` inclusive) and `forecast[j]` predicts step
+    /// `step_now + 1 + j`.
+    ///
+    /// With `memoize` the forecaster is fitted once per trace step, to
+    /// the full planning horizon, and later (shorter) requests at the
+    /// same step are served as prefixes of that one fit — bit-for-bit
+    /// what refitting at the shorter horizon returns, by the
+    /// [`crate::grid::Forecaster`] prefix-consistency contract. Without `memoize`
+    /// this refits at exactly `horizon` on every call (the pre-cache
+    /// hot path, kept for equivalence tests and `bench scale`).
+    pub fn forecast_at(&self, step_now: i64, horizon: usize) -> (f64, Arc<Vec<f64>>) {
+        if self.memoize {
+            let fit_horizon = horizon.max(self.horizon_steps).max(1);
+            return self.cache.fit(
+                self.forecaster,
+                &self.trace,
+                step_now,
+                self.lookback_steps,
+                fit_horizon,
+            );
+        }
+        let (current, forecast) = crate::grid::cache::fit_once(
+            self.forecaster,
+            &self.trace,
+            step_now,
+            self.lookback_steps,
+            horizon,
+        );
+        (current, Arc::new(forecast))
     }
 }
 
@@ -253,7 +304,7 @@ impl PlacementPolicy {
         for &i in queued {
             let p = &prompts[i];
             let deadline_s = p.slo.deadline_s()?; // interactive member: launch now
-            let est = db.cost(&cluster.devices[device], p, batch_size).e2e_s;
+            let est = db.cost_id(DeviceId(device), &cluster.devices[device], p, batch_size).e2e_s;
             est_max = est_max.max(est);
             let safety = (3.0 * batch_size as f64 * est).max(0.05 * deadline_s).max(60.0);
             bound = bound.min(p.arrival_s + deadline_s - safety);
@@ -393,7 +444,9 @@ impl PlacementPolicy {
 /// planner and the batch-sizing planner resolve through here, so the
 /// forecast indexing (`forecast[j]` predicts trace step
 /// `step_now + 1 + j` — history ends at `step_now` inclusive) lives in
-/// exactly one place.
+/// exactly one place. The fit comes from the config's per-step memo
+/// ([`GridShiftConfig::forecast_at`]), so the DES no longer refits the
+/// forecaster on every arrival.
 fn clean_window(g: &GridShiftConfig, bound: f64, run_steps: usize, now: f64) -> Option<f64> {
     if bound <= now {
         return None;
@@ -404,9 +457,8 @@ fn clean_window(g: &GridShiftConfig, bound: f64, run_steps: usize, now: f64) -> 
         return None;
     }
     let step_now = g.trace.step_of(now);
-    let history = g.trace.history(step_now, g.lookback_steps);
-    let forecast = g.forecaster.build(g.trace.steps_per_day()).forecast(&history, horizon);
-    let j = shift::best_start_step(&forecast, horizon - 1, run_steps.max(1));
+    let (_, forecast) = g.forecast_at(step_now, horizon);
+    let j = shift::best_start_step(&forecast[..horizon], horizon - 1, run_steps.max(1));
     if j == 0 {
         return None;
     }
@@ -416,7 +468,7 @@ fn clean_window(g: &GridShiftConfig, bound: f64, run_steps: usize, now: f64) -> 
 /// Cheapest estimated per-prompt occupancy across devices.
 fn min_cost_e2e(p: &Prompt, cluster: &Cluster, db: &BenchmarkDb, batch_size: usize) -> f64 {
     (0..cluster.devices.len())
-        .map(|d| db.cost(&cluster.devices[d], p, batch_size).e2e_s)
+        .map(|d| db.cost_id(DeviceId(d), &cluster.devices[d], p, batch_size).e2e_s)
         .fold(f64::MAX, f64::min)
 }
 
@@ -665,6 +717,36 @@ mod tests {
                 assert!(hi - lo <= step + 1e-9, "window spread {} > step", hi - lo);
             }
         }
+    }
+
+    #[test]
+    fn memoized_forecasts_do_not_change_the_plan() {
+        // the hot-path cache must be decision-invisible: an identical
+        // corpus plan with memoization on and off, releases included
+        let (cluster, mut prompts, db) = setup(40);
+        for p in &mut prompts {
+            p.arrival_s = 18.0 * 3600.0;
+        }
+        trace::assign_slos(&mut prompts, 0.5, 12.0 * 3600.0, 7);
+        let cached = PlacementPolicy::new(
+            "carbon-aware",
+            &cluster,
+            Some(diurnal_grid().with_sizing(true)),
+        )
+        .unwrap();
+        let refit = PlacementPolicy::new(
+            "carbon-aware",
+            &cluster,
+            Some(diurnal_grid().with_sizing(true).with_memoize(false)),
+        )
+        .unwrap();
+        let a = cached.plan_corpus(&prompts, &cluster, &db, 4, Grouping::Fifo);
+        let b = refit.plan_corpus(&prompts, &cluster, &db, 4, Grouping::Fifo);
+        assert_eq!(a.assignment, b.assignment);
+        assert_eq!(a.release_s, b.release_s, "memoization changed a release");
+        assert_eq!(a.batches, b.batches);
+        assert_eq!(a.deferred, b.deferred);
+        assert!(a.deferred > 0, "scenario must exercise the forecast path");
     }
 
     #[test]

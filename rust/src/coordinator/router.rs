@@ -30,7 +30,7 @@ use crate::grid::{ForecastKind, Forecaster};
 use crate::workload::Prompt;
 use anyhow::{anyhow, bail, Result};
 
-use super::estimator::{BenchmarkDb, CostEstimate};
+use super::estimator::{BenchmarkDb, CostEstimate, DeviceId};
 use super::policy::GridShiftConfig;
 
 /// Routing context handed to strategies.
@@ -39,6 +39,16 @@ pub struct RouteContext<'a> {
     pub db: &'a BenchmarkDb,
     /// Batch size the serving layer will use (costs are batch-dependent).
     pub batch_size: usize,
+}
+
+impl RouteContext<'_> {
+    /// Hot-path cost lookup by interned device id: O(1) indexing in the
+    /// benchmark DB's precomputed cost table, no allocation. Every
+    /// strategy prices devices through here.
+    #[inline]
+    pub fn cost(&self, d: DeviceId, p: &Prompt) -> CostEstimate {
+        self.db.cost_id(d, &self.cluster.devices[d.0], p, self.batch_size)
+    }
 }
 
 /// Live cluster view for on-arrival routing (the DES and wallclock
@@ -95,11 +105,7 @@ impl Strategy for CarbonAware {
     fn assign(&self, prompts: &[Prompt], ctx: &RouteContext) -> Vec<usize> {
         prompts
             .iter()
-            .map(|p| {
-                argmin(ctx.cluster.devices.len(), |d| {
-                    ctx.db.cost(&ctx.cluster.devices[d], p, ctx.batch_size).carbon_kg
-                })
-            })
+            .map(|p| argmin(ctx.cluster.devices.len(), |d| ctx.cost(DeviceId(d), p).carbon_kg))
             .collect()
     }
 }
@@ -121,11 +127,7 @@ impl Strategy for LatencyAware {
         // per-prompt per-device amortized cost
         let costs: Vec<Vec<f64>> = prompts
             .iter()
-            .map(|p| {
-                (0..n_dev)
-                    .map(|d| ctx.db.cost(&ctx.cluster.devices[d], p, ctx.batch_size).e2e_s)
-                    .collect()
-            })
+            .map(|p| (0..n_dev).map(|d| ctx.cost(DeviceId(d), p).e2e_s).collect())
             .collect();
         // LPT order: hardest first (by min-device cost)
         let mut order: Vec<usize> = (0..prompts.len()).collect();
@@ -148,7 +150,7 @@ impl Strategy for LatencyAware {
     /// on arrival).
     fn route_one(&self, p: &Prompt, ctx: &RouteContext, view: &OnlineView) -> usize {
         argmin(ctx.cluster.devices.len(), |d| {
-            view.backlog_s[d] + ctx.db.cost(&ctx.cluster.devices[d], p, ctx.batch_size).e2e_s
+            view.backlog_s[d] + ctx.cost(DeviceId(d), p).e2e_s
         })
     }
 }
@@ -183,7 +185,7 @@ impl Strategy for ComplexityAware {
     }
     fn assign(&self, prompts: &[Prompt], ctx: &RouteContext) -> Vec<usize> {
         // rank devices once using a reference mid-corpus prompt profile
-        let probe = |p: &Prompt, d: usize| ctx.db.cost(&ctx.cluster.devices[d], p, ctx.batch_size);
+        let probe = |p: &Prompt, d: usize| ctx.cost(DeviceId(d), p);
         prompts
             .iter()
             .map(|p| {
@@ -213,8 +215,7 @@ impl Strategy for CarbonCap {
     }
     fn assign(&self, prompts: &[Prompt], ctx: &RouteContext) -> Vec<usize> {
         let n_dev = ctx.cluster.devices.len();
-        let cost =
-            |p: &Prompt, d: usize| ctx.db.cost(&ctx.cluster.devices[d], p, ctx.batch_size);
+        let cost = |p: &Prompt, d: usize| ctx.cost(DeviceId(d), p);
         // start carbon-minimal
         let mut assign: Vec<usize> =
             prompts.iter().map(|p| argmin(n_dev, |d| cost(p, d).carbon_kg)).collect();
@@ -254,9 +255,7 @@ impl Strategy for CarbonCap {
     /// spend nothing and place carbon-minimally — the cap is honoured
     /// by construction.
     fn route_one(&self, p: &Prompt, ctx: &RouteContext, _view: &OnlineView) -> usize {
-        argmin(ctx.cluster.devices.len(), |d| {
-            ctx.db.cost(&ctx.cluster.devices[d], p, ctx.batch_size).carbon_kg
-        })
+        argmin(ctx.cluster.devices.len(), |d| ctx.cost(DeviceId(d), p).carbon_kg)
     }
 }
 
@@ -305,11 +304,7 @@ impl Strategy for ForecastCarbonAware {
 
         let costs: Vec<Vec<CostEstimate>> = prompts
             .iter()
-            .map(|p| {
-                (0..n_dev)
-                    .map(|d| ctx.db.cost(&ctx.cluster.devices[d], p, ctx.batch_size))
-                    .collect()
-            })
+            .map(|p| (0..n_dev).map(|d| ctx.cost(DeviceId(d), p)).collect())
             .collect();
         // LPT order (hardest first), then place at the cheapest
         // projected (device, start-time) carbon price
@@ -332,43 +327,40 @@ impl Strategy for ForecastCarbonAware {
         out
     }
 
-    /// Online form: one forecast per routing decision — fit on the grid
-    /// trace's history up to now, then price each device at its
-    /// projected mid-execution step (`now + backlog + e2e/2`). An
-    /// execution landing inside the current step uses the observed
+    /// Online form: price each device at its projected mid-execution
+    /// step (`now + backlog + e2e/2`) under the forecast fitted on the
+    /// grid trace's history up to now. The fit comes from the grid
+    /// context's per-step memo ([`GridShiftConfig::forecast_at`]), so
+    /// under memoization (the default) the forecaster refits once per
+    /// trace step rather than once per routing decision — same
+    /// decisions, orders of magnitude fewer fits on the DES hot path.
+    /// An execution landing inside the current step uses the observed
     /// current sample. Without a grid context this degenerates to
     /// arrival-time carbon pricing.
     fn route_one(&self, p: &Prompt, ctx: &RouteContext, view: &OnlineView) -> usize {
         let n = ctx.cluster.devices.len();
         let g = match view.grid {
             Some(g) => g,
-            None => {
-                return argmin(n, |d| {
-                    ctx.db.cost(&ctx.cluster.devices[d], p, ctx.batch_size).carbon_kg
-                })
-            }
+            None => return argmin(n, |d| ctx.cost(DeviceId(d), p).carbon_kg),
         };
         let step_now = g.trace.step_of(view.now);
-        let history = g.trace.history(step_now, g.lookback_steps);
-        let current = history.last().copied().unwrap_or(0.0);
-        let per_dev: Vec<(f64, usize)> = (0..n)
-            .map(|d| {
-                let c = ctx.db.cost(&ctx.cluster.devices[d], p, ctx.batch_size);
-                let exec_t = view.now + view.backlog_s[d] + 0.5 * c.e2e_s;
-                let ahead = (g.trace.step_of(exec_t) - step_now).max(0) as usize;
-                (c.energy_kwh, ahead.min(g.horizon_steps.max(1)))
-            })
-            .collect();
-        let max_ahead = per_dev.iter().map(|&(_, a)| a).max().unwrap_or(0);
-        let forecast = if max_ahead > 0 {
-            g.forecaster.build(g.trace.steps_per_day()).forecast(&history, max_ahead)
-        } else {
-            Vec::new()
+        let cap = g.horizon_steps.max(1);
+        // forecast steps ahead of the device's projected mid-execution
+        let ahead_of = |d: usize, c: &CostEstimate| -> usize {
+            let exec_t = view.now + view.backlog_s[d] + 0.5 * c.e2e_s;
+            ((g.trace.step_of(exec_t) - step_now).max(0) as usize).min(cap)
         };
+        // two passes over the (O(1), allocation-free) cost table rather
+        // than one pass that heap-allocates per decision: this IS the
+        // per-arrival hot path
+        let max_ahead =
+            (0..n).map(|d| ahead_of(d, &ctx.cost(DeviceId(d), p))).max().unwrap_or(0);
+        let (current, forecast) = g.forecast_at(step_now, max_ahead);
         argmin(n, |d| {
-            let (energy, ahead) = per_dev[d];
+            let c = ctx.cost(DeviceId(d), p);
+            let ahead = ahead_of(d, &c);
             let intensity = if ahead == 0 { current } else { forecast[ahead - 1] };
-            energy * intensity
+            c.energy_kwh * intensity
         })
     }
 }
@@ -696,13 +688,42 @@ mod tests {
     }
 
     #[test]
+    fn route_one_memoized_matches_refit_path() {
+        use crate::cluster::CarbonModel;
+        use crate::coordinator::policy::GridShiftConfig;
+        let (cluster, db) = setup();
+        let ps = prompts(40, 41);
+        let ctx = RouteContext { cluster: &cluster, db: &db, batch_size: 4 };
+        let trace = CarbonModel::diurnal(69.0, 0.3).to_trace(900.0);
+        let cached = GridShiftConfig::new(trace.clone(), ForecastKind::Harmonic);
+        let refit = GridShiftConfig::new(trace, ForecastKind::Harmonic).with_memoize(false);
+        let fca = build("forecast-carbon-aware", &cluster).unwrap();
+        for (k, p) in ps.iter().enumerate() {
+            // sweep across trace steps and backlogs (cache hits + misses)
+            let now = k as f64 * 1370.0;
+            let backlog = vec![(k % 5) as f64 * 60.0, (k % 3) as f64 * 240.0];
+            let a = fca.route_one(
+                p,
+                &ctx,
+                &OnlineView { backlog_s: &backlog, now, grid: Some(&cached) },
+            );
+            let b = fca.route_one(
+                p,
+                &ctx,
+                &OnlineView { backlog_s: &backlog, now, grid: Some(&refit) },
+            );
+            assert_eq!(a, b, "memoized routing diverged at prompt {k}, t={now}");
+        }
+    }
+
+    #[test]
     fn forecast_carbon_aware_prices_hours_under_diurnal_grid() {
         use crate::cluster::CarbonModel;
         // a dirty->clean step trace: queueing into the later (cleaner)
         // hours must make the strategy spread work differently than
         // arrival-time carbon-aware does
         let (mut cluster, db) = setup();
-        cluster.carbon = CarbonModel::diurnal(69.0, 0.3);
+        cluster.carbon = CarbonModel::diurnal(69.0, 0.3).into();
         let mut ps = prompts(300, 29);
         for p in &mut ps {
             p.arrival_s = 17.0 * 3600.0; // the evening ramp

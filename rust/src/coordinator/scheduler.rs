@@ -298,8 +298,8 @@ fn batch_work(
         .find(|&b| b >= batch.members.len())
         .ok_or_else(|| anyhow!("no compiled batch >= {}", batch.members.len()))?;
 
-    let texts: Vec<String> =
-        batch.members.iter().map(|&i| prompts[i].text.clone()).collect();
+    // borrow the prompt texts — generation must not copy the corpus
+    let texts: Vec<&str> = batch.members.iter().map(|&i| prompts[i].text.as_str()).collect();
     let out = crate::runtime::generate(engine, &dev.model, exec_batch, &texts, cfg.max_new_tokens)?;
 
     let work = match cfg.execution {
@@ -365,7 +365,7 @@ mod tests {
     #[test]
     fn closed_loop_deferral_saves_carbon_on_diurnal_grid() {
         let (mut cluster, mut prompts, db) = setup(80);
-        cluster.carbon = CarbonModel::diurnal(69.0, 0.3);
+        cluster.carbon = CarbonModel::diurnal(69.0, 0.3).into();
         // the whole corpus lands in the evening ramp; half of it can
         // wait up to 12 h
         for p in &mut prompts {

@@ -1,0 +1,189 @@
+//! Memoized forecaster fits for the scheduling hot path.
+//!
+//! Every plane's per-arrival decisions (deferral release planning,
+//! forecast-priced routing, carbon-aware batch sizing) consume a
+//! forecast fitted on the grid trace's history up to "now". The fit
+//! only changes when the trace window advances by a step — yet before
+//! this cache existed the policy core refitted the forecaster on every
+//! arrival, which dominated the DES hot path (a harmonic least-squares
+//! fit over two days of 15-minute samples per routing decision).
+//!
+//! [`ForecastCache`] memoizes one fit per trace step: the first request
+//! at a step fits once, to the full planning horizon, and every later
+//! request at the same step gets a cheap `Arc` clone of the same
+//! forecast vector. Callers slice the prefix they need — bit-for-bit
+//! identical to refitting at the shorter horizon, because every
+//! [`Forecaster`](super::forecast::Forecaster) is *prefix-consistent*
+//! (element `j` of a forecast does not depend on the horizon; see the
+//! trait contract and the property test pinning it for every
+//! [`ForecastKind`]).
+//!
+//! Interior mutability is a `Mutex` (not a `RefCell`) so the owning
+//! config stays `Sync`; the lock is uncontended in every plane (the DES
+//! and the closed loop are single-threaded, the server plans on the
+//! ingest thread only) and costs nanoseconds against the microseconds a
+//! refit would.
+
+use std::sync::{Arc, Mutex};
+
+use super::forecast::{ForecastKind, Forecaster};
+use super::trace::GridTrace;
+
+/// One forecaster fit, uncached: the history slice ending at
+/// `step_now`, the observed current sample (last history value, 0.0 on
+/// an empty lookback) and the forecast to exactly `horizon` steps.
+/// Both the cache's miss path and the `memoize = false` refit path in
+/// `GridShiftConfig::forecast_at` resolve through here, so the two can
+/// never drift apart.
+pub fn fit_once(
+    kind: ForecastKind,
+    trace: &GridTrace,
+    step_now: i64,
+    lookback: usize,
+    horizon: usize,
+) -> (f64, Vec<f64>) {
+    let history = trace.history(step_now, lookback);
+    let current = history.last().copied().unwrap_or(0.0);
+    let forecast = if horizon == 0 {
+        Vec::new()
+    } else {
+        kind.build(trace.steps_per_day()).forecast(&history, horizon)
+    };
+    (current, forecast)
+}
+
+/// One fit per trace step, invalidated only when the step (or the
+/// lookback window) changes. Clones start cold: the cache is a pure
+/// accelerator and never part of a configuration's identity.
+#[derive(Default)]
+pub struct ForecastCache {
+    slot: Mutex<Option<Fit>>,
+}
+
+struct Fit {
+    step: i64,
+    lookback: usize,
+    horizon: usize,
+    current: f64,
+    forecast: Arc<Vec<f64>>,
+}
+
+impl ForecastCache {
+    pub fn new() -> Self {
+        ForecastCache { slot: Mutex::new(None) }
+    }
+
+    /// The fitted forecast at trace step `step_now`: returns
+    /// `(current, forecast)` where `current` is the observed sample at
+    /// `step_now` (the last history value) and `forecast[j]` predicts
+    /// step `step_now + 1 + j`. A cached fit is reused when the step
+    /// and lookback match and its horizon covers the request; otherwise
+    /// the forecaster is refitted once at `horizon` and cached.
+    pub fn fit(
+        &self,
+        kind: ForecastKind,
+        trace: &GridTrace,
+        step_now: i64,
+        lookback: usize,
+        horizon: usize,
+    ) -> (f64, Arc<Vec<f64>>) {
+        let mut slot = self.slot.lock().unwrap();
+        if let Some(f) = slot.as_ref() {
+            if f.step == step_now && f.lookback == lookback && f.horizon >= horizon {
+                return (f.current, Arc::clone(&f.forecast));
+            }
+        }
+        let (current, forecast) = fit_once(kind, trace, step_now, lookback, horizon);
+        let forecast = Arc::new(forecast);
+        *slot = Some(Fit {
+            step: step_now,
+            lookback,
+            horizon,
+            current,
+            forecast: Arc::clone(&forecast),
+        });
+        (current, forecast)
+    }
+}
+
+/// Clones start cold: two configs sharing history would otherwise
+/// alias a lock, and a cold cache refills in one fit.
+impl Clone for ForecastCache {
+    fn clone(&self) -> Self {
+        ForecastCache::new()
+    }
+}
+
+impl std::fmt::Debug for ForecastCache {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let cached = self.slot.lock().map(|s| s.is_some()).unwrap_or(false);
+        f.debug_struct("ForecastCache").field("cached", &cached).finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::CarbonModel;
+    use crate::grid::Forecaster;
+
+    fn trace() -> GridTrace {
+        CarbonModel::diurnal(69.0, 0.3).to_trace(900.0)
+    }
+
+    #[test]
+    fn repeated_fits_at_one_step_share_the_same_vector() {
+        let cache = ForecastCache::new();
+        let t = trace();
+        let (c1, f1) = cache.fit(ForecastKind::Harmonic, &t, 70, 192, 192);
+        let (c2, f2) = cache.fit(ForecastKind::Harmonic, &t, 70, 192, 192);
+        assert_eq!(c1, c2);
+        assert!(Arc::ptr_eq(&f1, &f2), "second fit did not hit the cache");
+        // a shorter request at the same step is served from the prefix
+        let (_, f3) = cache.fit(ForecastKind::Harmonic, &t, 70, 192, 10);
+        assert!(Arc::ptr_eq(&f1, &f3));
+    }
+
+    #[test]
+    fn step_advance_invalidates() {
+        let cache = ForecastCache::new();
+        let t = trace();
+        let (_, f1) = cache.fit(ForecastKind::Harmonic, &t, 70, 192, 48);
+        let (_, f2) = cache.fit(ForecastKind::Harmonic, &t, 71, 192, 48);
+        assert!(!Arc::ptr_eq(&f1, &f2), "stale fit survived a step advance");
+        assert_ne!(f1.as_slice(), f2.as_slice());
+    }
+
+    #[test]
+    fn fit_matches_the_direct_refit_path_exactly() {
+        let cache = ForecastCache::new();
+        let t = trace();
+        for kind in ForecastKind::ALL {
+            let (current, cached) = cache.fit(kind, &t, 33, 96, 64);
+            let history = t.history(33, 96);
+            let direct = kind.build(t.steps_per_day()).forecast(&history, 64);
+            assert_eq!(*cached, direct, "{}", kind.name());
+            assert_eq!(current, *history.last().unwrap(), "{}", kind.name());
+        }
+    }
+
+    #[test]
+    fn zero_horizon_and_empty_lookback_are_safe() {
+        let cache = ForecastCache::new();
+        let t = trace();
+        let (current, f) = cache.fit(ForecastKind::Persistence, &t, 5, 0, 0);
+        assert_eq!(current, 0.0); // empty history: same 0.0 the refit path used
+        assert!(f.is_empty());
+    }
+
+    #[test]
+    fn clones_start_cold() {
+        let cache = ForecastCache::new();
+        let t = trace();
+        let (_, f1) = cache.fit(ForecastKind::Ewma, &t, 7, 96, 12);
+        let clone = cache.clone();
+        let (_, f2) = clone.fit(ForecastKind::Ewma, &t, 7, 96, 12);
+        assert!(!Arc::ptr_eq(&f1, &f2));
+        assert_eq!(*f1, *f2);
+    }
+}

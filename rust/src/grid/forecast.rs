@@ -26,6 +26,14 @@ pub trait Forecaster {
     /// Predict the `horizon` samples following `history` (oldest
     /// first). Implementations return exactly `horizon` non-negative
     /// values; an empty history yields zeros.
+    ///
+    /// **Prefix consistency (contract):** element `j` of the forecast
+    /// must not depend on `horizon` — for any `h1 <= h2`,
+    /// `forecast(history, h2)[..h1]` equals `forecast(history, h1)`
+    /// bit-for-bit. The hot-path [`super::cache::ForecastCache`] relies
+    /// on this to serve short-horizon requests from one long fit; the
+    /// property test `forecasts_are_prefix_consistent` pins it for
+    /// every [`ForecastKind`].
     fn forecast(&self, history: &[f64], horizon: usize) -> Vec<f64>;
 }
 
@@ -334,6 +342,30 @@ mod tests {
                 }
                 if out.iter().any(|v| !v.is_finite() || *v < 0.0) {
                     return Err(format!("{}: negative/non-finite forecast", kind.name()));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn forecasts_are_prefix_consistent() {
+        // the ForecastCache contract: a long fit's prefix is bitwise
+        // identical to a short fit on the same history
+        property("forecast prefixes are horizon-independent", 48, |rng: &mut Rng| {
+            let n = rng.below(200) + 1;
+            let history: Vec<f64> = (0..n).map(|_| rng.range(1.0, 200.0)).collect();
+            let h_short = rng.below(64) + 1;
+            let h_long = h_short + rng.below(128);
+            for kind in ForecastKind::ALL {
+                let f = kind.build(24);
+                let short = f.forecast(&history, h_short);
+                let long = f.forecast(&history, h_long);
+                if long[..h_short] != short[..] {
+                    return Err(format!(
+                        "{}: prefix of horizon {h_long} differs from horizon {h_short}",
+                        kind.name()
+                    ));
                 }
             }
             Ok(())

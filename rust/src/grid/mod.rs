@@ -19,7 +19,12 @@
 //!   seasonal-naive and harmonic least-squares baselines, plus
 //!   MAPE/bias scoring against held-out trace tails;
 //! - [`shift`] — the planner that turns a forecast into a start time:
-//!   cleanest feasible window within the deadline slack.
+//!   cleanest feasible window within the deadline slack;
+//! - [`cache`] — [`ForecastCache`]: the hot-path memo that fits the
+//!   forecaster once per trace step instead of once per arrival
+//!   (bit-for-bit equivalent to refitting, pinned by the
+//!   prefix-consistency property tests and the cross-plane equivalence
+//!   tests in `tests/planes.rs`).
 //!
 //! ## Deferral model
 //!
@@ -47,9 +52,11 @@
 //! schedulers (up to batching delay) and strictly positive when
 //! deferral works.
 
+pub mod cache;
 pub mod forecast;
 pub mod shift;
 pub mod trace;
 
+pub use cache::ForecastCache;
 pub use forecast::{score, ForecastKind, ForecastScore, Forecaster};
 pub use trace::{GridTrace, SyntheticTrace};

@@ -38,6 +38,30 @@
 //! the clean-window planner; the [`telemetry`] ledger audits realized
 //! savings against a run-at-arrival counterfactual in every plane.
 //!
+//! ## Hot path & benchmarking
+//!
+//! The per-arrival decision path is engineered to stay sublinear at
+//! paper-×1000 scale and is *measured*, not assumed:
+//!
+//! - **forecast memoization** — [`grid::ForecastCache`] fits the
+//!   forecaster once per trace step (instead of once per arrival) and
+//!   serves every later request at that step as a prefix of the one
+//!   fit; decisions are bit-for-bit identical to refitting
+//!   (`Forecaster` prefix-consistency contract, pinned by property
+//!   tests and the cross-plane equivalence suite in `tests/planes.rs`);
+//! - **interned device ids + dense cost table** — the benchmark DB
+//!   stores its (device, category, batch) cells as one flat vector and
+//!   strategies price devices through
+//!   `RouteContext::cost(DeviceId, ..)`: O(1) integer indexing, no
+//!   string keys or allocation per decision; the DES maintains indexed
+//!   per-device backlog counters the router reads as a slice;
+//! - **`verdant bench scale`** — the scale harness
+//!   ([`bench::scale`]): corpus sizes 1k/10k/100k × strategies through
+//!   the DES and the closed loop, reporting decisions/sec with cached
+//!   and uncached forecast rows side by side; CI archives
+//!   `BENCH_scale.json` per PR, so every future change lands against a
+//!   recorded perf trajectory.
+//!
 //! ## Layers below (Python never on the request path)
 //!
 //! - **L3 (this crate)** — everything above, plus the

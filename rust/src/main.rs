@@ -1,7 +1,7 @@
 //! Verdant CLI — the launcher.
 //!
 //! ```text
-//! verdant bench <fig1|fig2|table2|table3|sweep|ablation|load|shifting|all>
+//! verdant bench <fig1|fig2|table2|table3|sweep|ablation|load|shifting|scale|all>
 //!         [--prompts N] [--config path] [--save dir] [--json dir] [--extensions]
 //! verdant run   [--strategy S] [--batch B] [--prompts N] [--execution M]
 //!         [--seed N] [--config path]      one closed-loop run, full report
@@ -23,7 +23,9 @@ use std::path::PathBuf;
 use std::process::ExitCode;
 use std::time::Duration;
 
-use verdant::bench::{ablation, fig1, fig2, harness, load, shifting, sweep, table2, table3, Env};
+use verdant::bench::{
+    ablation, fig1, fig2, harness, load, scale, shifting, sweep, table2, table3, Env,
+};
 use verdant::cluster::Cluster;
 use verdant::config::{ExecutionMode, ExperimentConfig};
 use verdant::coordinator::{run as run_sched, GridShiftConfig, Grouping, PlacementPolicy, RunConfig};
@@ -176,7 +178,7 @@ fn dispatch(args: &[String]) -> anyhow::Result<()> {
 fn print_usage() {
     println!(
         "verdant {} — sustainability-aware LLM inference on edge clusters\n\n\
-         USAGE:\n  verdant bench <fig1|fig2|table2|table3|sweep|ablation|load|shifting|all> [--prompts N] [--save dir] [--json dir] [--extensions]\n  \
+         USAGE:\n  verdant bench <fig1|fig2|table2|table3|sweep|ablation|load|shifting|scale|all> [--prompts N] [--save dir] [--json dir] [--extensions]\n  \
          verdant run   [--strategy S] [--batch B] [--prompts N] [--execution real|calibrated|hybrid]\n  \
          verdant serve [--prompts N] [--batch B] [--strategy S] [--timeout-ms T] [--max-new N]\n  \
          verdant inspect <corpus|cluster|manifest>\n  \
@@ -239,6 +241,11 @@ fn cmd_bench(which: &str, flags: &Flags) -> anyhow::Result<()> {
     if all || which == "shifting" {
         emit(shifting::run(&env).1)?;
         emit(shifting::scores(&env).1)?;
+    }
+    // not part of `all`: sweeps its own 1k/10k/100k corpora and exists
+    // to time the hot path, not to reproduce a paper artefact
+    if which == "scale" {
+        emit(scale::run(&env, &scale::SCALE_COUNTS).1)?;
     }
     Ok(())
 }

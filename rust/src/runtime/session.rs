@@ -40,13 +40,14 @@ impl GenerationOutput {
 
 /// Greedy batched generation through the AOT artifacts.
 ///
-/// `prompts` are raw texts (byte-tokenized); their count must be
-/// ≤ the compiled batch size `batch`.
+/// `prompts` are raw texts (byte-tokenized), borrowed — callers on the
+/// serving path hand slices into their corpus without copying; their
+/// count must be ≤ the compiled batch size `batch`.
 pub fn generate(
     engine: &Engine,
     variant: &str,
     batch: usize,
-    prompts: &[String],
+    prompts: &[&str],
     max_new: usize,
 ) -> Result<GenerationOutput> {
     if prompts.is_empty() || prompts.len() > batch {

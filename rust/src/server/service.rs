@@ -244,8 +244,8 @@ pub fn serve(cluster: &Cluster, prompts: &[Prompt], opts: &ServeOptions) -> Resu
                 if items.is_empty() {
                     return Ok(());
                 }
-                let texts: Vec<String> =
-                    items.iter().map(|i| i.prompt.text.clone()).collect();
+                let texts: Vec<&str> =
+                    items.iter().map(|i| i.prompt.text.as_str()).collect();
                 let exec_batch = batches
                     .iter()
                     .copied()

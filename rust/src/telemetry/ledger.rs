@@ -19,6 +19,7 @@
 
 use crate::cluster::CarbonModel;
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 /// One device's running account.
 #[derive(Debug, Clone, Default)]
@@ -40,7 +41,10 @@ impl DeviceAccount {
 /// Cluster-wide energy/carbon ledger.
 #[derive(Debug, Clone)]
 pub struct EnergyLedger {
-    carbon: CarbonModel,
+    /// Shared by reference with the cluster — trace-backed models carry
+    /// whole intensity time series, so a ledger must never deep-clone
+    /// one per run.
+    carbon: Arc<CarbonModel>,
     accounts: BTreeMap<String, DeviceAccount>,
     /// Carbon the same batches would have emitted at their members'
     /// arrival instants (the no-shifting baseline).
@@ -50,9 +54,12 @@ pub struct EnergyLedger {
 }
 
 impl EnergyLedger {
-    pub fn new(carbon: CarbonModel) -> Self {
+    /// Open a ledger against a carbon model. Accepts either a bare
+    /// model (tests, ad-hoc accounting) or the cluster's shared
+    /// `Arc<CarbonModel>` (the planes, which only bump a refcount).
+    pub fn new(carbon: impl Into<Arc<CarbonModel>>) -> Self {
         EnergyLedger {
-            carbon,
+            carbon: carbon.into(),
             accounts: BTreeMap::new(),
             counterfactual_kg: 0.0,
             shifted_kg: 0.0,

@@ -12,6 +12,11 @@
 //! 3. **Sizing safety** — carbon-aware batch sizing never violates a
 //!    `Deferrable` deadline and never delays an `Interactive` prompt
 //!    (zero deferrable load ⇒ decision-identical to sizing off).
+//! 4. **Memoization equivalence** — the hot-path forecast cache
+//!    (`GridShiftConfig::memoize`, fitted once per trace step) produces
+//!    decisions bit-for-bit identical to refitting the forecaster on
+//!    every arrival, across synthetic diurnal and CSV-ingested traces,
+//!    every forecaster kind, and randomized SLO mixes.
 
 use verdant::cluster::{CarbonModel, Cluster};
 use verdant::config::{Arrival, ExperimentConfig};
@@ -78,7 +83,7 @@ fn grid_without_deferrable_load_changes_nothing_in_closed_loop() {
     // a time-varying grid with zero deferrable prompts must leave the
     // closed-loop plan and results untouched
     let (mut cluster, prompts, db) = setup(60);
-    cluster.carbon = CarbonModel::diurnal(69.0, 0.3);
+    cluster.carbon = CarbonModel::diurnal(69.0, 0.3).into();
     let grid =
         GridShiftConfig::from_model(&cluster.carbon, ForecastKind::Harmonic, 900.0).unwrap();
     let spatial = PlacementPolicy::spatial("latency-aware", &cluster).unwrap();
@@ -135,7 +140,7 @@ fn sizing_run(
     cfg.workload.prompts = n;
     let mut cluster = Cluster::from_config(&cfg.cluster);
     let grid_trace = CarbonModel::diurnal(69.0, 0.3).to_trace(900.0);
-    cluster.carbon = CarbonModel::from_trace(grid_trace.clone());
+    cluster.carbon = CarbonModel::from_trace(grid_trace.clone()).into();
     let mut corpus = Corpus::generate(&cfg.workload);
     trace::assign_arrivals(&mut corpus.prompts, Arrival::Open { rate }, 7);
     trace::assign_slos(&mut corpus.prompts, deferrable_frac, deadline_s, 21);
@@ -149,6 +154,104 @@ fn sizing_run(
         ..OnlineConfig::default()
     };
     run_online(&cluster, &corpus.prompts, &db, &online).unwrap()
+}
+
+/// A CSV-ingested trace (ElectricityMaps-style rows) with a clear
+/// dirty-evening / clean-midday structure — the real-world ingestion
+/// path the memoization equivalence must also hold on.
+fn csv_trace() -> verdant::grid::GridTrace {
+    let mut doc = String::from("timestamp,gCO2/kWh\n");
+    let diurnal = CarbonModel::diurnal(82.0, 0.35);
+    for k in 0..48 {
+        let t = k as f64 * 1800.0;
+        doc.push_str(&format!("{},{:.3}\n", t as i64, diurnal.intensity_at(t)));
+    }
+    verdant::grid::GridTrace::parse_csv("em-csv", &doc).expect("valid CSV trace")
+}
+
+/// DES run over an explicit grid trace with the given memoization
+/// setting — the harness for the cached-vs-refit equivalence tests.
+fn memo_run(
+    trace: &verdant::grid::GridTrace,
+    n: usize,
+    deferrable_frac: f64,
+    forecaster: ForecastKind,
+    sizing: bool,
+    memoize: bool,
+) -> verdant::coordinator::online::OnlineResult {
+    let mut cfg = ExperimentConfig::default();
+    cfg.workload.prompts = n;
+    let mut cluster = Cluster::from_config(&cfg.cluster);
+    cluster.carbon = CarbonModel::from_trace(trace.clone()).into();
+    let mut corpus = Corpus::generate(&cfg.workload);
+    trace::assign_arrivals(&mut corpus.prompts, Arrival::Open { rate: 1.0 / 240.0 }, 7);
+    trace::assign_slos(&mut corpus.prompts, deferrable_frac, 10.0 * 3600.0, 21);
+    let db = BenchmarkDb::build(&cluster, &[1, 4, 8], 2, 69.0, 1);
+    let grid = GridShiftConfig::new(trace.clone(), forecaster)
+        .with_sizing(sizing)
+        .with_memoize(memoize);
+    let online = OnlineConfig {
+        strategy: "forecast-carbon-aware".into(),
+        grid: Some(grid),
+        ..OnlineConfig::default()
+    };
+    run_online(&cluster, &corpus.prompts, &db, &online).unwrap()
+}
+
+fn assert_memo_equivalent(
+    a: &verdant::coordinator::online::OnlineResult,
+    b: &verdant::coordinator::online::OnlineResult,
+    label: &str,
+) -> Result<(), String> {
+    let checks: [(&str, f64, f64); 6] = [
+        ("span", a.span_s, b.span_s),
+        ("latency", a.latency.mean(), b.latency.mean()),
+        ("interactive", a.latency_interactive.mean(), b.latency_interactive.mean()),
+        ("deferrable", a.latency_deferrable.mean(), b.latency_deferrable.mean()),
+        ("carbon", a.ledger.total_carbon_kg(), b.ledger.total_carbon_kg()),
+        ("savings", a.ledger.realized_savings_kg(), b.ledger.realized_savings_kg()),
+    ];
+    for (what, x, y) in checks {
+        // bitwise equality: the memo claim is bit-for-bit, and an empty
+        // latency split yields NaN on both sides (NaN != NaN would lie)
+        if x.to_bits() != y.to_bits() {
+            return Err(format!("{label}: {what} diverged ({x} vs {y})"));
+        }
+    }
+    if (a.deferred, a.held_partial, a.deadline_violations)
+        != (b.deferred, b.held_partial, b.deadline_violations)
+    {
+        return Err(format!("{label}: counts diverged"));
+    }
+    Ok(())
+}
+
+#[test]
+fn forecast_memoization_is_decision_invisible_on_diurnal_and_csv_traces() {
+    // cached vs refit-every-arrival, on the synthetic diurnal trace and
+    // on a CSV-ingested trace, with sizing engaged: every observable
+    // decision metric must be bit-for-bit identical
+    let diurnal = CarbonModel::diurnal(69.0, 0.3).to_trace(900.0);
+    for (name, trace) in [("diurnal", &diurnal), ("csv", &csv_trace())] {
+        let cached = memo_run(trace, 120, 0.5, ForecastKind::Harmonic, true, true);
+        let refit = memo_run(trace, 120, 0.5, ForecastKind::Harmonic, true, false);
+        assert!(cached.deferred > 0, "{name}: nothing deferred — test has no teeth");
+        assert_memo_equivalent(&cached, &refit, name).unwrap();
+    }
+}
+
+#[test]
+fn forecast_memoization_equivalence_holds_under_randomized_conditions() {
+    // every forecaster kind, random SLO mixes, sizing on and off
+    property("memoized == refit across forecasters and SLO mixes", 8, |rng| {
+        let trace = CarbonModel::diurnal(69.0, 0.2 + rng.range(0.0, 0.2)).to_trace(900.0);
+        let frac = rng.range(0.2, 1.0);
+        let kind = ForecastKind::ALL[rng.below(4)];
+        let sizing = rng.chance(0.5);
+        let cached = memo_run(&trace, 60, frac, kind, sizing, true);
+        let refit = memo_run(&trace, 60, frac, kind, sizing, false);
+        assert_memo_equivalent(&cached, &refit, kind.name())
+    });
 }
 
 #[test]

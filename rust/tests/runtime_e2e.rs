@@ -22,7 +22,7 @@ fn engine_or_skip() -> Option<Engine> {
 fn generate_b1_produces_tokens() {
     let Some(mut e) = engine_or_skip() else { return };
     e.warmup("edge-1b-sim", &[1]).unwrap();
-    let out = generate(&e, "edge-1b-sim", 1, &["Who painted the Mona Lisa?".into()], 8).unwrap();
+    let out = generate(&e, "edge-1b-sim", 1, &["Who painted the Mona Lisa?"], 8).unwrap();
     assert_eq!(out.tokens.len(), 1);
     assert!(!out.tokens[0].is_empty());
     assert!(out.tokens[0].len() <= 8);
@@ -33,7 +33,7 @@ fn generate_b1_produces_tokens() {
 fn generate_deterministic() {
     let Some(mut e) = engine_or_skip() else { return };
     e.warmup("edge-1b-sim", &[1]).unwrap();
-    let p = vec!["What is the boiling point of water?".to_string()];
+    let p = ["What is the boiling point of water?"];
     let a = generate(&e, "edge-1b-sim", 1, &p, 6).unwrap();
     let b = generate(&e, "edge-1b-sim", 1, &p, 6).unwrap();
     assert_eq!(a.tokens, b.tokens);
@@ -43,7 +43,7 @@ fn generate_deterministic() {
 fn generate_b4_with_partial_batch() {
     let Some(mut e) = engine_or_skip() else { return };
     e.warmup("edge-1b-sim", &[4]).unwrap();
-    let prompts = vec!["First prompt".to_string(), "Second, longer prompt with more text".to_string()];
+    let prompts = ["First prompt", "Second, longer prompt with more text"];
     let out = generate(&e, "edge-1b-sim", 4, &prompts, 6).unwrap();
     assert_eq!(out.tokens.len(), 2); // dummy rows dropped
     assert!(out.tokens.iter().all(|t| !t.is_empty()));
@@ -54,12 +54,12 @@ fn batch_row_isolation() {
     // row 0's output must not depend on what else is in the batch
     let Some(mut e) = engine_or_skip() else { return };
     e.warmup("edge-1b-sim", &[4]).unwrap();
-    let solo = generate(&e, "edge-1b-sim", 4, &["The same prompt text".into()], 6).unwrap();
+    let solo = generate(&e, "edge-1b-sim", 4, &["The same prompt text"], 6).unwrap();
     let crowd = generate(
         &e,
         "edge-1b-sim",
         4,
-        &["The same prompt text".into(), "Noise A".into(), "Noise B and more".into()],
+        &["The same prompt text", "Noise A", "Noise B and more"],
         6,
     )
     .unwrap();
@@ -71,7 +71,7 @@ fn both_variants_execute() {
     let Some(mut e) = engine_or_skip() else { return };
     for v in ["edge-1b-sim", "edge-12b-sim"] {
         e.warmup(v, &[1]).unwrap();
-        let out = generate(&e, v, 1, &["Summarize this.".into()], 4).unwrap();
+        let out = generate(&e, v, 1, &["Summarize this."], 4).unwrap();
         assert!(!out.tokens[0].is_empty(), "{v}");
     }
 }
@@ -84,7 +84,7 @@ fn matches_python_reference_generation() {
     // (test_model.py) since both sides share the artifacts.
     let Some(mut e) = engine_or_skip() else { return };
     e.warmup("edge-1b-sim", &[1]).unwrap();
-    let out = generate(&e, "edge-1b-sim", 1, &["abc".into()], 5).unwrap();
+    let out = generate(&e, "edge-1b-sim", 1, &["abc"], 5).unwrap();
     assert!(out.tokens[0].iter().all(|&t| (0..256).contains(&t)));
 }
 
@@ -102,7 +102,7 @@ fn chunked_decode_matches_single_steps() {
     assert_eq!(plain.chunk_steps("edge-1b-sim", 1), None);
 
     for max_new in [3usize, 8, 20] {
-        let p = vec!["Summarize the following dialogue in two sentences.".to_string()];
+        let p = ["Summarize the following dialogue in two sentences."];
         let a = generate(&fused, "edge-1b-sim", 1, &p, max_new).unwrap();
         let b = generate(&plain, "edge-1b-sim", 1, &p, max_new).unwrap();
         assert_eq!(a.tokens, b.tokens, "max_new={max_new}");
