@@ -1,0 +1,152 @@
+#!/usr/bin/env python3
+"""CI perf-regression gate over the BENCH_scale.json trajectory.
+
+Usage:
+    bench_gate.py <baseline.json> <current.json> [--tolerance 0.25]
+
+Compares decisions/sec per (Plane, Strategy, Prompts) row of a fresh
+`verdant bench scale` run against the committed baseline and writes a
+markdown diff to $GITHUB_STEP_SUMMARY (stdout otherwise).
+
+Gated rows — the ones that can FAIL the build — are the cached
+forecast-carbon-aware DES rows (plane == "des", strategy ==
+"forecast-carbon-aware"): the hot path PR 3 optimized and the one a
+careless change is most likely to regress. Every other row is reported
+for context only, because absolute decisions/sec on shared CI runners
+is noisy; the default tolerance (25 %) absorbs normal runner variance
+on the gated rows too.
+
+Bootstrapping: a baseline containing {"bootstrap": true} (the file
+committed before the first green run) makes the gate pass and print the
+instruction to replace it with the fresh run's BENCH_scale.json.
+"""
+
+import json
+import os
+import sys
+
+GATED_PLANE = "des"
+GATED_STRATEGY = "forecast-carbon-aware"
+
+
+def load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def rows_by_key(doc):
+    out = {}
+    for row in doc.get("rows", []):
+        key = (str(row.get("Plane")), str(row.get("Strategy")), int(row.get("Prompts", 0)))
+        out[key] = row
+    return out
+
+
+def emit(summary):
+    text = "\n".join(summary) + "\n"
+    print(text)
+    step_summary = os.environ.get("GITHUB_STEP_SUMMARY")
+    if step_summary:
+        with open(step_summary, "a") as f:
+            f.write(text)
+
+
+def main(argv):
+    args = []
+    tolerance = 0.25
+    rest = list(argv[1:])
+    while rest:
+        a = rest.pop(0)
+        if a.startswith("--tolerance"):
+            if "=" in a:
+                tolerance = float(a.split("=", 1)[1])
+            elif rest:
+                tolerance = float(rest.pop(0))
+            else:
+                print(__doc__)
+                return 2
+        elif a.startswith("--"):
+            print(__doc__)
+            return 2
+        else:
+            args.append(a)
+    if len(args) != 2:
+        print(__doc__)
+        return 2
+    baseline_path, current_path = args
+
+    current = load(current_path)
+    cur = rows_by_key(current)
+    if not cur:
+        emit(["## bench-gate: FAILED", "", f"`{current_path}` contains no rows."])
+        return 1
+
+    baseline = load(baseline_path)
+    if baseline.get("bootstrap"):
+        emit(
+            [
+                "## bench-gate: baseline bootstrap",
+                "",
+                "`BENCH_baseline.json` is still the bootstrap placeholder, so this run",
+                "cannot be compared. To arm the gate, replace `rust/BENCH_baseline.json`",
+                "with this run's `BENCH_scale.json` artifact (job `bench-gate`,",
+                "artifact `bench-scale-json`) and commit it.",
+                "",
+                "Fresh rows:",
+                "",
+                "| Plane | Strategy | Prompts | Decisions/s |",
+                "|---|---|---:|---:|",
+            ]
+            + [
+                f"| {p} | {s} | {n} | {row.get('Decisions/s', '?')} |"
+                for (p, s, n), row in sorted(cur.items())
+            ]
+        )
+        return 0
+
+    base = rows_by_key(baseline)
+    lines = [
+        "## bench-gate: decisions/sec vs baseline",
+        "",
+        f"Gate: plane `{GATED_PLANE}`, strategy `{GATED_STRATEGY}` rows; "
+        f"fail below {(1 - tolerance) * 100:.0f}% of baseline.",
+        "",
+        "| Plane | Strategy | Prompts | Baseline | Current | Ratio | Gated | Verdict |",
+        "|---|---|---:|---:|---:|---:|---|---|",
+    ]
+    failures = []
+    for key in sorted(set(base) | set(cur)):
+        plane, strategy, prompts = key
+        gated = plane == GATED_PLANE and strategy == GATED_STRATEGY
+        b = base.get(key, {}).get("Decisions/s")
+        c = cur.get(key, {}).get("Decisions/s")
+        if b is None or c is None or not isinstance(b, (int, float)) or b <= 0:
+            verdict = "missing" if (b is None or c is None) else "no baseline"
+            if gated and c is None:
+                failures.append(f"{key}: gated row missing from current run")
+                verdict = "FAIL (missing)"
+            lines.append(
+                f"| {plane} | {strategy} | {prompts} | {b or '-'} | {c or '-'} | - | "
+                f"{'yes' if gated else 'no'} | {verdict} |"
+            )
+            continue
+        ratio = float(c) / float(b)
+        ok = ratio >= 1.0 - tolerance
+        verdict = "ok" if ok else ("FAIL" if gated else "regressed (ungated)")
+        if gated and not ok:
+            failures.append(
+                f"{key}: {c:.0f} vs baseline {b:.0f} decisions/s "
+                f"(ratio {ratio:.2f} < {1 - tolerance:.2f})"
+            )
+        lines.append(
+            f"| {plane} | {strategy} | {prompts} | {b:.0f} | {c:.0f} | {ratio:.2f} | "
+            f"{'yes' if gated else 'no'} | {verdict} |"
+        )
+    if failures:
+        lines += ["", "### Regressions on gated rows", ""] + [f"- {f}" for f in failures]
+    emit(lines)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

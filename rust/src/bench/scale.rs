@@ -23,7 +23,8 @@ use crate::coordinator::online::{run_online, OnlineConfig};
 use crate::coordinator::{run as run_sched, GridShiftConfig, PlacementPolicy, RunConfig};
 use crate::grid::ForecastKind;
 use crate::report::{fmt, Table};
-use crate::workload::{trace, Corpus};
+use crate::util::stats::Histogram;
+use crate::workload::{trace, Corpus, Prompt};
 
 use super::Env;
 
@@ -51,6 +52,49 @@ pub struct ScaleRow {
     /// Prompts the policy shifted past arrival (equal between the
     /// cached and uncached forecast rows — the equivalence signal).
     pub deferred: usize,
+    /// Per-decision latency percentiles in microseconds (one
+    /// route-one + release-plan pass per prompt), measured for the
+    /// on-arrival (DES) rows; `None` for the closed loop, whose
+    /// decision is a whole-corpus plan rather than per-arrival.
+    pub decide_p50_us: Option<f64>,
+    pub decide_p95_us: Option<f64>,
+    pub decide_p99_us: Option<f64>,
+}
+
+/// Sample size for the per-decision latency percentiles: enough for a
+/// stable p99 while keeping the instrumented pass a small fraction of
+/// the timed whole-plane run (at 100k prompts the uncached variant
+/// would otherwise refit the forecaster another 200k times).
+pub const PERCENTILE_SAMPLE: usize = 10_000;
+
+/// Time the on-arrival decision path prompt by prompt: one
+/// `route_arrival` + `plan_release` per prompt against an idle backlog
+/// view, into a log-bucketed histogram (10 ns .. 10 s), over the first
+/// [`PERCENTILE_SAMPLE`] prompts (arrival order — the same early trace
+/// steps for every variant). This is the per-decision latency
+/// distribution behind the DES rows' decisions/sec aggregate — the
+/// tail (p99) is what the whole-plane number hides.
+fn decision_percentiles(
+    cluster: &Cluster,
+    db: &crate::coordinator::BenchmarkDb,
+    prompts: &[Prompt],
+    strategy: &str,
+    grid: Option<GridShiftConfig>,
+    batch_size: usize,
+) -> (f64, f64, f64) {
+    let policy =
+        PlacementPolicy::new(strategy, cluster, grid).expect("bench strategies resolve");
+    let mut h = Histogram::new(1e-8, 10.0, 90);
+    let backlog = vec![0.0; cluster.devices.len()];
+    for p in &prompts[..prompts.len().min(PERCENTILE_SAMPLE)] {
+        let t0 = Instant::now();
+        let d = policy.route_arrival(p, cluster, db, batch_size, &backlog, p.arrival_s);
+        let r = policy.plan_release(p, cluster, db, batch_size, 0.0, p.arrival_s);
+        let dt = t0.elapsed().as_secs_f64();
+        std::hint::black_box((d, r));
+        h.add(dt);
+    }
+    (h.p50() * 1e6, h.p95() * 1e6, h.p99() * 1e6)
 }
 
 /// The strategy variants swept: label, strategy name, grid context.
@@ -106,6 +150,14 @@ pub fn run(env: &Env, counts: &[usize]) -> (Vec<ScaleRow>, Table) {
                 .expect("bench strategies resolve");
             let wall = t0.elapsed().as_secs_f64();
             assert_eq!(r.completed, n, "DES dropped prompts");
+            let (p50, p95, p99) = decision_percentiles(
+                &cluster,
+                &env.db,
+                &prompts,
+                &strategy,
+                grid.clone(),
+                cfg.batch_size,
+            );
             rows.push(ScaleRow {
                 plane: "des",
                 strategy: label.clone(),
@@ -113,6 +165,9 @@ pub fn run(env: &Env, counts: &[usize]) -> (Vec<ScaleRow>, Table) {
                 wall_s: wall,
                 decisions_per_s: n as f64 / wall.max(1e-9),
                 deferred: r.deferred,
+                decide_p50_us: Some(p50),
+                decide_p95_us: Some(p95),
+                decide_p99_us: Some(p99),
             });
 
             // closed-loop corpus plan + execution
@@ -130,6 +185,9 @@ pub fn run(env: &Env, counts: &[usize]) -> (Vec<ScaleRow>, Table) {
                 wall_s: wall,
                 decisions_per_s: n as f64 / wall.max(1e-9),
                 deferred: r.deferred,
+                decide_p50_us: None,
+                decide_p95_us: None,
+                decide_p99_us: None,
             });
         }
     }
@@ -137,8 +195,10 @@ pub fn run(env: &Env, counts: &[usize]) -> (Vec<ScaleRow>, Table) {
     let mut table = Table::new(
         "BENCH_scale",
         "Hot-path scale — decisions/sec by plane × strategy × corpus size",
-        &["Plane", "Strategy", "Prompts", "Wall (s)", "Decisions/s", "Deferred"],
+        &["Plane", "Strategy", "Prompts", "Wall (s)", "Decisions/s", "Deferred",
+          "Decide p50 (us)", "Decide p95 (us)", "Decide p99 (us)"],
     );
+    let us = |x: Option<f64>| x.map(|v| format!("{v:.2}")).unwrap_or_else(|| "-".into());
     for r in &rows {
         table.row(vec![
             r.plane.to_string(),
@@ -147,16 +207,22 @@ pub fn run(env: &Env, counts: &[usize]) -> (Vec<ScaleRow>, Table) {
             fmt::secs(r.wall_s),
             format!("{:.0}", r.decisions_per_s),
             r.deferred.to_string(),
+            us(r.decide_p50_us),
+            us(r.decide_p95_us),
+            us(r.decide_p99_us),
         ]);
     }
     table.note(format!(
         "arrivals over {:.0} h, {:.0}% deferrable (deadline {:.0} h), diurnal grid, \
          harmonic forecaster; decisions/s = prompts / whole-plane wall time; the \
          (uncached) rows refit the forecaster per decision — the pre-memoization \
-         hot path, decision-identical by tests/planes.rs",
+         hot path, decision-identical by tests/planes.rs; decide percentiles time \
+         one route-one + release-plan pass per prompt over the first {} prompts \
+         (DES rows only — the closed loop plans per corpus, not per arrival)",
         ARRIVAL_SPAN_S / 3600.0,
         DEFER_FRAC * 100.0,
-        DEADLINE_S / 3600.0
+        DEADLINE_S / 3600.0,
+        PERCENTILE_SAMPLE
     ));
     (rows, table)
 }
@@ -176,7 +242,22 @@ mod tests {
             assert!(r.wall_s >= 0.0);
             assert!(r.decisions_per_s > 0.0, "{}/{}", r.plane, r.strategy);
             assert_eq!(r.prompts, 60);
+            // per-decision percentiles: present, ordered and positive
+            // on the on-arrival plane; absent on the corpus plane
+            match r.plane {
+                "des" => {
+                    let (p50, p95, p99) = (
+                        r.decide_p50_us.unwrap(),
+                        r.decide_p95_us.unwrap(),
+                        r.decide_p99_us.unwrap(),
+                    );
+                    assert!(p50 > 0.0, "{}: p50 {p50}", r.strategy);
+                    assert!(p50 <= p95 + 1e-9 && p95 <= p99 + 1e-9, "{}", r.strategy);
+                }
+                _ => assert!(r.decide_p50_us.is_none()),
+            }
         }
+        assert!(table.ascii().contains("Decide p50 (us)"));
         // the memo must be decision-invisible: identical deferral
         // counts between the cached and uncached forecast rows
         for plane in ["des", "closed"] {

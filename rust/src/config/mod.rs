@@ -194,6 +194,16 @@ pub struct ServingConfig {
     /// Carbon-aware batch sizing: a free device holding only a partial
     /// batch of `Deferrable` prompts may wait for a cleaner window.
     pub carbon_sizing: bool,
+    /// Receding-horizon re-planning of held work: re-plan deferral
+    /// releases and sizing holds when the forecast drifts from the
+    /// realized trace or on the fixed cadence below. Off by default —
+    /// plan-once, bit-for-bit the pre-replan behaviour.
+    pub replan: bool,
+    /// Fixed replan cadence, seconds.
+    pub replan_interval_s: f64,
+    /// Rolling realized-vs-forecast MAPE that declares the active
+    /// forecast wrong (fraction, e.g. 0.2 = 20 %).
+    pub drift_threshold: f64,
 }
 
 /// Top-level experiment configuration.
@@ -247,6 +257,9 @@ impl Default for ExperimentConfig {
                 deferrable_deadline_s: 4.0 * 3600.0,
                 defer: true,
                 carbon_sizing: false,
+                replan: false,
+                replan_interval_s: 900.0,
+                drift_threshold: 0.2,
             },
             artifacts_dir: "artifacts".into(),
         }
@@ -376,6 +389,15 @@ impl ExperimentConfig {
             if let Some(b) = s.get("carbon_sizing").and_then(Value::as_bool) {
                 cfg.serving.carbon_sizing = b;
             }
+            if let Some(b) = s.get("replan").and_then(Value::as_bool) {
+                cfg.serving.replan = b;
+            }
+            if let Some(x) = s.get("replan_interval_s").and_then(Value::as_f64) {
+                cfg.serving.replan_interval_s = x;
+            }
+            if let Some(x) = s.get("drift_threshold").and_then(Value::as_f64) {
+                cfg.serving.drift_threshold = x;
+            }
         }
         if let Some(a) = v.get("artifacts_dir").and_then(Value::as_str) {
             cfg.artifacts_dir = a.to_string();
@@ -420,6 +442,18 @@ impl ExperimentConfig {
         }
         if self.serving.deferrable_deadline_s <= 0.0 {
             bail!("serving.deferrable_deadline_s must be positive");
+        }
+        if !(self.serving.replan_interval_s > 0.0 && self.serving.replan_interval_s.is_finite()) {
+            bail!(
+                "serving.replan_interval_s must be positive and finite, got {}",
+                self.serving.replan_interval_s
+            );
+        }
+        if !(self.serving.drift_threshold > 0.0 && self.serving.drift_threshold.is_finite()) {
+            bail!(
+                "serving.drift_threshold must be positive and finite, got {}",
+                self.serving.drift_threshold
+            );
         }
         if let Arrival::Open { rate } = self.workload.arrival {
             if rate <= 0.0 {
@@ -723,6 +757,32 @@ carbon_sizing = true
         let parse = |doc: &str| ExperimentConfig::from_value(&toml::parse(doc).unwrap());
         assert!(parse("[serving]\ndeferrable_frac = 1.5\n").is_err());
         assert!(parse("[serving]\ndeferrable_deadline_s = 0.0\n").is_err());
+    }
+
+    #[test]
+    fn replan_knobs_roundtrip_and_validate() {
+        // defaults: replan off (plan-once), sane cadence/threshold
+        let d = ExperimentConfig::default();
+        assert!(!d.serving.replan);
+        assert_eq!(d.serving.replan_interval_s, 900.0);
+        assert_eq!(d.serving.drift_threshold, 0.2);
+
+        let doc = r#"
+[serving]
+replan = true
+replan_interval_s = 1800.0
+drift_threshold = 0.35
+"#;
+        let c = ExperimentConfig::from_value(&toml::parse(doc).unwrap()).unwrap();
+        assert!(c.serving.replan);
+        assert_eq!(c.serving.replan_interval_s, 1800.0);
+        assert_eq!(c.serving.drift_threshold, 0.35);
+
+        let parse = |doc: &str| ExperimentConfig::from_value(&toml::parse(doc).unwrap());
+        assert!(parse("[serving]\nreplan_interval_s = 0.0\n").is_err());
+        assert!(parse("[serving]\nreplan_interval_s = -5.0\n").is_err());
+        assert!(parse("[serving]\ndrift_threshold = 0.0\n").is_err());
+        assert!(parse("[serving]\ndrift_threshold = -0.1\n").is_err());
     }
 
     #[test]

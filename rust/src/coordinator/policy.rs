@@ -25,7 +25,18 @@
 //!   *partial* batch of `Deferrable` prompts may wait for a forecast
 //!   clean window instead of launching immediately. Interactive traffic
 //!   always pre-empts a hold, and the hold is bounded by every member's
-//!   deadline minus a service-time safety margin.
+//!   deadline minus a service-time safety margin;
+//! - **receding-horizon re-planning** — with the `replan` knob on, a
+//!   [`crate::grid::DriftTracker`] scores the active plan's forecast
+//!   against realized trace samples online; when drift trips (or on the
+//!   fixed replan cadence) every plane re-plans its *held* work through
+//!   [`PlacementPolicy::replan_release`] /
+//!   [`PlacementPolicy::replan_batch_hold`]: a drift trigger releases
+//!   early (the promised window can no longer be trusted), a cadence
+//!   trigger re-runs the planner against the fresh fit (the hold may
+//!   move earlier or later, never past the SLO deadline bound). With
+//!   `replan` off — the default — decisions are bit-for-bit identical
+//!   to plan-once, pinned by `tests/planes.rs`.
 //!
 //! ## Equivalence guarantee
 //!
@@ -41,7 +52,7 @@ use std::sync::Arc;
 use anyhow::Result;
 
 use crate::cluster::{CarbonModel, Cluster};
-use crate::grid::{shift, ForecastCache, ForecastKind, GridTrace};
+use crate::grid::{shift, DriftTracker, ForecastCache, ForecastKind, GridTrace, ReplanTrigger};
 use crate::workload::Prompt;
 
 use super::batcher::{form_batches_ordered, Batch, Grouping};
@@ -74,16 +85,32 @@ pub struct GridShiftConfig {
     /// the equivalence tests and the `bench scale` cached-vs-uncached
     /// rows; decisions are bit-for-bit identical either way.
     pub memoize: bool,
+    /// Receding-horizon re-planning of held work. Off (the default)
+    /// keeps every plane's decisions bit-for-bit identical to
+    /// plan-once; on, held prompts and sizing-held partial batches are
+    /// re-planned whenever [`Self::replan_due`] fires.
+    pub replan: bool,
+    /// Fixed replan cadence, seconds (defaults to one trace step).
+    pub replan_interval_s: f64,
+    /// Rolling-MAPE threshold that declares the active forecast wrong
+    /// (fraction, e.g. 0.2 = 20 %).
+    pub drift_threshold: f64,
+    /// Rolling error window, trace steps.
+    pub drift_window: usize,
     /// The per-step fit memo (a pure accelerator: clones start cold and
     /// it never participates in a config's identity).
     cache: ForecastCache,
+    /// Replan bookkeeping (anchored forecast + drift monitor + cadence
+    /// clock); like the cache, clones start cold.
+    drift: DriftTracker,
 }
 
 impl GridShiftConfig {
     /// Defaults: two days of lookback, two days of horizon, deferral
-    /// on, sizing off.
+    /// on, sizing off, re-planning off (plan-once, the PR-3 baseline).
     pub fn new(trace: GridTrace, forecaster: ForecastKind) -> Self {
         let day = trace.steps_per_day();
+        let step_s = trace.step_s;
         GridShiftConfig {
             trace,
             forecaster,
@@ -92,7 +119,12 @@ impl GridShiftConfig {
             defer: true,
             sizing: false,
             memoize: true,
+            replan: false,
+            replan_interval_s: step_s,
+            drift_threshold: 0.2,
+            drift_window: 8,
             cache: ForecastCache::new(),
+            drift: DriftTracker::new(),
         }
     }
 
@@ -120,6 +152,69 @@ impl GridShiftConfig {
     pub fn with_memoize(mut self, memoize: bool) -> Self {
         self.memoize = memoize;
         self
+    }
+
+    pub fn with_replan(mut self, replan: bool) -> Self {
+        self.replan = replan;
+        self
+    }
+
+    /// Panics on a non-positive or non-finite interval — an infinite
+    /// interval would otherwise panic much later inside the DES event
+    /// queue (tick times must be finite); use a large finite value to
+    /// effectively disable the cadence.
+    pub fn with_replan_interval_s(mut self, interval_s: f64) -> Self {
+        assert!(
+            interval_s > 0.0 && interval_s.is_finite(),
+            "replan interval must be positive and finite"
+        );
+        self.replan_interval_s = interval_s;
+        self
+    }
+
+    /// Panics on a non-positive or non-finite threshold (the same
+    /// contract `DriftMonitor::new` enforces — failing here beats
+    /// failing at the first replan poll deep in the event loop).
+    pub fn with_drift_threshold(mut self, threshold: f64) -> Self {
+        assert!(
+            threshold > 0.0 && threshold.is_finite(),
+            "drift threshold must be positive and finite"
+        );
+        self.drift_threshold = threshold;
+        self
+    }
+
+    /// Panics on a zero window (same contract as `DriftMonitor::new`).
+    pub fn with_drift_window(mut self, window: usize) -> Self {
+        assert!(window >= 1, "drift window must be >= 1 step");
+        self.drift_window = window;
+        self
+    }
+
+    /// Advance the drift tracker to `now` and decide whether a replan
+    /// pass is due. `None` always when `replan` is off (one branch, no
+    /// lock — the hot path pays nothing for the feature); otherwise a
+    /// [`ReplanTrigger`] at most once per trace step for drift and once
+    /// per `replan_interval_s` for cadence. Re-anchoring uses the
+    /// memoized per-step fit, so a replan pass costs one fit.
+    pub fn replan_due(&self, now: f64) -> Option<ReplanTrigger> {
+        if !self.replan {
+            return None;
+        }
+        self.drift.check(
+            &self.trace,
+            self.drift_window,
+            self.drift_threshold,
+            self.replan_interval_s,
+            now,
+            |step| self.forecast_at(step, self.horizon_steps.max(1)).1,
+        )
+    }
+
+    /// Rolling realized-vs-forecast MAPE of the active plan (0 until
+    /// the tracker has observed a step).
+    pub fn drift_mape(&self) -> f64 {
+        self.drift.mape()
     }
 
     /// The fitted forecast at trace step `step_now`, long enough to
@@ -315,6 +410,73 @@ impl PlacementPolicy {
         let run_steps =
             ((est_max * queued.len() as f64 / g.trace.step_s).ceil() as usize).max(1);
         clean_window(g, bound, run_steps, now)
+    }
+
+    /// Receding-horizon re-plan of a *held* prompt's release at `now`.
+    ///
+    /// - [`ReplanTrigger::Drift`]: the active forecast has empirically
+    ///   diverged from the realized trace, so the promised clean window
+    ///   cannot be trusted — the cleanest *trusted* start is now
+    ///   (release early).
+    /// - [`ReplanTrigger::Cadence`]: re-run [`Self::plan_release`]
+    ///   against the fresh per-step fit. The hold may move earlier
+    ///   (the clean window evaporated in the new fit) or later (a
+    ///   cleaner window appeared), but the result obeys exactly the
+    ///   arrival-time bound: never past
+    ///   `arrival + deadline − safety`.
+    ///
+    /// Either way the returned release is `>= now` and `<= max(now,
+    /// arrival + deadline − safety)`; since replans only ever run while
+    /// the prompt is still held (`now` before the old release, which
+    /// was itself inside the bound), a replanned release can never land
+    /// past the SLO deadline — property-tested in `tests/planes.rs`.
+    ///
+    /// The *device* assignment is re-planned implicitly: held prompts
+    /// are routed at their release instant ([`Self::route_arrival`]
+    /// with live backlog in the DES and wallclock planes), so moving
+    /// the release also re-picks the device under the conditions that
+    /// will actually hold when it runs.
+    #[allow(clippy::too_many_arguments)]
+    pub fn replan_release(
+        &self,
+        trigger: ReplanTrigger,
+        p: &Prompt,
+        cluster: &Cluster,
+        db: &BenchmarkDb,
+        batch_size: usize,
+        backlog_s: f64,
+        now: f64,
+    ) -> f64 {
+        match trigger {
+            ReplanTrigger::Drift => now,
+            ReplanTrigger::Cadence => {
+                self.plan_release(p, cluster, db, batch_size, backlog_s, now)
+            }
+        }
+    }
+
+    /// Receding-horizon re-plan of a pending carbon-sizing hold: the
+    /// batch-hold analogue of [`Self::replan_release`]. A drift trigger
+    /// cancels the hold (`None` — launch now); a cadence trigger
+    /// re-runs [`Self::plan_batch_hold`] with the same deadline gates.
+    #[allow(clippy::too_many_arguments)]
+    pub fn replan_batch_hold(
+        &self,
+        trigger: ReplanTrigger,
+        cluster: &Cluster,
+        db: &BenchmarkDb,
+        prompts: &[Prompt],
+        queued: &[usize],
+        device: usize,
+        batch_size: usize,
+        now: f64,
+    ) -> Option<f64> {
+        match trigger {
+            ReplanTrigger::Drift => None,
+            ReplanTrigger::Cadence => {
+                self.plan_batch_hold(cluster, db, prompts, queued, device, batch_size, now)
+            }
+        }
     }
 
     /// The closed-loop corpus plan: route the whole corpus, plan
@@ -747,6 +909,84 @@ mod tests {
         assert_eq!(a.batches, b.batches);
         assert_eq!(a.deferred, b.deferred);
         assert!(a.deferred > 0, "scenario must exercise the forecast path");
+    }
+
+    #[test]
+    fn replan_release_obeys_the_deadline_bound_under_both_triggers() {
+        use crate::grid::ReplanTrigger;
+        use crate::util::check::property;
+        let (cluster, prompts, db) = setup(1);
+        let policy =
+            PlacementPolicy::new("carbon-aware", &cluster, Some(diurnal_grid())).unwrap();
+        let base = prompts[0].clone();
+        property("replanned release never passes the deadline", 64, |rng| {
+            let mut p = base.clone();
+            p.arrival_s = rng.range(0.0, 2.0 * 86_400.0);
+            let deadline = rng.range(1800.0, 14.0 * 3600.0);
+            p.slo = SloClass::Deferrable { deadline_s: deadline };
+            // a replan can only happen while the prompt is still held
+            let now = p.arrival_s + rng.range(0.0, deadline * 0.9);
+            for trigger in [ReplanTrigger::Drift, ReplanTrigger::Cadence] {
+                let r = policy.replan_release(trigger, &p, &cluster, &db, 4, 0.0, now);
+                if r < now - 1e-9 {
+                    return Err(format!("{trigger:?}: release {r} before now {now}"));
+                }
+                if r > p.arrival_s + deadline + 1e-9 {
+                    return Err(format!(
+                        "{trigger:?}: release {r} past deadline {}",
+                        p.arrival_s + deadline
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn drift_trigger_releases_now_and_cancels_holds() {
+        use crate::grid::ReplanTrigger;
+        let (cluster, mut prompts, db) = setup(4);
+        for p in &mut prompts {
+            p.arrival_s = 18.0 * 3600.0;
+            p.slo = SloClass::Deferrable { deadline_s: 12.0 * 3600.0 };
+        }
+        let policy = PlacementPolicy::new(
+            "carbon-aware",
+            &cluster,
+            Some(diurnal_grid().with_sizing(true)),
+        )
+        .unwrap();
+        let now = 19.0 * 3600.0;
+        // cadence keeps planning holds on the (accurate) diurnal grid...
+        let cadence = ReplanTrigger::Cadence;
+        let r = policy.replan_release(cadence, &prompts[0], &cluster, &db, 4, 0.0, now);
+        assert!(r > now, "cadence replan should keep the evening hold");
+        assert!(policy
+            .replan_batch_hold(cadence, &cluster, &db, &prompts, &[0, 1], 0, 4, now)
+            .is_some());
+        // ...while a drift trigger releases immediately
+        let drift = ReplanTrigger::Drift;
+        let r = policy.replan_release(drift, &prompts[0], &cluster, &db, 4, 0.0, now);
+        assert_eq!(r, now);
+        assert!(policy
+            .replan_batch_hold(drift, &cluster, &db, &prompts, &[0, 1], 0, 4, now)
+            .is_none());
+    }
+
+    #[test]
+    fn replan_due_is_inert_when_off_and_gated_when_on() {
+        let off = diurnal_grid();
+        assert!(!off.replan, "replan must default off");
+        assert_eq!(off.replan_due(0.0), None);
+        assert_eq!(off.replan_due(86_400.0), None);
+
+        let on = diurnal_grid().with_replan(true).with_replan_interval_s(1800.0);
+        assert_eq!(on.replan_due(0.0), None, "first call only anchors");
+        // the diurnal trace is perfectly forecastable by the harmonic
+        // fit, so drift never trips; cadence fires on the interval
+        assert_eq!(on.replan_due(900.0), None);
+        assert_eq!(on.replan_due(1800.0), Some(crate::grid::ReplanTrigger::Cadence));
+        assert_eq!(on.replan_due(1900.0), None, "cadence clock restarted");
     }
 
     #[test]

@@ -12,9 +12,16 @@
 //! clean window) rather than at arrival, and the ledger's
 //! run-at-arrival counterfactual reports the carbon saved — so
 //! Table-3-style runs can quote "saved vs run-at-arrival" alongside
-//! makespan. Under the default configuration (no grid context) the
-//! plan, and therefore every makespan and routing decision, is
-//! identical to the pre-refactor pipeline.
+//! makespan. With the grid's `replan` knob on, the executor re-plans
+//! *between batch starts* (receding horizon): right before a batch
+//! with shifted members would wait for its window, the policy's drift
+//! tracker is polled at the device's free time and any due trigger
+//! re-plans those members' releases — releasing early when the window
+//! evaporated, extending (never past the deadline bound) when a
+//! cleaner one appeared — with the moves posted to the ledger. Under
+//! the default configuration (no grid context, replan off) the plan,
+//! and therefore every makespan and routing decision, is identical to
+//! the pre-refactor pipeline.
 //!
 //! Execution modes (config::ExecutionMode):
 //! - **Calibrated** — output token counts come from the workload model;
@@ -37,7 +44,7 @@ use crate::util::rng::Rng;
 use crate::workload::Prompt;
 
 use super::batcher::{Batch, Grouping};
-use super::estimator::BenchmarkDb;
+use super::estimator::{BenchmarkDb, DeviceId};
 use super::policy::PlacementPolicy;
 
 /// Scheduler parameters for one run.
@@ -117,6 +124,9 @@ pub fn run(
     }
 
     let plan = policy.plan_corpus(prompts, cluster, db, cfg.batch_size, cfg.grouping);
+    // receding-horizon re-planning may move these between batch starts;
+    // with the knob off they stay byte-identical to the corpus plan
+    let mut release_s = plan.release_s.clone();
 
     let mut rng = cfg.stochastic_seed.map(Rng::new);
     let mut ledger = EnergyLedger::new(cluster.carbon.clone());
@@ -147,12 +157,59 @@ pub fn run(
 
     for batch in &plan.batches {
         let dev = &cluster.devices[batch.device];
+        // receding horizon: before a batch waits for its window, poll
+        // the drift tracker at the device's free time and re-plan any
+        // still-held member whose release a due trigger can improve
+        if let Some(g) = policy.grid.as_ref().filter(|g| g.replan) {
+            let now0 = busy[batch.device];
+            let held: Vec<usize> = batch
+                .members
+                .iter()
+                .copied()
+                .filter(|&i| {
+                    release_s[i] > prompts[i].arrival_s + 1e-9
+                        && release_s[i] > now0.max(prompts[i].arrival_s) + 1e-9
+                })
+                .collect();
+            if !held.is_empty() {
+                if let Some(trigger) = g.replan_due(now0) {
+                    let mut early = 0u64;
+                    let mut later = 0u64;
+                    let mut delta = 0.0f64;
+                    for &i in &held {
+                        let p = &prompts[i];
+                        let now_i = now0.max(p.arrival_s);
+                        let r = policy
+                            .replan_release(trigger, p, cluster, db, cfg.batch_size, 0.0, now_i)
+                            .max(p.arrival_s);
+                        if (r - release_s[i]).abs() <= 1e-9 {
+                            continue;
+                        }
+                        // priced on the batch's assigned device — known
+                        // here, unlike the DES where routing happens at
+                        // release (see online.rs replan_delta_kg)
+                        let kwh = db
+                            .cost_id(DeviceId(batch.device), dev, p, cfg.batch_size)
+                            .energy_kwh;
+                        delta += cluster.carbon.kg_co2e(kwh, r)
+                            - cluster.carbon.kg_co2e(kwh, release_s[i]);
+                        if r < release_s[i] {
+                            early += 1;
+                        } else {
+                            later += 1;
+                        }
+                        release_s[i] = r;
+                    }
+                    ledger.post_replan(early, later, delta);
+                }
+            }
+        }
         // a batch cannot launch before its last member arrives — or,
         // for deferred members, before their planned release window
         let ready = batch
             .members
             .iter()
-            .map(|&i| plan.release_s[i])
+            .map(|&i| release_s[i])
             .fold(0.0f64, f64::max);
         let start = busy[batch.device].max(ready);
         let (work, generated) = batch_work(dev, batch, prompts, cfg, engine)?;
@@ -390,6 +447,51 @@ mod tests {
         // the run-at-arrival counterfactual of the unshifted run is its
         // own realized carbon (everything executes near arrival)
         assert!(a.ledger.realized_savings_kg().abs() < a.ledger.total_carbon_kg() * 0.5);
+    }
+
+    #[test]
+    fn closed_loop_replan_is_inert_until_triggered_and_deterministic_when_on() {
+        let (mut cluster, mut prompts, db) = setup(60);
+        cluster.carbon = CarbonModel::diurnal(69.0, 0.3).into();
+        for p in &mut prompts {
+            p.arrival_s = 18.0 * 3600.0;
+        }
+        trace::assign_slos(&mut prompts, 0.5, 12.0 * 3600.0, 9);
+        let grid = || {
+            GridShiftConfig::from_model(&cluster.carbon, ForecastKind::Harmonic, 900.0).unwrap()
+        };
+        let cfg = RunConfig::default();
+
+        // replan on but untriggerable == replan off, bit-for-bit
+        let off = PlacementPolicy::new("carbon-aware", &cluster, Some(grid())).unwrap();
+        let inert = PlacementPolicy::new(
+            "carbon-aware",
+            &cluster,
+            Some(grid().with_replan(true).with_replan_interval_s(1e12).with_drift_threshold(1e9)),
+        )
+        .unwrap();
+        let a = run(&cluster, &prompts, &off, &db, &cfg, None).unwrap();
+        let b = run(&cluster, &prompts, &inert, &db, &cfg, None).unwrap();
+        assert!(a.deferred > 0, "scenario must defer work");
+        assert_eq!(a.makespan_s, b.makespan_s);
+        assert_eq!(a.total_carbon_kg, b.total_carbon_kg);
+        assert_eq!(b.ledger.replan_stats().released_early, 0);
+        assert_eq!(b.ledger.replan_stats().extended, 0);
+
+        // cadence replanning between batch starts is deterministic
+        // (fresh policies: the drift tracker is per-policy runtime
+        // state, so a reused instance would remember the first run)
+        let on = || {
+            PlacementPolicy::new("carbon-aware", &cluster, Some(grid().with_replan(true)))
+                .unwrap()
+        };
+        let c1 = run(&cluster, &prompts, &on(), &db, &cfg, None).unwrap();
+        let c2 = run(&cluster, &prompts, &on(), &db, &cfg, None).unwrap();
+        assert_eq!(c1.makespan_s, c2.makespan_s);
+        assert_eq!(c1.total_carbon_kg, c2.total_carbon_kg);
+        assert_eq!(c1.ledger.replan_stats(), c2.ledger.replan_stats());
+        assert_eq!(c1.metrics.len(), 60);
+        assert!(c1.deferred > 0);
     }
 
     #[test]

@@ -1,0 +1,411 @@
+//! Online realized-vs-forecast drift tracking for receding-horizon
+//! re-planning.
+//!
+//! A hold planned at arrival is only as good as the forecast it was
+//! planned against: the moment the grid trace diverges from that
+//! forecast, the promised clean window may no longer exist. This module
+//! measures that divergence *online*:
+//!
+//! - [`DriftMonitor`] keeps a rolling window of per-step forecast
+//!   errors (the forecast the active plan was built on vs the realized
+//!   trace sample) and reports rolling MAPE and signed bias. When the
+//!   MAPE exceeds a configurable threshold the monitor is *tripped* —
+//!   the active forecast is empirically wrong and holds planned on it
+//!   should not be trusted.
+//! - [`DriftTracker`] owns the per-config replan state shared by every
+//!   plane (like `grid::ForecastCache`, interior mutability behind a
+//!   `Mutex`, clones start cold): the forecast anchored at the last
+//!   (re)plan, the monitor fed one realized sample per trace step, and
+//!   the replan cadence clock. [`DriftTracker::check`] returns a
+//!   [`ReplanTrigger`] when a replan pass is due — `Drift` when the
+//!   monitor trips (at most once per trace step), `Cadence` when the
+//!   fixed replan interval elapses — and re-anchors on a fresh fit so
+//!   the next window of errors judges the *new* plan.
+//!
+//! The monitor never resets on a trip: while the grid stays divergent
+//! every new step re-trips (holds keep releasing early), and once the
+//! anomaly passes the offending errors age out of the rolling window
+//! and normal hold planning resumes on its own.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Mutex};
+
+use super::trace::GridTrace;
+
+/// Why a replan pass fired.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReplanTrigger {
+    /// Rolling forecast MAPE exceeded the drift threshold: the active
+    /// forecast is empirically wrong, so planned clean windows cannot
+    /// be trusted — held work should release.
+    Drift,
+    /// The fixed replan interval elapsed: re-run the planners against a
+    /// fresh (trusted) fit; holds may move earlier or later, never past
+    /// the SLO deadline bound.
+    Cadence,
+}
+
+/// Rolling realized-vs-forecast error over recent trace steps.
+///
+/// Fed exactly one observation per trace step (repeated or backward
+/// steps are ignored), it reports MAPE (mean |forecast − actual| /
+/// |actual|) and signed bias (mean forecast − actual, g/kWh) over the
+/// last `window` steps, and trips when the MAPE exceeds `threshold`.
+#[derive(Debug, Clone)]
+pub struct DriftMonitor {
+    window: usize,
+    threshold: f64,
+    /// Per observed step: (|err| / max(|actual|, eps), forecast − actual).
+    errors: VecDeque<(f64, f64)>,
+    last_step: Option<i64>,
+}
+
+impl DriftMonitor {
+    /// `window` in trace steps (≥ 1), `threshold` as a MAPE fraction
+    /// (e.g. 0.2 = trip when the rolling error exceeds 20 %).
+    pub fn new(window: usize, threshold: f64) -> Self {
+        assert!(window >= 1, "drift window must be >= 1 step");
+        assert!(
+            threshold > 0.0 && threshold.is_finite(),
+            "drift threshold must be positive and finite"
+        );
+        DriftMonitor { window, threshold, errors: VecDeque::new(), last_step: None }
+    }
+
+    /// Record the realized sample for `step` against what the active
+    /// plan's forecast predicted for it; returns the tripped state
+    /// after inclusion. An observation for a step already seen (or an
+    /// earlier one) is ignored and returns `false`, so a step-change
+    /// trace trips at most once per trace step no matter how often the
+    /// caller polls within the step.
+    pub fn observe(&mut self, step: i64, forecast: f64, actual: f64) -> bool {
+        if matches!(self.last_step, Some(last) if step <= last) {
+            return false;
+        }
+        self.last_step = Some(step);
+        let rel = (forecast - actual).abs() / actual.abs().max(1e-9);
+        self.errors.push_back((rel, forecast - actual));
+        while self.errors.len() > self.window {
+            self.errors.pop_front();
+        }
+        self.tripped()
+    }
+
+    /// Rolling mean absolute percentage error (0 when nothing observed).
+    pub fn mape(&self) -> f64 {
+        if self.errors.is_empty() {
+            return 0.0;
+        }
+        self.errors.iter().map(|(r, _)| r).sum::<f64>() / self.errors.len() as f64
+    }
+
+    /// Rolling mean signed error (forecast − actual), g/kWh.
+    pub fn bias(&self) -> f64 {
+        if self.errors.is_empty() {
+            return 0.0;
+        }
+        self.errors.iter().map(|(_, b)| b).sum::<f64>() / self.errors.len() as f64
+    }
+
+    /// The rolling MAPE exceeds the threshold.
+    pub fn tripped(&self) -> bool {
+        !self.errors.is_empty() && self.mape() > self.threshold
+    }
+
+    /// Observations currently in the window.
+    pub fn len(&self) -> usize {
+        self.errors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.errors.is_empty()
+    }
+
+    /// Drop all recorded errors (the step cursor is kept, so a reset
+    /// never lets one step be counted twice).
+    pub fn reset(&mut self) {
+        self.errors.clear();
+    }
+}
+
+/// Per-config replan state: the anchored plan forecast, the drift
+/// monitor, and the cadence clock. Shared by reference from every
+/// plane's decision path, so interior mutability is a `Mutex` (the same
+/// single-threaded/uncontended argument as [`super::ForecastCache`]);
+/// clones start cold — replan state is runtime bookkeeping, never part
+/// of a configuration's identity.
+pub struct DriftTracker {
+    slot: Mutex<Option<Track>>,
+}
+
+struct Track {
+    monitor: DriftMonitor,
+    /// Trace step the anchored forecast was fitted at; `anchor[j]`
+    /// predicts step `anchor_step + 1 + j`.
+    anchor_step: i64,
+    anchor: Arc<Vec<f64>>,
+    /// Last trace step fed to the monitor.
+    observed_step: i64,
+    /// Time of the last replan (or of anchoring), seconds.
+    last_replan_s: f64,
+}
+
+impl DriftTracker {
+    pub fn new() -> Self {
+        DriftTracker { slot: Mutex::new(None) }
+    }
+
+    /// Advance the tracker to `now` and decide whether a replan pass is
+    /// due. `fit` produces a fresh forecast anchored at a trace step
+    /// (the caller's memoized fit, so an anchor costs one cache hit).
+    ///
+    /// The first call only anchors and returns `None`. Later calls feed
+    /// the monitor one realized sample per trace step elapsed since the
+    /// last call (each scored against the anchored forecast), then
+    /// return `Drift` if the monitor is tripped and at least one new
+    /// step was observed (at most one drift trigger per step), else
+    /// `Cadence` if `interval_s` has elapsed since the last replan,
+    /// else `None`. Any trigger re-anchors on a fresh fit and restarts
+    /// the cadence clock. Non-monotone `now` (the closed loop replans
+    /// per-device at device-local times) never rewinds the monitor and
+    /// never fires spuriously.
+    pub fn check(
+        &self,
+        trace: &GridTrace,
+        window: usize,
+        threshold: f64,
+        interval_s: f64,
+        now: f64,
+        fit: impl FnOnce(i64) -> Arc<Vec<f64>>,
+    ) -> Option<ReplanTrigger> {
+        let mut slot = self.slot.lock().unwrap();
+        let step_now = trace.step_of(now);
+        if slot.is_none() {
+            *slot = Some(Track {
+                monitor: DriftMonitor::new(window, threshold),
+                anchor_step: step_now,
+                anchor: fit(step_now),
+                observed_step: step_now,
+                last_replan_s: now,
+            });
+            return None;
+        }
+        let t = slot.as_mut().expect("anchored above");
+        // idle-gap guard: if nothing polled the tracker for longer than
+        // the scoring window (no held work), the anchor predates every
+        // step we would now score — judging fresh reality against a
+        // stale plan would fire spurious drift triggers that dump holds
+        // planned on a perfectly good new fit. Re-anchor instead.
+        if step_now - t.observed_step > window as i64 {
+            t.monitor.reset();
+            t.anchor_step = step_now;
+            t.anchor = fit(step_now);
+            t.observed_step = step_now;
+            t.last_replan_s = now;
+            return None;
+        }
+        let mut advanced = false;
+        while t.observed_step < step_now {
+            t.observed_step += 1;
+            let actual = trace.sample_at_step(t.observed_step);
+            let j = t.observed_step - t.anchor_step - 1;
+            let predicted = if j >= 0 && !t.anchor.is_empty() {
+                // past the anchored horizon the last value stands in,
+                // matching the window-mean convention in `grid::shift`
+                t.anchor[(j as usize).min(t.anchor.len() - 1)]
+            } else {
+                actual // the anchor step itself was observed, not forecast
+            };
+            t.monitor.observe(t.observed_step, predicted, actual);
+            advanced = true;
+        }
+        let trigger = if advanced && t.monitor.tripped() {
+            Some(ReplanTrigger::Drift)
+        } else if now - t.last_replan_s >= interval_s {
+            Some(ReplanTrigger::Cadence)
+        } else {
+            None
+        };
+        if trigger.is_some() {
+            t.last_replan_s = now;
+            t.anchor_step = step_now;
+            t.anchor = fit(step_now);
+        }
+        trigger
+    }
+
+    /// Rolling MAPE of the active plan's forecast (0 before anchoring).
+    pub fn mape(&self) -> f64 {
+        self.slot.lock().unwrap().as_ref().map(|t| t.monitor.mape()).unwrap_or(0.0)
+    }
+}
+
+impl Default for DriftTracker {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Clones start cold, exactly like `ForecastCache`: replan bookkeeping
+/// must never leak between configurations.
+impl Clone for DriftTracker {
+    fn clone(&self) -> Self {
+        DriftTracker::new()
+    }
+}
+
+impl std::fmt::Debug for DriftTracker {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let anchored = self.slot.lock().map(|s| s.is_some()).unwrap_or(false);
+        f.debug_struct("DriftTracker").field("anchored", &anchored).finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_traces_give_zero_drift() {
+        // a perfect forecast of a constant signal never accumulates
+        // error, no matter how long the history runs past the window
+        let mut m = DriftMonitor::new(4, 0.2);
+        for step in 0..100 {
+            assert!(!m.observe(step, 69.0, 69.0), "tripped on a constant trace");
+        }
+        assert_eq!(m.mape(), 0.0);
+        assert_eq!(m.bias(), 0.0);
+        assert!(!m.tripped());
+        assert_eq!(m.len(), 4, "window must cap retained history");
+    }
+
+    #[test]
+    fn window_shorter_than_history_evicts_old_errors() {
+        // a burst of bad forecasts trips the monitor; once the burst
+        // ages out of the rolling window the monitor recovers
+        let mut m = DriftMonitor::new(3, 0.2);
+        for step in 0..3 {
+            m.observe(step, 100.0, 50.0); // 100 % relative error
+        }
+        assert!(m.tripped());
+        assert!(m.mape() > 0.9);
+        for step in 3..6 {
+            m.observe(step, 50.0, 50.0); // perfect again
+        }
+        assert!(!m.tripped(), "old errors must age out of the window");
+        assert_eq!(m.mape(), 0.0);
+        assert_eq!(m.len(), 3);
+    }
+
+    #[test]
+    fn step_change_trips_exactly_once_per_step() {
+        let mut m = DriftMonitor::new(2, 0.2);
+        // pre-change: forecast is right
+        assert!(!m.observe(0, 70.0, 70.0));
+        // the trace step-changes to 140 while the forecast still says 70
+        assert!(m.observe(1, 70.0, 140.0), "step change must trip");
+        // polling again within the same trace step is a no-op
+        assert!(!m.observe(1, 70.0, 140.0), "same step observed twice");
+        assert!(!m.observe(0, 70.0, 140.0), "backward step observed");
+        assert_eq!(m.len(), 2);
+        // each NEW divergent step trips again (one trip per step)
+        assert!(m.observe(2, 70.0, 140.0));
+        assert!(m.tripped());
+    }
+
+    #[test]
+    fn bias_is_signed() {
+        let mut m = DriftMonitor::new(8, 0.5);
+        m.observe(0, 80.0, 100.0); // under-forecast
+        m.observe(1, 90.0, 100.0);
+        assert!(m.bias() < 0.0, "bias {}", m.bias());
+        m.reset();
+        assert!(m.is_empty());
+        m.observe(2, 120.0, 100.0); // over-forecast
+        assert!(m.bias() > 0.0);
+        assert_eq!(m.len(), 1);
+    }
+
+    #[test]
+    fn reset_never_double_counts_a_step() {
+        let mut m = DriftMonitor::new(4, 0.2);
+        m.observe(5, 70.0, 140.0);
+        m.reset();
+        assert!(!m.observe(5, 70.0, 140.0), "reset must keep the step cursor");
+        assert!(m.is_empty());
+    }
+
+    #[test]
+    fn tracker_anchors_then_trips_on_divergence() {
+        // ground truth: flat 70 for 10 steps, then a step change to 150
+        let mut samples = vec![70.0; 10];
+        samples.extend(vec![150.0; 10]);
+        let trace = GridTrace::new("step-change", 900.0, samples);
+        let tracker = DriftTracker::new();
+        // the "plan" forecast promises flat 70 forever
+        let plan = Arc::new(vec![70.0; 20]);
+        // first call anchors only
+        assert_eq!(tracker.check(&trace, 4, 0.2, f64::INFINITY, 0.0, |_| Arc::clone(&plan)), None);
+        // advance through the flat stretch: no drift, no cadence
+        for k in 1..10 {
+            let now = k as f64 * 900.0;
+            let r = tracker.check(&trace, 4, 0.2, f64::INFINITY, now, |_| Arc::clone(&plan));
+            assert_eq!(r, None, "tripped at clean step {k}");
+        }
+        // entering the step change: realized 150 vs promised 70 -> Drift
+        let r = tracker.check(&trace, 4, 0.2, f64::INFINITY, 11.0 * 900.0, |_| Arc::clone(&plan));
+        assert_eq!(r, Some(ReplanTrigger::Drift));
+        assert!(tracker.mape() > 0.2);
+        // same step again: no new observation, no second drift trigger
+        let r = tracker.check(&trace, 4, 0.2, f64::INFINITY, 11.0 * 900.0 + 1.0, |_| {
+            Arc::clone(&plan)
+        });
+        assert_eq!(r, None);
+    }
+
+    #[test]
+    fn tracker_reanchors_after_an_idle_gap_instead_of_tripping() {
+        // flat 70 for 20 steps, then a level shift to 150 for the rest
+        let mut samples = vec![70.0; 20];
+        samples.extend(vec![150.0; 20]);
+        let trace = GridTrace::new("shift", 900.0, samples);
+        let tracker = DriftTracker::new();
+        let stale_plan = Arc::new(vec![70.0; 40]);
+        // anchor during the flat stretch, then go idle (nothing held)
+        assert_eq!(
+            tracker.check(&trace, 4, 0.2, f64::INFINITY, 0.0, |_| Arc::clone(&stale_plan)),
+            None
+        );
+        // first poll long after the level shift: the anchor predates
+        // the whole scoring window, so the tracker must re-anchor on a
+        // fresh fit rather than fire a spurious Drift trigger
+        let fresh_plan = Arc::new(vec![150.0; 40]);
+        let r = tracker.check(&trace, 4, 0.2, f64::INFINITY, 25.0 * 900.0, |_| {
+            Arc::clone(&fresh_plan)
+        });
+        assert_eq!(r, None, "stale anchor fired a spurious drift trigger");
+        assert_eq!(tracker.mape(), 0.0, "stale errors survived the re-anchor");
+        // with the fresh (accurate) anchor, later steps stay clean
+        let r = tracker.check(&trace, 4, 0.2, f64::INFINITY, 27.0 * 900.0, |_| {
+            Arc::clone(&fresh_plan)
+        });
+        assert_eq!(r, None);
+    }
+
+    #[test]
+    fn tracker_cadence_fires_on_the_interval() {
+        let trace = GridTrace::constant(69.0);
+        let tracker = DriftTracker::new();
+        let fit = || Arc::new(vec![69.0; 8]);
+        assert_eq!(tracker.check(&trace, 4, 0.2, 1800.0, 0.0, |_| fit()), None); // anchor
+        assert_eq!(tracker.check(&trace, 4, 0.2, 1800.0, 900.0, |_| fit()), None);
+        assert_eq!(
+            tracker.check(&trace, 4, 0.2, 1800.0, 1800.0, |_| fit()),
+            Some(ReplanTrigger::Cadence)
+        );
+        // the trigger restarted the cadence clock
+        assert_eq!(tracker.check(&trace, 4, 0.2, 1800.0, 2700.0, |_| fit()), None);
+        // non-monotone now (closed-loop device-local times) cannot fire
+        assert_eq!(tracker.check(&trace, 4, 0.2, 1800.0, 100.0, |_| fit()), None);
+    }
+}

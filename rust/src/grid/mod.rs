@@ -24,7 +24,12 @@
 //!   forecaster once per trace step instead of once per arrival
 //!   (bit-for-bit equivalent to refitting, pinned by the
 //!   prefix-consistency property tests and the cross-plane equivalence
-//!   tests in `tests/planes.rs`).
+//!   tests in `tests/planes.rs`);
+//! - [`drift`] — online realized-vs-forecast drift tracking
+//!   ([`DriftMonitor`]: rolling MAPE/bias over recent trace steps;
+//!   [`DriftTracker`]: the per-config replan trigger) powering
+//!   receding-horizon re-planning of held work in every plane (see
+//!   `coordinator::policy`).
 //!
 //! ## Deferral model
 //!
@@ -53,10 +58,12 @@
 //! deferral works.
 
 pub mod cache;
+pub mod drift;
 pub mod forecast;
 pub mod shift;
 pub mod trace;
 
 pub use cache::ForecastCache;
+pub use drift::{DriftMonitor, DriftTracker, ReplanTrigger};
 pub use forecast::{score, ForecastKind, ForecastScore, Forecaster};
 pub use trace::{GridTrace, SyntheticTrace};

@@ -38,6 +38,32 @@
 //! the clean-window planner; the [`telemetry`] ledger audits realized
 //! savings against a run-at-arrival counterfactual in every plane.
 //!
+//! ## Receding-horizon re-planning
+//!
+//! A hold planned at arrival goes stale the moment the grid diverges
+//! from the forecast it was planned against. With the `[serving]`
+//! `replan` knob on (off by default — plan-once, bit-for-bit the old
+//! behaviour), every plane re-plans its *held* work while it waits:
+//!
+//! - [`grid::drift`] tracks realized-vs-forecast error online — a
+//!   `DriftMonitor` rolls MAPE/bias over recent trace steps against the
+//!   forecast the active plan was built on, and a `DriftTracker` turns
+//!   that into replan triggers: **drift** (the rolling MAPE crossed
+//!   `drift_threshold` — the promised clean windows can no longer be
+//!   trusted, release held work now) and **cadence** (every
+//!   `replan_interval_s`, re-run the planners against the fresh
+//!   memoized fit — holds may move earlier or later, never past the
+//!   SLO deadline bound);
+//! - the DES re-queues held releases under epoch-guarded replan events,
+//!   the closed loop re-plans between batch starts, and the wallclock
+//!   server's ingest thread re-plans its deferral queue on a timer;
+//! - the [`telemetry`] ledger accounts every pass (`ReplanStats`:
+//!   holds released early / extended, estimated carbon delta vs the
+//!   plan replaced), and `bench shifting` ships a drift-injected trace
+//!   scenario where re-planning beats plan-once on carbon at an equal
+//!   deadline-violation count. Replan-off equivalence and the
+//!   never-past-deadline property are pinned in `tests/planes.rs`.
+//!
 //! ## Hot path & benchmarking
 //!
 //! The per-arrival decision path is engineered to stay sublinear at
@@ -57,10 +83,13 @@
 //!   per-device backlog counters the router reads as a slice;
 //! - **`verdant bench scale`** — the scale harness
 //!   ([`bench::scale`]): corpus sizes 1k/10k/100k × strategies through
-//!   the DES and the closed loop, reporting decisions/sec with cached
-//!   and uncached forecast rows side by side; CI archives
-//!   `BENCH_scale.json` per PR, so every future change lands against a
-//!   recorded perf trajectory.
+//!   the DES and the closed loop, reporting decisions/sec plus
+//!   per-decision latency percentiles (p50/p95/p99 of one
+//!   route-one + release-plan pass) with cached and uncached forecast
+//!   rows side by side; CI archives `BENCH_scale.json` per PR **and
+//!   gates on it**: the `bench-gate` job compares decisions/sec
+//!   against the committed `BENCH_baseline.json` and fails on a >25 %
+//!   regression of the cached forecast-carbon-aware DES rows.
 //!
 //! ## Layers below (Python never on the request path)
 //!

@@ -133,6 +133,17 @@ fn load_config(flags: &Flags) -> anyhow::Result<ExperimentConfig> {
     if flags.has("no-defer") {
         cfg.serving.defer = false;
     }
+    if flags.has("replan") {
+        cfg.serving.replan = true;
+    }
+    if let Some(x) = flags.get("replan-interval-s") {
+        cfg.serving.replan_interval_s = x.parse()?;
+        cfg.serving.replan = true; // tuning the cadence implies the feature
+    }
+    if let Some(x) = flags.get("drift-threshold") {
+        cfg.serving.drift_threshold = x.parse()?;
+        cfg.serving.replan = true;
+    }
     cfg.validate()?;
     Ok(cfg)
 }
@@ -151,10 +162,16 @@ fn apply_slos(cfg: &ExperimentConfig, prompts: &mut [verdant::workload::Prompt])
 }
 
 /// Grid context from the configured carbon model: present whenever the
-/// model is time-varying, honoring the `[serving]` defer/sizing knobs.
+/// model is time-varying, honoring the `[serving]` defer/sizing/replan
+/// knobs.
 fn grid_from_config(cfg: &ExperimentConfig, cluster: &Cluster) -> Option<GridShiftConfig> {
-    GridShiftConfig::from_model(&cluster.carbon, ForecastKind::Harmonic, 900.0)
-        .map(|g| g.with_defer(cfg.serving.defer).with_sizing(cfg.serving.carbon_sizing))
+    GridShiftConfig::from_model(&cluster.carbon, ForecastKind::Harmonic, 900.0).map(|g| {
+        g.with_defer(cfg.serving.defer)
+            .with_sizing(cfg.serving.carbon_sizing)
+            .with_replan(cfg.serving.replan)
+            .with_replan_interval_s(cfg.serving.replan_interval_s)
+            .with_drift_threshold(cfg.serving.drift_threshold)
+    })
 }
 
 fn dispatch(args: &[String]) -> anyhow::Result<()> {
@@ -185,8 +202,11 @@ fn print_usage() {
          verdant version\n\n\
          Common flags: --config <toml>, --seed <n>\n\
          SLO/carbon flags (run+serve): --defer-frac F, --deadline-s S, --no-defer;\n\
-         --sizing enables carbon-aware batch sizing (run + bench planes; serve defers only).\n\
-         Deferral and sizing need a time-varying [cluster.carbon] model.",
+         --sizing enables carbon-aware batch sizing (run + bench planes; serve defers only);\n\
+         --replan enables receding-horizon re-planning of held work\n\
+         (--replan-interval-s S, --drift-threshold F tune the cadence and the\n\
+         realized-vs-forecast MAPE trip point).\n\
+         Deferral, sizing and re-planning need a time-varying [cluster.carbon] model.",
         verdant::VERSION
     );
 }
@@ -241,6 +261,7 @@ fn cmd_bench(which: &str, flags: &Flags) -> anyhow::Result<()> {
     if all || which == "shifting" {
         emit(shifting::run(&env).1)?;
         emit(shifting::scores(&env).1)?;
+        emit(shifting::drift(&env).1)?;
     }
     // not part of `all`: sweeps its own 1k/10k/100k corpora and exists
     // to time the hot path, not to reproduce a paper artefact
@@ -313,6 +334,17 @@ fn cmd_run(flags: &Flags) -> anyhow::Result<()> {
             fmt::signed_pct(r.ledger.savings_frac())
         );
     }
+    let rp = r.ledger.replan_stats();
+    if rp.passes > 0 {
+        println!(
+            "  replans:                {} passes ({} released early, {} extended, \
+             delta {} kgCO2e vs plan)",
+            rp.passes,
+            rp.released_early,
+            rp.extended,
+            fmt::sci(rp.carbon_delta_kg)
+        );
+    }
     for (dev, agg) in &r.per_device {
         let share = r.share(dev);
         println!(
@@ -380,6 +412,12 @@ fn cmd_serve(flags: &Flags) -> anyhow::Result<()> {
             report.deferred,
             fmt::sci(report.est_saved_kg),
             report.deadline_violations
+        );
+    }
+    if report.replans > 0 {
+        println!(
+            "  replans:          {} passes ({} released early, {} extended)",
+            report.replans, report.replan_released_early, report.replan_extended
         );
     }
     for (dev, count) in &report.per_device {

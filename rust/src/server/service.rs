@@ -19,8 +19,14 @@
 //! a grid context the ingest thread holds `Deferrable` prompts for
 //! forecast clean windows via [`PlacementPolicy::plan_release`] —
 //! temporal shifting on the wallclock, at `time_scale` compression.
-//! Every strategy the closed-loop scheduler accepts (including
-//! `forecast-carbon-aware`) is servable here.
+//! With the grid's `replan` knob on, the ingest thread additionally
+//! re-plans its deferral queue on a timer (the policy's replan cadence
+//! clock, polled at every ingest wake-up — each arrival and each drain
+//! step): a due trigger re-runs [`PlacementPolicy::replan_release`]
+//! over every held prompt, releasing early when the planned window
+//! went stale and extending (never past the deadline bound) when a
+//! cleaner one appeared. Every strategy the closed-loop scheduler
+//! accepts (including `forecast-carbon-aware`) is servable here.
 //!
 //! Energy is not measured on the wallclock; the collector instead
 //! posts *calibrated estimates* to an [`EnergyLedger`] at virtual
@@ -96,6 +102,13 @@ pub struct ServeReport {
     /// — deadline safety is audited in virtual time via
     /// [`Self::deadline_violations`].
     pub deferred: usize,
+    /// Receding-horizon replan passes the ingest thread executed over
+    /// its deferral queue (0 with the `replan` knob off).
+    pub replans: usize,
+    /// Held prompts a replan released earlier than originally planned.
+    pub replan_released_early: usize,
+    /// Held prompts a replan extended toward a cleaner window.
+    pub replan_extended: usize,
     /// Deferrable prompts whose virtual completion missed their
     /// deadline (arrival + deadline, virtual seconds).
     pub deadline_violations: usize,
@@ -273,11 +286,16 @@ pub fn serve(cluster: &Cluster, prompts: &[Prompt], opts: &ServeOptions) -> Resu
     }
     drop(tx);
 
-    // --- ingest (this thread): replay, defer, route -------------------
+    // --- ingest (this thread): replay, defer, route, re-plan ----------
     let mut held: Vec<(f64, Prompt)> = Vec::new();
     let mut deferred = 0usize;
+    let mut replans = ReplanCounters::default();
     for p in prompts {
-        // dispatch any held prompts whose window opens before this arrival
+        // re-plan the deferral queue if the cadence/drift clock is due,
+        // then dispatch any held prompts whose window opens before this
+        // arrival
+        let now_v = started.elapsed().as_secs_f64() * opts.time_scale;
+        replan_held(&mut held, &mut replans, cluster, &db, &policy, &queues, opts, now_v);
         flush_held(&mut held, p.arrival_s, cluster, &db, &policy, &queues, opts, started);
         sleep_until_virtual(p.arrival_s, opts.time_scale, started);
         let now_v = started.elapsed().as_secs_f64() * opts.time_scale;
@@ -290,8 +308,20 @@ pub fn serve(cluster: &Cluster, prompts: &[Prompt], opts: &ServeOptions) -> Resu
             dispatch(p, cluster, &db, &policy, &queues, opts, started);
         }
     }
-    // drain the deferral queue in release order
-    flush_held(&mut held, f64::INFINITY, cluster, &db, &policy, &queues, opts, started);
+    // drain the deferral queue in release order, waking up for the next
+    // release OR the next replan tick, whichever comes first
+    while !held.is_empty() {
+        let now_v = started.elapsed().as_secs_f64() * opts.time_scale;
+        replan_held(&mut held, &mut replans, cluster, &db, &policy, &queues, opts, now_v);
+        let next_release = held.iter().map(|(r, _)| *r).fold(f64::INFINITY, f64::min);
+        let next_tick = match policy.grid.as_ref() {
+            Some(g) if g.replan => now_v + g.replan_interval_s,
+            _ => f64::INFINITY,
+        };
+        sleep_until_virtual(next_release.min(next_tick), opts.time_scale, started);
+        let now_v = started.elapsed().as_secs_f64() * opts.time_scale;
+        flush_held(&mut held, now_v, cluster, &db, &policy, &queues, opts, started);
+    }
     done.store(true, Ordering::Release);
 
     // --- collect --------------------------------------------------------
@@ -348,6 +378,9 @@ pub fn serve(cluster: &Cluster, prompts: &[Prompt], opts: &ServeOptions) -> Resu
             .map(|(d, &c)| (d.name.clone(), c))
             .collect(),
         deferred,
+        replans: replans.passes,
+        replan_released_early: replans.released_early,
+        replan_extended: replans.extended,
         deadline_violations,
         est_energy_kwh: est_active_kwh,
         est_carbon_kg,
@@ -357,10 +390,62 @@ pub fn serve(cluster: &Cluster, prompts: &[Prompt], opts: &ServeOptions) -> Resu
 
 /// Sleep the ingest thread until virtual time `due` (scaled wallclock).
 fn sleep_until_virtual(due_virtual_s: f64, time_scale: f64, started: Instant) {
+    if !due_virtual_s.is_finite() {
+        return;
+    }
     let due = due_virtual_s / time_scale;
     let elapsed = started.elapsed().as_secs_f64();
     if due > elapsed {
         std::thread::sleep(Duration::from_secs_f64(due - elapsed));
+    }
+}
+
+/// Ingest-side replan outcome counters (surfaced on [`ServeReport`]).
+#[derive(Default)]
+struct ReplanCounters {
+    passes: usize,
+    released_early: usize,
+    extended: usize,
+}
+
+/// Receding-horizon re-plan of the ingest thread's deferral queue: if
+/// the policy's drift/cadence clock says a pass is due, every held
+/// prompt's release is re-planned in place (a drift trigger releases
+/// it now; a cadence trigger re-runs the release planner against the
+/// fresh fit — never past the deadline bound).
+#[allow(clippy::too_many_arguments)]
+fn replan_held(
+    held: &mut [(f64, Prompt)],
+    counters: &mut ReplanCounters,
+    cluster: &Cluster,
+    db: &BenchmarkDb,
+    policy: &PlacementPolicy,
+    queues: &[DeviceQueue],
+    opts: &ServeOptions,
+    now_v: f64,
+) {
+    let Some(g) = policy.grid.as_ref().filter(|g| g.replan) else { return };
+    if held.is_empty() {
+        return;
+    }
+    let Some(trigger) = g.replan_due(now_v) else { return };
+    counters.passes += 1;
+    let backlog_total: f64 = queues.iter().map(|q| q.backlog_s()).sum();
+    for (r, p) in held.iter_mut() {
+        if *r <= now_v {
+            continue; // already due: flush, don't re-plan
+        }
+        let new =
+            policy.replan_release(trigger, p, cluster, db, opts.batch_size, backlog_total, now_v);
+        if (new - *r).abs() <= 1e-6 {
+            continue;
+        }
+        if new < *r {
+            counters.released_early += 1;
+        } else {
+            counters.extended += 1;
+        }
+        *r = new;
     }
 }
 

@@ -38,6 +38,27 @@ impl DeviceAccount {
     }
 }
 
+/// Outcome account of receding-horizon re-planning (see
+/// `coordinator::policy` §replan): how often the planner revisited held
+/// work, which way the holds moved, and the estimated carbon impact of
+/// the moves relative to the plan they replaced.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ReplanStats {
+    /// Replan passes executed (drift-tripped or cadence).
+    pub passes: u64,
+    /// Held prompts / sizing holds whose release moved *earlier* (the
+    /// planned clean window evaporated or lost the planner's trust).
+    pub released_early: u64,
+    /// Holds extended *later* (a cleaner window appeared — still inside
+    /// the SLO deadline bound).
+    pub extended: u64,
+    /// Estimated carbon delta of the moves vs the original plan,
+    /// kgCO2e: each moved prompt's estimated energy priced at the new
+    /// minus the old release instant. Negative = the replanner moved
+    /// work into cleaner air.
+    pub carbon_delta_kg: f64,
+}
+
 /// Cluster-wide energy/carbon ledger.
 #[derive(Debug, Clone)]
 pub struct EnergyLedger {
@@ -51,6 +72,8 @@ pub struct EnergyLedger {
     counterfactual_kg: f64,
     /// Realized carbon of the batches posted with a counterfactual.
     shifted_kg: f64,
+    /// Receding-horizon replan outcomes.
+    replan: ReplanStats,
 }
 
 impl EnergyLedger {
@@ -63,7 +86,25 @@ impl EnergyLedger {
             accounts: BTreeMap::new(),
             counterfactual_kg: 0.0,
             shifted_kg: 0.0,
+            replan: ReplanStats::default(),
         }
+    }
+
+    /// Account one receding-horizon replan pass: how many holds moved
+    /// earlier / later and the estimated carbon delta of the moves vs
+    /// the plan they replaced (negative = cleaner). A pass that found
+    /// nothing worth moving still counts (`passes` is the cadence
+    /// audit; the move counters are the outcome audit).
+    pub fn post_replan(&mut self, released_early: u64, extended: u64, carbon_delta_kg: f64) {
+        self.replan.passes += 1;
+        self.replan.released_early += released_early;
+        self.replan.extended += extended;
+        self.replan.carbon_delta_kg += carbon_delta_kg;
+    }
+
+    /// Receding-horizon replan outcomes recorded by [`Self::post_replan`].
+    pub fn replan_stats(&self) -> &ReplanStats {
+        &self.replan
     }
 
     /// Post a batch execution: `kwh` active energy on `device`,
@@ -334,6 +375,21 @@ mod tests {
         let expect = (model.intensity_at(dirty) - model.intensity_at(clean))
             / model.intensity_at(dirty);
         assert!((l.savings_frac() - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn replan_stats_accumulate_and_default_to_zero() {
+        let mut l = EnergyLedger::new(CarbonModel::constant(69.0));
+        assert_eq!(*l.replan_stats(), ReplanStats::default());
+        l.post_replan(2, 1, -3e-5);
+        l.post_replan(0, 0, 0.0); // an empty pass still counts
+        let s = l.replan_stats();
+        assert_eq!(s.passes, 2);
+        assert_eq!(s.released_early, 2);
+        assert_eq!(s.extended, 1);
+        assert!((s.carbon_delta_kg + 3e-5).abs() < 1e-15);
+        // replan accounting never touches the energy/carbon books
+        assert_eq!(l.totals(), (0.0, 0.0, 0.0));
     }
 
     #[test]

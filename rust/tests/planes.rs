@@ -17,6 +17,13 @@
 //!    decisions bit-for-bit identical to refitting the forecaster on
 //!    every arrival, across synthetic diurnal and CSV-ingested traces,
 //!    every forecaster kind, and randomized SLO mixes.
+//! 5. **Replan-off equivalence & replan safety** — with the `replan`
+//!    knob off (the default) every plane's decisions are bit-for-bit
+//!    identical to the plan-once baseline; with replan on, held work is
+//!    only ever released inside its SLO deadline bound (property-tested
+//!    over randomized drift-injected traces), and on a drift-injected
+//!    trace re-planning beats plan-once on carbon at an equal
+//!    deadline-violation count.
 
 use verdant::cluster::{CarbonModel, Cluster};
 use verdant::config::{Arrival, ExperimentConfig};
@@ -251,6 +258,171 @@ fn forecast_memoization_equivalence_holds_under_randomized_conditions() {
         let cached = memo_run(&trace, 60, frac, kind, sizing, true);
         let refit = memo_run(&trace, 60, frac, kind, sizing, false);
         assert_memo_equivalent(&cached, &refit, kind.name())
+    });
+}
+
+/// A drift-injected ground truth for replan tests: clean diurnal days,
+/// then an intensity ramp (`magnitude` g/kWh over three hours starting
+/// at `start_h`, held for `hold_h` more) that no forecaster fitted on
+/// the clean history can predict.
+fn ramp_trace(start_h: f64, magnitude: f64, hold_h: f64) -> verdant::grid::GridTrace {
+    let diurnal = CarbonModel::diurnal(69.0, 0.3);
+    verdant::grid::GridTrace::from_fn("ramp", 900.0, 5 * 96, move |t| {
+        let h = t / 3600.0;
+        let base = diurnal.intensity_at(t);
+        if h >= start_h && h < start_h + 3.0 + hold_h {
+            base + magnitude * ((h - start_h) / 3.0).min(1.0)
+        } else {
+            base
+        }
+    })
+}
+
+/// DES run on a drift trace with arrivals bursting at `arrive_h`, all
+/// deferral knobs from the arguments — the shared harness of the
+/// replan-off pin, the replan-wins test and the deadline property.
+fn replan_run(
+    trace: &verdant::grid::GridTrace,
+    n: usize,
+    arrive_h: f64,
+    frac: f64,
+    deadline_s: f64,
+    replan: Option<(f64, f64)>, // (interval_s, drift_threshold)
+) -> verdant::coordinator::online::OnlineResult {
+    let mut cfg = ExperimentConfig::default();
+    cfg.workload.prompts = n;
+    let mut cluster = Cluster::from_config(&cfg.cluster);
+    cluster.carbon = CarbonModel::from_trace(trace.clone()).into();
+    let mut corpus = Corpus::generate(&cfg.workload);
+    trace::assign_arrivals(&mut corpus.prompts, Arrival::Open { rate: n as f64 / 7200.0 }, 7);
+    for p in &mut corpus.prompts {
+        p.arrival_s += arrive_h * 3600.0;
+    }
+    trace::assign_slos(&mut corpus.prompts, frac, deadline_s, 21);
+    let db = BenchmarkDb::build(&cluster, &[1, 4, 8], 2, 69.0, 1);
+    let mut grid = GridShiftConfig::new(trace.clone(), ForecastKind::Harmonic);
+    if let Some((interval, threshold)) = replan {
+        grid = grid
+            .with_replan(true)
+            .with_replan_interval_s(interval)
+            .with_drift_threshold(threshold);
+    }
+    let online = OnlineConfig {
+        strategy: "forecast-carbon-aware".into(),
+        grid: Some(grid),
+        ..OnlineConfig::default()
+    };
+    run_online(&cluster, &corpus.prompts, &db, &online).unwrap()
+}
+
+#[test]
+fn replan_off_is_bit_for_bit_plan_once_across_planes() {
+    // the replan machinery (epoch-guarded releases, held-map, tick
+    // chain, drift tracker plumbing) must be invisible until triggered:
+    // replan ON with unreachable cadence/threshold == replan OFF,
+    // bit for bit, in the DES and the closed loop alike
+    let trace = ramp_trace(71.0, 120.0, 3.0);
+    let off = replan_run(&trace, 120, 66.0, 0.6, 10.0 * 3600.0, None);
+    let inert = replan_run(&trace, 120, 66.0, 0.6, 10.0 * 3600.0, Some((1e11, 1e9)));
+    assert!(off.deferred > 0, "scenario must hold work");
+    assert_eq!(off.span_s, inert.span_s);
+    assert_eq!(off.deferred, inert.deferred);
+    assert_eq!(off.deadline_violations, inert.deadline_violations);
+    assert_eq!(off.latency.mean().to_bits(), inert.latency.mean().to_bits());
+    assert_eq!(off.ledger.totals(), inert.ledger.totals());
+    assert_eq!(
+        off.ledger.realized_savings_kg().to_bits(),
+        inert.ledger.realized_savings_kg().to_bits()
+    );
+    assert_eq!(inert.ledger.replan_stats().released_early, 0);
+    assert_eq!(inert.ledger.replan_stats().extended, 0);
+
+    // closed loop: same claim through the scheduler
+    let mut cfg = ExperimentConfig::default();
+    cfg.workload.prompts = 60;
+    let mut cluster = Cluster::from_config(&cfg.cluster);
+    cluster.carbon = CarbonModel::from_trace(trace.clone()).into();
+    let mut corpus = Corpus::generate(&cfg.workload);
+    for p in &mut corpus.prompts {
+        p.arrival_s = 66.0 * 3600.0;
+    }
+    trace::assign_slos(&mut corpus.prompts, 0.6, 10.0 * 3600.0, 21);
+    let db = BenchmarkDb::build(&cluster, &[1, 4, 8], 2, 69.0, 1);
+    let spatial_off = PlacementPolicy::new(
+        "carbon-aware",
+        &cluster,
+        Some(GridShiftConfig::new(trace.clone(), ForecastKind::Harmonic)),
+    )
+    .unwrap();
+    let spatial_inert = PlacementPolicy::new(
+        "carbon-aware",
+        &cluster,
+        Some(
+            GridShiftConfig::new(trace.clone(), ForecastKind::Harmonic)
+                .with_replan(true)
+                .with_replan_interval_s(1e11)
+                .with_drift_threshold(1e9),
+        ),
+    )
+    .unwrap();
+    let run_cfg = RunConfig::default();
+    let a = run(&cluster, &corpus.prompts, &spatial_off, &db, &run_cfg, None).unwrap();
+    let b = run(&cluster, &corpus.prompts, &spatial_inert, &db, &run_cfg, None).unwrap();
+    assert!(a.deferred > 0);
+    assert_eq!(a.makespan_s, b.makespan_s);
+    assert_eq!(a.total_carbon_kg, b.total_carbon_kg);
+    assert_eq!(b.ledger.replan_stats().released_early, 0);
+}
+
+#[test]
+fn replanning_beats_plan_once_on_a_drift_injected_trace() {
+    // arrivals at 66 h hold for the promised overnight window; the ramp
+    // from 71 h wipes it out. Plan-once releases into the ramp; the
+    // drift monitor trips and releases early — lower carbon at the same
+    // (zero) deadline-violation count.
+    let trace = ramp_trace(71.0, 120.0, 3.0);
+    let once = replan_run(&trace, 160, 66.0, 0.6, 10.0 * 3600.0, None);
+    let re = replan_run(&trace, 160, 66.0, 0.6, 10.0 * 3600.0, Some((900.0, 0.2)));
+    assert_eq!(once.completed, 160);
+    assert_eq!(re.completed, 160);
+    assert!(once.deferred > 0, "plan-once must hold work into the phantom window");
+    let stats = re.ledger.replan_stats();
+    assert!(stats.passes > 0, "no replan pass fired");
+    assert!(stats.released_early > 0, "drift never released a hold early");
+    assert_eq!(once.deadline_violations, 0);
+    assert_eq!(re.deadline_violations, 0);
+    let (_, _, once_kg) = once.ledger.totals();
+    let (_, _, re_kg) = re.ledger.totals();
+    assert!(re_kg < once_kg, "replan {re_kg} vs plan-once {once_kg}");
+}
+
+#[test]
+fn replan_never_releases_past_the_slo_deadline() {
+    // randomized drift scenarios: ramps of random onset/height, random
+    // deferrable mixes, deadlines and replan cadences — a replanned
+    // release may move either way but a deferrable prompt never
+    // completes past its deadline and the corpus always completes
+    property("replan honours SLO deadlines", 8, |rng| {
+        let start_h = 68.0 + rng.range(0.0, 8.0);
+        let magnitude = rng.range(40.0, 200.0);
+        let hold_h = rng.range(0.0, 4.0);
+        let trace = ramp_trace(start_h, magnitude, hold_h);
+        let frac = rng.range(0.2, 1.0);
+        let deadline = rng.range(3600.0, 12.0 * 3600.0);
+        let interval = rng.range(900.0, 3600.0);
+        let threshold = rng.range(0.05, 0.5);
+        let r = replan_run(&trace, 60, 66.0, frac, deadline, Some((interval, threshold)));
+        if r.completed != 60 {
+            return Err(format!("only {} of 60 completed", r.completed));
+        }
+        if r.deadline_violations != 0 {
+            return Err(format!(
+                "{} deadline violations (ramp@{start_h:.1}h +{magnitude:.0}, frac {frac:.2}, \
+                 deadline {deadline:.0}s, interval {interval:.0}s, threshold {threshold:.2})",
+                r.deadline_violations
+            ));
+        }
+        Ok(())
     });
 }
 
