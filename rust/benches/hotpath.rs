@@ -12,6 +12,7 @@ use verdant::coordinator::{
     Strategy,
 };
 use verdant::grid::ForecastKind;
+use verdant::runtime::{CalibratedBackend, InferenceBackend};
 use verdant::simulator::{simulate_batch, BatchWork, EventQueue};
 
 fn main() {
@@ -72,6 +73,20 @@ fn main() {
     });
     harness::report(&r);
 
+    // the stub backend the wallclock plane batches through in `bench
+    // scale` / CI: its per-batch synthesis cost must stay negligible
+    // next to the scheduling work it unblocks
+    let stub = CalibratedBackend::from_cluster(&env.cluster);
+    let stub_prompts: Vec<&str> = env.prompts[..4].iter().map(|p| p.text.as_str()).collect();
+    let r = harness::bench("backend/stub/generate-b4", 5, 5_000, || {
+        stub.generate("edge-1b-sim", 4, &stub_prompts, 16).unwrap()
+    });
+    harness::report(&r);
+    let r = harness::bench("backend/stub/pick-batch", 10, 100_000, || {
+        stub.pick_batch("edge-1b-sim", 3)
+    });
+    harness::report(&r);
+
     let r = harness::bench("event-queue/push+pop 10k", 3, 200, || {
         let mut q = EventQueue::new();
         for i in 0..10_000u32 {
@@ -89,25 +104,31 @@ fn main() {
     let artifacts = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if artifacts.join("manifest.json").exists() {
         harness::group("PJRT request path (edge-1b-sim)");
-        let mut engine = verdant::runtime::Engine::load(&artifacts).unwrap();
-        engine.warmup("edge-1b-sim", &[1, 4]).unwrap();
+        // through the backend trait, exactly as the planes now call it
+        // — any dispatch overhead shows up against the old direct rows
+        let pjrt = verdant::runtime::PjrtBackend::load(&artifacts, &["edge-1b-sim"]).unwrap();
 
         let prompts_b1 = ["Who painted the Mona Lisa?"];
-        let r = harness::bench("pjrt/generate/b1/8-new-tokens", 2, 20, || {
-            verdant::runtime::generate(&engine, "edge-1b-sim", 1, &prompts_b1, 8).unwrap()
+        let r = harness::bench("backend/pjrt/generate/b1/8-new-tokens", 2, 20, || {
+            pjrt.generate("edge-1b-sim", 1, &prompts_b1, 8).unwrap()
         });
         harness::report(&r);
 
-        let r = harness::bench("pjrt/generate/b1/32-new-tokens", 2, 10, || {
-            verdant::runtime::generate(&engine, "edge-1b-sim", 1, &prompts_b1, 32).unwrap()
+        let r = harness::bench("backend/pjrt/generate/b1/32-new-tokens", 2, 10, || {
+            pjrt.generate("edge-1b-sim", 1, &prompts_b1, 32).unwrap()
         });
         harness::report(&r);
 
         let owned_b4: Vec<String> =
             (0..4).map(|i| format!("Edge prompt number {i} with some body text")).collect();
         let prompts_b4: Vec<&str> = owned_b4.iter().map(String::as_str).collect();
-        let r = harness::bench("pjrt/generate/b4/8-new-tokens", 2, 10, || {
-            verdant::runtime::generate(&engine, "edge-1b-sim", 4, &prompts_b4, 8).unwrap()
+        let r = harness::bench("backend/pjrt/generate/b4/8-new-tokens", 2, 10, || {
+            pjrt.generate("edge-1b-sim", 4, &prompts_b4, 8).unwrap()
+        });
+        harness::report(&r);
+
+        let r = harness::bench("pjrt/generate/b1/8-new-tokens (direct session)", 2, 20, || {
+            verdant::runtime::generate(pjrt.engine(), "edge-1b-sim", 1, &prompts_b1, 8).unwrap()
         });
         harness::report(&r);
     } else {

@@ -16,9 +16,19 @@ for context only, because absolute decisions/sec on shared CI runners
 is noisy; the default tolerance (25 %) absorbs normal runner variance
 on the gated rows too.
 
-Bootstrapping: a baseline containing {"bootstrap": true} (the file
-committed before the first green run) makes the gate pass and print the
-instruction to replace it with the fresh run's BENCH_scale.json.
+Rows present in the current run but absent from the baseline (e.g. the
+server-plane rows added after the baseline was committed) are WARNED
+about, never failed: a new plane or strategy must be able to land
+before the baseline knows it exists. They start being compared the
+next time the baseline is re-armed.
+
+Bootstrapping / (re-)arming the baseline: a baseline containing
+{"bootstrap": true} (the placeholder committed before the first green
+run) makes the gate pass and print these instructions. To arm — or to
+pick up rows newer than the current baseline — download the
+`bench-scale-json` artifact from a green run of the `bench-gate` job,
+copy its `BENCH_scale.json` over `rust/BENCH_baseline.json`, and commit
+it. From then on the gate compares every row the baseline contains.
 """
 
 import json
@@ -115,13 +125,22 @@ def main(argv):
         "|---|---|---:|---:|---:|---:|---|---|",
     ]
     failures = []
+    new_rows = []
     for key in sorted(set(base) | set(cur)):
         plane, strategy, prompts = key
         gated = plane == GATED_PLANE and strategy == GATED_STRATEGY
         b = base.get(key, {}).get("Decisions/s")
         c = cur.get(key, {}).get("Decisions/s")
         if b is None or c is None or not isinstance(b, (int, float)) or b <= 0:
-            verdict = "missing" if (b is None or c is None) else "no baseline"
+            if key not in base:
+                # a row the baseline predates (new plane/strategy):
+                # warn, never fail — re-arm the baseline to gate it
+                verdict = "new (no baseline yet)"
+                new_rows.append(key)
+            elif c is None:
+                verdict = "missing from current run"
+            else:
+                verdict = "no baseline"
             if gated and c is None:
                 failures.append(f"{key}: gated row missing from current run")
                 verdict = "FAIL (missing)"
@@ -142,6 +161,14 @@ def main(argv):
             f"| {plane} | {strategy} | {prompts} | {b:.0f} | {c:.0f} | {ratio:.2f} | "
             f"{'yes' if gated else 'no'} | {verdict} |"
         )
+    if new_rows:
+        lines += [
+            "",
+            f"WARNING: {len(new_rows)} row(s) have no baseline entry yet "
+            "(new plane or strategy). They pass unconditionally; re-arm "
+            "`rust/BENCH_baseline.json` from this run's `bench-scale-json` "
+            "artifact to start gating them.",
+        ]
     if failures:
         lines += ["", "### Regressions on gated rows", ""] + [f"- {f}" for f in failures]
     emit(lines)

@@ -14,15 +14,26 @@
 //! the identical `deferred` counts, its decision-equivalence — visible
 //! in the same table. Decision equivalence is pinned bit-for-bit by
 //! `tests/planes.rs`; this harness only has to prove the speed.
+//!
+//! With the engine swappable for the stub backend, the **wallclock
+//! server** finally joins the table: `plane == "server"` rows run the
+//! full threaded serving loop (`server::serve` under
+//! `--execution stub`) over the 1k and 10k corpora with a heavily
+//! compressed arrival replay — wall time, decisions/sec and deferrals
+//! alongside the DES and closed-loop rows, so all three planes share
+//! one perf trajectory. (100k is DES/closed-loop only: the wallclock
+//! replay's real sleeps would dominate the measurement.)
 
-use std::time::Instant;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use crate::cluster::{CarbonModel, Cluster};
-use crate::config::Arrival;
+use crate::config::{Arrival, ExecutionMode};
 use crate::coordinator::online::{run_online, OnlineConfig};
 use crate::coordinator::{run as run_sched, GridShiftConfig, PlacementPolicy, RunConfig};
 use crate::grid::ForecastKind;
 use crate::report::{fmt, Table};
+use crate::server::{serve, ServeOptions};
 use crate::util::stats::Histogram;
 use crate::workload::{trace, Corpus, Prompt};
 
@@ -30,6 +41,18 @@ use super::Env;
 
 /// Corpus sizes swept by `verdant bench scale`.
 pub const SCALE_COUNTS: [usize; 3] = [1_000, 10_000, 100_000];
+
+/// Largest corpus the wallclock server rows run (the arrival replay is
+/// real wall time even compressed; 100k would measure sleeping).
+pub const SERVER_MAX_PROMPTS: usize = 10_000;
+
+/// Virtual-seconds-per-wallclock-second compression for the server
+/// rows. The ~28 h of virtual time (18 h arrival span + deferral
+/// drain) replays as a fixed ~50 ms wall-time floor at this
+/// compression — small against the 10k rows' scheduling work, but a
+/// visible fraction of the 1k rows', so trend comparisons should lean
+/// on the 10k server rows (the note on the table says so too).
+pub const SERVER_TIME_SCALE: f64 = 2_000_000.0;
 
 /// Arrival window the corpus is spread over (18 h of one day) and the
 /// SLO marking, mirroring `bench shifting` so the planner has real
@@ -41,7 +64,8 @@ pub const DEADLINE_S: f64 = 10.0 * 3600.0;
 /// One timed run.
 #[derive(Debug, Clone)]
 pub struct ScaleRow {
-    /// Execution plane: "des" (open loop) or "closed" (corpus plan).
+    /// Execution plane: "des" (open loop), "closed" (corpus plan) or
+    /// "server" (the threaded wallclock loop on the stub backend).
     pub plane: &'static str,
     /// Strategy label (the uncached forecast variant is marked).
     pub strategy: String,
@@ -171,7 +195,7 @@ pub fn run(env: &Env, counts: &[usize]) -> (Vec<ScaleRow>, Table) {
             });
 
             // closed-loop corpus plan + execution
-            let policy = PlacementPolicy::new(&strategy, &cluster, grid)
+            let policy = PlacementPolicy::new(&strategy, &cluster, grid.clone())
                 .expect("bench strategies resolve");
             let t0 = Instant::now();
             let r = run_sched(&cluster, &prompts, &policy, &env.db, &RunConfig::default(), None)
@@ -180,7 +204,7 @@ pub fn run(env: &Env, counts: &[usize]) -> (Vec<ScaleRow>, Table) {
             assert_eq!(r.metrics.len(), n, "closed loop dropped prompts");
             rows.push(ScaleRow {
                 plane: "closed",
-                strategy: label,
+                strategy: label.clone(),
                 prompts: n,
                 wall_s: wall,
                 decisions_per_s: n as f64 / wall.max(1e-9),
@@ -189,6 +213,38 @@ pub fn run(env: &Env, counts: &[usize]) -> (Vec<ScaleRow>, Table) {
                 decide_p95_us: None,
                 decide_p99_us: None,
             });
+
+            // wallclock server on the stub backend: the whole threaded
+            // loop (ingest + per-device workers + collector), arrival
+            // replay compressed hard so scheduling is the measured work
+            if n <= SERVER_MAX_PROMPTS {
+                let opts = ServeOptions {
+                    batch_size: 4,
+                    batch_timeout: Duration::from_millis(5),
+                    max_new_tokens: 8,
+                    time_scale: SERVER_TIME_SCALE,
+                    strategy: strategy.clone(),
+                    grid,
+                    execution: ExecutionMode::Stub,
+                    db: Some(Arc::new(env.db.clone())),
+                    ..ServeOptions::default()
+                };
+                let t0 = Instant::now();
+                let r = serve(&cluster, &prompts, &opts).expect("stub serve");
+                let wall = t0.elapsed().as_secs_f64();
+                assert_eq!(r.completed, n, "server dropped prompts");
+                rows.push(ScaleRow {
+                    plane: "server",
+                    strategy: label,
+                    prompts: n,
+                    wall_s: wall,
+                    decisions_per_s: n as f64 / wall.max(1e-9),
+                    deferred: r.deferred,
+                    decide_p50_us: None,
+                    decide_p95_us: None,
+                    decide_p99_us: None,
+                });
+            }
         }
     }
 
@@ -218,11 +274,19 @@ pub fn run(env: &Env, counts: &[usize]) -> (Vec<ScaleRow>, Table) {
          (uncached) rows refit the forecaster per decision — the pre-memoization \
          hot path, decision-identical by tests/planes.rs; decide percentiles time \
          one route-one + release-plan pass per prompt over the first {} prompts \
-         (DES rows only — the closed loop plans per corpus, not per arrival)",
+         (DES rows only — the closed loop plans per corpus, not per arrival); \
+         server rows run the threaded wallclock loop on the stub backend at \
+         {:.0}x time compression (<= {} prompts — the replay is real wall time \
+         with a fixed ~50 ms floor, so compare server trends on the 10k rows; \
+         the 1k rows are partly replay-bound), their decisions/s includes \
+         thread handoff + queueing, and their deferral counts see live \
+         wallclock backlog rather than the DES's virtual-time backlog",
         ARRIVAL_SPAN_S / 3600.0,
         DEFER_FRAC * 100.0,
         DEADLINE_S / 3600.0,
-        PERCENTILE_SAMPLE
+        PERCENTILE_SAMPLE,
+        SERVER_TIME_SCALE,
+        SERVER_MAX_PROMPTS
     ));
     (rows, table)
 }
@@ -232,12 +296,17 @@ mod tests {
     use super::*;
 
     #[test]
-    fn scale_rows_cover_both_planes_and_agree_on_deferrals() {
+    fn scale_rows_cover_all_three_planes_and_agree_on_deferrals() {
         let env = Env::small(40);
         let (rows, table) = run(&env, &[60]);
-        // 2 planes × 4 strategy variants
-        assert_eq!(rows.len(), 8);
+        // 3 planes × 4 strategy variants (60 <= SERVER_MAX_PROMPTS)
+        assert_eq!(rows.len(), 12);
         assert!(table.ascii().contains("forecast-carbon-aware (uncached)"));
+        assert_eq!(
+            rows.iter().filter(|r| r.plane == "server").count(),
+            4,
+            "every strategy variant needs a server-plane row"
+        );
         for r in &rows {
             assert!(r.wall_s >= 0.0);
             assert!(r.decisions_per_s > 0.0, "{}/{}", r.plane, r.strategy);

@@ -25,6 +25,12 @@ pub enum ExecutionMode {
     /// PJRT for a deterministic subset of batches (spot-check), sampled
     /// token counts for the rest.
     Hybrid,
+    /// No PJRT anywhere: token generation through the deterministic
+    /// `runtime::CalibratedBackend` stub, time/energy from the
+    /// calibrated clock (the Hybrid timing rule). Needs no artifacts —
+    /// the mode that lets the wallclock server run in CI and in
+    /// `bench scale`.
+    Stub,
 }
 
 impl ExecutionMode {
@@ -33,7 +39,8 @@ impl ExecutionMode {
             "real" => Ok(Self::Real),
             "calibrated" => Ok(Self::Calibrated),
             "hybrid" => Ok(Self::Hybrid),
-            _ => bail!("unknown execution mode '{s}' (real|calibrated|hybrid)"),
+            "stub" => Ok(Self::Stub),
+            _ => bail!("unknown execution mode '{s}' (real|calibrated|hybrid|stub)"),
         }
     }
     pub fn name(&self) -> &'static str {
@@ -41,6 +48,7 @@ impl ExecutionMode {
             Self::Real => "real",
             Self::Calibrated => "calibrated",
             Self::Hybrid => "hybrid",
+            Self::Stub => "stub",
         }
     }
 }
@@ -204,6 +212,12 @@ pub struct ServingConfig {
     /// Rolling realized-vs-forecast MAPE that declares the active
     /// forecast wrong (fraction, e.g. 0.2 = 20 %).
     pub drift_threshold: f64,
+    /// Drift-aware forecast *blending*: discount the fitted forecast
+    /// toward persistence proportionally to the rolling MAPE (full
+    /// persistence at `drift_threshold`) instead of the binary
+    /// trust/distrust replan trigger. Off by default — planning is
+    /// bit-for-bit the pure-fit behaviour.
+    pub blend: bool,
 }
 
 /// Top-level experiment configuration.
@@ -260,6 +274,7 @@ impl Default for ExperimentConfig {
                 replan: false,
                 replan_interval_s: 900.0,
                 drift_threshold: 0.2,
+                blend: false,
             },
             artifacts_dir: "artifacts".into(),
         }
@@ -397,6 +412,9 @@ impl ExperimentConfig {
             }
             if let Some(x) = s.get("drift_threshold").and_then(Value::as_f64) {
                 cfg.serving.drift_threshold = x;
+            }
+            if let Some(b) = s.get("blend").and_then(Value::as_bool) {
+                cfg.serving.blend = b;
             }
         }
         if let Some(a) = v.get("artifacts_dir").and_then(Value::as_str) {
@@ -761,22 +779,26 @@ carbon_sizing = true
 
     #[test]
     fn replan_knobs_roundtrip_and_validate() {
-        // defaults: replan off (plan-once), sane cadence/threshold
+        // defaults: replan off (plan-once), blend off, sane
+        // cadence/threshold
         let d = ExperimentConfig::default();
         assert!(!d.serving.replan);
         assert_eq!(d.serving.replan_interval_s, 900.0);
         assert_eq!(d.serving.drift_threshold, 0.2);
+        assert!(!d.serving.blend);
 
         let doc = r#"
 [serving]
 replan = true
 replan_interval_s = 1800.0
 drift_threshold = 0.35
+blend = true
 "#;
         let c = ExperimentConfig::from_value(&toml::parse(doc).unwrap()).unwrap();
         assert!(c.serving.replan);
         assert_eq!(c.serving.replan_interval_s, 1800.0);
         assert_eq!(c.serving.drift_threshold, 0.35);
+        assert!(c.serving.blend);
 
         let parse = |doc: &str| ExperimentConfig::from_value(&toml::parse(doc).unwrap());
         assert!(parse("[serving]\nreplan_interval_s = 0.0\n").is_err());
@@ -825,7 +847,12 @@ drift_threshold = 0.35
 
     #[test]
     fn execution_mode_roundtrip() {
-        for m in [ExecutionMode::Real, ExecutionMode::Calibrated, ExecutionMode::Hybrid] {
+        for m in [
+            ExecutionMode::Real,
+            ExecutionMode::Calibrated,
+            ExecutionMode::Hybrid,
+            ExecutionMode::Stub,
+        ] {
             assert_eq!(ExecutionMode::parse(m.name()).unwrap(), m);
         }
         assert!(ExecutionMode::parse("gpu").is_err());

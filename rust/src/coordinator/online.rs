@@ -110,6 +110,14 @@ pub struct OnlineResult {
     pub batch_fill: Summary,
     /// Prompts held by the deferral queue (released later than arrival).
     pub deferred: usize,
+    /// Ids of the held prompts, sorted — the deferral *decision set*,
+    /// pinned against the stub-backed wallclock server in
+    /// `tests/planes.rs`.
+    pub deferred_ids: Vec<u64>,
+    /// Device index each prompt was routed to (index-aligned with the
+    /// input corpus) — the routing decision trail the cross-plane
+    /// equivalence tests compare.
+    pub assignment: Vec<usize>,
     /// Carbon-aware batch-sizing holds (partial all-deferrable batches
     /// that waited for a cleaner window).
     pub held_partial: usize,
@@ -195,6 +203,8 @@ struct State {
     batch_fill: Summary,
     ledger: EnergyLedger,
     deferred: usize,
+    deferred_ids: Vec<u64>,
+    assignment: Vec<usize>,
     held_partial: usize,
     /// Deferral queue: prompt -> (planned release, release epoch). A
     /// replan bumps the epoch and re-queues; the stale `Release` event
@@ -239,6 +249,8 @@ pub fn run_online(
         batch_fill: Summary::new(),
         ledger: EnergyLedger::new(cluster.carbon.clone()),
         deferred: 0,
+        deferred_ids: Vec::new(),
+        assignment: vec![usize::MAX; prompts.len()],
         held_partial: 0,
         held: std::collections::BTreeMap::new(),
         tick_armed: false,
@@ -272,6 +284,7 @@ pub fn run_online(
                 );
                 if release > now + 1e-9 {
                     st.deferred += 1;
+                    st.deferred_ids.push(prompts[i].id);
                     st.held.insert(i, (release, 0));
                     st.q.push(release, Event::Release(i, 0));
                     arm_replan_tick(&ctx, &mut st, now);
@@ -333,6 +346,7 @@ pub fn run_online(
         }
     }
 
+    st.deferred_ids.sort_unstable();
     Ok(OnlineResult {
         completed,
         span_s: span,
@@ -343,6 +357,8 @@ pub fn run_online(
         queue_wait: st.queue_wait,
         batch_fill: st.batch_fill,
         deferred: st.deferred,
+        deferred_ids: st.deferred_ids,
+        assignment: st.assignment,
         held_partial: st.held_partial,
         deadline_violations,
         utilization: cluster
@@ -368,6 +384,7 @@ fn admit(ctx: &Ctx, st: &mut State, i: usize, lo: bool, now: f64) {
         &st.backlog,
         now,
     );
+    st.assignment[i] = d;
     st.backlog[d] += ctx
         .db
         .cost_id(DeviceId(d), &ctx.cluster.devices[d], &ctx.prompts[i], ctx.cfg.batch_size)
@@ -401,8 +418,18 @@ fn maybe_launch(ctx: &Ctx, st: &mut State, d: usize, now: f64) {
         ) {
             Some(until) => {
                 if !st.devs[d].sizing_hold {
-                    // count held batches, not re-plans of the same hold
+                    // count held batches, not re-plans of the same hold,
+                    // and post the shared at-plan savings estimate
                     st.held_partial += 1;
+                    st.ledger.post_sizing_hold(super::policy::sizing_hold_saving_kg(
+                        ctx.cluster,
+                        ctx.db,
+                        queued.iter().map(|&i| &ctx.prompts[i]),
+                        d,
+                        ctx.cfg.batch_size,
+                        now,
+                        until,
+                    ));
                 }
                 st.devs[d].sizing_hold = true;
                 st.devs[d].hold_until = until;
@@ -894,9 +921,14 @@ mod tests {
         let base = run_online(&cluster, &prompts, &db, &base_cfg).unwrap();
         let sized = run_online(&cluster, &prompts, &db, &sized_cfg).unwrap();
         assert_eq!(base.held_partial, 0);
+        assert_eq!(base.ledger.sizing_stats().holds, 0);
         assert_eq!(sized.completed, 80);
         assert!(sized.held_partial > 0, "no partial batch was held");
         assert_eq!(sized.deadline_violations, 0);
+        // the ledger's sizing account mirrors the plane counter, and
+        // holds planned into cleaner windows estimate positive savings
+        assert_eq!(sized.ledger.sizing_stats().holds as usize, sized.held_partial);
+        assert!(sized.ledger.sizing_stats().est_saved_kg > 0.0);
         let (_, _, base_kg) = base.ledger.totals();
         let (_, _, sized_kg) = sized.ledger.totals();
         assert!(sized_kg < base_kg, "sized {sized_kg} vs base {base_kg}");

@@ -47,7 +47,7 @@
 //! `form_batches(strategy.assign(..))` exactly — pinned by the
 //! cross-plane equivalence test in `tests/planes.rs`.
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
 
@@ -90,6 +90,13 @@ pub struct GridShiftConfig {
     /// plan-once; on, held prompts and sizing-held partial batches are
     /// re-planned whenever [`Self::replan_due`] fires.
     pub replan: bool,
+    /// Drift-aware forecast *blending*: discount the fitted forecast
+    /// toward persistence proportionally to the rolling
+    /// realized-vs-forecast MAPE (full persistence once the MAPE
+    /// reaches `drift_threshold`) — the continuous alternative to the
+    /// binary trust/distrust replan trigger. Off (the default) keeps
+    /// [`Self::forecast_at`] bit-for-bit the pure fit.
+    pub blend: bool,
     /// Fixed replan cadence, seconds (defaults to one trace step).
     pub replan_interval_s: f64,
     /// Rolling-MAPE threshold that declares the active forecast wrong
@@ -103,6 +110,15 @@ pub struct GridShiftConfig {
     /// Replan bookkeeping (anchored forecast + drift monitor + cadence
     /// clock); like the cache, clones start cold.
     drift: DriftTracker,
+    /// Blending's own drift state (one-step-ahead rolling MAPE),
+    /// deliberately separate from `drift`: sharing a tracker would let
+    /// blending consume the per-step observations the replan trigger
+    /// needs. Clones start cold.
+    blend_drift: DriftTracker,
+    /// Per-step memo of the *blended* forecast (the blend weight and
+    /// the fit are constant within a step), keeping the per-decision
+    /// path allocation-free with blending on. Clones start cold.
+    blend_cache: BlendCache,
 }
 
 impl GridShiftConfig {
@@ -120,11 +136,14 @@ impl GridShiftConfig {
             sizing: false,
             memoize: true,
             replan: false,
+            blend: false,
             replan_interval_s: step_s,
             drift_threshold: 0.2,
             drift_window: 8,
             cache: ForecastCache::new(),
             drift: DriftTracker::new(),
+            blend_drift: DriftTracker::new(),
+            blend_cache: BlendCache::default(),
         }
     }
 
@@ -156,6 +175,11 @@ impl GridShiftConfig {
 
     pub fn with_replan(mut self, replan: bool) -> Self {
         self.replan = replan;
+        self
+    }
+
+    pub fn with_blend(mut self, blend: bool) -> Self {
+        self.blend = blend;
         self
     }
 
@@ -201,13 +225,17 @@ impl GridShiftConfig {
         if !self.replan {
             return None;
         }
+        // the drift monitor judges the RAW fit, never the blended one:
+        // anchoring on the blend would let a saturated blend (already
+        // near-persistence, so near-zero one-step error) mask exactly
+        // the forecaster failure the Drift trigger exists to catch
         self.drift.check(
             &self.trace,
             self.drift_window,
             self.drift_threshold,
             self.replan_interval_s,
             now,
-            |step| self.forecast_at(step, self.horizon_steps.max(1)).1,
+            |step| self.fit_at(step, self.horizon_steps.max(1)).1,
         )
     }
 
@@ -230,7 +258,39 @@ impl GridShiftConfig {
     /// [`crate::grid::Forecaster`] prefix-consistency contract. Without `memoize`
     /// this refits at exactly `horizon` on every call (the pre-cache
     /// hot path, kept for equivalence tests and `bench scale`).
+    ///
+    /// With `blend` on (default off — bit-for-bit the pure fit), the
+    /// fit is additionally discounted toward persistence by the
+    /// rolling one-step-ahead MAPE: `blended[j] = (1−w)·fit[j] +
+    /// w·current` with `w = clamp(mape / drift_threshold, 0, 1)`. A
+    /// trustworthy forecaster (MAPE ≈ 0) plans on its full fit; one
+    /// that has been empirically wrong lately degrades smoothly into
+    /// "assume the grid stays where it is" — the continuous version of
+    /// the replan trigger's binary distrust. `w` only changes when the
+    /// trace step advances, so blending preserves the forecaster
+    /// prefix-consistency contract the memo relies on.
     pub fn forecast_at(&self, step_now: i64, horizon: usize) -> (f64, Arc<Vec<f64>>) {
+        let (current, fit) = self.fit_at(step_now, horizon);
+        if !self.blend {
+            return (current, fit);
+        }
+        let mape = self.blend_drift.observe_to(
+            &self.trace,
+            self.drift_window,
+            self.drift_threshold,
+            step_now,
+            |step| self.fit_at(step, self.horizon_steps.max(1)).1,
+        );
+        let w = (mape / self.drift_threshold).clamp(0.0, 1.0);
+        if w <= 0.0 {
+            return (current, fit);
+        }
+        (current, self.blend_cache.blended(step_now, w, current, &fit))
+    }
+
+    /// The raw (unblended) fit at `step_now` — the memoized or
+    /// refit-every-call path [`Self::forecast_at`] layers blending on.
+    fn fit_at(&self, step_now: i64, horizon: usize) -> (f64, Arc<Vec<f64>>) {
         if self.memoize {
             let fit_horizon = horizon.max(self.horizon_steps).max(1);
             return self.cache.fit(
@@ -249,6 +309,58 @@ impl GridShiftConfig {
             horizon,
         );
         (current, Arc::new(forecast))
+    }
+}
+
+/// Per-step memo of the blended forecast (see
+/// [`GridShiftConfig::forecast_at`]): within one trace step the blend
+/// weight and the underlying fit are constant, so the discounted
+/// vector is computed once and every later decision at the step gets
+/// an `Arc` clone — the blending analogue of [`ForecastCache`].
+/// Clones start cold: a pure accelerator, never part of a config's
+/// identity.
+#[derive(Default)]
+struct BlendCache {
+    slot: Mutex<Option<BlendFit>>,
+}
+
+struct BlendFit {
+    step: i64,
+    w_bits: u64,
+    len: usize,
+    forecast: Arc<Vec<f64>>,
+}
+
+impl BlendCache {
+    fn blended(&self, step: i64, w: f64, current: f64, fit: &Arc<Vec<f64>>) -> Arc<Vec<f64>> {
+        let mut slot = self.slot.lock().unwrap();
+        if let Some(b) = slot.as_ref() {
+            if b.step == step && b.w_bits == w.to_bits() && b.len == fit.len() {
+                return Arc::clone(&b.forecast);
+            }
+        }
+        let blended: Arc<Vec<f64>> =
+            Arc::new(fit.iter().map(|&f| (1.0 - w) * f + w * current).collect());
+        *slot = Some(BlendFit {
+            step,
+            w_bits: w.to_bits(),
+            len: fit.len(),
+            forecast: Arc::clone(&blended),
+        });
+        blended
+    }
+}
+
+impl Clone for BlendCache {
+    fn clone(&self) -> Self {
+        BlendCache::default()
+    }
+}
+
+impl std::fmt::Debug for BlendCache {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let cached = self.slot.lock().map(|s| s.is_some()).unwrap_or(false);
+        f.debug_struct("BlendCache").field("cached", &cached).finish()
     }
 }
 
@@ -390,26 +502,32 @@ impl PlacementPolicy {
         batch_size: usize,
         now: f64,
     ) -> Option<f64> {
-        let g = self.grid.as_ref()?;
-        if !g.sizing || queued.is_empty() || queued.len() >= batch_size {
-            return None;
-        }
-        let mut bound = f64::INFINITY;
-        let mut est_max = 0.0f64;
-        for &i in queued {
-            let p = &prompts[i];
-            let deadline_s = p.slo.deadline_s()?; // interactive member: launch now
-            let est = db.cost_id(DeviceId(device), &cluster.devices[device], p, batch_size).e2e_s;
-            est_max = est_max.max(est);
-            let safety = (3.0 * batch_size as f64 * est).max(0.05 * deadline_s).max(60.0);
-            bound = bound.min(p.arrival_s + deadline_s - safety);
-        }
-        if !bound.is_finite() {
-            return None;
-        }
-        let run_steps =
-            ((est_max * queued.len() as f64 / g.trace.step_s).ceil() as usize).max(1);
-        clean_window(g, bound, run_steps, now)
+        self.plan_batch_hold_members(
+            cluster,
+            db,
+            queued.iter().map(|&i| &prompts[i]),
+            device,
+            batch_size,
+            now,
+        )
+    }
+
+    /// [`Self::plan_batch_hold`] over the member prompts directly —
+    /// for planes that hold owned prompts rather than indices into a
+    /// corpus slice (the wallclock server's worker loop). Same gates,
+    /// same result: `None` unless every member is `Deferrable` with
+    /// slack and the batch is partial.
+    #[allow(clippy::too_many_arguments)]
+    pub fn plan_batch_hold_members<'a>(
+        &self,
+        cluster: &Cluster,
+        db: &BenchmarkDb,
+        members: impl IntoIterator<Item = &'a Prompt>,
+        device: usize,
+        batch_size: usize,
+        now: f64,
+    ) -> Option<f64> {
+        plan_batch_hold_with(self.grid.as_ref()?, cluster, db, members, device, batch_size, now)
     }
 
     /// Receding-horizon re-plan of a *held* prompt's release at `now`.
@@ -477,6 +595,31 @@ impl PlacementPolicy {
                 self.plan_batch_hold(cluster, db, prompts, queued, device, batch_size, now)
             }
         }
+    }
+
+    /// [`Self::replan_batch_hold`] over member prompts (the wallclock
+    /// worker loop's form): drift cancels the hold, cadence re-plans it.
+    #[allow(clippy::too_many_arguments)]
+    pub fn replan_batch_hold_members<'a>(
+        &self,
+        trigger: ReplanTrigger,
+        cluster: &Cluster,
+        db: &BenchmarkDb,
+        members: impl IntoIterator<Item = &'a Prompt>,
+        device: usize,
+        batch_size: usize,
+        now: f64,
+    ) -> Option<f64> {
+        replan_batch_hold_with(
+            trigger,
+            self.grid.as_ref()?,
+            cluster,
+            db,
+            members,
+            device,
+            batch_size,
+            now,
+        )
     }
 
     /// The closed-loop corpus plan: route the whole corpus, plan
@@ -596,6 +739,90 @@ impl PlacementPolicy {
             }
         }
         CorpusPlan { assignment, release_s, batches, deferred }
+    }
+}
+
+/// The free-function core of carbon-aware batch sizing over member
+/// prompts, parameterized by the grid context it plans against.
+/// [`PlacementPolicy::plan_batch_hold_members`] passes the policy's
+/// own grid; the wallclock server's worker threads instead pass a
+/// per-worker *cold clone* of it, so each worker's replan clock,
+/// forecast memo and blend state stay thread-local — a worker polling
+/// its drift tracker can never consume a trigger the ingest thread's
+/// deferral queue is waiting for. Gates are identical either way:
+/// `None` unless every member is `Deferrable` with slack and the
+/// batch is partial.
+#[allow(clippy::too_many_arguments)]
+pub fn plan_batch_hold_with<'a>(
+    g: &GridShiftConfig,
+    cluster: &Cluster,
+    db: &BenchmarkDb,
+    members: impl IntoIterator<Item = &'a Prompt>,
+    device: usize,
+    batch_size: usize,
+    now: f64,
+) -> Option<f64> {
+    if !g.sizing {
+        return None;
+    }
+    let mut n = 0usize;
+    let mut bound = f64::INFINITY;
+    let mut est_max = 0.0f64;
+    for p in members {
+        n += 1;
+        let deadline_s = p.slo.deadline_s()?; // interactive member: launch now
+        let est = db.cost_id(DeviceId(device), &cluster.devices[device], p, batch_size).e2e_s;
+        est_max = est_max.max(est);
+        let safety = (3.0 * batch_size as f64 * est).max(0.05 * deadline_s).max(60.0);
+        bound = bound.min(p.arrival_s + deadline_s - safety);
+    }
+    if n == 0 || n >= batch_size || !bound.is_finite() {
+        return None;
+    }
+    let run_steps = ((est_max * n as f64 / g.trace.step_s).ceil() as usize).max(1);
+    clean_window(g, bound, run_steps, now)
+}
+
+/// At-plan savings estimate of one sizing hold: the members' estimated
+/// energy on the executing device, priced at the planned launch
+/// (`until`) minus at hold placement (`now`). The single formula both
+/// the DES and the wallclock worker post to
+/// [`crate::telemetry::EnergyLedger::post_sizing_hold`], so the
+/// cross-plane `SizingStats` can never compare two different bases.
+pub fn sizing_hold_saving_kg<'a>(
+    cluster: &Cluster,
+    db: &BenchmarkDb,
+    members: impl IntoIterator<Item = &'a Prompt>,
+    device: usize,
+    batch_size: usize,
+    now: f64,
+    until: f64,
+) -> f64 {
+    let kwh: f64 = members
+        .into_iter()
+        .map(|p| db.cost_id(DeviceId(device), &cluster.devices[device], p, batch_size).energy_kwh)
+        .sum();
+    cluster.carbon.kg_co2e(kwh, now) - cluster.carbon.kg_co2e(kwh, until)
+}
+
+/// The replan form of [`plan_batch_hold_with`]: drift cancels the hold
+/// (launch now), cadence re-runs the planner with the same gates.
+#[allow(clippy::too_many_arguments)]
+pub fn replan_batch_hold_with<'a>(
+    trigger: ReplanTrigger,
+    g: &GridShiftConfig,
+    cluster: &Cluster,
+    db: &BenchmarkDb,
+    members: impl IntoIterator<Item = &'a Prompt>,
+    device: usize,
+    batch_size: usize,
+    now: f64,
+) -> Option<f64> {
+    match trigger {
+        ReplanTrigger::Drift => None,
+        ReplanTrigger::Cadence => {
+            plan_batch_hold_with(g, cluster, db, members, device, batch_size, now)
+        }
     }
 }
 
@@ -987,6 +1214,102 @@ mod tests {
         assert_eq!(on.replan_due(900.0), None);
         assert_eq!(on.replan_due(1800.0), Some(crate::grid::ReplanTrigger::Cadence));
         assert_eq!(on.replan_due(1900.0), None, "cadence clock restarted");
+    }
+
+    #[test]
+    fn blend_off_is_bit_for_bit_the_pure_fit() {
+        let off = diurnal_grid();
+        assert!(!off.blend, "blend must default off");
+        let plain = diurnal_grid();
+        for step in [0i64, 7, 70, 71, 140] {
+            let (ca, fa) = off.forecast_at(step, 48);
+            let (cb, fb) = plain.forecast_at(step, 48);
+            assert_eq!(ca.to_bits(), cb.to_bits());
+            assert_eq!(fa.len(), fb.len());
+            for (x, y) in fa.iter().zip(fb.iter()) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn blend_is_identity_while_the_forecast_is_trustworthy() {
+        // persistence predicts a constant trace exactly: the rolling
+        // MAPE stays 0, so blending must not move a single value
+        let constant = || {
+            GridShiftConfig::new(GridTrace::constant(69.0), ForecastKind::Persistence)
+        };
+        let blended = constant().with_blend(true);
+        let pure = constant();
+        for step in 0..24 {
+            let (_, fa) = blended.forecast_at(step, 48);
+            let (_, fb) = pure.forecast_at(step, 48);
+            for (x, y) in fa.iter().zip(fb.iter()) {
+                assert_eq!(x.to_bits(), y.to_bits(), "step {step}");
+            }
+        }
+    }
+
+    #[test]
+    fn blend_discounts_toward_persistence_under_drift() {
+        // a level shift the harmonic fit cannot see coming: once the
+        // rolling MAPE is non-zero, the blended forecast must sit
+        // between the pure fit and flat persistence, reaching exactly
+        // persistence when the MAPE crosses the threshold
+        let mut samples: Vec<f64> = CarbonModel::diurnal(69.0, 0.3)
+            .to_trace(900.0)
+            .samples()
+            .to_vec();
+        let n = samples.len();
+        for s in samples.iter_mut().skip(n / 2) {
+            *s += 150.0; // the lull the fit never saw
+        }
+        let trace = GridTrace::new("shifted", 900.0, samples);
+        let blended = GridShiftConfig::new(trace.clone(), ForecastKind::Harmonic)
+            .with_blend(true)
+            .with_drift_threshold(0.05);
+        let pure = GridShiftConfig::new(trace.clone(), ForecastKind::Harmonic);
+        // walk the tracker up to the shift so it scores the surprise
+        let shift_step = (n / 2) as i64;
+        for step in (shift_step - 6)..=(shift_step + 2) {
+            blended.forecast_at(step, 48);
+        }
+        let probe = shift_step + 3;
+        let (current, fb) = blended.forecast_at(probe, 48);
+        let (_, fp) = pure.forecast_at(probe, 48);
+        assert!(
+            fb.iter().zip(fp.iter()).any(|(b, p)| b != p),
+            "drift never moved the blend"
+        );
+        // every blended value lies on the segment [fit, persistence]
+        for (b, p) in fb.iter().zip(fp.iter()) {
+            let lo = p.min(current) - 1e-9;
+            let hi = p.max(current) + 1e-9;
+            assert!(*b >= lo && *b <= hi, "blend {b} outside [{lo}, {hi}]");
+        }
+        // the +150 level shift dwarfs the 0.05 threshold: the weight
+        // saturates and the forecast is pure persistence — flat at the
+        // current observed sample
+        for b in fb.iter() {
+            assert!((b - current).abs() < 1e-9, "saturated blend {b} != current {current}");
+        }
+    }
+
+    #[test]
+    fn blended_planning_still_defers_and_respects_deadlines() {
+        let (cluster, mut prompts, db) = setup(4);
+        let policy = PlacementPolicy::new(
+            "carbon-aware",
+            &cluster,
+            Some(diurnal_grid().with_blend(true)),
+        )
+        .unwrap();
+        let arrival = 18.0 * 3600.0;
+        prompts[0].arrival_s = arrival;
+        prompts[0].slo = SloClass::Deferrable { deadline_s: 12.0 * 3600.0 };
+        let r = policy.plan_release(&prompts[0], &cluster, &db, 4, 0.0, arrival);
+        assert!(r > arrival, "blend-on planning lost the evening shift");
+        assert!(r <= arrival + 12.0 * 3600.0);
     }
 
     #[test]

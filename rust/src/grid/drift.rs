@@ -150,6 +150,53 @@ struct Track {
     last_replan_s: f64,
 }
 
+impl Track {
+    fn new(window: usize, threshold: f64, step_now: i64, anchor: Arc<Vec<f64>>, now: f64) -> Self {
+        Track {
+            monitor: DriftMonitor::new(window, threshold),
+            anchor_step: step_now,
+            anchor,
+            observed_step: step_now,
+            last_replan_s: now,
+        }
+    }
+
+    /// Feed the monitor one realized sample per unseen trace step up to
+    /// `step_now`, each scored against the anchored forecast
+    /// (`anchor[j]` predicts step `anchor_step + 1 + j`; past the
+    /// anchored horizon the last value stands in, matching the
+    /// window-mean convention in `grid::shift`; the anchor step itself
+    /// was observed, not forecast). The ONE copy of the scoring
+    /// convention — [`DriftTracker::check`] and
+    /// [`DriftTracker::observe_to`] both resolve through here so the
+    /// replan trigger and the blend weight can never diverge on it.
+    /// Returns whether any new step was observed.
+    fn advance_to(&mut self, trace: &GridTrace, step_now: i64) -> bool {
+        let mut advanced = false;
+        while self.observed_step < step_now {
+            self.observed_step += 1;
+            let actual = trace.sample_at_step(self.observed_step);
+            let j = self.observed_step - self.anchor_step - 1;
+            let predicted = if j >= 0 && !self.anchor.is_empty() {
+                self.anchor[(j as usize).min(self.anchor.len() - 1)]
+            } else {
+                actual
+            };
+            self.monitor.observe(self.observed_step, predicted, actual);
+            advanced = true;
+        }
+        advanced
+    }
+
+    /// Re-anchor on a fresh fit at `step_now` (the step cursor moves
+    /// with it, so a gap re-anchor never scores skipped steps).
+    fn re_anchor(&mut self, step_now: i64, anchor: Arc<Vec<f64>>) {
+        self.anchor_step = step_now;
+        self.anchor = anchor;
+        self.observed_step = step_now;
+    }
+}
+
 impl DriftTracker {
     pub fn new() -> Self {
         DriftTracker { slot: Mutex::new(None) }
@@ -181,13 +228,7 @@ impl DriftTracker {
         let mut slot = self.slot.lock().unwrap();
         let step_now = trace.step_of(now);
         if slot.is_none() {
-            *slot = Some(Track {
-                monitor: DriftMonitor::new(window, threshold),
-                anchor_step: step_now,
-                anchor: fit(step_now),
-                observed_step: step_now,
-                last_replan_s: now,
-            });
+            *slot = Some(Track::new(window, threshold, step_now, fit(step_now), now));
             return None;
         }
         let t = slot.as_mut().expect("anchored above");
@@ -198,27 +239,11 @@ impl DriftTracker {
         // planned on a perfectly good new fit. Re-anchor instead.
         if step_now - t.observed_step > window as i64 {
             t.monitor.reset();
-            t.anchor_step = step_now;
-            t.anchor = fit(step_now);
-            t.observed_step = step_now;
+            t.re_anchor(step_now, fit(step_now));
             t.last_replan_s = now;
             return None;
         }
-        let mut advanced = false;
-        while t.observed_step < step_now {
-            t.observed_step += 1;
-            let actual = trace.sample_at_step(t.observed_step);
-            let j = t.observed_step - t.anchor_step - 1;
-            let predicted = if j >= 0 && !t.anchor.is_empty() {
-                // past the anchored horizon the last value stands in,
-                // matching the window-mean convention in `grid::shift`
-                t.anchor[(j as usize).min(t.anchor.len() - 1)]
-            } else {
-                actual // the anchor step itself was observed, not forecast
-            };
-            t.monitor.observe(t.observed_step, predicted, actual);
-            advanced = true;
-        }
+        let advanced = t.advance_to(trace, step_now);
         let trigger = if advanced && t.monitor.tripped() {
             Some(ReplanTrigger::Drift)
         } else if now - t.last_replan_s >= interval_s {
@@ -228,8 +253,7 @@ impl DriftTracker {
         };
         if trigger.is_some() {
             t.last_replan_s = now;
-            t.anchor_step = step_now;
-            t.anchor = fit(step_now);
+            t.re_anchor(step_now, fit(step_now));
         }
         trigger
     }
@@ -237,6 +261,44 @@ impl DriftTracker {
     /// Rolling MAPE of the active plan's forecast (0 before anchoring).
     pub fn mape(&self) -> f64 {
         self.slot.lock().unwrap().as_ref().map(|t| t.monitor.mape()).unwrap_or(0.0)
+    }
+
+    /// Advance the monitor to `step_now` and return the rolling MAPE —
+    /// the drift-aware *blending* signal (see
+    /// `coordinator::policy::GridShiftConfig::forecast_at`). Unlike
+    /// [`Self::check`] this never emits a trigger and keeps no cadence
+    /// clock; after scoring it re-anchors on a fresh fit, so every
+    /// window entry is a short-horizon error of the freshest fit rather
+    /// than a long-horizon error of an aging plan. Use a dedicated
+    /// tracker instance for blending — sharing one with [`Self::check`]
+    /// would consume the observations its drift trigger needs.
+    pub fn observe_to(
+        &self,
+        trace: &GridTrace,
+        window: usize,
+        threshold: f64,
+        step_now: i64,
+        mut fit: impl FnMut(i64) -> Arc<Vec<f64>>,
+    ) -> f64 {
+        let mut slot = self.slot.lock().unwrap();
+        if slot.is_none() {
+            *slot = Some(Track::new(window, threshold, step_now, fit(step_now), 0.0));
+            return 0.0;
+        }
+        let t = slot.as_mut().expect("anchored above");
+        // same idle-gap guard as `check`: a stale anchor would score
+        // fresh reality against a plan nobody holds anymore
+        if step_now - t.observed_step > window as i64 {
+            t.monitor.reset();
+            t.re_anchor(step_now, fit(step_now));
+            return 0.0;
+        }
+        let advanced = t.advance_to(trace, step_now);
+        let mape = t.monitor.mape();
+        if advanced {
+            t.re_anchor(step_now, fit(step_now));
+        }
+        mape
     }
 }
 
@@ -390,6 +452,31 @@ mod tests {
             Arc::clone(&fresh_plan)
         });
         assert_eq!(r, None);
+    }
+
+    #[test]
+    fn observe_to_tracks_one_step_ahead_error_and_recovers() {
+        // ground truth steps from 70 to 140 at step 10; the fit keeps
+        // promising the *current* level (persistence-shaped), so only
+        // the transition step scores an error — which then ages out
+        let mut samples = vec![70.0; 10];
+        samples.extend(vec![140.0; 10]);
+        let trace = GridTrace::new("step", 900.0, samples);
+        let tracker = DriftTracker::new();
+        let fit = |step: i64| Arc::new(vec![trace.sample_at_step(step); 8]);
+        assert_eq!(tracker.observe_to(&trace, 3, 0.2, 0, fit), 0.0, "first call anchors");
+        for s in 1..10 {
+            assert_eq!(tracker.observe_to(&trace, 3, 0.2, s, fit), 0.0, "clean step {s}");
+        }
+        // the transition step: anchored 70, realized 140 — one error of
+        // 0.5 across the 3-step window
+        let m = tracker.observe_to(&trace, 3, 0.2, 10, fit);
+        assert!((m - 0.5 / 3.0).abs() < 1e-12, "mape {m}");
+        // polling within the same step neither re-scores nor re-anchors
+        assert_eq!(tracker.observe_to(&trace, 3, 0.2, 10, fit), m);
+        // the re-anchored fit is accurate again; the error ages out
+        assert!(tracker.observe_to(&trace, 3, 0.2, 11, fit) > 0.0);
+        assert_eq!(tracker.observe_to(&trace, 3, 0.2, 14, fit), 0.0, "error must age out");
     }
 
     #[test]

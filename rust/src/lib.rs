@@ -25,10 +25,32 @@
 //! - **open-loop DES** ([`coordinator::online`], `bench load` /
 //!   `bench shifting`) — virtual-time serving under an arrival stream:
 //!   steady-state latency, deferral queues, batch-sizing holds;
-//! - **wallclock server** ([`server`], `verdant serve`) — real PJRT
-//!   inference behind per-device worker threads, replaying the arrival
-//!   trace in compressed real time with the same routing, deferral and
-//!   counterfactual carbon accounting.
+//! - **wallclock server** ([`server`], `verdant serve`) — inference
+//!   behind per-device worker threads, replaying the arrival trace in
+//!   compressed real time with the same routing, deferral,
+//!   carbon-sizing and counterfactual carbon accounting.
+//!
+//! ## Execution backends: three backends × three planes
+//!
+//! Token generation sits behind one seam,
+//! [`runtime::InferenceBackend`] — no plane touches the concrete PJRT
+//! engine anymore. `ExecutionMode` picks the implementation:
+//!
+//! | | [`runtime::PjrtBackend`] (`real`) | [`runtime::HybridBackend`] (`hybrid`) | [`runtime::CalibratedBackend`] (`stub`) |
+//! |---|---|---|---|
+//! | **closed loop** | observed tokens drive the calibrated clock | first batch per variant spot-checked | deterministic synthesis, calibrated clock |
+//! | **DES** | (virtual time — generation never runs) | (same) | (same) |
+//! | **wallclock server** | each worker owns a warmed engine | worker spot-checks then synthesizes | no artifacts; occupancy slept out at `time_scale` |
+//!
+//! `Calibrated` mode skips generation entirely (closed loop/DES). The
+//! stub synthesizes token counts from the same per-device verbosity
+//! calibration the simulator uses, deterministically, in microseconds
+//! — which is what lets the wallclock plane do everything the DES
+//! does: carbon-aware batch *sizing* runs in the worker loop (holds
+//! priced on the executing device, pre-empted by arrivals, re-planned
+//! by the drift tracker), the server plane has `bench scale` rows and
+//! a CI smoke job, and `tests/planes.rs` pins the stub-served
+//! routing/deferral decisions against the DES decision-for-decision.
 //!
 //! The [`grid`] subsystem supplies the temporal signal all three plan
 //! against: grid-intensity traces (synthetic diurnal/weekly/noise
@@ -56,7 +78,13 @@
 //!   SLO deadline bound);
 //! - the DES re-queues held releases under epoch-guarded replan events,
 //!   the closed loop re-plans between batch starts, and the wallclock
-//!   server's ingest thread re-plans its deferral queue on a timer;
+//!   server re-plans both its ingest deferral queue (on a timer) and
+//!   its workers' pending sizing holds (while they wait);
+//! - drift-aware forecast *blending* (the `[serving]` `blend` knob,
+//!   off by default) is the continuous alternative to the binary
+//!   trigger: planning forecasts are discounted toward persistence
+//!   proportionally to the rolling one-step-ahead MAPE, reaching full
+//!   persistence at `drift_threshold`;
 //! - the [`telemetry`] ledger accounts every pass (`ReplanStats`:
 //!   holds released early / extended, estimated carbon delta vs the
 //!   plan replaced), and `bench shifting` ships a drift-injected trace
@@ -83,13 +111,16 @@
 //!   per-device backlog counters the router reads as a slice;
 //! - **`verdant bench scale`** — the scale harness
 //!   ([`bench::scale`]): corpus sizes 1k/10k/100k × strategies through
-//!   the DES and the closed loop, reporting decisions/sec plus
-//!   per-decision latency percentiles (p50/p95/p99 of one
-//!   route-one + release-plan pass) with cached and uncached forecast
-//!   rows side by side; CI archives `BENCH_scale.json` per PR **and
-//!   gates on it**: the `bench-gate` job compares decisions/sec
-//!   against the committed `BENCH_baseline.json` and fails on a >25 %
-//!   regression of the cached forecast-carbon-aware DES rows.
+//!   the DES and the closed loop — and, on the stub backend, 1k/10k
+//!   through the threaded wallclock server, so all three planes share
+//!   one perf trajectory — reporting decisions/sec plus per-decision
+//!   latency percentiles (p50/p95/p99 of one route-one + release-plan
+//!   pass) with cached and uncached forecast rows side by side; CI
+//!   archives `BENCH_scale.json` per PR **and gates on it**: the
+//!   `bench-gate` job compares decisions/sec against the committed
+//!   `BENCH_baseline.json` and fails on a >25 % regression of the
+//!   cached forecast-carbon-aware DES rows (rows the baseline predates
+//!   warn instead of failing until the baseline is re-armed).
 //!
 //! ## Layers below (Python never on the request path)
 //!
@@ -112,8 +143,9 @@
 //! ## Quick start
 //!
 //! ```bash
+//! cargo run --release -- serve --prompts 32 --execution stub  # no artifacts needed
 //! make artifacts          # AOT-lower the models (runs python once)
-//! cargo run --release -- serve --prompts 32
+//! cargo run --release -- serve --prompts 32                   # real PJRT serving
 //! cargo run --release -- bench table3   # regenerate the paper's Table 3
 //! ```
 //!

@@ -6,7 +6,10 @@
 //! verdant run   [--strategy S] [--batch B] [--prompts N] [--execution M]
 //!         [--seed N] [--config path]      one closed-loop run, full report
 //! verdant serve [--prompts N] [--batch B] [--strategy S] [--timeout-ms T]
-//!         [--max-new N]                   real-time PJRT serving demo
+//!         [--max-new N] [--execution real|hybrid|stub]
+//!                                         real-time serving demo; `stub`
+//!                                         swaps PJRT for the calibrated
+//!                                         backend (no artifacts needed)
 //!
 //! `run` and `serve` accept the SLO/carbon knobs (--defer-frac,
 //! --deadline-s, --sizing, --no-defer): with a time-varying
@@ -31,7 +34,7 @@ use verdant::config::{ExecutionMode, ExperimentConfig};
 use verdant::coordinator::{run as run_sched, GridShiftConfig, Grouping, PlacementPolicy, RunConfig};
 use verdant::grid::ForecastKind;
 use verdant::report::fmt;
-use verdant::runtime::Engine;
+use verdant::runtime::{CalibratedBackend, HybridBackend, InferenceBackend, PjrtBackend};
 use verdant::server::{serve, ServeOptions};
 use verdant::workload::{trace, Corpus};
 
@@ -144,6 +147,9 @@ fn load_config(flags: &Flags) -> anyhow::Result<ExperimentConfig> {
         cfg.serving.drift_threshold = x.parse()?;
         cfg.serving.replan = true;
     }
+    if flags.has("blend") {
+        cfg.serving.blend = true;
+    }
     cfg.validate()?;
     Ok(cfg)
 }
@@ -171,6 +177,7 @@ fn grid_from_config(cfg: &ExperimentConfig, cluster: &Cluster) -> Option<GridShi
             .with_replan(cfg.serving.replan)
             .with_replan_interval_s(cfg.serving.replan_interval_s)
             .with_drift_threshold(cfg.serving.drift_threshold)
+            .with_blend(cfg.serving.blend)
     })
 }
 
@@ -196,17 +203,25 @@ fn print_usage() {
     println!(
         "verdant {} — sustainability-aware LLM inference on edge clusters\n\n\
          USAGE:\n  verdant bench <fig1|fig2|table2|table3|sweep|ablation|load|shifting|scale|all> [--prompts N] [--save dir] [--json dir] [--extensions]\n  \
-         verdant run   [--strategy S] [--batch B] [--prompts N] [--execution real|calibrated|hybrid]\n  \
-         verdant serve [--prompts N] [--batch B] [--strategy S] [--timeout-ms T] [--max-new N]\n  \
+         verdant run   [--strategy S] [--batch B] [--prompts N] [--execution real|calibrated|hybrid|stub]\n  \
+         verdant serve [--prompts N] [--batch B] [--strategy S] [--timeout-ms T] [--max-new N]\n          \
+         [--execution real|hybrid|stub]  (stub: deterministic no-PJRT backend, runs anywhere)\n  \
          verdant inspect <corpus|cluster|manifest>\n  \
          verdant version\n\n\
          Common flags: --config <toml>, --seed <n>\n\
+         Execution: --execution picks the inference backend (real = PJRT artifacts,\n\
+         hybrid = PJRT spot-check + stub, stub = deterministic calibrated stub —\n\
+         no artifacts needed; calibrated = no generation at all, run/bench only).\n\
          SLO/carbon flags (run+serve): --defer-frac F, --deadline-s S, --no-defer;\n\
-         --sizing enables carbon-aware batch sizing (run + bench planes; serve defers only);\n\
+         --sizing enables carbon-aware batch sizing (all three planes, including\n\
+         the serve worker loop);\n\
          --replan enables receding-horizon re-planning of held work\n\
          (--replan-interval-s S, --drift-threshold F tune the cadence and the\n\
-         realized-vs-forecast MAPE trip point).\n\
-         Deferral, sizing and re-planning need a time-varying [cluster.carbon] model.",
+         realized-vs-forecast MAPE trip point);\n\
+         --blend discounts the forecast toward persistence proportionally to the\n\
+         rolling MAPE (drift-aware blending, off by default).\n\
+         Deferral, sizing, re-planning and blending need a time-varying\n\
+         [cluster.carbon] model.",
         verdant::VERSION
     );
 }
@@ -271,6 +286,31 @@ fn cmd_bench(which: &str, flags: &Flags) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Resolve the configured execution mode to an inference backend:
+/// Calibrated needs none, Stub synthesizes without artifacts, and
+/// Real/Hybrid load + warm the PJRT artifacts for every device model.
+fn build_backend(
+    cfg: &ExperimentConfig,
+    cluster: &Cluster,
+) -> anyhow::Result<Option<Box<dyn InferenceBackend>>> {
+    let models: Vec<&str> = cfg.cluster.devices.iter().map(|d| d.model.as_str()).collect();
+    let dir = std::path::Path::new(&cfg.artifacts_dir);
+    Ok(match cfg.serving.execution {
+        ExecutionMode::Calibrated => None,
+        ExecutionMode::Stub => Some(Box::new(CalibratedBackend::from_cluster(cluster))),
+        ExecutionMode::Real => {
+            println!("loading PJRT engine from {} ...", cfg.artifacts_dir);
+            let b = PjrtBackend::load(dir, &models)?;
+            println!("engine ready on {}", b.platform());
+            Some(Box::new(b))
+        }
+        ExecutionMode::Hybrid => {
+            println!("loading PJRT engine from {} ...", cfg.artifacts_dir);
+            Some(Box::new(HybridBackend::load(dir, &models, cluster)?))
+        }
+    })
+}
+
 fn cmd_run(flags: &Flags) -> anyhow::Result<()> {
     let cfg = load_config(flags)?;
     let cluster = Cluster::from_config(&cfg.cluster);
@@ -294,26 +334,9 @@ fn cmd_run(flags: &Flags) -> anyhow::Result<()> {
         stochastic_seed: flags.get("stochastic").map(|s| s.parse()).transpose()?,
     };
 
-    let engine = match cfg.serving.execution {
-        ExecutionMode::Calibrated => None,
-        _ => {
-            println!("loading PJRT engine from {} ...", cfg.artifacts_dir);
-            let mut e = Engine::load(std::path::Path::new(&cfg.artifacts_dir))?;
-            for dev in &cfg.cluster.devices {
-                let batches = e
-                    .manifest
-                    .variants
-                    .get(&dev.model)
-                    .map(|m| m.batch_sizes())
-                    .unwrap_or_default();
-                e.warmup(&dev.model, &batches)?;
-            }
-            println!("engine ready on {}", e.platform());
-            Some(e)
-        }
-    };
+    let backend = build_backend(&cfg, &cluster)?;
 
-    let r = run_sched(&cluster, &corpus.prompts, &policy, &db, &run_cfg, engine.as_ref())?;
+    let r = run_sched(&cluster, &corpus.prompts, &policy, &db, &run_cfg, backend.as_deref())?;
 
     println!("\n== run: {} | batch {} | {} prompts | {} ==", r.strategy, r.batch_size,
              corpus.prompts.len(), cfg.serving.execution.name());
@@ -378,6 +401,14 @@ fn cmd_serve(flags: &Flags) -> anyhow::Result<()> {
     trace::assign_arrivals(&mut corpus.prompts, cfg.workload.arrival, cfg.workload.seed);
     apply_slos(&cfg, &mut corpus.prompts);
 
+    // the config default (`calibrated`) means "no generation" and only
+    // makes sense for run/bench — plain `verdant serve` keeps its
+    // historical real-PJRT path (fail-fast without artifacts); pass
+    // --execution stub|hybrid to pick another backend
+    let execution = match cfg.serving.execution {
+        ExecutionMode::Calibrated => ExecutionMode::Real,
+        m => m,
+    };
     let opts = ServeOptions {
         batch_size: cfg.serving.batch_size,
         batch_timeout: Duration::from_millis(flags.usize("timeout-ms", 150)? as u64),
@@ -386,10 +417,13 @@ fn cmd_serve(flags: &Flags) -> anyhow::Result<()> {
         time_scale: 50.0,
         strategy: cfg.serving.strategy.clone(),
         grid: grid_from_config(&cfg, &cluster),
+        execution,
+        db: None,
     };
     println!(
-        "serving {} prompts through PJRT ({} workers, batch {}, strategy {}) ...",
+        "serving {} prompts through the {} backend ({} workers, batch {}, strategy {}) ...",
         corpus.prompts.len(),
+        opts.execution.name(),
         cluster.devices.len(),
         opts.batch_size,
         opts.strategy
@@ -412,6 +446,13 @@ fn cmd_serve(flags: &Flags) -> anyhow::Result<()> {
             report.deferred,
             fmt::sci(report.est_saved_kg),
             report.deadline_violations
+        );
+    }
+    if report.sizing_holds > 0 {
+        println!(
+            "  sizing holds:     {} partial batches held, est saved {} kgCO2e",
+            report.sizing_holds,
+            fmt::sci(report.sizing_carbon_saved_kg)
         );
     }
     if report.replans > 0 {

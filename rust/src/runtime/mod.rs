@@ -1,4 +1,4 @@
-//! PJRT runtime: load AOT artifacts, execute real inference from Rust.
+//! Execution runtime: swappable inference backends over the AOT bridge.
 //!
 //! The request-path half of the AOT bridge (Python authored + lowered the
 //! models once; see python/compile/aot.py):
@@ -6,12 +6,20 @@
 //! - [`artifacts`] — manifest parsing/validation (the aot.py contract);
 //! - [`engine`] — PJRT CPU client, weight literals, compiled executables;
 //! - [`session`] — the prefill → greedy-decode loop with the KV cache
-//!   threaded between executions.
+//!   threaded between executions;
+//! - [`backend`] — the [`InferenceBackend`] trait every scheduling
+//!   layer consumes instead of the concrete [`Engine`]: [`PjrtBackend`]
+//!   (real execution), [`CalibratedBackend`] (deterministic stub, no
+//!   artifacts — powers `--execution stub`, the server smoke test and
+//!   the server-plane `bench scale` rows) and [`HybridBackend`]
+//!   (PJRT spot-check on the first batch per variant).
 
 pub mod artifacts;
+pub mod backend;
 pub mod engine;
 pub mod session;
 
 pub use artifacts::Manifest;
+pub use backend::{CalibratedBackend, HybridBackend, InferenceBackend, PjrtBackend};
 pub use engine::Engine;
 pub use session::{generate, GenerationOutput};

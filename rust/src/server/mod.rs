@@ -1,15 +1,19 @@
 //! Serving loop: threads + channels (tokio is unavailable offline; a
 //! thread-per-device worker pool is the natural shape here anyway —
-//! PJRT clients are not `Send`, so each worker owns its own engine).
+//! PJRT clients are not `Send`, so each worker owns its own backend).
 //!
 //! [`service`] implements the real-time loop used by the examples: an
 //! ingest thread replays the arrival trace on the wallclock and places
 //! every prompt through the shared scheduling core
 //! (`coordinator::policy` — routing, SLO deferral, forecast pricing),
 //! per-device workers pull batches (size- or timeout-triggered — the
-//! dynamic batcher) and execute them through their own PJRT engine, and
-//! a collector aggregates latency/throughput plus estimated
-//! energy/carbon with the run-at-arrival counterfactual.
+//! dynamic batcher), optionally hold partial all-deferrable batches
+//! for forecast clean windows (worker-side carbon sizing), and execute
+//! them through their own [`crate::runtime::InferenceBackend`] — real
+//! PJRT, hybrid, or the deterministic no-artifacts stub
+//! (`--execution stub`). A collector aggregates latency/throughput
+//! plus estimated energy/carbon with the run-at-arrival
+//! counterfactual.
 
 pub mod service;
 

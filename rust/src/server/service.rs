@@ -4,10 +4,10 @@
 //!
 //! ```text
 //!  ingest thread ──(mpsc)──► per-device queues ──► worker threads
-//!   (replays the arrival                            (own PJRT engine,
+//!   (replays the arrival                            (own InferenceBackend,
 //!    trace on wallclock,                             dynamic batching:
-//!    defers + routes via the                         full batch OR timeout)
-//!    shared policy core)
+//!    defers + routes via the                         full batch OR timeout,
+//!    shared policy core)                             carbon-sizing holds)
 //!                                         completions ──(mpsc)──► collector
 //! ```
 //!
@@ -19,20 +19,47 @@
 //! a grid context the ingest thread holds `Deferrable` prompts for
 //! forecast clean windows via [`PlacementPolicy::plan_release`] —
 //! temporal shifting on the wallclock, at `time_scale` compression.
+//! The release plan anchors at the prompt's *arrival instant* (not the
+//! measured wallclock, which trails it by scheduler jitter), so the
+//! deferral decision is a pure function of the arrival — deterministic
+//! and equivalent to the DES plane decision-for-decision (pinned by
+//! `tests/planes.rs`); execution still happens on the wallclock.
+//!
+//! Execution is behind the [`InferenceBackend`] trait: each worker
+//! constructs its own backend from [`ServeOptions::execution`] — real
+//! PJRT ([`crate::runtime::PjrtBackend`]), hybrid spot-checking, or the
+//! deterministic no-artifacts stub ([`crate::runtime::CalibratedBackend`],
+//! `--execution stub`), which also sleeps out the calibrated batch
+//! occupancy at `time_scale` compression so queueing and batching
+//! behave like the real engine's.
+//!
+//! **Worker-side carbon sizing** (the wallclock analogue of the DES's
+//! [`PlacementPolicy::plan_batch_hold`]): with the grid's `sizing` knob
+//! on, a worker that pulled only a *partial* batch of `Deferrable`
+//! prompts holds it for a forecast clean window — plan-once, priced on
+//! the executing device — waking early whenever a new prompt lands on
+//! its queue: an interactive joiner voids the hold and launches at
+//! once, so sizing can never delay interactive traffic. With `replan`
+//! on, each worker's own cold-cloned [`crate::grid::DriftTracker`]
+//! re-plans its pending hold (drift cancels the hold, cadence re-runs
+//! the planner) without ever consuming the triggers the ingest
+//! thread's deferral-queue replan depends on.
+//!
 //! With the grid's `replan` knob on, the ingest thread additionally
 //! re-plans its deferral queue on a timer (the policy's replan cadence
 //! clock, polled at every ingest wake-up — each arrival and each drain
 //! step): a due trigger re-runs [`PlacementPolicy::replan_release`]
 //! over every held prompt, releasing early when the planned window
 //! went stale and extending (never past the deadline bound) when a
-//! cleaner one appeared. Every strategy the closed-loop scheduler
-//! accepts (including `forecast-carbon-aware`) is servable here.
+//! cleaner one appeared.
 //!
 //! Energy is not measured on the wallclock; the collector instead
 //! posts *calibrated estimates* to an [`EnergyLedger`] at virtual
 //! completion times, with the run-at-arrival counterfactual, so the
 //! serving report carries the same carbon accounting as the other two
-//! planes.
+//! planes — including the sizing account
+//! ([`ServeReport::sizing_holds`] / [`ServeReport::sizing_carbon_saved_kg`],
+//! via [`EnergyLedger::post_sizing_hold`], matching the DES).
 
 use anyhow::{anyhow, Result};
 use std::collections::VecDeque;
@@ -41,9 +68,15 @@ use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::cluster::Cluster;
+use crate::config::ExecutionMode;
 use crate::coordinator::estimator::BenchmarkDb;
-use crate::coordinator::policy::{GridShiftConfig, PlacementPolicy};
-use crate::runtime::Engine;
+use crate::coordinator::policy::{
+    plan_batch_hold_with, replan_batch_hold_with, sizing_hold_saving_kg, GridShiftConfig,
+    PlacementPolicy,
+};
+use crate::runtime::{
+    backend::no_batch_err, CalibratedBackend, HybridBackend, InferenceBackend, PjrtBackend,
+};
 use crate::telemetry::EnergyLedger;
 use crate::util::stats::{Histogram, Summary};
 use crate::workload::Prompt;
@@ -54,7 +87,8 @@ pub struct ServeOptions {
     pub batch_size: usize,
     pub batch_timeout: Duration,
     pub max_new_tokens: usize,
-    /// Artifacts directory (each worker loads its own engine from it).
+    /// Artifacts directory (each PJRT-backed worker loads its own
+    /// engine from it; ignored by the stub backend).
     pub artifacts_dir: std::path::PathBuf,
     /// Compress the arrival trace by this factor (virtual seconds of
     /// trace per wallclock second); keeps demos fast.
@@ -62,9 +96,20 @@ pub struct ServeOptions {
     /// Strategy name for on-arrival routing, resolved by
     /// `router::build` (any strategy `verdant run` accepts).
     pub strategy: String,
-    /// Grid context enabling deferral and forecast-priced routing on
-    /// the wallclock; None restores purely spatial serving.
+    /// Grid context enabling deferral, worker-side carbon sizing and
+    /// forecast-priced routing on the wallclock; None restores purely
+    /// spatial serving.
     pub grid: Option<GridShiftConfig>,
+    /// Which [`InferenceBackend`] the workers construct: `Real` (PJRT),
+    /// `Hybrid` (PJRT spot-check + stub) or `Stub` (deterministic
+    /// stub, no artifacts — CI and `bench scale`). `Calibrated` is
+    /// rejected: serving always generates tokens.
+    pub execution: ExecutionMode,
+    /// Benchmark DB to price decisions with; `None` builds the default
+    /// in-process calibration. Inject the caller's DB when decisions
+    /// must be comparable across planes (the cross-plane tests and the
+    /// scale bench do).
+    pub db: Option<Arc<BenchmarkDb>>,
 }
 
 impl Default for ServeOptions {
@@ -77,6 +122,8 @@ impl Default for ServeOptions {
             time_scale: 50.0,
             strategy: "latency-aware".into(),
             grid: None,
+            execution: ExecutionMode::Real,
+            db: None,
         }
     }
 }
@@ -96,18 +143,36 @@ pub struct ServeReport {
     pub mean_batch_fill: f64,
     /// Requests served per device name.
     pub per_device: Vec<(String, usize)>,
+    /// Routing decision trail: (prompt id, device index) in dispatch
+    /// order — what the cross-plane equivalence tests compare against
+    /// the DES assignment.
+    pub assignment: Vec<(u64, usize)>,
     /// Prompts the ingest thread held for a cleaner window. Note the
     /// `latency_*` fields measure dispatch→completion wallclock time
     /// (service latency); the intentional deferral hold is not in them
     /// — deadline safety is audited in virtual time via
     /// [`Self::deadline_violations`].
     pub deferred: usize,
-    /// Receding-horizon replan passes the ingest thread executed over
-    /// its deferral queue (0 with the `replan` knob off).
+    /// Ids of the held prompts, sorted — the deferral decision set.
+    pub deferred_ids: Vec<u64>,
+    /// Worker-side carbon-sizing holds: partial all-deferrable batches
+    /// a worker held for a cleaner window (the DES's `held_partial`,
+    /// accounted through [`EnergyLedger::post_sizing_hold`]).
+    pub sizing_holds: usize,
+    /// Estimated carbon the sizing holds avoided, kgCO2e: each held
+    /// batch's calibrated energy priced at the planned launch minus at
+    /// the moment the hold was placed — the same at-plan basis the DES
+    /// posts, so the stat is comparable across planes.
+    pub sizing_carbon_saved_kg: f64,
+    /// Receding-horizon replan passes executed over held work — the
+    /// ingest thread's deferral-queue passes plus worker-side sizing
+    /// re-plans (0 with the `replan` knob off).
     pub replans: usize,
-    /// Held prompts a replan released earlier than originally planned.
+    /// Held prompts / sizing holds a replan released earlier than
+    /// originally planned.
     pub replan_released_early: usize,
-    /// Held prompts a replan extended toward a cleaner window.
+    /// Held prompts / sizing holds a replan extended toward a cleaner
+    /// window.
     pub replan_extended: usize,
     /// Deferrable prompts whose virtual completion missed their
     /// deadline (arrival + deadline, virtual seconds).
@@ -193,6 +258,51 @@ impl DeviceQueue {
         self.backlog_ms.fetch_sub(drained, Ordering::Relaxed);
         items
     }
+
+    /// Block up to `timeout` for the queue to become non-empty; `true`
+    /// means items are waiting (the sizing-hold wake-up: a new arrival
+    /// may top up — or void — a pending hold).
+    fn wait_for_item(&self, timeout: Duration) -> bool {
+        let guard = self.items.lock().unwrap();
+        if !guard.is_empty() {
+            return true;
+        }
+        let (g, _) = self.signal.wait_timeout(guard, timeout).unwrap();
+        !g.is_empty()
+    }
+
+    /// Non-blocking pull of up to `max` items (their backlog share is
+    /// released exactly as in [`Self::pull_batch`]).
+    fn try_drain(&self, max: usize) -> Vec<QueueItem> {
+        if max == 0 {
+            return Vec::new();
+        }
+        let mut guard = self.items.lock().unwrap();
+        let n = guard.len().min(max);
+        let items: Vec<QueueItem> = guard.drain(..n).collect();
+        drop(guard);
+        let drained: usize = items.iter().map(|i| i.est_ms).sum();
+        if drained > 0 {
+            self.backlog_ms.fetch_sub(drained, Ordering::Relaxed);
+        }
+        items
+    }
+}
+
+/// Batch-level bookkeeping a worker attaches to the first completion of
+/// a batch (the collector folds it into the report + ledger).
+#[derive(Debug, Clone, Default)]
+struct BatchAudit {
+    /// The batch was held by worker-side carbon sizing.
+    sizing_held: bool,
+    /// Estimated carbon the hold avoided (hold placement vs planned
+    /// launch, calibrated energy on the executing device — the DES's
+    /// at-plan basis), kgCO2e.
+    sizing_saved_kg: f64,
+    /// Replan triggers applied to this hold, and which way they moved it.
+    replans: u32,
+    replan_early: u32,
+    replan_extended: u32,
 }
 
 struct Completion {
@@ -209,22 +319,39 @@ struct Completion {
     /// Completion deadline for deferrable members (virtual seconds
     /// from arrival), for the violation audit.
     deadline_s: Option<f64>,
+    /// Batch-level audit, on the batch's first completion only.
+    audit: Option<BatchAudit>,
 }
 
 /// Serve a corpus end-to-end and report latency/throughput.
 ///
-/// Real PJRT inference on every batch; each worker thread owns its own
-/// engine (PJRT clients are not Send). The arrival trace is replayed at
-/// `time_scale`× speed.
+/// Each worker thread owns its own [`InferenceBackend`] (PJRT clients
+/// are not Send; the stub is simply cheap). The arrival trace is
+/// replayed at `time_scale`× speed.
 pub fn serve(cluster: &Cluster, prompts: &[Prompt], opts: &ServeOptions) -> Result<ServeReport> {
     let n_dev = cluster.devices.len();
     if n_dev == 0 || prompts.is_empty() {
         return Err(anyhow!("nothing to serve"));
     }
+    // serving always generates tokens, so "no generation at all" is a
+    // contradiction — reject it loudly rather than silently substitute
+    // the stub (plain `verdant serve` keeps its fail-fast PJRT path)
+    if opts.execution == ExecutionMode::Calibrated {
+        return Err(anyhow!(
+            "execution mode 'calibrated' skips generation and only exists for run/bench; \
+             serve needs a token-producing backend (real|hybrid|stub)"
+        ));
+    }
     // resolve the strategy BEFORE spawning anything: an unknown name
     // must fail loudly here, exactly as it does in `run` and `bench`
+    // (the policy stays on the ingest thread; workers get cold clones
+    // of the grid context only)
     let policy = PlacementPolicy::new(&opts.strategy, cluster, opts.grid.clone())?;
-    let db = Arc::new(BenchmarkDb::build(cluster, &[1, 4, 8], 2, 69.0, 7));
+    let db: Arc<BenchmarkDb> = match &opts.db {
+        Some(db) => Arc::clone(db),
+        None => Arc::new(BenchmarkDb::build(cluster, &[1, 4, 8], 2, 69.0, 7)),
+    };
+    let shared_cluster = Arc::new(cluster.clone());
 
     let queues: Arc<Vec<DeviceQueue>> =
         Arc::new((0..n_dev).map(|_| DeviceQueue::new()).collect());
@@ -237,36 +364,75 @@ pub fn serve(cluster: &Cluster, prompts: &[Prompt], opts: &ServeOptions) -> Resu
     let mut workers = Vec::new();
     for d in 0..n_dev {
         let dev = cluster.devices[d].clone();
+        let cluster = Arc::clone(&shared_cluster);
+        // a COLD clone of the grid context per worker: the worker's
+        // sizing holds plan and replan against their own drift clock,
+        // forecast memo and blend state, so a worker can never consume
+        // the drift/cadence trigger the ingest thread's deferral-queue
+        // replan is waiting for (and blending stays deterministic per
+        // thread)
+        let worker_grid = policy.grid.clone();
         let queues = Arc::clone(&queues);
         let done = Arc::clone(&done);
         let db = Arc::clone(&db);
         let tx = tx.clone();
         let opts = opts.clone();
         workers.push(std::thread::spawn(move || -> Result<()> {
-            let mut engine = Engine::load(&opts.artifacts_dir)?;
-            let batches: Vec<usize> = engine
-                .manifest
-                .variants
-                .get(&dev.model)
-                .map(|m| m.batch_sizes())
-                .unwrap_or_default();
-            engine.warmup(&dev.model, &batches)?;
+            let backend: Box<dyn InferenceBackend> = match opts.execution {
+                ExecutionMode::Real => {
+                    Box::new(PjrtBackend::load(&opts.artifacts_dir, &[dev.model.as_str()])?)
+                }
+                ExecutionMode::Hybrid => Box::new(HybridBackend::load(
+                    &opts.artifacts_dir,
+                    &[dev.model.as_str()],
+                    &cluster,
+                )?),
+                // Calibrated is rejected before any worker spawns
+                ExecutionMode::Stub | ExecutionMode::Calibrated => {
+                    Box::new(CalibratedBackend::from_cluster(&cluster))
+                }
+            };
             loop {
-                let items =
+                let mut items =
                     queues[d].pull_batch(opts.batch_size, opts.batch_timeout, &done);
                 if items.is_empty() {
                     return Ok(());
                 }
+                // worker-side carbon sizing: a partial all-deferrable
+                // batch may hold for a cleaner window (pre-empted by
+                // any arrival on this queue, re-planned on drift)
+                let audit = hold_for_sizing(
+                    &mut items,
+                    d,
+                    &cluster,
+                    &db,
+                    worker_grid.as_ref(),
+                    &queues[d],
+                    &opts,
+                    started,
+                );
                 let texts: Vec<&str> =
                     items.iter().map(|i| i.prompt.text.as_str()).collect();
-                let exec_batch = batches
-                    .iter()
-                    .copied()
-                    .find(|&b| b >= texts.len())
-                    .ok_or_else(|| anyhow!("no compiled batch"))?;
+                let exec_batch = backend
+                    .pick_batch(&dev.model, texts.len())
+                    .ok_or_else(|| no_batch_err(backend.as_ref(), &dev.model, texts.len()))?;
                 let out =
-                    crate::runtime::generate(&engine, &dev.model, exec_batch, &texts, opts.max_new_tokens)?;
+                    backend.generate(&dev.model, exec_batch, &texts, opts.max_new_tokens)?;
+                // synthesized generation is instantaneous; sleep out the
+                // calibrated batch occupancy at time_scale compression so
+                // queueing/batching dynamics match a real engine's
+                if opts.execution == ExecutionMode::Stub {
+                    let occ_s: f64 = items
+                        .iter()
+                        .map(|i| db.cost(&dev, &i.prompt, items.len().max(1)).e2e_s)
+                        .sum();
+                    let wall = occ_s / opts.time_scale;
+                    if wall > 2e-4 {
+                        std::thread::sleep(Duration::from_secs_f64(wall.min(0.25)));
+                    }
+                }
                 let vfinish_s = started.elapsed().as_secs_f64() * opts.time_scale;
+                let mut batch_audit = audit;
                 for (i, item) in items.iter().enumerate() {
                     let _ = tx.send(Completion {
                         device: d,
@@ -279,6 +445,7 @@ pub fn serve(cluster: &Cluster, prompts: &[Prompt], opts: &ServeOptions) -> Resu
                         arrival_s: item.prompt.arrival_s,
                         vfinish_s,
                         deadline_s: item.prompt.slo.deadline_s(),
+                        audit: batch_audit.take(),
                     });
                 }
             }
@@ -289,6 +456,8 @@ pub fn serve(cluster: &Cluster, prompts: &[Prompt], opts: &ServeOptions) -> Resu
     // --- ingest (this thread): replay, defer, route, re-plan ----------
     let mut held: Vec<(f64, Prompt)> = Vec::new();
     let mut deferred = 0usize;
+    let mut deferred_ids: Vec<u64> = Vec::new();
+    let mut assignment: Vec<(u64, usize)> = Vec::with_capacity(prompts.len());
     let mut replans = ReplanCounters::default();
     for p in prompts {
         // re-plan the deferral queue if the cadence/drift clock is due,
@@ -296,16 +465,25 @@ pub fn serve(cluster: &Cluster, prompts: &[Prompt], opts: &ServeOptions) -> Resu
         // arrival
         let now_v = started.elapsed().as_secs_f64() * opts.time_scale;
         replan_held(&mut held, &mut replans, cluster, &db, &policy, &queues, opts, now_v);
-        flush_held(&mut held, p.arrival_s, cluster, &db, &policy, &queues, opts, started);
+        flush_held(
+            &mut held, p.arrival_s, cluster, &db, &policy, &queues, opts, started,
+            &mut assignment,
+        );
         sleep_until_virtual(p.arrival_s, opts.time_scale, started);
-        let now_v = started.elapsed().as_secs_f64() * opts.time_scale;
         let backlog_total: f64 = queues.iter().map(|q| q.backlog_s()).sum();
-        let release = policy.plan_release(p, cluster, &db, opts.batch_size, backlog_total, now_v);
-        if release > now_v + 1e-6 {
+        // the release plan anchors at the ARRIVAL instant, not the
+        // (trailing) measured wallclock: the deferral decision is a
+        // pure function of the arrival — deterministic, and identical
+        // to the DES plane's. A release the wallclock has already
+        // passed simply dispatches at the next drain.
+        let release =
+            policy.plan_release(p, cluster, &db, opts.batch_size, backlog_total, p.arrival_s);
+        if release > p.arrival_s + 1e-6 {
             deferred += 1;
+            deferred_ids.push(p.id);
             held.push((release, p.clone()));
         } else {
-            dispatch(p, cluster, &db, &policy, &queues, opts, started);
+            dispatch(p, cluster, &db, &policy, &queues, opts, started, &mut assignment);
         }
     }
     // drain the deferral queue in release order, waking up for the next
@@ -320,7 +498,9 @@ pub fn serve(cluster: &Cluster, prompts: &[Prompt], opts: &ServeOptions) -> Resu
         };
         sleep_until_virtual(next_release.min(next_tick), opts.time_scale, started);
         let now_v = started.elapsed().as_secs_f64() * opts.time_scale;
-        flush_held(&mut held, now_v, cluster, &db, &policy, &queues, opts, started);
+        flush_held(
+            &mut held, now_v, cluster, &db, &policy, &queues, opts, started, &mut assignment,
+        );
     }
     done.store(true, Ordering::Release);
 
@@ -345,6 +525,14 @@ pub fn serve(cluster: &Cluster, prompts: &[Prompt], opts: &ServeOptions) -> Resu
                 deadline_violations += 1;
             }
         }
+        if let Some(a) = &c.audit {
+            if a.sizing_held {
+                ledger.post_sizing_hold(a.sizing_saved_kg);
+            }
+            replans.passes += a.replans as usize;
+            replans.released_early += a.replan_early as usize;
+            replans.extended += a.replan_extended as usize;
+        }
         ledger.post_batch_shifted(
             &cluster.devices[c.device].name,
             c.est_energy_kwh,
@@ -359,6 +547,7 @@ pub fn serve(cluster: &Cluster, prompts: &[Prompt], opts: &ServeOptions) -> Resu
     let wallclock = started.elapsed().as_secs_f64();
     let batches = (completed as f64 / fills.mean().max(1.0)).round() as usize;
     let (est_active_kwh, _, est_carbon_kg) = ledger.totals();
+    deferred_ids.sort_unstable();
 
     Ok(ServeReport {
         completed,
@@ -377,7 +566,11 @@ pub fn serve(cluster: &Cluster, prompts: &[Prompt], opts: &ServeOptions) -> Resu
             .zip(&per_device)
             .map(|(d, &c)| (d.name.clone(), c))
             .collect(),
+        assignment,
         deferred,
+        deferred_ids,
+        sizing_holds: ledger.sizing_stats().holds as usize,
+        sizing_carbon_saved_kg: ledger.sizing_stats().est_saved_kg,
         replans: replans.passes,
         replan_released_early: replans.released_early,
         replan_extended: replans.extended,
@@ -386,6 +579,104 @@ pub fn serve(cluster: &Cluster, prompts: &[Prompt], opts: &ServeOptions) -> Resu
         est_carbon_kg,
         est_saved_kg: ledger.realized_savings_kg(),
     })
+}
+
+/// Worker-side carbon-aware batch sizing: hold a partial all-deferrable
+/// batch for a forecast clean window, mirroring the DES semantics —
+/// the hold is **plan-once** (like the DES's `SizingHold` event: with
+/// `replan` off the planned launch never moves), priced on the
+/// executing device, and re-planned only when the batch membership
+/// changes (any arrival on this queue wakes the worker and tops the
+/// batch up; an interactive joiner voids the hold and launches
+/// immediately) or when this worker's own replan clock fires (`grid`
+/// is the worker's cold clone, so a due
+/// [`crate::grid::ReplanTrigger`] here never starves the ingest
+/// thread's: drift cancels the hold, cadence re-runs the planner —
+/// never past the deadline bound). Returns the batch audit when the
+/// batch was held; the savings estimate is the DES's at-plan basis
+/// (energy priced at the planned launch vs at hold placement).
+#[allow(clippy::too_many_arguments)]
+fn hold_for_sizing(
+    items: &mut Vec<QueueItem>,
+    d: usize,
+    cluster: &Cluster,
+    db: &BenchmarkDb,
+    grid: Option<&GridShiftConfig>,
+    queue: &DeviceQueue,
+    opts: &ServeOptions,
+    started: Instant,
+) -> Option<BatchAudit> {
+    let g = grid.filter(|g| g.sizing)?;
+    let vnow = || started.elapsed().as_secs_f64() * opts.time_scale;
+    let mut audit = BatchAudit::default();
+    let mut held_at: Option<f64> = None;
+    let mut hold: Option<f64> = None;
+    let mut stale = true; // membership changed since the last plan
+    loop {
+        if items.len() >= opts.batch_size {
+            break;
+        }
+        let now_v = vnow();
+        let members = || items.iter().map(|i| &i.prompt);
+        if stale {
+            stale = false;
+            hold = plan_batch_hold_with(g, cluster, db, members(), d, opts.batch_size, now_v);
+            if held_at.is_none() {
+                if let Some(until) = hold {
+                    // hold placed: post the shared at-plan savings
+                    // estimate (the identical formula the DES posts)
+                    held_at = Some(now_v);
+                    audit.sizing_held = true;
+                    audit.sizing_saved_kg = sizing_hold_saving_kg(
+                        cluster,
+                        db,
+                        members(),
+                        d,
+                        opts.batch_size,
+                        now_v,
+                        until,
+                    );
+                }
+            }
+        } else if g.replan && hold.is_some() {
+            if let Some(trigger) = g.replan_due(now_v) {
+                audit.replans += 1;
+                let old = hold.unwrap_or(now_v);
+                let new = replan_batch_hold_with(
+                    trigger,
+                    g,
+                    cluster,
+                    db,
+                    members(),
+                    d,
+                    opts.batch_size,
+                    now_v,
+                );
+                match new {
+                    Some(u) if u < old - 1e-6 => audit.replan_early += 1,
+                    Some(u) if u > old + 1e-6 => audit.replan_extended += 1,
+                    None => audit.replan_early += 1,
+                    _ => {}
+                }
+                hold = new;
+            }
+        }
+        let Some(until) = hold else { break };
+        if until <= now_v + 1e-9 {
+            break; // the planned window opened: launch
+        }
+        // sleep one bounded chunk toward the window, waking early the
+        // moment anything lands on this queue
+        let wall = ((until - now_v) / opts.time_scale).min(0.02).max(1e-4);
+        if queue.wait_for_item(Duration::from_secs_f64(wall)) {
+            let extra = queue.try_drain(opts.batch_size - items.len());
+            if !extra.is_empty() {
+                items.extend(extra);
+                stale = true; // re-plan: an interactive joiner yields None
+            }
+        }
+    }
+    held_at.map(|_| audit)
 }
 
 /// Sleep the ingest thread until virtual time `due` (scaled wallclock).
@@ -400,7 +691,8 @@ fn sleep_until_virtual(due_virtual_s: f64, time_scale: f64, started: Instant) {
     }
 }
 
-/// Ingest-side replan outcome counters (surfaced on [`ServeReport`]).
+/// Ingest-side replan outcome counters (surfaced on [`ServeReport`],
+/// merged with the workers' sizing-hold replan audits).
 #[derive(Default)]
 struct ReplanCounters {
     passes: usize,
@@ -449,7 +741,8 @@ fn replan_held(
     }
 }
 
-/// Route one prompt through the shared policy core and enqueue it.
+/// Route one prompt through the shared policy core, enqueue it, and
+/// record the routing decision on the assignment trail.
 #[allow(clippy::too_many_arguments)]
 fn dispatch(
     p: &Prompt,
@@ -459,10 +752,12 @@ fn dispatch(
     queues: &[DeviceQueue],
     opts: &ServeOptions,
     started: Instant,
+    assignment: &mut Vec<(u64, usize)>,
 ) {
     let now_v = started.elapsed().as_secs_f64() * opts.time_scale;
     let backlog: Vec<f64> = queues.iter().map(|q| q.backlog_s()).collect();
     let d = policy.route_arrival(p, cluster, db, opts.batch_size, &backlog, now_v);
+    assignment.push((p.id, d));
     let est = db.cost(&cluster.devices[d], p, opts.batch_size).e2e_s;
     queues[d].push(QueueItem {
         prompt: p.clone(),
@@ -483,6 +778,7 @@ fn flush_held(
     queues: &[DeviceQueue],
     opts: &ServeOptions,
     started: Instant,
+    assignment: &mut Vec<(u64, usize)>,
 ) {
     loop {
         let mut due: Option<(usize, f64)> = None;
@@ -497,7 +793,7 @@ fn flush_held(
         let Some((k, _)) = due else { return };
         let (release, p) = held.swap_remove(k);
         sleep_until_virtual(release, opts.time_scale, started);
-        dispatch(&p, cluster, db, policy, queues, opts, started);
+        dispatch(&p, cluster, db, policy, queues, opts, started, assignment);
     }
 }
 
@@ -551,6 +847,23 @@ mod tests {
     }
 
     #[test]
+    fn queue_wait_and_try_drain_release_backlog() {
+        let q = DeviceQueue::new();
+        assert!(!q.wait_for_item(Duration::from_millis(10)));
+        q.push(QueueItem {
+            prompt: crate::workload::canonical::P3.to_prompt(0),
+            enqueued: Instant::now(),
+            est_ms: 7,
+        });
+        assert!(q.wait_for_item(Duration::from_millis(10)));
+        assert!(q.backlog_s() > 0.0);
+        assert_eq!(q.try_drain(0).len(), 0);
+        assert_eq!(q.try_drain(4).len(), 1);
+        assert_eq!(q.backlog_s(), 0.0, "drained backlog must be released");
+        assert!(q.try_drain(4).is_empty());
+    }
+
+    #[test]
     fn serve_rejects_unknown_strategy_before_spawning() {
         let cfg = ExperimentConfig::default();
         let cluster = Cluster::from_config(&cfg.cluster);
@@ -558,5 +871,49 @@ mod tests {
         let opts = ServeOptions { strategy: "warp-speed".into(), ..ServeOptions::default() };
         let err = serve(&cluster, &prompts, &opts).unwrap_err().to_string();
         assert!(err.contains("unknown strategy"), "{err}");
+    }
+
+    #[test]
+    fn serve_rejects_calibrated_mode() {
+        let cfg = ExperimentConfig::default();
+        let cluster = Cluster::from_config(&cfg.cluster);
+        let prompts = vec![crate::workload::canonical::P3.to_prompt(0)];
+        let opts =
+            ServeOptions { execution: ExecutionMode::Calibrated, ..ServeOptions::default() };
+        let err = serve(&cluster, &prompts, &opts).unwrap_err().to_string();
+        assert!(err.contains("calibrated"), "{err}");
+    }
+
+    #[test]
+    fn stub_serving_completes_without_artifacts() {
+        // the wallclock plane end-to-end with the stub backend: no
+        // artifacts directory anywhere near this test
+        let cfg = ExperimentConfig::default();
+        let cluster = Cluster::from_config(&cfg.cluster);
+        let mut cfg2 = cfg;
+        cfg2.workload.prompts = 8;
+        let mut corpus = crate::workload::Corpus::generate(&cfg2.workload);
+        crate::workload::trace::assign_arrivals(
+            &mut corpus.prompts,
+            crate::config::Arrival::Open { rate: 4.0 },
+            7,
+        );
+        let opts = ServeOptions {
+            execution: ExecutionMode::Stub,
+            time_scale: 2000.0,
+            batch_timeout: Duration::from_millis(20),
+            artifacts_dir: std::path::PathBuf::from("/definitely/not/there"),
+            ..ServeOptions::default()
+        };
+        let r = serve(&cluster, &corpus.prompts, &opts).unwrap();
+        assert_eq!(r.completed, 8);
+        assert!(r.output_tokens > 0, "stub produced no tokens");
+        assert_eq!(r.assignment.len(), 8);
+        let mut ids: Vec<u64> = r.assignment.iter().map(|&(id, _)| id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..8).collect::<Vec<u64>>(), "every prompt routed exactly once");
+        assert!(r.est_energy_kwh > 0.0);
+        assert_eq!(r.deferred, 0);
+        assert_eq!(r.sizing_holds, 0);
     }
 }

@@ -3,5 +3,5 @@
 pub mod ledger;
 pub mod metrics;
 
-pub use ledger::{EnergyLedger, ReplanStats};
+pub use ledger::{EnergyLedger, ReplanStats, SizingStats};
 pub use metrics::{RequestMetrics, MetricsAggregate};

@@ -24,9 +24,21 @@
 //!    over randomized drift-injected traces), and on a drift-injected
 //!    trace re-planning beats plan-once on carbon at an equal
 //!    deadline-violation count.
+//! 6. **Stub-server ≡ DES decisions** — the wallclock server on the
+//!    no-artifacts stub backend (`ExecutionMode::Stub`) makes the same
+//!    *policy decisions* as the DES, decision for decision: identical
+//!    per-prompt routing and an identical deferral set (release plans
+//!    anchor at the arrival instant, so they are pure functions of the
+//!    corpus). Batch *composition* is intentionally not pinned — the
+//!    wallclock batcher is timeout-driven by design — but worker-side
+//!    carbon sizing obeys the same safety properties as the DES's:
+//!    deadlines never violated, interactive prompts never held.
+
+use std::sync::Arc;
+use std::time::Duration;
 
 use verdant::cluster::{CarbonModel, Cluster};
-use verdant::config::{Arrival, ExperimentConfig};
+use verdant::config::{Arrival, ExecutionMode, ExperimentConfig};
 use verdant::coordinator::online::{run_online, OnlineConfig};
 use verdant::coordinator::{
     form_batches, run, BenchmarkDb, GridShiftConfig, Grouping, PlacementPolicy, RouteContext,
@@ -424,6 +436,204 @@ fn replan_never_releases_past_the_slo_deadline() {
         }
         Ok(())
     });
+}
+
+/// A diurnal-trace serving scenario shared by the stub-server tests:
+/// light open-loop load with a seeded deferrable fraction, plus the
+/// grid context and a benchmark DB *injected into both planes* (the
+/// decisions are only comparable when every plane prices with the same
+/// calibration).
+fn stub_setup(
+    n: usize,
+    rate: f64,
+    frac: f64,
+    deadline_s: f64,
+    arrive_shift_h: f64,
+) -> (Cluster, Vec<Prompt>, Arc<BenchmarkDb>, verdant::grid::GridTrace) {
+    let mut cfg = ExperimentConfig::default();
+    cfg.workload.prompts = n;
+    let mut cluster = Cluster::from_config(&cfg.cluster);
+    let grid_trace = CarbonModel::diurnal(69.0, 0.3).to_trace(900.0);
+    cluster.carbon = CarbonModel::from_trace(grid_trace.clone()).into();
+    let mut corpus = Corpus::generate(&cfg.workload);
+    trace::assign_arrivals(&mut corpus.prompts, Arrival::Open { rate }, 7);
+    for p in &mut corpus.prompts {
+        p.arrival_s += arrive_shift_h * 3600.0;
+    }
+    trace::assign_slos(&mut corpus.prompts, frac, deadline_s, 21);
+    let db = Arc::new(BenchmarkDb::build(&cluster, &[1, 4, 8], 2, 69.0, 1));
+    (cluster, corpus.prompts, db, grid_trace)
+}
+
+fn stub_opts(
+    strategy: &str,
+    grid: Option<GridShiftConfig>,
+    db: &Arc<BenchmarkDb>,
+) -> ServeOptions {
+    ServeOptions {
+        execution: ExecutionMode::Stub,
+        strategy: strategy.into(),
+        grid,
+        db: Some(Arc::clone(db)),
+        time_scale: 50_000.0,
+        batch_timeout: Duration::from_millis(10),
+        artifacts_dir: std::path::PathBuf::from("/nonexistent-artifacts"),
+        ..ServeOptions::default()
+    }
+}
+
+#[test]
+fn stub_server_matches_des_routing_and_deferral_decisions() {
+    // carbon-aware routing is backlog-free and release planning anchors
+    // at the arrival instant, so both decisions are pure functions of
+    // (corpus, db, grid): the wallclock server on the stub backend must
+    // reproduce the DES decision-for-decision. The deadline is chosen
+    // so the release planner's safety margin is dominated by its
+    // 10%-of-deadline floor (identical in both planes regardless of
+    // live backlog).
+    let (cluster, prompts, db, grid_trace) =
+        stub_setup(40, 1.0 / 600.0, 0.5, 12.0 * 3600.0, 0.0);
+    let grid = || GridShiftConfig::new(grid_trace.clone(), ForecastKind::Harmonic);
+
+    let des_cfg = OnlineConfig {
+        strategy: "carbon-aware".into(),
+        grid: Some(grid()),
+        ..OnlineConfig::default()
+    };
+    let des = run_online(&cluster, &prompts, &db, &des_cfg).unwrap();
+    let rep = serve(&cluster, &prompts, &stub_opts("carbon-aware", Some(grid()), &db)).unwrap();
+
+    assert_eq!(des.completed, 40);
+    assert_eq!(rep.completed, 40);
+    assert!(des.deferred > 0, "scenario must defer work or the pin has no teeth");
+
+    // routing: identical device per prompt
+    let idx_of = |id: u64| prompts.iter().position(|p| p.id == id).unwrap();
+    let mut server_assign = vec![usize::MAX; prompts.len()];
+    for &(id, d) in &rep.assignment {
+        assert_eq!(server_assign[idx_of(id)], usize::MAX, "prompt {id} dispatched twice");
+        server_assign[idx_of(id)] = d;
+    }
+    assert_eq!(server_assign, des.assignment, "routing decisions diverged");
+
+    // deferral: identical decision set and count
+    assert_eq!(rep.deferred_ids, des.deferred_ids, "deferral sets diverged");
+    assert_eq!(rep.deferred, des.deferred);
+
+    // both planes kept the SLO contract
+    assert_eq!(des.deadline_violations, 0);
+    assert_eq!(rep.deadline_violations, 0);
+
+    // wallclock batching is timeout-driven, not pinned — but it must
+    // respect the batch-size envelope
+    assert!(rep.mean_batch_fill >= 1.0 && rep.mean_batch_fill <= 4.0 + 1e-9);
+}
+
+#[test]
+fn stub_server_decisions_are_deterministic_across_runs() {
+    let (cluster, prompts, db, grid_trace) =
+        stub_setup(30, 1.0 / 600.0, 0.5, 12.0 * 3600.0, 0.0);
+    let grid = || GridShiftConfig::new(grid_trace.clone(), ForecastKind::Harmonic);
+    let a = serve(&cluster, &prompts, &stub_opts("carbon-aware", Some(grid()), &db)).unwrap();
+    let b = serve(&cluster, &prompts, &stub_opts("carbon-aware", Some(grid()), &db)).unwrap();
+    assert_eq!(a.deferred_ids, b.deferred_ids);
+    let sorted = |r: &verdant::server::ServeReport| {
+        let mut v = r.assignment.clone();
+        v.sort_unstable();
+        v
+    };
+    assert_eq!(sorted(&a), sorted(&b), "routing must not depend on wallclock jitter");
+}
+
+#[test]
+fn stub_server_worker_sizing_holds_partial_batches_safely() {
+    // all-deferrable evening load with deferral OFF: worker-side carbon
+    // sizing is the only temporal lever, and it must hold partial
+    // batches toward cleaner windows without ever missing a deadline
+    let (cluster, prompts, db, grid_trace) =
+        stub_setup(16, 1.0 / 1200.0, 1.0, 10.0 * 3600.0, 17.0);
+    let grid = GridShiftConfig::new(grid_trace, ForecastKind::Harmonic)
+        .with_defer(false)
+        .with_sizing(true);
+    let rep = serve(&cluster, &prompts, &stub_opts("carbon-aware", Some(grid), &db)).unwrap();
+    assert_eq!(rep.completed, 16);
+    assert_eq!(rep.deferred, 0, "deferral is off; only sizing may hold");
+    assert!(rep.sizing_holds > 0, "no worker-side sizing hold happened");
+    assert_eq!(rep.deadline_violations, 0, "a sizing hold broke an SLO deadline");
+    // holds move evening work toward cleaner hours: the at-hold
+    // estimate must come out positive in aggregate
+    assert!(
+        rep.sizing_carbon_saved_kg > 0.0,
+        "sizing holds saved {} kg",
+        rep.sizing_carbon_saved_kg
+    );
+}
+
+#[test]
+fn stub_server_sizing_never_delays_interactive_prompts() {
+    // zero deferrable load: sizing has no lever, so nothing may be held
+    let (cluster, prompts, db, grid_trace) =
+        stub_setup(12, 1.0 / 300.0, 0.0, 3600.0, 17.0);
+    let grid = GridShiftConfig::new(grid_trace, ForecastKind::Harmonic)
+        .with_defer(false)
+        .with_sizing(true);
+    let rep = serve(&cluster, &prompts, &stub_opts("carbon-aware", Some(grid), &db)).unwrap();
+    assert_eq!(rep.completed, 12);
+    assert_eq!(rep.sizing_holds, 0, "sizing held a batch with an interactive member");
+    assert_eq!(rep.deferred, 0);
+}
+
+#[test]
+fn stub_server_sizing_property_deadlines_hold_under_random_mixes() {
+    // randomized deferrable fractions / deadlines / loads through the
+    // real threaded server: deadlines are never violated and the corpus
+    // always completes (the wallclock mirror of the DES properties;
+    // few iterations — each one is a real-time run)
+    property("worker sizing honours SLOs on the wallclock", 3, |rng| {
+        let frac = rng.range(0.3, 1.0);
+        let deadline = rng.range(4.0 * 3600.0, 12.0 * 3600.0);
+        let rate = 1.0 / rng.range(400.0, 1500.0);
+        let (cluster, prompts, db, grid_trace) = stub_setup(12, rate, frac, deadline, 17.0);
+        let grid = GridShiftConfig::new(grid_trace, ForecastKind::Harmonic)
+            .with_defer(false)
+            .with_sizing(true);
+        let rep = serve(&cluster, &prompts, &stub_opts("carbon-aware", Some(grid), &db))
+            .map_err(|e| e.to_string())?;
+        if rep.completed != 12 {
+            return Err(format!("only {} of 12 completed", rep.completed));
+        }
+        if rep.deadline_violations != 0 {
+            return Err(format!(
+                "{} deadline violations (frac {frac:.2}, deadline {deadline:.0}s, rate {rate:.5})",
+                rep.deadline_violations
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn blended_planning_stays_safe_and_deterministic_in_the_des() {
+    // the blend knob discounts forecasts toward persistence under
+    // drift; on the cleanly-forecastable diurnal trace it must not
+    // break deferral, deadlines or determinism
+    let (cluster, prompts, db, grid_trace) =
+        stub_setup(60, 1.0 / 300.0, 0.5, 10.0 * 3600.0, 0.0);
+    let cfg = OnlineConfig {
+        strategy: "forecast-carbon-aware".into(),
+        grid: Some(
+            GridShiftConfig::new(grid_trace, ForecastKind::Harmonic).with_blend(true),
+        ),
+        ..OnlineConfig::default()
+    };
+    let a = run_online(&cluster, &prompts, &db, &cfg).unwrap();
+    let b = run_online(&cluster, &prompts, &db, &cfg).unwrap();
+    assert_eq!(a.completed, 60);
+    assert!(a.deferred > 0, "blending must not kill deferral on a clean trace");
+    assert_eq!(a.deadline_violations, 0);
+    assert_eq!(a.span_s, b.span_s);
+    assert_eq!(a.deferred_ids, b.deferred_ids);
+    assert_eq!(a.ledger.totals(), b.ledger.totals());
 }
 
 #[test]
