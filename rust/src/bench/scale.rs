@@ -167,6 +167,10 @@ pub fn run(env: &Env, counts: &[usize]) -> (Vec<ScaleRow>, Table) {
             let cfg = OnlineConfig {
                 strategy: strategy.clone(),
                 grid: grid.clone(),
+                // flight recorder explicitly off: these timed runs
+                // measure the allocation-free disabled path the CI
+                // bench gate defends
+                trace: None,
                 ..OnlineConfig::default()
             };
             let t0 = Instant::now();
@@ -227,6 +231,7 @@ pub fn run(env: &Env, counts: &[usize]) -> (Vec<ScaleRow>, Table) {
                     grid,
                     execution: ExecutionMode::Stub,
                     db: Some(Arc::new(env.db.clone())),
+                    trace: None, // disabled path, same as the DES rows
                     ..ServeOptions::default()
                 };
                 let t0 = Instant::now();

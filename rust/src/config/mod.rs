@@ -218,6 +218,21 @@ pub struct ServingConfig {
     /// trust/distrust replan trigger. Off by default — planning is
     /// bit-for-bit the pure-fit behaviour.
     pub blend: bool,
+    /// Hybrid execution: re-audit every Nth batch per artifact variant
+    /// through PJRT (0 = legacy first-batch-only spot-check).
+    pub spot_check_every_n: usize,
+}
+
+/// Flight-recorder / metrics-registry knobs (`[observability]` table;
+/// the `--trace` / `--metrics-json` CLI flags override both paths).
+#[derive(Debug, Clone, Default)]
+pub struct ObservabilityConfig {
+    /// Write one JSONL trace event per scheduling decision here.
+    /// `None` (the default) disables tracing entirely — the decision
+    /// hot path never allocates an event.
+    pub trace: Option<String>,
+    /// Dump the end-of-run metrics-registry snapshot as JSON here.
+    pub metrics_json: Option<String>,
 }
 
 /// Top-level experiment configuration.
@@ -226,6 +241,7 @@ pub struct ExperimentConfig {
     pub cluster: ClusterConfig,
     pub workload: WorkloadConfig,
     pub serving: ServingConfig,
+    pub observability: ObservabilityConfig,
     /// Directory containing manifest.json + HLO artifacts.
     pub artifacts_dir: String,
 }
@@ -275,7 +291,9 @@ impl Default for ExperimentConfig {
                 replan_interval_s: 900.0,
                 drift_threshold: 0.2,
                 blend: false,
+                spot_check_every_n: 0,
             },
+            observability: ObservabilityConfig::default(),
             artifacts_dir: "artifacts".into(),
         }
     }
@@ -415,6 +433,17 @@ impl ExperimentConfig {
             }
             if let Some(b) = s.get("blend").and_then(Value::as_bool) {
                 cfg.serving.blend = b;
+            }
+            if let Some(n) = s.get("spot_check_every_n").and_then(Value::as_usize) {
+                cfg.serving.spot_check_every_n = n;
+            }
+        }
+        if let Some(o) = v.get("observability") {
+            if let Some(p) = o.get("trace").and_then(Value::as_str) {
+                cfg.observability.trace = Some(p.to_string());
+            }
+            if let Some(p) = o.get("metrics_json").and_then(Value::as_str) {
+                cfg.observability.metrics_json = Some(p.to_string());
             }
         }
         if let Some(a) = v.get("artifacts_dir").and_then(Value::as_str) {
@@ -843,6 +872,28 @@ blend = true
         // missing file errors instead of silently falling back
         let doc = "[cluster.carbon]\nmodel = \"trace\"\ntrace_file = \"/nonexistent/x.csv\"\n";
         assert!(ExperimentConfig::from_value(&toml::parse(doc).unwrap()).is_err());
+    }
+
+    #[test]
+    fn observability_table_roundtrip() {
+        // default: tracing and the metrics dump are both off
+        let d = ExperimentConfig::default();
+        assert!(d.observability.trace.is_none());
+        assert!(d.observability.metrics_json.is_none());
+        assert_eq!(d.serving.spot_check_every_n, 0);
+
+        let doc = r#"
+[serving]
+spot_check_every_n = 16
+
+[observability]
+trace = "out/decisions.jsonl"
+metrics_json = "out/metrics.json"
+"#;
+        let c = ExperimentConfig::from_value(&toml::parse(doc).unwrap()).unwrap();
+        assert_eq!(c.observability.trace.as_deref(), Some("out/decisions.jsonl"));
+        assert_eq!(c.observability.metrics_json.as_deref(), Some("out/metrics.json"));
+        assert_eq!(c.serving.spot_check_every_n, 16);
     }
 
     #[test]

@@ -360,6 +360,16 @@ sub = { a = 1, b = "x" }
     }
 
     #[test]
+    fn observability_table_parses_like_any_other() {
+        // the `[observability]` section the flight recorder reads is
+        // plain string keys — make sure paths with dots/slashes survive
+        let doc = "[observability]\ntrace = \"out/run.jsonl\"\nmetrics_json = \"m.json\"\n";
+        let v = parse(doc).unwrap();
+        assert_eq!(v.path(&["observability", "trace"]).unwrap().as_str(), Some("out/run.jsonl"));
+        assert_eq!(v.path(&["observability", "metrics_json"]).unwrap().as_str(), Some("m.json"));
+    }
+
+    #[test]
     fn nested_inline_arrays() {
         let v = parse("m = [[1, 2], [3, 4]]\n").unwrap();
         let outer = v.get("m").unwrap().as_arr().unwrap();

@@ -45,12 +45,14 @@
 //! identical to plan-once, pinned by `tests/planes.rs`.
 
 use std::collections::VecDeque;
+use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 
 use crate::cluster::Cluster;
 use crate::simulator::{simulate_batch, BatchWork, EventQueue};
-use crate::telemetry::EnergyLedger;
+use crate::telemetry::trace::{TraceEvent, TraceSink};
+use crate::telemetry::{EnergyLedger, MetricsRegistry};
 use crate::util::stats::{Histogram, Summary};
 use crate::workload::Prompt;
 
@@ -79,6 +81,10 @@ pub struct OnlineConfig {
     /// Grid trace + forecaster for temporal shifting; None restores the
     /// purely spatial behaviour.
     pub grid: Option<GridShiftConfig>,
+    /// Decision flight recorder; `None` (the default) keeps every
+    /// decision path allocation-free (see
+    /// [`crate::telemetry::trace`]).
+    pub trace: Option<Arc<TraceSink>>,
 }
 
 impl Default for OnlineConfig {
@@ -88,6 +94,7 @@ impl Default for OnlineConfig {
             policy: BatchPolicy::Immediate,
             strategy: "latency-aware".into(),
             grid: None,
+            trace: None,
         }
     }
 }
@@ -126,6 +133,9 @@ pub struct OnlineResult {
     /// Per-device utilization (busy / span).
     pub utilization: Vec<(String, f64)>,
     pub ledger: EnergyLedger,
+    /// End-of-run metrics snapshot (see
+    /// [`crate::telemetry::registry`] for the series names).
+    pub metrics: MetricsRegistry,
 }
 
 #[derive(Debug)]
@@ -201,6 +211,10 @@ struct State {
     inflight: Vec<Option<(Vec<usize>, f64)>>,
     queue_wait: Summary,
     batch_fill: Summary,
+    /// Total queued prompts across devices, observed per launch.
+    queue_depth: Summary,
+    /// Deferral-queue length, observed per launch.
+    deferral_len: Summary,
     ledger: EnergyLedger,
     deferred: usize,
     deferred_ids: Vec<u64>,
@@ -226,7 +240,10 @@ pub fn run_online(
         return Err(anyhow!("nothing to simulate"));
     }
     // the single place this plane turns a name into a placement policy
-    let policy = PlacementPolicy::new(&cfg.strategy, cluster, cfg.grid.clone())?;
+    let mut policy = PlacementPolicy::new(&cfg.strategy, cluster, cfg.grid.clone())?;
+    if let Some(sink) = &cfg.trace {
+        policy = policy.with_trace(Arc::clone(sink));
+    }
     let ctx = Ctx { cluster, prompts, db, cfg, policy: &policy };
 
     let mut st = State {
@@ -247,6 +264,8 @@ pub fn run_online(
         inflight: vec![None; n_dev],
         queue_wait: Summary::new(),
         batch_fill: Summary::new(),
+        queue_depth: Summary::new(),
+        deferral_len: Summary::new(),
         ledger: EnergyLedger::new(cluster.carbon.clone()),
         deferred: 0,
         deferred_ids: Vec::new(),
@@ -296,6 +315,9 @@ pub fn run_online(
                 // a replan may have superseded this release
                 if matches!(st.held.get(&i), Some(&(_, e)) if e == epoch) {
                     st.held.remove(&i);
+                    if let Some(sink) = policy.trace_sink() {
+                        sink.emit(&TraceEvent::Release { t: now, prompt: prompts[i].id });
+                    }
                     admit(&ctx, &mut st, i, true, now);
                 }
             }
@@ -347,6 +369,20 @@ pub fn run_online(
     }
 
     st.deferred_ids.sort_unstable();
+    let mut metrics = MetricsRegistry::new();
+    metrics.add("decisions_total", completed as u64);
+    metrics.add("defers_total", st.deferred as u64);
+    metrics.add("batches_total", st.batch_fill.count());
+    metrics.add("deadline_violations_total", deadline_violations as u64);
+    metrics.set_gauge("decisions_per_s", completed as f64 / span.max(1e-9));
+    if let Some(g) = &policy.grid {
+        metrics.set_gauge("drift_mape", g.drift_mape());
+    }
+    metrics.observe_summary("queue_depth", &st.queue_depth);
+    metrics.observe_summary("deferral_queue_len", &st.deferral_len);
+    metrics.observe_summary("batch_fill", &st.batch_fill);
+    metrics.observe_summary("queue_wait", &st.queue_wait);
+    metrics.record_ledger(&st.ledger);
     Ok(OnlineResult {
         completed,
         span_s: span,
@@ -368,6 +404,7 @@ pub fn run_online(
             .map(|(dev, d)| (dev.name.clone(), d.active_s / span.max(1e-9)))
             .collect(),
         ledger: st.ledger,
+        metrics,
     })
 }
 
@@ -421,7 +458,7 @@ fn maybe_launch(ctx: &Ctx, st: &mut State, d: usize, now: f64) {
                     // count held batches, not re-plans of the same hold,
                     // and post the shared at-plan savings estimate
                     st.held_partial += 1;
-                    st.ledger.post_sizing_hold(super::policy::sizing_hold_saving_kg(
+                    let saved = super::policy::sizing_hold_saving_kg(
                         ctx.cluster,
                         ctx.db,
                         queued.iter().map(|&i| &ctx.prompts[i]),
@@ -429,7 +466,17 @@ fn maybe_launch(ctx: &Ctx, st: &mut State, d: usize, now: f64) {
                         ctx.cfg.batch_size,
                         now,
                         until,
-                    ));
+                    );
+                    st.ledger.post_sizing_hold(saved);
+                    if let Some(sink) = ctx.policy.trace_sink() {
+                        sink.emit(&TraceEvent::SizingHold {
+                            t: now,
+                            device: ctx.cluster.devices[d].name.clone(),
+                            members: queued.iter().map(|&i| ctx.prompts[i].id).collect(),
+                            hold_until_s: until,
+                            est_saved_kg: saved,
+                        });
+                    }
                 }
                 st.devs[d].sizing_hold = true;
                 st.devs[d].hold_until = until;
@@ -446,6 +493,12 @@ fn maybe_launch(ctx: &Ctx, st: &mut State, d: usize, now: f64) {
                 // pre-empt it and launch immediately — under ANY
                 // batch policy, so WaitFill cannot strand the queue
                 // behind a stale hold
+                if let Some(sink) = ctx.policy.trace_sink() {
+                    sink.emit(&TraceEvent::HoldVoid {
+                        t: now,
+                        device: ctx.cluster.devices[d].name.clone(),
+                    });
+                }
                 st.devs[d].waiting_since = None;
                 launch(ctx, st, d, now);
                 return;
@@ -564,6 +617,16 @@ fn maybe_replan(ctx: &Ctx, st: &mut State, now: f64) {
         }
     }
     st.ledger.post_replan(early, later, delta);
+    if let Some(sink) = ctx.policy.trace_sink() {
+        sink.emit(&TraceEvent::Replan {
+            t: now,
+            trigger: trigger.name().to_string(),
+            drift_mape: g.drift_mape(),
+            released_early: early as usize,
+            extended: later as usize,
+            delta_kg: delta,
+        });
+    }
 }
 
 /// Estimated carbon delta of moving prompt `i`'s release from `old` to
@@ -588,6 +651,11 @@ fn replan_delta_kg(ctx: &Ctx, i: usize, old: f64, new: f64) -> f64 {
 
 fn launch(ctx: &Ctx, st: &mut State, d: usize, now: f64) {
     let dev = &ctx.cluster.devices[d];
+    // per-launch observability (never per-arrival: a handful of float
+    // ops per batch, no allocation, no map lookup)
+    let depth: usize = st.devs.iter().map(|x| x.queued()).sum();
+    st.queue_depth.add(depth as f64);
+    st.deferral_len.add(st.held.len() as f64);
     // launching invalidates any pending timeout/hold for this device
     st.devs[d].epoch += 1;
     st.devs[d].sizing_hold = false;
@@ -621,6 +689,15 @@ fn launch(ctx: &Ctx, st: &mut State, d: usize, now: f64) {
             .collect(),
     );
     let timing = simulate_batch(dev, &work, None);
+    if let Some(sink) = ctx.policy.trace_sink() {
+        sink.emit(&TraceEvent::BatchLaunch {
+            t: now,
+            device: dev.name.clone(),
+            members: members.iter().map(|&i| ctx.prompts[i].id).collect(),
+            energy_kwh: timing.energy_kwh,
+            carbon_kg: ctx.cluster.carbon.kg_co2e(timing.energy_kwh, now + timing.total_s),
+        });
+    }
     let arrivals: Vec<f64> = members.iter().map(|&i| ctx.prompts[i].arrival_s).collect();
     st.ledger.post_batch_shifted(
         &dev.name,
@@ -989,6 +1066,46 @@ mod tests {
         let r2 = run_online(&cluster, &prompts, &db, &cfg).unwrap();
         assert_eq!(r.span_s, r2.span_s);
         assert_eq!(r.ledger.replan_stats(), r2.ledger.replan_stats());
+    }
+
+    #[test]
+    fn metrics_snapshot_mirrors_the_run() {
+        let (cluster, prompts, db) = setup(40, 0.5);
+        let r = run_online(&cluster, &prompts, &db, &OnlineConfig::default()).unwrap();
+        assert_eq!(r.metrics.counter("decisions_total") as usize, r.completed);
+        assert_eq!(r.metrics.counter("batches_total"), r.batch_fill.count());
+        assert_eq!(r.metrics.counter("defers_total"), 0);
+        assert!(r.metrics.gauge("decisions_per_s").unwrap() > 0.0);
+        assert!(r.metrics.gauge("energy_kwh").unwrap() > 0.0);
+        assert!(r.metrics.gauge("carbon_kg").unwrap() > 0.0);
+        // one queue-depth observation per launched batch
+        assert_eq!(r.metrics.series("queue_depth").unwrap().count(), r.batch_fill.count());
+    }
+
+    #[test]
+    fn flight_recorder_captures_des_decisions() {
+        let (cluster, prompts, db, grid) = shifting_setup(60, 0.5);
+        let sink = Arc::new(TraceSink::memory());
+        let cfg = OnlineConfig {
+            strategy: "forecast-carbon-aware".into(),
+            grid: Some(grid),
+            trace: Some(Arc::clone(&sink)),
+            ..OnlineConfig::default()
+        };
+        let r = run_online(&cluster, &prompts, &db, &cfg).unwrap();
+        let text = sink.contents();
+        let count = |ev: &str| {
+            text.lines().filter(|l| l.contains(&format!("\"ev\":\"{ev}\""))).count()
+        };
+        assert_eq!(count("route"), r.completed, "one route event per admitted prompt");
+        assert_eq!(count("defer"), r.deferred, "one defer event per held prompt");
+        assert_eq!(count("release"), r.deferred, "every held prompt is released once");
+        assert!(count("batch_launch") > 0);
+        // every emitted line round-trips through the event schema
+        for line in text.lines() {
+            let v = crate::util::json::parse(line).expect(line);
+            TraceEvent::from_value(&v).expect(line);
+        }
     }
 
     #[test]

@@ -53,6 +53,7 @@ use anyhow::Result;
 
 use crate::cluster::{CarbonModel, Cluster};
 use crate::grid::{shift, DriftTracker, ForecastCache, ForecastKind, GridTrace, ReplanTrigger};
+use crate::telemetry::trace::{TraceEvent, TraceSink};
 use crate::workload::Prompt;
 
 use super::batcher::{form_batches_ordered, Batch, Grouping};
@@ -245,6 +246,18 @@ impl GridShiftConfig {
         self.drift.mape()
     }
 
+    /// The blend weight the next [`Self::forecast_at`] call at the
+    /// current step would apply: `clamp(mape / drift_threshold, 0, 1)`
+    /// over the blending tracker's rolling one-step MAPE, 0 with
+    /// blending off. Read-only — the flight recorder stamps deferral
+    /// events with it without advancing the tracker.
+    pub fn blend_weight(&self) -> f64 {
+        if !self.blend {
+            return 0.0;
+        }
+        (self.blend_drift.mape() / self.drift_threshold).clamp(0.0, 1.0)
+    }
+
     /// The fitted forecast at trace step `step_now`, long enough to
     /// index `horizon` steps ahead: `(current, forecast)` where
     /// `current` is the observed sample at `step_now` (history ends at
@@ -385,6 +398,12 @@ pub struct PlacementPolicy {
     strategy: Box<dyn Strategy>,
     /// Grid context; `None` restores purely spatial placement.
     pub grid: Option<GridShiftConfig>,
+    /// Decision flight recorder. `None` (the default) keeps every
+    /// decision path allocation-free: emission sites are guarded by a
+    /// single `Option` branch and build their event payloads only on
+    /// the enabled arm, so the PR-3/PR-4 hot-path numbers are
+    /// unaffected when tracing is off.
+    trace: Option<Arc<TraceSink>>,
 }
 
 impl PlacementPolicy {
@@ -392,7 +411,7 @@ impl PlacementPolicy {
     /// place any plane turns a name into a placement policy. Unknown
     /// names error here, loudly, for every plane.
     pub fn new(strategy: &str, cluster: &Cluster, grid: Option<GridShiftConfig>) -> Result<Self> {
-        Ok(PlacementPolicy { strategy: router::build(strategy, cluster)?, grid })
+        Ok(PlacementPolicy { strategy: router::build(strategy, cluster)?, grid, trace: None })
     }
 
     /// A purely spatial policy (no grid context) — the paper's setup.
@@ -402,7 +421,22 @@ impl PlacementPolicy {
 
     /// Wrap an already-built strategy.
     pub fn from_strategy(strategy: Box<dyn Strategy>, grid: Option<GridShiftConfig>) -> Self {
-        PlacementPolicy { strategy, grid }
+        PlacementPolicy { strategy, grid, trace: None }
+    }
+
+    /// Attach a decision flight recorder: every routing and deferral
+    /// decision made through this policy emits one structured
+    /// [`TraceEvent`] to `sink`.
+    pub fn with_trace(mut self, sink: Arc<TraceSink>) -> Self {
+        self.trace = Some(sink);
+        self
+    }
+
+    /// The attached flight recorder, if any — planes clone it to stamp
+    /// plane-level events (releases, batch launches, replans) into the
+    /// same stream as the policy's decisions.
+    pub fn trace_sink(&self) -> Option<&Arc<TraceSink>> {
+        self.trace.as_ref()
     }
 
     pub fn name(&self) -> String {
@@ -422,7 +456,21 @@ impl PlacementPolicy {
         batch_size: usize,
     ) -> Vec<usize> {
         let ctx = RouteContext { cluster, db, batch_size };
-        self.strategy.assign(prompts, &ctx)
+        let assignment = self.strategy.assign(prompts, &ctx);
+        if let Some(sink) = &self.trace {
+            // corpus routing has no live backlog: the whole corpus is
+            // placed at once, so route events carry an empty snapshot
+            for (p, &d) in prompts.iter().zip(&assignment) {
+                sink.emit(&TraceEvent::Route {
+                    t: p.arrival_s,
+                    prompt: p.id,
+                    device: cluster.devices[d].name.clone(),
+                    cells: ctx.cost_cells(p),
+                    backlog_s: Vec::new(),
+                });
+            }
+        }
+        assignment
     }
 
     /// On-arrival routing with live per-device backlog (the DES and
@@ -438,7 +486,17 @@ impl PlacementPolicy {
     ) -> usize {
         let ctx = RouteContext { cluster, db, batch_size };
         let view = OnlineView { backlog_s, now, grid: self.grid.as_ref() };
-        self.strategy.route_one(p, &ctx, &view)
+        let d = self.strategy.route_one(p, &ctx, &view);
+        if let Some(sink) = &self.trace {
+            sink.emit(&TraceEvent::Route {
+                t: now,
+                prompt: p.id,
+                device: cluster.devices[d].name.clone(),
+                cells: ctx.cost_cells(p),
+                backlog_s: backlog_s.to_vec(),
+            });
+        }
+        d
     }
 
     /// Pick the release time for a prompt: the cleanest forecast window
@@ -476,7 +534,26 @@ impl PlacementPolicy {
         let latest_start = p.arrival_s + deadline_s - safety;
         let run_steps = ((est * batch_size as f64 / g.trace.step_s).ceil() as usize).max(1);
         // no slack, or no predicted benefit to waiting: run now
-        clean_window(g, latest_start, run_steps, now).unwrap_or(now)
+        match clean_window(g, latest_start, run_steps, now) {
+            Some(w) => {
+                if w.release_s > now + 1e-9 {
+                    if let Some(sink) = &self.trace {
+                        sink.emit(&TraceEvent::Defer {
+                            t: now,
+                            prompt: p.id,
+                            slo: "deferrable".to_string(),
+                            deadline_s,
+                            release_s: w.release_s,
+                            window_g_per_kwh: w.window_g_per_kwh,
+                            forecast_hash: crate::grid::forecast_hash(&w.forecast[..w.horizon]),
+                            blend_w: g.blend_weight(),
+                        });
+                    }
+                }
+                w.release_s
+            }
+            None => now,
+        }
     }
 
     /// Carbon-aware batch sizing: should `device` launch the partial
@@ -780,7 +857,7 @@ pub fn plan_batch_hold_with<'a>(
         return None;
     }
     let run_steps = ((est_max * n as f64 / g.trace.step_s).ceil() as usize).max(1);
-    clean_window(g, bound, run_steps, now)
+    clean_window(g, bound, run_steps, now).map(|w| w.release_s)
 }
 
 /// At-plan savings estimate of one sizing hold: the members' estimated
@@ -836,7 +913,12 @@ pub fn replan_batch_hold_with<'a>(
 /// exactly one place. The fit comes from the config's per-step memo
 /// ([`GridShiftConfig::forecast_at`]), so the DES no longer refits the
 /// forecaster on every arrival.
-fn clean_window(g: &GridShiftConfig, bound: f64, run_steps: usize, now: f64) -> Option<f64> {
+fn clean_window(
+    g: &GridShiftConfig,
+    bound: f64,
+    run_steps: usize,
+    now: f64,
+) -> Option<CleanWindow> {
     if bound <= now {
         return None;
     }
@@ -847,11 +929,33 @@ fn clean_window(g: &GridShiftConfig, bound: f64, run_steps: usize, now: f64) -> 
     }
     let step_now = g.trace.step_of(now);
     let (_, forecast) = g.forecast_at(step_now, horizon);
-    let j = shift::best_start_step(&forecast[..horizon], horizon - 1, run_steps.max(1));
+    let (j, mean) =
+        shift::best_start_with_mean(&forecast[..horizon], horizon - 1, run_steps.max(1));
     if j == 0 {
         return None;
     }
-    Some(((step_now + 1 + j as i64) as f64 * step).min(bound).max(now))
+    Some(CleanWindow {
+        release_s: ((step_now + 1 + j as i64) as f64 * step).min(bound).max(now),
+        window_g_per_kwh: mean,
+        forecast,
+        horizon,
+    })
+}
+
+/// A planned clean window with the evidence the planner saw: the
+/// winning window's mean forecast intensity plus the forecast it
+/// searched (an `Arc` clone of the per-step memo — no copy). The
+/// flight recorder stamps deferral events with both so a trace records
+/// not just *where* work moved but *why* — allocation-free on the
+/// disabled path because the forecast `Arc` already existed.
+struct CleanWindow {
+    release_s: f64,
+    /// Mean forecast intensity over the chosen run window, g/kWh.
+    window_g_per_kwh: f64,
+    /// The searched forecast vector (shared with the per-step memo).
+    forecast: Arc<Vec<f64>>,
+    /// Steps of `forecast` actually searched (the memo may be longer).
+    horizon: usize,
 }
 
 /// Cheapest estimated per-prompt occupancy across devices.

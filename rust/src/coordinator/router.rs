@@ -27,6 +27,7 @@
 
 use crate::cluster::Cluster;
 use crate::grid::{ForecastKind, Forecaster};
+use crate::telemetry::trace::CostCell;
 use crate::workload::Prompt;
 use anyhow::{anyhow, bail, Result};
 
@@ -48,6 +49,24 @@ impl RouteContext<'_> {
     #[inline]
     pub fn cost(&self, d: DeviceId, p: &Prompt) -> CostEstimate {
         self.db.cost_id(d, &self.cluster.devices[d.0], p, self.batch_size)
+    }
+
+    /// Snapshot every device's cost-table cells for `p` — the flight
+    /// recorder's route-event payload (`route.cells`). Allocates, so it
+    /// is only ever called on the trace-enabled branch; the routing hot
+    /// path never consults it.
+    pub fn cost_cells(&self, p: &Prompt) -> Vec<CostCell> {
+        (0..self.cluster.devices.len())
+            .map(|d| {
+                let c = self.cost(DeviceId(d), p);
+                CostCell {
+                    device: self.cluster.devices[d].name.clone(),
+                    e2e_s: c.e2e_s,
+                    energy_kwh: c.energy_kwh,
+                    carbon_kg: c.carbon_kg,
+                }
+            })
+            .collect()
     }
 }
 

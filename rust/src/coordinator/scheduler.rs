@@ -46,7 +46,8 @@ use crate::cluster::Cluster;
 use crate::config::{DeviceKind, ExecutionMode};
 use crate::runtime::{backend::no_batch_err, CalibratedBackend, InferenceBackend};
 use crate::simulator::{simulate_batch, BatchWork};
-use crate::telemetry::{EnergyLedger, MetricsAggregate, RequestMetrics};
+use crate::telemetry::trace::TraceEvent;
+use crate::telemetry::{EnergyLedger, MetricsAggregate, MetricsRegistry, RequestMetrics};
 use crate::util::rng::Rng;
 use crate::workload::Prompt;
 
@@ -98,6 +99,9 @@ pub struct RunResult {
     pub spot_checks: BTreeMap<String, Vec<String>>,
     /// Prompts the policy shifted past their arrival (SLO deferral).
     pub deferred: usize,
+    /// End-of-run metrics snapshot (see
+    /// [`crate::telemetry::registry`] for the series names).
+    pub registry: MetricsRegistry,
 }
 
 impl RunResult {
@@ -219,6 +223,16 @@ pub fn run(
                         release_s[i] = r;
                     }
                     ledger.post_replan(early, later, delta);
+                    if let Some(sink) = policy.trace_sink() {
+                        sink.emit(&TraceEvent::Replan {
+                            t: now0,
+                            trigger: trigger.name().to_string(),
+                            drift_mape: g.drift_mape(),
+                            released_early: early as usize,
+                            extended: later as usize,
+                            delta_kg: delta,
+                        });
+                    }
                 }
             }
         }
@@ -247,6 +261,15 @@ pub fn run(
 
         let timing = simulate_batch(dev, &work, rng.as_mut());
         let b = batch.members.len();
+        if let Some(sink) = policy.trace_sink() {
+            sink.emit(&TraceEvent::BatchLaunch {
+                t: start,
+                device: dev.name.clone(),
+                members: batch.members.iter().map(|&i| prompts[i].id).collect(),
+                energy_kwh: timing.energy_kwh,
+                carbon_kg: cluster.carbon.kg_co2e(timing.energy_kwh, start + timing.total_s),
+            });
+        }
 
         // cloud devices pay the network link per request
         let net = |i: usize| -> f64 {
@@ -323,6 +346,19 @@ pub fn run(
     let total_energy_kwh: f64 = metrics.iter().map(|m| m.energy_kwh).sum();
     let total_carbon_kg: f64 = metrics.iter().map(|m| m.carbon_kg).sum();
 
+    let mut registry = MetricsRegistry::new();
+    registry.add("decisions_total", prompts.len() as u64);
+    registry.add("defers_total", plan.deferred as u64);
+    registry.add("batches_total", plan.batches.len() as u64);
+    registry.set_gauge("decisions_per_s", prompts.len() as f64 / makespan.max(1e-9));
+    if let Some(g) = &policy.grid {
+        registry.set_gauge("drift_mape", g.drift_mape());
+    }
+    for batch in &plan.batches {
+        registry.observe("batch_fill", batch.members.len() as f64);
+    }
+    registry.record_ledger(&ledger);
+
     Ok(RunResult {
         strategy: policy.name(),
         batch_size: cfg.batch_size,
@@ -336,6 +372,7 @@ pub fn run(
         ledger,
         spot_checks,
         deferred: plan.deferred,
+        registry,
     })
 }
 
@@ -426,6 +463,27 @@ mod tests {
         assert_eq!(r.deferred, 0);
         let shares: usize = r.device_share.values().sum();
         assert_eq!(shares, 40);
+        // the metrics registry mirrors the run
+        assert_eq!(r.registry.counter("decisions_total"), 40);
+        assert_eq!(r.registry.counter("defers_total"), 0);
+        assert!(r.registry.counter("batches_total") > 0);
+        assert!(r.registry.gauge("carbon_kg").unwrap() > 0.0);
+        assert!(r.registry.gauge("decisions_per_s").unwrap() > 0.0);
+    }
+
+    #[test]
+    fn closed_loop_flight_recorder_emits_routes_and_batches() {
+        let (cluster, prompts, db) = setup(20);
+        let sink = std::sync::Arc::new(crate::telemetry::trace::TraceSink::memory());
+        let s = policy("latency-aware", &cluster).with_trace(std::sync::Arc::clone(&sink));
+        let r = run(&cluster, &prompts, &s, &db, &RunConfig::default(), None).unwrap();
+        let text = sink.contents();
+        let count = |ev: &str| {
+            text.lines().filter(|l| l.contains(&format!("\"ev\":\"{ev}\""))).count() as u64
+        };
+        assert_eq!(count("route"), 20, "one route event per corpus prompt");
+        assert_eq!(count("batch_launch"), r.registry.counter("batches_total"));
+        assert_eq!(count("defer"), 0, "spatial policy defers nothing");
     }
 
     #[test]

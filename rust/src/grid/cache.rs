@@ -52,6 +52,26 @@ pub fn fit_once(
     (current, forecast)
 }
 
+/// FNV-1a over the IEEE-754 bit patterns of a forecast vector.
+///
+/// The flight recorder stamps every deferral decision with this hash so
+/// a trace can say *which* forecast a plan trusted without embedding
+/// the whole vector: two events carry the same hash iff they were
+/// planned against bit-identical forecasts (up to FNV collisions),
+/// which is exactly the cross-plane invariant the memoization tests
+/// pin. Bit patterns, not formatted decimals, so the hash is as strict
+/// as the equivalence guarantee itself.
+pub fn forecast_hash(values: &[f64]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for v in values {
+        for b in v.to_bits().to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
 /// One fit per trace step, invalidated only when the step (or the
 /// lookback window) changes. Clones start cold: the cache is a pure
 /// accelerator and never part of a configuration's identity.
@@ -174,6 +194,19 @@ mod tests {
         let (current, f) = cache.fit(ForecastKind::Persistence, &t, 5, 0, 0);
         assert_eq!(current, 0.0); // empty history: same 0.0 the refit path used
         assert!(f.is_empty());
+    }
+
+    #[test]
+    fn forecast_hash_is_bit_strict_and_order_sensitive() {
+        let a = forecast_hash(&[1.0, 2.0, 3.0]);
+        assert_eq!(a, forecast_hash(&[1.0, 2.0, 3.0]), "hash must be deterministic");
+        assert_ne!(a, forecast_hash(&[3.0, 2.0, 1.0]), "order must matter");
+        assert_ne!(a, forecast_hash(&[1.0, 2.0]), "length must matter");
+        // bit-pattern strictness: -0.0 and 0.0 compare equal but are
+        // different forecasts as far as byte-identity is concerned
+        assert_ne!(forecast_hash(&[0.0]), forecast_hash(&[-0.0]));
+        // FNV-1a offset basis for the empty vector
+        assert_eq!(forecast_hash(&[]), 0xcbf2_9ce4_8422_2325);
     }
 
     #[test]

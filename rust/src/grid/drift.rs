@@ -45,6 +45,16 @@ pub enum ReplanTrigger {
     Cadence,
 }
 
+impl ReplanTrigger {
+    /// Stable snake_case name for reports and flight-recorder events.
+    pub fn name(self) -> &'static str {
+        match self {
+            ReplanTrigger::Drift => "drift",
+            ReplanTrigger::Cadence => "cadence",
+        }
+    }
+}
+
 /// Rolling realized-vs-forecast error over recent trace steps.
 ///
 /// Fed exactly one observation per trace step (repeated or backward

@@ -63,7 +63,7 @@ pub mod forecast;
 pub mod shift;
 pub mod trace;
 
-pub use cache::ForecastCache;
+pub use cache::{forecast_hash, ForecastCache};
 pub use drift::{DriftMonitor, DriftTracker, ReplanTrigger};
 pub use forecast::{score, ForecastKind, ForecastScore, Forecaster};
 pub use trace::{GridTrace, SyntheticTrace};

@@ -29,6 +29,15 @@ pub fn window_mean(forecast: &[f64], j: usize, run_steps: usize) -> f64 {
 /// whose `run_steps` window has the lowest mean forecast intensity.
 /// `latest` is clamped to the forecast length; ties break earliest.
 pub fn best_start_step(forecast: &[f64], latest: usize, run_steps: usize) -> usize {
+    best_start_with_mean(forecast, latest, run_steps).0
+}
+
+/// [`best_start_step`] plus the winning window's mean forecast
+/// intensity (g/kWh) — the flight recorder stamps deferral events with
+/// it so a trace records *how clean* the planned window looked, not
+/// just where it was. One scan serves both callers, so the planner and
+/// the recorder can never disagree about the chosen window.
+pub fn best_start_with_mean(forecast: &[f64], latest: usize, run_steps: usize) -> (usize, f64) {
     assert!(!forecast.is_empty());
     let latest = latest.min(forecast.len() - 1);
     let mut best = 0usize;
@@ -40,7 +49,7 @@ pub fn best_start_step(forecast: &[f64], latest: usize, run_steps: usize) -> usi
             best = j;
         }
     }
-    best
+    (best, best_mean)
 }
 
 #[cfg(test)]
@@ -66,6 +75,14 @@ mod tests {
         let f = [90.0, 80.0, 10.0];
         assert_eq!(best_start_step(&f, 1, 1), 1); // trough out of reach
         assert_eq!(best_start_step(&f, 99, 1), 2); // clamped to len-1
+    }
+
+    #[test]
+    fn best_start_with_mean_reports_the_winning_window() {
+        let f = [90.0, 80.0, 40.0, 45.0, 85.0];
+        let (j, m) = best_start_with_mean(&f, 4, 2);
+        assert_eq!(j, best_start_step(&f, 4, 2));
+        assert!((m - 42.5).abs() < 1e-12, "mean over [40,45] expected, got {m}");
     }
 
     #[test]

@@ -38,7 +38,7 @@
 //!
 //! | | [`runtime::PjrtBackend`] (`real`) | [`runtime::HybridBackend`] (`hybrid`) | [`runtime::CalibratedBackend`] (`stub`) |
 //! |---|---|---|---|
-//! | **closed loop** | observed tokens drive the calibrated clock | first batch per variant spot-checked | deterministic synthesis, calibrated clock |
+//! | **closed loop** | observed tokens drive the calibrated clock | every Nth batch per variant spot-checked (`spot_check_every_n`) | deterministic synthesis, calibrated clock |
 //! | **DES** | (virtual time — generation never runs) | (same) | (same) |
 //! | **wallclock server** | each worker owns a warmed engine | worker spot-checks then synthesizes | no artifacts; occupancy slept out at `time_scale` |
 //!
@@ -119,8 +119,48 @@
 //!   archives `BENCH_scale.json` per PR **and gates on it**: the
 //!   `bench-gate` job compares decisions/sec against the committed
 //!   `BENCH_baseline.json` and fails on a >25 % regression of the
-//!   cached forecast-carbon-aware DES rows (rows the baseline predates
-//!   warn instead of failing until the baseline is re-armed).
+//!   cached forecast-carbon-aware DES *and* wallclock-server rows
+//!   (rows the baseline predates warn instead of failing until the
+//!   baseline is re-armed).
+//!
+//! ## Observability: decision flight recorder + metrics registry
+//!
+//! Every scheduling decision any plane makes can be recorded as one
+//! structured JSONL event through [`telemetry::TraceSink`] — the
+//! decision **flight recorder**. The event vocabulary
+//! ([`telemetry::TraceEvent`]) covers the whole decision surface:
+//! `route` (placement + the per-device cost cells behind it), `defer`
+//! and `release` (SLO shifting against the forecast, including the
+//! clean-window intensity and the forecast fingerprint planned
+//! against), `sizing_hold` / `hold_void` (carbon-aware batch sizing),
+//! `replan` (trigger, drift MAPE, holds moved) and `batch_launch`
+//! (members, energy, carbon). Tracing is opt-in per run (`--trace
+//! <path>`, or `trace` under `[observability]` in the TOML config);
+//! with no sink attached the decision hot path performs a single
+//! `Option` check — no event is allocated or formatted — which is how
+//! the PR-3 hot-path wins survive and what the `bench-gate` CI job
+//! keeps honest.
+//!
+//! Because all three planes drive the same policy core, their flight
+//! recordings are directly comparable: [`telemetry::normalize`]
+//! reduces a trace to its plane-independent decision rows (`route`
+//! and `defer`, deterministically ordered), and `verdant trace diff
+//! <a.jsonl> <b.jsonl>` exits non-zero when two runs disagree.
+//! `tests/planes.rs` and the CI `trace-diff` job pin the DES and the
+//! stub wallclock server **byte-identical** after normalization on a
+//! 1k-prompt corpus — the strongest form of the cross-plane
+//! equivalence claim, checked on every PR.
+//!
+//! Aggregate health rides beside the event stream:
+//! [`telemetry::MetricsRegistry`] unifies counters, gauges and
+//! summaries across the planes (`decisions_total`, `defers_total`,
+//! per-device `device.*` energy/carbon accounts from the
+//! [`telemetry::EnergyLedger`], queue-depth and batch-fill summaries
+//! — the full series table is in [`telemetry::registry`]). Every
+//! plane snapshots its registry into its result
+//! (`RunResult::registry`, `OnlineResult::metrics`,
+//! `ServeReport::metrics`), and `--metrics-json <path>` dumps the
+//! snapshot for dashboards or CI assertions.
 //!
 //! ## Layers below (Python never on the request path)
 //!

@@ -24,6 +24,7 @@
 use std::collections::HashMap;
 use std::path::PathBuf;
 use std::process::ExitCode;
+use std::sync::Arc;
 use std::time::Duration;
 
 use verdant::bench::{
@@ -31,11 +32,13 @@ use verdant::bench::{
 };
 use verdant::cluster::Cluster;
 use verdant::config::{ExecutionMode, ExperimentConfig};
+use verdant::coordinator::online::{run_online, OnlineConfig};
 use verdant::coordinator::{run as run_sched, GridShiftConfig, Grouping, PlacementPolicy, RunConfig};
 use verdant::grid::ForecastKind;
 use verdant::report::fmt;
 use verdant::runtime::{CalibratedBackend, HybridBackend, InferenceBackend, PjrtBackend};
 use verdant::server::{serve, ServeOptions};
+use verdant::telemetry::{normalize, MetricsRegistry, TraceSink};
 use verdant::workload::{trace, Corpus};
 
 fn main() -> ExitCode {
@@ -150,8 +153,43 @@ fn load_config(flags: &Flags) -> anyhow::Result<ExperimentConfig> {
     if flags.has("blend") {
         cfg.serving.blend = true;
     }
+    if let Some(p) = flags.get("trace") {
+        cfg.observability.trace = Some(p.to_string());
+    }
+    if let Some(p) = flags.get("metrics-json") {
+        cfg.observability.metrics_json = Some(p.to_string());
+    }
+    if let Some(n) = flags.get("spot-check-every-n") {
+        cfg.serving.spot_check_every_n = n.parse()?;
+    }
     cfg.validate()?;
     Ok(cfg)
+}
+
+/// Open the flight recorder configured by `[observability] trace` /
+/// `--trace <path>` — `None` keeps every decision path allocation-free.
+fn trace_sink(cfg: &ExperimentConfig) -> anyhow::Result<Option<Arc<TraceSink>>> {
+    match &cfg.observability.trace {
+        Some(p) => {
+            let sink = TraceSink::file(p)
+                .map_err(|e| anyhow::anyhow!("opening trace file {p}: {e}"))?;
+            Ok(Some(Arc::new(sink)))
+        }
+        None => Ok(None),
+    }
+}
+
+/// Dump the end-of-run metrics snapshot when `--metrics-json` /
+/// `[observability] metrics_json` names a path.
+fn dump_metrics(cfg: &ExperimentConfig, m: &MetricsRegistry) -> anyhow::Result<()> {
+    if let Some(p) = &cfg.observability.metrics_json {
+        let mut text = verdant::util::json::to_string(&m.snapshot());
+        text.push('\n');
+        std::fs::write(p, text)
+            .map_err(|e| anyhow::anyhow!("writing metrics snapshot {p}: {e}"))?;
+        println!("  wrote metrics snapshot to {p}");
+    }
+    Ok(())
 }
 
 /// Mark the configured deferrable fraction on a freshly generated
@@ -188,6 +226,7 @@ fn dispatch(args: &[String]) -> anyhow::Result<()> {
         Some("run") => cmd_run(&flags),
         Some("serve") => cmd_serve(&flags),
         Some("inspect") => cmd_inspect(pos.get(1).map(String::as_str).unwrap_or("cluster"), &flags),
+        Some("trace") => cmd_trace(&pos),
         Some("version") => {
             println!("verdant {}", verdant::VERSION);
             Ok(())
@@ -207,8 +246,16 @@ fn print_usage() {
          verdant serve [--prompts N] [--batch B] [--strategy S] [--timeout-ms T] [--max-new N]\n          \
          [--execution real|hybrid|stub]  (stub: deterministic no-PJRT backend, runs anywhere)\n  \
          verdant inspect <corpus|cluster|manifest>\n  \
+         verdant trace diff <a.jsonl> <b.jsonl>   compare two decision traces after\n          \
+         normalization (exit 1 on divergence)\n  \
          verdant version\n\n\
          Common flags: --config <toml>, --seed <n>\n\
+         Observability (run+serve): --trace <path> records one JSONL event per\n\
+         scheduling decision (off by default — the decision hot path stays\n\
+         allocation-free); --metrics-json <path> dumps the end-of-run metrics\n\
+         registry snapshot; run --plane des executes the corpus through the\n\
+         discrete-event simulator instead of the closed loop (same policy core,\n\
+         so its --trace output should normalize identically).\n\
          Execution: --execution picks the inference backend (real = PJRT artifacts,\n\
          hybrid = PJRT spot-check + stub, stub = deterministic calibrated stub —\n\
          no artifacts needed; calibrated = no generation at all, run/bench only).\n\
@@ -306,7 +353,10 @@ fn build_backend(
         }
         ExecutionMode::Hybrid => {
             println!("loading PJRT engine from {} ...", cfg.artifacts_dir);
-            Some(Box::new(HybridBackend::load(dir, &models, cluster)?))
+            Some(Box::new(
+                HybridBackend::load(dir, &models, cluster)?
+                    .with_spot_check_every_n(cfg.serving.spot_check_every_n),
+            ))
         }
     })
 }
@@ -324,8 +374,19 @@ fn cmd_run(flags: &Flags) -> anyhow::Result<()> {
         cfg.cluster.carbon_intensity_g_per_kwh,
         cfg.workload.seed ^ 0x0FF1_CE,
     );
-    let policy =
+    let sink = trace_sink(&cfg)?;
+
+    match flags.get("plane").unwrap_or("closed") {
+        "closed" => {}
+        "des" => return run_des_plane(&cfg, &cluster, &corpus.prompts, &db, sink),
+        other => anyhow::bail!("unknown plane '{other}' (closed|des)"),
+    }
+
+    let mut policy =
         PlacementPolicy::new(&cfg.serving.strategy, &cluster, grid_from_config(&cfg, &cluster))?;
+    if let Some(s) = &sink {
+        policy = policy.with_trace(Arc::clone(s));
+    }
     let run_cfg = RunConfig {
         batch_size: cfg.serving.batch_size,
         grouping: Grouping::Fifo,
@@ -384,7 +445,78 @@ fn cmd_run(flags: &Flags) -> anyhow::Result<()> {
             println!("  spot-check [{dev}]: {preview:?}");
         }
     }
+    dump_metrics(&cfg, &r.registry)?;
+    if let Some(s) = &sink {
+        s.flush();
+    }
     Ok(())
+}
+
+/// `verdant run --plane des`: the same corpus through the
+/// discrete-event simulator — the flight-recorder reference plane the
+/// CI `trace-diff` job compares the stub server against.
+fn run_des_plane(
+    cfg: &ExperimentConfig,
+    cluster: &Cluster,
+    prompts: &[verdant::workload::Prompt],
+    db: &verdant::coordinator::BenchmarkDb,
+    sink: Option<Arc<TraceSink>>,
+) -> anyhow::Result<()> {
+    let online = OnlineConfig {
+        batch_size: cfg.serving.batch_size,
+        strategy: cfg.serving.strategy.clone(),
+        grid: grid_from_config(cfg, cluster),
+        trace: sink.clone(),
+        ..OnlineConfig::default()
+    };
+    let r = run_online(cluster, prompts, db, &online)?;
+    println!("\n== run (DES plane): {} | batch {} | {} prompts ==",
+             cfg.serving.strategy, cfg.serving.batch_size, prompts.len());
+    println!("  completed:              {} in {} virtual s", r.completed, fmt::secs(r.span_s));
+    println!("  mean latency:           {} s", fmt::secs(r.latency.mean()));
+    println!("  total carbon:           {} kgCO2e", fmt::sci(r.ledger.total_carbon_kg()));
+    if r.deferred > 0 {
+        println!("  deferred (SLO shift):   {} prompts", r.deferred);
+    }
+    dump_metrics(cfg, &r.metrics)?;
+    if let Some(s) = &sink {
+        s.flush();
+    }
+    Ok(())
+}
+
+/// `verdant trace diff <a.jsonl> <b.jsonl>`: normalize two decision
+/// traces and compare them byte-for-byte. Exit 0 when the planes made
+/// identical decisions, exit 1 (with the first divergence) otherwise.
+fn cmd_trace(pos: &[String]) -> anyhow::Result<()> {
+    let (Some(sub), Some(a), Some(b)) = (pos.get(1), pos.get(2), pos.get(3)) else {
+        anyhow::bail!("usage: verdant trace diff <a.jsonl> <b.jsonl>");
+    };
+    if sub != "diff" {
+        anyhow::bail!("unknown trace subcommand '{sub}' (diff)");
+    }
+    let read_norm = |path: &str| -> anyhow::Result<String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading trace {path}: {e}"))?;
+        normalize(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))
+    };
+    let na = read_norm(a)?;
+    let nb = read_norm(b)?;
+    if na == nb {
+        println!("traces agree: {} decision events after normalization", na.lines().count());
+        return Ok(());
+    }
+    let (ca, cb) = (na.lines().count(), nb.lines().count());
+    if ca != cb {
+        eprintln!("decision counts differ: {a} has {ca}, {b} has {cb}");
+    }
+    for (i, (la, lb)) in na.lines().zip(nb.lines()).enumerate() {
+        if la != lb {
+            eprintln!("first divergence at normalized line {}:\n  {a}: {la}\n  {b}: {lb}", i + 1);
+            break;
+        }
+    }
+    anyhow::bail!("decision traces diverge")
 }
 
 fn cmd_serve(flags: &Flags) -> anyhow::Result<()> {
@@ -409,16 +541,34 @@ fn cmd_serve(flags: &Flags) -> anyhow::Result<()> {
         ExecutionMode::Calibrated => ExecutionMode::Real,
         m => m,
     };
+    // price with the same calibration `run` uses, so a `--trace` of
+    // this plane normalizes identically to `run --plane des` on the
+    // same corpus (the CI trace-diff pin)
+    let db = verdant::coordinator::BenchmarkDb::build(
+        &cluster,
+        &[1, 4, 8],
+        6,
+        cfg.cluster.carbon_intensity_g_per_kwh,
+        cfg.workload.seed ^ 0x0FF1_CE,
+    );
+    let sink = trace_sink(&cfg)?;
     let opts = ServeOptions {
         batch_size: cfg.serving.batch_size,
         batch_timeout: Duration::from_millis(flags.usize("timeout-ms", 150)? as u64),
         max_new_tokens: flags.usize("max-new", 16)?,
         artifacts_dir: PathBuf::from(&cfg.artifacts_dir),
-        time_scale: 50.0,
+        time_scale: flags
+            .get("time-scale")
+            .map(str::parse::<f64>)
+            .transpose()
+            .map_err(|e| anyhow::anyhow!("--time-scale wants a number: {e}"))?
+            .unwrap_or(50.0),
         strategy: cfg.serving.strategy.clone(),
         grid: grid_from_config(&cfg, &cluster),
         execution,
-        db: None,
+        db: Some(Arc::new(db)),
+        trace: sink.clone(),
+        spot_check_every_n: cfg.serving.spot_check_every_n,
     };
     println!(
         "serving {} prompts through the {} backend ({} workers, batch {}, strategy {}) ...",
@@ -463,6 +613,18 @@ fn cmd_serve(flags: &Flags) -> anyhow::Result<()> {
     }
     for (dev, count) in &report.per_device {
         println!("  {dev}: {count} requests");
+    }
+    for (dev, busy, idle, carbon) in &report.device_accounts {
+        println!(
+            "  {dev} ledger: busy {} kWh, idle {} kWh, carbon {} kgCO2e",
+            fmt::sci(*busy),
+            fmt::sci(*idle),
+            fmt::sci(*carbon)
+        );
+    }
+    dump_metrics(&cfg, &report.metrics)?;
+    if let Some(s) = &sink {
+        s.flush();
     }
     Ok(())
 }

@@ -14,7 +14,7 @@
 //! |---------|------------|-----------------|--------|
 //! | [`PjrtBackend`] | real PJRT execution ([`session::generate`]) | yes | no (PJRT clients pin their thread) |
 //! | [`CalibratedBackend`] | deterministic synthesis from the calibration model | no | yes |
-//! | [`HybridBackend`] | PJRT for the first batch per variant (spot-check), synthesized after | yes | no |
+//! | [`HybridBackend`] | PJRT for the first batch per variant (and every Nth on a configured cadence), synthesized after | yes | no |
 //!
 //! [`CalibratedBackend`] is the piece that closes the wallclock plane's
 //! feature gap: it is cheap to construct per worker thread, needs no
@@ -23,7 +23,7 @@
 //! use — so a stub-served corpus exercises exactly the policy decisions
 //! the DES makes, at wallclock speed.
 
-use std::collections::{BTreeMap, BTreeSet};
+use std::collections::BTreeMap;
 use std::path::Path;
 use std::sync::Mutex;
 
@@ -242,33 +242,57 @@ impl InferenceBackend for CalibratedBackend {
     }
 }
 
-/// Today's hybrid semantics behind the trait: the **first** batch per
-/// model variant runs through PJRT as a spot-check (real tokens, the
+/// Hybrid semantics behind the trait: the **first** batch per model
+/// variant runs through PJRT as a spot-check (real tokens, the
 /// artifact bridge proven live), every later batch is synthesized by
-/// the calibrated stub. Timing always comes from the calibrated clock
-/// (the scheduler's `Hybrid` rule), so the spot-check is an output
-/// audit, not a timing source.
+/// the calibrated stub — unless a re-audit cadence is configured, in
+/// which case every Nth batch per variant goes back through PJRT (see
+/// [`should_spot_check`]). Timing always comes from the calibrated
+/// clock (the scheduler's `Hybrid` rule), so the spot-check is an
+/// output audit, not a timing source.
 pub struct HybridBackend {
     pjrt: PjrtBackend,
     stub: CalibratedBackend,
-    /// Variants already spot-checked (interior mutability:
+    /// Re-audit cadence: 0 keeps the legacy first-batch-only
+    /// spot-check; N > 0 re-audits every Nth batch per variant.
+    spot_check_every_n: usize,
+    /// Batches generated so far per variant (interior mutability:
     /// `generate` takes `&self` like every backend).
-    spot_checked: Mutex<BTreeSet<String>>,
+    batches_seen: Mutex<BTreeMap<String, u64>>,
+}
+
+/// The hybrid spot-check decision, factored out so it is testable
+/// without PJRT artifacts: batch 0 of every variant is always audited;
+/// with a cadence `every_n > 0`, batches `every_n`, `2 * every_n`, ...
+/// are re-audited too.
+pub fn should_spot_check(batch_index: u64, every_n: usize) -> bool {
+    batch_index == 0 || (every_n > 0 && batch_index % every_n as u64 == 0)
 }
 
 impl HybridBackend {
     /// Load artifacts for the named models and pair the PJRT engine
     /// with a cluster-calibrated stub.
     pub fn load(artifacts_dir: &Path, models: &[&str], cluster: &Cluster) -> Result<Self> {
-        Ok(HybridBackend {
-            pjrt: PjrtBackend::load(artifacts_dir, models)?,
-            stub: CalibratedBackend::from_cluster(cluster),
-            spot_checked: Mutex::new(BTreeSet::new()),
-        })
+        Ok(Self::from_parts(
+            PjrtBackend::load(artifacts_dir, models)?,
+            CalibratedBackend::from_cluster(cluster),
+        ))
     }
 
     pub fn from_parts(pjrt: PjrtBackend, stub: CalibratedBackend) -> Self {
-        HybridBackend { pjrt, stub, spot_checked: Mutex::new(BTreeSet::new()) }
+        HybridBackend {
+            pjrt,
+            stub,
+            spot_check_every_n: 0,
+            batches_seen: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    /// Configure the re-audit cadence (`[serving] spot_check_every_n`;
+    /// 0 = first batch per variant only, the legacy behaviour).
+    pub fn with_spot_check_every_n(mut self, every_n: usize) -> Self {
+        self.spot_check_every_n = every_n;
+        self
     }
 }
 
@@ -284,8 +308,14 @@ impl InferenceBackend for HybridBackend {
         texts: &[&str],
         max_new: usize,
     ) -> Result<GenerationOutput> {
-        let first = self.spot_checked.lock().unwrap().insert(model.to_string());
-        if first {
+        let index = {
+            let mut seen = self.batches_seen.lock().unwrap();
+            let slot = seen.entry(model.to_string()).or_insert(0);
+            let index = *slot;
+            *slot += 1;
+            index
+        };
+        if should_spot_check(index, self.spot_check_every_n) {
             return self.pjrt.generate(model, batch, texts, max_new);
         }
         self.stub.generate(model, batch, texts, max_new)
@@ -404,6 +434,45 @@ mod tests {
         .unwrap();
         let via = b.generate("edge-1b-sim", 1, &["Who painted the Mona Lisa?"], 6).unwrap();
         assert_eq!(via.tokens, direct.tokens, "the wrapper must be behavior-preserving");
+    }
+
+    #[test]
+    fn spot_check_cadence_reaudits_every_nth_batch() {
+        // legacy cadence (0): only batch 0 of a variant is audited
+        assert!(should_spot_check(0, 0));
+        for i in 1..10 {
+            assert!(!should_spot_check(i, 0), "batch {i} audited with cadence off");
+        }
+        // cadence 3: batches 0, 3, 6, ... re-audit; the rest synthesize
+        for i in 0..12u64 {
+            assert_eq!(should_spot_check(i, 3), i % 3 == 0, "batch {i}");
+        }
+        // cadence 1 audits every batch — the all-PJRT degenerate case
+        assert!((0..5).all(|i| should_spot_check(i, 1)));
+    }
+
+    #[test]
+    fn hybrid_reaudits_on_the_configured_cadence() {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let h = HybridBackend::load(&dir, &["edge-1b-sim"], &cluster())
+            .unwrap()
+            .with_spot_check_every_n(2);
+        let p = ["Cadence prompt"];
+        let real = PjrtBackend::load(&dir, &["edge-1b-sim"])
+            .unwrap()
+            .generate("edge-1b-sim", 1, &p, 6)
+            .unwrap();
+        let stub =
+            CalibratedBackend::from_cluster(&cluster()).generate("edge-1b-sim", 1, &p, 6).unwrap();
+        for i in 0..6u64 {
+            let out = h.generate("edge-1b-sim", 1, &p, 6).unwrap();
+            let expect = if i % 2 == 0 { &real } else { &stub };
+            assert_eq!(out.tokens, expect.tokens, "batch {i} used the wrong path");
+        }
     }
 
     #[test]

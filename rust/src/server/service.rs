@@ -77,7 +77,8 @@ use crate::coordinator::policy::{
 use crate::runtime::{
     backend::no_batch_err, CalibratedBackend, HybridBackend, InferenceBackend, PjrtBackend,
 };
-use crate::telemetry::EnergyLedger;
+use crate::telemetry::trace::{TraceEvent, TraceSink};
+use crate::telemetry::{EnergyLedger, MetricsRegistry};
 use crate::util::stats::{Histogram, Summary};
 use crate::workload::Prompt;
 
@@ -110,6 +111,16 @@ pub struct ServeOptions {
     /// must be comparable across planes (the cross-plane tests and the
     /// scale bench do).
     pub db: Option<Arc<BenchmarkDb>>,
+    /// Decision flight recorder; `None` (the default) keeps every
+    /// decision path allocation-free (see
+    /// [`crate::telemetry::trace`]). The ingest thread emits route /
+    /// defer / release events; workers clone the sink for sizing-hold
+    /// and batch-launch events.
+    pub trace: Option<Arc<TraceSink>>,
+    /// Hybrid-mode re-audit cadence: every Nth batch per variant goes
+    /// back through PJRT (0 = first batch only; see
+    /// [`crate::runtime::backend::should_spot_check`]).
+    pub spot_check_every_n: usize,
 }
 
 impl Default for ServeOptions {
@@ -124,6 +135,8 @@ impl Default for ServeOptions {
             grid: None,
             execution: ExecutionMode::Real,
             db: None,
+            trace: None,
+            spot_check_every_n: 0,
         }
     }
 }
@@ -183,6 +196,14 @@ pub struct ServeReport {
     pub est_carbon_kg: f64,
     /// Estimated carbon avoided vs running every prompt at arrival.
     pub est_saved_kg: f64,
+    /// Per-device energy-ledger accounts in deterministic (name-sorted)
+    /// order: `(device, busy_kwh, idle_kwh, carbon_kg)` — surfaced so
+    /// the serve JSON report can carry the same per-device accounting
+    /// as the other planes.
+    pub device_accounts: Vec<(String, f64, f64, f64)>,
+    /// End-of-run metrics snapshot (see
+    /// [`crate::telemetry::registry`] for the series names).
+    pub metrics: MetricsRegistry,
 }
 
 struct QueueItem {
@@ -346,7 +367,10 @@ pub fn serve(cluster: &Cluster, prompts: &[Prompt], opts: &ServeOptions) -> Resu
     // must fail loudly here, exactly as it does in `run` and `bench`
     // (the policy stays on the ingest thread; workers get cold clones
     // of the grid context only)
-    let policy = PlacementPolicy::new(&opts.strategy, cluster, opts.grid.clone())?;
+    let mut policy = PlacementPolicy::new(&opts.strategy, cluster, opts.grid.clone())?;
+    if let Some(sink) = &opts.trace {
+        policy = policy.with_trace(Arc::clone(sink));
+    }
     let db: Arc<BenchmarkDb> = match &opts.db {
         Some(db) => Arc::clone(db),
         None => Arc::new(BenchmarkDb::build(cluster, &[1, 4, 8], 2, 69.0, 7)),
@@ -372,6 +396,10 @@ pub fn serve(cluster: &Cluster, prompts: &[Prompt], opts: &ServeOptions) -> Resu
         // replan is waiting for (and blending stays deterministic per
         // thread)
         let worker_grid = policy.grid.clone();
+        // workers share the one sink (the TraceSink serializes lines
+        // under its own lock), so plane-level events land in the same
+        // stream as the ingest thread's decisions
+        let worker_trace = policy.trace_sink().cloned();
         let queues = Arc::clone(&queues);
         let done = Arc::clone(&done);
         let db = Arc::clone(&db);
@@ -382,11 +410,10 @@ pub fn serve(cluster: &Cluster, prompts: &[Prompt], opts: &ServeOptions) -> Resu
                 ExecutionMode::Real => {
                     Box::new(PjrtBackend::load(&opts.artifacts_dir, &[dev.model.as_str()])?)
                 }
-                ExecutionMode::Hybrid => Box::new(HybridBackend::load(
-                    &opts.artifacts_dir,
-                    &[dev.model.as_str()],
-                    &cluster,
-                )?),
+                ExecutionMode::Hybrid => Box::new(
+                    HybridBackend::load(&opts.artifacts_dir, &[dev.model.as_str()], &cluster)?
+                        .with_spot_check_every_n(opts.spot_check_every_n),
+                ),
                 // Calibrated is rejected before any worker spawns
                 ExecutionMode::Stub | ExecutionMode::Calibrated => {
                     Box::new(CalibratedBackend::from_cluster(&cluster))
@@ -410,6 +437,7 @@ pub fn serve(cluster: &Cluster, prompts: &[Prompt], opts: &ServeOptions) -> Resu
                     &queues[d],
                     &opts,
                     started,
+                    worker_trace.as_deref(),
                 );
                 let texts: Vec<&str> =
                     items.iter().map(|i| i.prompt.text.as_str()).collect();
@@ -432,6 +460,19 @@ pub fn serve(cluster: &Cluster, prompts: &[Prompt], opts: &ServeOptions) -> Resu
                     }
                 }
                 let vfinish_s = started.elapsed().as_secs_f64() * opts.time_scale;
+                if let Some(sink) = worker_trace.as_deref() {
+                    let batch_kwh: f64 = items
+                        .iter()
+                        .map(|i| db.cost(&dev, &i.prompt, items.len().max(1)).energy_kwh)
+                        .sum();
+                    sink.emit(&TraceEvent::BatchLaunch {
+                        t: vfinish_s,
+                        device: dev.name.clone(),
+                        members: items.iter().map(|i| i.prompt.id).collect(),
+                        energy_kwh: batch_kwh,
+                        carbon_kg: cluster.carbon.kg_co2e(batch_kwh, vfinish_s),
+                    });
+                }
                 let mut batch_audit = audit;
                 for (i, item) in items.iter().enumerate() {
                     let _ = tx.send(Completion {
@@ -549,6 +590,27 @@ pub fn serve(cluster: &Cluster, prompts: &[Prompt], opts: &ServeOptions) -> Resu
     let (est_active_kwh, _, est_carbon_kg) = ledger.totals();
     deferred_ids.sort_unstable();
 
+    let mut metrics = MetricsRegistry::new();
+    metrics.add("decisions_total", assignment.len() as u64);
+    metrics.add("defers_total", deferred as u64);
+    metrics.add("batches_total", batches as u64);
+    metrics.add("deadline_violations_total", deadline_violations as u64);
+    metrics.set_gauge("decisions_per_s", completed as f64 / wallclock.max(1e-9));
+    if let Some(g) = &policy.grid {
+        metrics.set_gauge("drift_mape", g.drift_mape());
+    }
+    metrics.observe_summary("batch_fill", &fills);
+    metrics.record_ledger(&ledger);
+    // server replans are tallied outside the ledger (their carbon delta
+    // is audited at batch level), so layer the plane's counters on top
+    metrics.add("replan_passes_total", replans.passes as u64);
+    metrics.add("replan_released_early_total", replans.released_early as u64);
+    metrics.add("replan_extended_total", replans.extended as u64);
+    let device_accounts: Vec<(String, f64, f64, f64)> = ledger
+        .accounts()
+        .map(|(n, a)| (n.clone(), a.active_kwh, a.idle_kwh, a.carbon_kg))
+        .collect();
+
     Ok(ServeReport {
         completed,
         wallclock_s: wallclock,
@@ -578,6 +640,8 @@ pub fn serve(cluster: &Cluster, prompts: &[Prompt], opts: &ServeOptions) -> Resu
         est_energy_kwh: est_active_kwh,
         est_carbon_kg,
         est_saved_kg: ledger.realized_savings_kg(),
+        device_accounts,
+        metrics,
     })
 }
 
@@ -605,6 +669,7 @@ fn hold_for_sizing(
     queue: &DeviceQueue,
     opts: &ServeOptions,
     started: Instant,
+    trace: Option<&TraceSink>,
 ) -> Option<BatchAudit> {
     let g = grid.filter(|g| g.sizing)?;
     let vnow = || started.elapsed().as_secs_f64() * opts.time_scale;
@@ -636,6 +701,15 @@ fn hold_for_sizing(
                         now_v,
                         until,
                     );
+                    if let Some(sink) = trace {
+                        sink.emit(&TraceEvent::SizingHold {
+                            t: now_v,
+                            device: cluster.devices[d].name.clone(),
+                            members: items.iter().map(|i| i.prompt.id).collect(),
+                            hold_until_s: until,
+                            est_saved_kg: audit.sizing_saved_kg,
+                        });
+                    }
                 }
             }
         } else if g.replan && hold.is_some() {
@@ -652,16 +726,39 @@ fn hold_for_sizing(
                     opts.batch_size,
                     now_v,
                 );
+                let (early0, ext0) = (audit.replan_early, audit.replan_extended);
                 match new {
                     Some(u) if u < old - 1e-6 => audit.replan_early += 1,
                     Some(u) if u > old + 1e-6 => audit.replan_extended += 1,
                     None => audit.replan_early += 1,
                     _ => {}
                 }
+                if let Some(sink) = trace {
+                    // a worker replan moves one hold; the carbon delta
+                    // is audited at batch level, not per trigger
+                    sink.emit(&TraceEvent::Replan {
+                        t: now_v,
+                        trigger: trigger.name().to_string(),
+                        drift_mape: g.drift_mape(),
+                        released_early: (audit.replan_early - early0) as usize,
+                        extended: (audit.replan_extended - ext0) as usize,
+                        delta_kg: 0.0,
+                    });
+                }
                 hold = new;
             }
         }
-        let Some(until) = hold else { break };
+        let Some(until) = hold else {
+            if audit.sizing_held {
+                if let Some(sink) = trace {
+                    sink.emit(&TraceEvent::HoldVoid {
+                        t: vnow(),
+                        device: cluster.devices[d].name.clone(),
+                    });
+                }
+            }
+            break;
+        };
         if until <= now_v + 1e-9 {
             break; // the planned window opened: launch
         }
@@ -722,6 +819,7 @@ fn replan_held(
     }
     let Some(trigger) = g.replan_due(now_v) else { return };
     counters.passes += 1;
+    let (early0, ext0) = (counters.released_early, counters.extended);
     let backlog_total: f64 = queues.iter().map(|q| q.backlog_s()).sum();
     for (r, p) in held.iter_mut() {
         if *r <= now_v {
@@ -738,6 +836,18 @@ fn replan_held(
             counters.extended += 1;
         }
         *r = new;
+    }
+    if let Some(sink) = policy.trace_sink() {
+        // the ingest pass moves releases, not energy: the carbon delta
+        // of a moved release is audited by the ledger, not the trace
+        sink.emit(&TraceEvent::Replan {
+            t: now_v,
+            trigger: trigger.name().to_string(),
+            drift_mape: g.drift_mape(),
+            released_early: counters.released_early - early0,
+            extended: counters.extended - ext0,
+            delta_kg: 0.0,
+        });
     }
 }
 
@@ -793,6 +903,9 @@ fn flush_held(
         let Some((k, _)) = due else { return };
         let (release, p) = held.swap_remove(k);
         sleep_until_virtual(release, opts.time_scale, started);
+        if let Some(sink) = policy.trace_sink() {
+            sink.emit(&TraceEvent::Release { t: release, prompt: p.id });
+        }
         dispatch(&p, cluster, db, policy, queues, opts, started, assignment);
     }
 }
@@ -915,5 +1028,48 @@ mod tests {
         assert!(r.est_energy_kwh > 0.0);
         assert_eq!(r.deferred, 0);
         assert_eq!(r.sizing_holds, 0);
+        assert_eq!(r.metrics.counter("decisions_total"), 8);
+        assert_eq!(r.metrics.counter("defers_total"), 0);
+        assert!(r.metrics.gauge("decisions_per_s").unwrap() > 0.0);
+        assert_eq!(r.device_accounts.len(), cluster.devices.len());
+        let busy: f64 = r.device_accounts.iter().map(|&(_, b, _, _)| b).sum();
+        assert!((busy - r.est_energy_kwh).abs() < 1e-12, "accounts must sum to the total");
+        let mut sorted = r.device_accounts.clone();
+        sorted.sort_by(|a, b| a.0.cmp(&b.0));
+        assert_eq!(sorted, r.device_accounts, "accounts must be name-sorted");
+    }
+
+    #[test]
+    fn flight_recorder_captures_server_decisions() {
+        let cfg = ExperimentConfig::default();
+        let cluster = Cluster::from_config(&cfg.cluster);
+        let mut cfg2 = cfg;
+        cfg2.workload.prompts = 6;
+        let mut corpus = crate::workload::Corpus::generate(&cfg2.workload);
+        crate::workload::trace::assign_arrivals(
+            &mut corpus.prompts,
+            crate::config::Arrival::Open { rate: 4.0 },
+            7,
+        );
+        let sink = Arc::new(TraceSink::memory());
+        let opts = ServeOptions {
+            execution: ExecutionMode::Stub,
+            time_scale: 2000.0,
+            batch_timeout: Duration::from_millis(20),
+            trace: Some(Arc::clone(&sink)),
+            ..ServeOptions::default()
+        };
+        let r = serve(&cluster, &corpus.prompts, &opts).unwrap();
+        sink.flush();
+        let text = sink.contents();
+        let count = |ev: &str| {
+            text.lines().filter(|l| l.contains(&format!("\"ev\":\"{ev}\""))).count()
+        };
+        assert_eq!(count("route"), r.completed, "one route event per served prompt");
+        assert!(count("batch_launch") > 0, "workers must record their launches");
+        for line in text.lines() {
+            let v = crate::util::json::parse(line).expect("trace line parses");
+            crate::telemetry::trace::TraceEvent::from_value(&v).expect("trace line round-trips");
+        }
     }
 }

@@ -171,4 +171,84 @@ mod tests {
     fn empty_error_rate_is_zero() {
         assert_eq!(MetricsAggregate::new().error_rate(), 0.0);
     }
+
+    #[test]
+    fn all_errors_rate_is_exactly_one() {
+        let mut agg = MetricsAggregate::new();
+        for i in 0..7 {
+            agg.add(&sample(i, 1.0 + i as f64, true));
+        }
+        assert_eq!(agg.error_rate(), 1.0);
+        // merging an empty aggregate must not dilute the rate
+        agg.merge(&MetricsAggregate::new());
+        assert_eq!(agg.error_rate(), 1.0);
+    }
+
+    /// Count-weighted fields of two aggregates must agree exactly; mean
+    /// fields to float tolerance (summaries accumulate in different
+    /// orders under different merge groupings).
+    fn assert_agg_eq(
+        a: &MetricsAggregate,
+        b: &MetricsAggregate,
+        label: &str,
+    ) -> Result<(), String> {
+        if a.requests != b.requests || a.errors != b.errors {
+            return Err(format!("{label}: counts diverged"));
+        }
+        let close = |x: f64, y: f64| (x - y).abs() < 1e-9 * (1.0 + x.abs().max(y.abs()));
+        for (what, x, y) in [
+            ("e2e", a.e2e.mean(), b.e2e.mean()),
+            ("ttft", a.ttft.mean(), b.ttft.mean()),
+            ("tokens", a.tokens.sum(), b.tokens.sum()),
+            ("energy", a.energy_kwh.sum(), b.energy_kwh.sum()),
+            ("carbon", a.carbon_kg.sum(), b.carbon_kg.sum()),
+            ("p95", a.e2e_hist.p95(), b.e2e_hist.p95()),
+        ] {
+            if !close(x, y) {
+                return Err(format!("{label}: {what} diverged ({x} vs {y})"));
+            }
+        }
+        Ok(())
+    }
+
+    #[test]
+    fn merge_is_commutative_and_associative() {
+        // the registry snapshots and the report tables both assume
+        // partial aggregates can be folded in any order — property-test
+        // (a ∪ b) ∪ c == a ∪ (b ∪ c) and a ∪ b == b ∪ a over random
+        // partitions of a random request stream
+        crate::util::check::property("aggregate merge order is irrelevant", 16, |rng| {
+            let parts: Vec<MetricsAggregate> = (0..3usize)
+                .map(|k| {
+                    let mut agg = MetricsAggregate::new();
+                    for i in 0..rng.below(12) {
+                        let m = sample(
+                            (k * 100 + i) as u64,
+                            rng.range(0.1, 30.0),
+                            rng.chance(0.2),
+                        );
+                        agg.add(&m);
+                    }
+                    agg
+                })
+                .collect();
+            let [a, b, c] = [&parts[0], &parts[1], &parts[2]];
+
+            // commutativity: a ∪ b == b ∪ a
+            let mut ab = a.clone();
+            ab.merge(b);
+            let mut ba = b.clone();
+            ba.merge(a);
+            assert_agg_eq(&ab, &ba, "commutativity")?;
+
+            // associativity: (a ∪ b) ∪ c == a ∪ (b ∪ c)
+            let mut left = ab;
+            left.merge(c);
+            let mut bc = b.clone();
+            bc.merge(c);
+            let mut right = a.clone();
+            right.merge(&bc);
+            assert_agg_eq(&left, &right, "associativity")
+        });
+    }
 }

@@ -1,7 +1,12 @@
-//! Telemetry: per-request metrics and the energy/carbon ledger.
+//! Telemetry: per-request metrics, the energy/carbon ledger, the
+//! decision flight recorder, and the unified metrics registry.
 
 pub mod ledger;
 pub mod metrics;
+pub mod registry;
+pub mod trace;
 
 pub use ledger::{EnergyLedger, ReplanStats, SizingStats};
-pub use metrics::{RequestMetrics, MetricsAggregate};
+pub use metrics::{MetricsAggregate, RequestMetrics};
+pub use registry::MetricsRegistry;
+pub use trace::{normalize, CostCell, TraceEvent, TraceSink};

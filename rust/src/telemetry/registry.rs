@@ -1,0 +1,268 @@
+//! Unified metrics registry: named counters, gauges, and summary
+//! series shared by all three execution planes.
+//!
+//! Each plane owns a private [`MetricsRegistry`], feeds it at batch /
+//! replan granularity (never per-arrival — the decision hot path that
+//! the CI bench gate defends stays untouched), and snapshots it into
+//! its result struct (`RunResult` / `OnlineResult` / `ServeReport`).
+//! `--metrics-json <path>` dumps the snapshot.
+//!
+//! Series names are a flat dotted namespace, identical across planes so
+//! metrics join across planes (and with flight-recorder traces) by
+//! name:
+//!
+//! | series | kind | meaning |
+//! |---|---|---|
+//! | `decisions_total` | counter | routing decisions made |
+//! | `defers_total` | counter | prompts deferred to a clean window |
+//! | `batches_total` | counter | batches launched |
+//! | `sizing_holds_total` | counter | partial batches held for sizing |
+//! | `replan_passes_total` | counter | replan passes executed |
+//! | `replan_released_early_total` | counter | holds moved earlier |
+//! | `replan_extended_total` | counter | holds moved later |
+//! | `deadline_violations_total` | counter | deferrable SLO misses |
+//! | `decisions_per_s` | gauge | decision throughput over the run |
+//! | `drift_mape` | gauge | forecast drift MAPE at run end |
+//! | `energy_kwh` | gauge | total energy (busy + idle) |
+//! | `carbon_kg` | gauge | total attributed carbon |
+//! | `device.<name>.busy_kwh` | gauge | per-device busy energy |
+//! | `device.<name>.idle_kwh` | gauge | per-device idle energy |
+//! | `device.<name>.carbon_kg` | gauge | per-device carbon |
+//! | `device.<name>.busy_s` | gauge | per-device busy seconds |
+//! | `device.<name>.batches` | counter | per-device batches |
+//! | `queue_depth` | series | queued prompts, observed per launch |
+//! | `deferral_queue_len` | series | held prompts, observed per launch |
+//! | `batch_fill` | series | members per launched batch |
+//!
+//! No new dependencies: storage is `BTreeMap` (deterministic snapshot
+//! order) over [`crate::util::stats::Summary`], and the snapshot is a
+//! [`crate::util::json::Value`].
+
+use std::collections::BTreeMap;
+
+use super::ledger::EnergyLedger;
+use crate::util::json::Value;
+use crate::util::stats::Summary;
+
+/// Counters, gauges, and streaming summaries keyed by series name.
+#[derive(Debug, Clone, Default)]
+pub struct MetricsRegistry {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    series: BTreeMap<String, Summary>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Increment a counter by 1.
+    pub fn inc(&mut self, name: &str) {
+        self.add(name, 1);
+    }
+
+    /// Increment a counter by `delta`.
+    pub fn add(&mut self, name: &str, delta: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += delta;
+    }
+
+    /// Set a gauge to its latest value.
+    pub fn set_gauge(&mut self, name: &str, value: f64) {
+        self.gauges.insert(name.to_string(), value);
+    }
+
+    /// Record one observation into a summary series.
+    pub fn observe(&mut self, name: &str, value: f64) {
+        self.series.entry(name.to_string()).or_default().add(value);
+    }
+
+    /// Fold a pre-collected [`Summary`] into a named series. The planes
+    /// accumulate plain `Summary` fields on their hot state (a few
+    /// float ops, no map lookup) and publish them here once at run end.
+    pub fn observe_summary(&mut self, name: &str, s: &Summary) {
+        self.series.entry(name.to_string()).or_default().merge(s);
+    }
+
+    /// Current counter value (0 when never incremented).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    /// Latest gauge value.
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.get(name).copied()
+    }
+
+    /// A summary series, if it has been observed.
+    pub fn series(&self, name: &str) -> Option<&Summary> {
+        self.series.get(name)
+    }
+
+    /// Fold another registry in: counters add, gauges take the other's
+    /// value (latest-wins), series merge.
+    pub fn merge(&mut self, other: &MetricsRegistry) {
+        for (k, v) in &other.counters {
+            *self.counters.entry(k.clone()).or_insert(0) += v;
+        }
+        for (k, v) in &other.gauges {
+            self.gauges.insert(k.clone(), *v);
+        }
+        for (k, s) in &other.series {
+            self.series.entry(k.clone()).or_default().merge(s);
+        }
+    }
+
+    /// Publish the ledger's per-device accounts and cluster totals as
+    /// gauges/counters, in the ledger's deterministic (BTreeMap) device
+    /// order — the join point between metrics, traces, and reports.
+    pub fn record_ledger(&mut self, ledger: &EnergyLedger) {
+        for (name, acc) in ledger.accounts() {
+            self.set_gauge(&format!("device.{name}.busy_kwh"), acc.active_kwh);
+            self.set_gauge(&format!("device.{name}.idle_kwh"), acc.idle_kwh);
+            self.set_gauge(&format!("device.{name}.carbon_kg"), acc.carbon_kg);
+            self.set_gauge(&format!("device.{name}.busy_s"), acc.busy_s);
+            let key = format!("device.{name}.batches");
+            self.counters.insert(key, acc.batches);
+        }
+        self.set_gauge("energy_kwh", ledger.total_kwh());
+        self.set_gauge("carbon_kg", ledger.total_carbon_kg());
+        let r = ledger.replan_stats();
+        self.counters.insert("replan_passes_total".into(), r.passes);
+        self.counters.insert("replan_released_early_total".into(), r.released_early);
+        self.counters.insert("replan_extended_total".into(), r.extended);
+        self.set_gauge("replan_carbon_delta_kg", r.carbon_delta_kg);
+        let s = ledger.sizing_stats();
+        self.counters.insert("sizing_holds_total".into(), s.holds);
+        self.set_gauge("sizing_est_saved_kg", s.est_saved_kg);
+    }
+
+    /// Deterministic JSON snapshot:
+    /// `{"counters": {...}, "gauges": {...}, "series": {name: {count,
+    /// mean, min, max, sum, std}}}`. Empty series carry only their
+    /// count (an empty [`Summary`] has a NaN mean, which JSON cannot
+    /// encode).
+    pub fn snapshot(&self) -> Value {
+        let counters: BTreeMap<String, Value> =
+            self.counters.iter().map(|(k, v)| (k.clone(), Value::Num(*v as f64))).collect();
+        let gauges: BTreeMap<String, Value> =
+            self.gauges.iter().map(|(k, v)| (k.clone(), Value::Num(*v))).collect();
+        let series: BTreeMap<String, Value> =
+            self.series.iter().map(|(k, s)| (k.clone(), summary_value(s))).collect();
+        Value::Obj(BTreeMap::from([
+            ("counters".to_string(), Value::Obj(counters)),
+            ("gauges".to_string(), Value::Obj(gauges)),
+            ("series".to_string(), Value::Obj(series)),
+        ]))
+    }
+}
+
+fn summary_value(s: &Summary) -> Value {
+    let mut o = BTreeMap::new();
+    o.insert("count".to_string(), Value::Num(s.count() as f64));
+    if s.count() > 0 {
+        o.insert("mean".to_string(), Value::Num(s.mean()));
+        o.insert("min".to_string(), Value::Num(s.min()));
+        o.insert("max".to_string(), Value::Num(s.max()));
+        o.insert("sum".to_string(), Value::Num(s.sum()));
+        o.insert("std".to_string(), Value::Num(s.std()));
+    }
+    Value::Obj(o)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::CarbonModel;
+    use crate::util::json;
+
+    #[test]
+    fn counters_gauges_series_accumulate() {
+        let mut r = MetricsRegistry::new();
+        r.inc("decisions_total");
+        r.add("decisions_total", 4);
+        r.set_gauge("drift_mape", 0.25);
+        r.set_gauge("drift_mape", 0.5); // latest wins
+        r.observe("queue_depth", 3.0);
+        r.observe("queue_depth", 5.0);
+        assert_eq!(r.counter("decisions_total"), 5);
+        assert_eq!(r.counter("never_touched"), 0);
+        assert_eq!(r.gauge("drift_mape"), Some(0.5));
+        assert_eq!(r.gauge("missing"), None);
+        let s = r.series("queue_depth").unwrap();
+        assert_eq!(s.count(), 2);
+        assert!((s.mean() - 4.0).abs() < 1e-12);
+        assert!(r.series("missing").is_none());
+    }
+
+    #[test]
+    fn merge_adds_counters_and_merges_series() {
+        let mut a = MetricsRegistry::new();
+        let mut b = MetricsRegistry::new();
+        a.add("batches_total", 2);
+        b.add("batches_total", 3);
+        b.add("defers_total", 1);
+        a.set_gauge("carbon_kg", 1.0);
+        b.set_gauge("carbon_kg", 2.0);
+        a.observe("batch_fill", 4.0);
+        b.observe("batch_fill", 2.0);
+        a.merge(&b);
+        assert_eq!(a.counter("batches_total"), 5);
+        assert_eq!(a.counter("defers_total"), 1);
+        assert_eq!(a.gauge("carbon_kg"), Some(2.0));
+        assert_eq!(a.series("batch_fill").unwrap().count(), 2);
+    }
+
+    #[test]
+    fn snapshot_is_valid_deterministic_json() {
+        let mut r = MetricsRegistry::new();
+        r.inc("batches_total");
+        r.set_gauge("carbon_kg", 0.5);
+        r.observe("queue_depth", 2.0);
+        r.observe("empty_later", 1.0);
+        let a = json::to_string(&r.snapshot());
+        let b = json::to_string(&r.clone().snapshot());
+        assert_eq!(a, b, "snapshot must be byte-deterministic");
+        let v = json::parse(&a).unwrap();
+        assert_eq!(v.path(&["counters", "batches_total"]).unwrap().as_u64(), Some(1));
+        assert_eq!(v.path(&["gauges", "carbon_kg"]).unwrap().as_f64(), Some(0.5));
+        assert_eq!(v.path(&["series", "queue_depth", "count"]).unwrap().as_u64(), Some(1));
+        assert_eq!(v.path(&["series", "queue_depth", "mean"]).unwrap().as_f64(), Some(2.0));
+    }
+
+    #[test]
+    fn empty_series_snapshot_has_no_nan() {
+        let mut r = MetricsRegistry::new();
+        r.series.insert("hollow".into(), Summary::new());
+        let text = json::to_string(&r.snapshot());
+        assert!(!text.contains("NaN"), "snapshot leaked NaN: {text}");
+        let v = json::parse(&text).unwrap();
+        assert_eq!(v.path(&["series", "hollow", "count"]).unwrap().as_u64(), Some(0));
+        assert!(v.path(&["series", "hollow", "mean"]).is_none());
+    }
+
+    #[test]
+    fn record_ledger_publishes_per_device_accounts() {
+        let mut l = EnergyLedger::new(CarbonModel::constant(100.0));
+        l.post_batch("b-dev", 2e-3, 7.0, 50.0);
+        l.post_batch("a-dev", 1e-3, 3.0, 10.0);
+        l.post_idle("a-dev", 5e-4, 60.0);
+        l.post_replan(2, 1, -1e-6);
+        l.post_sizing_hold(3e-7);
+        let mut r = MetricsRegistry::new();
+        r.record_ledger(&l);
+        assert_eq!(r.gauge("device.a-dev.busy_kwh"), Some(1e-3));
+        assert_eq!(r.gauge("device.a-dev.idle_kwh"), Some(5e-4));
+        assert_eq!(r.gauge("device.b-dev.busy_kwh"), Some(2e-3));
+        assert_eq!(r.counter("device.a-dev.batches"), 1);
+        assert_eq!(r.counter("replan_passes_total"), 2);
+        assert_eq!(r.counter("replan_released_early_total"), 2);
+        assert_eq!(r.counter("sizing_holds_total"), 1);
+        assert!((r.gauge("energy_kwh").unwrap() - 3.5e-3).abs() < 1e-15);
+        // deterministic device order in the snapshot: a-dev before b-dev
+        let text = json::to_string(&r.snapshot());
+        let a = text.find("device.a-dev.busy_kwh").unwrap();
+        let b = text.find("device.b-dev.busy_kwh").unwrap();
+        assert!(a < b);
+    }
+}

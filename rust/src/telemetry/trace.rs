@@ -1,0 +1,616 @@
+//! Decision flight recorder: one structured JSONL event per scheduling
+//! decision, on every plane.
+//!
+//! Aggregate ledger totals say *what* a run cost; the flight recorder
+//! says *why* — which cost-table cells a route consulted, which clean
+//! window a deferral was planned into, which forecast (by hash) that
+//! plan trusted, why a replan pass fired. Every plane (closed loop,
+//! DES, wallclock server) emits the same event vocabulary through the
+//! same [`TraceSink`], so a trace is also a cross-plane regression
+//! oracle: the DES and the stub server make bit-for-bit identical
+//! routing and deferral decisions, hence their traces must be
+//! byte-identical after [`normalize`] strips plane-local detail
+//! (timestamps, live backlog, plane-only events). `verdant trace diff`
+//! and the CI `trace-diff` job pin exactly that.
+//!
+//! Zero cost when off: the sink is carried as `Option<Arc<TraceSink>>`
+//! and every emission site guards on `if let Some(sink)` — the disabled
+//! path is one branch on an option, no allocation, no formatting, so
+//! the PR-3/PR-4 hot-path wins (and the CI bench gate that defends
+//! them) are untouched.
+//!
+//! Determinism: events serialize through [`crate::util::json`], whose
+//! objects are `BTreeMap`-backed — identical events always produce
+//! identical bytes. Timestamps are plane-virtual seconds (never
+//! wallclock), and the forecast hash is FNV-1a over IEEE-754 bit
+//! patterns ([`crate::grid::forecast_hash`]), so a trace is exactly
+//! reproducible from the same seed and config.
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::io::{self, Write};
+use std::path::Path;
+use std::sync::Mutex;
+
+use crate::util::json::{self, Value};
+
+/// One consulted routing cost-table cell: what the router saw for one
+/// device when it placed a prompt.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CostCell {
+    pub device: String,
+    pub e2e_s: f64,
+    pub energy_kwh: f64,
+    pub carbon_kg: f64,
+}
+
+/// One scheduling decision. The `ev` discriminant in JSON is the
+/// snake_case kind name from [`TraceEvent::kind`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum TraceEvent {
+    /// A prompt was routed to `device`. `cells` are the per-device
+    /// cost-table cells consulted and `backlog_s` the live per-device
+    /// backlog snapshot at decision time (plane-local; stripped by
+    /// [`normalize`]).
+    Route { t: f64, prompt: u64, device: String, cells: Vec<CostCell>, backlog_s: Vec<f64> },
+    /// A deferrable prompt was held for a cleaner window: planned
+    /// release time, the window's mean forecast intensity, the hash of
+    /// the forecast vector the plan trusted, and the drift-aware blend
+    /// weight in effect.
+    Defer {
+        t: f64,
+        prompt: u64,
+        slo: String,
+        deadline_s: f64,
+        release_s: f64,
+        window_g_per_kwh: f64,
+        forecast_hash: u64,
+        blend_w: f64,
+    },
+    /// A previously deferred prompt was released for admission.
+    Release { t: f64, prompt: u64 },
+    /// A trailing partial batch was held for carbon-aware sizing.
+    SizingHold { t: f64, device: String, members: Vec<u64>, hold_until_s: f64, est_saved_kg: f64 },
+    /// A sizing hold was voided (the saving disappeared under replan or
+    /// new arrivals) and the batch launched immediately.
+    HoldVoid { t: f64, device: String },
+    /// A replan pass fired: why, how wrong the active forecast was, and
+    /// how the plan changed.
+    Replan {
+        t: f64,
+        trigger: String,
+        drift_mape: f64,
+        released_early: usize,
+        extended: usize,
+        delta_kg: f64,
+    },
+    /// A batch launched on `device` with the given members and
+    /// energy/carbon estimates.
+    BatchLaunch { t: f64, device: String, members: Vec<u64>, energy_kwh: f64, carbon_kg: f64 },
+}
+
+impl TraceEvent {
+    /// The `ev` discriminant used in the JSONL encoding.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            TraceEvent::Route { .. } => "route",
+            TraceEvent::Defer { .. } => "defer",
+            TraceEvent::Release { .. } => "release",
+            TraceEvent::SizingHold { .. } => "sizing_hold",
+            TraceEvent::HoldVoid { .. } => "hold_void",
+            TraceEvent::Replan { .. } => "replan",
+            TraceEvent::BatchLaunch { .. } => "batch_launch",
+        }
+    }
+
+    /// Encode as a JSON object (`BTreeMap`-backed, so serialization is
+    /// byte-deterministic). The forecast hash is encoded as a 16-digit
+    /// hex string — `f64` JSON numbers cannot carry 64 significant
+    /// bits.
+    pub fn to_value(&self) -> Value {
+        let mut o = BTreeMap::new();
+        o.insert("ev".to_string(), Value::Str(self.kind().to_string()));
+        match self {
+            TraceEvent::Route { t, prompt, device, cells, backlog_s } => {
+                o.insert("t".into(), Value::Num(*t));
+                o.insert("prompt".into(), Value::Num(*prompt as f64));
+                o.insert("device".into(), Value::Str(device.clone()));
+                o.insert(
+                    "cells".into(),
+                    Value::Arr(
+                        cells
+                            .iter()
+                            .map(|c| {
+                                Value::Obj(BTreeMap::from([
+                                    ("device".to_string(), Value::Str(c.device.clone())),
+                                    ("e2e_s".to_string(), Value::Num(c.e2e_s)),
+                                    ("energy_kwh".to_string(), Value::Num(c.energy_kwh)),
+                                    ("carbon_kg".to_string(), Value::Num(c.carbon_kg)),
+                                ]))
+                            })
+                            .collect(),
+                    ),
+                );
+                o.insert(
+                    "backlog_s".into(),
+                    Value::Arr(backlog_s.iter().map(|b| Value::Num(*b)).collect()),
+                );
+            }
+            TraceEvent::Defer {
+                t,
+                prompt,
+                slo,
+                deadline_s,
+                release_s,
+                window_g_per_kwh,
+                forecast_hash,
+                blend_w,
+            } => {
+                o.insert("t".into(), Value::Num(*t));
+                o.insert("prompt".into(), Value::Num(*prompt as f64));
+                o.insert("slo".into(), Value::Str(slo.clone()));
+                o.insert("deadline_s".into(), Value::Num(*deadline_s));
+                o.insert("release_s".into(), Value::Num(*release_s));
+                o.insert("window_g_per_kwh".into(), Value::Num(*window_g_per_kwh));
+                o.insert("forecast_hash".into(), Value::Str(format!("{forecast_hash:016x}")));
+                o.insert("blend_w".into(), Value::Num(*blend_w));
+            }
+            TraceEvent::Release { t, prompt } => {
+                o.insert("t".into(), Value::Num(*t));
+                o.insert("prompt".into(), Value::Num(*prompt as f64));
+            }
+            TraceEvent::SizingHold { t, device, members, hold_until_s, est_saved_kg } => {
+                o.insert("t".into(), Value::Num(*t));
+                o.insert("device".into(), Value::Str(device.clone()));
+                o.insert(
+                    "members".into(),
+                    Value::Arr(members.iter().map(|m| Value::Num(*m as f64)).collect()),
+                );
+                o.insert("hold_until_s".into(), Value::Num(*hold_until_s));
+                o.insert("est_saved_kg".into(), Value::Num(*est_saved_kg));
+            }
+            TraceEvent::HoldVoid { t, device } => {
+                o.insert("t".into(), Value::Num(*t));
+                o.insert("device".into(), Value::Str(device.clone()));
+            }
+            TraceEvent::Replan { t, trigger, drift_mape, released_early, extended, delta_kg } => {
+                o.insert("t".into(), Value::Num(*t));
+                o.insert("trigger".into(), Value::Str(trigger.clone()));
+                o.insert("drift_mape".into(), Value::Num(*drift_mape));
+                o.insert("released_early".into(), Value::Num(*released_early as f64));
+                o.insert("extended".into(), Value::Num(*extended as f64));
+                o.insert("delta_kg".into(), Value::Num(*delta_kg));
+            }
+            TraceEvent::BatchLaunch { t, device, members, energy_kwh, carbon_kg } => {
+                o.insert("t".into(), Value::Num(*t));
+                o.insert("device".into(), Value::Str(device.clone()));
+                o.insert(
+                    "members".into(),
+                    Value::Arr(members.iter().map(|m| Value::Num(*m as f64)).collect()),
+                );
+                o.insert("energy_kwh".into(), Value::Num(*energy_kwh));
+                o.insert("carbon_kg".into(), Value::Num(*carbon_kg));
+            }
+        }
+        Value::Obj(o)
+    }
+
+    /// Decode from the JSON object produced by [`Self::to_value`].
+    pub fn from_value(v: &Value) -> Result<TraceEvent, String> {
+        let kind = v.get("ev").and_then(Value::as_str).ok_or("missing 'ev' discriminant")?;
+        let t = |k: &str| {
+            v.get(k).and_then(Value::as_f64).ok_or_else(|| format!("missing f64 '{k}'"))
+        };
+        let u = |k: &str| {
+            v.get(k).and_then(Value::as_u64).ok_or_else(|| format!("missing u64 '{k}'"))
+        };
+        let s = |k: &str| {
+            v.get(k)
+                .and_then(Value::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| format!("missing str '{k}'"))
+        };
+        let ids = |k: &str| -> Result<Vec<u64>, String> {
+            v.get(k)
+                .and_then(Value::as_arr)
+                .ok_or_else(|| format!("missing arr '{k}'"))?
+                .iter()
+                .map(|x| x.as_u64().ok_or_else(|| format!("non-u64 in '{k}'")))
+                .collect()
+        };
+        match kind {
+            "route" => {
+                let cells = v
+                    .get("cells")
+                    .and_then(Value::as_arr)
+                    .ok_or("missing arr 'cells'")?
+                    .iter()
+                    .map(|c| {
+                        Ok(CostCell {
+                            device: c
+                                .get("device")
+                                .and_then(Value::as_str)
+                                .ok_or("cell missing device")?
+                                .to_string(),
+                            e2e_s: c.get("e2e_s").and_then(Value::as_f64).ok_or("cell e2e_s")?,
+                            energy_kwh: c
+                                .get("energy_kwh")
+                                .and_then(Value::as_f64)
+                                .ok_or("cell energy_kwh")?,
+                            carbon_kg: c
+                                .get("carbon_kg")
+                                .and_then(Value::as_f64)
+                                .ok_or("cell carbon_kg")?,
+                        })
+                    })
+                    .collect::<Result<Vec<_>, String>>()?;
+                let backlog_s = v
+                    .get("backlog_s")
+                    .and_then(Value::as_arr)
+                    .ok_or("missing arr 'backlog_s'")?
+                    .iter()
+                    .map(|x| x.as_f64().ok_or_else(|| "non-f64 in 'backlog_s'".to_string()))
+                    .collect::<Result<Vec<_>, String>>()?;
+                Ok(TraceEvent::Route {
+                    t: t("t")?,
+                    prompt: u("prompt")?,
+                    device: s("device")?,
+                    cells,
+                    backlog_s,
+                })
+            }
+            "defer" => Ok(TraceEvent::Defer {
+                t: t("t")?,
+                prompt: u("prompt")?,
+                slo: s("slo")?,
+                deadline_s: t("deadline_s")?,
+                release_s: t("release_s")?,
+                window_g_per_kwh: t("window_g_per_kwh")?,
+                forecast_hash: u64::from_str_radix(&s("forecast_hash")?, 16)
+                    .map_err(|e| format!("bad forecast_hash: {e}"))?,
+                blend_w: t("blend_w")?,
+            }),
+            "release" => Ok(TraceEvent::Release { t: t("t")?, prompt: u("prompt")? }),
+            "sizing_hold" => Ok(TraceEvent::SizingHold {
+                t: t("t")?,
+                device: s("device")?,
+                members: ids("members")?,
+                hold_until_s: t("hold_until_s")?,
+                est_saved_kg: t("est_saved_kg")?,
+            }),
+            "hold_void" => Ok(TraceEvent::HoldVoid { t: t("t")?, device: s("device")? }),
+            "replan" => Ok(TraceEvent::Replan {
+                t: t("t")?,
+                trigger: s("trigger")?,
+                drift_mape: t("drift_mape")?,
+                released_early: u("released_early")? as usize,
+                extended: u("extended")? as usize,
+                delta_kg: t("delta_kg")?,
+            }),
+            "batch_launch" => Ok(TraceEvent::BatchLaunch {
+                t: t("t")?,
+                device: s("device")?,
+                members: ids("members")?,
+                energy_kwh: t("energy_kwh")?,
+                carbon_kg: t("carbon_kg")?,
+            }),
+            other => Err(format!("unknown event kind '{other}'")),
+        }
+    }
+
+    /// One compact JSONL line (no trailing newline).
+    pub fn to_line(&self) -> String {
+        json::to_string(&self.to_value())
+    }
+}
+
+enum SinkInner {
+    File(io::BufWriter<fs::File>),
+    Memory(Vec<u8>),
+}
+
+/// Buffered, thread-safe destination for trace events.
+///
+/// The `Mutex` serializes whole lines, so concurrent server workers
+/// never interleave bytes within a line; the DES and the closed loop
+/// are single-threaded and pay only an uncontended lock on the
+/// *enabled* path. The disabled path never reaches the sink at all —
+/// emission sites guard on `Option<Arc<TraceSink>>`.
+pub struct TraceSink {
+    inner: Mutex<SinkInner>,
+}
+
+impl TraceSink {
+    /// Record to a file (created/truncated), buffered. Call
+    /// [`Self::flush`] (or drop every handle) before reading it back.
+    pub fn file(path: impl AsRef<Path>) -> io::Result<TraceSink> {
+        let f = fs::File::create(path)?;
+        Ok(TraceSink { inner: Mutex::new(SinkInner::File(io::BufWriter::new(f))) })
+    }
+
+    /// Record to an in-memory buffer (tests, `trace diff` fixtures).
+    pub fn memory() -> TraceSink {
+        TraceSink { inner: Mutex::new(SinkInner::Memory(Vec::new())) }
+    }
+
+    /// Append one event as a JSONL line. Write errors are swallowed:
+    /// the recorder is an observer and must never fail a run.
+    pub fn emit(&self, ev: &TraceEvent) {
+        let mut line = ev.to_line();
+        line.push('\n');
+        match &mut *self.inner.lock().unwrap() {
+            SinkInner::File(w) => {
+                let _ = w.write_all(line.as_bytes());
+            }
+            SinkInner::Memory(buf) => buf.extend_from_slice(line.as_bytes()),
+        }
+    }
+
+    /// Flush buffered file output (no-op for memory sinks).
+    pub fn flush(&self) {
+        if let SinkInner::File(w) = &mut *self.inner.lock().unwrap() {
+            let _ = w.flush();
+        }
+    }
+
+    /// The recorded bytes of a memory sink (empty for file sinks — read
+    /// the file instead).
+    pub fn contents(&self) -> String {
+        match &*self.inner.lock().unwrap() {
+            SinkInner::Memory(buf) => String::from_utf8_lossy(buf).into_owned(),
+            SinkInner::File(_) => String::new(),
+        }
+    }
+}
+
+impl std::fmt::Debug for TraceSink {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let kind = match &*self.inner.lock().unwrap() {
+            SinkInner::File(_) => "file",
+            SinkInner::Memory(b) => return write!(f, "TraceSink(memory, {} bytes)", b.len()),
+        };
+        write!(f, "TraceSink({kind})")
+    }
+}
+
+/// Reduce a JSONL trace to its plane-invariant decision record.
+///
+/// Keeps only the decisions the cross-plane equivalence tests pin —
+/// which device each prompt routed to, and which prompts were deferred
+/// — and strips everything plane-local: timestamps, live backlog
+/// snapshots, cost cells, planned release times, and plane-only events
+/// (release, sizing/replan/batch bookkeeping). Records are sorted by
+/// `(prompt, kind)`, so arrival interleaving differences cannot reorder
+/// the output. Two planes making identical decisions therefore produce
+/// byte-identical normalized traces — `verdant trace diff` and the CI
+/// `trace-diff` job compare exactly these bytes.
+pub fn normalize(text: &str) -> Result<String, String> {
+    let mut rows: Vec<(u64, u8, String)> = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let v = json::parse(line).map_err(|e| format!("line {}: {e}", i + 1))?;
+        let ev = TraceEvent::from_value(&v).map_err(|e| format!("line {}: {e}", i + 1))?;
+        match ev {
+            TraceEvent::Route { prompt, device, .. } => {
+                let mut o = BTreeMap::new();
+                o.insert("device".to_string(), Value::Str(device));
+                o.insert("ev".to_string(), Value::Str("route".to_string()));
+                o.insert("prompt".to_string(), Value::Num(prompt as f64));
+                rows.push((prompt, 0, json::to_string(&Value::Obj(o))));
+            }
+            TraceEvent::Defer { prompt, .. } => {
+                let mut o = BTreeMap::new();
+                o.insert("ev".to_string(), Value::Str("defer".to_string()));
+                o.insert("prompt".to_string(), Value::Num(prompt as f64));
+                rows.push((prompt, 1, json::to_string(&Value::Obj(o))));
+            }
+            _ => {}
+        }
+    }
+    rows.sort();
+    let mut out = String::new();
+    for (_, _, line) in rows {
+        out.push_str(&line);
+        out.push('\n');
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_events() -> Vec<TraceEvent> {
+        vec![
+            TraceEvent::Route {
+                t: 12.5,
+                prompt: 3,
+                device: "jetson-orin-nx".into(),
+                cells: vec![
+                    CostCell {
+                        device: "jetson-orin-nx".into(),
+                        e2e_s: 4.25,
+                        energy_kwh: 1.5e-5,
+                        carbon_kg: 1.0e-6,
+                    },
+                    CostCell {
+                        device: "ada-2000".into(),
+                        e2e_s: 1.75,
+                        energy_kwh: 3.0e-5,
+                        carbon_kg: 2.1e-6,
+                    },
+                ],
+                backlog_s: vec![0.0, 7.5],
+            },
+            TraceEvent::Defer {
+                t: 12.5,
+                prompt: 4,
+                slo: "deferrable".into(),
+                deadline_s: 43200.0,
+                release_s: 9000.0,
+                window_g_per_kwh: 48.25,
+                forecast_hash: 0xdead_beef_cafe_f00d,
+                blend_w: 0.25,
+            },
+            TraceEvent::Release { t: 9000.0, prompt: 4 },
+            TraceEvent::SizingHold {
+                t: 100.0,
+                device: "ada-2000".into(),
+                members: vec![7, 9],
+                hold_until_s: 1800.0,
+                est_saved_kg: 3.5e-7,
+            },
+            TraceEvent::HoldVoid { t: 200.0, device: "ada-2000".into() },
+            TraceEvent::Replan {
+                t: 1800.0,
+                trigger: "drift".into(),
+                drift_mape: 0.375,
+                released_early: 2,
+                extended: 1,
+                delta_kg: -1.25e-7,
+            },
+            TraceEvent::BatchLaunch {
+                t: 1900.0,
+                device: "jetson-orin-nx".into(),
+                members: vec![3, 4],
+                energy_kwh: 2.5e-5,
+                carbon_kg: 1.75e-6,
+            },
+        ]
+    }
+
+    #[test]
+    fn events_round_trip_through_jsonl() {
+        for ev in sample_events() {
+            let line = ev.to_line();
+            let parsed = json::parse(&line).expect("line must be valid JSON");
+            let back = TraceEvent::from_value(&parsed).expect("must decode");
+            assert_eq!(back, ev, "round-trip changed {line}");
+            assert_eq!(parsed.get("ev").unwrap().as_str(), Some(ev.kind()));
+        }
+    }
+
+    #[test]
+    fn forecast_hash_survives_full_64_bits() {
+        // f64 JSON numbers hold 53 bits; the hex-string encoding must
+        // carry all 64 exactly
+        let ev = TraceEvent::Defer {
+            t: 0.0,
+            prompt: 1,
+            slo: "deferrable".into(),
+            deadline_s: 1.0,
+            release_s: 0.5,
+            window_g_per_kwh: 50.0,
+            forecast_hash: u64::MAX,
+            blend_w: 0.0,
+        };
+        let back = TraceEvent::from_value(&json::parse(&ev.to_line()).unwrap()).unwrap();
+        match back {
+            TraceEvent::Defer { forecast_hash, .. } => assert_eq!(forecast_hash, u64::MAX),
+            _ => panic!("wrong kind"),
+        }
+    }
+
+    #[test]
+    fn identical_events_serialize_to_identical_bytes() {
+        let a = sample_events();
+        let b = sample_events();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.to_line(), y.to_line());
+        }
+    }
+
+    #[test]
+    fn sink_memory_collects_lines_in_order() {
+        let sink = TraceSink::memory();
+        for ev in sample_events() {
+            sink.emit(&ev);
+        }
+        let text = sink.contents();
+        assert_eq!(text.lines().count(), sample_events().len());
+        for (line, ev) in text.lines().zip(sample_events()) {
+            assert_eq!(line, ev.to_line());
+        }
+    }
+
+    #[test]
+    fn sink_file_round_trips() {
+        let dir = std::env::temp_dir().join("verdant-trace-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("trace-{}.jsonl", std::process::id()));
+        let sink = TraceSink::file(&path).unwrap();
+        for ev in sample_events() {
+            sink.emit(&ev);
+        }
+        sink.flush();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), sample_events().len());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn normalize_keeps_only_decision_identity_sorted() {
+        // emit in scrambled order with plane-local noise; normalized
+        // form must be sorted by (prompt, kind) and free of timestamps
+        let sink = TraceSink::memory();
+        sink.emit(&TraceEvent::Release { t: 5.0, prompt: 9 });
+        sink.emit(&TraceEvent::Route {
+            t: 99.0,
+            prompt: 9,
+            device: "b".into(),
+            cells: vec![],
+            backlog_s: vec![1.0],
+        });
+        sink.emit(&TraceEvent::Defer {
+            t: 1.0,
+            prompt: 2,
+            slo: "deferrable".into(),
+            deadline_s: 10.0,
+            release_s: 5.0,
+            window_g_per_kwh: 40.0,
+            forecast_hash: 7,
+            blend_w: 0.0,
+        });
+        sink.emit(&TraceEvent::Route {
+            t: 1.0,
+            prompt: 2,
+            device: "a".into(),
+            cells: vec![],
+            backlog_s: vec![],
+        });
+        let n = normalize(&sink.contents()).unwrap();
+        let expected = concat!(
+            "{\"device\":\"a\",\"ev\":\"route\",\"prompt\":2}\n",
+            "{\"ev\":\"defer\",\"prompt\":2}\n",
+            "{\"device\":\"b\",\"ev\":\"route\",\"prompt\":9}\n",
+        );
+        assert_eq!(n, expected);
+    }
+
+    #[test]
+    fn normalize_is_insensitive_to_event_interleaving() {
+        let forward = TraceSink::memory();
+        let reverse = TraceSink::memory();
+        let events = sample_events();
+        for ev in &events {
+            forward.emit(ev);
+        }
+        for ev in events.iter().rev() {
+            reverse.emit(ev);
+        }
+        assert_eq!(
+            normalize(&forward.contents()).unwrap(),
+            normalize(&reverse.contents()).unwrap()
+        );
+    }
+
+    #[test]
+    fn normalize_rejects_garbage() {
+        assert!(normalize("not json\n").is_err());
+        assert!(normalize("{\"ev\":\"martian\"}\n").is_err());
+        assert_eq!(normalize("").unwrap(), "");
+    }
+}

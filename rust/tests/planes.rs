@@ -546,6 +546,43 @@ fn stub_server_decisions_are_deterministic_across_runs() {
 }
 
 #[test]
+fn flight_recorder_traces_are_identical_across_des_and_stub_server() {
+    // the observability pin: run the same corpus through the DES and
+    // the threaded stub server with the flight recorder on — after
+    // normalization (decision events only, wallclock jitter stripped)
+    // the two traces must be byte-identical. Same scenario as the
+    // routing/deferral pin above: decisions are pure functions of
+    // (corpus, db, grid), so the recorded streams must agree too.
+    use verdant::telemetry::{normalize, TraceSink};
+    let (cluster, prompts, db, grid_trace) =
+        stub_setup(40, 1.0 / 600.0, 0.5, 12.0 * 3600.0, 0.0);
+    let grid = || GridShiftConfig::new(grid_trace.clone(), ForecastKind::Harmonic);
+
+    let des_sink = Arc::new(TraceSink::memory());
+    let des_cfg = OnlineConfig {
+        strategy: "carbon-aware".into(),
+        grid: Some(grid()),
+        trace: Some(Arc::clone(&des_sink)),
+        ..OnlineConfig::default()
+    };
+    let des = run_online(&cluster, &prompts, &db, &des_cfg).unwrap();
+
+    let srv_sink = Arc::new(TraceSink::memory());
+    let mut opts = stub_opts("carbon-aware", Some(grid()), &db);
+    opts.trace = Some(Arc::clone(&srv_sink));
+    let rep = serve(&cluster, &prompts, &opts).unwrap();
+    assert_eq!(des.completed, rep.completed);
+    assert!(des.deferred > 0, "scenario must defer work or the pin has no teeth");
+
+    let a = normalize(&des_sink.contents()).unwrap();
+    let b = normalize(&srv_sink.contents()).unwrap();
+    assert!(!a.is_empty(), "DES trace normalized to nothing");
+    assert!(a.contains("\"ev\":\"route\""), "no route events survived normalization");
+    assert!(a.contains("\"ev\":\"defer\""), "no defer events survived normalization");
+    assert_eq!(a, b, "normalized decision traces diverged across planes");
+}
+
+#[test]
 fn stub_server_worker_sizing_holds_partial_batches_safely() {
     // all-deferrable evening load with deferral OFF: worker-side carbon
     // sizing is the only temporal lever, and it must hold partial
