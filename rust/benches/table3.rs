@@ -21,6 +21,7 @@ fn main() {
             execution: ExecutionMode::Calibrated,
             max_new_tokens: 96,
             stochastic_seed: None,
+            continuous_batching: false,
         };
         let r = harness::bench(&format!("table3/run/{name}"), 1, 10, || {
             run(&env.cluster, &env.prompts, &strategy, &env.db, &cfg, None).unwrap()

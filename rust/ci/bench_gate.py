@@ -4,9 +4,12 @@
 Usage:
     bench_gate.py <baseline.json> <current.json> [--tolerance 0.25]
 
-Compares decisions/sec per (Plane, Strategy, Prompts) row of a fresh
-`verdant bench scale` run against the committed baseline and writes a
-markdown diff to $GITHUB_STEP_SUMMARY (stdout otherwise).
+Compares decisions/sec per (Plane, Strategy, Prompts, Threads) row of
+a fresh `verdant bench scale` run against the committed baseline and
+writes a markdown diff to $GITHUB_STEP_SUMMARY (stdout otherwise).
+Baselines that predate the Threads column key their rows as Threads=1
+(every pre-sharding row was single-threaded), so re-arming is not
+required to keep gating after the column landed.
 
 Gated rows — the ones that can FAIL the build — are the cached
 forecast-carbon-aware rows of the DES *and* the wallclock server
@@ -16,6 +19,15 @@ paths the flight recorder's disabled-path guarantee protects. Every
 other row is reported for context only, because absolute decisions/sec
 on shared CI runners is noisy; the default tolerance (25 %) absorbs
 normal runner variance on the gated rows too.
+
+Independently of the baseline, the gate enforces the million-prompt
+scale-out claim *within* the current run: every DES
+forecast-carbon-aware row at 1,000,000 prompts (the single-threaded
+row and the sharded-accounting row alike, uncached excluded) must hold
+the 100,000-prompt row's decisions/sec flat-or-better, within the same
+tolerance. This check needs no baseline — it fails the build even on a
+bootstrap run — and is skipped with a note when the sweep was capped
+below 1M (`bench scale --max-prompts`).
 
 Rows present in the current run but absent from the baseline are
 WARNED about, never failed: a new plane or strategy must be able to
@@ -42,6 +54,12 @@ GATED = {
     ("server", "forecast-carbon-aware"),
 }
 
+# The in-run scale-out gate: 1M-prompt DES rows of this strategy family
+# must hold the 100k reference row's decisions/sec flat-or-better.
+SCALE_STRATEGY = "forecast-carbon-aware"
+SCALE_REF_PROMPTS = 100_000
+SCALE_BIG_PROMPTS = 1_000_000
+
 
 def load(path):
     with open(path) as f:
@@ -51,9 +69,63 @@ def load(path):
 def rows_by_key(doc):
     out = {}
     for row in doc.get("rows", []):
-        key = (str(row.get("Plane")), str(row.get("Strategy")), int(row.get("Prompts", 0)))
+        key = (
+            str(row.get("Plane")),
+            str(row.get("Strategy")),
+            int(row.get("Prompts", 0)),
+            # pre-sharding tables have no Threads column; every such
+            # row ran single-threaded
+            int(row.get("Threads", 1)),
+        )
         out[key] = row
     return out
+
+
+def scale_check(cur, tolerance):
+    """The baseline-free 1M flat-or-better check (see module doc).
+
+    Returns (markdown lines, failure strings)."""
+    ref = cur.get(("des", SCALE_STRATEGY, SCALE_REF_PROMPTS, 1), {}).get("Decisions/s")
+    big = {
+        key: row.get("Decisions/s")
+        for key, row in cur.items()
+        if key[0] == "des"
+        and key[1].startswith(SCALE_STRATEGY)
+        and "(uncached)" not in key[1]
+        and key[2] == SCALE_BIG_PROMPTS
+    }
+    lines = ["", "### Scale-out: 1M flat-or-better vs 100k (in-run)", ""]
+    failures = []
+    if not isinstance(ref, (int, float)) or ref <= 0 or not big:
+        lines.append(
+            f"Skipped: needs the (des, {SCALE_STRATEGY}) rows at both "
+            f"{SCALE_REF_PROMPTS} and {SCALE_BIG_PROMPTS} prompts — run "
+            "`bench scale` without a `--max-prompts` cap to enforce it."
+        )
+        return lines, failures
+    lines += [
+        f"Reference: {SCALE_REF_PROMPTS} prompts at {ref:.0f} decisions/s; every "
+        f"1M DES row below must hold >= {(1 - tolerance) * 100:.0f}% of it.",
+        "",
+        "| Strategy | Threads | Decisions/s | Ratio | Verdict |",
+        "|---|---:|---:|---:|---|",
+    ]
+    for (_, strategy, _, threads), c in sorted(big.items()):
+        if not isinstance(c, (int, float)) or c <= 0:
+            failures.append(f"1M row ({strategy}, threads {threads}): no decisions/s value")
+            lines.append(f"| {strategy} | {threads} | ? | - | FAIL (missing) |")
+            continue
+        ratio = float(c) / float(ref)
+        ok = ratio >= 1.0 - tolerance
+        if not ok:
+            failures.append(
+                f"1M vs 100k: ({strategy}, threads {threads}) {c:.0f} vs {ref:.0f} "
+                f"decisions/s (ratio {ratio:.2f} < {1 - tolerance:.2f})"
+            )
+        lines.append(
+            f"| {strategy} | {threads} | {c:.0f} | {ratio:.2f} | {'ok' if ok else 'FAIL'} |"
+        )
+    return lines, failures
 
 
 def emit(summary):
@@ -97,6 +169,7 @@ def main(argv):
 
     baseline = load(baseline_path)
     if baseline.get("bootstrap"):
+        scale_lines, scale_failures = scale_check(cur, tolerance)
         emit(
             [
                 "## bench-gate: baseline bootstrap",
@@ -108,15 +181,23 @@ def main(argv):
                 "",
                 "Fresh rows:",
                 "",
-                "| Plane | Strategy | Prompts | Decisions/s |",
-                "|---|---|---:|---:|",
+                "| Plane | Strategy | Prompts | Threads | Decisions/s |",
+                "|---|---|---:|---:|---:|",
             ]
             + [
-                f"| {p} | {s} | {n} | {row.get('Decisions/s', '?')} |"
-                for (p, s, n), row in sorted(cur.items())
+                f"| {p} | {s} | {n} | {t} | {row.get('Decisions/s', '?')} |"
+                for (p, s, n, t), row in sorted(cur.items())
             ]
+            # the in-run scale-out check needs no baseline: it gates
+            # even while the baseline is still the placeholder
+            + scale_lines
+            + (
+                ["", "### Regressions", ""] + [f"- {f}" for f in scale_failures]
+                if scale_failures
+                else []
+            )
         )
-        return 0
+        return 1 if scale_failures else 0
 
     base = rows_by_key(baseline)
     lines = [
@@ -126,13 +207,13 @@ def main(argv):
         + ", ".join(f"`{p}`/`{s}`" for p, s in sorted(GATED))
         + f" rows; fail below {(1 - tolerance) * 100:.0f}% of baseline.",
         "",
-        "| Plane | Strategy | Prompts | Baseline | Current | Ratio | Gated | Verdict |",
-        "|---|---|---:|---:|---:|---:|---|---|",
+        "| Plane | Strategy | Prompts | Threads | Baseline | Current | Ratio | Gated | Verdict |",
+        "|---|---|---:|---:|---:|---:|---:|---|---|",
     ]
     failures = []
     new_rows = []
     for key in sorted(set(base) | set(cur)):
-        plane, strategy, prompts = key
+        plane, strategy, prompts, threads = key
         gated = (plane, strategy) in GATED
         b = base.get(key, {}).get("Decisions/s")
         c = cur.get(key, {}).get("Decisions/s")
@@ -150,8 +231,8 @@ def main(argv):
                 failures.append(f"{key}: gated row missing from current run")
                 verdict = "FAIL (missing)"
             lines.append(
-                f"| {plane} | {strategy} | {prompts} | {b or '-'} | {c or '-'} | - | "
-                f"{'yes' if gated else 'no'} | {verdict} |"
+                f"| {plane} | {strategy} | {prompts} | {threads} | {b or '-'} | {c or '-'} "
+                f"| - | {'yes' if gated else 'no'} | {verdict} |"
             )
             continue
         ratio = float(c) / float(b)
@@ -163,9 +244,12 @@ def main(argv):
                 f"(ratio {ratio:.2f} < {1 - tolerance:.2f})"
             )
         lines.append(
-            f"| {plane} | {strategy} | {prompts} | {b:.0f} | {c:.0f} | {ratio:.2f} | "
-            f"{'yes' if gated else 'no'} | {verdict} |"
+            f"| {plane} | {strategy} | {prompts} | {threads} | {b:.0f} | {c:.0f} | "
+            f"{ratio:.2f} | {'yes' if gated else 'no'} | {verdict} |"
         )
+    scale_lines, scale_failures = scale_check(cur, tolerance)
+    lines += scale_lines
+    failures += scale_failures
     if new_rows:
         lines += [
             "",

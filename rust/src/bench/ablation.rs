@@ -30,6 +30,7 @@ fn cfg(batch: usize, grouping: Grouping) -> RunConfig {
         execution: ExecutionMode::Calibrated,
         max_new_tokens: 96,
         stochastic_seed: None,
+        continuous_batching: false,
     }
 }
 

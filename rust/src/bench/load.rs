@@ -45,6 +45,7 @@ pub fn run(env: &Env) -> (Vec<LoadRow>, Table) {
                 policy,
                 strategy: strategy.into(),
                 grid: None,
+                ..OnlineConfig::default()
             };
             let r = run_online(&env.cluster, &corpus.prompts, &env.db, &cfg)
                 .expect("bench strategies resolve");

@@ -23,6 +23,14 @@
 //! alongside the DES and closed-loop rows, so all three planes share
 //! one perf trajectory. (100k is DES/closed-loop only: the wallclock
 //! replay's real sleeps would dominate the measurement.)
+//!
+//! The sweep now reaches **one million prompts**: above
+//! [`FULL_MATRIX_MAX_PROMPTS`] only the memoized DES rows run, plus a
+//! sharded-accounting row (`Threads` column > 1) that fans the
+//! bookkeeping over [`SHARDED_THREADS`] worker threads while making
+//! bit-for-bit the same decisions — the CI bench gate holds the 1M
+//! forecast-carbon-aware row's decisions/sec flat-or-better against
+//! the 100k row.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -39,8 +47,23 @@ use crate::workload::{trace, Corpus, Prompt};
 
 use super::Env;
 
-/// Corpus sizes swept by `verdant bench scale`.
-pub const SCALE_COUNTS: [usize; 3] = [1_000, 10_000, 100_000];
+/// Corpus sizes swept by `verdant bench scale` (`--max-prompts` caps
+/// the sweep, e.g. for quick local runs).
+pub const SCALE_COUNTS: [usize; 4] = [1_000, 10_000, 100_000, 1_000_000];
+
+/// Largest corpus the full plane × variant matrix runs. Above it the
+/// sweep keeps only the DES rows with memoized pricing (the hot path
+/// the CI gate defends): the uncached variant refits the forecaster
+/// per decision (~2M refits at 1M prompts) and the closed loop plans
+/// per corpus — both would dominate the wall time without telling us
+/// anything new about the per-decision path.
+pub const FULL_MATRIX_MAX_PROMPTS: usize = 100_000;
+
+/// Accounting shard threads for the extra sharded-DES row at the
+/// million-prompt corpora (decisions stay bit-for-bit identical to the
+/// single-thread row — pinned by `tests/planes.rs`; the row exists to
+/// time the pipeline).
+pub const SHARDED_THREADS: usize = 4;
 
 /// Largest corpus the wallclock server rows run (the arrival replay is
 /// real wall time even compressed; 100k would measure sleeping).
@@ -70,6 +93,9 @@ pub struct ScaleRow {
     /// Strategy label (the uncached forecast variant is marked).
     pub strategy: String,
     pub prompts: usize,
+    /// Accounting shard threads driving the DES run (1 = the inline,
+    /// unsharded pipeline; always 1 on the other planes).
+    pub threads: usize,
     pub wall_s: f64,
     /// Prompts placed per wall-clock second, whole-plane.
     pub decisions_per_s: f64,
@@ -162,11 +188,17 @@ pub fn run(env: &Env, counts: &[usize]) -> (Vec<ScaleRow>, Table) {
         trace::assign_slos(&mut corpus.prompts, DEFER_FRAC, DEADLINE_S, wl.seed ^ 0x51);
         let prompts = corpus.prompts;
 
-        for (label, strategy, grid) in variants(&grid_trace) {
-            // open-loop DES
+        // one timed DES pass (`shards` > 1 drives the threaded
+        // accounting pipeline; decisions are identical either way)
+        let des_row = |label: &str,
+                       strategy: &str,
+                       grid: Option<GridShiftConfig>,
+                       shards: usize,
+                       rows: &mut Vec<ScaleRow>| {
             let cfg = OnlineConfig {
-                strategy: strategy.clone(),
+                strategy: strategy.to_string(),
                 grid: grid.clone(),
+                shards,
                 // flight recorder explicitly off: these timed runs
                 // measure the allocation-free disabled path the CI
                 // bench gate defends
@@ -182,14 +214,15 @@ pub fn run(env: &Env, counts: &[usize]) -> (Vec<ScaleRow>, Table) {
                 &cluster,
                 &env.db,
                 &prompts,
-                &strategy,
-                grid.clone(),
+                strategy,
+                grid,
                 cfg.batch_size,
             );
             rows.push(ScaleRow {
                 plane: "des",
-                strategy: label.clone(),
+                strategy: label.to_string(),
                 prompts: n,
+                threads: shards.max(1),
                 wall_s: wall,
                 decisions_per_s: n as f64 / wall.max(1e-9),
                 deferred: r.deferred,
@@ -197,6 +230,20 @@ pub fn run(env: &Env, counts: &[usize]) -> (Vec<ScaleRow>, Table) {
                 decide_p95_us: Some(p95),
                 decide_p99_us: Some(p99),
             });
+        };
+
+        // above FULL_MATRIX_MAX_PROMPTS only the memoized DES rows run
+        // (plus the sharded pipeline row below) — see the const's doc
+        let full = n <= FULL_MATRIX_MAX_PROMPTS;
+        for (label, strategy, grid) in variants(&grid_trace) {
+            if !full && label.ends_with("(uncached)") {
+                continue;
+            }
+            // open-loop DES
+            des_row(&label, &strategy, grid.clone(), 1, &mut rows);
+            if !full {
+                continue;
+            }
 
             // closed-loop corpus plan + execution
             let policy = PlacementPolicy::new(&strategy, &cluster, grid.clone())
@@ -210,6 +257,7 @@ pub fn run(env: &Env, counts: &[usize]) -> (Vec<ScaleRow>, Table) {
                 plane: "closed",
                 strategy: label.clone(),
                 prompts: n,
+                threads: 1,
                 wall_s: wall,
                 decisions_per_s: n as f64 / wall.max(1e-9),
                 deferred: r.deferred,
@@ -242,6 +290,7 @@ pub fn run(env: &Env, counts: &[usize]) -> (Vec<ScaleRow>, Table) {
                     plane: "server",
                     strategy: label,
                     prompts: n,
+                    threads: 1,
                     wall_s: wall,
                     decisions_per_s: n as f64 / wall.max(1e-9),
                     deferred: r.deferred,
@@ -251,12 +300,26 @@ pub fn run(env: &Env, counts: &[usize]) -> (Vec<ScaleRow>, Table) {
                 });
             }
         }
+
+        // the sharded accounting pipeline at the corpora it exists
+        // for: same decisions as the threads=1 row above, bookkeeping
+        // fanned out over SHARDED_THREADS worker threads
+        if !full {
+            let (_, strategy, grid) = variants(&grid_trace).swap_remove(2);
+            des_row(
+                &format!("forecast-carbon-aware (sharded x{SHARDED_THREADS})"),
+                &strategy,
+                grid,
+                SHARDED_THREADS,
+                &mut rows,
+            );
+        }
     }
 
     let mut table = Table::new(
         "BENCH_scale",
         "Hot-path scale — decisions/sec by plane × strategy × corpus size",
-        &["Plane", "Strategy", "Prompts", "Wall (s)", "Decisions/s", "Deferred",
+        &["Plane", "Strategy", "Prompts", "Threads", "Wall (s)", "Decisions/s", "Deferred",
           "Decide p50 (us)", "Decide p95 (us)", "Decide p99 (us)"],
     );
     let us = |x: Option<f64>| x.map(|v| format!("{v:.2}")).unwrap_or_else(|| "-".into());
@@ -265,6 +328,7 @@ pub fn run(env: &Env, counts: &[usize]) -> (Vec<ScaleRow>, Table) {
             r.plane.to_string(),
             r.strategy.clone(),
             r.prompts.to_string(),
+            r.threads.to_string(),
             fmt::secs(r.wall_s),
             format!("{:.0}", r.decisions_per_s),
             r.deferred.to_string(),
@@ -285,13 +349,16 @@ pub fn run(env: &Env, counts: &[usize]) -> (Vec<ScaleRow>, Table) {
          with a fixed ~50 ms floor, so compare server trends on the 10k rows; \
          the 1k rows are partly replay-bound), their decisions/s includes \
          thread handoff + queueing, and their deferral counts see live \
-         wallclock backlog rather than the DES's virtual-time backlog",
+         wallclock backlog rather than the DES's virtual-time backlog; above \
+         {} prompts only the memoized DES rows run, plus a sharded-pipeline row \
+         (Threads > 1) whose decisions are bit-for-bit the Threads=1 row's",
         ARRIVAL_SPAN_S / 3600.0,
         DEFER_FRAC * 100.0,
         DEADLINE_S / 3600.0,
         PERCENTILE_SAMPLE,
         SERVER_TIME_SCALE,
-        SERVER_MAX_PROMPTS
+        SERVER_MAX_PROMPTS,
+        FULL_MATRIX_MAX_PROMPTS
     ));
     (rows, table)
 }
@@ -304,9 +371,14 @@ mod tests {
     fn scale_rows_cover_all_three_planes_and_agree_on_deferrals() {
         let env = Env::small(40);
         let (rows, table) = run(&env, &[60]);
-        // 3 planes × 4 strategy variants (60 <= SERVER_MAX_PROMPTS)
+        // 3 planes × 4 strategy variants (60 <= SERVER_MAX_PROMPTS;
+        // the sharded row only appears above FULL_MATRIX_MAX_PROMPTS)
         assert_eq!(rows.len(), 12);
         assert!(table.ascii().contains("forecast-carbon-aware (uncached)"));
+        assert!(table.ascii().contains("Threads"));
+        assert!(rows.iter().all(|r| r.threads == 1), "small corpora stay unsharded");
+        // the CI gate's 1M flat-or-better check needs these in the sweep
+        assert!(SCALE_COUNTS.contains(&100_000) && SCALE_COUNTS.contains(&1_000_000));
         assert_eq!(
             rows.iter().filter(|r| r.plane == "server").count(),
             4,

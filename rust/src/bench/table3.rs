@@ -48,6 +48,7 @@ pub fn run(env: &Env, extensions: bool) -> (Vec<Table3Row>, Table) {
                 execution: ExecutionMode::Calibrated,
                 max_new_tokens: env.cfg.serving.max_new_tokens,
                 stochastic_seed: None,
+                continuous_batching: false,
             };
             let r = run_sched(&env.cluster, &env.prompts, &strategy, &env.db, &cfg, None)
                 .expect("table3 run");

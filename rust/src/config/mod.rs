@@ -221,6 +221,10 @@ pub struct ServingConfig {
     /// Hybrid execution: re-audit every Nth batch per artifact variant
     /// through PJRT (0 = legacy first-batch-only spot-check).
     pub spot_check_every_n: usize,
+    /// Continuous batching: late arrivals join a compatible in-flight
+    /// partial batch at decode boundaries, on all three planes. Off by
+    /// default — execution is bit-for-bit the fixed-batch behaviour.
+    pub continuous_batching: bool,
 }
 
 /// Flight-recorder / metrics-registry knobs (`[observability]` table;
@@ -292,6 +296,7 @@ impl Default for ExperimentConfig {
                 drift_threshold: 0.2,
                 blend: false,
                 spot_check_every_n: 0,
+                continuous_batching: false,
             },
             observability: ObservabilityConfig::default(),
             artifacts_dir: "artifacts".into(),
@@ -436,6 +441,9 @@ impl ExperimentConfig {
             }
             if let Some(n) = s.get("spot_check_every_n").and_then(Value::as_usize) {
                 cfg.serving.spot_check_every_n = n;
+            }
+            if let Some(b) = s.get("continuous_batching").and_then(Value::as_bool) {
+                cfg.serving.continuous_batching = b;
             }
         }
         if let Some(o) = v.get("observability") {

@@ -11,8 +11,15 @@
 //! - [`Grouping::Fifo`] — arrival order (the paper's setup);
 //! - [`Grouping::LengthSorted`] — sort by output demand first, so batch
 //!   members finish together (less decode straggling).
+//!
+//! With the `[serving] continuous_batching` knob on, a late-arriving
+//! prompt may join a compatible in-flight batch at its next decode
+//! boundary instead of waiting for the next fixed cohort; [`can_join`]
+//! is the single admission check every plane consults before a join —
+//! the same projected-KV-footprint guard `form_batches_ordered`
+//! applies at formation, evaluated at the joined size.
 
-use crate::cluster::Cluster;
+use crate::cluster::{Cluster, DeviceProfile};
 use crate::workload::Prompt;
 
 /// Batch grouping policy.
@@ -108,6 +115,38 @@ pub fn form_batches_ordered(
         }
     }
     out
+}
+
+/// Can `candidate` join an in-flight batch of `members` (prompt
+/// indices) on `dev` without breaking memory admission? The projected
+/// KV footprint is evaluated at the joined size `members.len() + 1`
+/// with the same per-prompt token budget `form_batches_ordered` uses,
+/// so a join can never admit a batch that cohort formation would have
+/// split. Capacity (`batch_size`) is the caller's check — this is the
+/// memory side only.
+pub fn can_join(
+    prompts: &[Prompt],
+    members: &[usize],
+    candidate: usize,
+    dev: &DeviceProfile,
+) -> bool {
+    can_join_prompts(members.iter().map(|&i| &prompts[i]), &prompts[candidate], dev)
+}
+
+/// [`can_join`] over owned prompt refs — the wallclock server holds
+/// queue items, not corpus indices.
+pub fn can_join_prompts<'a>(
+    members: impl IntoIterator<Item = &'a Prompt>,
+    candidate: &Prompt,
+    dev: &DeviceProfile,
+) -> bool {
+    let mut n = 1;
+    let mut max_seq = candidate.prompt_tokens + candidate.output_tokens_on(dev.output_median_tokens);
+    for p in members {
+        n += 1;
+        max_seq = max_seq.max(p.prompt_tokens + p.output_tokens_on(dev.output_median_tokens));
+    }
+    dev.memory.fits(n, max_seq)
 }
 
 #[cfg(test)]
@@ -229,6 +268,34 @@ mod tests {
         let batches = form_batches_ordered(&ps, &assignment, &reversed, 4, &c, Grouping::Fifo);
         let first_dev0 = batches.iter().find(|b| b.device == 0).unwrap();
         assert_eq!(first_dev0.members[0], 14); // highest index on device 0
+    }
+
+    #[test]
+    fn can_join_applies_the_formation_memory_guard_at_the_joined_size() {
+        let c = cluster();
+        let dev = &c.devices[0]; // the 8 GB Jetson
+        // ordinary prompts: joining a partial batch fits comfortably
+        let ps = prompts(4, 13);
+        assert!(can_join(&ps, &[0, 1], 2, dev));
+        // pathological prompts at the exact memory boundary: find the
+        // largest count that fits, then a join on top of it (the same
+        // footprint formation would refuse) must be rejected
+        let mut big = prompts(8, 7);
+        for p in &mut big {
+            p.output_demand_tokens = 1800;
+            p.prompt_tokens = 500;
+        }
+        let max_seq = big[0].prompt_tokens + big[0].output_tokens_on(dev.output_median_tokens);
+        let mut n_fit = 1;
+        while n_fit < big.len() - 1 && dev.memory.fits(n_fit + 1, max_seq) {
+            n_fit += 1;
+        }
+        assert!(n_fit < big.len() - 1, "setup: prompts not pathological enough");
+        let full: Vec<usize> = (0..n_fit).collect();
+        assert!(!can_join(&big, &full, n_fit, dev), "join admitted past the formation guard");
+        // and the prompt-ref form agrees with the index form
+        let members: Vec<&Prompt> = full.iter().map(|&i| &big[i]).collect();
+        assert!(!can_join_prompts(members.into_iter(), &big[n_fit], dev));
     }
 
     #[test]

@@ -25,8 +25,8 @@ pub mod policy;
 pub mod router;
 pub mod scheduler;
 
-pub use batcher::{form_batches, form_batches_ordered, Batch, Grouping};
+pub use batcher::{can_join, can_join_prompts, form_batches, form_batches_ordered, Batch, Grouping};
 pub use estimator::{estimate, BenchmarkDb, CostEstimate, DeviceId};
-pub use policy::{CorpusPlan, GridShiftConfig, PlacementPolicy};
+pub use policy::{BlendCurve, CorpusPlan, GridShiftConfig, PlacementPolicy};
 pub use router::{build as build_strategy, OnlineView, RouteContext, Strategy};
 pub use scheduler::{run, RunConfig, RunResult};

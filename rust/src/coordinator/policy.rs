@@ -47,18 +47,77 @@
 //! `form_batches(strategy.assign(..))` exactly — pinned by the
 //! cross-plane equivalence test in `tests/planes.rs`.
 
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 use anyhow::Result;
 
 use crate::cluster::{CarbonModel, Cluster};
 use crate::grid::{shift, DriftTracker, ForecastCache, ForecastKind, GridTrace, ReplanTrigger};
 use crate::telemetry::trace::{TraceEvent, TraceSink};
+use crate::util::sync::Snapshot;
 use crate::workload::Prompt;
 
 use super::batcher::{form_batches_ordered, Batch, Grouping};
 use super::estimator::{BenchmarkDb, DeviceId};
 use super::router::{self, OnlineView, RouteContext, Strategy};
+
+/// Shape of the drift-blend weight as a function of the rolling
+/// one-step-ahead MAPE (see [`GridShiftConfig::forecast_at`]). All
+/// curves agree at the endpoints — weight 0 at zero error, full
+/// persistence (weight 1) at `drift_threshold` — and differ in how
+/// aggressively they discount in between, over the normalized error
+/// `r = clamp(mape / drift_threshold, 0, 1)`:
+///
+/// - [`Linear`](Self::Linear): `w = r` — PR-5's original curve;
+/// - [`ClampedQuadratic`](Self::ClampedQuadratic): `w = r²` — gentle
+///   on benign noise (small MAPE barely discounts the fit, keeping
+///   clean-window planning sharp), still saturating on true drift.
+///   The default: on the drift-injected `bench shifting` scenario it
+///   holds the linear curve's carbon under drift without giving up
+///   savings while the forecaster is trustworthy (`blend_curve`
+///   table);
+/// - [`Step`](Self::Step): `w = [mape ≥ threshold]` — the binary
+///   trust/distrust baseline (the replan trigger's shape, expressed
+///   as a blend).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BlendCurve {
+    Linear,
+    #[default]
+    ClampedQuadratic,
+    Step,
+}
+
+impl BlendCurve {
+    /// Every curve, in sweep/report order.
+    pub const ALL: [BlendCurve; 3] =
+        [BlendCurve::Linear, BlendCurve::ClampedQuadratic, BlendCurve::Step];
+
+    /// Stable snake_case name for reports and bench tables.
+    pub fn name(self) -> &'static str {
+        match self {
+            BlendCurve::Linear => "linear",
+            BlendCurve::ClampedQuadratic => "clamped_quadratic",
+            BlendCurve::Step => "step",
+        }
+    }
+
+    /// The blend weight in `[0, 1]` for a rolling `mape` against
+    /// `threshold` (positive finite, enforced where configured).
+    pub fn weight(self, mape: f64, threshold: f64) -> f64 {
+        let r = (mape / threshold).clamp(0.0, 1.0);
+        match self {
+            BlendCurve::Linear => r,
+            BlendCurve::ClampedQuadratic => r * r,
+            BlendCurve::Step => {
+                if mape >= threshold {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+        }
+    }
+}
 
 /// Grid context for temporal shifting, forecast-aware routing, and
 /// carbon-aware batch sizing. Shared by every plane.
@@ -105,11 +164,18 @@ pub struct GridShiftConfig {
     pub drift_threshold: f64,
     /// Rolling error window, trace steps.
     pub drift_window: usize,
-    /// The per-step fit memo (a pure accelerator: clones start cold and
-    /// it never participates in a config's identity).
+    /// Blend weight as a function of the rolling MAPE (only consulted
+    /// with `blend` on). Default [`BlendCurve::ClampedQuadratic`] —
+    /// see the `blend_curve` sweep in `bench shifting`.
+    pub blend_curve: BlendCurve,
+    /// The per-step fit memo — a pure accelerator that never
+    /// participates in a config's identity. Clones *share* the
+    /// published fit (lock-free snapshot), so per-thread config clones
+    /// start warm; sharing a deterministic memo cannot change a
+    /// decision.
     cache: ForecastCache,
     /// Replan bookkeeping (anchored forecast + drift monitor + cadence
-    /// clock); like the cache, clones start cold.
+    /// clock); unlike the cache this is stateful, so clones start cold.
     drift: DriftTracker,
     /// Blending's own drift state (one-step-ahead rolling MAPE),
     /// deliberately separate from `drift`: sharing a tracker would let
@@ -118,7 +184,8 @@ pub struct GridShiftConfig {
     blend_drift: DriftTracker,
     /// Per-step memo of the *blended* forecast (the blend weight and
     /// the fit are constant within a step), keeping the per-decision
-    /// path allocation-free with blending on. Clones start cold.
+    /// path allocation-free with blending on. Like `cache`, clones
+    /// share the published snapshot.
     blend_cache: BlendCache,
 }
 
@@ -141,6 +208,7 @@ impl GridShiftConfig {
             replan_interval_s: step_s,
             drift_threshold: 0.2,
             drift_window: 8,
+            blend_curve: BlendCurve::default(),
             cache: ForecastCache::new(),
             drift: DriftTracker::new(),
             blend_drift: DriftTracker::new(),
@@ -181,6 +249,13 @@ impl GridShiftConfig {
 
     pub fn with_blend(mut self, blend: bool) -> Self {
         self.blend = blend;
+        self
+    }
+
+    /// Pick the blend-weight curve (see [`BlendCurve`]; only consulted
+    /// with `blend` on).
+    pub fn with_blend_curve(mut self, curve: BlendCurve) -> Self {
+        self.blend_curve = curve;
         self
     }
 
@@ -247,15 +322,16 @@ impl GridShiftConfig {
     }
 
     /// The blend weight the next [`Self::forecast_at`] call at the
-    /// current step would apply: `clamp(mape / drift_threshold, 0, 1)`
-    /// over the blending tracker's rolling one-step MAPE, 0 with
-    /// blending off. Read-only — the flight recorder stamps deferral
-    /// events with it without advancing the tracker.
+    /// current step would apply: [`BlendCurve::weight`] over the
+    /// blending tracker's rolling one-step MAPE against
+    /// `drift_threshold`, 0 with blending off. Read-only — the flight
+    /// recorder stamps deferral events with it without advancing the
+    /// tracker (and the MAPE read is lock-free).
     pub fn blend_weight(&self) -> f64 {
         if !self.blend {
             return 0.0;
         }
-        (self.blend_drift.mape() / self.drift_threshold).clamp(0.0, 1.0)
+        self.blend_curve.weight(self.blend_drift.mape(), self.drift_threshold)
     }
 
     /// The fitted forecast at trace step `step_now`, long enough to
@@ -275,13 +351,14 @@ impl GridShiftConfig {
     /// With `blend` on (default off — bit-for-bit the pure fit), the
     /// fit is additionally discounted toward persistence by the
     /// rolling one-step-ahead MAPE: `blended[j] = (1−w)·fit[j] +
-    /// w·current` with `w = clamp(mape / drift_threshold, 0, 1)`. A
-    /// trustworthy forecaster (MAPE ≈ 0) plans on its full fit; one
-    /// that has been empirically wrong lately degrades smoothly into
-    /// "assume the grid stays where it is" — the continuous version of
-    /// the replan trigger's binary distrust. `w` only changes when the
-    /// trace step advances, so blending preserves the forecaster
-    /// prefix-consistency contract the memo relies on.
+    /// w·current` with `w = blend_curve.weight(mape, drift_threshold)`
+    /// (see [`BlendCurve`]). A trustworthy forecaster (MAPE ≈ 0) plans
+    /// on its full fit; one that has been empirically wrong lately
+    /// degrades smoothly into "assume the grid stays where it is" —
+    /// the continuous version of the replan trigger's binary distrust.
+    /// `w` only changes when the trace step advances, so blending
+    /// preserves the forecaster prefix-consistency contract the memo
+    /// relies on.
     pub fn forecast_at(&self, step_now: i64, horizon: usize) -> (f64, Arc<Vec<f64>>) {
         let (current, fit) = self.fit_at(step_now, horizon);
         if !self.blend {
@@ -294,7 +371,7 @@ impl GridShiftConfig {
             step_now,
             |step| self.fit_at(step, self.horizon_steps.max(1)).1,
         );
-        let w = (mape / self.drift_threshold).clamp(0.0, 1.0);
+        let w = self.blend_curve.weight(mape, self.drift_threshold);
         if w <= 0.0 {
             return (current, fit);
         }
@@ -329,12 +406,13 @@ impl GridShiftConfig {
 /// [`GridShiftConfig::forecast_at`]): within one trace step the blend
 /// weight and the underlying fit are constant, so the discounted
 /// vector is computed once and every later decision at the step gets
-/// an `Arc` clone — the blending analogue of [`ForecastCache`].
-/// Clones start cold: a pure accelerator, never part of a config's
-/// identity.
-#[derive(Default)]
+/// an `Arc` clone — the blending analogue of [`ForecastCache`], and
+/// like it a lock-free [`Snapshot`] whose clones share the published
+/// value: the blended vector is a pure function of `(step, w, fit)`,
+/// so sharing is decision-neutral and racing writers publish
+/// bit-identical vectors.
 struct BlendCache {
-    slot: Mutex<Option<BlendFit>>,
+    slot: Arc<Snapshot<BlendFit>>,
 }
 
 struct BlendFit {
@@ -346,15 +424,14 @@ struct BlendFit {
 
 impl BlendCache {
     fn blended(&self, step: i64, w: f64, current: f64, fit: &Arc<Vec<f64>>) -> Arc<Vec<f64>> {
-        let mut slot = self.slot.lock().unwrap();
-        if let Some(b) = slot.as_ref() {
+        if let Some(b) = self.slot.get() {
             if b.step == step && b.w_bits == w.to_bits() && b.len == fit.len() {
                 return Arc::clone(&b.forecast);
             }
         }
         let blended: Arc<Vec<f64>> =
             Arc::new(fit.iter().map(|&f| (1.0 - w) * f + w * current).collect());
-        *slot = Some(BlendFit {
+        self.slot.publish(BlendFit {
             step,
             w_bits: w.to_bits(),
             len: fit.len(),
@@ -364,16 +441,21 @@ impl BlendCache {
     }
 }
 
+impl Default for BlendCache {
+    fn default() -> Self {
+        BlendCache { slot: Arc::new(Snapshot::new()) }
+    }
+}
+
 impl Clone for BlendCache {
     fn clone(&self) -> Self {
-        BlendCache::default()
+        BlendCache { slot: Arc::clone(&self.slot) }
     }
 }
 
 impl std::fmt::Debug for BlendCache {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        let cached = self.slot.lock().map(|s| s.is_some()).unwrap_or(false);
-        f.debug_struct("BlendCache").field("cached", &cached).finish()
+        f.debug_struct("BlendCache").field("cached", &self.slot.get().is_some()).finish()
     }
 }
 
@@ -1396,6 +1478,61 @@ mod tests {
         // current observed sample
         for b in fb.iter() {
             assert!((b - current).abs() < 1e-9, "saturated blend {b} != current {current}");
+        }
+    }
+
+    #[test]
+    fn blend_curves_agree_at_the_endpoints_and_order_in_between() {
+        let threshold = 0.2;
+        for curve in BlendCurve::ALL {
+            assert_eq!(curve.weight(0.0, threshold), 0.0, "{}", curve.name());
+            assert_eq!(curve.weight(threshold, threshold), 1.0, "{}", curve.name());
+            assert_eq!(curve.weight(10.0 * threshold, threshold), 1.0, "{}", curve.name());
+        }
+        // between the endpoints: step never discounts, quadratic
+        // discounts less than linear (gentler on benign noise)
+        for r in [0.1, 0.25, 0.5, 0.75, 0.9] {
+            let mape = r * threshold;
+            let lin = BlendCurve::Linear.weight(mape, threshold);
+            let quad = BlendCurve::ClampedQuadratic.weight(mape, threshold);
+            let step = BlendCurve::Step.weight(mape, threshold);
+            assert_eq!(step, 0.0, "step curve discounted below threshold");
+            assert!((lin - r).abs() < 1e-12);
+            assert!((quad - r * r).abs() < 1e-12);
+            assert!(quad < lin, "quadratic must undercut linear at r={r}");
+        }
+        assert_eq!(BlendCurve::default(), BlendCurve::ClampedQuadratic);
+    }
+
+    #[test]
+    fn blend_curve_changes_the_partial_discount_but_not_saturation() {
+        // same drift-injected trace as the discount test; at a probe
+        // step where the weight has saturated, every curve agrees
+        // (flat persistence), while a small-MAPE step separates them
+        let trace = GridTrace::new("ramp", 900.0, {
+            let mut s = vec![70.0; 40];
+            s.extend(vec![220.0; 40]);
+            s
+        });
+        let mk = |curve: BlendCurve| {
+            GridShiftConfig::new(trace.clone(), ForecastKind::Harmonic)
+                .with_blend(true)
+                .with_blend_curve(curve)
+                .with_drift_threshold(0.05)
+        };
+        for curve in BlendCurve::ALL {
+            let g = mk(curve);
+            for step in 36..44 {
+                g.forecast_at(step, 24);
+            }
+            let (current, f) = g.forecast_at(44, 24);
+            for b in f.iter() {
+                assert!(
+                    (b - current).abs() < 1e-9,
+                    "{}: saturated blend {b} != persistence {current}",
+                    curve.name()
+                );
+            }
         }
     }
 

@@ -66,6 +66,11 @@ pub struct RunConfig {
     /// Some(seed): sample failure injection; None: expected-value
     /// (deterministic) failures.
     pub stochastic_seed: Option<u64>,
+    /// Continuous batching: a launching partial batch absorbs already-
+    /// released (`release_s <= start`) members from later same-device
+    /// cohorts, gated by [`super::batcher::can_join`] at the joined
+    /// size. Off (default) executes the fixed-cohort plan, bit-for-bit.
+    pub continuous_batching: bool,
 }
 
 impl Default for RunConfig {
@@ -76,6 +81,7 @@ impl Default for RunConfig {
             execution: ExecutionMode::Calibrated,
             max_new_tokens: 96,
             stochastic_seed: None,
+            continuous_batching: false,
         }
     }
 }
@@ -99,6 +105,9 @@ pub struct RunResult {
     pub spot_checks: BTreeMap<String, Vec<String>>,
     /// Prompts the policy shifted past their arrival (SLO deferral).
     pub deferred: usize,
+    /// Prompts absorbed into an earlier partial batch (always 0 with
+    /// `continuous_batching` off).
+    pub batch_joins: usize,
     /// End-of-run metrics snapshot (see
     /// [`crate::telemetry::registry`] for the series names).
     pub registry: MetricsRegistry,
@@ -177,14 +186,24 @@ pub fn run(
         *device_share.get_mut(&cluster.devices[d].name).unwrap() += 1;
     }
 
-    for batch in &plan.batches {
-        let dev = &cluster.devices[batch.device];
+    // continuous batching mutates cohort membership as batches launch,
+    // so execution walks a scratch copy of the plan (identical when
+    // the knob is off — nothing is ever moved)
+    let mut batches = plan.batches.clone();
+    let mut fills: Vec<usize> = Vec::with_capacity(batches.len());
+    let mut batch_joins = 0usize;
+    for bi in 0..batches.len() {
+        if batches[bi].members.is_empty() {
+            continue; // fully absorbed into an earlier launch
+        }
+        let device_idx = batches[bi].device;
+        let dev = &cluster.devices[device_idx];
         // receding horizon: before a batch waits for its window, poll
         // the drift tracker at the device's free time and re-plan any
         // still-held member whose release a due trigger can improve
         if let Some(g) = policy.grid.as_ref().filter(|g| g.replan) {
-            let now0 = busy[batch.device];
-            let held: Vec<usize> = batch
+            let now0 = busy[device_idx];
+            let held: Vec<usize> = batches[bi]
                 .members
                 .iter()
                 .copied()
@@ -211,7 +230,7 @@ pub fn run(
                         // here, unlike the DES where routing happens at
                         // release (see online.rs replan_delta_kg)
                         let kwh = db
-                            .cost_id(DeviceId(batch.device), dev, p, cfg.batch_size)
+                            .cost_id(DeviceId(device_idx), dev, p, cfg.batch_size)
                             .energy_kwh;
                         delta += cluster.carbon.kg_co2e(kwh, r)
                             - cluster.carbon.kg_co2e(kwh, release_s[i]);
@@ -238,13 +257,44 @@ pub fn run(
         }
         // a batch cannot launch before its last member arrives — or,
         // for deferred members, before their planned release window
-        let ready = batch
+        let ready = batches[bi]
             .members
             .iter()
             .map(|&i| release_s[i])
             .fold(0.0f64, f64::max);
-        let start = busy[batch.device].max(ready);
-        let (work, generated) = batch_work(dev, batch, prompts, cfg, backend)?;
+        let start = busy[device_idx].max(ready);
+        // continuous batching: a partial batch absorbs already-released
+        // members of later same-device cohorts at launch, gated by the
+        // formation memory guard at the joined size. Absorption cannot
+        // delay the launch: only members with release_s <= start join.
+        let mut members = batches[bi].members.clone();
+        let mut joined: Vec<usize> = Vec::new();
+        if cfg.continuous_batching {
+            'scan: for j in (bi + 1)..batches.len() {
+                if batches[j].device != device_idx {
+                    continue;
+                }
+                let mut k = 0;
+                while k < batches[j].members.len() {
+                    if members.len() >= cfg.batch_size {
+                        break 'scan;
+                    }
+                    let cand = batches[j].members[k];
+                    if release_s[cand] <= start + 1e-9
+                        && super::batcher::can_join(prompts, &members, cand, dev)
+                    {
+                        members.push(cand);
+                        joined.push(cand);
+                        batches[j].members.remove(k);
+                    } else {
+                        k += 1;
+                    }
+                }
+            }
+            batch_joins += joined.len();
+        }
+        let batch = Batch { device: device_idx, members };
+        let (work, generated) = batch_work(dev, &batch, prompts, cfg, backend)?;
 
         if let Some(texts) = generated {
             let record = match cfg.execution {
@@ -269,6 +319,15 @@ pub fn run(
                 energy_kwh: timing.energy_kwh,
                 carbon_kg: cluster.carbon.kg_co2e(timing.energy_kwh, start + timing.total_s),
             });
+            for &i in &joined {
+                sink.emit(&TraceEvent::BatchJoin {
+                    t: start,
+                    prompt: prompts[i].id,
+                    device: dev.name.clone(),
+                    joined_size: b,
+                    finish_s: start + timing.total_s,
+                });
+            }
         }
 
         // cloud devices pay the network link per request
@@ -324,6 +383,7 @@ pub fn run(
         );
         busy[batch.device] = start + timing.total_s;
         active[batch.device] += timing.total_s;
+        fills.push(b);
     }
 
     let finish = busy.iter().cloned().fold(0.0, f64::max);
@@ -349,13 +409,14 @@ pub fn run(
     let mut registry = MetricsRegistry::new();
     registry.add("decisions_total", prompts.len() as u64);
     registry.add("defers_total", plan.deferred as u64);
-    registry.add("batches_total", plan.batches.len() as u64);
+    registry.add("batches_total", fills.len() as u64);
+    registry.add("batch_joins_total", batch_joins as u64);
     registry.set_gauge("decisions_per_s", prompts.len() as f64 / makespan.max(1e-9));
     if let Some(g) = &policy.grid {
         registry.set_gauge("drift_mape", g.drift_mape());
     }
-    for batch in &plan.batches {
-        registry.observe("batch_fill", batch.members.len() as f64);
+    for &f in &fills {
+        registry.observe("batch_fill", f as f64);
     }
     registry.record_ledger(&ledger);
 
@@ -372,6 +433,7 @@ pub fn run(
         ledger,
         spot_checks,
         deferred: plan.deferred,
+        batch_joins,
         registry,
     })
 }
@@ -674,5 +736,72 @@ mod tests {
         let again = run(&cluster, &prompts, &s, &db, &cfg, None).unwrap();
         assert_eq!(stub.makespan_s, again.makespan_s);
         assert_eq!(stub.spot_checks, again.spot_checks);
+    }
+
+    #[test]
+    fn continuous_batching_off_executes_the_fixed_cohort_plan_bitwise() {
+        // the knob defaults off, and off must be byte-identical to the
+        // pre-knob executor — including on a deferring grid run where
+        // the plan actually has several release cohorts per device
+        let (mut cluster, mut prompts, db) = setup(80);
+        cluster.carbon = CarbonModel::diurnal(69.0, 0.3).into();
+        for p in &mut prompts {
+            p.arrival_s = 18.0 * 3600.0;
+        }
+        trace::assign_slos(&mut prompts, 0.5, 12.0 * 3600.0, 9);
+        let grid =
+            GridShiftConfig::from_model(&cluster.carbon, ForecastKind::Harmonic, 900.0).unwrap();
+        let s = PlacementPolicy::new("carbon-aware", &cluster, Some(grid)).unwrap();
+        let dflt = RunConfig::default();
+        let mut explicit_off = RunConfig::default();
+        explicit_off.continuous_batching = false;
+        let a = run(&cluster, &prompts, &s, &db, &dflt, None).unwrap();
+        let b = run(&cluster, &prompts, &s, &db, &explicit_off, None).unwrap();
+        assert_eq!(a.batch_joins, 0);
+        assert_eq!(b.batch_joins, 0);
+        assert_eq!(a.registry.counter("batch_joins_total"), 0);
+        assert_eq!(a.makespan_s.to_bits(), b.makespan_s.to_bits());
+        assert_eq!(a.total_carbon_kg.to_bits(), b.total_carbon_kg.to_bits());
+        assert_eq!(a.device_share, b.device_share);
+        assert_eq!(a.deferred, b.deferred);
+        assert_eq!(
+            a.registry.counter("batches_total"),
+            b.registry.counter("batches_total")
+        );
+    }
+
+    #[test]
+    fn continuous_batching_on_conserves_every_prompt_and_is_deterministic() {
+        // absorption mutates cohort membership mid-run; whatever joins
+        // where, every prompt must still execute exactly once and the
+        // run must stay deterministic
+        let (mut cluster, mut prompts, db) = setup(96);
+        cluster.carbon = CarbonModel::diurnal(69.0, 0.3).into();
+        for (i, p) in prompts.iter_mut().enumerate() {
+            // arrivals spread across an hour of the evening ramp so
+            // release windows quantize into different trace steps
+            p.arrival_s = 18.0 * 3600.0 + i as f64 * 45.0;
+        }
+        trace::assign_slos(&mut prompts, 0.6, 10.0 * 3600.0, 9);
+        let grid = || {
+            GridShiftConfig::from_model(&cluster.carbon, ForecastKind::Harmonic, 900.0).unwrap()
+        };
+        let s = || PlacementPolicy::new("carbon-aware", &cluster, Some(grid())).unwrap();
+        let mut cfg = RunConfig::default();
+        cfg.continuous_batching = true;
+        let a = run(&cluster, &prompts, &s(), &db, &cfg, None).unwrap();
+        assert_eq!(a.metrics.len(), 96, "absorption lost or duplicated a prompt");
+        let shares: usize = a.device_share.values().sum();
+        assert_eq!(shares, 96);
+        assert_eq!(a.registry.counter("batch_joins_total"), a.batch_joins as u64);
+        // every executed batch respects the configured cap
+        assert!(a.metrics.iter().all(|m| m.batch_size <= cfg.batch_size));
+        let b = run(&cluster, &prompts, &s(), &db, &cfg, None).unwrap();
+        assert_eq!(a.makespan_s.to_bits(), b.makespan_s.to_bits());
+        assert_eq!(a.batch_joins, b.batch_joins);
+        // off-run sanity: same corpus with the knob off reports no joins
+        let off = run(&cluster, &prompts, &s(), &db, &RunConfig::default(), None).unwrap();
+        assert_eq!(off.batch_joins, 0);
+        assert_eq!(off.metrics.len(), 96);
     }
 }

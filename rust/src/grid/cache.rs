@@ -18,13 +18,21 @@
 //! trait contract and the property test pinning it for every
 //! [`ForecastKind`]).
 //!
-//! Interior mutability is a `Mutex` (not a `RefCell`) so the owning
-//! config stays `Sync`; the lock is uncontended in every plane (the DES
-//! and the closed loop are single-threaded, the server plans on the
-//! ingest thread only) and costs nanoseconds against the microseconds a
-//! refit would.
+//! The fit lives in a [`Snapshot`](crate::util::sync::Snapshot)
+//! publish cell: readers are lock-free (one atomic load per decision,
+//! no serialization even with every server worker routing at once) and
+//! **clones share the published fit** — a config cloned per worker
+//! thread starts warm instead of refitting per clone. Because the fit
+//! is a pure deterministic function of its inputs, shared state can
+//! never change a decision: a cache hit is bit-for-bit the refit. Each
+//! published fit is fingerprinted with the forecaster kind and the
+//! trace's shape (length + step size) so two clones whose
+//! configurations have since diverged can never serve each other a
+//! foreign fit — they just miss and republish.
 
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
+
+use crate::util::sync::Snapshot;
 
 use super::forecast::{ForecastKind, Forecaster};
 use super::trace::GridTrace;
@@ -72,15 +80,26 @@ pub fn forecast_hash(values: &[f64]) -> u64 {
     h
 }
 
-/// One fit per trace step, invalidated only when the step (or the
-/// lookback window) changes. Clones start cold: the cache is a pure
-/// accelerator and never part of a configuration's identity.
+/// One fit per trace step, invalidated when the step (or the
+/// forecaster kind, lookback window, or trace shape) changes.
+///
+/// Clones **share** the published fit: the cache is a pure
+/// deterministic accelerator, so sharing can never change a decision —
+/// it only saves every clone after the first its warm-up refit.
+/// Readers are lock-free ([`Snapshot`]); concurrent writers may race a
+/// publish, but both compute the identical fit, so either winner
+/// serves bit-identical values.
 #[derive(Default)]
 pub struct ForecastCache {
-    slot: Mutex<Option<Fit>>,
+    slot: Arc<Snapshot<Fit>>,
 }
 
 struct Fit {
+    /// Fingerprint: the fit inputs beyond (step, lookback, horizon),
+    /// so clones whose configs diverged can never cross-serve.
+    kind: ForecastKind,
+    trace_len: usize,
+    trace_step_s_bits: u64,
     step: i64,
     lookback: usize,
     horizon: usize,
@@ -90,15 +109,16 @@ struct Fit {
 
 impl ForecastCache {
     pub fn new() -> Self {
-        ForecastCache { slot: Mutex::new(None) }
+        ForecastCache { slot: Arc::new(Snapshot::new()) }
     }
 
     /// The fitted forecast at trace step `step_now`: returns
     /// `(current, forecast)` where `current` is the observed sample at
     /// `step_now` (the last history value) and `forecast[j]` predicts
-    /// step `step_now + 1 + j`. A cached fit is reused when the step
-    /// and lookback match and its horizon covers the request; otherwise
-    /// the forecaster is refitted once at `horizon` and cached.
+    /// step `step_now + 1 + j`. A cached fit is reused when the
+    /// forecaster kind, trace shape, step and lookback match and its
+    /// horizon covers the request; otherwise the forecaster is
+    /// refitted once at `horizon` and published.
     pub fn fit(
         &self,
         kind: ForecastKind,
@@ -107,15 +127,23 @@ impl ForecastCache {
         lookback: usize,
         horizon: usize,
     ) -> (f64, Arc<Vec<f64>>) {
-        let mut slot = self.slot.lock().unwrap();
-        if let Some(f) = slot.as_ref() {
-            if f.step == step_now && f.lookback == lookback && f.horizon >= horizon {
+        if let Some(f) = self.slot.get() {
+            if f.kind == kind
+                && f.trace_len == trace.len()
+                && f.trace_step_s_bits == trace.step_s.to_bits()
+                && f.step == step_now
+                && f.lookback == lookback
+                && f.horizon >= horizon
+            {
                 return (f.current, Arc::clone(&f.forecast));
             }
         }
         let (current, forecast) = fit_once(kind, trace, step_now, lookback, horizon);
         let forecast = Arc::new(forecast);
-        *slot = Some(Fit {
+        self.slot.publish(Fit {
+            kind,
+            trace_len: trace.len(),
+            trace_step_s_bits: trace.step_s.to_bits(),
             step: step_now,
             lookback,
             horizon,
@@ -126,18 +154,18 @@ impl ForecastCache {
     }
 }
 
-/// Clones start cold: two configs sharing history would otherwise
-/// alias a lock, and a cold cache refills in one fit.
+/// Clones share the publish cell: every clone of a config reads (and
+/// refreshes) the same warm fit. See the struct docs for why sharing
+/// a pure memo is decision-neutral.
 impl Clone for ForecastCache {
     fn clone(&self) -> Self {
-        ForecastCache::new()
+        ForecastCache { slot: Arc::clone(&self.slot) }
     }
 }
 
 impl std::fmt::Debug for ForecastCache {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        let cached = self.slot.lock().map(|s| s.is_some()).unwrap_or(false);
-        f.debug_struct("ForecastCache").field("cached", &cached).finish()
+        f.debug_struct("ForecastCache").field("cached", &self.slot.get().is_some()).finish()
     }
 }
 
@@ -210,13 +238,72 @@ mod tests {
     }
 
     #[test]
-    fn clones_start_cold() {
+    fn clones_share_the_published_fit() {
         let cache = ForecastCache::new();
         let t = trace();
         let (_, f1) = cache.fit(ForecastKind::Ewma, &t, 7, 96, 12);
         let clone = cache.clone();
+        // the clone starts warm: same step, same Arc, no refit
         let (_, f2) = clone.fit(ForecastKind::Ewma, &t, 7, 96, 12);
-        assert!(!Arc::ptr_eq(&f1, &f2));
-        assert_eq!(*f1, *f2);
+        assert!(Arc::ptr_eq(&f1, &f2), "clone refitted instead of sharing");
+        // and a publish through the clone is visible to the original
+        let (_, f3) = clone.fit(ForecastKind::Ewma, &t, 8, 96, 12);
+        let (_, f4) = cache.fit(ForecastKind::Ewma, &t, 8, 96, 12);
+        assert!(Arc::ptr_eq(&f3, &f4));
+    }
+
+    #[test]
+    fn kind_fingerprint_prevents_cross_serving() {
+        // two clones whose configs diverged on the forecaster kind must
+        // never serve each other's fit, even at the same step
+        let cache = ForecastCache::new();
+        let t = trace();
+        let (_, harmonic) = cache.fit(ForecastKind::Harmonic, &t, 40, 192, 48);
+        let (_, ewma) = cache.clone().fit(ForecastKind::Ewma, &t, 40, 192, 48);
+        assert!(!Arc::ptr_eq(&harmonic, &ewma));
+        let history = t.history(40, 192);
+        let direct = ForecastKind::Ewma.build(t.steps_per_day()).forecast(&history, 48);
+        assert_eq!(*ewma, direct, "fingerprint miss must refit, not cross-serve");
+    }
+
+    #[test]
+    fn concurrent_fits_agree_bitwise() {
+        let cache = ForecastCache::new();
+        let t = Arc::new(trace());
+        let reference = {
+            let (c, f) = cache.fit(ForecastKind::Harmonic, &t, 50, 192, 96);
+            (c, f)
+        };
+        let mut handles = Vec::new();
+        for k in 0..4 {
+            let cache = cache.clone();
+            let t = Arc::clone(&t);
+            handles.push(std::thread::spawn(move || {
+                let mut out = Vec::new();
+                for i in 0..200 {
+                    // threads interleave hits and step-advance misses
+                    let step = 50 + ((i + k) % 2) as i64;
+                    let (c, f) = cache.fit(ForecastKind::Harmonic, &t, step, 192, 96);
+                    out.push((step, c, f));
+                }
+                out
+            }));
+        }
+        let direct_51 = {
+            let history = t.history(51, 192);
+            let current = *history.last().unwrap();
+            (current, ForecastKind::Harmonic.build(t.steps_per_day()).forecast(&history, 96))
+        };
+        for h in handles {
+            for (step, c, f) in h.join().unwrap() {
+                if step == 50 {
+                    assert_eq!(c.to_bits(), reference.0.to_bits());
+                    assert_eq!(*f, *reference.1);
+                } else {
+                    assert_eq!(c.to_bits(), direct_51.0.to_bits());
+                    assert_eq!(*f, direct_51.1);
+                }
+            }
+        }
     }
 }

@@ -13,8 +13,10 @@
 //!   the active forecast is empirically wrong and holds planned on it
 //!   should not be trusted.
 //! - [`DriftTracker`] owns the per-config replan state shared by every
-//!   plane (like `grid::ForecastCache`, interior mutability behind a
-//!   `Mutex`, clones start cold): the forecast anchored at the last
+//!   plane (interior mutability behind a poison-tolerant `Mutex`;
+//!   unlike `grid::ForecastCache`, whose clones share their pure memo,
+//!   tracker clones start cold — replan bookkeeping must never leak
+//!   between configurations): the forecast anchored at the last
 //!   (re)plan, the monitor fed one realized sample per trace step, and
 //!   the replan cadence clock. [`DriftTracker::check`] returns a
 //!   [`ReplanTrigger`] when a replan pass is due — `Drift` when the
@@ -28,7 +30,10 @@
 //! and normal hold planning resumes on its own.
 
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
+
+use crate::util::sync::lock_recover;
 
 use super::trace::GridTrace;
 
@@ -140,12 +145,18 @@ impl DriftMonitor {
 
 /// Per-config replan state: the anchored plan forecast, the drift
 /// monitor, and the cadence clock. Shared by reference from every
-/// plane's decision path, so interior mutability is a `Mutex` (the same
-/// single-threaded/uncontended argument as [`super::ForecastCache`]);
-/// clones start cold — replan state is runtime bookkeeping, never part
-/// of a configuration's identity.
+/// plane's decision path, so interior mutability is a `Mutex`
+/// (acquired poison-tolerantly — a panicked worker must not cascade);
+/// the rolling MAPE is mirrored into an atomic so [`Self::mape`] reads
+/// lock-free on the routing hot path. Clones start cold — replan state
+/// is runtime bookkeeping, never part of a configuration's identity,
+/// and a server worker's clone must never consume the ingest thread's
+/// replan observations.
 pub struct DriftTracker {
     slot: Mutex<Option<Track>>,
+    /// `f64::to_bits` of the rolling MAPE after the last state change;
+    /// written under the slot lock, read lock-free by [`Self::mape`].
+    mape_bits: AtomicU64,
 }
 
 struct Track {
@@ -209,7 +220,7 @@ impl Track {
 
 impl DriftTracker {
     pub fn new() -> Self {
-        DriftTracker { slot: Mutex::new(None) }
+        DriftTracker { slot: Mutex::new(None), mape_bits: AtomicU64::new(0f64.to_bits()) }
     }
 
     /// Advance the tracker to `now` and decide whether a replan pass is
@@ -235,10 +246,11 @@ impl DriftTracker {
         now: f64,
         fit: impl FnOnce(i64) -> Arc<Vec<f64>>,
     ) -> Option<ReplanTrigger> {
-        let mut slot = self.slot.lock().unwrap();
+        let mut slot = lock_recover(&self.slot);
         let step_now = trace.step_of(now);
         if slot.is_none() {
             *slot = Some(Track::new(window, threshold, step_now, fit(step_now), now));
+            self.mape_bits.store(0f64.to_bits(), Ordering::Relaxed);
             return None;
         }
         let t = slot.as_mut().expect("anchored above");
@@ -251,6 +263,7 @@ impl DriftTracker {
             t.monitor.reset();
             t.re_anchor(step_now, fit(step_now));
             t.last_replan_s = now;
+            self.mape_bits.store(0f64.to_bits(), Ordering::Relaxed);
             return None;
         }
         let advanced = t.advance_to(trace, step_now);
@@ -265,12 +278,16 @@ impl DriftTracker {
             t.last_replan_s = now;
             t.re_anchor(step_now, fit(step_now));
         }
+        self.mape_bits.store(t.monitor.mape().to_bits(), Ordering::Relaxed);
         trigger
     }
 
     /// Rolling MAPE of the active plan's forecast (0 before anchoring).
+    /// Lock-free: reads the atomic mirror maintained by [`Self::check`]
+    /// and [`Self::observe_to`], so hot-path callers (the blend weight
+    /// on every routing decision) never touch the slot mutex.
     pub fn mape(&self) -> f64 {
-        self.slot.lock().unwrap().as_ref().map(|t| t.monitor.mape()).unwrap_or(0.0)
+        f64::from_bits(self.mape_bits.load(Ordering::Relaxed))
     }
 
     /// Advance the monitor to `step_now` and return the rolling MAPE —
@@ -290,9 +307,10 @@ impl DriftTracker {
         step_now: i64,
         mut fit: impl FnMut(i64) -> Arc<Vec<f64>>,
     ) -> f64 {
-        let mut slot = self.slot.lock().unwrap();
+        let mut slot = lock_recover(&self.slot);
         if slot.is_none() {
             *slot = Some(Track::new(window, threshold, step_now, fit(step_now), 0.0));
+            self.mape_bits.store(0f64.to_bits(), Ordering::Relaxed);
             return 0.0;
         }
         let t = slot.as_mut().expect("anchored above");
@@ -301,6 +319,7 @@ impl DriftTracker {
         if step_now - t.observed_step > window as i64 {
             t.monitor.reset();
             t.re_anchor(step_now, fit(step_now));
+            self.mape_bits.store(0f64.to_bits(), Ordering::Relaxed);
             return 0.0;
         }
         let advanced = t.advance_to(trace, step_now);
@@ -308,6 +327,7 @@ impl DriftTracker {
         if advanced {
             t.re_anchor(step_now, fit(step_now));
         }
+        self.mape_bits.store(mape.to_bits(), Ordering::Relaxed);
         mape
     }
 }
@@ -328,7 +348,7 @@ impl Clone for DriftTracker {
 
 impl std::fmt::Debug for DriftTracker {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        let anchored = self.slot.lock().map(|s| s.is_some()).unwrap_or(false);
+        let anchored = lock_recover(&self.slot).is_some();
         f.debug_struct("DriftTracker").field("anchored", &anchored).finish()
     }
 }

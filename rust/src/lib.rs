@@ -24,11 +24,25 @@
 //!   deferral and "saved vs run-at-arrival" reporting;
 //! - **open-loop DES** ([`coordinator::online`], `bench load` /
 //!   `bench shifting`) — virtual-time serving under an arrival stream:
-//!   steady-state latency, deferral queues, batch-sizing holds;
+//!   steady-state latency, deferral queues, batch-sizing holds; its
+//!   per-batch *accounting* can be sharded over worker threads
+//!   (`--shards`, see §Hot path) while decisions stay bit-for-bit;
 //! - **wallclock server** ([`server`], `verdant serve`) — inference
 //!   behind per-device worker threads, replaying the arrival trace in
 //!   compressed real time with the same routing, deferral,
 //!   carbon-sizing and counterfactual carbon accounting.
+//!
+//! All three planes honour the `[serving]` `continuous_batching` knob
+//! (off by default — fixed cohorts, bit-for-bit the pre-knob path):
+//! when on, a late arrival routed to a device may *join* a compatible
+//! in-flight or launching batch instead of waiting for the next cohort
+//! — admission-checked by the same projected-KV memory guard cohort
+//! formation uses ([`coordinator::can_join`]) and priced through the
+//! dense cost table at the joined size. Each plane applies it at its
+//! natural boundary: the DES at the in-flight batch's decode horizon,
+//! the closed loop when a batch launches (absorbing already-released
+//! work from later cohorts on the same device), the wallclock worker
+//! just before decode via a non-blocking queue drain.
 //!
 //! ## Execution backends: three backends × three planes
 //!
@@ -92,10 +106,11 @@
 //!   deadline-violation count. Replan-off equivalence and the
 //!   never-past-deadline property are pinned in `tests/planes.rs`.
 //!
-//! ## Hot path & benchmarking
+//! ## Hot path & benchmarking: million-prompt scale-out
 //!
 //! The per-arrival decision path is engineered to stay sublinear at
-//! paper-×1000 scale and is *measured*, not assumed:
+//! paper-×10000 scale — the sweep reaches **one million prompts** —
+//! and is *measured*, not assumed:
 //!
 //! - **forecast memoization** — [`grid::ForecastCache`] fits the
 //!   forecaster once per trace step (instead of once per arrival) and
@@ -103,6 +118,24 @@
 //!   fit; decisions are bit-for-bit identical to refitting
 //!   (`Forecaster` prefix-consistency contract, pinned by property
 //!   tests and the cross-plane equivalence suite in `tests/planes.rs`);
+//! - **lock-free read-mostly snapshots** — the shared grid state the
+//!   hot path reads on every decision (the forecast cache shared
+//!   across server threads, the drift tracker's blend fit) publishes
+//!   through [`util::sync::Snapshot`], an epoch-stamped atomic-pointer
+//!   cell: readers are wait-free loads, writers swap a fresh snapshot
+//!   in; no reader ever blocks on a fitting writer, and a panicking
+//!   thread can no longer poison a shared lock
+//!   ([`util::sync::lock_recover`] recovers the remaining `Mutex`
+//!   sites — telemetry sinks — instead of cascading);
+//! - **sharded DES accounting** — at scale the event loop's cost is
+//!   bookkeeping, not deciding: with [`coordinator::online`]'s
+//!   `shards > 1` (CLI `run --plane des --shards N`) the per-batch
+//!   ledger/histogram/trace accounting is pipelined onto worker
+//!   threads, devices partitioned across shards, every message stamped
+//!   with the emitting event's `(time, seq)` so the merge is
+//!   deterministic — routing/deferral/sizing decisions never read the
+//!   books and stay **bit-for-bit identical at any shard count**
+//!   (property-pinned at 10k prompts in `tests/planes.rs`);
 //! - **interned device ids + dense cost table** — the benchmark DB
 //!   stores its (device, category, batch) cells as one flat vector and
 //!   strategies price devices through
@@ -110,18 +143,22 @@
 //!   string keys or allocation per decision; the DES maintains indexed
 //!   per-device backlog counters the router reads as a slice;
 //! - **`verdant bench scale`** — the scale harness
-//!   ([`bench::scale`]): corpus sizes 1k/10k/100k × strategies through
-//!   the DES and the closed loop — and, on the stub backend, 1k/10k
-//!   through the threaded wallclock server, so all three planes share
-//!   one perf trajectory — reporting decisions/sec plus per-decision
-//!   latency percentiles (p50/p95/p99 of one route-one + release-plan
-//!   pass) with cached and uncached forecast rows side by side; CI
-//!   archives `BENCH_scale.json` per PR **and gates on it**: the
-//!   `bench-gate` job compares decisions/sec against the committed
-//!   `BENCH_baseline.json` and fails on a >25 % regression of the
-//!   cached forecast-carbon-aware DES *and* wallclock-server rows
-//!   (rows the baseline predates warn instead of failing until the
-//!   baseline is re-armed).
+//!   ([`bench::scale`]): corpus sizes 1k/10k/100k/1M × strategies
+//!   through the DES and the closed loop — and, on the stub backend,
+//!   1k/10k through the threaded wallclock server, so all three planes
+//!   share one perf trajectory — reporting decisions/sec plus
+//!   per-decision latency percentiles (p50/p95/p99 of one route-one +
+//!   release-plan pass) with cached and uncached forecast rows side by
+//!   side; above 100k only the memoized DES rows run, plus a
+//!   sharded-accounting row (`Threads` column > 1); `--max-prompts`
+//!   caps the sweep for local runs. CI archives `BENCH_scale.json` per
+//!   PR **and gates on it**: the `bench-gate` job compares
+//!   decisions/sec against the committed `BENCH_baseline.json`, fails
+//!   on a >25 % regression of the cached forecast-carbon-aware DES
+//!   *and* wallclock-server rows, and — baseline-free, within the same
+//!   run — requires every 1M-prompt DES forecast row to hold the
+//!   100k row's decisions/sec flat-or-better (rows the baseline
+//!   predates warn instead of failing until the baseline is re-armed).
 //!
 //! ## Observability: decision flight recorder + metrics registry
 //!
@@ -133,8 +170,11 @@
 //! and `release` (SLO shifting against the forecast, including the
 //! clean-window intensity and the forecast fingerprint planned
 //! against), `sizing_hold` / `hold_void` (carbon-aware batch sizing),
-//! `replan` (trigger, drift MAPE, holds moved) and `batch_launch`
-//! (members, energy, carbon). Tracing is opt-in per run (`--trace
+//! `replan` (trigger, drift MAPE, holds moved), `batch_launch`
+//! (members, energy, carbon), `batch_join` (a late arrival absorbed
+//! into an in-flight batch under continuous batching) and
+//! `shard_merge` (the sharded DES accounting pipeline's deterministic
+//! end-of-run merge). Tracing is opt-in per run (`--trace
 //! <path>`, or `trace` under `[observability]` in the TOML config);
 //! with no sink attached the decision hot path performs a single
 //! `Option` check — no event is allocated or formatted — which is how

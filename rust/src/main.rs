@@ -162,6 +162,9 @@ fn load_config(flags: &Flags) -> anyhow::Result<ExperimentConfig> {
     if let Some(n) = flags.get("spot-check-every-n") {
         cfg.serving.spot_check_every_n = n.parse()?;
     }
+    if flags.has("continuous-batching") {
+        cfg.serving.continuous_batching = true;
+    }
     cfg.validate()?;
     Ok(cfg)
 }
@@ -268,7 +271,13 @@ fn print_usage() {
          --blend discounts the forecast toward persistence proportionally to the\n\
          rolling MAPE (drift-aware blending, off by default).\n\
          Deferral, sizing, re-planning and blending need a time-varying\n\
-         [cluster.carbon] model.",
+         [cluster.carbon] model.\n\
+         Scale-out: --continuous-batching lets late arrivals join a compatible\n\
+         in-flight partial batch at decode boundaries (all three planes; off by\n\
+         default — off is bit-for-bit the fixed-batch behaviour); run --plane des\n\
+         --shards N shards the DES accounting pipeline across N worker threads\n\
+         (decisions stay bit-for-bit identical at any shard count); bench scale\n\
+         --max-prompts N caps the largest scale corpus (default sweep ends at 1M).",
         verdant::VERSION
     );
 }
@@ -324,11 +333,17 @@ fn cmd_bench(which: &str, flags: &Flags) -> anyhow::Result<()> {
         emit(shifting::run(&env).1)?;
         emit(shifting::scores(&env).1)?;
         emit(shifting::drift(&env).1)?;
+        emit(shifting::blend_curves(&env).1)?;
     }
-    // not part of `all`: sweeps its own 1k/10k/100k corpora and exists
-    // to time the hot path, not to reproduce a paper artefact
+    // not part of `all`: sweeps its own 1k..1M corpora and exists to
+    // time the hot path, not to reproduce a paper artefact
+    // (--max-prompts caps the largest corpus, e.g. for quick local runs)
     if which == "scale" {
-        emit(scale::run(&env, &scale::SCALE_COUNTS).1)?;
+        let cap = flags.usize("max-prompts", usize::MAX)?;
+        let counts: Vec<usize> =
+            scale::SCALE_COUNTS.iter().copied().filter(|&c| c <= cap).collect();
+        anyhow::ensure!(!counts.is_empty(), "--max-prompts excludes every scale corpus");
+        emit(scale::run(&env, &counts).1)?;
     }
     Ok(())
 }
@@ -378,7 +393,10 @@ fn cmd_run(flags: &Flags) -> anyhow::Result<()> {
 
     match flags.get("plane").unwrap_or("closed") {
         "closed" => {}
-        "des" => return run_des_plane(&cfg, &cluster, &corpus.prompts, &db, sink),
+        "des" => {
+            let shards = flags.usize("shards", 1)?;
+            return run_des_plane(&cfg, &cluster, &corpus.prompts, &db, sink, shards);
+        }
         other => anyhow::bail!("unknown plane '{other}' (closed|des)"),
     }
 
@@ -393,6 +411,7 @@ fn cmd_run(flags: &Flags) -> anyhow::Result<()> {
         execution: cfg.serving.execution,
         max_new_tokens: cfg.serving.max_new_tokens,
         stochastic_seed: flags.get("stochastic").map(|s| s.parse()).transpose()?,
+        continuous_batching: cfg.serving.continuous_batching,
     };
 
     let backend = build_backend(&cfg, &cluster)?;
@@ -461,12 +480,15 @@ fn run_des_plane(
     prompts: &[verdant::workload::Prompt],
     db: &verdant::coordinator::BenchmarkDb,
     sink: Option<Arc<TraceSink>>,
+    shards: usize,
 ) -> anyhow::Result<()> {
     let online = OnlineConfig {
         batch_size: cfg.serving.batch_size,
         strategy: cfg.serving.strategy.clone(),
         grid: grid_from_config(cfg, cluster),
         trace: sink.clone(),
+        shards,
+        continuous_batching: cfg.serving.continuous_batching,
         ..OnlineConfig::default()
     };
     let r = run_online(cluster, prompts, db, &online)?;
@@ -569,6 +591,7 @@ fn cmd_serve(flags: &Flags) -> anyhow::Result<()> {
         db: Some(Arc::new(db)),
         trace: sink.clone(),
         spot_check_every_n: cfg.serving.spot_check_every_n,
+        continuous_batching: cfg.serving.continuous_batching,
     };
     println!(
         "serving {} prompts through the {} backend ({} workers, batch {}, strategy {}) ...",

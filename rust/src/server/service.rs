@@ -53,6 +53,15 @@
 //! went stale and extending (never past the deadline bound) when a
 //! cleaner one appeared.
 //!
+//! With [`ServeOptions::continuous_batching`] on, a worker whose
+//! in-flight batch is still partial absorbs compatible late arrivals
+//! at decode boundaries (the stub backend's simulated occupancy
+//! window, chunk-slept so queue activity wakes it), gated by the same
+//! [`crate::coordinator::can_join_prompts`] memory guard the other
+//! planes use; joins are priced at the joined fill and audited as
+//! `batch_join` trace events. Off (the default) keeps the fixed
+//! pull-then-execute batches.
+//!
 //! Energy is not measured on the wallclock; the collector instead
 //! posts *calibrated estimates* to an [`EnergyLedger`] at virtual
 //! completion times, with the run-at-arrival counterfactual, so the
@@ -69,6 +78,7 @@ use std::time::{Duration, Instant};
 
 use crate::cluster::Cluster;
 use crate::config::ExecutionMode;
+use crate::coordinator::can_join_prompts;
 use crate::coordinator::estimator::BenchmarkDb;
 use crate::coordinator::policy::{
     plan_batch_hold_with, replan_batch_hold_with, sizing_hold_saving_kg, GridShiftConfig,
@@ -121,6 +131,14 @@ pub struct ServeOptions {
     /// back through PJRT (0 = first batch only; see
     /// [`crate::runtime::backend::should_spot_check`]).
     pub spot_check_every_n: usize,
+    /// Continuous batching: a worker with a partial in-flight batch
+    /// absorbs compatible late arrivals at decode boundaries — the
+    /// stub backend's simulated occupancy window, plus one
+    /// non-blocking pass before any decode — gated by the formation
+    /// memory guard at the joined size
+    /// ([`crate::coordinator::can_join_prompts`]). Off (default)
+    /// keeps the fixed pull-then-execute batches.
+    pub continuous_batching: bool,
 }
 
 impl Default for ServeOptions {
@@ -137,6 +155,7 @@ impl Default for ServeOptions {
             db: None,
             trace: None,
             spot_check_every_n: 0,
+            continuous_batching: false,
         }
     }
 }
@@ -154,6 +173,9 @@ pub struct ServeReport {
     pub latency_p95_s: f64,
     pub batches: usize,
     pub mean_batch_fill: f64,
+    /// Late arrivals absorbed into an in-flight batch (always 0 with
+    /// [`ServeOptions::continuous_batching`] off).
+    pub batch_joins: usize,
     /// Requests served per device name.
     pub per_device: Vec<(String, usize)>,
     /// Routing decision trail: (prompt id, device index) in dispatch
@@ -342,6 +364,8 @@ struct Completion {
     deadline_s: Option<f64>,
     /// Batch-level audit, on the batch's first completion only.
     audit: Option<BatchAudit>,
+    /// This member joined an in-flight batch (continuous batching).
+    joined: bool,
 }
 
 /// Serve a corpus end-to-end and report latency/throughput.
@@ -439,16 +463,19 @@ pub fn serve(cluster: &Cluster, prompts: &[Prompt], opts: &ServeOptions) -> Resu
                     started,
                     worker_trace.as_deref(),
                 );
-                let texts: Vec<&str> =
-                    items.iter().map(|i| i.prompt.text.as_str()).collect();
-                let exec_batch = backend
-                    .pick_batch(&dev.model, texts.len())
-                    .ok_or_else(|| no_batch_err(backend.as_ref(), &dev.model, texts.len()))?;
-                let out =
-                    backend.generate(&dev.model, exec_batch, &texts, opts.max_new_tokens)?;
+                // continuous batching: a partial batch absorbs compatible
+                // late arrivals — one non-blocking pass before the decode,
+                // then (stub mode) throughout the simulated occupancy
+                // window; everything past `pulled` is a mid-flight join
+                let pulled = items.len();
+                if opts.continuous_batching {
+                    absorb_joiners(&mut items, &queues[d], &dev, opts.batch_size);
+                }
                 // synthesized generation is instantaneous; sleep out the
                 // calibrated batch occupancy at time_scale compression so
-                // queueing/batching dynamics match a real engine's
+                // queueing/batching dynamics match a real engine's (the
+                // sleep precedes the instantaneous stub decode so late
+                // joiners still get tokens)
                 if opts.execution == ExecutionMode::Stub {
                     let occ_s: f64 = items
                         .iter()
@@ -456,9 +483,46 @@ pub fn serve(cluster: &Cluster, prompts: &[Prompt], opts: &ServeOptions) -> Resu
                         .sum();
                     let wall = occ_s / opts.time_scale;
                     if wall > 2e-4 {
-                        std::thread::sleep(Duration::from_secs_f64(wall.min(0.25)));
+                        let wall = Duration::from_secs_f64(wall.min(0.25));
+                        if opts.continuous_batching {
+                            // chunked occupancy: wake on queue activity and
+                            // absorb joiners at the decode boundary; joins
+                            // never extend the occupancy already underway
+                            let end = Instant::now() + wall;
+                            while let Some(rem) = end
+                                .checked_duration_since(Instant::now())
+                                .filter(|r| !r.is_zero())
+                            {
+                                if items.len() >= opts.batch_size {
+                                    std::thread::sleep(rem);
+                                    break;
+                                }
+                                let chunk = rem.min(Duration::from_millis(5));
+                                if queues[d].wait_for_item(chunk)
+                                    && absorb_joiners(
+                                        &mut items,
+                                        &queues[d],
+                                        &dev,
+                                        opts.batch_size,
+                                    ) == 0
+                                {
+                                    // whatever is queued cannot join:
+                                    // don't spin on it
+                                    std::thread::sleep(chunk);
+                                }
+                            }
+                        } else {
+                            std::thread::sleep(wall);
+                        }
                     }
                 }
+                let texts: Vec<&str> =
+                    items.iter().map(|i| i.prompt.text.as_str()).collect();
+                let exec_batch = backend
+                    .pick_batch(&dev.model, texts.len())
+                    .ok_or_else(|| no_batch_err(backend.as_ref(), &dev.model, texts.len()))?;
+                let out =
+                    backend.generate(&dev.model, exec_batch, &texts, opts.max_new_tokens)?;
                 let vfinish_s = started.elapsed().as_secs_f64() * opts.time_scale;
                 if let Some(sink) = worker_trace.as_deref() {
                     let batch_kwh: f64 = items
@@ -472,6 +536,15 @@ pub fn serve(cluster: &Cluster, prompts: &[Prompt], opts: &ServeOptions) -> Resu
                         energy_kwh: batch_kwh,
                         carbon_kg: cluster.carbon.kg_co2e(batch_kwh, vfinish_s),
                     });
+                    for item in &items[pulled..] {
+                        sink.emit(&TraceEvent::BatchJoin {
+                            t: vfinish_s,
+                            prompt: item.prompt.id,
+                            device: dev.name.clone(),
+                            joined_size: items.len(),
+                            finish_s: vfinish_s,
+                        });
+                    }
                 }
                 let mut batch_audit = audit;
                 for (i, item) in items.iter().enumerate() {
@@ -487,6 +560,7 @@ pub fn serve(cluster: &Cluster, prompts: &[Prompt], opts: &ServeOptions) -> Resu
                         vfinish_s,
                         deadline_s: item.prompt.slo.deadline_s(),
                         audit: batch_audit.take(),
+                        joined: i >= pulled,
                     });
                 }
             }
@@ -553,9 +627,13 @@ pub fn serve(cluster: &Cluster, prompts: &[Prompt], opts: &ServeOptions) -> Resu
     let mut fills = Summary::new();
     let mut completed = 0usize;
     let mut deadline_violations = 0usize;
+    let mut batch_joins = 0usize;
     let mut ledger = EnergyLedger::new(cluster.carbon.clone());
     for c in rx {
         completed += 1;
+        if c.joined {
+            batch_joins += 1;
+        }
         latency.add(c.latency_s);
         hist.add(c.latency_s);
         tokens += c.output_tokens;
@@ -594,6 +672,7 @@ pub fn serve(cluster: &Cluster, prompts: &[Prompt], opts: &ServeOptions) -> Resu
     metrics.add("decisions_total", assignment.len() as u64);
     metrics.add("defers_total", deferred as u64);
     metrics.add("batches_total", batches as u64);
+    metrics.add("batch_joins_total", batch_joins as u64);
     metrics.add("deadline_violations_total", deadline_violations as u64);
     metrics.set_gauge("decisions_per_s", completed as f64 / wallclock.max(1e-9));
     if let Some(g) = &policy.grid {
@@ -622,6 +701,7 @@ pub fn serve(cluster: &Cluster, prompts: &[Prompt], opts: &ServeOptions) -> Resu
         latency_p95_s: hist.p95(),
         batches,
         mean_batch_fill: fills.mean(),
+        batch_joins,
         per_device: cluster
             .devices
             .iter()
@@ -774,6 +854,36 @@ fn hold_for_sizing(
         }
     }
     held_at.map(|_| audit)
+}
+
+/// Continuous-batching absorb: one non-blocking pull of compatible
+/// late arrivals into an in-flight batch, gated by the formation
+/// memory guard at the joined size ([`can_join_prompts`]); capacity is
+/// the `batch_size` cap. Items that cannot join go straight back to
+/// the queue (they seed the worker's next batch — this can reorder
+/// them behind arrivals that landed meanwhile, which dynamic batching
+/// already tolerates). Returns how many joined.
+fn absorb_joiners(
+    items: &mut Vec<QueueItem>,
+    queue: &DeviceQueue,
+    dev: &crate::cluster::DeviceProfile,
+    batch_size: usize,
+) -> usize {
+    if items.len() >= batch_size {
+        return 0;
+    }
+    let mut joined = 0usize;
+    for item in queue.try_drain(batch_size - items.len()) {
+        if items.len() < batch_size
+            && can_join_prompts(items.iter().map(|i| &i.prompt), &item.prompt, dev)
+        {
+            items.push(item);
+            joined += 1;
+        } else {
+            queue.push(item);
+        }
+    }
+    joined
 }
 
 /// Sleep the ingest thread until virtual time `due` (scaled wallclock).
@@ -1037,6 +1147,52 @@ mod tests {
         let mut sorted = r.device_accounts.clone();
         sorted.sort_by(|a, b| a.0.cmp(&b.0));
         assert_eq!(sorted, r.device_accounts, "accounts must be name-sorted");
+    }
+
+    #[test]
+    fn continuous_batching_serving_conserves_prompts_and_reports_joins() {
+        // CB on: whatever the wallclock timing does, every prompt is
+        // served exactly once, joins never overfill a batch, and the
+        // report/metrics agree on the join count
+        let cfg = ExperimentConfig::default();
+        let cluster = Cluster::from_config(&cfg.cluster);
+        let mut cfg2 = cfg;
+        cfg2.workload.prompts = 16;
+        let mut corpus = crate::workload::Corpus::generate(&cfg2.workload);
+        crate::workload::trace::assign_arrivals(
+            &mut corpus.prompts,
+            crate::config::Arrival::Open { rate: 8.0 },
+            7,
+        );
+        let sink = Arc::new(TraceSink::memory());
+        let opts = ServeOptions {
+            execution: ExecutionMode::Stub,
+            strategy: "all-on-jetson-orin-nx".into(),
+            time_scale: 100.0,
+            batch_timeout: Duration::from_millis(10),
+            continuous_batching: true,
+            trace: Some(Arc::clone(&sink)),
+            ..ServeOptions::default()
+        };
+        let r = serve(&cluster, &corpus.prompts, &opts).unwrap();
+        assert_eq!(r.completed, 16);
+        let mut ids: Vec<u64> = r.assignment.iter().map(|&(id, _)| id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..16).collect::<Vec<u64>>());
+        assert_eq!(r.metrics.counter("batch_joins_total"), r.batch_joins as u64);
+        sink.flush();
+        let joins_traced = sink
+            .contents()
+            .lines()
+            .filter(|l| l.contains("\"ev\":\"batch_join\""))
+            .count();
+        assert_eq!(joins_traced, r.batch_joins, "every join must be audited");
+        // the off-path reports zero joins on the same corpus
+        let off = ServeOptions { continuous_batching: false, trace: None, ..opts };
+        let r2 = serve(&cluster, &corpus.prompts, &off).unwrap();
+        assert_eq!(r2.completed, 16);
+        assert_eq!(r2.batch_joins, 0);
+        assert_eq!(r2.metrics.counter("batch_joins_total"), 0);
     }
 
     #[test]

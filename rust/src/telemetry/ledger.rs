@@ -244,6 +244,39 @@ impl EnergyLedger {
         let (a, i, _) = self.totals();
         a + i
     }
+
+    /// Fold another ledger's books into this one — the sharded-DES
+    /// merge step (`coordinator::online` with `shards > 1`): each
+    /// accounting shard posts into its own ledger, and the shards are
+    /// merged in shard order at the end of the run.
+    ///
+    /// Per-device accounts add field-wise. Because the sharded DES
+    /// partitions devices across shards (each device posts to exactly
+    /// one shard, in event order), a merged device account is
+    /// **bit-for-bit** the account the unsharded run would have
+    /// produced: merging into a fresh zeroed entry adds `0.0 + x`,
+    /// which is exact. The cross-device scalars (counterfactual,
+    /// shifted, replan/sizing stats) sum shard-subtotals instead of
+    /// interleaving per-event, so they match the unsharded run to
+    /// floating-point reassociation, not bitwise.
+    pub fn merge(&mut self, other: &EnergyLedger) {
+        for (name, acc) in &other.accounts {
+            let a = self.accounts.entry(name.clone()).or_default();
+            a.active_kwh += acc.active_kwh;
+            a.idle_kwh += acc.idle_kwh;
+            a.carbon_kg += acc.carbon_kg;
+            a.batches += acc.batches;
+            a.busy_s += acc.busy_s;
+        }
+        self.counterfactual_kg += other.counterfactual_kg;
+        self.shifted_kg += other.shifted_kg;
+        self.replan.passes += other.replan.passes;
+        self.replan.released_early += other.replan.released_early;
+        self.replan.extended += other.replan.extended;
+        self.replan.carbon_delta_kg += other.replan.carbon_delta_kg;
+        self.sizing.holds += other.sizing.holds;
+        self.sizing.est_saved_kg += other.sizing.est_saved_kg;
+    }
 }
 
 #[cfg(test)]
@@ -438,6 +471,53 @@ mod tests {
         assert_eq!(s.holds, 2);
         assert!((s.est_saved_kg - 1.5e-5).abs() < 1e-15);
         assert_eq!(l.totals(), (0.0, 0.0, 0.0));
+    }
+
+    #[test]
+    fn merge_of_device_disjoint_shards_is_bitwise_the_sequential_ledger() {
+        let model = CarbonModel::diurnal(69.0, 0.3);
+        // sequential reference: every post lands in one ledger, in
+        // event order; devices "j" and "a" interleave
+        let posts = [
+            ("j", 1e-4, 3.0, 100.0, vec![50.0]),
+            ("a", 2e-4, 4.0, 200.0, vec![120.0, 160.0]),
+            ("j", 5e-5, 1.0, 900.0, vec![880.0]),
+            ("a", 3e-4, 6.0, 1800.0, vec![1500.0]),
+        ];
+        let mut reference = EnergyLedger::new(model.clone());
+        for (dev, kwh, busy, t, arrivals) in &posts {
+            reference.post_batch_shifted(dev, *kwh, *busy, *t, arrivals);
+        }
+        reference.post_replan(1, 2, -1e-6);
+        reference.post_sizing_hold(2e-6);
+        // sharded: device "j" on shard 0, "a" on shard 1, per-device
+        // event order preserved; replan/sizing on the root ledger
+        let mut shard0 = EnergyLedger::new(model.clone());
+        let mut shard1 = EnergyLedger::new(model.clone());
+        for (dev, kwh, busy, t, arrivals) in &posts {
+            let s = if *dev == "j" { &mut shard0 } else { &mut shard1 };
+            s.post_batch_shifted(dev, *kwh, *busy, *t, arrivals);
+        }
+        let mut root = EnergyLedger::new(model);
+        root.post_replan(1, 2, -1e-6);
+        root.post_sizing_hold(2e-6);
+        root.merge(&shard0);
+        root.merge(&shard1);
+        // per-device accounts: bit-for-bit
+        for dev in ["j", "a"] {
+            let r = reference.account(dev).unwrap();
+            let m = root.account(dev).unwrap();
+            assert_eq!(r.active_kwh.to_bits(), m.active_kwh.to_bits(), "{dev} active");
+            assert_eq!(r.idle_kwh.to_bits(), m.idle_kwh.to_bits(), "{dev} idle");
+            assert_eq!(r.carbon_kg.to_bits(), m.carbon_kg.to_bits(), "{dev} carbon");
+            assert_eq!(r.batches, m.batches);
+            assert_eq!(r.busy_s.to_bits(), m.busy_s.to_bits(), "{dev} busy");
+        }
+        // cross-device scalars: equal to reassociation tolerance
+        close(root.counterfactual_kg(), reference.counterfactual_kg(), 1e-12).unwrap();
+        close(root.realized_savings_kg(), reference.realized_savings_kg(), 1e-12).unwrap();
+        assert_eq!(root.replan_stats(), reference.replan_stats());
+        assert_eq!(root.sizing_stats(), reference.sizing_stats());
     }
 
     #[test]

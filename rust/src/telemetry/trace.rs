@@ -33,6 +33,7 @@ use std::path::Path;
 use std::sync::Mutex;
 
 use crate::util::json::{self, Value};
+use crate::util::sync::lock_recover;
 
 /// One consulted routing cost-table cell: what the router saw for one
 /// device when it placed a prompt.
@@ -87,6 +88,14 @@ pub enum TraceEvent {
     /// A batch launched on `device` with the given members and
     /// energy/carbon estimates.
     BatchLaunch { t: f64, device: String, members: Vec<u64>, energy_kwh: f64, carbon_kg: f64 },
+    /// A late-arriving prompt joined an in-flight batch at a decode
+    /// boundary (continuous batching). `joined_size` is the batch size
+    /// after the join; `finish_s` the (unchanged) batch finish time.
+    BatchJoin { t: f64, prompt: u64, device: String, joined_size: usize, finish_s: f64 },
+    /// The sharded DES merged its per-shard accounting streams back
+    /// into the run totals. `events` holds one accounting-message count
+    /// per shard, in shard index order.
+    ShardMerge { t: f64, shards: usize, events: Vec<u64> },
 }
 
 impl TraceEvent {
@@ -100,6 +109,8 @@ impl TraceEvent {
             TraceEvent::HoldVoid { .. } => "hold_void",
             TraceEvent::Replan { .. } => "replan",
             TraceEvent::BatchLaunch { .. } => "batch_launch",
+            TraceEvent::BatchJoin { .. } => "batch_join",
+            TraceEvent::ShardMerge { .. } => "shard_merge",
         }
     }
 
@@ -190,6 +201,21 @@ impl TraceEvent {
                 );
                 o.insert("energy_kwh".into(), Value::Num(*energy_kwh));
                 o.insert("carbon_kg".into(), Value::Num(*carbon_kg));
+            }
+            TraceEvent::BatchJoin { t, prompt, device, joined_size, finish_s } => {
+                o.insert("t".into(), Value::Num(*t));
+                o.insert("prompt".into(), Value::Num(*prompt as f64));
+                o.insert("device".into(), Value::Str(device.clone()));
+                o.insert("joined_size".into(), Value::Num(*joined_size as f64));
+                o.insert("finish_s".into(), Value::Num(*finish_s));
+            }
+            TraceEvent::ShardMerge { t, shards, events } => {
+                o.insert("t".into(), Value::Num(*t));
+                o.insert("shards".into(), Value::Num(*shards as f64));
+                o.insert(
+                    "events".into(),
+                    Value::Arr(events.iter().map(|e| Value::Num(*e as f64)).collect()),
+                );
             }
         }
         Value::Obj(o)
@@ -294,6 +320,18 @@ impl TraceEvent {
                 energy_kwh: t("energy_kwh")?,
                 carbon_kg: t("carbon_kg")?,
             }),
+            "batch_join" => Ok(TraceEvent::BatchJoin {
+                t: t("t")?,
+                prompt: u("prompt")?,
+                device: s("device")?,
+                joined_size: u("joined_size")? as usize,
+                finish_s: t("finish_s")?,
+            }),
+            "shard_merge" => Ok(TraceEvent::ShardMerge {
+                t: t("t")?,
+                shards: u("shards")? as usize,
+                events: ids("events")?,
+            }),
             other => Err(format!("unknown event kind '{other}'")),
         }
     }
@@ -333,12 +371,15 @@ impl TraceSink {
         TraceSink { inner: Mutex::new(SinkInner::Memory(Vec::new())) }
     }
 
-    /// Append one event as a JSONL line. Write errors are swallowed:
-    /// the recorder is an observer and must never fail a run.
+    /// Append one event as a JSONL line. Write errors are swallowed,
+    /// and a poisoned lock (a server worker that panicked mid-emit) is
+    /// recovered rather than propagated: the recorder is an observer
+    /// and must never fail a run. The buffer stays line-consistent
+    /// under recovery because each emit appends one whole line.
     pub fn emit(&self, ev: &TraceEvent) {
         let mut line = ev.to_line();
         line.push('\n');
-        match &mut *self.inner.lock().unwrap() {
+        match &mut *lock_recover(&self.inner) {
             SinkInner::File(w) => {
                 let _ = w.write_all(line.as_bytes());
             }
@@ -348,7 +389,7 @@ impl TraceSink {
 
     /// Flush buffered file output (no-op for memory sinks).
     pub fn flush(&self) {
-        if let SinkInner::File(w) = &mut *self.inner.lock().unwrap() {
+        if let SinkInner::File(w) = &mut *lock_recover(&self.inner) {
             let _ = w.flush();
         }
     }
@@ -356,7 +397,7 @@ impl TraceSink {
     /// The recorded bytes of a memory sink (empty for file sinks — read
     /// the file instead).
     pub fn contents(&self) -> String {
-        match &*self.inner.lock().unwrap() {
+        match &*lock_recover(&self.inner) {
             SinkInner::Memory(buf) => String::from_utf8_lossy(buf).into_owned(),
             SinkInner::File(_) => String::new(),
         }
@@ -365,7 +406,7 @@ impl TraceSink {
 
 impl std::fmt::Debug for TraceSink {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        let kind = match &*self.inner.lock().unwrap() {
+        let kind = match &*lock_recover(&self.inner) {
             SinkInner::File(_) => "file",
             SinkInner::Memory(b) => return write!(f, "TraceSink(memory, {} bytes)", b.len()),
         };
@@ -479,6 +520,14 @@ mod tests {
                 energy_kwh: 2.5e-5,
                 carbon_kg: 1.75e-6,
             },
+            TraceEvent::BatchJoin {
+                t: 1901.5,
+                prompt: 11,
+                device: "jetson-orin-nx".into(),
+                joined_size: 3,
+                finish_s: 1950.0,
+            },
+            TraceEvent::ShardMerge { t: 64800.0, shards: 4, events: vec![120, 98, 101, 77] },
         ]
     }
 
@@ -605,6 +654,49 @@ mod tests {
             normalize(&forward.contents()).unwrap(),
             normalize(&reverse.contents()).unwrap()
         );
+    }
+
+    #[test]
+    fn normalize_strips_join_and_merge_bookkeeping() {
+        // the new plane-local events must vanish from the normalized
+        // decision record, exactly like the other bookkeeping kinds
+        let sink = TraceSink::memory();
+        sink.emit(&TraceEvent::Route {
+            t: 1.0,
+            prompt: 5,
+            device: "a".into(),
+            cells: vec![],
+            backlog_s: vec![],
+        });
+        sink.emit(&TraceEvent::BatchJoin {
+            t: 2.0,
+            prompt: 5,
+            device: "a".into(),
+            joined_size: 2,
+            finish_s: 9.0,
+        });
+        sink.emit(&TraceEvent::ShardMerge { t: 10.0, shards: 2, events: vec![3, 4] });
+        let n = normalize(&sink.contents()).unwrap();
+        assert_eq!(n, "{\"device\":\"a\",\"ev\":\"route\",\"prompt\":5}\n");
+    }
+
+    #[test]
+    fn sink_recovers_from_a_poisoning_panic() {
+        use std::sync::Arc;
+        let sink = Arc::new(TraceSink::memory());
+        sink.emit(&TraceEvent::Release { t: 1.0, prompt: 1 });
+        // poison the inner mutex from a panicking thread
+        let s2 = Arc::clone(&sink);
+        let _ = std::thread::spawn(move || {
+            let _guard = s2.inner.lock().unwrap();
+            panic!("poison the sink");
+        })
+        .join();
+        // the sink keeps recording and reading back after the poison
+        sink.emit(&TraceEvent::Release { t: 2.0, prompt: 2 });
+        sink.flush();
+        assert_eq!(sink.contents().lines().count(), 2);
+        assert!(format!("{sink:?}").contains("memory"));
     }
 
     #[test]

@@ -1,13 +1,15 @@
-//! Shared utilities: deterministic RNG, statistics, JSON, property tests.
+//! Shared utilities: deterministic RNG, statistics, JSON, property
+//! tests, lock-free snapshot publication.
 //!
 //! Everything here replaces a crate we cannot fetch offline (rand,
-//! serde_json, proptest); each submodule is small, dependency-free and
-//! unit-tested.
+//! serde_json, proptest, arc-swap); each submodule is small,
+//! dependency-free and unit-tested.
 
 pub mod check;
 pub mod json;
 pub mod rng;
 pub mod stats;
+pub mod sync;
 
 /// Clamp `x` into `[lo, hi]` (f64; total-order safe for our finite use).
 pub fn clamp(x: f64, lo: f64, hi: f64) -> f64 {

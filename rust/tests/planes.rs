@@ -33,6 +33,18 @@
 //!    wallclock batcher is timeout-driven by design — but worker-side
 //!    carbon sizing obeys the same safety properties as the DES's:
 //!    deadlines never violated, interactive prompts never held.
+//! 7. **Sharded accounting ≡ unsharded** — with `OnlineConfig::shards`
+//!    `> 1` the DES pipelines per-batch accounting onto worker threads
+//!    while every routing/deferral/sizing decision stays on the event
+//!    loop. Decisions are bit-for-bit identical at any shard count
+//!    (property-tested over randomized strategies, SLO mixes and shard
+//!    counts, plus the 10k-prompt acceptance pin), per-device ledger
+//!    accounts merge back exactly, and cross-device moments agree to
+//!    floating-point reassociation (~1e-9).
+//! 8. **Continuous-batching off ≡ fixed cohorts** — the
+//!    `continuous_batching` knob defaults to off, and off is the
+//!    pre-knob fixed-cohort path bit-for-bit (zero joins, identical
+//!    spans/carbon) in the DES and the closed loop alike.
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -720,4 +732,166 @@ fn sizing_never_delays_interactive_prompts() {
         mixed_on.latency_interactive.mean(),
         mixed_off.latency_interactive.mean()
     );
+}
+
+/// DES run parameterized on strategy and accounting shard count — the
+/// harness for the sharded-pipeline equivalence pins (the scale-out
+/// tentpole). Diurnal trace, open-loop arrivals over ~2 h, seeded SLO
+/// mix; everything else at defaults so shard count is the only degree
+/// of freedom between compared runs.
+fn sharded_run(
+    n: usize,
+    strategy: &str,
+    frac: f64,
+    deadline_s: f64,
+    shards: usize,
+) -> verdant::coordinator::online::OnlineResult {
+    let mut cfg = ExperimentConfig::default();
+    cfg.workload.prompts = n;
+    let mut cluster = Cluster::from_config(&cfg.cluster);
+    let grid_trace = CarbonModel::diurnal(69.0, 0.3).to_trace(900.0);
+    cluster.carbon = CarbonModel::from_trace(grid_trace.clone()).into();
+    let mut corpus = Corpus::generate(&cfg.workload);
+    trace::assign_arrivals(&mut corpus.prompts, Arrival::Open { rate: n as f64 / 7200.0 }, 7);
+    trace::assign_slos(&mut corpus.prompts, frac, deadline_s, 21);
+    let db = BenchmarkDb::build(&cluster, &[1, 4, 8], 2, 69.0, 1);
+    let online = OnlineConfig {
+        strategy: strategy.into(),
+        grid: Some(GridShiftConfig::new(grid_trace, ForecastKind::Harmonic)),
+        shards,
+        ..OnlineConfig::default()
+    };
+    run_online(&cluster, &corpus.prompts, &db, &online).unwrap()
+}
+
+/// The sharded-pipeline equivalence contract: decisions and per-device
+/// books exact, cross-device moments to reassociation tolerance.
+fn assert_sharded_equivalent(
+    a: &verdant::coordinator::online::OnlineResult,
+    b: &verdant::coordinator::online::OnlineResult,
+    label: &str,
+) -> Result<(), String> {
+    // decisions: bit-for-bit — the event loop never reads the books
+    if a.assignment != b.assignment {
+        return Err(format!("{label}: routing diverged"));
+    }
+    if a.deferred_ids != b.deferred_ids {
+        return Err(format!("{label}: deferral sets diverged"));
+    }
+    let ints = |r: &verdant::coordinator::online::OnlineResult| {
+        (r.completed, r.deferred, r.held_partial, r.deadline_violations, r.latency_hist.count())
+    };
+    if ints(a) != ints(b) {
+        return Err(format!("{label}: counters diverged ({:?} vs {:?})", ints(a), ints(b)));
+    }
+    if a.span_s.to_bits() != b.span_s.to_bits() {
+        return Err(format!("{label}: span diverged ({} vs {})", a.span_s, b.span_s));
+    }
+    // per-device ledger accounts: shards are device-disjoint and apply
+    // messages in per-device event order, so the merge is exact
+    for (name, acc) in a.ledger.accounts() {
+        let m = b
+            .ledger
+            .account(name)
+            .ok_or_else(|| format!("{label}: device {name} missing from sharded ledger"))?;
+        for (what, x, y) in [
+            ("active_kwh", acc.active_kwh, m.active_kwh),
+            ("idle_kwh", acc.idle_kwh, m.idle_kwh),
+            ("carbon_kg", acc.carbon_kg, m.carbon_kg),
+            ("busy_s", acc.busy_s, m.busy_s),
+        ] {
+            if x.to_bits() != y.to_bits() {
+                return Err(format!("{label}: {name}.{what} diverged ({x} vs {y})"));
+            }
+        }
+        if acc.batches != m.batches {
+            return Err(format!("{label}: {name}.batches diverged"));
+        }
+    }
+    // cross-device scalars sum shard subtotals, which reassociate
+    let close = |what: &str, x: f64, y: f64| {
+        let scale = x.abs().max(y.abs()).max(1.0);
+        if (x - y).abs() > 1e-9 * scale {
+            Err(format!("{label}: {what} diverged beyond tolerance ({x} vs {y})"))
+        } else {
+            Ok(())
+        }
+    };
+    close("mean latency", a.latency.mean(), b.latency.mean())?;
+    close("realized savings", a.ledger.realized_savings_kg(), b.ledger.realized_savings_kg())?;
+    Ok(())
+}
+
+#[test]
+fn sharded_des_is_bit_for_bit_unsharded_at_ten_thousand_prompts() {
+    // the scale-out acceptance pin: 10k prompts through the memoized
+    // forecast-carbon-aware DES with accounting sharded across four
+    // workers — every decision and every per-device account must match
+    // the unsharded run exactly
+    let unsharded = sharded_run(10_000, "forecast-carbon-aware", 0.5, 10.0 * 3600.0, 1);
+    let sharded = sharded_run(10_000, "forecast-carbon-aware", 0.5, 10.0 * 3600.0, 4);
+    assert_eq!(unsharded.completed, 10_000);
+    assert!(unsharded.deferred > 0, "scenario must defer work or the pin has no teeth");
+    assert_sharded_equivalent(&unsharded, &sharded, "10k x4").unwrap();
+}
+
+#[test]
+fn sharded_des_equivalence_holds_under_randomized_conditions() {
+    // randomized strategies, SLO mixes, deadlines and shard counts:
+    // sharding the books can never move a decision
+    const STRATEGIES: [&str; 5] = [
+        "latency-aware",
+        "carbon-aware",
+        "round-robin",
+        "complexity-aware",
+        "forecast-carbon-aware",
+    ];
+    property("sharded == unsharded across strategies and SLO mixes", 6, |rng| {
+        let strategy = STRATEGIES[rng.below(STRATEGIES.len())];
+        let frac = rng.range(0.2, 1.0);
+        let deadline = rng.range(3600.0, 12.0 * 3600.0);
+        let shards = 2 + rng.below(7); // 2..=8
+        let a = sharded_run(80, strategy, frac, deadline, 1);
+        let b = sharded_run(80, strategy, frac, deadline, shards);
+        assert_sharded_equivalent(&a, &b, &format!("{strategy} x{shards}"))
+    });
+}
+
+#[test]
+fn continuous_batching_off_is_the_fixed_cohort_path_bit_for_bit() {
+    // the serving knob defaults to off, and off must be exactly the
+    // pre-knob fixed-cohort path: explicit off ≡ default with the join
+    // counter pinned at zero — in the DES and the closed loop alike
+    let (cluster, prompts, db, grid_trace) =
+        stub_setup(120, 1.0 / 300.0, 0.5, 10.0 * 3600.0, 0.0);
+    let grid = || GridShiftConfig::new(grid_trace.clone(), ForecastKind::Harmonic);
+
+    let defaulted = OnlineConfig {
+        strategy: "forecast-carbon-aware".into(),
+        grid: Some(grid()),
+        ..OnlineConfig::default()
+    };
+    let explicit = OnlineConfig {
+        strategy: "forecast-carbon-aware".into(),
+        grid: Some(grid()),
+        continuous_batching: false,
+        ..OnlineConfig::default()
+    };
+    let a = run_online(&cluster, &prompts, &db, &defaulted).unwrap();
+    let b = run_online(&cluster, &prompts, &db, &explicit).unwrap();
+    assert!(a.deferred > 0, "scenario must defer work or the pin has no teeth");
+    assert_eq!(a.batch_joins, 0, "the off path must never join a batch");
+    assert_eq!(b.batch_joins, 0);
+    assert_sharded_equivalent(&a, &b, "DES cb-off").unwrap();
+
+    // closed loop: RunConfig::default() vs explicit off through run()
+    let policy = PlacementPolicy::new("carbon-aware", &cluster, Some(grid())).unwrap();
+    let off = RunConfig { continuous_batching: false, ..RunConfig::default() };
+    let x = run(&cluster, &prompts, &policy, &db, &RunConfig::default(), None).unwrap();
+    let y = run(&cluster, &prompts, &policy, &db, &off, None).unwrap();
+    assert_eq!(x.batch_joins, 0, "closed loop joined with the knob off");
+    assert_eq!(y.batch_joins, 0);
+    assert_eq!(x.makespan_s.to_bits(), y.makespan_s.to_bits());
+    assert_eq!(x.total_carbon_kg.to_bits(), y.total_carbon_kg.to_bits());
+    assert_eq!(x.deferred, y.deferred);
 }
