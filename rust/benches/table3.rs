@@ -22,6 +22,7 @@ fn main() {
             max_new_tokens: 96,
             stochastic_seed: None,
             continuous_batching: false,
+            ..RunConfig::default()
         };
         let r = harness::bench(&format!("table3/run/{name}"), 1, 10, || {
             run(&env.cluster, &env.prompts, &strategy, &env.db, &cfg, None).unwrap()

@@ -3,6 +3,7 @@
 
 Usage:
     bench_gate.py <baseline.json> <current.json> [--tolerance 0.25]
+                  [--arm <armed.json>]
 
 Compares decisions/sec per (Plane, Strategy, Prompts, Threads) row of
 a fresh `verdant bench scale` run against the committed baseline and
@@ -33,6 +34,14 @@ Rows present in the current run but absent from the baseline are
 WARNED about, never failed: a new plane or strategy must be able to
 land before the baseline knows it exists. They start being compared
 the next time the baseline is re-armed.
+
+With `--arm <path>`, a PASSING gate additionally writes a
+ready-to-commit baseline at <path>: the current run's rows verbatim,
+with a provenance note saying they were measured by a green gate run.
+CI uploads it as the `bench-baseline-armed` artifact — arming (or
+re-arming) the gate on real numbers is then "download, copy over
+`rust/BENCH_baseline.json`, commit". Nothing is written when the gate
+fails, so an armed file always comes from a green run.
 
 Bootstrapping / (re-)arming the baseline: a baseline containing
 {"bootstrap": true} (the placeholder committed before the first green
@@ -128,6 +137,24 @@ def scale_check(cur, tolerance):
     return lines, failures
 
 
+def write_armed(path, current):
+    """Write the current run's rows as a ready-to-commit baseline."""
+    armed = {
+        "name": current.get("name", "BENCH_scale"),
+        "note": (
+            "Armed from the BENCH_scale.json of a green bench-gate run "
+            "(bench_gate.py --arm): every Decisions/s value was measured, so "
+            "the tolerance gates real throughput, not hand floors. Re-arm by "
+            "committing a newer bench-baseline-armed artifact over "
+            "rust/BENCH_baseline.json."
+        ),
+        "rows": current.get("rows", []),
+    }
+    with open(path, "w") as f:
+        json.dump(armed, f, indent=2)
+        f.write("\n")
+
+
 def emit(summary):
     text = "\n".join(summary) + "\n"
     print(text)
@@ -140,6 +167,7 @@ def emit(summary):
 def main(argv):
     args = []
     tolerance = 0.25
+    arm = None
     rest = list(argv[1:])
     while rest:
         a = rest.pop(0)
@@ -148,6 +176,14 @@ def main(argv):
                 tolerance = float(a.split("=", 1)[1])
             elif rest:
                 tolerance = float(rest.pop(0))
+            else:
+                print(__doc__)
+                return 2
+        elif a.startswith("--arm"):
+            if "=" in a:
+                arm = a.split("=", 1)[1]
+            elif rest:
+                arm = rest.pop(0)
             else:
                 print(__doc__)
                 return 2
@@ -197,6 +233,9 @@ def main(argv):
                 else []
             )
         )
+        if arm and not scale_failures:
+            write_armed(arm, current)
+            print(f"armed baseline written to {arm} (commit as rust/BENCH_baseline.json)")
         return 1 if scale_failures else 0
 
     base = rows_by_key(baseline)
@@ -261,6 +300,9 @@ def main(argv):
     if failures:
         lines += ["", "### Regressions on gated rows", ""] + [f"- {f}" for f in failures]
     emit(lines)
+    if arm and not failures:
+        write_armed(arm, current)
+        print(f"armed baseline written to {arm} (commit as rust/BENCH_baseline.json)")
     return 1 if failures else 0
 
 

@@ -31,6 +31,7 @@ fn cfg(batch: usize, grouping: Grouping) -> RunConfig {
         max_new_tokens: 96,
         stochastic_seed: None,
         continuous_batching: false,
+        ..RunConfig::default()
     }
 }
 

@@ -11,11 +11,13 @@
 //! | [`load`] | open-loop latency-vs-load sweep (serving extension) |
 //! | [`shifting`] | temporal-shifting sweep: strategy × grid trace × deferrable fraction |
 //! | [`scale`] | hot-path scale harness: decisions/sec at 1k/10k/100k prompts (perf trajectory) |
+//! | [`churn`] | availability: strategy × outage scenario (failover vs shed, DES plane) |
 //!
 //! [`harness`] is the in-tree micro-benchmark timer used by
 //! `rust/benches/*` (criterion is not available offline).
 
 pub mod ablation;
+pub mod churn;
 pub mod fig1;
 pub mod fig2;
 pub mod harness;

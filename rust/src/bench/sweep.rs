@@ -46,6 +46,7 @@ pub fn run(env: &Env) -> (Vec<SweepRow>, Table) {
                 max_new_tokens: env.cfg.serving.max_new_tokens,
                 stochastic_seed: None,
                 continuous_batching: false,
+                ..RunConfig::default()
             };
             let r = run_sched(&env.cluster, &env.prompts, &strategy, &env.db, &cfg, None)
                 .expect("sweep run");

@@ -42,6 +42,7 @@ pub fn run(env: &Env) -> (Vec<Table2Row>, Table) {
                 max_new_tokens: env.cfg.serving.max_new_tokens,
                 stochastic_seed: None,
                 continuous_batching: false,
+                ..RunConfig::default()
             };
             let r = run_sched(&env.cluster, &env.prompts, &strategy, &env.db, &cfg, None)
                 .expect("table2 run");

@@ -49,6 +49,7 @@ pub fn run(env: &Env, extensions: bool) -> (Vec<Table3Row>, Table) {
                 max_new_tokens: env.cfg.serving.max_new_tokens,
                 stochastic_seed: None,
                 continuous_batching: false,
+                ..RunConfig::default()
             };
             let r = run_sched(&env.cluster, &env.prompts, &strategy, &env.db, &cfg, None)
                 .expect("table3 run");

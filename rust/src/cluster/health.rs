@@ -1,0 +1,202 @@
+//! Per-device health state for churn-aware scheduling.
+//!
+//! [`HealthState`] is the four-state availability machine the churn
+//! subsystem drives (Up → Degraded → Down → Recovering → Up);
+//! [`HealthMask`] is the cluster-wide view the router consumes: Down
+//! devices are excluded from placement entirely, Degraded/Recovering
+//! devices stay routable but pay a multiplicative cost penalty. With
+//! no mask attached (`health: None` in the router's `OnlineView`)
+//! routing is bit-for-bit the pre-churn path.
+//!
+//! The state machine is driven two ways: in the simulated planes by a
+//! `simulator::failure::ChurnSchedule` (scripted outage windows or
+//! stochastic MTBF/MTTR sampling), and in the wallclock server by the
+//! health-checker thread's heartbeat timeouts.
+
+use std::fmt;
+
+/// One device's availability state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum HealthState {
+    /// Fully available.
+    #[default]
+    Up,
+    /// Still serving but impaired (heading into an outage): routing
+    /// penalizes it instead of excluding it.
+    Degraded,
+    /// Unavailable: routing excludes it and in-flight work is killed.
+    Down,
+    /// Back after an outage but not yet trusted: penalized like
+    /// [`HealthState::Degraded`].
+    Recovering,
+}
+
+impl HealthState {
+    /// True for [`HealthState::Down`] only.
+    pub fn is_down(self) -> bool {
+        matches!(self, HealthState::Down)
+    }
+
+    /// Penalized-but-routable states (Degraded, Recovering).
+    pub fn is_impaired(self) -> bool {
+        matches!(self, HealthState::Degraded | HealthState::Recovering)
+    }
+
+    /// Stable lowercase name (used in trace events and reports).
+    pub fn name(self) -> &'static str {
+        match self {
+            HealthState::Up => "up",
+            HealthState::Degraded => "degraded",
+            HealthState::Down => "down",
+            HealthState::Recovering => "recovering",
+        }
+    }
+}
+
+impl fmt::Display for HealthState {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Default multiplicative routing-cost factor for impaired devices.
+pub const DEFAULT_DEGRADED_PENALTY: f64 = 2.0;
+
+/// Cluster-wide health view consumed by the router: one
+/// [`HealthState`] per device plus the impaired-cost factor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HealthMask {
+    states: Vec<HealthState>,
+    degraded_penalty: f64,
+}
+
+impl HealthMask {
+    /// A mask with every device Up (the neutral starting point).
+    pub fn all_up(n: usize) -> Self {
+        HealthMask {
+            states: vec![HealthState::Up; n],
+            degraded_penalty: DEFAULT_DEGRADED_PENALTY,
+        }
+    }
+
+    /// Override the impaired-device cost factor (must be >= 1).
+    pub fn with_degraded_penalty(mut self, factor: f64) -> Self {
+        assert!(factor >= 1.0, "degraded penalty must be >= 1, got {factor}");
+        self.degraded_penalty = factor;
+        self
+    }
+
+    /// Number of devices covered by the mask.
+    pub fn len(&self) -> usize {
+        self.states.len()
+    }
+
+    /// True when the mask covers no devices.
+    pub fn is_empty(&self) -> bool {
+        self.states.is_empty()
+    }
+
+    /// The state of one device.
+    pub fn state(&self, device: usize) -> HealthState {
+        self.states[device]
+    }
+
+    /// Set one device's state.
+    pub fn set(&mut self, device: usize, state: HealthState) {
+        self.states[device] = state;
+    }
+
+    /// Is the device excluded from placement?
+    pub fn is_down(&self, device: usize) -> bool {
+        self.states[device].is_down()
+    }
+
+    /// Multiplicative routing-cost factor for a device: 1.0 when Up,
+    /// the degraded penalty when impaired. Meaningless for Down
+    /// devices — those must be excluded, not priced.
+    pub fn penalty(&self, device: usize) -> f64 {
+        if self.states[device].is_impaired() {
+            self.degraded_penalty
+        } else {
+            1.0
+        }
+    }
+
+    /// Number of devices that are not Down.
+    pub fn up_count(&self) -> usize {
+        self.states.iter().filter(|s| !s.is_down()).count()
+    }
+
+    /// Is at least one device routable?
+    pub fn any_up(&self) -> bool {
+        self.states.iter().any(|s| !s.is_down())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_state_is_up() {
+        assert_eq!(HealthState::default(), HealthState::Up);
+        assert!(!HealthState::Up.is_down());
+        assert!(!HealthState::Up.is_impaired());
+    }
+
+    #[test]
+    fn state_predicates() {
+        assert!(HealthState::Down.is_down());
+        assert!(!HealthState::Down.is_impaired());
+        assert!(HealthState::Degraded.is_impaired());
+        assert!(HealthState::Recovering.is_impaired());
+        assert!(!HealthState::Degraded.is_down());
+    }
+
+    #[test]
+    fn names_are_stable() {
+        assert_eq!(HealthState::Up.name(), "up");
+        assert_eq!(HealthState::Degraded.name(), "degraded");
+        assert_eq!(HealthState::Down.name(), "down");
+        assert_eq!(HealthState::Recovering.name(), "recovering");
+        assert_eq!(format!("{}", HealthState::Down), "down");
+    }
+
+    #[test]
+    fn mask_all_up_is_neutral() {
+        let m = HealthMask::all_up(3);
+        assert_eq!(m.len(), 3);
+        assert!(!m.is_empty());
+        assert_eq!(m.up_count(), 3);
+        assert!(m.any_up());
+        for d in 0..3 {
+            assert!(!m.is_down(d));
+            assert_eq!(m.penalty(d), 1.0);
+        }
+    }
+
+    #[test]
+    fn mask_tracks_states_and_penalties() {
+        let mut m = HealthMask::all_up(3).with_degraded_penalty(4.0);
+        m.set(0, HealthState::Down);
+        m.set(1, HealthState::Degraded);
+        assert!(m.is_down(0));
+        assert_eq!(m.penalty(1), 4.0);
+        assert_eq!(m.penalty(2), 1.0);
+        assert_eq!(m.up_count(), 2);
+        assert!(m.any_up());
+        m.set(1, HealthState::Down);
+        m.set(2, HealthState::Down);
+        assert!(!m.any_up());
+        assert_eq!(m.up_count(), 0);
+        m.set(1, HealthState::Recovering);
+        assert_eq!(m.penalty(1), 4.0);
+        assert!(m.any_up());
+    }
+
+    #[test]
+    #[should_panic(expected = "degraded penalty")]
+    fn penalty_below_one_rejected() {
+        let _ = HealthMask::all_up(1).with_degraded_penalty(0.5);
+    }
+}

@@ -13,16 +13,22 @@
 //! - [`memory::MemoryModel`] — weights + KV-cache + activation footprint
 //!   against GPU capacity (drives admission and the batch-8 saturation
 //!   behaviour on the 8 GB device);
-//! - [`network::LinkModel`] — RTT/bandwidth in front of the cloud point.
+//! - [`network::LinkModel`] — RTT/bandwidth in front of the cloud point;
+//! - [`health::HealthState`] / [`health::HealthMask`] — per-device
+//!   availability (Up → Degraded → Down → Recovering) driven by the
+//!   churn subsystem; the router excludes Down devices and penalizes
+//!   impaired ones.
 
 pub mod carbon;
 pub mod device;
+pub mod health;
 pub mod memory;
 pub mod network;
 pub mod power;
 
 pub use carbon::CarbonModel;
 pub use device::DeviceProfile;
+pub use health::{HealthMask, HealthState};
 pub use memory::MemoryModel;
 pub use network::LinkModel;
 pub use power::PowerModel;

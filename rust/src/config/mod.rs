@@ -225,6 +225,127 @@ pub struct ServingConfig {
     /// partial batch at decode boundaries, on all three planes. Off by
     /// default — execution is bit-for-bit the fixed-batch behaviour.
     pub continuous_batching: bool,
+    /// OOM-retry / failover budget (`[serving.failure]`). The default
+    /// reproduces the historic constants bit-for-bit.
+    pub failure: crate::simulator::FailurePolicy,
+    /// Device-churn timeline (`[serving.churn]`). Empty by default —
+    /// no churn machinery anywhere, bit-for-bit the pre-churn paths.
+    pub churn: ChurnConfig,
+}
+
+/// `[serving.churn]` — device availability for churn experiments.
+/// Either scripted outage windows or a stochastic MTBF/MTTR model;
+/// the empty default disables churn entirely.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChurnConfig {
+    /// Scripted outage windows, `"device:start_s:end_s"` each
+    /// (device = index into the cluster's device list, times in
+    /// virtual seconds). Mutually exclusive with `mtbf_s`/`mttr_s`.
+    pub outages: Vec<String>,
+    /// Stochastic model: mean up-time between failures, seconds.
+    pub mtbf_s: Option<f64>,
+    /// Stochastic model: mean repair time, seconds.
+    pub mttr_s: Option<f64>,
+    /// Stochastic horizon — new failures start before this, seconds.
+    pub horizon_s: f64,
+    /// Seed for the stochastic schedule sampler.
+    pub seed: u64,
+    /// Devices report Degraded this long before each outage, seconds.
+    pub degraded_lead_s: f64,
+    /// Devices report Recovering this long after each outage, seconds.
+    pub recovering_tail_s: f64,
+}
+
+impl Default for ChurnConfig {
+    fn default() -> Self {
+        ChurnConfig {
+            outages: Vec::new(),
+            mtbf_s: None,
+            mttr_s: None,
+            horizon_s: 3600.0,
+            seed: 42,
+            degraded_lead_s: 0.0,
+            recovering_tail_s: 0.0,
+        }
+    }
+}
+
+impl ChurnConfig {
+    /// True when the table asks for any churn at all.
+    pub fn is_enabled(&self) -> bool {
+        !self.outages.is_empty() || self.mtbf_s.is_some() || self.mttr_s.is_some()
+    }
+
+    /// Field-level invariants (spec syntax, non-negative intervals).
+    /// Cross-cluster checks (device bounds) live in [`Self::to_schedule`],
+    /// which knows the cluster size.
+    pub fn validate(&self) -> Result<()> {
+        if !self.outages.is_empty() && (self.mtbf_s.is_some() || self.mttr_s.is_some()) {
+            bail!(
+                "[serving.churn] scripted outages and the stochastic \
+                 mtbf_s/mttr_s model are mutually exclusive"
+            );
+        }
+        if self.mtbf_s.is_some() != self.mttr_s.is_some() {
+            bail!("[serving.churn] stochastic churn needs both mtbf_s and mttr_s");
+        }
+        if !self.outages.is_empty() {
+            // full scripted-schedule validation (syntax, reversed or
+            // overlapping windows); device bounds wait for the cluster
+            let windows = self
+                .outages
+                .iter()
+                .map(|s| crate::simulator::OutageWindow::parse(s))
+                .collect::<Result<Vec<_>>>()?;
+            crate::simulator::ChurnSchedule::scripted(windows)?;
+        }
+        if !(self.horizon_s > 0.0 && self.horizon_s.is_finite()) {
+            bail!("[serving.churn] horizon_s must be positive and finite, got {}", self.horizon_s);
+        }
+        for (x, what) in [
+            (self.degraded_lead_s, "degraded_lead_s"),
+            (self.recovering_tail_s, "recovering_tail_s"),
+        ] {
+            if !(x >= 0.0 && x.is_finite()) {
+                bail!("[serving.churn] {what} must be >= 0 and finite, got {x}");
+            }
+        }
+        Ok(())
+    }
+
+    /// Materialize the schedule for an `n_devices` cluster. `None`
+    /// when churn is off — the bit-for-bit default path for every
+    /// plane.
+    pub fn to_schedule(&self, n_devices: usize) -> Result<Option<crate::simulator::ChurnSchedule>> {
+        use crate::simulator::{ChurnSchedule, OutageWindow};
+        self.validate()?;
+        if !self.is_enabled() {
+            return Ok(None);
+        }
+        let schedule = if !self.outages.is_empty() {
+            let windows = self
+                .outages
+                .iter()
+                .map(|s| OutageWindow::parse(s))
+                .collect::<Result<Vec<_>>>()?;
+            ChurnSchedule::scripted(windows)?
+        } else {
+            // validate() guarantees both halves are present here
+            let (mtbf, mttr) = (self.mtbf_s.unwrap(), self.mttr_s.unwrap());
+            let mut rng = crate::util::rng::Rng::new(self.seed);
+            ChurnSchedule::stochastic(n_devices, mtbf, mttr, self.horizon_s, &mut rng)?
+        };
+        if let Some(md) = schedule.max_device() {
+            if md >= n_devices {
+                bail!("[serving.churn] names device {md}, cluster has {n_devices} devices");
+            }
+        }
+        Ok(Some(
+            schedule
+                .with_degraded_lead_s(self.degraded_lead_s)
+                .with_recovering_tail_s(self.recovering_tail_s),
+        ))
+    }
 }
 
 /// Flight-recorder / metrics-registry knobs (`[observability]` table;
@@ -297,6 +418,8 @@ impl Default for ExperimentConfig {
                 blend: false,
                 spot_check_every_n: 0,
                 continuous_batching: false,
+                failure: crate::simulator::FailurePolicy::default(),
+                churn: ChurnConfig::default(),
             },
             observability: ObservabilityConfig::default(),
             artifacts_dir: "artifacts".into(),
@@ -445,6 +568,47 @@ impl ExperimentConfig {
             if let Some(b) = s.get("continuous_batching").and_then(Value::as_bool) {
                 cfg.serving.continuous_batching = b;
             }
+            if let Some(f) = s.get("failure") {
+                if let Some(n) = f.get("max_attempts").and_then(Value::as_usize) {
+                    cfg.serving.failure.max_attempts = n;
+                }
+                if let Some(x) = f.get("max_fail_prob").and_then(Value::as_f64) {
+                    cfg.serving.failure.max_fail_prob = x;
+                }
+            }
+            if let Some(c) = s.get("churn") {
+                if let Some(list) = c.get("outages").and_then(Value::as_arr) {
+                    cfg.serving.churn.outages = list
+                        .iter()
+                        .map(|o| {
+                            o.as_str().map(str::to_string).ok_or_else(|| {
+                                anyhow!(
+                                    "[serving.churn] outages must be \
+                                     \"device:start_s:end_s\" strings, got {o:?}"
+                                )
+                            })
+                        })
+                        .collect::<Result<_>>()?;
+                }
+                if let Some(x) = c.get("mtbf_s").and_then(Value::as_f64) {
+                    cfg.serving.churn.mtbf_s = Some(x);
+                }
+                if let Some(x) = c.get("mttr_s").and_then(Value::as_f64) {
+                    cfg.serving.churn.mttr_s = Some(x);
+                }
+                if let Some(x) = c.get("horizon_s").and_then(Value::as_f64) {
+                    cfg.serving.churn.horizon_s = x;
+                }
+                if let Some(x) = c.get("seed").and_then(Value::as_u64) {
+                    cfg.serving.churn.seed = x;
+                }
+                if let Some(x) = c.get("degraded_lead_s").and_then(Value::as_f64) {
+                    cfg.serving.churn.degraded_lead_s = x;
+                }
+                if let Some(x) = c.get("recovering_tail_s").and_then(Value::as_f64) {
+                    cfg.serving.churn.recovering_tail_s = x;
+                }
+            }
         }
         if let Some(o) = v.get("observability") {
             if let Some(p) = o.get("trace").and_then(Value::as_str) {
@@ -515,6 +679,8 @@ impl ExperimentConfig {
                 bail!("open arrival rate must be positive");
             }
         }
+        self.serving.failure.validate()?;
+        self.serving.churn.validate()?;
         Ok(())
     }
 
@@ -902,6 +1068,66 @@ metrics_json = "out/metrics.json"
         assert_eq!(c.observability.trace.as_deref(), Some("out/decisions.jsonl"));
         assert_eq!(c.observability.metrics_json.as_deref(), Some("out/metrics.json"));
         assert_eq!(c.serving.spot_check_every_n, 16);
+    }
+
+    #[test]
+    fn failure_and_churn_tables_roundtrip() {
+        use crate::simulator::FailurePolicy;
+        // defaults: historic retry constants, churn off, no schedule
+        let d = ExperimentConfig::default();
+        assert_eq!(d.serving.failure, FailurePolicy::default());
+        assert!(!d.serving.churn.is_enabled());
+        assert!(d.serving.churn.to_schedule(2).unwrap().is_none());
+
+        // scripted outages + custom retry budget
+        let doc = r#"
+[serving.failure]
+max_attempts = 5
+max_fail_prob = 0.5
+
+[serving.churn]
+outages = ["0:10:20", "1:30:40"]
+degraded_lead_s = 5.0
+"#;
+        let c = ExperimentConfig::from_value(&toml::parse(doc).unwrap()).unwrap();
+        assert_eq!(c.serving.failure.max_attempts, 5);
+        assert_eq!(c.serving.failure.max_fail_prob, 0.5);
+        assert!(c.serving.churn.is_enabled());
+        let s = c.serving.churn.to_schedule(2).unwrap().expect("churn on");
+        assert_eq!(s.windows().len(), 2);
+        assert_eq!(s.max_device(), Some(1));
+
+        // stochastic model is deterministic under a fixed seed
+        let doc = r#"
+[serving.churn]
+mtbf_s = 500.0
+mttr_s = 60.0
+horizon_s = 1000.0
+seed = 9
+"#;
+        let c = ExperimentConfig::from_value(&toml::parse(doc).unwrap()).unwrap();
+        let s1 = c.serving.churn.to_schedule(2).unwrap().expect("churn on");
+        let s2 = c.serving.churn.to_schedule(2).unwrap().expect("churn on");
+        assert_eq!(s1, s2, "same seed must sample the same outages");
+
+        let parse = |doc: &str| ExperimentConfig::from_value(&toml::parse(doc).unwrap());
+        // retry budget of zero is meaningless
+        assert!(parse("[serving.failure]\nmax_attempts = 0\n").is_err());
+        assert!(parse("[serving.failure]\nmax_fail_prob = 1.5\n").is_err());
+        // scripted and stochastic churn cannot mix
+        assert!(
+            parse("[serving.churn]\noutages = [\"0:1:2\"]\nmtbf_s = 10.0\nmttr_s = 1.0\n").is_err()
+        );
+        // stochastic needs both halves
+        assert!(parse("[serving.churn]\nmtbf_s = 10.0\n").is_err());
+        // malformed window specs fail at load time, not run time
+        assert!(parse("[serving.churn]\noutages = [\"oops\"]\n").is_err());
+        assert!(parse("[serving.churn]\noutages = [\"0:20:10\"]\n").is_err());
+        assert!(parse("[serving.churn]\noutages = [\"0:1:2\"]\ndegraded_lead_s = -1.0\n").is_err());
+        // a window naming a missing device fails when materialized
+        let c = parse("[serving.churn]\noutages = [\"99:0:10\"]\n").unwrap();
+        let err = c.serving.churn.to_schedule(2).unwrap_err().to_string();
+        assert!(err.contains("names device 99"), "{err}");
     }
 
     #[test]

@@ -77,6 +77,27 @@
 //! through the dense cost table at the joined size. The join never
 //! moves the batch's finish time; the joiner completes with the batch.
 //! Off (the default) is the fixed-cohort path, bit-for-bit.
+//!
+//! ## Device churn & failover
+//!
+//! With [`OnlineConfig::churn`] set, scripted or stochastic outage
+//! windows ([`ChurnSchedule`]) drive a per-device health state
+//! machine. Routing sees it through the policy core's health mask:
+//! Down devices are excluded, impaired ones penalized. A device-down
+//! event kills the device's in-flight batch — the energy it had
+//! already burnt is labelled lost work on the ledger (the launch
+//! posting is never refunded; see [`EnergyLedger::post_lost_work`]) —
+//! drains its queues, and re-admits every affected prompt through
+//! health-masked routing within a bounded retry budget
+//! ([`FailurePolicy::max_attempts`] disruptions per prompt). Held
+//! deferrals are re-planned under
+//! [`crate::grid::ReplanTrigger::DeviceFailed`]. Work that cannot be
+//! placed — no surviving device, budget exhausted, or failover
+//! disabled — is **shed**: counted on the ledger and in
+//! [`OnlineResult::shed`], never silently lost, so
+//! `completed + shed == corpus size` always holds. `churn: None` (the
+//! default) is bit-for-bit the churn-free path, pinned in
+//! `tests/planes.rs`.
 
 use std::collections::VecDeque;
 use std::sync::{mpsc, Arc};
@@ -84,8 +105,9 @@ use std::thread;
 
 use anyhow::{anyhow, Result};
 
-use crate::cluster::{CarbonModel, Cluster};
-use crate::simulator::{simulate_batch, BatchWork, EventQueue};
+use crate::cluster::{CarbonModel, Cluster, HealthMask, HealthState};
+use crate::grid::ReplanTrigger;
+use crate::simulator::{simulate_batch_with, BatchWork, ChurnSchedule, EventQueue, FailurePolicy};
 use crate::telemetry::trace::{TraceEvent, TraceSink};
 use crate::telemetry::{EnergyLedger, MetricsRegistry};
 use crate::util::stats::{Histogram, Summary};
@@ -131,6 +153,20 @@ pub struct OnlineConfig {
     /// §Continuous batching). Off (default) is the fixed-cohort path,
     /// bit-for-bit.
     pub continuous_batching: bool,
+    /// Device-churn schedule (see module docs §Device churn &
+    /// failover). `None` — or an empty schedule — is bit-for-bit the
+    /// churn-free path.
+    pub churn: Option<ChurnSchedule>,
+    /// Migrate work off a failed device onto survivors (within the
+    /// retry budget) instead of shedding it outright. On by default;
+    /// `false` is the no-failover baseline `bench churn` compares
+    /// against. Ignored without `churn`.
+    pub failover: bool,
+    /// Failure-model knobs: the OOM-retry chain inside
+    /// [`simulate_batch_with`] and the per-prompt churn retry budget
+    /// (`max_attempts` disruptions before a prompt is shed). The
+    /// default reproduces the historic constants bit-for-bit.
+    pub failure: FailurePolicy,
 }
 
 impl Default for OnlineConfig {
@@ -143,6 +179,9 @@ impl Default for OnlineConfig {
             trace: None,
             shards: 1,
             continuous_batching: false,
+            churn: None,
+            failover: true,
+            failure: FailurePolicy::default(),
         }
     }
 }
@@ -181,6 +220,13 @@ pub struct OnlineResult {
     /// Prompts that joined an in-flight batch at a decode boundary
     /// (always 0 with `continuous_batching` off).
     pub batch_joins: usize,
+    /// Prompts shed by device churn: no surviving device, retry budget
+    /// exhausted, or failover disabled. Counted, never silently lost —
+    /// `completed + shed` always equals the corpus size. Always 0
+    /// without `churn`.
+    pub shed: usize,
+    /// Ids of the shed prompts, sorted.
+    pub shed_ids: Vec<u64>,
     /// Per-device utilization (busy / span).
     pub utilization: Vec<(String, f64)>,
     pub ledger: EnergyLedger,
@@ -195,8 +241,12 @@ enum Event {
     /// Deferred prompt `i` released for routing (epoch guards against
     /// releases superseded by a replan).
     Release(usize, u64),
-    /// Device `d` finished its batch.
-    DeviceFree(usize),
+    /// Device `d` finished its batch (failure epoch guards against
+    /// completions of a batch an outage killed mid-flight).
+    DeviceFree(usize, u64),
+    /// Device `d` transitions to a new health state (scheduled up
+    /// front from the churn schedule's transition list).
+    Churn(usize, HealthState),
     /// WaitFill timeout expired for device d (epoch guards staleness).
     BatchTimeout(usize, u64),
     /// Carbon-sizing hold expired for device d (epoch guards staleness).
@@ -228,6 +278,10 @@ struct DeviceState {
     /// When the pending sizing hold launches (replan compares against
     /// this to see whether a hold actually moved).
     hold_until: f64,
+    /// Failure epoch: bumped when an outage kills the in-flight batch,
+    /// so the batch's pending `DeviceFree` is ignored on pop. Never
+    /// moves without churn — every `DeviceFree` then carries 0.
+    fepoch: u64,
 }
 
 impl DeviceState {
@@ -487,6 +541,17 @@ struct State {
     accounts: Accounts,
     /// Prompts that joined an in-flight batch (continuous batching).
     batch_joins: usize,
+    /// Device health mask; `Some` iff a non-empty churn schedule is
+    /// configured (`None` keeps every routing call on the unmasked,
+    /// bit-for-bit churn-free path).
+    health: Option<HealthMask>,
+    /// Churn disruptions suffered per prompt (kills + queue drains);
+    /// past `failure.max_attempts` the prompt is shed. Empty without
+    /// churn.
+    attempts: Vec<u32>,
+    /// Prompts shed by churn (see [`OnlineResult::shed`]).
+    shed: usize,
+    shed_ids: Vec<u64>,
 }
 
 /// Run the open-loop simulation over prompts with assigned arrival times.
@@ -505,6 +570,18 @@ pub fn run_online(
     if let Some(sink) = &cfg.trace {
         policy = policy.with_trace(Arc::clone(sink));
     }
+    cfg.failure.validate()?;
+    // an empty schedule is the churn-free path, not an error
+    let churn = cfg.churn.as_ref().filter(|c| !c.is_empty());
+    if let Some(c) = churn {
+        if let Some(md) = c.max_device() {
+            if md >= n_dev {
+                return Err(anyhow!(
+                    "churn schedule names device {md}, cluster has {n_dev} devices"
+                ));
+            }
+        }
+    }
     let ctx = Ctx { cluster, prompts, db, cfg, policy: &policy };
 
     let mut st = State {
@@ -519,6 +596,7 @@ pub fn run_online(
                 waiting_since: None,
                 sizing_hold: false,
                 hold_until: 0.0,
+                fepoch: 0,
             })
             .collect(),
         backlog: vec![0.0; n_dev],
@@ -536,9 +614,18 @@ pub fn run_online(
         tick_armed: false,
         accounts: Accounts::new(cfg.shards, cluster),
         batch_joins: 0,
+        health: churn.map(|_| HealthMask::all_up(n_dev)),
+        attempts: if churn.is_some() { vec![0; prompts.len()] } else { Vec::new() },
+        shed: 0,
+        shed_ids: Vec::new(),
     };
     for (i, p) in prompts.iter().enumerate() {
         st.q.push(p.arrival_s, Event::Arrival(i));
+    }
+    if let Some(c) = churn {
+        for (t, d, state) in c.transitions() {
+            st.q.push(t, Event::Churn(d, state));
+        }
     }
 
     let mut span = 0.0f64;
@@ -581,7 +668,13 @@ pub fn run_online(
                     admit(&ctx, &mut st, i, true, now);
                 }
             }
-            Event::DeviceFree(d) => {
+            Event::DeviceFree(d, fepoch) => {
+                if st.devs[d].fepoch != fepoch {
+                    // an outage killed this batch mid-flight; its
+                    // completion was already unwound by the churn
+                    // handler
+                    continue;
+                }
                 // account the finished batch (heavy per-member work
                 // goes down the accounting pipeline; decisions on this
                 // thread never read it back)
@@ -617,10 +710,12 @@ pub fn run_online(
                     arm_replan_tick(&ctx, &mut st, now);
                 }
             }
+            Event::Churn(d, state) => device_churn(&ctx, &mut st, d, state, now),
         }
     }
 
     st.deferred_ids.sort_unstable();
+    st.shed_ids.sort_unstable();
 
     // drain the accounting pipeline and merge the shard books in shard
     // index order (the deterministic merge order)
@@ -665,6 +760,15 @@ pub fn run_online(
     metrics.observe_summary("deferral_queue_len", &st.deferral_len);
     metrics.observe_summary("batch_fill", &st.batch_fill);
     metrics.observe_summary("queue_wait", &st.queue_wait);
+    if st.health.is_some() {
+        // registered only under churn, so the churn-free metrics
+        // snapshot stays exactly the pre-churn registry
+        let f = st.ledger.failure_stats().clone();
+        metrics.add("outages_total", f.outages);
+        metrics.add("failovers_total", f.failovers);
+        metrics.add("requeues_total", f.requeues);
+        metrics.add("shed_total", f.shed);
+    }
     metrics.record_ledger(&st.ledger);
     Ok(OnlineResult {
         completed,
@@ -681,6 +785,8 @@ pub fn run_online(
         held_partial: st.held_partial,
         deadline_violations,
         batch_joins: st.batch_joins,
+        shed: st.shed,
+        shed_ids: st.shed_ids,
         utilization: cluster
             .devices
             .iter()
@@ -697,13 +803,21 @@ pub fn run_online(
 /// backlog view is the state's per-device counter vector, handed to the
 /// router as a slice — no per-arrival collection or allocation.
 fn admit(ctx: &Ctx, st: &mut State, i: usize, lo: bool, now: f64) {
-    let d = ctx.policy.route_arrival(
+    // a full-cluster outage has nowhere to put the prompt: shed it,
+    // counted (scripted windows always end, but holding work for a
+    // recovery that may never come would break conservation)
+    if st.health.as_ref().is_some_and(|h| !h.any_up()) {
+        shed_prompt(ctx, st, i, now, "no_surviving_device");
+        return;
+    }
+    let d = ctx.policy.route_arrival_masked(
         &ctx.prompts[i],
         ctx.cluster,
         ctx.db,
         ctx.cfg.batch_size,
         &st.backlog,
         now,
+        st.health.as_ref(),
     );
     st.assignment[i] = d;
     // continuous batching: a compatible in-flight batch absorbs the
@@ -759,6 +873,11 @@ fn admit(ctx: &Ctx, st: &mut State, i: usize, lo: bool, now: f64) {
 
 fn maybe_launch(ctx: &Ctx, st: &mut State, d: usize, now: f64) {
     if st.devs[d].busy || st.devs[d].queued() == 0 {
+        return;
+    }
+    // a Down device never launches (its queues are drained on the down
+    // transition, so this guard is defensive — and free without churn)
+    if st.health.as_ref().is_some_and(|h| h.is_down(d)) {
         return;
     }
     let full = st.devs[d].queued() >= ctx.cfg.batch_size;
@@ -1011,7 +1130,7 @@ fn launch(ctx: &Ctx, st: &mut State, d: usize, now: f64) {
             .map(|&i| ctx.prompts[i].output_tokens_on(dev.output_median_tokens))
             .collect(),
     );
-    let timing = simulate_batch(dev, &work, None);
+    let timing = simulate_batch_with(dev, &work, None, &ctx.cfg.failure);
     if let Some(sink) = ctx.policy.trace_sink() {
         sink.emit(&TraceEvent::BatchLaunch {
             t: now,
@@ -1026,7 +1145,201 @@ fn launch(ctx: &Ctx, st: &mut State, d: usize, now: f64) {
     st.accounts.post_launch(d, &dev.name, timing.energy_kwh, timing.total_s, finish, arrivals);
     st.devs[d].busy = true;
     st.inflight[d] = Some((members, now, finish));
-    st.q.push(finish, Event::DeviceFree(d));
+    st.q.push(finish, Event::DeviceFree(d, st.devs[d].fepoch));
+}
+
+/// Apply one health transition. A down transition kills the device's
+/// in-flight batch, drains its queues and migrates (or sheds) the
+/// affected work; a recovery puts the device back into the launch
+/// rotation. Only ever called with churn configured.
+fn device_churn(ctx: &Ctx, st: &mut State, d: usize, state: HealthState, now: f64) {
+    let (was_down, now_down) = {
+        let mask = st.health.as_mut().expect("churn event without a health mask");
+        let was = mask.is_down(d);
+        mask.set(d, state);
+        (was, state.is_down())
+    };
+    if now_down {
+        if was_down {
+            return; // schedules never overlap, but stay idempotent
+        }
+        st.ledger.post_outage();
+        if let Some(sink) = ctx.policy.trace_sink() {
+            sink.emit(&TraceEvent::DeviceDown {
+                t: now,
+                device: ctx.cluster.devices[d].name.clone(),
+            });
+        }
+        kill_inflight(ctx, st, d, now);
+        drain_dead_queues(ctx, st, d, now);
+        replan_held_after_failure(ctx, st, now);
+    } else {
+        if let Some(sink) = ctx.policy.trace_sink() {
+            sink.emit(&TraceEvent::DeviceUp {
+                t: now,
+                device: ctx.cluster.devices[d].name.clone(),
+                state: state.name().to_string(),
+            });
+        }
+        if was_down {
+            // back in the rotation; new arrivals may queue here again
+            // (nothing re-routes back — the queues were drained)
+            maybe_launch(ctx, st, d, now);
+        }
+    }
+}
+
+/// Kill device `d`'s in-flight batch: label the energy it had already
+/// burnt as lost work (the launch posting charged the whole batch and
+/// is not refunded), invalidate the pending `DeviceFree` via the
+/// failure epoch, and requeue or shed every member.
+fn kill_inflight(ctx: &Ctx, st: &mut State, d: usize, now: f64) {
+    let Some((members, start, finish)) = st.inflight[d].take() else {
+        return;
+    };
+    let dev = &ctx.cluster.devices[d];
+    let work = BatchWork::new(
+        members.iter().map(|&i| ctx.prompts[i].prompt_tokens).collect(),
+        members
+            .iter()
+            .map(|&i| ctx.prompts[i].output_tokens_on(dev.output_median_tokens))
+            .collect(),
+    );
+    let timing = simulate_batch_with(dev, &work, None, &ctx.cfg.failure);
+    let frac = if finish > start {
+        ((now - start) / (finish - start)).clamp(0.0, 1.0)
+    } else {
+        1.0
+    };
+    st.ledger.post_lost_work(frac * timing.energy_kwh, now);
+    st.devs[d].active_s += (now - start).max(0.0);
+    st.devs[d].busy = false;
+    st.devs[d].fepoch += 1;
+    for i in members {
+        requeue_or_shed(ctx, st, i, d, now, true);
+    }
+}
+
+/// Drain a dead device's queues, void its pending waits/holds, and
+/// migrate (or shed) every queued prompt.
+fn drain_dead_queues(ctx: &Ctx, st: &mut State, d: usize, now: f64) {
+    st.devs[d].epoch += 1; // stale any pending BatchTimeout / SizingHold
+    st.devs[d].waiting_since = None;
+    st.devs[d].sizing_hold = false;
+    st.backlog[d] = 0.0;
+    let drained: Vec<usize> = {
+        let ds = &mut st.devs[d];
+        ds.queue_hi.drain(..).chain(ds.queue_lo.drain(..)).map(|(i, _)| i).collect()
+    };
+    for i in drained {
+        requeue_or_shed(ctx, st, i, d, now, false);
+    }
+}
+
+/// A prompt was disrupted by an outage on `from`: re-admit it through
+/// health-masked routing when failover is on, a device survives, and
+/// its retry budget (`failure.max_attempts` disruptions) holds —
+/// otherwise shed it. `killed` distinguishes in-flight members
+/// (failovers) from drained queue entries (requeues) on the ledger.
+fn requeue_or_shed(ctx: &Ctx, st: &mut State, i: usize, from: usize, now: f64, killed: bool) {
+    st.attempts[i] += 1;
+    if !ctx.cfg.failover {
+        shed_prompt(ctx, st, i, now, "failover_disabled");
+        return;
+    }
+    if st.health.as_ref().is_some_and(|h| !h.any_up()) {
+        shed_prompt(ctx, st, i, now, "no_surviving_device");
+        return;
+    }
+    if st.attempts[i] as usize > ctx.cfg.failure.max_attempts {
+        shed_prompt(ctx, st, i, now, "retry_budget_exhausted");
+        return;
+    }
+    if killed {
+        st.ledger.post_failover(1);
+    } else {
+        st.ledger.post_requeue(1);
+    }
+    // disrupted work re-enters the interactive queue: it is already
+    // late, so it must not yield to fresh deferrable releases too
+    admit(ctx, st, i, false, now);
+    if let Some(sink) = ctx.policy.trace_sink() {
+        sink.emit(&TraceEvent::Failover {
+            t: now,
+            prompt: ctx.prompts[i].id,
+            from: ctx.cluster.devices[from].name.clone(),
+            to: ctx.cluster.devices[st.assignment[i]].name.clone(),
+        });
+    }
+}
+
+/// Terminal: the prompt leaves the system, counted on the ledger and
+/// in the result — `completed + shed == corpus size` stays invariant.
+fn shed_prompt(ctx: &Ctx, st: &mut State, i: usize, now: f64, reason: &str) {
+    st.shed += 1;
+    st.shed_ids.push(ctx.prompts[i].id);
+    st.ledger.post_shed(1);
+    if let Some(sink) = ctx.policy.trace_sink() {
+        sink.emit(&TraceEvent::Shed {
+            t: now,
+            prompt: ctx.prompts[i].id,
+            reason: reason.to_string(),
+        });
+    }
+}
+
+/// Held deferrals were planned against a cluster that just shrank:
+/// re-plan each under [`ReplanTrigger::DeviceFailed`] — same deadline
+/// bound as a cadence pass, and the dead device is excluded when the
+/// prompt routes at its (possibly moved) release instant. Runs on
+/// every down transition, independent of the cadence `replan` knob:
+/// a failure is an emergency, not a scheduled pass.
+fn replan_held_after_failure(ctx: &Ctx, st: &mut State, now: f64) {
+    if ctx.policy.grid.is_none() || st.held.is_empty() {
+        return;
+    }
+    let backlog: f64 = st.backlog.iter().sum();
+    let mut early = 0u64;
+    let mut later = 0u64;
+    let mut delta = 0.0f64;
+    let held: Vec<(usize, f64, u64)> = st.held.iter().map(|(&i, &(r, e))| (i, r, e)).collect();
+    for (i, old, epoch) in held {
+        let new = ctx.policy.replan_release(
+            ReplanTrigger::DeviceFailed,
+            &ctx.prompts[i],
+            ctx.cluster,
+            ctx.db,
+            ctx.cfg.batch_size,
+            backlog,
+            now,
+        );
+        if (new - old).abs() <= 1e-9 {
+            continue;
+        }
+        let e = epoch + 1;
+        st.held.insert(i, (new, e));
+        st.q.push(new, Event::Release(i, e));
+        if new < old {
+            early += 1;
+        } else {
+            later += 1;
+        }
+        delta += replan_delta_kg(ctx, i, old, new);
+    }
+    if early + later == 0 {
+        return; // unlike a cadence pass, only moved work posts
+    }
+    st.ledger.post_replan(early, later, delta);
+    if let Some(sink) = ctx.policy.trace_sink() {
+        sink.emit(&TraceEvent::Replan {
+            t: now,
+            trigger: ReplanTrigger::DeviceFailed.name().to_string(),
+            drift_mape: ctx.policy.grid.as_ref().map_or(0.0, |g| g.drift_mape()),
+            released_early: early as usize,
+            extended: later as usize,
+            delta_kg: delta,
+        });
+    }
 }
 
 #[cfg(test)]
@@ -1570,5 +1883,166 @@ mod tests {
         assert_eq!(on.span_s, off.span_s);
         assert_eq!(on.latency.mean(), off.latency.mean());
         assert_eq!(on.ledger.total_carbon_kg(), off.ledger.total_carbon_kg());
+    }
+
+    fn scripted(windows: &[(usize, f64, f64)]) -> ChurnSchedule {
+        ChurnSchedule::scripted(
+            windows
+                .iter()
+                .map(|&(device, start_s, end_s)| crate::simulator::OutageWindow {
+                    device,
+                    start_s,
+                    end_s,
+                })
+                .collect(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn empty_churn_schedule_is_bitwise_the_churn_free_path() {
+        let (cluster, prompts, db) = setup(100, 1.0);
+        let base = run_online(&cluster, &prompts, &db, &OnlineConfig::default()).unwrap();
+        let cfg =
+            OnlineConfig { churn: Some(ChurnSchedule::default()), ..OnlineConfig::default() };
+        let r = run_online(&cluster, &prompts, &db, &cfg).unwrap();
+        assert_eq!(r.shed, 0);
+        assert_eq!(base.assignment, r.assignment);
+        assert_eq!(base.span_s.to_bits(), r.span_s.to_bits());
+        assert_eq!(base.latency.mean().to_bits(), r.latency.mean().to_bits());
+        assert_eq!(base.ledger.totals(), r.ledger.totals());
+        // the failure counters never register off the churn path
+        assert_eq!(r.metrics.counter("outages_total"), 0);
+    }
+
+    #[test]
+    fn churn_schedule_naming_a_missing_device_fails_loudly() {
+        let (cluster, prompts, db) = setup(4, 0.5);
+        let cfg = OnlineConfig {
+            churn: Some(scripted(&[(99, 10.0, 20.0)])),
+            ..OnlineConfig::default()
+        };
+        let err = run_online(&cluster, &prompts, &db, &cfg).unwrap_err().to_string();
+        assert!(err.contains("churn schedule names device 99"), "{err}");
+    }
+
+    #[test]
+    fn outage_kills_inflight_fails_over_and_conserves() {
+        let (cluster, prompts, db) = setup(120, 1.5);
+        let j = cluster.devices.iter().position(|d| d.name.contains("jetson")).unwrap();
+        let sink = Arc::new(TraceSink::memory());
+        // pin everything to the jetson so the outage is guaranteed to
+        // catch an in-flight batch, then let fail-over pick the ada
+        let cfg = OnlineConfig {
+            strategy: format!("all-on-{}", cluster.devices[j].name),
+            churn: Some(scripted(&[(j, 60.0, 1e5)])),
+            trace: Some(Arc::clone(&sink)),
+            ..OnlineConfig::default()
+        };
+        let r = run_online(&cluster, &prompts, &db, &cfg).unwrap();
+        assert_eq!(r.completed + r.shed, 120, "every prompt completes or is shed");
+        assert_eq!(r.shed, 0, "the ada survives; nothing may be shed");
+        let f = r.ledger.failure_stats().clone();
+        assert_eq!(f.outages, 1);
+        assert!(f.failovers > 0, "the killed batch's members must migrate");
+        assert!(f.lost_work_kwh > 0.0, "a mid-flight kill wastes energy");
+        assert!(f.lost_work_carbon_kg > 0.0);
+        assert_eq!(r.metrics.counter("outages_total"), 1);
+        assert_eq!(r.metrics.counter("failovers_total"), f.failovers);
+        assert_eq!(r.metrics.counter("shed_total"), 0);
+        // both devices did real work: jetson before the outage, ada after
+        let util = |pat: &str| r.utilization.iter().find(|(n, _)| n.contains(pat)).unwrap().1;
+        assert!(util("jetson") > 0.0);
+        assert!(util("ada") > 0.0);
+        // flight recorder mirrors the ledger
+        let text = sink.contents();
+        let count = |ev: &str| {
+            text.lines().filter(|l| l.contains(&format!("\"ev\":\"{ev}\""))).count()
+        };
+        assert_eq!(count("device_down"), 1);
+        assert_eq!(count("device_up"), 1);
+        assert_eq!(count("failover") as u64, f.failovers + f.requeues);
+        assert_eq!(count("shed"), 0);
+        // churn runs are as deterministic as everything else here
+        let cfg2 = OnlineConfig { trace: None, ..cfg };
+        let a = run_online(&cluster, &prompts, &db, &cfg2).unwrap();
+        let b = run_online(&cluster, &prompts, &db, &cfg2).unwrap();
+        assert_eq!(a.span_s.to_bits(), b.span_s.to_bits());
+        assert_eq!(a.assignment, b.assignment);
+    }
+
+    #[test]
+    fn no_failover_baseline_sheds_what_failover_saves() {
+        let (cluster, prompts, db) = setup(120, 1.5);
+        let j = cluster.devices.iter().position(|d| d.name.contains("jetson")).unwrap();
+        let mk = |failover: bool| OnlineConfig {
+            strategy: format!("all-on-{}", cluster.devices[j].name),
+            churn: Some(scripted(&[(j, 60.0, 1e5)])),
+            failover,
+            ..OnlineConfig::default()
+        };
+        let with = run_online(&cluster, &prompts, &db, &mk(true)).unwrap();
+        let without = run_online(&cluster, &prompts, &db, &mk(false)).unwrap();
+        assert_eq!(with.completed + with.shed, 120);
+        assert_eq!(without.completed + without.shed, 120);
+        assert!(without.shed > 0, "no-failover must shed the disrupted work");
+        assert!(with.shed < without.shed, "failover must reduce shedding");
+        assert_eq!(without.shed_ids.len(), without.shed);
+        assert!(without.shed_ids.windows(2).all(|w| w[0] < w[1]), "shed ids sorted");
+        assert_eq!(without.ledger.failure_stats().shed as usize, without.shed);
+    }
+
+    #[test]
+    fn full_cluster_outage_sheds_but_conserves() {
+        let (cluster, prompts, db) = setup(60, 1.0);
+        let windows: Vec<(usize, f64, f64)> =
+            (0..cluster.devices.len()).map(|d| (d, 0.0, 1e6)).collect();
+        let sink = Arc::new(TraceSink::memory());
+        let cfg = OnlineConfig {
+            churn: Some(scripted(&windows)),
+            trace: Some(Arc::clone(&sink)),
+            ..OnlineConfig::default()
+        };
+        let r = run_online(&cluster, &prompts, &db, &cfg).unwrap();
+        assert_eq!(r.completed, 0);
+        assert_eq!(r.shed, 60, "every arrival is shed, none lost");
+        assert_eq!(r.ledger.failure_stats().shed, 60);
+        let sheds = sink
+            .contents()
+            .lines()
+            .filter(|l| l.contains("\"ev\":\"shed\""))
+            .count();
+        assert_eq!(sheds, 60, "one shed trace event per shed prompt");
+    }
+
+    #[test]
+    fn forecast_carbon_aware_survives_its_favourite_device_failing() {
+        // the ISSUE's key robustness result: the forecast-driven
+        // strategy must not collapse when the device it loads most
+        // goes down mid-run — the survivor absorbs the window
+        let (cluster, prompts, db, grid) = shifting_setup(150, 0.5);
+        let base_cfg = OnlineConfig {
+            strategy: "forecast-carbon-aware".into(),
+            grid: Some(grid),
+            ..OnlineConfig::default()
+        };
+        let base = run_online(&cluster, &prompts, &db, &base_cfg).unwrap();
+        assert!(base.deferred > 0, "scenario must exercise the shifting path");
+        let mut counts = vec![0usize; cluster.devices.len()];
+        for &d in &base.assignment {
+            counts[d] += 1;
+        }
+        let fav = (0..counts.len()).max_by_key(|&d| counts[d]).unwrap();
+        let cfg = OnlineConfig {
+            churn: Some(scripted(&[(fav, base.span_s * 0.25, base.span_s * 0.75)])),
+            ..base_cfg
+        };
+        let r = run_online(&cluster, &prompts, &db, &cfg).unwrap();
+        assert_eq!(r.completed + r.shed, 150);
+        assert_eq!(r.shed, 0, "one survivor must absorb the outage");
+        assert_eq!(r.ledger.failure_stats().outages, 1);
+        // routing really moved off the favourite during the window
+        let fav_after = r.assignment.iter().filter(|&&d| d == fav).count();
+        assert!(fav_after < counts[fav], "outage must shift load off device {fav}");
     }
 }

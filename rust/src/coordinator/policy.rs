@@ -51,7 +51,7 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::cluster::{CarbonModel, Cluster};
+use crate::cluster::{CarbonModel, Cluster, HealthMask};
 use crate::grid::{shift, DriftTracker, ForecastCache, ForecastKind, GridTrace, ReplanTrigger};
 use crate::telemetry::trace::{TraceEvent, TraceSink};
 use crate::util::sync::Snapshot;
@@ -566,8 +566,27 @@ impl PlacementPolicy {
         backlog_s: &[f64],
         now: f64,
     ) -> usize {
+        self.route_arrival_masked(p, cluster, db, batch_size, backlog_s, now, None)
+    }
+
+    /// [`Self::route_arrival`] with a device-health mask: Down devices
+    /// are excluded from placement, impaired ones pay the mask's
+    /// penalty (see [`OnlineView`]). Callers shed *before* routing when
+    /// the mask has no routable device ([`HealthMask::any_up`]).
+    /// `health: None` is bit-for-bit `route_arrival`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn route_arrival_masked(
+        &self,
+        p: &Prompt,
+        cluster: &Cluster,
+        db: &BenchmarkDb,
+        batch_size: usize,
+        backlog_s: &[f64],
+        now: f64,
+        health: Option<&HealthMask>,
+    ) -> usize {
         let ctx = RouteContext { cluster, db, batch_size };
-        let view = OnlineView { backlog_s, now, grid: self.grid.as_ref() };
+        let view = OnlineView { backlog_s, now, grid: self.grid.as_ref(), health };
         let d = self.strategy.route_one(p, &ctx, &view);
         if let Some(sink) = &self.trace {
             sink.emit(&TraceEvent::Route {
@@ -701,6 +720,12 @@ impl PlacementPolicy {
     ///   cleaner window appeared), but the result obeys exactly the
     ///   arrival-time bound: never past
     ///   `arrival + deadline − safety`.
+    /// - [`ReplanTrigger::DeviceFailed`]: the device the hold was
+    ///   planned around went Down — the release is re-planned exactly
+    ///   like a cadence pass (the forecast is still trusted; only the
+    ///   placement changed), and the prompt re-routes at its release
+    ///   instant through the health mask, which excludes the dead
+    ///   device. The same deadline bound applies.
     ///
     /// Either way the returned release is `>= now` and `<= max(now,
     /// arrival + deadline − safety)`; since replans only ever run while
@@ -726,7 +751,7 @@ impl PlacementPolicy {
     ) -> f64 {
         match trigger {
             ReplanTrigger::Drift => now,
-            ReplanTrigger::Cadence => {
+            ReplanTrigger::Cadence | ReplanTrigger::DeviceFailed => {
                 self.plan_release(p, cluster, db, batch_size, backlog_s, now)
             }
         }
@@ -736,6 +761,9 @@ impl PlacementPolicy {
     /// batch-hold analogue of [`Self::replan_release`]. A drift trigger
     /// cancels the hold (`None` — launch now); a cadence trigger
     /// re-runs [`Self::plan_batch_hold`] with the same deadline gates.
+    /// A device-failed trigger also cancels (`None`): the hold was
+    /// sized for the dead device, so its members go back through
+    /// admission — and health-masked routing — immediately.
     #[allow(clippy::too_many_arguments)]
     pub fn replan_batch_hold(
         &self,
@@ -749,7 +777,7 @@ impl PlacementPolicy {
         now: f64,
     ) -> Option<f64> {
         match trigger {
-            ReplanTrigger::Drift => None,
+            ReplanTrigger::Drift | ReplanTrigger::DeviceFailed => None,
             ReplanTrigger::Cadence => {
                 self.plan_batch_hold(cluster, db, prompts, queued, device, batch_size, now)
             }
@@ -964,8 +992,9 @@ pub fn sizing_hold_saving_kg<'a>(
     cluster.carbon.kg_co2e(kwh, now) - cluster.carbon.kg_co2e(kwh, until)
 }
 
-/// The replan form of [`plan_batch_hold_with`]: drift cancels the hold
-/// (launch now), cadence re-runs the planner with the same gates.
+/// The replan form of [`plan_batch_hold_with`]: drift and device
+/// failure cancel the hold (launch / re-admit now), cadence re-runs
+/// the planner with the same gates.
 #[allow(clippy::too_many_arguments)]
 pub fn replan_batch_hold_with<'a>(
     trigger: ReplanTrigger,
@@ -978,7 +1007,7 @@ pub fn replan_batch_hold_with<'a>(
     now: f64,
 ) -> Option<f64> {
     match trigger {
-        ReplanTrigger::Drift => None,
+        ReplanTrigger::Drift | ReplanTrigger::DeviceFailed => None,
         ReplanTrigger::Cadence => {
             plan_batch_hold_with(g, cluster, db, members, device, batch_size, now)
         }
@@ -1339,7 +1368,9 @@ mod tests {
             p.slo = SloClass::Deferrable { deadline_s: deadline };
             // a replan can only happen while the prompt is still held
             let now = p.arrival_s + rng.range(0.0, deadline * 0.9);
-            for trigger in [ReplanTrigger::Drift, ReplanTrigger::Cadence] {
+            for trigger in
+                [ReplanTrigger::Drift, ReplanTrigger::Cadence, ReplanTrigger::DeviceFailed]
+            {
                 let r = policy.replan_release(trigger, &p, &cluster, &db, 4, 0.0, now);
                 if r < now - 1e-9 {
                     return Err(format!("{trigger:?}: release {r} before now {now}"));
@@ -1384,6 +1415,63 @@ mod tests {
         assert!(policy
             .replan_batch_hold(drift, &cluster, &db, &prompts, &[0, 1], 0, 4, now)
             .is_none());
+    }
+
+    #[test]
+    fn device_failed_trigger_replans_releases_and_cancels_holds() {
+        use crate::grid::ReplanTrigger;
+        let (cluster, mut prompts, db) = setup(4);
+        for p in &mut prompts {
+            p.arrival_s = 18.0 * 3600.0;
+            p.slo = SloClass::Deferrable { deadline_s: 12.0 * 3600.0 };
+        }
+        let policy = PlacementPolicy::new(
+            "carbon-aware",
+            &cluster,
+            Some(diurnal_grid().with_sizing(true)),
+        )
+        .unwrap();
+        let now = 19.0 * 3600.0;
+        let t = ReplanTrigger::DeviceFailed;
+        // the forecast is still trusted: the release re-plans like a
+        // cadence pass (the evening hold survives, on a new device)...
+        let r = policy.replan_release(t, &prompts[0], &cluster, &db, 4, 0.0, now);
+        assert!(r > now, "device-failed replan should keep the evening hold");
+        assert!(r <= prompts[0].arrival_s + 12.0 * 3600.0);
+        // ...while a sizing hold — sized for the dead device — cancels
+        assert!(policy
+            .replan_batch_hold(t, &cluster, &db, &prompts, &[0, 1], 0, 4, now)
+            .is_none());
+        assert_eq!(t.name(), "device_failed");
+    }
+
+    #[test]
+    fn masked_route_arrival_avoids_down_devices() {
+        use crate::cluster::{HealthMask, HealthState};
+        let (cluster, prompts, db) = setup(12);
+        let policy = PlacementPolicy::spatial("carbon-aware", &cluster).unwrap();
+        let backlog = vec![0.0; cluster.devices.len()];
+        for p in &prompts {
+            // no mask == bit-for-bit the unmasked entry point
+            let bare = policy.route_arrival(p, &cluster, &db, 4, &backlog, p.arrival_s);
+            let unmasked = policy
+                .route_arrival_masked(p, &cluster, &db, 4, &backlog, p.arrival_s, None);
+            assert_eq!(bare, unmasked);
+            // masking the chosen device forces a different survivor
+            let mut mask = HealthMask::all_up(cluster.devices.len());
+            mask.set(bare, HealthState::Down);
+            let rerouted = policy.route_arrival_masked(
+                p,
+                &cluster,
+                &db,
+                4,
+                &backlog,
+                p.arrival_s,
+                Some(&mask),
+            );
+            assert_ne!(rerouted, bare);
+            assert!(rerouted < cluster.devices.len());
+        }
     }
 
     #[test]

@@ -25,7 +25,7 @@
 //! Every strategy is a pure function from (prompts, context) to a device
 //! assignment — property-tested for totality and bounds.
 
-use crate::cluster::Cluster;
+use crate::cluster::{Cluster, HealthMask};
 use crate::grid::{ForecastKind, Forecaster};
 use crate::telemetry::trace::CostCell;
 use crate::workload::Prompt;
@@ -80,6 +80,47 @@ pub struct OnlineView<'a> {
     pub now: f64,
     /// Grid context, when the plane plans against a forecast.
     pub grid: Option<&'a GridShiftConfig>,
+    /// Device health, when the plane tracks churn: Down devices are
+    /// excluded from placement, impaired ones pay the mask's penalty.
+    /// `None` (the default everywhere churn is off) routes bit-for-bit
+    /// identically to the pre-churn path.
+    pub health: Option<&'a HealthMask>,
+}
+
+impl OnlineView<'_> {
+    /// Wrap a per-device price with this view's health mask: Down
+    /// devices price to `f64::INFINITY` (never chosen while any device
+    /// is routable), impaired devices are multiplied by the mask's
+    /// degraded penalty, and Up devices price unchanged. Without a
+    /// mask the price passes through untouched — bit-for-bit the
+    /// pre-churn path. Callers shed *before* routing when no device is
+    /// routable ([`HealthMask::any_up`]); on an all-down mask the
+    /// argmin over all-infinite prices still totals (device 0 wins).
+    fn priced<'f>(
+        &'f self,
+        mut f: impl FnMut(usize) -> f64 + 'f,
+    ) -> impl FnMut(usize) -> f64 + 'f {
+        move |d| match self.health {
+            None => f(d),
+            Some(m) if m.is_down(d) => f64::INFINITY,
+            Some(m) => f(d) * m.penalty(d),
+        }
+    }
+}
+
+/// Post-route health check for fixed-placement strategies (all-on-*,
+/// round-robin) whose preferred device ignores load and health: if the
+/// mask marks the pick Down, fail over to the surviving device with
+/// the cheapest masked carbon price. No mask, or a pick that is not
+/// Down, returns the preferred device untouched.
+fn fail_over(preferred: usize, p: &Prompt, ctx: &RouteContext, view: &OnlineView) -> usize {
+    match view.health {
+        Some(m) if m.is_down(preferred) => argmin(
+            ctx.cluster.devices.len(),
+            view.priced(|d| ctx.cost(DeviceId(d), p).carbon_kg),
+        ),
+        _ => preferred,
+    }
 }
 
 /// A routing strategy: returns one device index per prompt.
@@ -92,10 +133,11 @@ pub trait Strategy: Send + Sync {
     /// [`super::policy::PlacementPolicy::route_arrival`]. The default
     /// applies the batch semantics to a one-prompt corpus, which is
     /// exact for per-prompt strategies; load- and forecast-aware
-    /// strategies override it.
+    /// strategies override it. All forms honour the view's health mask:
+    /// price-based strategies exclude Down devices in the argmin, fixed
+    /// strategies fail over post-hoc via [`fail_over`].
     fn route_one(&self, p: &Prompt, ctx: &RouteContext, view: &OnlineView) -> usize {
-        let _ = view;
-        self.assign(std::slice::from_ref(p), ctx)[0]
+        fail_over(self.assign(std::slice::from_ref(p), ctx)[0], p, ctx, view)
     }
 }
 
@@ -126,6 +168,13 @@ impl Strategy for CarbonAware {
             .iter()
             .map(|p| argmin(ctx.cluster.devices.len(), |d| ctx.cost(DeviceId(d), p).carbon_kg))
             .collect()
+    }
+    /// Online form: same carbon argmin, priced through the health mask.
+    fn route_one(&self, p: &Prompt, ctx: &RouteContext, view: &OnlineView) -> usize {
+        argmin(
+            ctx.cluster.devices.len(),
+            view.priced(|d| ctx.cost(DeviceId(d), p).carbon_kg),
+        )
     }
 }
 
@@ -168,9 +217,10 @@ impl Strategy for LatencyAware {
     /// prompt's estimated cost (the paper's greedy heuristic applied
     /// on arrival).
     fn route_one(&self, p: &Prompt, ctx: &RouteContext, view: &OnlineView) -> usize {
-        argmin(ctx.cluster.devices.len(), |d| {
-            view.backlog_s[d] + ctx.cost(DeviceId(d), p).e2e_s
-        })
+        argmin(
+            ctx.cluster.devices.len(),
+            view.priced(|d| view.backlog_s[d] + ctx.cost(DeviceId(d), p).e2e_s),
+        )
     }
 }
 
@@ -185,9 +235,10 @@ impl Strategy for RoundRobin {
         let n = ctx.cluster.devices.len();
         (0..prompts.len()).map(|i| i % n).collect()
     }
-    /// Online form: rotate on the prompt id (stable across planes).
-    fn route_one(&self, p: &Prompt, ctx: &RouteContext, _view: &OnlineView) -> usize {
-        (p.id as usize) % ctx.cluster.devices.len()
+    /// Online form: rotate on the prompt id (stable across planes),
+    /// failing over when the rotation lands on a Down device.
+    fn route_one(&self, p: &Prompt, ctx: &RouteContext, view: &OnlineView) -> usize {
+        fail_over((p.id as usize) % ctx.cluster.devices.len(), p, ctx, view)
     }
 }
 
@@ -215,6 +266,16 @@ impl Strategy for ComplexityAware {
                 }
             })
             .collect()
+    }
+    /// Online form: the same threshold split, priced through the
+    /// health mask.
+    fn route_one(&self, p: &Prompt, ctx: &RouteContext, view: &OnlineView) -> usize {
+        let n = ctx.cluster.devices.len();
+        if p.complexity < self.threshold {
+            argmin(n, view.priced(|d| ctx.cost(DeviceId(d), p).carbon_kg))
+        } else {
+            argmin(n, view.priced(|d| ctx.cost(DeviceId(d), p).e2e_s))
+        }
     }
 }
 
@@ -273,8 +334,11 @@ impl Strategy for CarbonCap {
     /// budget would overrun the cap by up to N×), so the online planes
     /// spend nothing and place carbon-minimally — the cap is honoured
     /// by construction.
-    fn route_one(&self, p: &Prompt, ctx: &RouteContext, _view: &OnlineView) -> usize {
-        argmin(ctx.cluster.devices.len(), |d| ctx.cost(DeviceId(d), p).carbon_kg)
+    fn route_one(&self, p: &Prompt, ctx: &RouteContext, view: &OnlineView) -> usize {
+        argmin(
+            ctx.cluster.devices.len(),
+            view.priced(|d| ctx.cost(DeviceId(d), p).carbon_kg),
+        )
     }
 }
 
@@ -360,7 +424,7 @@ impl Strategy for ForecastCarbonAware {
         let n = ctx.cluster.devices.len();
         let g = match view.grid {
             Some(g) => g,
-            None => return argmin(n, |d| ctx.cost(DeviceId(d), p).carbon_kg),
+            None => return argmin(n, view.priced(|d| ctx.cost(DeviceId(d), p).carbon_kg)),
         };
         let step_now = g.trace.step_of(view.now);
         let cap = g.horizon_steps.max(1);
@@ -375,12 +439,15 @@ impl Strategy for ForecastCarbonAware {
         let max_ahead =
             (0..n).map(|d| ahead_of(d, &ctx.cost(DeviceId(d), p))).max().unwrap_or(0);
         let (current, forecast) = g.forecast_at(step_now, max_ahead);
-        argmin(n, |d| {
-            let c = ctx.cost(DeviceId(d), p);
-            let ahead = ahead_of(d, &c);
-            let intensity = if ahead == 0 { current } else { forecast[ahead - 1] };
-            c.energy_kwh * intensity
-        })
+        argmin(
+            n,
+            view.priced(|d| {
+                let c = ctx.cost(DeviceId(d), p);
+                let ahead = ahead_of(d, &c);
+                let intensity = if ahead == 0 { current } else { forecast[ahead - 1] };
+                c.energy_kwh * intensity
+            }),
+        )
     }
 }
 
@@ -646,14 +713,14 @@ mod tests {
             let s = build(name, &cluster).unwrap();
             let batch = s.assign(&ps, &ctx);
             for (i, p) in ps.iter().enumerate() {
-                let view = OnlineView { backlog_s: &idle, now: 0.0, grid: None };
+                let view = OnlineView { backlog_s: &idle, now: 0.0, grid: None, health: None };
                 assert_eq!(s.route_one(p, &ctx, &view), batch[i], "{name} prompt {i}");
             }
         }
 
         // round-robin rotates on the id, not the (single-element) index
         let rr = build("round-robin", &cluster).unwrap();
-        let view = OnlineView { backlog_s: &idle, now: 0.0, grid: None };
+        let view = OnlineView { backlog_s: &idle, now: 0.0, grid: None, health: None };
         for p in &ps {
             assert_eq!(rr.route_one(p, &ctx, &view), (p.id as usize) % cluster.devices.len());
         }
@@ -663,14 +730,14 @@ mod tests {
         for target in 0..cluster.devices.len() {
             let mut backlog = vec![1e6; cluster.devices.len()];
             backlog[target] = 0.0;
-            let view = OnlineView { backlog_s: &backlog, now: 0.0, grid: None };
+            let view = OnlineView { backlog_s: &backlog, now: 0.0, grid: None, health: None };
             assert_eq!(la.route_one(&ps[0], &ctx, &view), target);
         }
 
         // forecast-carbon-aware without a grid degenerates to carbon
         let fca = build("forecast-carbon-aware", &cluster).unwrap();
         let ca = build("carbon-aware", &cluster).unwrap();
-        let view = OnlineView { backlog_s: &idle, now: 0.0, grid: None };
+        let view = OnlineView { backlog_s: &idle, now: 0.0, grid: None, health: None };
         for p in &ps {
             assert_eq!(fca.route_one(p, &ctx, &view), ca.route_one(p, &ctx, &view));
         }
@@ -697,8 +764,12 @@ mod tests {
         let fca = build("forecast-carbon-aware", &cluster).unwrap();
         let backlog = vec![120.0, 30.0];
         for p in &ps {
-            let view =
-                OnlineView { backlog_s: &backlog, now: 17.0 * 3600.0, grid: Some(&grid) };
+            let view = OnlineView {
+                backlog_s: &backlog,
+                now: 17.0 * 3600.0,
+                grid: Some(&grid),
+                health: None,
+            };
             let a = fca.route_one(p, &ctx, &view);
             let b = fca.route_one(p, &ctx, &view);
             assert_eq!(a, b);
@@ -724,14 +795,135 @@ mod tests {
             let a = fca.route_one(
                 p,
                 &ctx,
-                &OnlineView { backlog_s: &backlog, now, grid: Some(&cached) },
+                &OnlineView { backlog_s: &backlog, now, grid: Some(&cached), health: None },
             );
             let b = fca.route_one(
                 p,
                 &ctx,
-                &OnlineView { backlog_s: &backlog, now, grid: Some(&refit) },
+                &OnlineView { backlog_s: &backlog, now, grid: Some(&refit), health: None },
             );
             assert_eq!(a, b, "memoized routing diverged at prompt {k}, t={now}");
+        }
+    }
+
+    #[test]
+    fn health_mask_none_is_bitwise_neutral() {
+        // `health: None` must reproduce the pre-churn decisions exactly,
+        // for every strategy, on every prompt
+        use crate::cluster::HealthMask;
+        let (cluster, db) = setup();
+        let ps = prompts(30, 43);
+        let ctx = RouteContext { cluster: &cluster, db: &db, batch_size: 4 };
+        let backlog = vec![45.0, 250.0];
+        let all_up = HealthMask::all_up(cluster.devices.len());
+        let names = [
+            "all-on-jetson-orin-nx",
+            "carbon-aware",
+            "latency-aware",
+            "round-robin",
+            "complexity-aware",
+            "carbon-cap@1e-5",
+            "forecast-carbon-aware",
+        ];
+        for name in names {
+            let s = build(name, &cluster).unwrap();
+            for p in &ps {
+                let bare = OnlineView { backlog_s: &backlog, now: 0.0, grid: None, health: None };
+                let masked = OnlineView {
+                    backlog_s: &backlog,
+                    now: 0.0,
+                    grid: None,
+                    health: Some(&all_up),
+                };
+                assert_eq!(
+                    s.route_one(p, &ctx, &bare),
+                    s.route_one(p, &ctx, &masked),
+                    "{name}: all-up mask changed a decision"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn health_mask_excludes_down_devices() {
+        use crate::cluster::{HealthMask, HealthState};
+        let (cluster, db) = setup();
+        let ps = prompts(20, 47);
+        let ctx = RouteContext { cluster: &cluster, db: &db, batch_size: 4 };
+        let idle = vec![0.0; cluster.devices.len()];
+        let names = [
+            "all-on-jetson-orin-nx",
+            "carbon-aware",
+            "latency-aware",
+            "round-robin",
+            "complexity-aware",
+            "carbon-cap@1e-5",
+            "forecast-carbon-aware",
+        ];
+        for down in 0..cluster.devices.len() {
+            let mut mask = HealthMask::all_up(cluster.devices.len());
+            mask.set(down, HealthState::Down);
+            let view = OnlineView { backlog_s: &idle, now: 0.0, grid: None, health: Some(&mask) };
+            for name in names {
+                let s = build(name, &cluster).unwrap();
+                for p in &ps {
+                    let d = s.route_one(p, &ctx, &view);
+                    assert_ne!(d, down, "{name} routed to the Down device {down}");
+                    assert!(d < cluster.devices.len());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn health_mask_penalizes_degraded_devices() {
+        use crate::cluster::{HealthMask, HealthState};
+        let (cluster, db) = setup();
+        let ps = prompts(50, 53);
+        let ctx = RouteContext { cluster: &cluster, db: &db, batch_size: 4 };
+        let idle = vec![0.0; cluster.devices.len()];
+        // carbon-aware prefers the jetson (device 0); a huge degraded
+        // penalty on it must flip those decisions to the ada
+        let mut mask = HealthMask::all_up(cluster.devices.len()).with_degraded_penalty(1e9);
+        mask.set(0, HealthState::Degraded);
+        let view = OnlineView { backlog_s: &idle, now: 0.0, grid: None, health: Some(&mask) };
+        let s = CarbonAware;
+        for p in &ps {
+            assert_eq!(s.route_one(p, &ctx, &view), 1, "degraded penalty not applied");
+        }
+        // Recovering is penalized the same way
+        mask.set(0, HealthState::Recovering);
+        let view = OnlineView { backlog_s: &idle, now: 0.0, grid: None, health: Some(&mask) };
+        for p in &ps {
+            assert_eq!(s.route_one(p, &ctx, &view), 1);
+        }
+    }
+
+    #[test]
+    fn forecast_carbon_aware_fails_over_with_grid_context() {
+        // the key PR-8 scenario: the forecast-priced strategy must not
+        // collapse when its cleanest device goes Down mid-run
+        use crate::cluster::{CarbonModel, HealthMask, HealthState};
+        use crate::coordinator::policy::GridShiftConfig;
+        let (cluster, db) = setup();
+        let ps = prompts(20, 59);
+        let ctx = RouteContext { cluster: &cluster, db: &db, batch_size: 4 };
+        let grid = GridShiftConfig::new(
+            CarbonModel::diurnal(69.0, 0.3).to_trace(900.0),
+            ForecastKind::Harmonic,
+        );
+        let mut mask = HealthMask::all_up(cluster.devices.len());
+        mask.set(0, HealthState::Down); // the jetson: its usual winner
+        let backlog = vec![0.0; cluster.devices.len()];
+        let view = OnlineView {
+            backlog_s: &backlog,
+            now: 17.0 * 3600.0,
+            grid: Some(&grid),
+            health: Some(&mask),
+        };
+        let s = build("forecast-carbon-aware", &cluster).unwrap();
+        for p in &ps {
+            assert_eq!(s.route_one(p, &ctx, &view), 1);
         }
     }
 

@@ -23,6 +23,16 @@
 //! and therefore every makespan and routing decision, is identical to
 //! the pre-refactor pipeline.
 //!
+//! With a churn schedule ([`crate::simulator::ChurnSchedule`]) the
+//! executor also checks each batch's device at launch time: a device
+//! inside an outage window either holds the batch until the window
+//! ends or fails it over to the healthy device with the earliest
+//! estimated finish (ties prefer the planned device, then the lower
+//! index), with outages, failovers and the migrated routing share
+//! posted to the ledger and flight recorder. The closed loop never
+//! sheds work — outage windows end, so waiting is always an option.
+//! Without a schedule (the default) nothing changes, bit-for-bit.
+//!
 //! Execution modes (config::ExecutionMode), each mapping to an
 //! [`InferenceBackend`] (see `runtime::backend`):
 //! - **Calibrated** — no backend at all: output token counts come from
@@ -40,12 +50,12 @@
 //!   needed, so the full execution plumbing runs in CI.
 
 use anyhow::{anyhow, Result};
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 
 use crate::cluster::Cluster;
 use crate::config::{DeviceKind, ExecutionMode};
 use crate::runtime::{backend::no_batch_err, CalibratedBackend, InferenceBackend};
-use crate::simulator::{simulate_batch, BatchWork};
+use crate::simulator::{simulate_batch_with, BatchWork, ChurnSchedule, FailurePolicy};
 use crate::telemetry::trace::TraceEvent;
 use crate::telemetry::{EnergyLedger, MetricsAggregate, MetricsRegistry, RequestMetrics};
 use crate::util::rng::Rng;
@@ -71,6 +81,14 @@ pub struct RunConfig {
     /// cohorts, gated by [`super::batcher::can_join`] at the joined
     /// size. Off (default) executes the fixed-cohort plan, bit-for-bit.
     pub continuous_batching: bool,
+    /// Device outage windows, evaluated between batch starts at the
+    /// assigned device's free time. `None` (default) — and an empty
+    /// schedule — leave the run bit-for-bit the churn-free path.
+    pub churn: Option<ChurnSchedule>,
+    /// Retry budget and failure-probability clamp shared with the
+    /// other planes (the closed loop consumes only the clamp, via
+    /// the simulator's failure model).
+    pub failure: FailurePolicy,
 }
 
 impl Default for RunConfig {
@@ -82,6 +100,8 @@ impl Default for RunConfig {
             max_new_tokens: 96,
             stochastic_seed: None,
             continuous_batching: false,
+            churn: None,
+            failure: FailurePolicy::default(),
         }
     }
 }
@@ -141,6 +161,17 @@ pub fn run(
     if matches!(cfg.execution, ExecutionMode::Real | ExecutionMode::Hybrid) && backend.is_none() {
         return Err(anyhow!("execution mode {:?} needs an inference backend", cfg.execution));
     }
+    cfg.failure.validate()?;
+    // an empty schedule is the churn-free path, bit-for-bit
+    let churn = cfg.churn.as_ref().filter(|c| !c.is_empty());
+    if let Some(md) = churn.and_then(|c| c.max_device()) {
+        if md >= cluster.devices.len() {
+            return Err(anyhow!(
+                "churn schedule names device {md}, cluster has {} devices",
+                cluster.devices.len()
+            ));
+        }
+    }
     let stub = (cfg.execution == ExecutionMode::Stub && backend.is_none())
         .then(|| CalibratedBackend::from_cluster(cluster));
     if cfg.execution == ExecutionMode::Calibrated {
@@ -192,6 +223,9 @@ pub fn run(
     let mut batches = plan.batches.clone();
     let mut fills: Vec<usize> = Vec::with_capacity(batches.len());
     let mut batch_joins = 0usize;
+    // each outage window is posted (and traced) once, when the first
+    // batch collides with it; keyed by its end instant
+    let mut outages_seen: BTreeSet<(usize, u64)> = BTreeSet::new();
     for bi in 0..batches.len() {
         if batches[bi].members.is_empty() {
             continue; // fully absorbed into an earlier launch
@@ -262,7 +296,74 @@ pub fn run(
             .iter()
             .map(|&i| release_s[i])
             .fold(0.0f64, f64::max);
-        let start = busy[device_idx].max(ready);
+        let mut start = busy[device_idx].max(ready);
+        // device churn: a batch whose device sits inside an outage
+        // window at launch either waits the outage out or fails over
+        // to the healthy device with the earliest estimated finish
+        // (ties prefer the planned device, then the lower index)
+        let mut exec_device = device_idx;
+        if let Some(c) = churn {
+            if c.state_at(device_idx, start).is_down() {
+                let w = c
+                    .windows()
+                    .iter()
+                    .find(|w| w.device == device_idx && start >= w.start_s && start < w.end_s);
+                if let Some(w) = w {
+                    if outages_seen.insert((device_idx, w.end_s.to_bits())) {
+                        ledger.post_outage();
+                        if let Some(sink) = policy.trace_sink() {
+                            sink.emit(&TraceEvent::DeviceDown {
+                                t: w.start_s,
+                                device: dev.name.clone(),
+                            });
+                            sink.emit(&TraceEvent::DeviceUp {
+                                t: w.end_s,
+                                device: dev.name.clone(),
+                                state: "up".to_string(),
+                            });
+                        }
+                    }
+                }
+                // earliest instant a device could take this batch,
+                // skipping (possibly back-to-back) outage windows
+                let wait = |e: usize, mut t: f64| -> f64 {
+                    while c.state_at(e, t).is_down() {
+                        match c.down_until(e, t) {
+                            Some(end) => t = end,
+                            None => break,
+                        }
+                    }
+                    t
+                };
+                // estimated finish from the benchmark db — a ranking
+                // signal only; the winner's real timing is simulated
+                let est = |e: usize, t: f64| -> f64 {
+                    let d = &cluster.devices[e];
+                    let exec = batches[bi]
+                        .members
+                        .iter()
+                        .map(|&i| db.cost_id(DeviceId(e), d, &prompts[i], cfg.batch_size).e2e_s)
+                        .fold(0.0f64, f64::max);
+                    t + exec
+                };
+                let mut best_t = wait(device_idx, start);
+                let mut best_f = est(device_idx, best_t);
+                for e in 0..cluster.devices.len() {
+                    if e == device_idx {
+                        continue;
+                    }
+                    let t_e = wait(e, busy[e].max(ready));
+                    let f_e = est(e, t_e);
+                    if f_e + 1e-12 < best_f {
+                        best_f = f_e;
+                        best_t = t_e;
+                        exec_device = e;
+                    }
+                }
+                start = best_t;
+            }
+        }
+        let dev = &cluster.devices[exec_device];
         // continuous batching: a partial batch absorbs already-released
         // members of later same-device cohorts at launch, gated by the
         // formation memory guard at the joined size. Absorption cannot
@@ -293,7 +394,26 @@ pub fn run(
             }
             batch_joins += joined.len();
         }
-        let batch = Batch { device: device_idx, members };
+        // a migrated batch executes (and is accounted) on the surviving
+        // device: routing share follows the work, and every member's
+        // move lands in the flight recorder
+        if exec_device != device_idx {
+            let n = members.len();
+            *device_share.get_mut(&cluster.devices[device_idx].name).unwrap() -= n;
+            *device_share.get_mut(&dev.name).unwrap() += n;
+            ledger.post_failover(n as u64);
+            if let Some(sink) = policy.trace_sink() {
+                for &i in &members {
+                    sink.emit(&TraceEvent::Failover {
+                        t: start,
+                        prompt: prompts[i].id,
+                        from: cluster.devices[device_idx].name.clone(),
+                        to: dev.name.clone(),
+                    });
+                }
+            }
+        }
+        let batch = Batch { device: exec_device, members };
         let (work, generated) = batch_work(dev, &batch, prompts, cfg, backend)?;
 
         if let Some(texts) = generated {
@@ -309,7 +429,7 @@ pub fn run(
             }
         }
 
-        let timing = simulate_batch(dev, &work, rng.as_mut());
+        let timing = simulate_batch_with(dev, &work, rng.as_mut(), &cfg.failure);
         let b = batch.members.len();
         if let Some(sink) = policy.trace_sink() {
             sink.emit(&TraceEvent::BatchLaunch {
@@ -417,6 +537,13 @@ pub fn run(
     }
     for &f in &fills {
         registry.observe("batch_fill", f as f64);
+    }
+    // failure counters exist only on churn runs, so the churn-off
+    // registry stays identical to the pre-churn executor
+    if churn.is_some() {
+        let f = ledger.failure_stats();
+        registry.add("outages_total", f.outages);
+        registry.add("failovers_total", f.failovers);
     }
     registry.record_ledger(&ledger);
 
@@ -803,5 +930,110 @@ mod tests {
         let off = run(&cluster, &prompts, &s(), &db, &RunConfig::default(), None).unwrap();
         assert_eq!(off.batch_joins, 0);
         assert_eq!(off.metrics.len(), 96);
+    }
+
+    #[test]
+    fn closed_loop_empty_churn_schedule_is_bitwise_the_churn_free_path() {
+        let (cluster, prompts, db) = setup(40);
+        let s = policy("latency-aware", &cluster);
+        let a = run(&cluster, &prompts, &s, &db, &RunConfig::default(), None).unwrap();
+        let cfg = RunConfig { churn: Some(ChurnSchedule::default()), ..RunConfig::default() };
+        let b = run(&cluster, &prompts, &s, &db, &cfg, None).unwrap();
+        assert_eq!(a.makespan_s.to_bits(), b.makespan_s.to_bits());
+        assert_eq!(a.total_carbon_kg.to_bits(), b.total_carbon_kg.to_bits());
+        assert_eq!(a.device_share, b.device_share);
+        // the empty schedule never registers failure counters
+        assert_eq!(b.registry.counter("outages_total"), 0);
+        assert_eq!(b.registry.counter("failovers_total"), 0);
+        assert_eq!(b.ledger.failure_stats().outages, 0);
+    }
+
+    #[test]
+    fn closed_loop_churn_naming_a_missing_device_fails_loudly() {
+        let (cluster, prompts, db) = setup(4);
+        let s = policy("latency-aware", &cluster);
+        let churn = ChurnSchedule::scripted(vec![crate::simulator::OutageWindow {
+            device: 99,
+            start_s: 0.0,
+            end_s: 10.0,
+        }])
+        .unwrap();
+        let cfg = RunConfig { churn: Some(churn), ..RunConfig::default() };
+        let err = run(&cluster, &prompts, &s, &db, &cfg, None).unwrap_err();
+        assert!(err.to_string().contains("churn schedule names device 99"), "{err}");
+    }
+
+    #[test]
+    fn closed_loop_outage_fails_whole_batches_over_to_the_survivor() {
+        // all-on-jetson with jetson down for the entire run: every
+        // batch must migrate to the ada and the run must land exactly
+        // where an all-on-ada plan would have
+        let (cluster, prompts, db) = setup(24);
+        let j = cluster.devices.iter().position(|d| d.name == "jetson-orin-nx").unwrap();
+        let churn = ChurnSchedule::scripted(vec![crate::simulator::OutageWindow {
+            device: j,
+            start_s: 0.0,
+            end_s: 1e9,
+        }])
+        .unwrap();
+        let sink = std::sync::Arc::new(crate::telemetry::trace::TraceSink::memory());
+        let s = policy("all-on-jetson-orin-nx", &cluster)
+            .with_trace(std::sync::Arc::clone(&sink));
+        let cfg = RunConfig { churn: Some(churn), ..RunConfig::default() };
+        let r = run(&cluster, &prompts, &s, &db, &cfg, None).unwrap();
+        assert_eq!(r.metrics.len(), 24, "failover lost a prompt");
+        assert_eq!(r.share("jetson-orin-nx"), 0.0, "share must follow the migrated work");
+        assert!((r.share("ada-2000") - 1.0).abs() < 1e-12);
+        let f = r.ledger.failure_stats();
+        assert_eq!(f.failovers, 24);
+        assert_eq!(f.outages, 1, "one window, posted once");
+        assert_eq!(r.registry.counter("failovers_total"), 24);
+        // the flight recorder saw the outage and every member's move
+        let text = sink.contents();
+        let count = |ev: &str| {
+            text.lines().filter(|l| l.contains(&format!("\"ev\":\"{ev}\""))).count()
+        };
+        assert_eq!(count("device_down"), 1);
+        assert_eq!(count("device_up"), 1);
+        assert_eq!(count("failover"), 24);
+        // migrated execution is the all-on-ada run, and deterministic
+        let ada = run(
+            &cluster,
+            &prompts,
+            &policy("all-on-ada-2000", &cluster),
+            &db,
+            &RunConfig::default(),
+            None,
+        )
+        .unwrap();
+        assert!((r.makespan_s - ada.makespan_s).abs() < 1e-9);
+        let cfg2 = RunConfig { churn: cfg.churn.clone(), ..RunConfig::default() };
+        let s2 = policy("all-on-jetson-orin-nx", &cluster);
+        let r2 = run(&cluster, &prompts, &s2, &db, &cfg2, None).unwrap();
+        assert_eq!(r.makespan_s.to_bits(), r2.makespan_s.to_bits());
+        assert_eq!(r.total_carbon_kg.to_bits(), r2.total_carbon_kg.to_bits());
+    }
+
+    #[test]
+    fn closed_loop_waits_out_a_cluster_wide_outage() {
+        // with every device down there is nowhere to fail over to: the
+        // executor waits the windows out and the whole schedule shifts
+        let (cluster, prompts, db) = setup(16);
+        let s = policy("all-on-ada-2000", &cluster);
+        let base = run(&cluster, &prompts, &s, &db, &RunConfig::default(), None).unwrap();
+        let windows: Vec<crate::simulator::OutageWindow> = (0..cluster.devices.len())
+            .map(|d| crate::simulator::OutageWindow { device: d, start_s: 0.0, end_s: 120.0 })
+            .collect();
+        let cfg = RunConfig {
+            churn: Some(ChurnSchedule::scripted(windows).unwrap()),
+            ..RunConfig::default()
+        };
+        let r = run(&cluster, &prompts, &s, &db, &cfg, None).unwrap();
+        assert_eq!(r.metrics.len(), 16);
+        // the slower jetson never beats waiting for the ada, so no
+        // batch migrates — the run is the baseline delayed by 120 s
+        assert_eq!(r.ledger.failure_stats().failovers, 0);
+        assert_eq!(r.ledger.failure_stats().outages, 1, "only the hosting device's window");
+        assert!((r.makespan_s - (base.makespan_s + 120.0)).abs() < 1e-9, "{}", r.makespan_s);
     }
 }

@@ -48,6 +48,11 @@ pub enum ReplanTrigger {
     /// fresh (trusted) fit; holds may move earlier or later, never past
     /// the SLO deadline bound.
     Cadence,
+    /// A device went Down: held/deferred work planned onto it must
+    /// migrate to a surviving device (re-planned against the current
+    /// fit, never past the SLO deadline bound) or be shed. Emitted by
+    /// the churn subsystem, not by the drift tracker.
+    DeviceFailed,
 }
 
 impl ReplanTrigger {
@@ -56,6 +61,7 @@ impl ReplanTrigger {
         match self {
             ReplanTrigger::Drift => "drift",
             ReplanTrigger::Cadence => "cadence",
+            ReplanTrigger::DeviceFailed => "device_failed",
         }
     }
 }

@@ -160,6 +160,56 @@
 //!   100k row's decisions/sec flat-or-better (rows the baseline
 //!   predates warn instead of failing until the baseline is re-armed).
 //!
+//! ## Fault tolerance & graceful degradation
+//!
+//! The paper's edge devices are fragile (batch-8 memory saturation),
+//! so no plane may assume a perfectly available cluster. Availability
+//! is modelled once and threaded through all three planes:
+//!
+//! - **health state** — [`cluster::HealthMask`] tracks each device
+//!   through Up → Degraded → Down → Recovering
+//!   ([`cluster::HealthState`]); routing reads the mask on every
+//!   decision: Down devices are excluded outright (price-based
+//!   strategies see an infinite cost, fixed strategies fail over to
+//!   the cheapest survivor), Degraded and Recovering devices carry a
+//!   multiplicative cost penalty;
+//! - **churn schedules** — [`simulator::ChurnSchedule`] drives the
+//!   mask: *scripted* outage windows (`[serving.churn] outages =
+//!   ["device:start_s:end_s"]`, CLI `--churn-outage`) for
+//!   deterministic tests and bench replay, or a seeded *stochastic*
+//!   MTBF/MTTR model (`mtbf_s`/`mttr_s`) for flaky-cluster scenarios;
+//! - **per-plane failover** — the DES kills in-flight batches on a
+//!   dying device (partial work's energy is charged to the ledger's
+//!   lost-work line), drains its queue and re-homes both onto
+//!   survivors under a bounded retry budget
+//!   ([`simulator::FailurePolicy`], `[serving.failure]`
+//!   `max_attempts`, CLI `--max-attempts`); work that exhausts the
+//!   budget or finds no survivor is **shed and counted, never lost**
+//!   (`completed + shed == corpus`, property-pinned under randomized
+//!   churn). The closed loop evaluates churn between batch starts and
+//!   waits or migrates — it never sheds, a window always ends. The
+//!   wallclock server runs a health-checker thread over per-worker
+//!   heartbeats: a scripted outage or a dead worker (fault injection
+//!   via `ServeOptions::fail_device_after_batches`, heartbeat timeout
+//!   otherwise) marks the device Down, drains its queue into
+//!   survivors, and `serve()` still terminates with every prompt
+//!   completed, errored or shed;
+//! - **accounting** — [`telemetry::FailureStats`] on the ledger
+//!   (outages, failovers, requeues, shed, lost-work energy/carbon),
+//!   `device_down`/`device_up`/`failover`/`shed` flight-recorder
+//!   events, and `verdant bench churn`: strategies × availability
+//!   scenarios, where failover keeps shed below the no-failover
+//!   baseline and `forecast-carbon-aware` must not collapse when its
+//!   cleanest device is the one that fails. The CI `churn-smoke` job
+//!   pushes a scripted outage through the DES and the stub server and
+//!   asserts failover fired with zero prompts lost.
+//!
+//! With no churn configured and no fault injection, none of this
+//! machinery exists at runtime: no checker thread spawns, routing's
+//! health mask is `None` (a single `Option` check per price), and all
+//! three planes make bit-for-bit the pre-churn decisions (pinned in
+//! `tests/planes.rs`).
+//!
 //! ## Observability: decision flight recorder + metrics registry
 //!
 //! Every scheduling decision any plane makes can be recorded as one

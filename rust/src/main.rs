@@ -28,7 +28,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use verdant::bench::{
-    ablation, fig1, fig2, harness, load, scale, shifting, sweep, table2, table3, Env,
+    ablation, churn, fig1, fig2, harness, load, scale, shifting, sweep, table2, table3, Env,
 };
 use verdant::cluster::Cluster;
 use verdant::config::{ExecutionMode, ExperimentConfig};
@@ -165,6 +165,14 @@ fn load_config(flags: &Flags) -> anyhow::Result<ExperimentConfig> {
     if flags.has("continuous-batching") {
         cfg.serving.continuous_batching = true;
     }
+    if let Some(n) = flags.get("max-attempts") {
+        cfg.serving.failure.max_attempts = n.parse()?;
+    }
+    if let Some(spec) = flags.get("churn-outage") {
+        // one scripted window on top of the config's list (repeat via
+        // the [serving.churn] outages table for multi-window scripts)
+        cfg.serving.churn.outages.push(spec.to_string());
+    }
     cfg.validate()?;
     Ok(cfg)
 }
@@ -244,7 +252,7 @@ fn dispatch(args: &[String]) -> anyhow::Result<()> {
 fn print_usage() {
     println!(
         "verdant {} — sustainability-aware LLM inference on edge clusters\n\n\
-         USAGE:\n  verdant bench <fig1|fig2|table2|table3|sweep|ablation|load|shifting|scale|all> [--prompts N] [--save dir] [--json dir] [--extensions]\n  \
+         USAGE:\n  verdant bench <fig1|fig2|table2|table3|sweep|ablation|load|shifting|scale|churn|all> [--prompts N] [--save dir] [--json dir] [--extensions]\n  \
          verdant run   [--strategy S] [--batch B] [--prompts N] [--execution real|calibrated|hybrid|stub]\n  \
          verdant serve [--prompts N] [--batch B] [--strategy S] [--timeout-ms T] [--max-new N]\n          \
          [--execution real|hybrid|stub]  (stub: deterministic no-PJRT backend, runs anywhere)\n  \
@@ -277,7 +285,14 @@ fn print_usage() {
          default — off is bit-for-bit the fixed-batch behaviour); run --plane des\n\
          --shards N shards the DES accounting pipeline across N worker threads\n\
          (decisions stay bit-for-bit identical at any shard count); bench scale\n\
-         --max-prompts N caps the largest scale corpus (default sweep ends at 1M).",
+         --max-prompts N caps the largest scale corpus (default sweep ends at 1M).\n\
+         Availability (run+serve): --churn-outage d:start:end scripts one outage\n\
+         window on device index d ([serving.churn] scripts many, or a stochastic\n\
+         mtbf_s/mttr_s model); --max-attempts N caps re-dispatches per prompt\n\
+         before it is shed ([serving.failure]); with no churn configured every\n\
+         plane is bit-for-bit the churn-free behaviour; bench churn compares\n\
+         strategies across availability scenarios (always-up, cleanest-device\n\
+         outage with and without failover, stochastic flaky).",
         verdant::VERSION
     );
 }
@@ -334,6 +349,11 @@ fn cmd_bench(which: &str, flags: &Flags) -> anyhow::Result<()> {
         emit(shifting::scores(&env).1)?;
         emit(shifting::drift(&env).1)?;
         emit(shifting::blend_curves(&env).1)?;
+    }
+    // not part of `all`: availability is an extension axis, not a
+    // paper artefact — strategies × outage scenarios through the DES
+    if which == "churn" {
+        emit(churn::run(&env).1)?;
     }
     // not part of `all`: sweeps its own 1k..1M corpora and exists to
     // time the hot path, not to reproduce a paper artefact
@@ -412,6 +432,8 @@ fn cmd_run(flags: &Flags) -> anyhow::Result<()> {
         max_new_tokens: cfg.serving.max_new_tokens,
         stochastic_seed: flags.get("stochastic").map(|s| s.parse()).transpose()?,
         continuous_batching: cfg.serving.continuous_batching,
+        churn: cfg.serving.churn.to_schedule(cluster.devices.len())?,
+        failure: cfg.serving.failure,
     };
 
     let backend = build_backend(&cfg, &cluster)?;
@@ -435,6 +457,13 @@ fn cmd_run(flags: &Flags) -> anyhow::Result<()> {
             "  saved vs run-at-arrival: {} kgCO2e ({})",
             fmt::sci(r.ledger.realized_savings_kg()),
             fmt::signed_pct(r.ledger.savings_frac())
+        );
+    }
+    let fs = r.ledger.failure_stats();
+    if fs.outages > 0 || fs.failovers > 0 {
+        println!(
+            "  churn:                  {} outages, {} batch failovers",
+            fs.outages, fs.failovers
         );
     }
     let rp = r.ledger.replan_stats();
@@ -489,6 +518,8 @@ fn run_des_plane(
         trace: sink.clone(),
         shards,
         continuous_batching: cfg.serving.continuous_batching,
+        churn: cfg.serving.churn.to_schedule(cluster.devices.len())?,
+        failure: cfg.serving.failure,
         ..OnlineConfig::default()
     };
     let r = run_online(cluster, prompts, db, &online)?;
@@ -499,6 +530,13 @@ fn run_des_plane(
     println!("  total carbon:           {} kgCO2e", fmt::sci(r.ledger.total_carbon_kg()));
     if r.deferred > 0 {
         println!("  deferred (SLO shift):   {} prompts", r.deferred);
+    }
+    let fs = r.ledger.failure_stats();
+    if fs.outages > 0 || fs.failovers > 0 || fs.shed > 0 {
+        println!(
+            "  churn:                  {} outages, {} failovers, {} requeued, {} shed",
+            fs.outages, fs.failovers, fs.requeues, fs.shed
+        );
     }
     dump_metrics(cfg, &r.metrics)?;
     if let Some(s) = &sink {
@@ -592,6 +630,9 @@ fn cmd_serve(flags: &Flags) -> anyhow::Result<()> {
         trace: sink.clone(),
         spot_check_every_n: cfg.serving.spot_check_every_n,
         continuous_batching: cfg.serving.continuous_batching,
+        churn: cfg.serving.churn.to_schedule(cluster.devices.len())?,
+        failure: cfg.serving.failure,
+        ..ServeOptions::default()
     };
     println!(
         "serving {} prompts through the {} backend ({} workers, batch {}, strategy {}) ...",
@@ -633,6 +674,18 @@ fn cmd_serve(flags: &Flags) -> anyhow::Result<()> {
             "  replans:          {} passes ({} released early, {} extended)",
             report.replans, report.replan_released_early, report.replan_extended
         );
+    }
+    if report.outages > 0 || report.failovers > 0 || report.shed > 0 {
+        println!(
+            "  churn:            {} outages, {} failovers, {} shed",
+            report.outages, report.failovers, report.shed
+        );
+    }
+    if !report.errors.is_empty() {
+        println!("  worker errors:    {}", report.errors.len());
+        for e in &report.errors {
+            println!("    - {e}");
+        }
     }
     for (dev, count) in &report.per_device {
         println!("  {dev}: {count} requests");

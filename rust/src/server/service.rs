@@ -69,14 +69,32 @@
 //! planes — including the sizing account
 //! ([`ServeReport::sizing_holds`] / [`ServeReport::sizing_carbon_saved_kg`],
 //! via [`EnergyLedger::post_sizing_hold`], matching the DES).
+//!
+//! **Device churn & failover**: with a [`ChurnSchedule`] (virtual-time
+//! outage windows) or the fault-injection hook
+//! ([`ServeOptions::fail_device_after_batches`]) a health-checker
+//! thread watches per-worker heartbeats and the schedule. A Down
+//! device's queue is drained and re-homed onto surviving devices
+//! (each item's moves bounded by [`FailurePolicy::max_attempts`]),
+//! arrivals route around the health mask through the shared policy
+//! core, and when no survivor remains the work is shed — counted and
+//! audited as `shed` trace events, never silently lost. A worker
+//! thread that dies (panic, backend error, or injected fault) stops
+//! heartbeating and its device is treated as Down from then on.
+//! In-flight batches on a failing device run to completion — the
+//! wallclock plane cannot un-burn energy — and `serve` always
+//! terminates with every routed prompt completed, shed, or attributed
+//! to a worker error ([`ServeReport::errors`]). With neither knob set
+//! none of this machinery exists at runtime: no checker thread spawns
+//! and serving behaves exactly like the churn-free plane.
 
 use anyhow::{anyhow, Result};
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-use crate::cluster::Cluster;
+use crate::cluster::{Cluster, HealthMask, HealthState};
 use crate::config::ExecutionMode;
 use crate::coordinator::can_join_prompts;
 use crate::coordinator::estimator::BenchmarkDb;
@@ -84,6 +102,7 @@ use crate::coordinator::policy::{
     plan_batch_hold_with, replan_batch_hold_with, sizing_hold_saving_kg, GridShiftConfig,
     PlacementPolicy,
 };
+use crate::simulator::{ChurnSchedule, FailurePolicy};
 use crate::runtime::{
     backend::no_batch_err, CalibratedBackend, HybridBackend, InferenceBackend, PjrtBackend,
 };
@@ -139,6 +158,20 @@ pub struct ServeOptions {
     /// ([`crate::coordinator::can_join_prompts`]). Off (default)
     /// keeps the fixed pull-then-execute batches.
     pub continuous_batching: bool,
+    /// Scripted device outage windows in *virtual* seconds (the same
+    /// clock the arrival trace replays on). `None` (default) — and an
+    /// empty schedule — spawn no health checker at all.
+    pub churn: Option<ChurnSchedule>,
+    /// Retry budget for re-homed queue items and the failure-model
+    /// clamp shared with the other planes.
+    pub failure: FailurePolicy,
+    /// Fault injection: worker `(device, n)` deliberately dies (stops
+    /// heartbeating and exits with an error) after completing `n`
+    /// batches — the chaos hook the churn CI smoke drives.
+    pub fail_device_after_batches: Option<(usize, usize)>,
+    /// How long a silent worker heartbeat means "dead" to the health
+    /// checker. Only consulted when churn or fault injection is on.
+    pub heartbeat_timeout: Duration,
 }
 
 impl Default for ServeOptions {
@@ -156,6 +189,10 @@ impl Default for ServeOptions {
             trace: None,
             spot_check_every_n: 0,
             continuous_batching: false,
+            churn: None,
+            failure: FailurePolicy::default(),
+            fail_device_after_batches: None,
+            heartbeat_timeout: Duration::from_secs(2),
         }
     }
 }
@@ -223,6 +260,19 @@ pub struct ServeReport {
     /// the serve JSON report can carry the same per-device accounting
     /// as the other planes.
     pub device_accounts: Vec<(String, f64, f64, f64)>,
+    /// Device-down transitions the health checker observed (0 without
+    /// churn or fault injection).
+    pub outages: usize,
+    /// Queue items re-homed off a Down device onto a survivor.
+    pub failovers: usize,
+    /// Prompts shed because no surviving device could take them (or
+    /// their retry budget ran out) — counted, never silently lost.
+    pub shed: usize,
+    /// Ids of the shed prompts, sorted.
+    pub shed_ids: Vec<u64>,
+    /// Worker-thread failures (panics, backend errors, injected
+    /// faults), surfaced instead of aborting the whole serve.
+    pub errors: Vec<String>,
     /// End-of-run metrics snapshot (see
     /// [`crate::telemetry::registry`] for the series names).
     pub metrics: MetricsRegistry,
@@ -235,6 +285,9 @@ struct QueueItem {
     /// when a worker pulls it, so `backlog_ms` tracks *queued* work
     /// (matching the DES plane's backlog semantics).
     est_ms: usize,
+    /// Times this item was re-homed off a Down device (bounded by
+    /// [`FailurePolicy::max_attempts`]).
+    attempts: u32,
 }
 
 /// A per-device work queue with condvar signalling.
@@ -264,12 +317,29 @@ impl DeviceQueue {
         self.backlog_ms.load(Ordering::Relaxed) as f64 / 1000.0
     }
 
+    /// Number of items currently queued (the churn settle barrier).
+    fn queued(&self) -> usize {
+        self.items.lock().unwrap().len()
+    }
+
     /// Pull up to `max` items: returns once `max` are available OR the
     /// timeout elapses with at least one item (dynamic batching rule).
-    fn pull_batch(&self, max: usize, timeout: Duration, done: &AtomicBool) -> Vec<QueueItem> {
+    /// `hb` (when given) is bumped every wait iteration so a worker
+    /// blocked on an empty queue never looks dead to the health
+    /// checker.
+    fn pull_batch(
+        &self,
+        max: usize,
+        timeout: Duration,
+        done: &AtomicBool,
+        hb: Option<&AtomicU64>,
+    ) -> Vec<QueueItem> {
         let mut guard = self.items.lock().unwrap();
         let deadline = Instant::now() + timeout;
         loop {
+            if let Some(h) = hb {
+                h.fetch_add(1, Ordering::Relaxed);
+            }
             if guard.len() >= max {
                 break;
             }
@@ -348,6 +418,52 @@ struct BatchAudit {
     replan_extended: u32,
 }
 
+/// Failure accounting shared between the health checker, the ingest
+/// thread and the collector.
+#[derive(Default)]
+struct FailShared {
+    outages: AtomicUsize,
+    failovers: AtomicUsize,
+    shed: AtomicUsize,
+    /// True while the checker holds drained items it has not yet
+    /// re-homed — the settle barrier must not declare the queues empty
+    /// in that window.
+    rehoming: AtomicBool,
+    shed_ids: Mutex<Vec<u64>>,
+}
+
+/// Zeroing a worker's heartbeat to the sentinel on drop means death —
+/// panic, backend error or injected fault — is detected immediately,
+/// not after the staleness timeout.
+const HEARTBEAT_DEAD: u64 = u64::MAX;
+
+struct HeartbeatGuard {
+    hb: Arc<Vec<AtomicU64>>,
+    d: usize,
+}
+
+impl Drop for HeartbeatGuard {
+    fn drop(&mut self) {
+        self.hb[self.d].store(HEARTBEAT_DEAD, Ordering::Release);
+    }
+}
+
+/// Snapshot the live health codes into the policy core's mask (None
+/// when churn is off, which keeps routing bit-for-bit the unmasked
+/// path). Codes: 0 = Up, 1 = Degraded, 2 = Down.
+fn mask_of(health: Option<&Arc<Vec<AtomicUsize>>>) -> Option<HealthMask> {
+    let h = health?;
+    let mut m = HealthMask::all_up(h.len());
+    for (d, s) in h.iter().enumerate() {
+        match s.load(Ordering::Acquire) {
+            2 => m.set(d, HealthState::Down),
+            1 => m.set(d, HealthState::Degraded),
+            _ => {}
+        }
+    }
+    Some(m)
+}
+
 struct Completion {
     device: usize,
     latency_s: f64,
@@ -387,6 +503,28 @@ pub fn serve(cluster: &Cluster, prompts: &[Prompt], opts: &ServeOptions) -> Resu
              serve needs a token-producing backend (real|hybrid|stub)"
         ));
     }
+    opts.failure.validate()?;
+    // an empty schedule is the churn-free path: no checker thread
+    let churn = opts.churn.as_ref().filter(|c| !c.is_empty());
+    if let Some(md) = churn.and_then(|c| c.max_device()) {
+        if md >= n_dev {
+            return Err(anyhow!("churn schedule names device {md}, cluster has {n_dev} devices"));
+        }
+    }
+    if let Some((fd, _)) = opts.fail_device_after_batches {
+        if fd >= n_dev {
+            return Err(anyhow!("fault injection names device {fd}, cluster has {n_dev} devices"));
+        }
+    }
+    let churn_enabled = churn.is_some() || opts.fail_device_after_batches.is_some();
+    // health codes per device (0 Up / 1 Degraded / 2 Down), written by
+    // the checker, read by ingest routing and the workers; absent when
+    // churn is off so the default path carries no mask at all
+    let health: Option<Arc<Vec<AtomicUsize>>> =
+        churn_enabled.then(|| Arc::new((0..n_dev).map(|_| AtomicUsize::new(0)).collect()));
+    let heartbeats: Arc<Vec<AtomicU64>> =
+        Arc::new((0..n_dev).map(|_| AtomicU64::new(0)).collect());
+    let fail = Arc::new(FailShared::default());
     // resolve the strategy BEFORE spawning anything: an unknown name
     // must fail loudly here, exactly as it does in `run` and `bench`
     // (the policy stays on the ingest thread; workers get cold clones
@@ -429,7 +567,14 @@ pub fn serve(cluster: &Cluster, prompts: &[Prompt], opts: &ServeOptions) -> Resu
         let db = Arc::clone(&db);
         let tx = tx.clone();
         let opts = opts.clone();
+        let hb = Arc::clone(&heartbeats);
+        let worker_health = health.clone();
+        let worker_churn = opts.churn.clone().unwrap_or_default();
         workers.push(std::thread::spawn(move || -> Result<()> {
+            // however this thread exits — clean return, backend error,
+            // injected fault or panic — the sentinel tells the health
+            // checker the device is gone
+            let _pulse = HeartbeatGuard { hb: Arc::clone(&hb), d };
             let backend: Box<dyn InferenceBackend> = match opts.execution {
                 ExecutionMode::Real => {
                     Box::new(PjrtBackend::load(&opts.artifacts_dir, &[dev.model.as_str()])?)
@@ -443,9 +588,44 @@ pub fn serve(cluster: &Cluster, prompts: &[Prompt], opts: &ServeOptions) -> Resu
                     Box::new(CalibratedBackend::from_cluster(&cluster))
                 }
             };
+            let mut batches_done = 0usize;
             loop {
-                let mut items =
-                    queues[d].pull_batch(opts.batch_size, opts.batch_timeout, &done);
+                hb[d].fetch_add(1, Ordering::Relaxed);
+                // a scripted outage idles this worker: its queue is the
+                // health checker's to drain, and new work routes around
+                // the mask. Keep heartbeating — down is not dead. The
+                // worker consults the schedule directly too, so a
+                // scripted-Down device never pulls work even in the
+                // instants before the checker's first tick.
+                let scripted_down = !worker_churn.is_empty() && {
+                    let vnow = started.elapsed().as_secs_f64() * opts.time_scale;
+                    worker_churn.state_at(d, vnow).is_down()
+                };
+                if scripted_down
+                    || worker_health.as_ref().is_some_and(|h| h[d].load(Ordering::Acquire) == 2)
+                {
+                    if done.load(Ordering::Acquire) && queues[d].queued() == 0 {
+                        return Ok(());
+                    }
+                    std::thread::sleep(Duration::from_millis(2));
+                    continue;
+                }
+                // the chaos hook: die *between* batches, so no pulled
+                // item is ever lost to the injected fault
+                if let Some((fd, after)) = opts.fail_device_after_batches {
+                    if fd == d && batches_done >= after {
+                        return Err(anyhow!(
+                            "injected fault: worker {} stopped after {after} batches",
+                            dev.name
+                        ));
+                    }
+                }
+                let mut items = queues[d].pull_batch(
+                    opts.batch_size,
+                    opts.batch_timeout,
+                    &done,
+                    Some(&hb[d]),
+                );
                 if items.is_empty() {
                     return Ok(());
                 }
@@ -462,6 +642,7 @@ pub fn serve(cluster: &Cluster, prompts: &[Prompt], opts: &ServeOptions) -> Resu
                     &opts,
                     started,
                     worker_trace.as_deref(),
+                    Some(&hb[d]),
                 );
                 // continuous batching: a partial batch absorbs compatible
                 // late arrivals — one non-blocking pass before the decode,
@@ -493,6 +674,7 @@ pub fn serve(cluster: &Cluster, prompts: &[Prompt], opts: &ServeOptions) -> Resu
                                 .checked_duration_since(Instant::now())
                                 .filter(|r| !r.is_zero())
                             {
+                                hb[d].fetch_add(1, Ordering::Relaxed);
                                 if items.len() >= opts.batch_size {
                                     std::thread::sleep(rem);
                                     break;
@@ -523,6 +705,7 @@ pub fn serve(cluster: &Cluster, prompts: &[Prompt], opts: &ServeOptions) -> Resu
                     .ok_or_else(|| no_batch_err(backend.as_ref(), &dev.model, texts.len()))?;
                 let out =
                     backend.generate(&dev.model, exec_batch, &texts, opts.max_new_tokens)?;
+                batches_done += 1;
                 let vfinish_s = started.elapsed().as_secs_f64() * opts.time_scale;
                 if let Some(sink) = worker_trace.as_deref() {
                     let batch_kwh: f64 = items
@@ -568,6 +751,111 @@ pub fn serve(cluster: &Cluster, prompts: &[Prompt], opts: &ServeOptions) -> Resu
     }
     drop(tx);
 
+    // --- health checker: heartbeats, outage windows, queue re-homing --
+    let stop = Arc::new(AtomicBool::new(false));
+    let checker = health.as_ref().map(|health| {
+        let health = Arc::clone(health);
+        let hb = Arc::clone(&heartbeats);
+        let queues = Arc::clone(&queues);
+        let stop = Arc::clone(&stop);
+        let fail = Arc::clone(&fail);
+        let sink = policy.trace_sink().cloned();
+        let schedule = opts.churn.clone().unwrap_or_default();
+        let names: Vec<String> = cluster.devices.iter().map(|d| d.name.clone()).collect();
+        let max_attempts = opts.failure.max_attempts as u32;
+        let timeout = opts.heartbeat_timeout;
+        let time_scale = opts.time_scale;
+        std::thread::spawn(move || {
+            let n = names.len();
+            // (last heartbeat value, when it last changed)
+            let mut seen: Vec<(u64, Instant)> =
+                (0..n).map(|d| (hb[d].load(Ordering::Acquire), Instant::now())).collect();
+            while !stop.load(Ordering::Acquire) {
+                let vnow = started.elapsed().as_secs_f64() * time_scale;
+                for d in 0..n {
+                    let beat = hb[d].load(Ordering::Acquire);
+                    if beat != seen[d].0 && beat != HEARTBEAT_DEAD {
+                        seen[d] = (beat, Instant::now());
+                    }
+                    let dead = beat == HEARTBEAT_DEAD || seen[d].1.elapsed() > timeout;
+                    let state = if dead { HealthState::Down } else { schedule.state_at(d, vnow) };
+                    let code = if state.is_down() {
+                        2
+                    } else if state.is_impaired() {
+                        1
+                    } else {
+                        0
+                    };
+                    let prev = health[d].swap(code, Ordering::AcqRel);
+                    if code == 2 && prev != 2 {
+                        fail.outages.fetch_add(1, Ordering::Relaxed);
+                        if let Some(s) = sink.as_deref() {
+                            s.emit(&TraceEvent::DeviceDown { t: vnow, device: names[d].clone() });
+                        }
+                    } else if code != 2 && prev == 2 {
+                        if let Some(s) = sink.as_deref() {
+                            s.emit(&TraceEvent::DeviceUp {
+                                t: vnow,
+                                device: names[d].clone(),
+                                state: state.name().to_string(),
+                            });
+                        }
+                    }
+                    if code != 2 {
+                        continue;
+                    }
+                    // re-home the down device's queue onto the least-
+                    // loaded survivor; the rehoming flag keeps the
+                    // settle barrier honest while items are in hand
+                    fail.rehoming.store(true, Ordering::SeqCst);
+                    for mut item in queues[d].try_drain(usize::MAX) {
+                        item.attempts += 1;
+                        let survivor = (0..n)
+                            .filter(|&e| health[e].load(Ordering::Acquire) != 2)
+                            .min_by(|&a, &b| {
+                                queues[a]
+                                    .backlog_s()
+                                    .partial_cmp(&queues[b].backlog_s())
+                                    .unwrap_or(std::cmp::Ordering::Equal)
+                            });
+                        match survivor {
+                            Some(e) if item.attempts <= max_attempts => {
+                                fail.failovers.fetch_add(1, Ordering::Relaxed);
+                                if let Some(s) = sink.as_deref() {
+                                    s.emit(&TraceEvent::Failover {
+                                        t: vnow,
+                                        prompt: item.prompt.id,
+                                        from: names[d].clone(),
+                                        to: names[e].clone(),
+                                    });
+                                }
+                                queues[e].push(item);
+                            }
+                            survivor => {
+                                let reason = if survivor.is_none() {
+                                    "no_surviving_device"
+                                } else {
+                                    "retry_budget_exhausted"
+                                };
+                                fail.shed.fetch_add(1, Ordering::Relaxed);
+                                fail.shed_ids.lock().unwrap().push(item.prompt.id);
+                                if let Some(s) = sink.as_deref() {
+                                    s.emit(&TraceEvent::Shed {
+                                        t: vnow,
+                                        prompt: item.prompt.id,
+                                        reason: reason.to_string(),
+                                    });
+                                }
+                            }
+                        }
+                    }
+                    fail.rehoming.store(false, Ordering::SeqCst);
+                }
+                std::thread::sleep(Duration::from_millis(2));
+            }
+        })
+    });
+
     // --- ingest (this thread): replay, defer, route, re-plan ----------
     let mut held: Vec<(f64, Prompt)> = Vec::new();
     let mut deferred = 0usize;
@@ -582,7 +870,7 @@ pub fn serve(cluster: &Cluster, prompts: &[Prompt], opts: &ServeOptions) -> Resu
         replan_held(&mut held, &mut replans, cluster, &db, &policy, &queues, opts, now_v);
         flush_held(
             &mut held, p.arrival_s, cluster, &db, &policy, &queues, opts, started,
-            &mut assignment,
+            &mut assignment, health.as_ref(),
         );
         sleep_until_virtual(p.arrival_s, opts.time_scale, started);
         let backlog_total: f64 = queues.iter().map(|q| q.backlog_s()).sum();
@@ -598,7 +886,8 @@ pub fn serve(cluster: &Cluster, prompts: &[Prompt], opts: &ServeOptions) -> Resu
             deferred_ids.push(p.id);
             held.push((release, p.clone()));
         } else {
-            dispatch(p, cluster, &db, &policy, &queues, opts, started, &mut assignment);
+            dispatch(p, cluster, &db, &policy, &queues, opts, started, &mut assignment,
+                health.as_ref());
         }
     }
     // drain the deferral queue in release order, waking up for the next
@@ -615,7 +904,29 @@ pub fn serve(cluster: &Cluster, prompts: &[Prompt], opts: &ServeOptions) -> Resu
         let now_v = started.elapsed().as_secs_f64() * opts.time_scale;
         flush_held(
             &mut held, now_v, cluster, &db, &policy, &queues, opts, started, &mut assignment,
+            health.as_ref(),
         );
+    }
+    // settle barrier: before shutdown is signalled, wait until no queue
+    // holds work and the checker has nothing in hand — so a re-homed
+    // item can never land on a queue whose worker already exited.
+    // Terminates because every queued item is eventually pulled by a
+    // live worker, re-homed by the checker, or shed.
+    if churn_enabled {
+        loop {
+            let busy = fail.rehoming.load(Ordering::SeqCst)
+                || queues.iter().any(|q| q.queued() > 0);
+            if !busy {
+                std::thread::sleep(Duration::from_millis(5));
+                if !fail.rehoming.load(Ordering::SeqCst)
+                    && queues.iter().all(|q| q.queued() == 0)
+                {
+                    break;
+                }
+            } else {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+        }
     }
     done.store(true, Ordering::Release);
 
@@ -660,9 +971,57 @@ pub fn serve(cluster: &Cluster, prompts: &[Prompt], opts: &ServeOptions) -> Resu
             &[c.arrival_s],
         );
     }
+    // join every worker, surfacing panics and errors instead of
+    // aborting: a dead worker is a serving incident, not a crash of
+    // the whole server
+    let mut errors: Vec<String> = Vec::new();
     for w in workers {
-        w.join().map_err(|_| anyhow!("worker panicked"))??;
+        match w.join() {
+            Ok(Ok(())) => {}
+            Ok(Err(e)) => errors.push(e.to_string()),
+            Err(panic) => {
+                let msg = panic
+                    .downcast_ref::<String>()
+                    .cloned()
+                    .or_else(|| panic.downcast_ref::<&str>().map(|s| s.to_string()))
+                    .unwrap_or_else(|| "unknown panic payload".into());
+                errors.push(format!("worker panicked: {msg}"));
+            }
+        }
     }
+    stop.store(true, Ordering::Release);
+    if let Some(h) = checker {
+        let _ = h.join();
+    }
+    // backstop: with every worker gone, anything still queued can only
+    // be shed — counted and audited, never silently dropped
+    let vend = started.elapsed().as_secs_f64() * opts.time_scale;
+    for q in queues.iter() {
+        for item in q.try_drain(usize::MAX) {
+            fail.shed.fetch_add(1, Ordering::Relaxed);
+            fail.shed_ids.lock().unwrap().push(item.prompt.id);
+            if let Some(sink) = policy.trace_sink() {
+                sink.emit(&TraceEvent::Shed {
+                    t: vend,
+                    prompt: item.prompt.id,
+                    reason: "worker_dead".to_string(),
+                });
+            }
+        }
+    }
+    if completed == 0 && !errors.is_empty() {
+        return Err(anyhow!("no prompt served; worker errors: {}", errors.join("; ")));
+    }
+    let outages = fail.outages.load(Ordering::Acquire);
+    let failovers = fail.failovers.load(Ordering::Acquire);
+    let shed = fail.shed.load(Ordering::Acquire);
+    let mut shed_ids = fail.shed_ids.lock().unwrap().clone();
+    shed_ids.sort_unstable();
+    for _ in 0..outages {
+        ledger.post_outage();
+    }
+    ledger.post_failover(failovers as u64);
+    ledger.post_shed(shed as u64);
     let wallclock = started.elapsed().as_secs_f64();
     let batches = (completed as f64 / fills.mean().max(1.0)).round() as usize;
     let (est_active_kwh, _, est_carbon_kg) = ledger.totals();
@@ -685,6 +1044,16 @@ pub fn serve(cluster: &Cluster, prompts: &[Prompt], opts: &ServeOptions) -> Resu
     metrics.add("replan_passes_total", replans.passes as u64);
     metrics.add("replan_released_early_total", replans.released_early as u64);
     metrics.add("replan_extended_total", replans.extended as u64);
+    // failure counters exist only on churn runs, so the churn-off
+    // registry stays identical to the pre-churn server
+    if churn_enabled {
+        metrics.add("outages_total", outages as u64);
+        metrics.add("failovers_total", failovers as u64);
+        metrics.add("shed_total", shed as u64);
+    }
+    if !errors.is_empty() {
+        metrics.add("worker_errors_total", errors.len() as u64);
+    }
     let device_accounts: Vec<(String, f64, f64, f64)> = ledger
         .accounts()
         .map(|(n, a)| (n.clone(), a.active_kwh, a.idle_kwh, a.carbon_kg))
@@ -721,6 +1090,11 @@ pub fn serve(cluster: &Cluster, prompts: &[Prompt], opts: &ServeOptions) -> Resu
         est_carbon_kg,
         est_saved_kg: ledger.realized_savings_kg(),
         device_accounts,
+        outages,
+        failovers,
+        shed,
+        shed_ids,
+        errors,
         metrics,
     })
 }
@@ -750,6 +1124,7 @@ fn hold_for_sizing(
     opts: &ServeOptions,
     started: Instant,
     trace: Option<&TraceSink>,
+    hb: Option<&AtomicU64>,
 ) -> Option<BatchAudit> {
     let g = grid.filter(|g| g.sizing)?;
     let vnow = || started.elapsed().as_secs_f64() * opts.time_scale;
@@ -758,6 +1133,10 @@ fn hold_for_sizing(
     let mut hold: Option<f64> = None;
     let mut stale = true; // membership changed since the last plan
     loop {
+        // a long hold must not read as a dead worker
+        if let Some(h) = hb {
+            h.fetch_add(1, Ordering::Relaxed);
+        }
         if items.len() >= opts.batch_size {
             break;
         }
@@ -973,16 +1352,24 @@ fn dispatch(
     opts: &ServeOptions,
     started: Instant,
     assignment: &mut Vec<(u64, usize)>,
+    health: Option<&Arc<Vec<AtomicUsize>>>,
 ) {
     let now_v = started.elapsed().as_secs_f64() * opts.time_scale;
     let backlog: Vec<f64> = queues.iter().map(|q| q.backlog_s()).collect();
-    let d = policy.route_arrival(p, cluster, db, opts.batch_size, &backlog, now_v);
+    // with churn on, routing sees the live health snapshot: Down is
+    // excluded, Degraded penalized (fixed strategies fall over to the
+    // cheapest survivor); with churn off the mask is None and this is
+    // exactly route_arrival
+    let mask = mask_of(health);
+    let d = policy
+        .route_arrival_masked(p, cluster, db, opts.batch_size, &backlog, now_v, mask.as_ref());
     assignment.push((p.id, d));
     let est = db.cost(&cluster.devices[d], p, opts.batch_size).e2e_s;
     queues[d].push(QueueItem {
         prompt: p.clone(),
         enqueued: Instant::now(),
         est_ms: (est * 1000.0) as usize,
+        attempts: 0,
     });
 }
 
@@ -999,6 +1386,7 @@ fn flush_held(
     opts: &ServeOptions,
     started: Instant,
     assignment: &mut Vec<(u64, usize)>,
+    health: Option<&Arc<Vec<AtomicUsize>>>,
 ) {
     loop {
         let mut due: Option<(usize, f64)> = None;
@@ -1016,7 +1404,7 @@ fn flush_held(
         if let Some(sink) = policy.trace_sink() {
             sink.emit(&TraceEvent::Release { t: release, prompt: p.id });
         }
-        dispatch(&p, cluster, db, policy, queues, opts, started, assignment);
+        dispatch(&p, cluster, db, policy, queues, opts, started, assignment, health);
     }
 }
 
@@ -1035,9 +1423,10 @@ mod tests {
                 prompt: crate::workload::canonical::P4.to_prompt(i),
                 enqueued: Instant::now(),
                 est_ms: 1,
+                attempts: 0,
             });
         }
-        let batch = q.pull_batch(4, Duration::from_secs(5), &done);
+        let batch = q.pull_batch(4, Duration::from_secs(5), &done, None);
         assert_eq!(batch.len(), 4);
     }
 
@@ -1049,9 +1438,10 @@ mod tests {
             prompt: crate::workload::canonical::P3.to_prompt(0),
             enqueued: Instant::now(),
             est_ms: 1,
+            attempts: 0,
         });
         let t0 = Instant::now();
-        let batch = q.pull_batch(8, Duration::from_millis(60), &done);
+        let batch = q.pull_batch(8, Duration::from_millis(60), &done, None);
         assert_eq!(batch.len(), 1);
         assert!(t0.elapsed() >= Duration::from_millis(55));
     }
@@ -1060,13 +1450,14 @@ mod tests {
     fn queue_drains_on_shutdown() {
         let q = DeviceQueue::new();
         let done = AtomicBool::new(true);
-        assert!(q.pull_batch(4, Duration::from_millis(50), &done).is_empty());
+        assert!(q.pull_batch(4, Duration::from_millis(50), &done, None).is_empty());
         q.push(QueueItem {
             prompt: crate::workload::canonical::P3.to_prompt(0),
             enqueued: Instant::now(),
             est_ms: 1,
+            attempts: 0,
         });
-        assert_eq!(q.pull_batch(4, Duration::from_millis(50), &done).len(), 1);
+        assert_eq!(q.pull_batch(4, Duration::from_millis(50), &done, None).len(), 1);
     }
 
     #[test]
@@ -1077,6 +1468,7 @@ mod tests {
             prompt: crate::workload::canonical::P3.to_prompt(0),
             enqueued: Instant::now(),
             est_ms: 7,
+            attempts: 0,
         });
         assert!(q.wait_for_item(Duration::from_millis(10)));
         assert!(q.backlog_s() > 0.0);
@@ -1130,6 +1522,13 @@ mod tests {
         };
         let r = serve(&cluster, &corpus.prompts, &opts).unwrap();
         assert_eq!(r.completed, 8);
+        // prompt conservation: everything routed is completed or shed,
+        // and no worker died along the way
+        assert_eq!(r.completed + r.shed, 8, "a prompt fell through the cracks");
+        assert!(r.errors.is_empty(), "worker errors on the happy path: {:?}", r.errors);
+        assert_eq!(r.shed, 0);
+        assert_eq!(r.outages, 0);
+        assert_eq!(r.metrics.counter("outages_total"), 0, "churn-off must not register");
         assert!(r.output_tokens > 0, "stub produced no tokens");
         assert_eq!(r.assignment.len(), 8);
         let mut ids: Vec<u64> = r.assignment.iter().map(|&(id, _)| id).collect();
@@ -1193,6 +1592,95 @@ mod tests {
         assert_eq!(r2.completed, 16);
         assert_eq!(r2.batch_joins, 0);
         assert_eq!(r2.metrics.counter("batch_joins_total"), 0);
+    }
+
+    #[test]
+    fn serving_routes_around_a_scripted_outage() {
+        // jetson is down for the whole (virtual) run: the health mask
+        // must keep every prompt off it and the run must still serve
+        // everything without shedding
+        let cfg = ExperimentConfig::default();
+        let cluster = Cluster::from_config(&cfg.cluster);
+        let j = cluster.devices.iter().position(|d| d.name == "jetson-orin-nx").unwrap();
+        let mut cfg2 = cfg;
+        cfg2.workload.prompts = 12;
+        let mut corpus = crate::workload::Corpus::generate(&cfg2.workload);
+        crate::workload::trace::assign_arrivals(
+            &mut corpus.prompts,
+            crate::config::Arrival::Open { rate: 8.0 },
+            7,
+        );
+        let sink = Arc::new(TraceSink::memory());
+        let opts = ServeOptions {
+            execution: ExecutionMode::Stub,
+            time_scale: 200.0,
+            batch_timeout: Duration::from_millis(10),
+            churn: Some(
+                ChurnSchedule::scripted(vec![crate::simulator::OutageWindow {
+                    device: j,
+                    start_s: 0.0,
+                    end_s: 1e9,
+                }])
+                .unwrap(),
+            ),
+            trace: Some(Arc::clone(&sink)),
+            ..ServeOptions::default()
+        };
+        let r = serve(&cluster, &corpus.prompts, &opts).unwrap();
+        assert_eq!(r.completed + r.shed, 12, "a prompt fell through the cracks");
+        assert_eq!(r.shed, 0, "a survivor existed: {:?}", r.shed_ids);
+        assert!(r.errors.is_empty(), "{:?}", r.errors);
+        assert_eq!(r.outages, 1, "one scripted window, observed once");
+        assert_eq!(r.metrics.counter("outages_total"), 1);
+        let jetson_served =
+            r.per_device.iter().find(|(n, _)| n == "jetson-orin-nx").unwrap().1;
+        assert_eq!(jetson_served, 0, "a Down device served traffic");
+        sink.flush();
+        let text = sink.contents();
+        assert!(text.contains("\"ev\":\"device_down\""), "outage not traced");
+        // failovers and shed ids agree between report and trace
+        let failover_lines =
+            text.lines().filter(|l| l.contains("\"ev\":\"failover\"")).count();
+        assert_eq!(failover_lines, r.failovers, "every re-home must be audited");
+    }
+
+    #[test]
+    fn injected_worker_death_is_survived_and_accounted() {
+        // the chaos hook: the jetson worker dies after one batch; the
+        // checker detects the silent heartbeat, re-homes its queue and
+        // the run finishes with every prompt completed — the death
+        // lands in ServeReport::errors, not in a crash
+        let cfg = ExperimentConfig::default();
+        let cluster = Cluster::from_config(&cfg.cluster);
+        let j = cluster.devices.iter().position(|d| d.name == "jetson-orin-nx").unwrap();
+        let mut cfg2 = cfg;
+        cfg2.workload.prompts = 16;
+        let mut corpus = crate::workload::Corpus::generate(&cfg2.workload);
+        crate::workload::trace::assign_arrivals(
+            &mut corpus.prompts,
+            crate::config::Arrival::Open { rate: 8.0 },
+            7,
+        );
+        let opts = ServeOptions {
+            execution: ExecutionMode::Stub,
+            strategy: "all-on-jetson-orin-nx".into(),
+            time_scale: 100.0,
+            batch_timeout: Duration::from_millis(10),
+            fail_device_after_batches: Some((j, 1)),
+            ..ServeOptions::default()
+        };
+        let r = serve(&cluster, &corpus.prompts, &opts).unwrap();
+        assert_eq!(r.completed + r.shed, 16, "a prompt fell through the cracks");
+        assert_eq!(r.shed, 0, "the ada survived; nothing may shed: {:?}", r.shed_ids);
+        assert_eq!(r.completed, 16);
+        assert_eq!(r.errors.len(), 1, "{:?}", r.errors);
+        assert!(r.errors[0].contains("injected fault"), "{}", r.errors[0]);
+        assert!(r.outages >= 1, "the dead worker was never detected");
+        assert_eq!(r.metrics.counter("worker_errors_total"), 1);
+        // the fixed strategy kept routing to jetson until it died, so
+        // work re-homed through the checker and the mask
+        let ada_served = r.per_device.iter().find(|(n, _)| n == "ada-2000").unwrap().1;
+        assert!(ada_served > 0, "the survivor served nothing");
     }
 
     #[test]

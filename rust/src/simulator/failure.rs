@@ -1,4 +1,5 @@
-//! Failure injection: memory-saturation instability (paper §3).
+//! Failure injection: memory-saturation instability (paper §3) and
+//! device churn.
 //!
 //! The paper observes that batch 8 on the 8 GB Jetson "introduces
 //! instability and accuracy degradation ... errors due to memory
@@ -6,10 +7,10 @@
 //! memory model's saturation overshoot:
 //!
 //! - with probability `failure_prob_per_sat × saturation` an attempt
-//!   fails (clamped at 0.9);
+//!   fails (clamped at the policy's `max_fail_prob`);
 //! - each failed attempt costs `retry_penalty_s` wallclock (and the
 //!   corresponding active energy) before the retry;
-//! - a request that fails `MAX_ATTEMPTS` times is recorded as an error
+//! - a request that fails `max_attempts` times is recorded as an error
 //!   (the paper's "accuracy degradation" shows up as our error rate).
 //!
 //! Two evaluation modes:
@@ -17,7 +18,22 @@
 //!   table benches so rows replay exactly);
 //! - [`sample`] — stochastic injection from the experiment RNG (used by
 //!   failure-injection tests and the serving loop).
+//!
+//! The retry chain is parameterized by a [`FailurePolicy`]
+//! (`[serving.failure]` in the TOML config); its [`Default`]
+//! reproduces the historic hard-coded constants bit-for-bit.
+//!
+//! Beyond per-batch OOM, [`ChurnSchedule`] models *device churn*:
+//! whole devices going Down and coming back. Outages are either
+//! scripted windows (deterministic — pinned tests and bench replay) or
+//! stochastically sampled from MTBF/MTTR via the experiment [`Rng`].
+//! The schedule is a pure timeline: planes query
+//! [`ChurnSchedule::state_at`] / [`ChurnSchedule::transitions`] and
+//! drive their own `cluster::health::HealthMask` from it.
 
+use anyhow::{anyhow, bail, Result};
+
+use crate::cluster::health::HealthState;
 use crate::cluster::DeviceProfile;
 use crate::util::rng::Rng;
 
@@ -25,6 +41,40 @@ use crate::util::rng::Rng;
 pub const MAX_ATTEMPTS: usize = 3;
 /// Hard cap on per-attempt failure probability.
 pub const MAX_FAIL_PROB: f64 = 0.9;
+
+/// Configurable OOM-retry policy (`[serving.failure]`). The default
+/// reproduces the historic [`MAX_ATTEMPTS`] / [`MAX_FAIL_PROB`]
+/// constants bit-for-bit.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FailurePolicy {
+    /// Retries after which the request is declared failed.
+    pub max_attempts: usize,
+    /// Hard cap on per-attempt failure probability.
+    pub max_fail_prob: f64,
+}
+
+impl Default for FailurePolicy {
+    fn default() -> Self {
+        FailurePolicy { max_attempts: MAX_ATTEMPTS, max_fail_prob: MAX_FAIL_PROB }
+    }
+}
+
+impl FailurePolicy {
+    /// Validate invariants: at least one attempt, probability cap in
+    /// [0, 1).
+    pub fn validate(&self) -> Result<()> {
+        if self.max_attempts == 0 {
+            bail!("[serving.failure] max_attempts must be >= 1");
+        }
+        if !self.max_fail_prob.is_finite() || !(0.0..1.0).contains(&self.max_fail_prob) {
+            bail!(
+                "[serving.failure] max_fail_prob must be in [0, 1), got {}",
+                self.max_fail_prob
+            );
+        }
+        Ok(())
+    }
+}
 
 /// Result of failure evaluation for one batch attempt chain.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -45,36 +95,67 @@ impl FailureOutcome {
 
 /// Per-attempt failure probability for a device at a saturation level.
 pub fn fail_prob(dev: &DeviceProfile, saturation: f64) -> f64 {
-    (dev.saturation.failure_prob_per_sat * saturation).clamp(0.0, MAX_FAIL_PROB)
+    fail_prob_with(dev, saturation, &FailurePolicy::default())
+}
+
+/// [`fail_prob`] under an explicit policy.
+pub fn fail_prob_with(dev: &DeviceProfile, saturation: f64, policy: &FailurePolicy) -> f64 {
+    (dev.saturation.failure_prob_per_sat * saturation).clamp(0.0, policy.max_fail_prob)
 }
 
 /// Deterministic expected-value outcome (geometric retry chain).
 pub fn expected(dev: &DeviceProfile, saturation: f64, batch_size: usize) -> FailureOutcome {
-    let p = fail_prob(dev, saturation);
+    expected_with(dev, saturation, batch_size, &FailurePolicy::default())
+}
+
+/// [`expected`] under an explicit policy.
+pub fn expected_with(
+    dev: &DeviceProfile,
+    saturation: f64,
+    batch_size: usize,
+    policy: &FailurePolicy,
+) -> FailureOutcome {
+    let p = fail_prob_with(dev, saturation, policy);
     if p <= 0.0 {
         return FailureOutcome::CLEAN;
     }
-    // expected failed attempts, capped at MAX_ATTEMPTS:
+    // expected failed attempts, capped at max_attempts:
     // E = Σ_{k=1..M} P(retries >= k) = Σ_{k=1..M} p^k
     let mut retries = 0.0;
-    for k in 1..=MAX_ATTEMPTS {
+    for k in 1..=policy.max_attempts {
         retries += p.powi(k as i32);
     }
     let extra_time_s = retries * dev.saturation.retry_penalty_s;
-    // all MAX_ATTEMPTS fail -> error; errors counted per request in batch
-    let errors = p.powi(MAX_ATTEMPTS as i32) * batch_size as f64;
+    // all max_attempts fail -> error; errors counted per request in batch
+    let errors = p.powi(policy.max_attempts as i32) * batch_size as f64;
     FailureOutcome { retries, extra_time_s, errors }
 }
 
 /// Stochastic outcome sampled from the experiment RNG.
-pub fn sample(dev: &DeviceProfile, saturation: f64, batch_size: usize, rng: &mut Rng) -> FailureOutcome {
-    let p = fail_prob(dev, saturation);
+pub fn sample(
+    dev: &DeviceProfile,
+    saturation: f64,
+    batch_size: usize,
+    rng: &mut Rng,
+) -> FailureOutcome {
+    sample_with(dev, saturation, batch_size, rng, &FailurePolicy::default())
+}
+
+/// [`sample`] under an explicit policy.
+pub fn sample_with(
+    dev: &DeviceProfile,
+    saturation: f64,
+    batch_size: usize,
+    rng: &mut Rng,
+    policy: &FailurePolicy,
+) -> FailureOutcome {
+    let p = fail_prob_with(dev, saturation, policy);
     if p <= 0.0 {
         return FailureOutcome::CLEAN;
     }
     let mut retries = 0.0;
     let mut errors = 0.0;
-    for _ in 0..MAX_ATTEMPTS {
+    for _ in 0..policy.max_attempts {
         if !rng.chance(p) {
             return FailureOutcome {
                 retries,
@@ -90,6 +171,239 @@ pub fn sample(dev: &DeviceProfile, saturation: f64, batch_size: usize, rng: &mut
         retries,
         extra_time_s: retries * dev.saturation.retry_penalty_s,
         errors,
+    }
+}
+
+/// One scripted outage: `device` is Down over `[start_s, end_s)`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OutageWindow {
+    /// Device index (position in the cluster's device list).
+    pub device: usize,
+    /// Outage start, seconds since experiment start.
+    pub start_s: f64,
+    /// Outage end (the device comes back), seconds.
+    pub end_s: f64,
+}
+
+impl OutageWindow {
+    /// Parse a `"device:start_s:end_s"` spec, the form the
+    /// `[serving.churn]` `outages` list and `--churn-outage` use.
+    pub fn parse(spec: &str) -> Result<Self> {
+        let parts: Vec<&str> = spec.split(':').collect();
+        if parts.len() != 3 {
+            bail!("outage spec '{spec}' must be device:start_s:end_s");
+        }
+        let device = parts[0]
+            .trim()
+            .parse::<usize>()
+            .map_err(|_| anyhow!("outage spec '{spec}': bad device index '{}'", parts[0]))?;
+        let start_s = parts[1]
+            .trim()
+            .parse::<f64>()
+            .map_err(|_| anyhow!("outage spec '{spec}': bad start_s '{}'", parts[1]))?;
+        let end_s = parts[2]
+            .trim()
+            .parse::<f64>()
+            .map_err(|_| anyhow!("outage spec '{spec}': bad end_s '{}'", parts[2]))?;
+        Ok(OutageWindow { device, start_s, end_s })
+    }
+}
+
+/// A device-churn timeline: when each device is Down, and (via the
+/// optional lead/tail intervals) when it is Degraded on the way into
+/// an outage or Recovering on the way out.
+///
+/// The default schedule is empty — no churn, and every consumer's
+/// churn-off path is bit-for-bit the pre-churn behaviour.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct ChurnSchedule {
+    /// Sorted by (start_s, device); per-device windows never overlap.
+    windows: Vec<OutageWindow>,
+    /// Devices report Degraded this long before each outage starts.
+    degraded_lead_s: f64,
+    /// Devices report Recovering this long after each outage ends.
+    recovering_tail_s: f64,
+}
+
+fn severity_rank(s: HealthState) -> u8 {
+    match s {
+        HealthState::Up => 0,
+        HealthState::Recovering => 1,
+        HealthState::Degraded => 2,
+        HealthState::Down => 3,
+    }
+}
+
+impl ChurnSchedule {
+    /// A deterministic schedule from explicit outage windows.
+    /// Validates: finite, `start_s >= 0`, `end_s > start_s`, and no
+    /// overlapping windows on the same device.
+    pub fn scripted(mut windows: Vec<OutageWindow>) -> Result<Self> {
+        for w in &windows {
+            if !w.start_s.is_finite() || !w.end_s.is_finite() {
+                bail!("outage window on device {} has non-finite bounds", w.device);
+            }
+            if w.start_s < 0.0 {
+                bail!("outage window on device {} starts before t=0 ({})", w.device, w.start_s);
+            }
+            if w.end_s <= w.start_s {
+                bail!(
+                    "outage window on device {} is empty or reversed ({}..{})",
+                    w.device,
+                    w.start_s,
+                    w.end_s
+                );
+            }
+        }
+        windows.sort_by(|a, b| {
+            a.start_s
+                .partial_cmp(&b.start_s)
+                .expect("finite start_s")
+                .then(a.device.cmp(&b.device))
+        });
+        let mut last_end: std::collections::BTreeMap<usize, f64> = Default::default();
+        for w in &windows {
+            if let Some(&end) = last_end.get(&w.device) {
+                if w.start_s < end {
+                    bail!(
+                        "overlapping outage windows on device {} (second starts at {} before {} ends)",
+                        w.device,
+                        w.start_s,
+                        end
+                    );
+                }
+            }
+            last_end.insert(w.device, w.end_s);
+        }
+        Ok(ChurnSchedule { windows, degraded_lead_s: 0.0, recovering_tail_s: 0.0 })
+    }
+
+    /// A stochastic schedule: per device, alternate exponential
+    /// up-times (mean `mtbf_s`) and repair times (mean `mttr_s`),
+    /// sampled from `rng`. New failures start before `horizon_s`;
+    /// repairs may run past it.
+    pub fn stochastic(
+        n_devices: usize,
+        mtbf_s: f64,
+        mttr_s: f64,
+        horizon_s: f64,
+        rng: &mut Rng,
+    ) -> Result<Self> {
+        if n_devices == 0 {
+            bail!("stochastic churn needs at least one device");
+        }
+        if !(mtbf_s > 0.0 && mtbf_s.is_finite()) {
+            bail!("churn mtbf_s must be positive and finite, got {mtbf_s}");
+        }
+        if !(mttr_s > 0.0 && mttr_s.is_finite()) {
+            bail!("churn mttr_s must be positive and finite, got {mttr_s}");
+        }
+        if !(horizon_s > 0.0 && horizon_s.is_finite()) {
+            bail!("churn horizon_s must be positive and finite, got {horizon_s}");
+        }
+        let mut windows = Vec::new();
+        for device in 0..n_devices {
+            let mut t = rng.exponential(1.0 / mtbf_s);
+            while t < horizon_s {
+                let repair = rng.exponential(1.0 / mttr_s);
+                windows.push(OutageWindow { device, start_s: t, end_s: t + repair });
+                t += repair + rng.exponential(1.0 / mtbf_s);
+            }
+        }
+        Self::scripted(windows)
+    }
+
+    /// Report Degraded for `lead_s` before each outage (must be >= 0).
+    pub fn with_degraded_lead_s(mut self, lead_s: f64) -> Self {
+        assert!(lead_s >= 0.0 && lead_s.is_finite(), "degraded lead must be >= 0");
+        self.degraded_lead_s = lead_s;
+        self
+    }
+
+    /// Report Recovering for `tail_s` after each outage (must be >= 0).
+    pub fn with_recovering_tail_s(mut self, tail_s: f64) -> Self {
+        assert!(tail_s >= 0.0 && tail_s.is_finite(), "recovering tail must be >= 0");
+        self.recovering_tail_s = tail_s;
+        self
+    }
+
+    /// True when the schedule contains no outages (churn off).
+    pub fn is_empty(&self) -> bool {
+        self.windows.is_empty()
+    }
+
+    /// The validated, sorted outage windows.
+    pub fn windows(&self) -> &[OutageWindow] {
+        &self.windows
+    }
+
+    /// Largest device index any window references.
+    pub fn max_device(&self) -> Option<usize> {
+        self.windows.iter().map(|w| w.device).max()
+    }
+
+    /// The device's health state at time `t`. Down inside a window;
+    /// Degraded in the lead interval before one (taking precedence
+    /// over Recovering); Recovering in the tail after one; Up
+    /// otherwise.
+    pub fn state_at(&self, device: usize, t: f64) -> HealthState {
+        let mut s = HealthState::Up;
+        for w in self.windows.iter().filter(|w| w.device == device) {
+            if t >= w.start_s && t < w.end_s {
+                return HealthState::Down;
+            }
+            if self.recovering_tail_s > 0.0
+                && t >= w.end_s
+                && t < w.end_s + self.recovering_tail_s
+                && s == HealthState::Up
+            {
+                s = HealthState::Recovering;
+            }
+            if self.degraded_lead_s > 0.0 && t >= w.start_s - self.degraded_lead_s && t < w.start_s
+            {
+                s = HealthState::Degraded;
+            }
+        }
+        s
+    }
+
+    /// If `device` is Down at `t`, the instant it comes back up.
+    pub fn down_until(&self, device: usize, t: f64) -> Option<f64> {
+        self.windows
+            .iter()
+            .find(|w| w.device == device && t >= w.start_s && t < w.end_s)
+            .map(|w| w.end_s)
+    }
+
+    /// Every state change as `(time, device, new_state)`, sorted by
+    /// time (ties: device index, then mildest state first so applying
+    /// in order leaves the most severe state standing). Applying the
+    /// prefix up to `t` reproduces [`ChurnSchedule::state_at`].
+    pub fn transitions(&self) -> Vec<(f64, usize, HealthState)> {
+        let mut out = Vec::new();
+        for w in &self.windows {
+            if self.degraded_lead_s > 0.0 {
+                out.push((
+                    (w.start_s - self.degraded_lead_s).max(0.0),
+                    w.device,
+                    HealthState::Degraded,
+                ));
+            }
+            out.push((w.start_s, w.device, HealthState::Down));
+            if self.recovering_tail_s > 0.0 {
+                out.push((w.end_s, w.device, HealthState::Recovering));
+                out.push((w.end_s + self.recovering_tail_s, w.device, HealthState::Up));
+            } else {
+                out.push((w.end_s, w.device, HealthState::Up));
+            }
+        }
+        out.sort_by(|a, b| {
+            a.0.partial_cmp(&b.0)
+                .expect("finite transition times")
+                .then(a.1.cmp(&b.1))
+                .then(severity_rank(a.2).cmp(&severity_rank(b.2)))
+        });
+        out
     }
 }
 
@@ -128,6 +442,48 @@ mod tests {
     fn prob_clamped() {
         let j = DeviceProfile::jetson();
         assert!(fail_prob(&j, 1e9) <= MAX_FAIL_PROB);
+    }
+
+    #[test]
+    fn default_policy_matches_hardcoded_constants_bitwise() {
+        let p = FailurePolicy::default();
+        assert_eq!(p.max_attempts, MAX_ATTEMPTS);
+        assert_eq!(p.max_fail_prob.to_bits(), MAX_FAIL_PROB.to_bits());
+        let j = DeviceProfile::jetson();
+        for sat in [0.0, 0.2, 1.0, 1.7] {
+            let a = expected(&j, sat, 8);
+            let b = expected_with(&j, sat, 8, &p);
+            assert_eq!(a.retries.to_bits(), b.retries.to_bits());
+            assert_eq!(a.extra_time_s.to_bits(), b.extra_time_s.to_bits());
+            assert_eq!(a.errors.to_bits(), b.errors.to_bits());
+            let mut r1 = Rng::new(7);
+            let mut r2 = Rng::new(7);
+            assert_eq!(sample(&j, sat, 8, &mut r1), sample_with(&j, sat, 8, &mut r2, &p));
+        }
+    }
+
+    #[test]
+    fn custom_policy_changes_the_chain() {
+        let j = DeviceProfile::jetson();
+        let sat = 1.5;
+        let strict = FailurePolicy { max_attempts: 1, max_fail_prob: 0.9 };
+        let lax = FailurePolicy { max_attempts: 6, max_fail_prob: 0.9 };
+        let e1 = expected_with(&j, sat, 8, &strict);
+        let e6 = expected_with(&j, sat, 8, &lax);
+        // fewer attempts -> more exhausted chains (errors), fewer retries
+        assert!(e1.errors > e6.errors);
+        assert!(e1.retries < e6.retries);
+        let capped = FailurePolicy { max_attempts: 3, max_fail_prob: 0.1 };
+        assert!(fail_prob_with(&j, 1e9, &capped) <= 0.1);
+    }
+
+    #[test]
+    fn policy_validation_rejects_bad_values() {
+        assert!(FailurePolicy::default().validate().is_ok());
+        assert!(FailurePolicy { max_attempts: 0, max_fail_prob: 0.5 }.validate().is_err());
+        assert!(FailurePolicy { max_attempts: 3, max_fail_prob: 1.0 }.validate().is_err());
+        assert!(FailurePolicy { max_attempts: 3, max_fail_prob: -0.1 }.validate().is_err());
+        assert!(FailurePolicy { max_attempts: 3, max_fail_prob: f64::NAN }.validate().is_err());
     }
 
     #[test]
@@ -171,5 +527,106 @@ mod tests {
                 Err(format!("{o:?}"))
             }
         });
+    }
+
+    fn w(device: usize, start_s: f64, end_s: f64) -> OutageWindow {
+        OutageWindow { device, start_s, end_s }
+    }
+
+    #[test]
+    fn scripted_schedule_validates_windows() {
+        assert!(ChurnSchedule::scripted(vec![]).unwrap().is_empty());
+        assert!(ChurnSchedule::scripted(vec![w(0, 10.0, 20.0), w(1, 5.0, 8.0)]).is_ok());
+        // reversed / empty / negative / non-finite / overlapping all fail
+        assert!(ChurnSchedule::scripted(vec![w(0, 20.0, 10.0)]).is_err());
+        assert!(ChurnSchedule::scripted(vec![w(0, 10.0, 10.0)]).is_err());
+        assert!(ChurnSchedule::scripted(vec![w(0, -1.0, 10.0)]).is_err());
+        assert!(ChurnSchedule::scripted(vec![w(0, 0.0, f64::INFINITY)]).is_err());
+        assert!(ChurnSchedule::scripted(vec![w(0, 0.0, 10.0), w(0, 5.0, 15.0)]).is_err());
+        // back-to-back on one device and overlap across devices are fine
+        assert!(ChurnSchedule::scripted(vec![w(0, 0.0, 10.0), w(0, 10.0, 15.0)]).is_ok());
+        assert!(ChurnSchedule::scripted(vec![w(0, 0.0, 10.0), w(1, 5.0, 15.0)]).is_ok());
+    }
+
+    #[test]
+    fn state_at_walks_the_full_cycle() {
+        let sched = ChurnSchedule::scripted(vec![w(1, 100.0, 200.0)])
+            .unwrap()
+            .with_degraded_lead_s(30.0)
+            .with_recovering_tail_s(50.0);
+        assert_eq!(sched.state_at(1, 0.0), HealthState::Up);
+        assert_eq!(sched.state_at(1, 80.0), HealthState::Degraded);
+        assert_eq!(sched.state_at(1, 100.0), HealthState::Down);
+        assert_eq!(sched.state_at(1, 199.9), HealthState::Down);
+        assert_eq!(sched.state_at(1, 200.0), HealthState::Recovering);
+        assert_eq!(sched.state_at(1, 260.0), HealthState::Up);
+        // other devices unaffected
+        assert_eq!(sched.state_at(0, 150.0), HealthState::Up);
+        assert_eq!(sched.down_until(1, 150.0), Some(200.0));
+        assert_eq!(sched.down_until(1, 250.0), None);
+        assert_eq!(sched.max_device(), Some(1));
+    }
+
+    #[test]
+    fn transitions_replay_state_at() {
+        let sched = ChurnSchedule::scripted(vec![w(0, 50.0, 80.0), w(1, 60.0, 90.0)])
+            .unwrap()
+            .with_degraded_lead_s(10.0)
+            .with_recovering_tail_s(5.0);
+        let trans = sched.transitions();
+        // sorted by time
+        for pair in trans.windows(2) {
+            assert!(pair[0].0 <= pair[1].0, "unsorted transitions");
+        }
+        // applying the prefix reproduces state_at just after each
+        // change (checked once all same-timestamp transitions applied)
+        let mut mask = [HealthState::Up; 2];
+        for (i, &(t, d, s)) in trans.iter().enumerate() {
+            mask[d] = s;
+            if trans.get(i + 1).is_some_and(|next| next.0 <= t) {
+                continue;
+            }
+            for dev in 0..2 {
+                assert_eq!(
+                    mask[dev],
+                    sched.state_at(dev, t + 1e-9),
+                    "divergence at t={t} dev={dev}"
+                );
+            }
+        }
+        // after the last transition everyone is Up again
+        assert!(mask.iter().all(|s| *s == HealthState::Up));
+    }
+
+    #[test]
+    fn stochastic_schedule_is_deterministic_and_valid() {
+        let mut r1 = Rng::new(42);
+        let mut r2 = Rng::new(42);
+        let a = ChurnSchedule::stochastic(3, 3600.0, 300.0, 86_400.0, &mut r1).unwrap();
+        let b = ChurnSchedule::stochastic(3, 3600.0, 300.0, 86_400.0, &mut r2).unwrap();
+        assert_eq!(a, b);
+        assert!(!a.is_empty(), "a day at 1h MTBF should fail sometime");
+        // scripted() re-validated it: per-device windows are disjoint
+        // and sorted; every start is within the horizon
+        for win in a.windows() {
+            assert!(win.start_s < 86_400.0);
+            assert!(win.end_s > win.start_s);
+        }
+        assert!(ChurnSchedule::stochastic(0, 1.0, 1.0, 1.0, &mut Rng::new(1)).is_err());
+        assert!(ChurnSchedule::stochastic(1, 0.0, 1.0, 1.0, &mut Rng::new(1)).is_err());
+        assert!(ChurnSchedule::stochastic(1, 1.0, -1.0, 1.0, &mut Rng::new(1)).is_err());
+        assert!(ChurnSchedule::stochastic(1, 1.0, 1.0, 0.0, &mut Rng::new(1)).is_err());
+    }
+
+    #[test]
+    fn outage_spec_parses() {
+        let win = OutageWindow::parse("1:600:1800").unwrap();
+        assert_eq!(win, w(1, 600.0, 1800.0));
+        let win = OutageWindow::parse(" 0 : 0.5 : 9.25 ").unwrap();
+        assert_eq!(win, w(0, 0.5, 9.25));
+        assert!(OutageWindow::parse("1:600").is_err());
+        assert!(OutageWindow::parse("x:600:1800").is_err());
+        assert!(OutageWindow::parse("1:abc:1800").is_err());
+        assert!(OutageWindow::parse("1:600:def").is_err());
     }
 }

@@ -19,7 +19,7 @@
 use crate::cluster::DeviceProfile;
 use crate::util::rng::Rng;
 
-use super::failure::{self, FailureOutcome};
+use super::failure::{self, FailureOutcome, FailurePolicy};
 
 /// The work content of one batch: per-sequence token counts.
 #[derive(Debug, Clone, PartialEq)]
@@ -96,8 +96,18 @@ impl BatchTiming {
     }
 }
 
-/// Simulate one batch on a device.
+/// Simulate one batch on a device (default [`FailurePolicy`]).
 pub fn simulate_batch(dev: &DeviceProfile, work: &BatchWork, rng: Option<&mut Rng>) -> BatchTiming {
+    simulate_batch_with(dev, work, rng, &FailurePolicy::default())
+}
+
+/// Simulate one batch on a device under an explicit retry policy.
+pub fn simulate_batch_with(
+    dev: &DeviceProfile,
+    work: &BatchWork,
+    rng: Option<&mut Rng>,
+    policy: &FailurePolicy,
+) -> BatchTiming {
     let b = work.batch_size();
     let sat = dev.memory.saturation(b, work.max_seq_tokens());
 
@@ -107,8 +117,8 @@ pub fn simulate_batch(dev: &DeviceProfile, work: &BatchWork, rng: Option<&mut Rn
     let decode = work.max_output_tokens() as f64 * tpot * sat_latency;
 
     let failure = match rng {
-        Some(r) => failure::sample(dev, sat, b, r),
-        None => failure::expected(dev, sat, b),
+        Some(r) => failure::sample_with(dev, sat, b, r, policy),
+        None => failure::expected_with(dev, sat, b, policy),
     };
 
     let overhead = dev.latency.overhead(b);

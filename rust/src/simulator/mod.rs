@@ -9,7 +9,9 @@
 //! - [`latency`] — batch execution timing (TTFT, decode, overhead,
 //!   saturation penalties) + energy integration;
 //! - [`failure`] — the Jetson batch-8 instability: OOM/retry injection
-//!   with latency/energy/accuracy consequences;
+//!   with latency/energy/accuracy consequences (policy-configurable
+//!   via `[serving.failure]`), plus device churn ([`ChurnSchedule`]:
+//!   scripted outage windows or stochastic MTBF/MTTR sampling);
 //! - [`event`] — a deterministic discrete-event queue driving cluster
 //!   simulations (virtual clock, stable tie-breaking).
 
@@ -19,4 +21,5 @@ pub mod failure;
 pub mod latency;
 
 pub use event::EventQueue;
-pub use latency::{simulate_batch, BatchTiming, BatchWork};
+pub use failure::{ChurnSchedule, FailurePolicy, OutageWindow};
+pub use latency::{simulate_batch, simulate_batch_with, BatchTiming, BatchWork};

@@ -77,6 +77,30 @@ pub struct SizingStats {
     pub est_saved_kg: f64,
 }
 
+/// Outcome account of device churn (see `simulator::failure`
+/// §ChurnSchedule): outages observed, work moved off dying devices,
+/// prompts shed when no surviving device could fit them, and the
+/// energy/carbon of in-flight work a failure threw away.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FailureStats {
+    /// Device-down transitions observed.
+    pub outages: u64,
+    /// Work items migrated off a Down device onto a survivor.
+    pub failovers: u64,
+    /// In-flight batch members requeued after their batch was killed.
+    pub requeues: u64,
+    /// Prompts shed (no surviving device could fit them — counted,
+    /// never silently lost).
+    pub shed: u64,
+    /// Energy of partially-executed batches killed by an outage, kWh.
+    /// Already present in the device's active books (the launch posting
+    /// charged the whole batch) — this line labels how much of that
+    /// busy energy bought no completed work.
+    pub lost_work_kwh: f64,
+    /// Carbon of the lost work, kgCO2e (priced at the kill instant).
+    pub lost_work_carbon_kg: f64,
+}
+
 /// Cluster-wide energy/carbon ledger.
 #[derive(Debug, Clone)]
 pub struct EnergyLedger {
@@ -94,6 +118,8 @@ pub struct EnergyLedger {
     replan: ReplanStats,
     /// Carbon-aware batch-sizing outcomes.
     sizing: SizingStats,
+    /// Device-churn outcomes.
+    failure: FailureStats,
 }
 
 impl EnergyLedger {
@@ -108,7 +134,46 @@ impl EnergyLedger {
             shifted_kg: 0.0,
             replan: ReplanStats::default(),
             sizing: SizingStats::default(),
+            failure: FailureStats::default(),
         }
+    }
+
+    /// Account one device-down transition.
+    pub fn post_outage(&mut self) {
+        self.failure.outages += 1;
+    }
+
+    /// Account work items migrated off a Down device onto survivors.
+    pub fn post_failover(&mut self, n: u64) {
+        self.failure.failovers += n;
+    }
+
+    /// Account in-flight batch members requeued after a kill.
+    pub fn post_requeue(&mut self, n: u64) {
+        self.failure.requeues += n;
+    }
+
+    /// Account prompts shed because no surviving device fit them.
+    pub fn post_shed(&mut self, n: u64) {
+        self.failure.shed += n;
+    }
+
+    /// Label the partial work of a batch killed mid-flight by an
+    /// outage. The batch's launch posting already charged its whole
+    /// energy to the device's active books, so this never re-posts —
+    /// it records how much of that committed burn bought no completed
+    /// work, priced at the kill instant `t`.
+    pub fn post_lost_work(&mut self, kwh: f64, t: f64) {
+        assert!(kwh >= 0.0, "negative ledger post");
+        self.failure.lost_work_kwh += kwh;
+        self.failure.lost_work_carbon_kg += self.carbon.kg_co2e(kwh, t);
+    }
+
+    /// Device-churn outcomes recorded by the `post_outage` /
+    /// `post_failover` / `post_requeue` / `post_shed` /
+    /// `post_lost_work` family.
+    pub fn failure_stats(&self) -> &FailureStats {
+        &self.failure
     }
 
     /// Account one carbon-sizing hold: a partial all-deferrable batch
@@ -276,6 +341,12 @@ impl EnergyLedger {
         self.replan.carbon_delta_kg += other.replan.carbon_delta_kg;
         self.sizing.holds += other.sizing.holds;
         self.sizing.est_saved_kg += other.sizing.est_saved_kg;
+        self.failure.outages += other.failure.outages;
+        self.failure.failovers += other.failure.failovers;
+        self.failure.requeues += other.failure.requeues;
+        self.failure.shed += other.failure.shed;
+        self.failure.lost_work_kwh += other.failure.lost_work_kwh;
+        self.failure.lost_work_carbon_kg += other.failure.lost_work_carbon_kg;
     }
 }
 
@@ -471,6 +542,57 @@ mod tests {
         assert_eq!(s.holds, 2);
         assert!((s.est_saved_kg - 1.5e-5).abs() < 1e-15);
         assert_eq!(l.totals(), (0.0, 0.0, 0.0));
+    }
+
+    #[test]
+    fn failure_stats_accumulate_and_default_to_zero() {
+        let mut l = EnergyLedger::new(CarbonModel::constant(69.0));
+        assert_eq!(*l.failure_stats(), FailureStats::default());
+        l.post_outage();
+        l.post_failover(3);
+        l.post_requeue(4);
+        l.post_shed(2);
+        let s = l.failure_stats();
+        assert_eq!((s.outages, s.failovers, s.requeues, s.shed), (1, 3, 4, 2));
+        // counters never touch the energy/carbon books
+        assert_eq!(l.totals(), (0.0, 0.0, 0.0));
+    }
+
+    #[test]
+    fn lost_work_labels_committed_energy_without_reposting() {
+        let mut l = EnergyLedger::new(CarbonModel::constant(100.0));
+        // the launch posting charged the whole batch up front...
+        l.post_batch("d", 1e-3, 10.0, 0.0);
+        // ...and the kill labels the 40% that ran before the outage
+        l.post_lost_work(4e-4, 50.0);
+        let acc = l.account("d").unwrap();
+        assert!((acc.active_kwh - 1e-3).abs() < 1e-15);
+        assert!((acc.busy_s - 10.0).abs() < 1e-12);
+        assert_eq!(acc.batches, 1);
+        let s = l.failure_stats();
+        assert!((s.lost_work_kwh - 4e-4).abs() < 1e-15);
+        assert!((s.lost_work_carbon_kg - 4e-4 * 0.1).abs() < 1e-15);
+        // the label never inflates the books
+        let (a, i, _) = l.totals();
+        assert!((a + i - 1e-3).abs() < 1e-15);
+    }
+
+    #[test]
+    fn merge_folds_failure_stats() {
+        let model = CarbonModel::constant(69.0);
+        let mut a = EnergyLedger::new(model.clone());
+        a.post_outage();
+        a.post_shed(1);
+        a.post_lost_work(1e-4, 0.0);
+        let mut b = EnergyLedger::new(model.clone());
+        b.post_failover(2);
+        b.post_requeue(2);
+        let mut root = EnergyLedger::new(model);
+        root.merge(&a);
+        root.merge(&b);
+        let s = root.failure_stats();
+        assert_eq!((s.outages, s.failovers, s.requeues, s.shed), (1, 2, 2, 1));
+        assert!((s.lost_work_kwh - 1e-4).abs() < 1e-15);
     }
 
     #[test]

@@ -6,7 +6,7 @@ pub mod metrics;
 pub mod registry;
 pub mod trace;
 
-pub use ledger::{EnergyLedger, ReplanStats, SizingStats};
+pub use ledger::{EnergyLedger, FailureStats, ReplanStats, SizingStats};
 pub use metrics::{MetricsAggregate, RequestMetrics};
 pub use registry::MetricsRegistry;
 pub use trace::{normalize, CostCell, TraceEvent, TraceSink};

@@ -96,6 +96,18 @@ pub enum TraceEvent {
     /// into the run totals. `events` holds one accounting-message count
     /// per shard, in shard index order.
     ShardMerge { t: f64, shards: usize, events: Vec<u64> },
+    /// A device went Down (outage start): routing excludes it and its
+    /// in-flight work is killed and requeued.
+    DeviceDown { t: f64, device: String },
+    /// A device's health improved after an outage. `state` is the new
+    /// `cluster::health::HealthState` name (`"up"`, `"recovering"`, or
+    /// `"degraded"` for a pre-outage impairment transition).
+    DeviceUp { t: f64, device: String, state: String },
+    /// A work item was migrated off a Down device onto a survivor.
+    Failover { t: f64, prompt: u64, from: String, to: String },
+    /// A prompt was shed: no surviving device could fit it (counted in
+    /// the failure ledger, never silently lost).
+    Shed { t: f64, prompt: u64, reason: String },
 }
 
 impl TraceEvent {
@@ -111,6 +123,10 @@ impl TraceEvent {
             TraceEvent::BatchLaunch { .. } => "batch_launch",
             TraceEvent::BatchJoin { .. } => "batch_join",
             TraceEvent::ShardMerge { .. } => "shard_merge",
+            TraceEvent::DeviceDown { .. } => "device_down",
+            TraceEvent::DeviceUp { .. } => "device_up",
+            TraceEvent::Failover { .. } => "failover",
+            TraceEvent::Shed { .. } => "shed",
         }
     }
 
@@ -216,6 +232,26 @@ impl TraceEvent {
                     "events".into(),
                     Value::Arr(events.iter().map(|e| Value::Num(*e as f64)).collect()),
                 );
+            }
+            TraceEvent::DeviceDown { t, device } => {
+                o.insert("t".into(), Value::Num(*t));
+                o.insert("device".into(), Value::Str(device.clone()));
+            }
+            TraceEvent::DeviceUp { t, device, state } => {
+                o.insert("t".into(), Value::Num(*t));
+                o.insert("device".into(), Value::Str(device.clone()));
+                o.insert("state".into(), Value::Str(state.clone()));
+            }
+            TraceEvent::Failover { t, prompt, from, to } => {
+                o.insert("t".into(), Value::Num(*t));
+                o.insert("prompt".into(), Value::Num(*prompt as f64));
+                o.insert("from".into(), Value::Str(from.clone()));
+                o.insert("to".into(), Value::Str(to.clone()));
+            }
+            TraceEvent::Shed { t, prompt, reason } => {
+                o.insert("t".into(), Value::Num(*t));
+                o.insert("prompt".into(), Value::Num(*prompt as f64));
+                o.insert("reason".into(), Value::Str(reason.clone()));
             }
         }
         Value::Obj(o)
@@ -332,6 +368,21 @@ impl TraceEvent {
                 shards: u("shards")? as usize,
                 events: ids("events")?,
             }),
+            "device_down" => Ok(TraceEvent::DeviceDown { t: t("t")?, device: s("device")? }),
+            "device_up" => Ok(TraceEvent::DeviceUp {
+                t: t("t")?,
+                device: s("device")?,
+                state: s("state")?,
+            }),
+            "failover" => Ok(TraceEvent::Failover {
+                t: t("t")?,
+                prompt: u("prompt")?,
+                from: s("from")?,
+                to: s("to")?,
+            }),
+            "shed" => {
+                Ok(TraceEvent::Shed { t: t("t")?, prompt: u("prompt")?, reason: s("reason")? })
+            }
             other => Err(format!("unknown event kind '{other}'")),
         }
     }
@@ -528,6 +579,19 @@ mod tests {
                 finish_s: 1950.0,
             },
             TraceEvent::ShardMerge { t: 64800.0, shards: 4, events: vec![120, 98, 101, 77] },
+            TraceEvent::DeviceDown { t: 3600.0, device: "jetson-orin-nx".into() },
+            TraceEvent::DeviceUp {
+                t: 5400.0,
+                device: "jetson-orin-nx".into(),
+                state: "recovering".into(),
+            },
+            TraceEvent::Failover {
+                t: 3600.0,
+                prompt: 17,
+                from: "jetson-orin-nx".into(),
+                to: "ada-2000".into(),
+            },
+            TraceEvent::Shed { t: 3601.0, prompt: 18, reason: "no surviving device fits".into() },
         ]
     }
 
@@ -676,6 +740,10 @@ mod tests {
             finish_s: 9.0,
         });
         sink.emit(&TraceEvent::ShardMerge { t: 10.0, shards: 2, events: vec![3, 4] });
+        sink.emit(&TraceEvent::DeviceDown { t: 11.0, device: "a".into() });
+        sink.emit(&TraceEvent::DeviceUp { t: 12.0, device: "a".into(), state: "up".into() });
+        sink.emit(&TraceEvent::Failover { t: 11.5, prompt: 5, from: "a".into(), to: "b".into() });
+        sink.emit(&TraceEvent::Shed { t: 11.6, prompt: 6, reason: "all devices down".into() });
         let n = normalize(&sink.contents()).unwrap();
         assert_eq!(n, "{\"device\":\"a\",\"ev\":\"route\",\"prompt\":5}\n");
     }

@@ -45,6 +45,13 @@
 //!    `continuous_batching` knob defaults to off, and off is the
 //!    pre-knob fixed-cohort path bit-for-bit (zero joins, identical
 //!    spans/carbon) in the DES and the closed loop alike.
+//! 9. **Churn off ≡ no churn machinery, churn conserves work** — with
+//!    no churn schedule (or an explicitly empty one) every plane is
+//!    bit-for-bit the pre-churn behaviour; with randomized outage
+//!    schedules (chaos property) every prompt still completes or is
+//!    counted shed — `completed + shed == corpus size` on the DES, the
+//!    closed loop waits out or migrates around every outage, and both
+//!    replay deterministically.
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -58,6 +65,7 @@ use verdant::coordinator::{
 };
 use verdant::grid::ForecastKind;
 use verdant::server::{serve, ServeOptions};
+use verdant::simulator::{ChurnSchedule, OutageWindow};
 use verdant::util::check::property;
 use verdant::workload::{trace, Corpus, Prompt};
 
@@ -894,4 +902,165 @@ fn continuous_batching_off_is_the_fixed_cohort_path_bit_for_bit() {
     assert_eq!(x.makespan_s.to_bits(), y.makespan_s.to_bits());
     assert_eq!(x.total_carbon_kg.to_bits(), y.total_carbon_kg.to_bits());
     assert_eq!(x.deferred, y.deferred);
+}
+
+#[test]
+fn churn_off_is_bit_for_bit_identical_on_all_three_planes() {
+    // an explicitly empty schedule must be indistinguishable from no
+    // schedule at all: no failure machinery, no counters, identical
+    // decisions and books on every plane
+    let (cluster, prompts, db) = setup(60);
+
+    // DES plane
+    let a = run_online(
+        &cluster,
+        &prompts,
+        &db,
+        &OnlineConfig { strategy: "carbon-aware".into(), ..OnlineConfig::default() },
+    )
+    .unwrap();
+    let b = run_online(
+        &cluster,
+        &prompts,
+        &db,
+        &OnlineConfig {
+            strategy: "carbon-aware".into(),
+            churn: Some(ChurnSchedule::default()),
+            ..OnlineConfig::default()
+        },
+    )
+    .unwrap();
+    assert_eq!(a.completed, 60);
+    assert_eq!(b.shed, 0);
+    assert_sharded_equivalent(&a, &b, "DES churn-off").unwrap();
+    let f = b.ledger.failure_stats();
+    assert_eq!(f.outages + f.failovers + f.requeues + f.shed, 0);
+    assert_eq!(b.metrics.counter("outages_total"), 0, "churn-off must not register");
+
+    // closed loop
+    let policy = PlacementPolicy::spatial("carbon-aware", &cluster).unwrap();
+    let empty = RunConfig { churn: Some(ChurnSchedule::default()), ..RunConfig::default() };
+    let x = run(&cluster, &prompts, &policy, &db, &RunConfig::default(), None).unwrap();
+    let y = run(&cluster, &prompts, &policy, &db, &empty, None).unwrap();
+    assert_eq!(x.makespan_s.to_bits(), y.makespan_s.to_bits());
+    assert_eq!(x.total_carbon_kg.to_bits(), y.total_carbon_kg.to_bits());
+    assert_eq!(x.device_share, y.device_share);
+    assert_eq!(y.ledger.failure_stats().outages, 0);
+
+    // wallclock server (stub backend): identical decisions, no churn
+    // machinery engaged
+    let (cluster, prompts, db, _) = stub_setup(24, 1.0 / 600.0, 0.0, 3600.0, 0.0);
+    let p = serve(&cluster, &prompts, &stub_opts("carbon-aware", None, &db)).unwrap();
+    let mut opts = stub_opts("carbon-aware", None, &db);
+    opts.churn = Some(ChurnSchedule::default());
+    let q = serve(&cluster, &prompts, &opts).unwrap();
+    assert_eq!(p.completed, 24);
+    assert_eq!(q.completed, 24);
+    assert_eq!((q.outages, q.failovers, q.shed), (0, 0, 0));
+    assert_eq!(q.metrics.counter("outages_total"), 0, "churn-off must not register");
+    assert_eq!(p.deferred_ids, q.deferred_ids);
+    let sorted = |r: &verdant::server::ServeReport| {
+        let mut v = r.assignment.clone();
+        v.sort_unstable();
+        v
+    };
+    assert_eq!(sorted(&p), sorted(&q), "an empty schedule moved a routing decision");
+}
+
+#[test]
+fn full_cluster_permanent_outage_sheds_everything_but_conserves() {
+    // nowhere to place work and no recovery in sight: the DES must shed
+    // every prompt — counted, with ids — rather than hang or lose them
+    let (cluster, prompts, db) = setup(12);
+    let windows = (0..cluster.devices.len())
+        .map(|device| OutageWindow { device, start_s: 0.0, end_s: 1e12 })
+        .collect();
+    let cfg = OnlineConfig {
+        strategy: "latency-aware".into(),
+        churn: Some(ChurnSchedule::scripted(windows).unwrap()),
+        ..OnlineConfig::default()
+    };
+    let r = run_online(&cluster, &prompts, &db, &cfg).unwrap();
+    assert_eq!(r.completed, 0);
+    assert_eq!(r.shed, 12);
+    assert_eq!(r.shed_ids.len(), 12);
+    assert_eq!(r.completed + r.shed, prompts.len());
+}
+
+/// Randomized, per-device non-overlapping outage windows: every window
+/// ends, so the cluster always recovers eventually.
+fn chaos_schedule(rng: &mut verdant::util::rng::Rng, n_devices: usize) -> ChurnSchedule {
+    let mut windows = Vec::new();
+    for device in 0..n_devices {
+        let mut t = rng.range(0.0, 120.0);
+        for _ in 0..rng.below(3) {
+            let dur = rng.range(5.0, 240.0);
+            windows.push(OutageWindow { device, start_s: t, end_s: t + dur });
+            t += dur + rng.range(30.0, 600.0);
+        }
+    }
+    ChurnSchedule::scripted(windows).expect("per-device walk never overlaps")
+}
+
+#[test]
+fn chaos_randomized_churn_conserves_work_on_des_and_closed_loop() {
+    // the tentpole invariant under randomized schedules, strategies,
+    // retry budgets and failover settings: work is never silently lost,
+    // and a churned run replays deterministically
+    const STRATEGIES: [&str; 4] =
+        ["latency-aware", "carbon-aware", "round-robin", "all-on-jetson-orin-nx"];
+    let (cluster, prompts, db) = setup(40);
+    property("churn conserves and is deterministic", 6, |rng| {
+        let churn = chaos_schedule(rng, cluster.devices.len());
+        let strategy = STRATEGIES[rng.below(STRATEGIES.len())];
+        let failover = rng.chance(0.7);
+        let failure = verdant::simulator::FailurePolicy {
+            max_attempts: 1 + rng.below(4),
+            ..Default::default()
+        };
+        let cfg = OnlineConfig {
+            strategy: strategy.into(),
+            churn: Some(churn.clone()),
+            failover,
+            failure,
+            ..OnlineConfig::default()
+        };
+        let r1 = run_online(&cluster, &prompts, &db, &cfg).map_err(|e| e.to_string())?;
+        let r2 = run_online(&cluster, &prompts, &db, &cfg).map_err(|e| e.to_string())?;
+        if r1.completed + r1.shed != 40 {
+            return Err(format!(
+                "lost work: {} completed + {} shed != 40 ({strategy}, failover {failover})",
+                r1.completed, r1.shed
+            ));
+        }
+        if r1.shed_ids.len() != r1.shed {
+            return Err("shed count and shed id list disagree".into());
+        }
+        if r1.span_s.to_bits() != r2.span_s.to_bits()
+            || r1.shed_ids != r2.shed_ids
+            || r1.assignment != r2.assignment
+        {
+            return Err(format!("churned DES replay diverged ({strategy})"));
+        }
+
+        // closed loop on the same schedule: it never sheds (windows
+        // end, waiting is always an option) — every prompt completes
+        let policy =
+            PlacementPolicy::spatial(strategy, &cluster).map_err(|e| e.to_string())?;
+        let run_cfg = RunConfig { churn: Some(churn), failure, ..RunConfig::default() };
+        let c1 = run(&cluster, &prompts, &policy, &db, &run_cfg, None)
+            .map_err(|e| e.to_string())?;
+        let c2 = run(&cluster, &prompts, &policy, &db, &run_cfg, None)
+            .map_err(|e| e.to_string())?;
+        if c1.metrics.len() != 40 {
+            return Err(format!(
+                "closed loop finished only {} of 40 ({strategy})",
+                c1.metrics.len()
+            ));
+        }
+        if c1.makespan_s.to_bits() != c2.makespan_s.to_bits() {
+            return Err(format!("churned closed-loop replay diverged ({strategy})"));
+        }
+        Ok(())
+    });
 }
