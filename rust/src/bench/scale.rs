@@ -270,18 +270,19 @@ pub fn run(env: &Env, counts: &[usize]) -> (Vec<ScaleRow>, Table) {
             // loop (ingest + per-device workers + collector), arrival
             // replay compressed hard so scheduling is the measured work
             if n <= SERVER_MAX_PROMPTS {
-                let opts = ServeOptions {
-                    batch_size: 4,
-                    batch_timeout: Duration::from_millis(5),
-                    max_new_tokens: 8,
-                    time_scale: SERVER_TIME_SCALE,
-                    strategy: strategy.clone(),
-                    grid,
-                    execution: ExecutionMode::Stub,
-                    db: Some(Arc::new(env.db.clone())),
-                    trace: None, // disabled path, same as the DES rows
-                    ..ServeOptions::default()
-                };
+                let opts = ServeOptions::builder()
+                    .cluster(&cluster)
+                    .batch_size(4)
+                    .batch_timeout(Duration::from_millis(5))
+                    .max_new_tokens(8)
+                    .time_scale(SERVER_TIME_SCALE)
+                    .strategy(strategy.clone())
+                    .grid(grid)
+                    .execution(ExecutionMode::Stub)
+                    .db(Some(Arc::new(env.db.clone())))
+                    .trace(None) // disabled path, same as the DES rows
+                    .build()
+                    .expect("bench serve options validate");
                 let t0 = Instant::now();
                 let r = serve(&cluster, &prompts, &opts).expect("stub serve");
                 let wall = t0.elapsed().as_secs_f64();

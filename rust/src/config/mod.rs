@@ -231,6 +231,28 @@ pub struct ServingConfig {
     /// Device-churn timeline (`[serving.churn]`). Empty by default —
     /// no churn machinery anywhere, bit-for-bit the pre-churn paths.
     pub churn: ChurnConfig,
+    /// Network front-end (`[serving.http]`), used by `serve --http`.
+    pub http: HttpConfig,
+}
+
+/// `[serving.http]` — the OpenAI-compatible network front-end.
+/// Only consulted when `serve --http` is on; the defaults serve
+/// loopback with a bounded queue.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HttpConfig {
+    /// Bind address, `host:port` (port 0 = ephemeral, for tests).
+    pub addr: String,
+    /// Admission bound: requests beyond this many queued-or-running
+    /// are shed with HTTP 429.
+    pub max_queue_depth: usize,
+    /// Non-streaming requests time out with HTTP 504 after this long.
+    pub request_timeout_s: f64,
+}
+
+impl Default for HttpConfig {
+    fn default() -> Self {
+        HttpConfig { addr: "127.0.0.1:8080".into(), max_queue_depth: 256, request_timeout_s: 30.0 }
+    }
 }
 
 /// `[serving.churn]` — device availability for churn experiments.
@@ -420,6 +442,7 @@ impl Default for ExperimentConfig {
                 continuous_batching: false,
                 failure: crate::simulator::FailurePolicy::default(),
                 churn: ChurnConfig::default(),
+                http: HttpConfig::default(),
             },
             observability: ObservabilityConfig::default(),
             artifacts_dir: "artifacts".into(),
@@ -576,6 +599,17 @@ impl ExperimentConfig {
                     cfg.serving.failure.max_fail_prob = x;
                 }
             }
+            if let Some(h) = s.get("http") {
+                if let Some(a) = h.get("addr").and_then(Value::as_str) {
+                    cfg.serving.http.addr = a.to_string();
+                }
+                if let Some(n) = h.get("max_queue_depth").and_then(Value::as_usize) {
+                    cfg.serving.http.max_queue_depth = n;
+                }
+                if let Some(x) = h.get("request_timeout_s").and_then(Value::as_f64) {
+                    cfg.serving.http.request_timeout_s = x;
+                }
+            }
             if let Some(c) = s.get("churn") {
                 if let Some(list) = c.get("outages").and_then(Value::as_arr) {
                     cfg.serving.churn.outages = list
@@ -678,6 +712,17 @@ impl ExperimentConfig {
             if rate <= 0.0 {
                 bail!("open arrival rate must be positive");
             }
+        }
+        if self.serving.http.addr.is_empty() {
+            bail!("[serving.http] addr must not be empty");
+        }
+        if !(self.serving.http.request_timeout_s > 0.0
+            && self.serving.http.request_timeout_s.is_finite())
+        {
+            bail!(
+                "[serving.http] request_timeout_s must be positive and finite, got {}",
+                self.serving.http.request_timeout_s
+            );
         }
         self.serving.failure.validate()?;
         self.serving.churn.validate()?;
@@ -1128,6 +1173,31 @@ seed = 9
         let c = parse("[serving.churn]\noutages = [\"99:0:10\"]\n").unwrap();
         let err = c.serving.churn.to_schedule(2).unwrap_err().to_string();
         assert!(err.contains("names device 99"), "{err}");
+    }
+
+    #[test]
+    fn http_table_roundtrip() {
+        // defaults: loopback, bounded queue, 30 s timeout
+        let d = ExperimentConfig::default();
+        assert_eq!(d.serving.http, HttpConfig::default());
+        assert_eq!(d.serving.http.addr, "127.0.0.1:8080");
+        assert_eq!(d.serving.http.max_queue_depth, 256);
+
+        let doc = r#"
+[serving.http]
+addr = "0.0.0.0:9001"
+max_queue_depth = 8
+request_timeout_s = 2.5
+"#;
+        let c = ExperimentConfig::from_value(&toml::parse(doc).unwrap()).unwrap();
+        assert_eq!(c.serving.http.addr, "0.0.0.0:9001");
+        assert_eq!(c.serving.http.max_queue_depth, 8);
+        assert_eq!(c.serving.http.request_timeout_s, 2.5);
+
+        let parse = |doc: &str| ExperimentConfig::from_value(&toml::parse(doc).unwrap());
+        assert!(parse("[serving.http]\naddr = \"\"\n").is_err());
+        assert!(parse("[serving.http]\nrequest_timeout_s = 0.0\n").is_err());
+        assert!(parse("[serving.http]\nrequest_timeout_s = -1.0\n").is_err());
     }
 
     #[test]

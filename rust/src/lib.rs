@@ -210,6 +210,38 @@
 //! three planes make bit-for-bit the pre-churn decisions (pinned in
 //! `tests/planes.rs`).
 //!
+//! ## Network serving: the OpenAI-compatible HTTP front
+//!
+//! `verdant serve --http <addr>` puts a real socket in front of the
+//! wallclock plane ([`server::http`]): a dependency-light HTTP/1.1
+//! server (std `TcpListener`, thread-per-connection — the same offline
+//! substitution the crate makes for tokio) speaking the OpenAI wire
+//! shape. `POST /v1/chat/completions` accepts a typed
+//! [`server::api::ChatCompletionRequest`] and answers either one JSON
+//! document or a Server-Sent-Events stream, one `data:` chunk per
+//! generated token, closed by `data: [DONE]`; `GET /v1/models` lists
+//! the cluster's model/device pairs and `GET /metrics` serves the live
+//! registry through the same [`report::metrics_document`] code path
+//! `--metrics-json` uses. Each network request becomes a synthetic
+//! arrival on the virtual clock and flows through the *same*
+//! [`coordinator::policy`] core as the replay planes — deferrable
+//! requests (`"deferrable": true`) are held for forecast clean windows
+//! exactly like corpus prompts, and every response's `usage` block
+//! carries an `x_carbon` extension (calibrated energy kWh, gCO2e at
+//! the completion instant's grid intensity, serving device,
+//! deferred-for seconds): the ledger's per-request attribution,
+//! surfaced on the wire. Admission is bounded (`[serving.http]
+//! max_queue_depth`; beyond it requests shed with HTTP 429, counted
+//! and flight-recorded), and SIGTERM or `POST /admin/drain` triggers a
+//! graceful drain — deferred holds flush, in-flight requests finish,
+//! and the server returns the same `ServeReport` the replay plane
+//! produces. Construction is validated once:
+//! [`server::ServeOptions::builder`] is the single fallible path the
+//! CLI, the HTTP layer and `bench scale` all build options through,
+//! and every plane's result converts into one [`report::PlaneSummary`]
+//! so the CLI printers, the metrics dump and the HTTP endpoint cannot
+//! drift apart.
+//!
 //! ## Observability: decision flight recorder + metrics registry
 //!
 //! Every scheduling decision any plane makes can be recorded as one

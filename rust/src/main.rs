@@ -7,9 +7,13 @@
 //!         [--seed N] [--config path]      one closed-loop run, full report
 //! verdant serve [--prompts N] [--batch B] [--strategy S] [--timeout-ms T]
 //!         [--max-new N] [--execution real|hybrid|stub]
+//!         [--http addr] [--max-queue-depth N] [--request-timeout-s S]
 //!                                         real-time serving demo; `stub`
 //!                                         swaps PJRT for the calibrated
-//!                                         backend (no artifacts needed)
+//!                                         backend (no artifacts needed);
+//!                                         --http replaces the corpus replay
+//!                                         with an OpenAI-compatible socket
+//!                                         (see server::http)
 //!
 //! `run` and `serve` accept the SLO/carbon knobs (--defer-frac,
 //! --deadline-s, --sizing, --no-defer): with a time-varying
@@ -35,9 +39,9 @@ use verdant::config::{ExecutionMode, ExperimentConfig};
 use verdant::coordinator::online::{run_online, OnlineConfig};
 use verdant::coordinator::{run as run_sched, GridShiftConfig, Grouping, PlacementPolicy, RunConfig};
 use verdant::grid::ForecastKind;
-use verdant::report::fmt;
+use verdant::report::{fmt, metrics_document, PlaneSummary};
 use verdant::runtime::{CalibratedBackend, HybridBackend, InferenceBackend, PjrtBackend};
-use verdant::server::{serve, ServeOptions};
+use verdant::server::{serve, HttpOptions, HttpServer, ServeOptions, ServeReport};
 use verdant::telemetry::{normalize, MetricsRegistry, TraceSink};
 use verdant::workload::{trace, Corpus};
 
@@ -190,11 +194,17 @@ fn trace_sink(cfg: &ExperimentConfig) -> anyhow::Result<Option<Arc<TraceSink>>> 
     }
 }
 
-/// Dump the end-of-run metrics snapshot when `--metrics-json` /
-/// `[observability] metrics_json` names a path.
-fn dump_metrics(cfg: &ExperimentConfig, m: &MetricsRegistry) -> anyhow::Result<()> {
+/// Dump the end-of-run metrics document when `--metrics-json` /
+/// `[observability] metrics_json` names a path — the same
+/// `{"metrics": ..., "summary": ...}` shape `GET /metrics` serves
+/// (see [`verdant::report::summary`]).
+fn dump_metrics(
+    cfg: &ExperimentConfig,
+    summary: Option<&PlaneSummary>,
+    m: &MetricsRegistry,
+) -> anyhow::Result<()> {
     if let Some(p) = &cfg.observability.metrics_json {
-        let mut text = verdant::util::json::to_string(&m.snapshot());
+        let mut text = verdant::util::json::to_string(&metrics_document(summary, m));
         text.push('\n');
         std::fs::write(p, text)
             .map_err(|e| anyhow::anyhow!("writing metrics snapshot {p}: {e}"))?;
@@ -255,7 +265,8 @@ fn print_usage() {
          USAGE:\n  verdant bench <fig1|fig2|table2|table3|sweep|ablation|load|shifting|scale|churn|all> [--prompts N] [--save dir] [--json dir] [--extensions]\n  \
          verdant run   [--strategy S] [--batch B] [--prompts N] [--execution real|calibrated|hybrid|stub]\n  \
          verdant serve [--prompts N] [--batch B] [--strategy S] [--timeout-ms T] [--max-new N]\n          \
-         [--execution real|hybrid|stub]  (stub: deterministic no-PJRT backend, runs anywhere)\n  \
+         [--execution real|hybrid|stub]  (stub: deterministic no-PJRT backend, runs anywhere)\n          \
+         [--http addr[:port]] [--max-queue-depth N] [--request-timeout-s S]\n  \
          verdant inspect <corpus|cluster|manifest>\n  \
          verdant trace diff <a.jsonl> <b.jsonl>   compare two decision traces after\n          \
          normalization (exit 1 on divergence)\n  \
@@ -292,7 +303,17 @@ fn print_usage() {
          before it is shed ([serving.failure]); with no churn configured every\n\
          plane is bit-for-bit the churn-free behaviour; bench churn compares\n\
          strategies across availability scenarios (always-up, cleanest-device\n\
-         outage with and without failover, stochastic flaky).",
+         outage with and without failover, stochastic flaky).\n\
+         Network serving: serve --http <addr> swaps the corpus replay for an\n\
+         OpenAI-compatible HTTP front (POST /v1/chat/completions with SSE\n\
+         streaming, GET /v1/models, GET /metrics); runs until SIGTERM or\n\
+         POST /admin/drain, then drains in-flight work and prints the usual\n\
+         serving report. [serving.http] sets addr/max_queue_depth/\n\
+         request_timeout_s; over-depth requests are shed with HTTP 429.\n\
+         Example:\n  \
+         verdant serve --http 127.0.0.1:8099 --execution stub &\n  \
+         curl -N http://127.0.0.1:8099/v1/chat/completions \\\n    \
+         -d '{{\"messages\":[{{\"role\":\"user\",\"content\":\"hi\"}}],\"stream\":true}}'",
         verdant::VERSION
     );
 }
@@ -440,52 +461,14 @@ fn cmd_run(flags: &Flags) -> anyhow::Result<()> {
 
     let r = run_sched(&cluster, &corpus.prompts, &policy, &db, &run_cfg, backend.as_deref())?;
 
+    let s = PlaneSummary::from_run(&r);
     println!("\n== run: {} | batch {} | {} prompts | {} ==", r.strategy, r.batch_size,
              corpus.prompts.len(), cfg.serving.execution.name());
     println!("  total E2E (makespan):   {} s", fmt::secs(r.makespan_s));
-    println!("  total carbon:           {} kgCO2e", fmt::sci(r.total_carbon_kg));
-    println!("  total energy:           {} kWh", fmt::sci(r.total_energy_kwh));
-    println!("  mean E2E / p50 / p95:   {} / {} / {} s",
-             fmt::secs(r.overall.e2e.mean()),
-             fmt::secs(r.overall.e2e_hist.p50()),
-             fmt::secs(r.overall.e2e_hist.p95()));
     println!("  mean TTFT:              {} s", fmt::secs(r.overall.ttft.mean()));
     println!("  error rate:             {}", fmt::pct(r.overall.error_rate()));
-    if r.deferred > 0 {
-        println!("  deferred (SLO shift):   {} prompts", r.deferred);
-        println!(
-            "  saved vs run-at-arrival: {} kgCO2e ({})",
-            fmt::sci(r.ledger.realized_savings_kg()),
-            fmt::signed_pct(r.ledger.savings_frac())
-        );
-    }
-    let fs = r.ledger.failure_stats();
-    if fs.outages > 0 || fs.failovers > 0 {
-        println!(
-            "  churn:                  {} outages, {} batch failovers",
-            fs.outages, fs.failovers
-        );
-    }
-    let rp = r.ledger.replan_stats();
-    if rp.passes > 0 {
-        println!(
-            "  replans:                {} passes ({} released early, {} extended, \
-             delta {} kgCO2e vs plan)",
-            rp.passes,
-            rp.released_early,
-            rp.extended,
-            fmt::sci(rp.carbon_delta_kg)
-        );
-    }
-    for (dev, agg) in &r.per_device {
-        let share = r.share(dev);
-        println!(
-            "  {dev}: {} prompts ({}), mean E2E {} s, energy {} kWh",
-            r.device_share[dev],
-            fmt::pct(share),
-            fmt::secs(agg.e2e.mean()),
-            fmt::sci(agg.energy_kwh.sum()),
-        );
+    for line in s.lines() {
+        println!("{line}");
     }
     for (dev, texts) in &r.spot_checks {
         if let Some(t) = texts.first() {
@@ -493,7 +476,7 @@ fn cmd_run(flags: &Flags) -> anyhow::Result<()> {
             println!("  spot-check [{dev}]: {preview:?}");
         }
     }
-    dump_metrics(&cfg, &r.registry)?;
+    dump_metrics(&cfg, Some(&s), &r.registry)?;
     if let Some(s) = &sink {
         s.flush();
     }
@@ -523,22 +506,14 @@ fn run_des_plane(
         ..OnlineConfig::default()
     };
     let r = run_online(cluster, prompts, db, &online)?;
+    let s = PlaneSummary::from_online(&r);
     println!("\n== run (DES plane): {} | batch {} | {} prompts ==",
              cfg.serving.strategy, cfg.serving.batch_size, prompts.len());
     println!("  completed:              {} in {} virtual s", r.completed, fmt::secs(r.span_s));
-    println!("  mean latency:           {} s", fmt::secs(r.latency.mean()));
-    println!("  total carbon:           {} kgCO2e", fmt::sci(r.ledger.total_carbon_kg()));
-    if r.deferred > 0 {
-        println!("  deferred (SLO shift):   {} prompts", r.deferred);
+    for line in s.lines() {
+        println!("{line}");
     }
-    let fs = r.ledger.failure_stats();
-    if fs.outages > 0 || fs.failovers > 0 || fs.shed > 0 {
-        println!(
-            "  churn:                  {} outages, {} failovers, {} requeued, {} shed",
-            fs.outages, fs.failovers, fs.requeues, fs.shed
-        );
-    }
-    dump_metrics(cfg, &r.metrics)?;
+    dump_metrics(cfg, Some(&s), &r.metrics)?;
     if let Some(s) = &sink {
         s.flush();
     }
@@ -589,9 +564,6 @@ fn cmd_serve(flags: &Flags) -> anyhow::Result<()> {
         cfg.workload.arrival = verdant::config::Arrival::Open { rate: 4.0 };
     }
     let cluster = Cluster::from_config(&cfg.cluster);
-    let mut corpus = Corpus::generate(&cfg.workload);
-    trace::assign_arrivals(&mut corpus.prompts, cfg.workload.arrival, cfg.workload.seed);
-    apply_slos(&cfg, &mut corpus.prompts);
 
     // the config default (`calibrated`) means "no generation" and only
     // makes sense for run/bench — plain `verdant serve` keeps its
@@ -612,28 +584,64 @@ fn cmd_serve(flags: &Flags) -> anyhow::Result<()> {
         cfg.workload.seed ^ 0x0FF1_CE,
     );
     let sink = trace_sink(&cfg)?;
-    let opts = ServeOptions {
-        batch_size: cfg.serving.batch_size,
-        batch_timeout: Duration::from_millis(flags.usize("timeout-ms", 150)? as u64),
-        max_new_tokens: flags.usize("max-new", 16)?,
-        artifacts_dir: PathBuf::from(&cfg.artifacts_dir),
-        time_scale: flags
-            .get("time-scale")
-            .map(str::parse::<f64>)
-            .transpose()
-            .map_err(|e| anyhow::anyhow!("--time-scale wants a number: {e}"))?
-            .unwrap_or(50.0),
-        strategy: cfg.serving.strategy.clone(),
-        grid: grid_from_config(&cfg, &cluster),
-        execution,
-        db: Some(Arc::new(db)),
-        trace: sink.clone(),
-        spot_check_every_n: cfg.serving.spot_check_every_n,
-        continuous_batching: cfg.serving.continuous_batching,
-        churn: cfg.serving.churn.to_schedule(cluster.devices.len())?,
-        failure: cfg.serving.failure,
-        ..ServeOptions::default()
-    };
+    // the one validated construction path — the same builder the HTTP
+    // layer and `bench scale` go through
+    let opts = ServeOptions::builder()
+        .cluster(&cluster)
+        .batch_size(cfg.serving.batch_size)
+        .batch_timeout(Duration::from_millis(flags.usize("timeout-ms", 150)? as u64))
+        .max_new_tokens(flags.usize("max-new", 16)?)
+        .artifacts_dir(PathBuf::from(&cfg.artifacts_dir))
+        .time_scale(
+            flags
+                .get("time-scale")
+                .map(str::parse::<f64>)
+                .transpose()
+                .map_err(|e| anyhow::anyhow!("--time-scale wants a number: {e}"))?
+                .unwrap_or(50.0),
+        )
+        .strategy(cfg.serving.strategy.clone())
+        .grid(grid_from_config(&cfg, &cluster))
+        .execution(execution)
+        .db(Some(Arc::new(db)))
+        .trace(sink.clone())
+        .spot_check_every_n(cfg.serving.spot_check_every_n)
+        .continuous_batching(cfg.serving.continuous_batching)
+        .churn(cfg.serving.churn.to_schedule(cluster.devices.len())?)
+        .failure(cfg.serving.failure)
+        .build()?;
+
+    // --http <addr>: network serving — an OpenAI-compatible socket in
+    // place of the corpus replay; runs until SIGTERM or /admin/drain
+    if let Some(addr) = flags.get("http") {
+        let http = HttpOptions {
+            addr: addr.to_string(),
+            max_queue_depth: flags.usize("max-queue-depth", cfg.serving.http.max_queue_depth)?,
+            request_timeout: Duration::from_secs_f64(
+                flags
+                    .get("request-timeout-s")
+                    .map(str::parse::<f64>)
+                    .transpose()
+                    .map_err(|e| anyhow::anyhow!("--request-timeout-s wants a number: {e}"))?
+                    .unwrap_or(cfg.serving.http.request_timeout_s),
+            ),
+        };
+        let server = HttpServer::bind(&cluster, &opts, &http)?;
+        println!(
+            "listening on http://{} ({} workers, {} backend, strategy {}); \
+             SIGTERM or POST /admin/drain stops after draining in-flight requests",
+            server.local_addr()?,
+            cluster.devices.len(),
+            opts.execution.name(),
+            opts.strategy
+        );
+        let report = server.run()?;
+        return print_serve_report(&cfg, &report, sink.as_ref());
+    }
+
+    let mut corpus = Corpus::generate(&cfg.workload);
+    trace::assign_arrivals(&mut corpus.prompts, cfg.workload.arrival, cfg.workload.seed);
+    apply_slos(&cfg, &mut corpus.prompts);
     println!(
         "serving {} prompts through the {} backend ({} workers, batch {}, strategy {}) ...",
         corpus.prompts.len(),
@@ -643,63 +651,26 @@ fn cmd_serve(flags: &Flags) -> anyhow::Result<()> {
         opts.strategy
     );
     let report = serve(&cluster, &corpus.prompts, &opts)?;
+    print_serve_report(&cfg, &report, sink.as_ref())
+}
+
+/// The serving report printer both `serve` modes (replay and `--http`)
+/// share: plane-specific header lines, then the unified
+/// [`PlaneSummary`] block.
+fn print_serve_report(
+    cfg: &ExperimentConfig,
+    report: &ServeReport,
+    sink: Option<&Arc<TraceSink>>,
+) -> anyhow::Result<()> {
+    let s = PlaneSummary::from_serve(report);
     println!("\n== serving report ==");
     println!("  completed:        {} requests in {} s", report.completed, fmt::secs(report.wallclock_s));
     println!("  throughput:       {:.2} req/s, {:.1} tok/s", report.requests_per_s, report.tokens_per_s);
-    println!("  latency mean/p50/p95: {} / {} / {} s",
-             fmt::secs(report.latency_mean_s), fmt::secs(report.latency_p50_s), fmt::secs(report.latency_p95_s));
-    println!("  batches:          {} (mean fill {:.2})", report.batches, report.mean_batch_fill);
-    println!(
-        "  est energy/carbon: {} kWh / {} kgCO2e",
-        fmt::sci(report.est_energy_kwh),
-        fmt::sci(report.est_carbon_kg)
-    );
-    if report.deferred > 0 {
-        println!(
-            "  deferred:         {} prompts, est saved {} kgCO2e vs arrival, {} deadline violations",
-            report.deferred,
-            fmt::sci(report.est_saved_kg),
-            report.deadline_violations
-        );
+    for line in s.lines() {
+        println!("{line}");
     }
-    if report.sizing_holds > 0 {
-        println!(
-            "  sizing holds:     {} partial batches held, est saved {} kgCO2e",
-            report.sizing_holds,
-            fmt::sci(report.sizing_carbon_saved_kg)
-        );
-    }
-    if report.replans > 0 {
-        println!(
-            "  replans:          {} passes ({} released early, {} extended)",
-            report.replans, report.replan_released_early, report.replan_extended
-        );
-    }
-    if report.outages > 0 || report.failovers > 0 || report.shed > 0 {
-        println!(
-            "  churn:            {} outages, {} failovers, {} shed",
-            report.outages, report.failovers, report.shed
-        );
-    }
-    if !report.errors.is_empty() {
-        println!("  worker errors:    {}", report.errors.len());
-        for e in &report.errors {
-            println!("    - {e}");
-        }
-    }
-    for (dev, count) in &report.per_device {
-        println!("  {dev}: {count} requests");
-    }
-    for (dev, busy, idle, carbon) in &report.device_accounts {
-        println!(
-            "  {dev} ledger: busy {} kWh, idle {} kWh, carbon {} kgCO2e",
-            fmt::sci(*busy),
-            fmt::sci(*idle),
-            fmt::sci(*carbon)
-        );
-    }
-    dump_metrics(&cfg, &report.metrics)?;
-    if let Some(s) = &sink {
+    dump_metrics(cfg, Some(&s), &report.metrics)?;
+    if let Some(s) = sink {
         s.flush();
     }
     Ok(())

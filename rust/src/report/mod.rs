@@ -3,6 +3,15 @@
 //! Each bench driver builds a [`Table`]; the CLI renders it to stdout
 //! (ASCII), optionally writes `results/<name>.csv` and
 //! `results/<name>.json` so EXPERIMENTS.md numbers are regenerable.
+//!
+//! [`summary`] holds the plane-agnostic [`PlaneSummary`]: the one
+//! conversion target for every plane's result struct, so the CLI
+//! printers, `--metrics-json` and the HTTP `GET /metrics` endpoint all
+//! render end-of-run numbers from a single code path.
+
+pub mod summary;
+
+pub use summary::{metrics_document, PlaneSummary};
 
 use crate::util::json::{self, Value};
 use std::collections::BTreeMap;

@@ -1,0 +1,418 @@
+//! The one plane-agnostic results view: [`PlaneSummary`].
+//!
+//! Every plane ends a run with its own result struct —
+//! [`RunResult`](crate::coordinator::RunResult) (closed loop),
+//! [`OnlineResult`](crate::coordinator::online::OnlineResult) (DES) and
+//! [`ServeReport`](crate::server::ServeReport) (wallclock server / HTTP)
+//! — and until this module existed the CLI printers, `--metrics-json`
+//! and the HTTP `GET /metrics` endpoint each hand-kept their own
+//! rendering of the same numbers. All three results now convert into a
+//! [`PlaneSummary`]; [`PlaneSummary::lines`] is the shared stdout
+//! block, [`PlaneSummary::to_json`] the shared JSON shape, and
+//! [`metrics_document`] the `{"metrics": ..., "summary": ...}` document
+//! both `--metrics-json` and `GET /metrics` emit.
+//!
+//! Plane-specific headers (the DES `completed: N in S virtual s` line,
+//! the server `completed` / `throughput` lines the CI smoke jobs grep)
+//! stay with their planes — this module owns everything downstream of
+//! them, including the churn line whose
+//! `churn: N outages, ... , M shed` shape the churn-smoke job pins on
+//! *both* planes.
+
+use crate::coordinator::online::OnlineResult;
+use crate::coordinator::RunResult;
+use crate::report::fmt;
+use crate::server::ServeReport;
+use crate::telemetry::{EnergyLedger, MetricsRegistry};
+use crate::util::json::Value;
+use std::collections::BTreeMap;
+
+/// Plane-agnostic end-of-run summary: the numbers every plane reports,
+/// in one struct, rendered by one code path. Counters that a plane
+/// cannot produce (e.g. worker errors in the closed loop) are simply
+/// zero/empty and render nothing.
+#[derive(Debug, Clone, Default)]
+pub struct PlaneSummary {
+    /// Which plane produced this: `"closed"`, `"des"`, `"server"`.
+    pub plane: &'static str,
+    pub completed: usize,
+    pub shed: usize,
+    /// Prompts held past arrival by SLO deferral.
+    pub deferred: usize,
+    pub deadline_violations: usize,
+    pub latency_mean_s: f64,
+    pub latency_p50_s: f64,
+    pub latency_p95_s: f64,
+    pub energy_kwh: f64,
+    pub carbon_kg: f64,
+    /// Carbon avoided vs the run-at-arrival counterfactual, kgCO2e.
+    pub saved_kg: f64,
+    /// `saved / counterfactual` (0 when nothing was deferred).
+    pub savings_frac: f64,
+    pub batches: usize,
+    /// Mean prompts per launched batch (0 when the plane doesn't track
+    /// it).
+    pub mean_batch_fill: f64,
+    pub batch_joins: usize,
+    pub sizing_holds: usize,
+    pub sizing_saved_kg: f64,
+    pub replans: usize,
+    pub replan_released_early: usize,
+    pub replan_extended: usize,
+    pub outages: usize,
+    pub failovers: usize,
+    pub requeues: usize,
+    pub worker_errors: Vec<String>,
+    /// Requests served per device name (empty when the plane does not
+    /// track per-device counts).
+    pub per_device: Vec<(String, usize)>,
+    /// Ledger accounts: `(device, busy_kwh, idle_kwh, carbon_kg)`,
+    /// name-sorted.
+    pub device_accounts: Vec<(String, f64, f64, f64)>,
+}
+
+fn accounts_of(ledger: &EnergyLedger) -> (Vec<(String, f64, f64, f64)>, usize) {
+    let mut accounts = Vec::new();
+    let mut batches = 0usize;
+    for (name, acc) in ledger.accounts() {
+        accounts.push((name.clone(), acc.active_kwh, acc.idle_kwh, acc.carbon_kg));
+        batches += acc.batches as usize;
+    }
+    accounts.sort_by(|a, b| a.0.cmp(&b.0));
+    (accounts, batches)
+}
+
+impl PlaneSummary {
+    /// Summarize a closed-loop [`RunResult`].
+    pub fn from_run(r: &RunResult) -> Self {
+        let fs = r.ledger.failure_stats();
+        let sz = r.ledger.sizing_stats();
+        let rp = r.ledger.replan_stats();
+        let (device_accounts, batches) = accounts_of(&r.ledger);
+        let per_device: Vec<(String, usize)> =
+            r.device_share.iter().map(|(n, &c)| (n.clone(), c)).collect();
+        PlaneSummary {
+            plane: "closed",
+            completed: r.metrics.len(),
+            shed: fs.shed as usize,
+            deferred: r.deferred,
+            deadline_violations: 0,
+            latency_mean_s: r.overall.e2e.mean(),
+            latency_p50_s: r.overall.e2e_hist.p50(),
+            latency_p95_s: r.overall.e2e_hist.p95(),
+            energy_kwh: r.total_energy_kwh,
+            carbon_kg: r.total_carbon_kg,
+            saved_kg: r.ledger.realized_savings_kg(),
+            savings_frac: r.ledger.savings_frac(),
+            batches,
+            mean_batch_fill: 0.0,
+            batch_joins: r.batch_joins,
+            sizing_holds: sz.holds as usize,
+            sizing_saved_kg: sz.est_saved_kg,
+            replans: rp.passes as usize,
+            replan_released_early: rp.released_early as usize,
+            replan_extended: rp.extended as usize,
+            outages: fs.outages as usize,
+            failovers: fs.failovers as usize,
+            requeues: fs.requeues as usize,
+            worker_errors: Vec::new(),
+            per_device,
+            device_accounts,
+        }
+    }
+
+    /// Summarize a DES [`OnlineResult`].
+    pub fn from_online(r: &OnlineResult) -> Self {
+        let fs = r.ledger.failure_stats();
+        let sz = r.ledger.sizing_stats();
+        let rp = r.ledger.replan_stats();
+        let (device_accounts, batches) = accounts_of(&r.ledger);
+        let (active, idle, _) = r.ledger.totals();
+        PlaneSummary {
+            plane: "des",
+            completed: r.completed,
+            shed: r.shed,
+            deferred: r.deferred,
+            deadline_violations: r.deadline_violations,
+            latency_mean_s: r.latency.mean(),
+            latency_p50_s: r.latency_hist.p50(),
+            latency_p95_s: r.latency_hist.p95(),
+            energy_kwh: active + idle,
+            carbon_kg: r.ledger.total_carbon_kg(),
+            saved_kg: r.ledger.realized_savings_kg(),
+            savings_frac: r.ledger.savings_frac(),
+            batches,
+            mean_batch_fill: r.batch_fill.mean(),
+            batch_joins: r.batch_joins,
+            sizing_holds: r.held_partial,
+            sizing_saved_kg: sz.est_saved_kg,
+            replans: rp.passes as usize,
+            replan_released_early: rp.released_early as usize,
+            replan_extended: rp.extended as usize,
+            outages: fs.outages as usize,
+            failovers: fs.failovers as usize,
+            requeues: fs.requeues as usize,
+            worker_errors: Vec::new(),
+            per_device: Vec::new(),
+            device_accounts,
+        }
+    }
+
+    /// Summarize a wallclock [`ServeReport`] (replay or HTTP serving).
+    pub fn from_serve(r: &ServeReport) -> Self {
+        // the counterfactual basis: carbon actually emitted plus what
+        // deferral avoided — the same denominator the ledger uses
+        let counterfactual = r.est_carbon_kg + r.est_saved_kg;
+        PlaneSummary {
+            plane: "server",
+            completed: r.completed,
+            shed: r.shed,
+            deferred: r.deferred,
+            deadline_violations: r.deadline_violations,
+            latency_mean_s: r.latency_mean_s,
+            latency_p50_s: r.latency_p50_s,
+            latency_p95_s: r.latency_p95_s,
+            energy_kwh: r.est_energy_kwh,
+            carbon_kg: r.est_carbon_kg,
+            saved_kg: r.est_saved_kg,
+            savings_frac: if counterfactual > 0.0 { r.est_saved_kg / counterfactual } else { 0.0 },
+            batches: r.batches,
+            mean_batch_fill: r.mean_batch_fill,
+            batch_joins: r.batch_joins,
+            sizing_holds: r.sizing_holds,
+            sizing_saved_kg: r.sizing_carbon_saved_kg,
+            replans: r.replans,
+            replan_released_early: r.replan_released_early,
+            replan_extended: r.replan_extended,
+            outages: r.outages,
+            // every wallclock failover is a queue-item requeue by
+            // construction (a re-homed item), so the two counters agree
+            failovers: r.failovers,
+            requeues: r.failovers,
+            worker_errors: r.errors.clone(),
+            per_device: r.per_device.clone(),
+            device_accounts: r.device_accounts.clone(),
+        }
+    }
+
+    /// The shared stdout block every plane prints after its own header
+    /// lines. Zero-valued optional sections (deferral, sizing, replans,
+    /// churn, worker errors) render nothing, so a plain run stays as
+    /// quiet as before.
+    pub fn lines(&self) -> Vec<String> {
+        let mut out = Vec::new();
+        out.push(format!(
+            "  latency mean/p50/p95: {} / {} / {} s",
+            fmt::secs(self.latency_mean_s),
+            fmt::secs(self.latency_p50_s),
+            fmt::secs(self.latency_p95_s)
+        ));
+        out.push(format!(
+            "  energy/carbon:        {} kWh / {} kgCO2e",
+            fmt::sci(self.energy_kwh),
+            fmt::sci(self.carbon_kg)
+        ));
+        if self.batches > 0 {
+            let mut line = format!("  batches:              {}", self.batches);
+            if self.mean_batch_fill > 0.0 {
+                line.push_str(&format!(" (mean fill {:.2})", self.mean_batch_fill));
+            }
+            if self.batch_joins > 0 {
+                line.push_str(&format!(", {} joined in flight", self.batch_joins));
+            }
+            out.push(line);
+        }
+        if self.deferred > 0 {
+            out.push(format!(
+                "  deferred (SLO shift): {} prompts, est saved {} kgCO2e ({}), \
+                 {} deadline violations",
+                self.deferred,
+                fmt::sci(self.saved_kg),
+                fmt::signed_pct(self.savings_frac),
+                self.deadline_violations
+            ));
+        }
+        if self.sizing_holds > 0 {
+            out.push(format!(
+                "  sizing holds:         {} partial batches held, est saved {} kgCO2e",
+                self.sizing_holds,
+                fmt::sci(self.sizing_saved_kg)
+            ));
+        }
+        if self.replans > 0 {
+            out.push(format!(
+                "  replans:              {} passes ({} released early, {} extended)",
+                self.replans, self.replan_released_early, self.replan_extended
+            ));
+        }
+        if self.outages > 0 || self.failovers > 0 || self.shed > 0 {
+            // the churn-smoke CI job greps this exact shape on both the
+            // DES and server planes: `churn: N outages` ... `, M shed`
+            out.push(format!(
+                "  churn:                {} outages, {} failovers, {} requeued, {} shed",
+                self.outages, self.failovers, self.requeues, self.shed
+            ));
+        }
+        if !self.worker_errors.is_empty() {
+            out.push(format!("  worker errors:        {}", self.worker_errors.len()));
+            for e in &self.worker_errors {
+                out.push(format!("    - {e}"));
+            }
+        }
+        for (dev, count) in &self.per_device {
+            out.push(format!("  {dev}: {count} requests"));
+        }
+        for (dev, busy, idle, carbon) in &self.device_accounts {
+            out.push(format!(
+                "  {dev} ledger: busy {} kWh, idle {} kWh, carbon {} kgCO2e",
+                fmt::sci(*busy),
+                fmt::sci(*idle),
+                fmt::sci(*carbon)
+            ));
+        }
+        out
+    }
+
+    /// JSON shape shared by `--metrics-json` and `GET /metrics`.
+    pub fn to_json(&self) -> Value {
+        let mut o = BTreeMap::new();
+        o.insert("plane".into(), Value::Str(self.plane.into()));
+        o.insert("completed".into(), Value::Num(self.completed as f64));
+        o.insert("shed".into(), Value::Num(self.shed as f64));
+        o.insert("deferred".into(), Value::Num(self.deferred as f64));
+        o.insert(
+            "deadline_violations".into(),
+            Value::Num(self.deadline_violations as f64),
+        );
+        o.insert("latency_mean_s".into(), Value::Num(self.latency_mean_s));
+        o.insert("latency_p50_s".into(), Value::Num(self.latency_p50_s));
+        o.insert("latency_p95_s".into(), Value::Num(self.latency_p95_s));
+        o.insert("energy_kwh".into(), Value::Num(self.energy_kwh));
+        o.insert("carbon_kg".into(), Value::Num(self.carbon_kg));
+        o.insert("saved_kg".into(), Value::Num(self.saved_kg));
+        o.insert("savings_frac".into(), Value::Num(self.savings_frac));
+        o.insert("batches".into(), Value::Num(self.batches as f64));
+        o.insert("mean_batch_fill".into(), Value::Num(self.mean_batch_fill));
+        o.insert("batch_joins".into(), Value::Num(self.batch_joins as f64));
+        o.insert("sizing_holds".into(), Value::Num(self.sizing_holds as f64));
+        o.insert("sizing_saved_kg".into(), Value::Num(self.sizing_saved_kg));
+        o.insert("replans".into(), Value::Num(self.replans as f64));
+        o.insert(
+            "replan_released_early".into(),
+            Value::Num(self.replan_released_early as f64),
+        );
+        o.insert("replan_extended".into(), Value::Num(self.replan_extended as f64));
+        o.insert("outages".into(), Value::Num(self.outages as f64));
+        o.insert("failovers".into(), Value::Num(self.failovers as f64));
+        o.insert("requeues".into(), Value::Num(self.requeues as f64));
+        o.insert(
+            "worker_errors".into(),
+            Value::Arr(self.worker_errors.iter().map(|e| Value::Str(e.clone())).collect()),
+        );
+        o.insert(
+            "per_device".into(),
+            Value::Obj(
+                self.per_device
+                    .iter()
+                    .map(|(n, c)| (n.clone(), Value::Num(*c as f64)))
+                    .collect(),
+            ),
+        );
+        o.insert(
+            "device_accounts".into(),
+            Value::Obj(
+                self.device_accounts
+                    .iter()
+                    .map(|(n, busy, idle, carbon)| {
+                        let mut acc = BTreeMap::new();
+                        acc.insert("busy_kwh".into(), Value::Num(*busy));
+                        acc.insert("idle_kwh".into(), Value::Num(*idle));
+                        acc.insert("carbon_kg".into(), Value::Num(*carbon));
+                        (n.clone(), Value::Obj(acc))
+                    })
+                    .collect(),
+            ),
+        );
+        Value::Obj(o)
+    }
+}
+
+/// The metrics document both `--metrics-json` and the HTTP plane's
+/// `GET /metrics` emit: the registry snapshot under `"metrics"`, plus
+/// the plane summary under `"summary"` when one is available (the live
+/// HTTP endpoint serves mid-run, before any summary exists).
+pub fn metrics_document(summary: Option<&PlaneSummary>, registry: &MetricsRegistry) -> Value {
+    let mut o = BTreeMap::new();
+    o.insert("metrics".into(), registry.snapshot());
+    if let Some(s) = summary {
+        o.insert("summary".into(), s.to_json());
+    }
+    Value::Obj(o)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    #[test]
+    fn empty_summary_renders_only_the_always_on_lines() {
+        let s = PlaneSummary::default();
+        let lines = s.lines();
+        assert_eq!(lines.len(), 2, "{lines:?}");
+        assert!(lines[0].contains("latency mean/p50/p95"));
+        assert!(lines[1].contains("energy/carbon"));
+    }
+
+    #[test]
+    fn churn_line_matches_the_ci_grep_shape() {
+        let s = PlaneSummary {
+            outages: 3,
+            failovers: 2,
+            requeues: 5,
+            shed: 0,
+            ..PlaneSummary::default()
+        };
+        let text = s.lines().join("\n");
+        // the two churn-smoke greps: `churn: +N outages` and `, 0 shed`
+        let churn = text.lines().find(|l| l.contains("churn:")).unwrap();
+        assert!(churn.contains("3 outages"), "{churn}");
+        assert!(churn.ends_with(", 0 shed"), "{churn}");
+    }
+
+    #[test]
+    fn optional_sections_appear_when_nonzero() {
+        let s = PlaneSummary {
+            deferred: 4,
+            sizing_holds: 1,
+            replans: 2,
+            worker_errors: vec!["boom".into()],
+            per_device: vec![("dev-a".into(), 7)],
+            device_accounts: vec![("dev-a".into(), 1.0, 0.1, 0.5)],
+            ..PlaneSummary::default()
+        };
+        let text = s.lines().join("\n");
+        for needle in
+            ["deferred (SLO shift): 4", "sizing holds:", "replans:", "worker errors:", "- boom",
+             "dev-a: 7 requests", "dev-a ledger:"]
+        {
+            assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
+        }
+    }
+
+    #[test]
+    fn metrics_document_shape() {
+        let mut reg = MetricsRegistry::new();
+        reg.inc("decisions_total");
+        let doc = metrics_document(None, &reg);
+        let text = json::to_string(&doc);
+        assert!(text.contains("\"metrics\""), "{text}");
+        assert!(!text.contains("\"summary\""), "{text}");
+        let s = PlaneSummary { completed: 9, ..PlaneSummary::default() };
+        let doc = metrics_document(Some(&s), &reg);
+        let v = json::parse(&json::to_string(&doc)).unwrap();
+        let summary = v.get("summary").expect("summary present");
+        assert_eq!(summary.get("completed").and_then(|c| c.as_usize()), Some(9));
+        assert!(v.get("metrics").is_some());
+    }
+}

@@ -1,0 +1,389 @@
+//! OpenAI-compatible wire types for the HTTP serving front.
+//!
+//! Hand-rolled over [`crate::util::json`] (serde is unavailable
+//! offline — same substitution [`crate::report::Table::save_json`]
+//! makes): requests parse into typed structs through a validating
+//! [`ChatCompletionRequest::parse`] that returns a descriptive error
+//! for the 400 path and never panics on malformed bodies, and
+//! responses serialize through [`crate::util::json::to_string`] so the
+//! wire shape is deterministic.
+//!
+//! The one deliberate extension to the OpenAI shape is the `x_carbon`
+//! block inside `usage`: per-request calibrated energy (kWh), carbon
+//! (gCO2e priced at the grid intensity of the virtual completion
+//! instant), the device that served the request, and how long the
+//! carbon-aware scheduler intentionally deferred it — the paper's
+//! sustainability accounting surfaced per response instead of only in
+//! post-hoc reports. Requests opt into deferral with the (also
+//! non-standard) `"deferrable": true` + `"deadline_s"` fields.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::{self, Value};
+
+/// One chat turn (`{"role": ..., "content": ...}`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChatMessage {
+    pub role: String,
+    pub content: String,
+}
+
+/// Parsed `POST /v1/chat/completions` body.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChatCompletionRequest {
+    /// Requested model name; the router picks the device (and thus the
+    /// actual model), so this is echoed back rather than enforced.
+    pub model: Option<String>,
+    pub messages: Vec<ChatMessage>,
+    /// SSE streaming (`data:` chunks) vs a single JSON document.
+    pub stream: bool,
+    /// Per-request generation cap; clamped to the server's
+    /// `max_new_tokens`.
+    pub max_tokens: Option<usize>,
+    /// Extension: mark the request `Deferrable` so the scheduler may
+    /// hold it for a forecast clean window.
+    pub deferrable: bool,
+    /// Extension: completion deadline for deferrable requests, seconds
+    /// from arrival.
+    pub deadline_s: Option<f64>,
+}
+
+impl ChatCompletionRequest {
+    /// Parse and validate a request body. Every malformed shape —
+    /// syntax errors, wrong types, missing or empty `messages` — comes
+    /// back as a descriptive `Err` (the HTTP 400 path); this function
+    /// never panics.
+    pub fn parse(body: &str) -> Result<Self, String> {
+        let v = json::parse(body).map_err(|e| format!("invalid JSON body: {e}"))?;
+        let obj = v.as_obj().ok_or("request body must be a JSON object")?;
+        let model = match obj.get("model") {
+            None | Some(Value::Null) => None,
+            Some(m) => Some(
+                m.as_str().ok_or("\"model\" must be a string")?.to_string(),
+            ),
+        };
+        let messages = obj
+            .get("messages")
+            .ok_or("missing \"messages\"")?
+            .as_arr()
+            .ok_or("\"messages\" must be an array")?;
+        if messages.is_empty() {
+            return Err("\"messages\" must not be empty".into());
+        }
+        let messages = messages
+            .iter()
+            .enumerate()
+            .map(|(i, m)| {
+                let role = m
+                    .get("role")
+                    .and_then(Value::as_str)
+                    .ok_or_else(|| format!("messages[{i}] needs a string \"role\""))?;
+                let content = m
+                    .get("content")
+                    .and_then(Value::as_str)
+                    .ok_or_else(|| format!("messages[{i}] needs a string \"content\""))?;
+                Ok(ChatMessage { role: role.to_string(), content: content.to_string() })
+            })
+            .collect::<Result<Vec<_>, String>>()?;
+        let stream = match obj.get("stream") {
+            None | Some(Value::Null) => false,
+            Some(s) => s.as_bool().ok_or("\"stream\" must be a boolean")?,
+        };
+        let max_tokens = match obj.get("max_tokens") {
+            None | Some(Value::Null) => None,
+            Some(m) => {
+                let n = m.as_usize().ok_or("\"max_tokens\" must be a positive integer")?;
+                if n == 0 {
+                    return Err("\"max_tokens\" must be >= 1".into());
+                }
+                Some(n)
+            }
+        };
+        let deferrable = match obj.get("deferrable") {
+            None | Some(Value::Null) => false,
+            Some(d) => d.as_bool().ok_or("\"deferrable\" must be a boolean")?,
+        };
+        let deadline_s = match obj.get("deadline_s") {
+            None | Some(Value::Null) => None,
+            Some(d) => {
+                let x = d.as_f64().ok_or("\"deadline_s\" must be a number")?;
+                if !(x > 0.0 && x.is_finite()) {
+                    return Err(format!("\"deadline_s\" must be positive and finite, got {x}"));
+                }
+                Some(x)
+            }
+        };
+        Ok(ChatCompletionRequest { model, messages, stream, max_tokens, deferrable, deadline_s })
+    }
+
+    /// The prompt text the backend sees: message contents joined in
+    /// order (the tokenizer is byte-level; role framing adds nothing).
+    pub fn prompt_text(&self) -> String {
+        self.messages.iter().map(|m| m.content.as_str()).collect::<Vec<_>>().join("\n")
+    }
+}
+
+/// The `x_carbon` sustainability block inside `usage`.
+#[derive(Debug, Clone, Default)]
+pub struct CarbonUsage {
+    /// Calibrated per-request energy estimate, kWh.
+    pub energy_kwh: f64,
+    /// Carbon priced at the grid intensity of the (virtual) completion
+    /// instant, gCO2e.
+    pub carbon_g: f64,
+    /// Device that served the request.
+    pub device: String,
+    /// How long the scheduler intentionally deferred the request for a
+    /// cleaner window (virtual seconds; 0 = dispatched at arrival).
+    pub deferred_for_s: f64,
+}
+
+/// The `usage` block of a completion response.
+#[derive(Debug, Clone, Default)]
+pub struct Usage {
+    pub prompt_tokens: usize,
+    pub completion_tokens: usize,
+    pub x_carbon: CarbonUsage,
+}
+
+impl Usage {
+    pub fn to_value(&self) -> Value {
+        let mut carbon = BTreeMap::new();
+        carbon.insert("energy_kwh".into(), Value::Num(self.x_carbon.energy_kwh));
+        carbon.insert("carbon_g".into(), Value::Num(self.x_carbon.carbon_g));
+        carbon.insert("device".into(), Value::Str(self.x_carbon.device.clone()));
+        carbon.insert("deferred_for_s".into(), Value::Num(self.x_carbon.deferred_for_s));
+        let mut u = BTreeMap::new();
+        u.insert("prompt_tokens".into(), Value::Num(self.prompt_tokens as f64));
+        u.insert("completion_tokens".into(), Value::Num(self.completion_tokens as f64));
+        u.insert(
+            "total_tokens".into(),
+            Value::Num((self.prompt_tokens + self.completion_tokens) as f64),
+        );
+        u.insert("x_carbon".into(), Value::Obj(carbon));
+        Value::Obj(u)
+    }
+}
+
+/// Non-streaming `POST /v1/chat/completions` response.
+#[derive(Debug, Clone)]
+pub struct ChatCompletionResponse {
+    pub id: String,
+    pub model: String,
+    pub created: u64,
+    pub content: String,
+    pub usage: Usage,
+}
+
+impl ChatCompletionResponse {
+    pub fn to_json(&self) -> String {
+        let mut message = BTreeMap::new();
+        message.insert("role".into(), Value::Str("assistant".into()));
+        message.insert("content".into(), Value::Str(self.content.clone()));
+        let mut choice = BTreeMap::new();
+        choice.insert("index".into(), Value::Num(0.0));
+        choice.insert("message".into(), Value::Obj(message));
+        choice.insert("finish_reason".into(), Value::Str("stop".into()));
+        let mut top = BTreeMap::new();
+        top.insert("id".into(), Value::Str(self.id.clone()));
+        top.insert("object".into(), Value::Str("chat.completion".into()));
+        top.insert("created".into(), Value::Num(self.created as f64));
+        top.insert("model".into(), Value::Str(self.model.clone()));
+        top.insert("choices".into(), Value::Arr(vec![Value::Obj(choice)]));
+        top.insert("usage".into(), self.usage.to_value());
+        json::to_string(&Value::Obj(top))
+    }
+}
+
+/// One streamed chunk body (the JSON after `data: `): a token delta,
+/// or — with `finish` — the terminal chunk carrying `finish_reason`
+/// and the `usage` block (x_carbon included).
+pub fn chunk_json(
+    id: &str,
+    model: &str,
+    created: u64,
+    token: Option<&str>,
+    usage: Option<&Usage>,
+) -> String {
+    let mut delta = BTreeMap::new();
+    if let Some(t) = token {
+        delta.insert("content".into(), Value::Str(t.to_string()));
+    }
+    let mut choice = BTreeMap::new();
+    choice.insert("index".into(), Value::Num(0.0));
+    choice.insert("delta".into(), Value::Obj(delta));
+    choice.insert(
+        "finish_reason".into(),
+        if token.is_some() { Value::Null } else { Value::Str("stop".into()) },
+    );
+    let mut top = BTreeMap::new();
+    top.insert("id".into(), Value::Str(id.to_string()));
+    top.insert("object".into(), Value::Str("chat.completion.chunk".into()));
+    top.insert("created".into(), Value::Num(created as f64));
+    top.insert("model".into(), Value::Str(model.to_string()));
+    top.insert("choices".into(), Value::Arr(vec![Value::Obj(choice)]));
+    if let Some(u) = usage {
+        top.insert("usage".into(), u.to_value());
+    }
+    json::to_string(&Value::Obj(top))
+}
+
+/// `GET /v1/models` body: one entry per cluster device, `id` = the
+/// model the device runs, `owned_by` = the device name.
+pub fn models_json(models: &[(String, String)]) -> String {
+    let data: Vec<Value> = models
+        .iter()
+        .map(|(model, device)| {
+            let mut m = BTreeMap::new();
+            m.insert("id".into(), Value::Str(model.clone()));
+            m.insert("object".into(), Value::Str("model".into()));
+            m.insert("owned_by".into(), Value::Str(device.clone()));
+            Value::Obj(m)
+        })
+        .collect();
+    let mut top = BTreeMap::new();
+    top.insert("object".into(), Value::Str("list".into()));
+    top.insert("data".into(), Value::Arr(data));
+    json::to_string(&Value::Obj(top))
+}
+
+/// OpenAI-style error body (`{"error": {"message", "type"}}`).
+pub fn error_json(message: &str, kind: &str) -> String {
+    let mut err = BTreeMap::new();
+    err.insert("message".into(), Value::Str(message.to_string()));
+    err.insert("type".into(), Value::Str(kind.to_string()));
+    let mut top = BTreeMap::new();
+    top.insert("error".into(), Value::Obj(err));
+    json::to_string(&Value::Obj(top))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_a_full_request() {
+        let r = ChatCompletionRequest::parse(
+            r#"{"model":"edge-1b-sim","messages":[{"role":"system","content":"be brief"},
+                {"role":"user","content":"hi"}],"stream":true,"max_tokens":8,
+                "deferrable":true,"deadline_s":600}"#,
+        )
+        .unwrap();
+        assert_eq!(r.model.as_deref(), Some("edge-1b-sim"));
+        assert_eq!(r.messages.len(), 2);
+        assert!(r.stream);
+        assert_eq!(r.max_tokens, Some(8));
+        assert!(r.deferrable);
+        assert_eq!(r.deadline_s, Some(600.0));
+        assert_eq!(r.prompt_text(), "be brief\nhi");
+    }
+
+    #[test]
+    fn minimal_request_defaults() {
+        let r = ChatCompletionRequest::parse(
+            r#"{"messages":[{"role":"user","content":"hi"}]}"#,
+        )
+        .unwrap();
+        assert_eq!(r.model, None);
+        assert!(!r.stream);
+        assert_eq!(r.max_tokens, None);
+        assert!(!r.deferrable);
+    }
+
+    #[test]
+    fn malformed_bodies_error_and_never_panic() {
+        // every case must come back as a descriptive Err — the 400 path
+        let cases: &[(&str, &str)] = &[
+            ("", "invalid JSON"),
+            ("{", "invalid JSON"),
+            ("[1,2]", "must be a JSON object"),
+            ("42", "must be a JSON object"),
+            (r#"{"messages":[]}"#, "must not be empty"),
+            (r#"{"model":"x"}"#, "missing \"messages\""),
+            (r#"{"messages":"hi"}"#, "must be an array"),
+            (r#"{"messages":[{"role":"user"}]}"#, "content"),
+            (r#"{"messages":[{"content":"hi"}]}"#, "role"),
+            (r#"{"messages":[{"role":1,"content":"hi"}]}"#, "role"),
+            (r#"{"messages":[{"role":"user","content":"hi"}],"stream":"yes"}"#, "stream"),
+            (r#"{"messages":[{"role":"user","content":"hi"}],"max_tokens":0}"#, ">= 1"),
+            (r#"{"messages":[{"role":"user","content":"hi"}],"max_tokens":-3}"#, "max_tokens"),
+            (r#"{"messages":[{"role":"user","content":"hi"}],"deadline_s":-1}"#, "deadline_s"),
+            (r#"{"messages":[{"role":"user","content":"hi"}],"model":7}"#, "model"),
+        ];
+        for (body, needle) in cases {
+            let err = ChatCompletionRequest::parse(body).unwrap_err();
+            assert!(err.contains(needle), "body {body:?}: error {err:?} missing {needle:?}");
+        }
+    }
+
+    #[test]
+    fn garbage_bytes_do_not_panic() {
+        for body in ["\u{0}\u{1}\u{2}", "}}}}{{{{", "data: [DONE]", "\"unterminated"] {
+            let _ = ChatCompletionRequest::parse(body);
+        }
+    }
+
+    #[test]
+    fn response_wire_shape() {
+        let resp = ChatCompletionResponse {
+            id: "chatcmpl-7".into(),
+            model: "edge-1b-sim".into(),
+            created: 1_700_000_000,
+            content: "hello".into(),
+            usage: Usage {
+                prompt_tokens: 3,
+                completion_tokens: 5,
+                x_carbon: CarbonUsage {
+                    energy_kwh: 1.5e-6,
+                    carbon_g: 1e-4,
+                    device: "jetson-orin-nx".into(),
+                    deferred_for_s: 0.0,
+                },
+            },
+        };
+        let text = resp.to_json();
+        let v = json::parse(&text).unwrap();
+        assert_eq!(v.get("object").and_then(Value::as_str), Some("chat.completion"));
+        let choice = &v.get("choices").and_then(Value::as_arr).unwrap()[0];
+        assert_eq!(
+            choice.get("message").and_then(|m| m.get("content")).and_then(Value::as_str),
+            Some("hello")
+        );
+        let usage = v.get("usage").unwrap();
+        assert_eq!(usage.get("total_tokens").and_then(Value::as_usize), Some(8));
+        let carbon = usage.get("x_carbon").unwrap();
+        assert_eq!(carbon.get("device").and_then(Value::as_str), Some("jetson-orin-nx"));
+        assert!(carbon.get("energy_kwh").and_then(Value::as_f64).unwrap() > 0.0);
+    }
+
+    #[test]
+    fn chunk_wire_shape() {
+        let tok = chunk_json("c1", "m", 0, Some("he"), None);
+        let v = json::parse(&tok).unwrap();
+        assert_eq!(v.get("object").and_then(Value::as_str), Some("chat.completion.chunk"));
+        let choice = &v.get("choices").and_then(Value::as_arr).unwrap()[0];
+        assert_eq!(
+            choice.get("delta").and_then(|d| d.get("content")).and_then(Value::as_str),
+            Some("he")
+        );
+        assert!(matches!(choice.get("finish_reason"), Some(Value::Null)));
+        let fin = chunk_json("c1", "m", 0, None, Some(&Usage::default()));
+        let v = json::parse(&fin).unwrap();
+        let choice = &v.get("choices").and_then(Value::as_arr).unwrap()[0];
+        assert_eq!(choice.get("finish_reason").and_then(Value::as_str), Some("stop"));
+        assert!(v.get("usage").is_some());
+    }
+
+    #[test]
+    fn models_and_error_bodies() {
+        let m = models_json(&[("edge-1b-sim".into(), "jetson-orin-nx".into())]);
+        let v = json::parse(&m).unwrap();
+        assert_eq!(v.get("data").and_then(Value::as_arr).unwrap().len(), 1);
+        let e = error_json("queue full", "overloaded");
+        let v = json::parse(&e).unwrap();
+        assert_eq!(
+            v.get("error").and_then(|e| e.get("type")).and_then(Value::as_str),
+            Some("overloaded")
+        );
+    }
+}

@@ -1,0 +1,979 @@
+//! Network-facing serving: an OpenAI-compatible HTTP front on the
+//! wallclock plane.
+//!
+//! ```text
+//!  accept thread ──► handler threads ──(mpsc)──► ingest (caller thread)
+//!   (one per TCP        parse + admit             defer + route via the
+//!    connection)        or shed w/ 429            shared policy core
+//!                            ▲                          │
+//!            per-request     │            per-device DeviceQueues
+//!            reply channel   │                          │
+//!                            └──── worker threads ◄─────┘
+//!                                   (own InferenceBackend; stream
+//!                                    tokens back, then Done with the
+//!                                    calibrated x_carbon numbers)
+//! ```
+//!
+//! The server is dependency-light on purpose: `std::net::TcpListener`,
+//! thread-per-connection, hand-rolled HTTP/1.1 — the same offline
+//! substitution the rest of the crate makes for serde/clap/tokio. One
+//! request per connection (`Connection: close`), which keeps the
+//! protocol surface a strict, auditable subset.
+//!
+//! Routes:
+//! - `POST /v1/chat/completions` — [`ChatCompletionRequest`] in;
+//!   either one [`ChatCompletionResponse`] JSON document or an SSE
+//!   stream of `data:` chunks (`"stream": true`), one chunk per
+//!   generated token, closed by a usage chunk and `data: [DONE]`. The
+//!   usage block carries `x_carbon` (calibrated energy kWh, gCO2e at
+//!   the completion instant's grid intensity, serving device,
+//!   deferred-for virtual seconds) — the ledger's per-request
+//!   attribution surfaced on the wire.
+//! - `GET /v1/models` — one entry per cluster device.
+//! - `GET /metrics` — the live [`MetricsRegistry`] rendered through
+//!   [`crate::report::summary::metrics_document`], the same code path
+//!   `--metrics-json` uses.
+//! - `POST /admin/drain` — begin graceful drain (see below).
+//!
+//! **Admission and backpressure.** A parsed request becomes a
+//! synthetic [`Prompt`] arriving "now" on the virtual clock and is
+//! handed to the ingest loop, which defers deferrable requests into
+//! forecast clean windows ([`PlacementPolicy::plan_release`]) and
+//! routes through the shared policy core — network traffic exercises
+//! exactly the decision path the replay planes pin. When admitted
+//! work in flight reaches [`HttpOptions::max_queue_depth`] the
+//! request is shed with HTTP 429, counted in `shed_total` and audited
+//! as a [`TraceEvent::Shed`] (`queue_full`) — explicit load-shedding,
+//! never a silent drop.
+//!
+//! **Drain.** SIGTERM or `POST /admin/drain` stops the accept loop
+//! and new admissions (503), flushes every deferred hold, and lets
+//! in-flight requests complete before [`HttpServer::run`] returns the
+//! final [`ServeReport`] — the PR-8 graceful-degradation contract on
+//! a real socket.
+//!
+//! Not yet wired on this plane: device churn / fault injection
+//! (rejected at [`HttpServer::bind`]), worker-side carbon sizing and
+//! continuous batching (workers run plain dynamic batching). The
+//! replay plane (`verdant serve` without `--http`) keeps full
+//! coverage of those paths.
+
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::cluster::Cluster;
+use crate::config::ExecutionMode;
+use crate::coordinator::estimator::BenchmarkDb;
+use crate::coordinator::policy::PlacementPolicy;
+use crate::report::summary;
+use crate::runtime::{
+    backend::no_batch_err, CalibratedBackend, HybridBackend, InferenceBackend, PjrtBackend,
+};
+use crate::server::api::{self, ChatCompletionRequest, ChatCompletionResponse};
+use crate::server::service::{DeviceQueue, QueueItem, ServeOptions, ServeReport};
+use crate::telemetry::trace::TraceEvent;
+use crate::telemetry::{EnergyLedger, MetricsRegistry};
+use crate::util::json;
+use crate::util::stats::{Histogram, Summary};
+use crate::workload::{complexity, tokenizer, Category, Prompt, SloClass};
+
+/// Completion deadline (virtual seconds) for `"deferrable": true`
+/// requests that set no `deadline_s` of their own.
+const DEFAULT_DEADLINE_S: f64 = 600.0;
+
+/// Largest accepted request body; a hostile Content-Length cannot OOM.
+const MAX_BODY_BYTES: usize = 1 << 20;
+
+/// Process-wide SIGTERM latch (see [`install_sigterm`]); polled by the
+/// accept and ingest loops.
+static TERM: AtomicBool = AtomicBool::new(false);
+
+/// HTTP-front parameters (`[serving.http]` in config).
+#[derive(Debug, Clone)]
+pub struct HttpOptions {
+    /// Listen address, e.g. `127.0.0.1:8080` (`0` port picks a free
+    /// one — the loopback tests bind that way).
+    pub addr: String,
+    /// Admitted-but-unfinished requests allowed before new ones shed
+    /// with 429. `0` sheds everything (backpressure tests).
+    pub max_queue_depth: usize,
+    /// How long a handler waits for its completion before giving up
+    /// (504 non-streaming; stream truncation after headers).
+    pub request_timeout: Duration,
+}
+
+impl Default for HttpOptions {
+    fn default() -> Self {
+        HttpOptions {
+            addr: "127.0.0.1:8080".into(),
+            max_queue_depth: 256,
+            request_timeout: Duration::from_secs(30),
+        }
+    }
+}
+
+/// State every handler thread shares with the ingest loop and workers.
+struct Shared {
+    started: Instant,
+    time_scale: f64,
+    max_new_tokens: usize,
+    max_queue_depth: usize,
+    request_timeout: Duration,
+    /// Graceful drain: set by SIGTERM, `/admin/drain`, or shutdown.
+    drain: AtomicBool,
+    next_id: AtomicU64,
+    /// Requests handed to the ingest loop (the drain barrier compares
+    /// this against the ingest loop's dispatched count).
+    admitted: AtomicU64,
+    /// Admitted but not yet completed — the 429 backpressure depth.
+    in_flight: AtomicUsize,
+    batches: AtomicUsize,
+    shed: AtomicUsize,
+    shed_ids: Mutex<Vec<u64>>,
+    /// Per-request reply channels, keyed by prompt id; the worker that
+    /// serves the prompt removes the slot and streams into it.
+    replies: Mutex<HashMap<u64, ReplySlot>>,
+    /// Intentional deferral per prompt id (virtual seconds), written by
+    /// the ingest loop, consumed by the worker for `x_carbon`.
+    deferred_for: Mutex<HashMap<u64, f64>>,
+    /// Live registry behind `GET /metrics`; folded into the final
+    /// report registry at shutdown.
+    metrics: Mutex<MetricsRegistry>,
+    trace: Option<Arc<crate::telemetry::TraceSink>>,
+    /// `(model, device)` pairs for `GET /v1/models`.
+    models: Vec<(String, String)>,
+}
+
+impl Shared {
+    fn vnow(&self) -> f64 {
+        self.started.elapsed().as_secs_f64() * self.time_scale
+    }
+}
+
+struct ReplySlot {
+    tx: mpsc::Sender<Reply>,
+    /// The request's effective `max_tokens` cap; the worker truncates
+    /// the stub's fixed-length output to it, so streamed chunk counts
+    /// and the report's `output_tokens` agree exactly.
+    max_tokens: usize,
+}
+
+enum Reply {
+    Token(String),
+    Done(DoneInfo),
+}
+
+struct DoneInfo {
+    device: String,
+    prompt_tokens: usize,
+    output_tokens: usize,
+    energy_kwh: f64,
+    carbon_g: f64,
+    deferred_for_s: f64,
+}
+
+struct Completion {
+    device: usize,
+    latency_s: f64,
+    output_tokens: usize,
+    batch_fill: usize,
+    est_energy_kwh: f64,
+    arrival_s: f64,
+    vfinish_s: f64,
+    deadline_s: Option<f64>,
+}
+
+/// A bound-but-not-yet-serving HTTP server. [`Self::bind`] validates
+/// options and claims the socket; [`Self::run`] serves until drain.
+pub struct HttpServer {
+    listener: TcpListener,
+    cluster: Cluster,
+    opts: ServeOptions,
+    http: HttpOptions,
+}
+
+impl HttpServer {
+    /// Validate options, resolve the strategy, and claim the listen
+    /// socket. Everything that can fail loudly does so here — before
+    /// a caller advertises the address.
+    pub fn bind(cluster: &Cluster, opts: &ServeOptions, http: &HttpOptions) -> Result<Self> {
+        if cluster.devices.is_empty() {
+            return Err(anyhow!("nothing to serve: cluster has no devices"));
+        }
+        opts.validate(Some(cluster.devices.len()))?;
+        if opts.churn.as_ref().is_some_and(|c| !c.is_empty())
+            || opts.fail_device_after_batches.is_some()
+        {
+            return Err(anyhow!(
+                "churn/fault injection is not supported on the HTTP plane yet; \
+                 use the `verdant serve` replay mode for availability scenarios"
+            ));
+        }
+        // resolve the strategy at bind time: an unknown name must error
+        // before the listener is handed out, exactly as `serve` does
+        PlacementPolicy::new(&opts.strategy, cluster, None)?;
+        let listener = TcpListener::bind(&http.addr)
+            .map_err(|e| anyhow!("binding {}: {e}", http.addr))?;
+        listener.set_nonblocking(true)?;
+        Ok(HttpServer {
+            listener,
+            cluster: cluster.clone(),
+            opts: opts.clone(),
+            http: http.clone(),
+        })
+    }
+
+    /// The bound address (useful with port `0`).
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// Serve until SIGTERM or `/admin/drain`, then drain in-flight
+    /// requests and report — same [`ServeReport`] shape as the replay
+    /// plane, so printers and benches need no special case.
+    pub fn run(self) -> Result<ServeReport> {
+        install_sigterm();
+        let cluster = Arc::new(self.cluster.clone());
+        let n_dev = cluster.devices.len();
+        let mut policy =
+            PlacementPolicy::new(&self.opts.strategy, &self.cluster, self.opts.grid.clone())?;
+        if let Some(sink) = &self.opts.trace {
+            policy = policy.with_trace(Arc::clone(sink));
+        }
+        let db: Arc<BenchmarkDb> = match &self.opts.db {
+            Some(db) => Arc::clone(db),
+            None => Arc::new(BenchmarkDb::build(&self.cluster, &[1, 4, 8], 2, 69.0, 7)),
+        };
+        let started = Instant::now();
+        let shared = Arc::new(Shared {
+            started,
+            time_scale: self.opts.time_scale,
+            max_new_tokens: self.opts.max_new_tokens,
+            max_queue_depth: self.http.max_queue_depth,
+            request_timeout: self.http.request_timeout,
+            drain: AtomicBool::new(false),
+            next_id: AtomicU64::new(0),
+            admitted: AtomicU64::new(0),
+            in_flight: AtomicUsize::new(0),
+            batches: AtomicUsize::new(0),
+            shed: AtomicUsize::new(0),
+            shed_ids: Mutex::new(Vec::new()),
+            replies: Mutex::new(HashMap::new()),
+            deferred_for: Mutex::new(HashMap::new()),
+            metrics: Mutex::new(MetricsRegistry::new()),
+            trace: policy.trace_sink().cloned(),
+            models: cluster
+                .devices
+                .iter()
+                .map(|d| (d.model.clone(), d.name.clone()))
+                .collect(),
+        });
+
+        let queues: Arc<Vec<DeviceQueue>> =
+            Arc::new((0..n_dev).map(|_| DeviceQueue::new()).collect());
+        let done = Arc::new(AtomicBool::new(false));
+        let (tx, rx) = mpsc::channel::<Completion>();
+        let (ingest_tx, ingest_rx) = mpsc::channel::<Prompt>();
+
+        // --- workers: the same per-device loop the replay plane runs,
+        // minus sizing/continuous batching, plus the reply streams ----
+        let mut workers = Vec::new();
+        for d in 0..n_dev {
+            let dev = cluster.devices[d].clone();
+            let cluster = Arc::clone(&cluster);
+            let queues = Arc::clone(&queues);
+            let done = Arc::clone(&done);
+            let db = Arc::clone(&db);
+            let tx = tx.clone();
+            let opts = self.opts.clone();
+            let shared = Arc::clone(&shared);
+            let worker_trace = policy.trace_sink().cloned();
+            workers.push(std::thread::spawn(move || -> Result<()> {
+                let backend: Box<dyn InferenceBackend> = match opts.execution {
+                    ExecutionMode::Real => {
+                        Box::new(PjrtBackend::load(&opts.artifacts_dir, &[dev.model.as_str()])?)
+                    }
+                    ExecutionMode::Hybrid => Box::new(
+                        HybridBackend::load(&opts.artifacts_dir, &[dev.model.as_str()], &cluster)?
+                            .with_spot_check_every_n(opts.spot_check_every_n),
+                    ),
+                    // Calibrated is rejected by validate() before bind
+                    ExecutionMode::Stub | ExecutionMode::Calibrated => {
+                        Box::new(CalibratedBackend::from_cluster(&cluster))
+                    }
+                };
+                loop {
+                    let items =
+                        queues[d].pull_batch(opts.batch_size, opts.batch_timeout, &done, None);
+                    if items.is_empty() {
+                        return Ok(());
+                    }
+                    // sleep out the calibrated occupancy at time_scale
+                    // compression (same rule as the replay plane) so
+                    // queueing behaves like a real engine's
+                    if opts.execution == ExecutionMode::Stub {
+                        let occ_s: f64 = items
+                            .iter()
+                            .map(|i| db.cost(&dev, &i.prompt, items.len().max(1)).e2e_s)
+                            .sum();
+                        let wall = occ_s / opts.time_scale;
+                        if wall > 2e-4 {
+                            std::thread::sleep(Duration::from_secs_f64(wall.min(0.25)));
+                        }
+                    }
+                    let texts: Vec<&str> =
+                        items.iter().map(|i| i.prompt.text.as_str()).collect();
+                    let exec_batch = backend
+                        .pick_batch(&dev.model, texts.len())
+                        .ok_or_else(|| no_batch_err(backend.as_ref(), &dev.model, texts.len()))?;
+                    let out =
+                        backend.generate(&dev.model, exec_batch, &texts, opts.max_new_tokens)?;
+                    let vfinish_s = started.elapsed().as_secs_f64() * opts.time_scale;
+                    if let Some(sink) = worker_trace.as_deref() {
+                        let batch_kwh: f64 = items
+                            .iter()
+                            .map(|i| db.cost(&dev, &i.prompt, items.len().max(1)).energy_kwh)
+                            .sum();
+                        sink.emit(&TraceEvent::BatchLaunch {
+                            t: vfinish_s,
+                            device: dev.name.clone(),
+                            members: items.iter().map(|i| i.prompt.id).collect(),
+                            energy_kwh: batch_kwh,
+                            carbon_kg: cluster.carbon.kg_co2e(batch_kwh, vfinish_s),
+                        });
+                    }
+                    shared.batches.fetch_add(1, Ordering::Relaxed);
+                    for (i, item) in items.iter().enumerate() {
+                        let slot = shared.replies.lock().unwrap().remove(&item.prompt.id);
+                        let cap = slot.as_ref().map_or(opts.max_new_tokens, |s| s.max_tokens);
+                        let emit_n = out.tokens[i].len().min(cap);
+                        let energy =
+                            db.cost(&dev, &item.prompt, items.len().max(1)).energy_kwh;
+                        let carbon_kg = cluster.carbon.kg_co2e(energy, vfinish_s);
+                        let deferred_for = shared
+                            .deferred_for
+                            .lock()
+                            .unwrap()
+                            .remove(&item.prompt.id)
+                            .unwrap_or(0.0);
+                        if let Some(slot) = slot {
+                            // a dead receiver (handler timed out) just
+                            // makes these sends no-ops
+                            for t in &out.tokens[i][..emit_n] {
+                                let _ = slot.tx.send(Reply::Token(tokenizer::decode(
+                                    std::slice::from_ref(t),
+                                )));
+                            }
+                            let _ = slot.tx.send(Reply::Done(DoneInfo {
+                                device: dev.name.clone(),
+                                prompt_tokens: item.prompt.prompt_tokens,
+                                output_tokens: emit_n,
+                                energy_kwh: energy,
+                                carbon_g: carbon_kg * 1000.0,
+                                deferred_for_s: deferred_for,
+                            }));
+                        }
+                        shared.in_flight.fetch_sub(1, Ordering::AcqRel);
+                        let _ = tx.send(Completion {
+                            device: d,
+                            latency_s: item.enqueued.elapsed().as_secs_f64(),
+                            output_tokens: emit_n,
+                            batch_fill: items.len(),
+                            est_energy_kwh: energy,
+                            arrival_s: item.prompt.arrival_s,
+                            vfinish_s,
+                            deadline_s: item.prompt.slo.deadline_s(),
+                        });
+                    }
+                }
+            }));
+        }
+        drop(tx);
+
+        // --- accept loop: nonblocking poll so drain is observed -------
+        let listener = self.listener;
+        let accept_shared = Arc::clone(&shared);
+        let accept_tx = ingest_tx.clone();
+        let accept = std::thread::spawn(move || {
+            let mut handlers: Vec<std::thread::JoinHandle<()>> = Vec::new();
+            loop {
+                if TERM.load(Ordering::SeqCst) {
+                    accept_shared.drain.store(true, Ordering::SeqCst);
+                }
+                if accept_shared.drain.load(Ordering::SeqCst) {
+                    break;
+                }
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        let shared = Arc::clone(&accept_shared);
+                        let tx = accept_tx.clone();
+                        handlers.push(std::thread::spawn(move || {
+                            let _ = serve_connection(stream, &shared, &tx);
+                        }));
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(5));
+                    }
+                    Err(_) => std::thread::sleep(Duration::from_millis(5)),
+                }
+                // reap finished handlers so a long-lived server does
+                // not accumulate join handles
+                handlers.retain(|h| !h.is_finished());
+            }
+            handlers
+        });
+        drop(ingest_tx);
+
+        // --- ingest (this thread): defer, route, drain barrier --------
+        let mut held: Vec<(f64, Prompt)> = Vec::new();
+        let mut deferred = 0usize;
+        let mut deferred_ids: Vec<u64> = Vec::new();
+        let mut assignment: Vec<(u64, usize)> = Vec::new();
+        let mut dispatched: u64 = 0;
+        loop {
+            if TERM.load(Ordering::SeqCst) {
+                shared.drain.store(true, Ordering::SeqCst);
+            }
+            let draining = shared.drain.load(Ordering::SeqCst);
+            let now_v = shared.vnow();
+            // flush holds whose window opened — all of them when
+            // draining: a drain must not strand a deferred request
+            let mut k = 0;
+            while k < held.len() {
+                if draining || held[k].0 <= now_v {
+                    let (release, p) = held.swap_remove(k);
+                    if let Some(sink) = policy.trace_sink() {
+                        let t = if release <= now_v { release } else { now_v };
+                        sink.emit(&TraceEvent::Release { t, prompt: p.id });
+                    }
+                    dispatch_http(
+                        p, &cluster, &db, &policy, &queues, self.opts.batch_size, now_v,
+                        &mut assignment,
+                    );
+                    dispatched += 1;
+                } else {
+                    k += 1;
+                }
+            }
+            match ingest_rx.recv_timeout(Duration::from_millis(10)) {
+                Ok(p) => {
+                    let backlog_total: f64 = queues.iter().map(|q| q.backlog_s()).sum();
+                    let release = policy.plan_release(
+                        &p,
+                        &cluster,
+                        &db,
+                        self.opts.batch_size,
+                        backlog_total,
+                        p.arrival_s,
+                    );
+                    if release > p.arrival_s + 1e-6 && !shared.drain.load(Ordering::SeqCst) {
+                        deferred += 1;
+                        deferred_ids.push(p.id);
+                        shared
+                            .deferred_for
+                            .lock()
+                            .unwrap()
+                            .insert(p.id, release - p.arrival_s);
+                        held.push((release, p));
+                    } else {
+                        let now_v = shared.vnow();
+                        dispatch_http(
+                            p, &cluster, &db, &policy, &queues, self.opts.batch_size, now_v,
+                            &mut assignment,
+                        );
+                        dispatched += 1;
+                    }
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => {
+                    // drain barrier: everything admitted has been
+                    // dispatched and no hold remains
+                    if shared.drain.load(Ordering::SeqCst)
+                        && held.is_empty()
+                        && dispatched == shared.admitted.load(Ordering::SeqCst)
+                    {
+                        break;
+                    }
+                }
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        drop(ingest_rx);
+
+        // --- shutdown: workers drain their queues, then everything
+        // joins in dependency order ------------------------------------
+        done.store(true, Ordering::Release);
+        let handlers = accept.join().unwrap_or_default();
+        let mut errors: Vec<String> = Vec::new();
+        for w in workers {
+            match w.join() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => errors.push(e.to_string()),
+                Err(panic) => {
+                    let msg = panic
+                        .downcast_ref::<String>()
+                        .cloned()
+                        .or_else(|| panic.downcast_ref::<&str>().map(|s| s.to_string()))
+                        .unwrap_or_else(|| "unknown panic payload".into());
+                    errors.push(format!("worker panicked: {msg}"));
+                }
+            }
+        }
+        // backstop: with every worker gone, anything still queued (a
+        // dead worker's leftovers) can only be shed — counted, audited,
+        // and the waiting handler unblocked by dropping its reply slot
+        let vend = shared.vnow();
+        for q in queues.iter() {
+            for item in q.try_drain(usize::MAX) {
+                shared.in_flight.fetch_sub(1, Ordering::AcqRel);
+                shared.replies.lock().unwrap().remove(&item.prompt.id);
+                shared.shed.fetch_add(1, Ordering::Relaxed);
+                shared.shed_ids.lock().unwrap().push(item.prompt.id);
+                if let Some(sink) = policy.trace_sink() {
+                    sink.emit(&TraceEvent::Shed {
+                        t: vend,
+                        prompt: item.prompt.id,
+                        reason: "worker_dead".to_string(),
+                    });
+                }
+            }
+        }
+
+        // --- collect (all sends are buffered: workers are joined) -----
+        let mut latency = Summary::new();
+        let mut hist = Histogram::latency();
+        let mut tokens = 0usize;
+        let mut per_device = vec![0usize; n_dev];
+        let mut fills = Summary::new();
+        let mut completed = 0usize;
+        let mut deadline_violations = 0usize;
+        let mut ledger = EnergyLedger::new(self.cluster.carbon.clone());
+        for c in rx {
+            completed += 1;
+            latency.add(c.latency_s);
+            hist.add(c.latency_s);
+            tokens += c.output_tokens;
+            per_device[c.device] += 1;
+            fills.add(c.batch_fill as f64);
+            if let Some(dl) = c.deadline_s {
+                if c.vfinish_s - c.arrival_s > dl + 1e-6 {
+                    deadline_violations += 1;
+                }
+            }
+            ledger.post_batch_shifted(
+                &self.cluster.devices[c.device].name,
+                c.est_energy_kwh,
+                0.0,
+                c.vfinish_s,
+                &[c.arrival_s],
+            );
+        }
+        for h in handlers {
+            let _ = h.join();
+        }
+
+        let shed = shared.shed.load(Ordering::Acquire);
+        let mut shed_ids = shared.shed_ids.lock().unwrap().clone();
+        shed_ids.sort_unstable();
+        ledger.post_shed(shed as u64);
+        let wallclock = started.elapsed().as_secs_f64();
+        let batches = shared.batches.load(Ordering::Acquire);
+        let (est_active_kwh, _, est_carbon_kg) = ledger.totals();
+        deferred_ids.sort_unstable();
+
+        // the final registry = the live http_* counters plus the same
+        // plane counters the replay plane reports
+        let mut metrics = shared.metrics.lock().unwrap().clone();
+        metrics.add("decisions_total", assignment.len() as u64);
+        metrics.add("defers_total", deferred as u64);
+        metrics.add("batches_total", batches as u64);
+        metrics.add("deadline_violations_total", deadline_violations as u64);
+        metrics.set_gauge("decisions_per_s", completed as f64 / wallclock.max(1e-9));
+        if let Some(g) = &policy.grid {
+            metrics.set_gauge("drift_mape", g.drift_mape());
+        }
+        metrics.observe_summary("batch_fill", &fills);
+        metrics.record_ledger(&ledger);
+        metrics.add("shed_total", shed as u64);
+        if !errors.is_empty() {
+            metrics.add("worker_errors_total", errors.len() as u64);
+        }
+        let device_accounts: Vec<(String, f64, f64, f64)> = ledger
+            .accounts()
+            .map(|(n, a)| (n.clone(), a.active_kwh, a.idle_kwh, a.carbon_kg))
+            .collect();
+
+        Ok(ServeReport {
+            completed,
+            wallclock_s: wallclock,
+            requests_per_s: completed as f64 / wallclock.max(1e-9),
+            output_tokens: tokens,
+            tokens_per_s: tokens as f64 / wallclock.max(1e-9),
+            latency_mean_s: latency.mean(),
+            latency_p50_s: hist.p50(),
+            latency_p95_s: hist.p95(),
+            batches,
+            mean_batch_fill: fills.mean(),
+            batch_joins: 0,
+            per_device: self
+                .cluster
+                .devices
+                .iter()
+                .zip(&per_device)
+                .map(|(d, &c)| (d.name.clone(), c))
+                .collect(),
+            assignment,
+            deferred,
+            deferred_ids,
+            sizing_holds: 0,
+            sizing_carbon_saved_kg: 0.0,
+            replans: 0,
+            replan_released_early: 0,
+            replan_extended: 0,
+            deadline_violations,
+            est_energy_kwh: est_active_kwh,
+            est_carbon_kg,
+            est_saved_kg: ledger.realized_savings_kg(),
+            device_accounts,
+            outages: 0,
+            failovers: 0,
+            shed,
+            shed_ids,
+            errors,
+            metrics,
+        })
+    }
+}
+
+/// Bind + run in one call — what `verdant serve --http <addr>` does.
+pub fn serve_http(
+    cluster: &Cluster,
+    opts: &ServeOptions,
+    http: &HttpOptions,
+) -> Result<ServeReport> {
+    HttpServer::bind(cluster, opts, http)?.run()
+}
+
+/// Route one synthetic arrival through the shared policy core and
+/// enqueue it on the routed device (mirror of the replay plane's
+/// `dispatch`).
+#[allow(clippy::too_many_arguments)]
+fn dispatch_http(
+    p: Prompt,
+    cluster: &Cluster,
+    db: &BenchmarkDb,
+    policy: &PlacementPolicy,
+    queues: &[DeviceQueue],
+    batch_size: usize,
+    now_v: f64,
+    assignment: &mut Vec<(u64, usize)>,
+) {
+    let backlog: Vec<f64> = queues.iter().map(|q| q.backlog_s()).collect();
+    let d = policy.route_arrival(&p, cluster, db, batch_size, &backlog, now_v);
+    assignment.push((p.id, d));
+    let est = db.cost(&cluster.devices[d], &p, batch_size).e2e_s;
+    queues[d].push(QueueItem {
+        prompt: p,
+        enqueued: Instant::now(),
+        est_ms: (est * 1000.0) as usize,
+        attempts: 0,
+    });
+}
+
+/// Latch SIGTERM into [`TERM`] without a libc crate: bind the one
+/// symbol we need. The handler only stores an atomic — async-signal
+/// safe.
+#[cfg(unix)]
+fn install_sigterm() {
+    extern "C" fn on_term(_sig: i32) {
+        TERM.store(true, Ordering::SeqCst);
+    }
+    extern "C" {
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+    }
+    const SIGTERM: i32 = 15;
+    unsafe {
+        signal(SIGTERM, on_term);
+    }
+}
+
+#[cfg(not(unix))]
+fn install_sigterm() {}
+
+/// Read one HTTP/1.1 request and dispatch it to a route handler.
+fn serve_connection(
+    mut stream: TcpStream,
+    shared: &Shared,
+    ingest: &mpsc::Sender<Prompt>,
+) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(Duration::from_secs(5)))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let mut parts = line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_string();
+    let path = parts.next().unwrap_or("").to_string();
+    let mut content_length = 0usize;
+    loop {
+        let mut h = String::new();
+        if reader.read_line(&mut h)? == 0 {
+            break;
+        }
+        let h = h.trim();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            if k.trim().eq_ignore_ascii_case("content-length") {
+                content_length = v.trim().parse().unwrap_or(0);
+            }
+        }
+    }
+    shared.metrics.lock().unwrap().inc("http_requests_total");
+    if content_length > MAX_BODY_BYTES {
+        return write_simple(
+            &mut stream,
+            413,
+            "Payload Too Large",
+            &api::error_json("request body over 1 MiB", "invalid_request_error"),
+        );
+    }
+    let mut body = vec![0u8; content_length];
+    if content_length > 0 {
+        reader.read_exact(&mut body)?;
+    }
+    let body = String::from_utf8_lossy(&body).into_owned();
+    match (method.as_str(), path.as_str()) {
+        ("POST", "/v1/chat/completions") => handle_chat(stream, shared, ingest, &body),
+        ("GET", "/v1/models") => {
+            write_simple(&mut stream, 200, "OK", &api::models_json(&shared.models))
+        }
+        ("GET", "/metrics") => {
+            let doc = {
+                let reg = shared.metrics.lock().unwrap();
+                json::to_string(&summary::metrics_document(None, &reg))
+            };
+            write_simple(&mut stream, 200, "OK", &doc)
+        }
+        ("POST", "/admin/drain") => {
+            shared.drain.store(true, Ordering::SeqCst);
+            write_simple(&mut stream, 200, "OK", "{\"status\":\"draining\"}")
+        }
+        _ => write_simple(
+            &mut stream,
+            404,
+            "Not Found",
+            &api::error_json(&format!("no route {method} {path}"), "invalid_request_error"),
+        ),
+    }
+}
+
+/// `POST /v1/chat/completions`: admit (or shed), then stream or block
+/// on the per-request reply channel.
+fn handle_chat(
+    mut stream: TcpStream,
+    shared: &Shared,
+    ingest: &mpsc::Sender<Prompt>,
+    body: &str,
+) -> std::io::Result<()> {
+    if shared.drain.load(Ordering::SeqCst) {
+        return write_simple(
+            &mut stream,
+            503,
+            "Service Unavailable",
+            &api::error_json("server is draining", "overloaded"),
+        );
+    }
+    let req = match ChatCompletionRequest::parse(body) {
+        Ok(r) => r,
+        Err(e) => {
+            shared.metrics.lock().unwrap().inc("http_400_total");
+            return write_simple(
+                &mut stream,
+                400,
+                "Bad Request",
+                &api::error_json(&e, "invalid_request_error"),
+            );
+        }
+    };
+    let now_v = shared.vnow();
+    let depth = shared.in_flight.load(Ordering::Acquire);
+    let id = shared.next_id.fetch_add(1, Ordering::Relaxed);
+    if depth >= shared.max_queue_depth {
+        // explicit load-shedding: account it exactly like the planes'
+        // shed path so `completed + shed` still covers every request
+        shared.shed.fetch_add(1, Ordering::Relaxed);
+        shared.shed_ids.lock().unwrap().push(id);
+        if let Some(sink) = &shared.trace {
+            sink.emit(&TraceEvent::Shed { t: now_v, prompt: id, reason: "queue_full".into() });
+        }
+        shared.metrics.lock().unwrap().inc("http_429_total");
+        return write_simple(
+            &mut stream,
+            429,
+            "Too Many Requests",
+            &api::error_json(
+                &format!(
+                    "queue depth {depth} at the configured limit {}; retry later",
+                    shared.max_queue_depth
+                ),
+                "overloaded",
+            ),
+        );
+    }
+    let text = req.prompt_text();
+    let prompt_tokens = tokenizer::count(&text);
+    let cap = req.max_tokens.unwrap_or(shared.max_new_tokens).min(shared.max_new_tokens);
+    let output_demand = cap.max(1);
+    let cs = complexity::score(&text, output_demand);
+    let slo = if req.deferrable {
+        SloClass::Deferrable { deadline_s: req.deadline_s.unwrap_or(DEFAULT_DEADLINE_S) }
+    } else {
+        SloClass::Interactive
+    };
+    let prompt = Prompt {
+        id,
+        category: Category::DailyDialog,
+        text,
+        prompt_tokens,
+        output_demand_tokens: output_demand,
+        complexity: cs,
+        arrival_s: now_v,
+        slo,
+    };
+    let (rtx, rrx) = mpsc::channel::<Reply>();
+    shared.replies.lock().unwrap().insert(id, ReplySlot { tx: rtx, max_tokens: cap });
+    shared.in_flight.fetch_add(1, Ordering::AcqRel);
+    // admitted must be visible before the send: the ingest drain
+    // barrier compares dispatched against it
+    shared.admitted.fetch_add(1, Ordering::SeqCst);
+    if ingest.send(prompt).is_err() {
+        shared.replies.lock().unwrap().remove(&id);
+        shared.in_flight.fetch_sub(1, Ordering::AcqRel);
+        return write_simple(
+            &mut stream,
+            503,
+            "Service Unavailable",
+            &api::error_json("ingest stopped; server is shutting down", "overloaded"),
+        );
+    }
+    let created = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let deadline = Instant::now() + shared.request_timeout;
+    let id_str = format!("chatcmpl-{id}");
+    let model = req.model.clone().unwrap_or_else(|| shared.models[0].0.clone());
+    if req.stream {
+        stream.write_all(
+            b"HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\n\
+              Cache-Control: no-cache\r\nConnection: close\r\n\r\n",
+        )?;
+        loop {
+            let Some(rem) =
+                deadline.checked_duration_since(Instant::now()).filter(|r| !r.is_zero())
+            else {
+                return stream.flush(); // headers are out; stop the stream
+            };
+            match rrx.recv_timeout(rem) {
+                Ok(Reply::Token(t)) => {
+                    let chunk = api::chunk_json(&id_str, &model, created, Some(&t), None);
+                    write_sse(&mut stream, &chunk)?;
+                }
+                Ok(Reply::Done(d)) => {
+                    let usage = usage_of(&d);
+                    write_sse(
+                        &mut stream,
+                        &api::chunk_json(&id_str, &model, created, None, Some(&usage)),
+                    )?;
+                    stream.write_all(b"data: [DONE]\n\n")?;
+                    return stream.flush();
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => {}
+                Err(mpsc::RecvTimeoutError::Disconnected) => return stream.flush(),
+            }
+        }
+    } else {
+        let mut toks: Vec<String> = Vec::new();
+        loop {
+            let Some(rem) =
+                deadline.checked_duration_since(Instant::now()).filter(|r| !r.is_zero())
+            else {
+                return write_simple(
+                    &mut stream,
+                    504,
+                    "Gateway Timeout",
+                    &api::error_json(
+                        "request timed out in queue; raise [serving.http] request_timeout_s \
+                         or shed load",
+                        "timeout",
+                    ),
+                );
+            };
+            match rrx.recv_timeout(rem) {
+                Ok(Reply::Token(t)) => toks.push(t),
+                Ok(Reply::Done(d)) => {
+                    let resp = ChatCompletionResponse {
+                        id: id_str,
+                        model,
+                        created,
+                        content: toks.concat(),
+                        usage: usage_of(&d),
+                    };
+                    return write_simple(&mut stream, 200, "OK", &resp.to_json());
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => {}
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    return write_simple(
+                        &mut stream,
+                        503,
+                        "Service Unavailable",
+                        &api::error_json("request dropped during shutdown", "overloaded"),
+                    );
+                }
+            }
+        }
+    }
+}
+
+fn usage_of(d: &DoneInfo) -> api::Usage {
+    api::Usage {
+        prompt_tokens: d.prompt_tokens,
+        completion_tokens: d.output_tokens,
+        x_carbon: api::CarbonUsage {
+            energy_kwh: d.energy_kwh,
+            carbon_g: d.carbon_g,
+            device: d.device.clone(),
+            deferred_for_s: d.deferred_for_s,
+        },
+    }
+}
+
+/// One SSE frame: `data: <json>\n\n`, flushed so streaming is live.
+fn write_sse(stream: &mut TcpStream, payload: &str) -> std::io::Result<()> {
+    stream.write_all(b"data: ")?;
+    stream.write_all(payload.as_bytes())?;
+    stream.write_all(b"\n\n")?;
+    stream.flush()
+}
+
+/// One complete JSON (or plain) response with Content-Length.
+fn write_simple(
+    stream: &mut TcpStream,
+    status: u16,
+    reason: &str,
+    body: &str,
+) -> std::io::Result<()> {
+    let head = format!(
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()
+}

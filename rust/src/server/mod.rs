@@ -14,7 +14,20 @@
 //! (`--execution stub`). A collector aggregates latency/throughput
 //! plus estimated energy/carbon with the run-at-arrival
 //! counterfactual.
+//!
+//! [`http`] puts a network front on the same machinery: an
+//! OpenAI-compatible HTTP/1.1 server (`POST /v1/chat/completions`
+//! streaming and non-streaming, `GET /v1/models`, `GET /metrics`) over
+//! `std::net::TcpListener`, thread-per-connection, feeding live
+//! requests into the same deferral queue / device-worker pipeline and
+//! streaming per-token SSE chunks back with `x_carbon` usage metadata.
+//! [`api`] holds the hand-rolled wire types. Options are built through
+//! [`ServeOptions::builder`], the one validated construction path the
+//! CLI, benches and the HTTP layer all share.
 
+pub mod api;
+pub mod http;
 pub mod service;
 
-pub use service::{serve, ServeOptions, ServeReport};
+pub use http::{serve_http, HttpOptions, HttpServer};
+pub use service::{serve, ServeOptions, ServeOptionsBuilder, ServeReport};

@@ -197,6 +197,178 @@ impl Default for ServeOptions {
     }
 }
 
+impl ServeOptions {
+    /// Start building a validated option set. [`ServeOptionsBuilder::build`]
+    /// runs the consolidated [`Self::validate`], so the CLI, the HTTP
+    /// layer and `bench scale` all construct options through one
+    /// fallible, documented path. `ServeOptions::default()` stays
+    /// available for tests that want a known-good baseline to mutate.
+    pub fn builder() -> ServeOptionsBuilder {
+        ServeOptionsBuilder::default()
+    }
+
+    /// Consolidated option validation — every check that used to live
+    /// as ad-hoc `if`s at the top of [`serve`]:
+    ///
+    /// - basic sanity (`batch_size`/`max_new_tokens` >= 1, positive
+    ///   finite `time_scale`),
+    /// - `Calibrated` execution rejection (serving always generates
+    ///   tokens, so "no generation at all" is a contradiction — reject
+    ///   it loudly rather than silently substitute the stub),
+    /// - [`FailurePolicy::validate`],
+    /// - churn / fault-injection device indices against the cluster
+    ///   size, when `n_devices` is known (`None` skips only those
+    ///   cluster-relative checks — the builder without a cluster).
+    ///
+    /// [`serve`] and [`crate::server::http::HttpServer::bind`] re-run
+    /// this with `Some(n_devices)` so direct struct construction can't
+    /// skip past it.
+    pub fn validate(&self, n_devices: Option<usize>) -> Result<()> {
+        if self.batch_size == 0 {
+            return Err(anyhow!("batch_size must be >= 1"));
+        }
+        if self.max_new_tokens == 0 {
+            return Err(anyhow!("max_new_tokens must be >= 1"));
+        }
+        if !self.time_scale.is_finite() || self.time_scale <= 0.0 {
+            return Err(anyhow!("time_scale must be positive and finite, got {}", self.time_scale));
+        }
+        if self.execution == ExecutionMode::Calibrated {
+            return Err(anyhow!(
+                "execution mode 'calibrated' skips generation and only exists for run/bench; \
+                 serve needs a token-producing backend (real|hybrid|stub)"
+            ));
+        }
+        self.failure.validate()?;
+        if let Some(n_dev) = n_devices {
+            // an empty schedule is the churn-free path, so it bounds nothing
+            let churn = self.churn.as_ref().filter(|c| !c.is_empty());
+            if let Some(md) = churn.and_then(|c| c.max_device()) {
+                if md >= n_dev {
+                    return Err(anyhow!(
+                        "churn schedule names device {md}, cluster has {n_dev} devices"
+                    ));
+                }
+            }
+            if let Some((fd, _)) = self.fail_device_after_batches {
+                if fd >= n_dev {
+                    return Err(anyhow!(
+                        "fault injection names device {fd}, cluster has {n_dev} devices"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Builder for [`ServeOptions`] — the one construction path whose
+/// [`Self::build`] is fallible: it runs [`ServeOptions::validate`],
+/// with the cluster-relative checks included when [`Self::cluster`]
+/// was given. Setters mirror the option fields one-to-one; anything
+/// not set keeps its [`ServeOptions::default`] value.
+#[derive(Debug, Clone, Default)]
+pub struct ServeOptionsBuilder {
+    opts: ServeOptions,
+    n_devices: Option<usize>,
+}
+
+impl ServeOptionsBuilder {
+    /// Record the target cluster so `build()` can bound churn /
+    /// fault-injection device indices against it.
+    pub fn cluster(mut self, cluster: &Cluster) -> Self {
+        self.n_devices = Some(cluster.devices.len());
+        self
+    }
+
+    pub fn batch_size(mut self, n: usize) -> Self {
+        self.opts.batch_size = n;
+        self
+    }
+
+    pub fn batch_timeout(mut self, t: Duration) -> Self {
+        self.opts.batch_timeout = t;
+        self
+    }
+
+    pub fn max_new_tokens(mut self, n: usize) -> Self {
+        self.opts.max_new_tokens = n;
+        self
+    }
+
+    pub fn artifacts_dir(mut self, dir: impl Into<std::path::PathBuf>) -> Self {
+        self.opts.artifacts_dir = dir.into();
+        self
+    }
+
+    pub fn time_scale(mut self, scale: f64) -> Self {
+        self.opts.time_scale = scale;
+        self
+    }
+
+    pub fn strategy(mut self, name: impl Into<String>) -> Self {
+        self.opts.strategy = name.into();
+        self
+    }
+
+    pub fn grid(mut self, grid: Option<GridShiftConfig>) -> Self {
+        self.opts.grid = grid;
+        self
+    }
+
+    pub fn execution(mut self, mode: ExecutionMode) -> Self {
+        self.opts.execution = mode;
+        self
+    }
+
+    pub fn db(mut self, db: Option<Arc<BenchmarkDb>>) -> Self {
+        self.opts.db = db;
+        self
+    }
+
+    pub fn trace(mut self, sink: Option<Arc<TraceSink>>) -> Self {
+        self.opts.trace = sink;
+        self
+    }
+
+    pub fn spot_check_every_n(mut self, n: usize) -> Self {
+        self.opts.spot_check_every_n = n;
+        self
+    }
+
+    pub fn continuous_batching(mut self, on: bool) -> Self {
+        self.opts.continuous_batching = on;
+        self
+    }
+
+    pub fn churn(mut self, churn: Option<ChurnSchedule>) -> Self {
+        self.opts.churn = churn;
+        self
+    }
+
+    pub fn failure(mut self, policy: FailurePolicy) -> Self {
+        self.opts.failure = policy;
+        self
+    }
+
+    pub fn fail_device_after_batches(mut self, inject: Option<(usize, usize)>) -> Self {
+        self.opts.fail_device_after_batches = inject;
+        self
+    }
+
+    pub fn heartbeat_timeout(mut self, t: Duration) -> Self {
+        self.opts.heartbeat_timeout = t;
+        self
+    }
+
+    /// Validate and produce the options ([`ServeOptions::validate`]
+    /// with the recorded cluster size, if any).
+    pub fn build(self) -> Result<ServeOptions> {
+        self.opts.validate(self.n_devices)?;
+        Ok(self.opts)
+    }
+}
+
 /// Aggregated serving report.
 #[derive(Debug, Clone)]
 pub struct ServeReport {
@@ -278,20 +450,21 @@ pub struct ServeReport {
     pub metrics: MetricsRegistry,
 }
 
-struct QueueItem {
-    prompt: Prompt,
-    enqueued: Instant,
+pub(crate) struct QueueItem {
+    pub(crate) prompt: Prompt,
+    pub(crate) enqueued: Instant,
     /// The backlog milliseconds this item added on push — subtracted
     /// when a worker pulls it, so `backlog_ms` tracks *queued* work
     /// (matching the DES plane's backlog semantics).
-    est_ms: usize,
+    pub(crate) est_ms: usize,
     /// Times this item was re-homed off a Down device (bounded by
     /// [`FailurePolicy::max_attempts`]).
-    attempts: u32,
+    pub(crate) attempts: u32,
 }
 
-/// A per-device work queue with condvar signalling.
-struct DeviceQueue {
+/// A per-device work queue with condvar signalling (shared with the
+/// HTTP plane, which feeds it live network arrivals).
+pub(crate) struct DeviceQueue {
     items: Mutex<VecDeque<QueueItem>>,
     signal: Condvar,
     /// Estimated backlog milliseconds (for online latency-aware placement).
@@ -299,7 +472,7 @@ struct DeviceQueue {
 }
 
 impl DeviceQueue {
-    fn new() -> Self {
+    pub(crate) fn new() -> Self {
         DeviceQueue {
             items: Mutex::new(VecDeque::new()),
             signal: Condvar::new(),
@@ -307,18 +480,18 @@ impl DeviceQueue {
         }
     }
 
-    fn push(&self, item: QueueItem) {
+    pub(crate) fn push(&self, item: QueueItem) {
         self.backlog_ms.fetch_add(item.est_ms, Ordering::Relaxed);
         self.items.lock().unwrap().push_back(item);
         self.signal.notify_one();
     }
 
-    fn backlog_s(&self) -> f64 {
+    pub(crate) fn backlog_s(&self) -> f64 {
         self.backlog_ms.load(Ordering::Relaxed) as f64 / 1000.0
     }
 
     /// Number of items currently queued (the churn settle barrier).
-    fn queued(&self) -> usize {
+    pub(crate) fn queued(&self) -> usize {
         self.items.lock().unwrap().len()
     }
 
@@ -327,7 +500,7 @@ impl DeviceQueue {
     /// `hb` (when given) is bumped every wait iteration so a worker
     /// blocked on an empty queue never looks dead to the health
     /// checker.
-    fn pull_batch(
+    pub(crate) fn pull_batch(
         &self,
         max: usize,
         timeout: Duration,
@@ -386,7 +559,7 @@ impl DeviceQueue {
 
     /// Non-blocking pull of up to `max` items (their backlog share is
     /// released exactly as in [`Self::pull_batch`]).
-    fn try_drain(&self, max: usize) -> Vec<QueueItem> {
+    pub(crate) fn try_drain(&self, max: usize) -> Vec<QueueItem> {
         if max == 0 {
             return Vec::new();
         }
@@ -494,28 +667,12 @@ pub fn serve(cluster: &Cluster, prompts: &[Prompt], opts: &ServeOptions) -> Resu
     if n_dev == 0 || prompts.is_empty() {
         return Err(anyhow!("nothing to serve"));
     }
-    // serving always generates tokens, so "no generation at all" is a
-    // contradiction — reject it loudly rather than silently substitute
-    // the stub (plain `verdant serve` keeps its fail-fast PJRT path)
-    if opts.execution == ExecutionMode::Calibrated {
-        return Err(anyhow!(
-            "execution mode 'calibrated' skips generation and only exists for run/bench; \
-             serve needs a token-producing backend (real|hybrid|stub)"
-        ));
-    }
-    opts.failure.validate()?;
+    // the one consolidated validation path (shared with the builder
+    // and the HTTP layer); re-run here so direct struct construction
+    // can't skip past it
+    opts.validate(Some(n_dev))?;
     // an empty schedule is the churn-free path: no checker thread
     let churn = opts.churn.as_ref().filter(|c| !c.is_empty());
-    if let Some(md) = churn.and_then(|c| c.max_device()) {
-        if md >= n_dev {
-            return Err(anyhow!("churn schedule names device {md}, cluster has {n_dev} devices"));
-        }
-    }
-    if let Some((fd, _)) = opts.fail_device_after_batches {
-        if fd >= n_dev {
-            return Err(anyhow!("fault injection names device {fd}, cluster has {n_dev} devices"));
-        }
-    }
     let churn_enabled = churn.is_some() || opts.fail_device_after_batches.is_some();
     // health codes per device (0 Up / 1 Degraded / 2 Down), written by
     // the checker, read by ingest routing and the workers; absent when
@@ -1715,5 +1872,64 @@ mod tests {
             let v = crate::util::json::parse(line).expect("trace line parses");
             crate::telemetry::trace::TraceEvent::from_value(&v).expect("trace line round-trips");
         }
+    }
+
+    #[test]
+    fn builder_matches_default_and_validates() {
+        // the happy path produces exactly ServeOptions::default()
+        let built = ServeOptions::builder().build().unwrap();
+        let d = ServeOptions::default();
+        assert_eq!(built.batch_size, d.batch_size);
+        assert_eq!(built.strategy, d.strategy);
+        assert_eq!(built.time_scale, d.time_scale);
+        assert_eq!(built.execution, d.execution);
+        // every consolidated check fires through build()
+        let err = ServeOptions::builder()
+            .execution(ExecutionMode::Calibrated)
+            .build()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("calibrated"), "{err}");
+        let err = ServeOptions::builder().batch_size(0).build().unwrap_err().to_string();
+        assert!(err.contains("batch_size"), "{err}");
+        let err = ServeOptions::builder().time_scale(0.0).build().unwrap_err().to_string();
+        assert!(err.contains("time_scale"), "{err}");
+        let err = ServeOptions::builder().max_new_tokens(0).build().unwrap_err().to_string();
+        assert!(err.contains("max_new_tokens"), "{err}");
+    }
+
+    #[test]
+    fn builder_bounds_churn_against_the_cluster() {
+        let cfg = ExperimentConfig::default();
+        let cluster = Cluster::from_config(&cfg.cluster);
+        let n = cluster.devices.len();
+        let schedule = ChurnSchedule::scripted(vec![crate::simulator::OutageWindow {
+            device: n, // one past the end
+            start_s: 0.0,
+            end_s: 1.0,
+        }])
+        .unwrap();
+        // without a cluster the index can't be checked — build passes
+        let opts =
+            ServeOptions::builder().churn(Some(schedule.clone())).build().unwrap();
+        // with the cluster recorded, build() rejects it
+        let err = ServeOptions::builder()
+            .cluster(&cluster)
+            .churn(Some(schedule))
+            .build()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("churn schedule names device"), "{err}");
+        // and serve() itself still re-validates the same way
+        let prompts = vec![crate::workload::canonical::P3.to_prompt(0)];
+        let err = serve(&cluster, &prompts, &opts).unwrap_err().to_string();
+        assert!(err.contains("churn schedule names device"), "{err}");
+        let err = ServeOptions::builder()
+            .cluster(&cluster)
+            .fail_device_after_batches(Some((n, 1)))
+            .build()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("fault injection names device"), "{err}");
     }
 }
