@@ -1,13 +1,17 @@
 #!/usr/bin/env python3
-"""CI perf-regression gate over the BENCH_scale.json trajectory.
+"""CI perf-regression gate over the bench JSON trajectories.
 
 Usage:
     bench_gate.py <baseline.json> <current.json> [--tolerance 0.25]
                   [--arm <armed.json>]
 
-Compares decisions/sec per (Plane, Strategy, Prompts, Threads) row of
-a fresh `verdant bench scale` run against the committed baseline and
-writes a markdown diff to $GITHUB_STEP_SUMMARY (stdout otherwise).
+Compares the throughput value per (Plane, Strategy, Prompts, Threads)
+row of a fresh bench run against the committed baseline and writes a
+markdown diff to $GITHUB_STEP_SUMMARY (stdout otherwise). Two
+trajectories share this gate, each with its own baseline file:
+`bench scale` rows carry "Decisions/s" (vs `BENCH_baseline.json`) and
+`bench http` rows carry "Req/s" (vs `BENCH_http_baseline.json`) — the
+value column is resolved per row, so one invocation gates one file.
 Baselines that predate the Threads column key their rows as Threads=1
 (every pre-sharding row was single-threaded), so re-arming is not
 required to keep gating after the column landed.
@@ -16,10 +20,12 @@ Gated rows — the ones that can FAIL the build — are the cached
 forecast-carbon-aware rows of the DES *and* the wallclock server
 (plane in {"des", "server"}, strategy == "forecast-carbon-aware"):
 the hot path PR 3 optimized plus the threaded serving loop, i.e. the
-paths the flight recorder's disabled-path guarantee protects. Every
-other row is reported for context only, because absolute decisions/sec
-on shared CI runners is noisy; the default tolerance (25 %) absorbs
-normal runner variance on the gated rows too.
+paths the flight recorder's disabled-path guarantee protects; plus the
+HTTP plane's keep-alive rows (plane == "http", strategy starting with
+"keep-alive") — the network fast path PR 10 built. Every other row is
+reported for context only, because absolute throughput on shared CI
+runners is noisy; the default tolerance (25 %) absorbs normal runner
+variance on the gated rows too.
 
 Independently of the baseline, the gate enforces the million-prompt
 scale-out claim *within* the current run: every DES
@@ -62,6 +68,23 @@ GATED = {
     ("des", "forecast-carbon-aware"),
     ("server", "forecast-carbon-aware"),
 }
+
+
+def is_gated(plane, strategy):
+    """Gated rows can FAIL the build (see module doc)."""
+    if (plane, strategy) in GATED:
+        return True
+    # the HTTP fast path: every keep-alive row (unary and streaming)
+    return plane == "http" and strategy.startswith("keep-alive")
+
+
+def value_of(row):
+    """The row's throughput value: decisions/sec for the scheduling
+    planes, req/s for the HTTP plane."""
+    v = row.get("Decisions/s")
+    if v is None:
+        v = row.get("Req/s")
+    return v
 
 # The in-run scale-out gate: 1M-prompt DES rows of this strategy family
 # must hold the 100k reference row's decisions/sec flat-or-better.
@@ -142,11 +165,11 @@ def write_armed(path, current):
     armed = {
         "name": current.get("name", "BENCH_scale"),
         "note": (
-            "Armed from the BENCH_scale.json of a green bench-gate run "
-            "(bench_gate.py --arm): every Decisions/s value was measured, so "
+            "Armed from the bench JSON of a green bench-gate run "
+            "(bench_gate.py --arm): every throughput value was measured, so "
             "the tolerance gates real throughput, not hand floors. Re-arm by "
-            "committing a newer bench-baseline-armed artifact over "
-            "rust/BENCH_baseline.json."
+            "committing a newer armed-baseline artifact over the matching "
+            "rust/BENCH_*baseline.json."
         ),
         "rows": current.get("rows", []),
     }
@@ -210,18 +233,17 @@ def main(argv):
             [
                 "## bench-gate: baseline bootstrap",
                 "",
-                "`BENCH_baseline.json` is still the bootstrap placeholder, so this run",
-                "cannot be compared. To arm the gate, replace `rust/BENCH_baseline.json`",
-                "with this run's `BENCH_scale.json` artifact (job `bench-gate`,",
-                "artifact `bench-scale-json`) and commit it.",
+                f"`{os.path.basename(baseline_path)}` is still the bootstrap placeholder,",
+                "so this run cannot be compared. To arm the gate, replace it with this",
+                "run's bench JSON artifact from a green gate job and commit it.",
                 "",
                 "Fresh rows:",
                 "",
-                "| Plane | Strategy | Prompts | Threads | Decisions/s |",
+                "| Plane | Strategy | Prompts | Threads | Value |",
                 "|---|---|---:|---:|---:|",
             ]
             + [
-                f"| {p} | {s} | {n} | {t} | {row.get('Decisions/s', '?')} |"
+                f"| {p} | {s} | {n} | {t} | {value_of(row) if value_of(row) is not None else '?'} |"
                 for (p, s, n, t), row in sorted(cur.items())
             ]
             # the in-run scale-out check needs no baseline: it gates
@@ -240,11 +262,12 @@ def main(argv):
 
     base = rows_by_key(baseline)
     lines = [
-        "## bench-gate: decisions/sec vs baseline",
+        "## bench-gate: throughput vs baseline",
         "",
         "Gate: "
         + ", ".join(f"`{p}`/`{s}`" for p, s in sorted(GATED))
-        + f" rows; fail below {(1 - tolerance) * 100:.0f}% of baseline.",
+        + " and `http`/`keep-alive *` rows; fail below "
+        + f"{(1 - tolerance) * 100:.0f}% of baseline.",
         "",
         "| Plane | Strategy | Prompts | Threads | Baseline | Current | Ratio | Gated | Verdict |",
         "|---|---|---:|---:|---:|---:|---:|---|---|",
@@ -253,9 +276,9 @@ def main(argv):
     new_rows = []
     for key in sorted(set(base) | set(cur)):
         plane, strategy, prompts, threads = key
-        gated = (plane, strategy) in GATED
-        b = base.get(key, {}).get("Decisions/s")
-        c = cur.get(key, {}).get("Decisions/s")
+        gated = is_gated(plane, strategy)
+        b = value_of(base.get(key, {}))
+        c = value_of(cur.get(key, {}))
         if b is None or c is None or not isinstance(b, (int, float)) or b <= 0:
             if key not in base:
                 # a row the baseline predates (new plane/strategy):
@@ -279,7 +302,7 @@ def main(argv):
         verdict = "ok" if ok else ("FAIL" if gated else "regressed (ungated)")
         if gated and not ok:
             failures.append(
-                f"{key}: {c:.0f} vs baseline {b:.0f} decisions/s "
+                f"{key}: {c:.0f} vs baseline {b:.0f} "
                 f"(ratio {ratio:.2f} < {1 - tolerance:.2f})"
             )
         lines.append(
@@ -294,8 +317,8 @@ def main(argv):
             "",
             f"WARNING: {len(new_rows)} row(s) have no baseline entry yet "
             "(new plane or strategy). They pass unconditionally; re-arm "
-            "`rust/BENCH_baseline.json` from this run's `bench-scale-json` "
-            "artifact to start gating them.",
+            "the matching `rust/BENCH_*baseline.json` from this run's "
+            "bench JSON artifact to start gating them.",
         ]
     if failures:
         lines += ["", "### Regressions on gated rows", ""] + [f"- {f}" for f in failures]

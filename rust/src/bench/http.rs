@@ -1,0 +1,314 @@
+//! HTTP fast-path load harness: `verdant bench http`.
+//!
+//! Drives the real network stack — [`crate::server::http`] over a
+//! loopback socket with the stub backend — through a
+//! {connections} × {keep-alive, close} × {streaming, unary} sweep and
+//! reports req/s, latency percentiles, allocations per request and
+//! sheds per combo. `--json` writes `BENCH_http.json`, keyed like
+//! `BENCH_scale.json` (Plane/Strategy/Prompts/Threads), which
+//! `ci/bench_gate.py` gates against `BENCH_http_baseline.json`
+//! (keep-alive rows only; close rows are the comparison baseline the
+//! keep-alive ≥ 2× unary claim is checked against).
+//!
+//! Each combo binds a fresh server on an ephemeral port, fires
+//! [`REQUESTS_PER_COMBO`] requests from `connections` client threads,
+//! then drains via `POST /admin/drain` and folds the server's own
+//! [`ServeReport`] shed count into the row. The stub occupancy sleeps
+//! vanish at [`BENCH_TIME_SCALE`] compression, so the rows time the
+//! network path — parse, route, queue handoff, format, write — not the
+//! simulated inference.
+//!
+//! Allocations/request is a process-wide delta of
+//! [`crate::util::alloc::allocation_count`] across the combo (counted
+//! only under the `verdant` binary, whose `#[global_allocator]` is the
+//! counting wrapper; zero when the wrapper is not registered). The
+//! figure includes the client threads' own buffers, so it is an upper
+//! bound on the server-side pressure — useful as a trajectory, not an
+//! absolute.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::Instant;
+
+use crate::cluster::Cluster;
+use crate::report::{fmt, Table};
+use crate::server::{HttpOptions, HttpServer, ServeOptions};
+use crate::util::alloc::allocation_count;
+use crate::util::stats::Histogram;
+
+use super::Env;
+
+/// Client connection counts swept per strategy.
+pub const CONNS: [usize; 3] = [1, 8, 64];
+
+/// Requests fired per combo (split across the combo's connections).
+pub const REQUESTS_PER_COMBO: usize = 256;
+
+/// Virtual-seconds-per-wallclock-second compression: high enough that
+/// every stub occupancy sleep rounds to zero and the sweep times only
+/// the network path.
+pub const BENCH_TIME_SCALE: f64 = 1_000_000.0;
+
+/// Tokens generated per request — small and fixed so the SSE rows
+/// stream a deterministic frame count.
+pub const BENCH_MAX_TOKENS: usize = 4;
+
+/// One measured combo.
+#[derive(Debug, Clone)]
+pub struct HttpRow {
+    /// Always `"http"` — the gate key's plane column.
+    pub plane: &'static str,
+    /// `"keep-alive unary"`, `"keep-alive streaming"`, `"close
+    /// unary"`, `"close streaming"`.
+    pub strategy: String,
+    /// Requests fired (the gate key's Prompts column).
+    pub prompts: usize,
+    /// Client connections (the gate key's Threads column).
+    pub threads: usize,
+    pub wall_s: f64,
+    pub req_per_s: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    /// Process-wide allocation delta / requests (see module doc).
+    pub allocs_per_req: f64,
+    /// Sheds the server reported for the combo (must be 0 at the
+    /// default pool — the CI sanity step hard-fails otherwise).
+    pub shed: usize,
+}
+
+/// Full sweep at the standard sizes.
+pub fn run(env: &Env) -> (Vec<HttpRow>, Table) {
+    run_with(env, &CONNS, REQUESTS_PER_COMBO)
+}
+
+/// Parameterized sweep (tests shrink it).
+pub fn run_with(env: &Env, conns: &[usize], requests: usize) -> (Vec<HttpRow>, Table) {
+    let cluster = Cluster::from_config(&env.cfg.cluster);
+    let db = std::sync::Arc::new(env.db.clone());
+    let mut rows = Vec::new();
+    for &c in conns {
+        for keep in [true, false] {
+            for streaming in [false, true] {
+                rows.push(run_combo(&cluster, &db, c, keep, streaming, requests));
+            }
+        }
+    }
+
+    let mut table = Table::new(
+        "BENCH_http",
+        "HTTP fast path — req/s by connections × keep-alive × streaming (loopback, stub)",
+        &["Plane", "Strategy", "Prompts", "Threads", "Wall (s)", "Req/s", "p50 (ms)",
+          "p95 (ms)", "p99 (ms)", "Allocs/req", "Shed"],
+    );
+    for r in &rows {
+        table.row(vec![
+            r.plane.to_string(),
+            r.strategy.clone(),
+            r.prompts.to_string(),
+            r.threads.to_string(),
+            fmt::secs(r.wall_s),
+            format!("{:.0}", r.req_per_s),
+            format!("{:.3}", r.p50_ms),
+            format!("{:.3}", r.p95_ms),
+            format!("{:.3}", r.p99_ms),
+            format!("{:.1}", r.allocs_per_req),
+            r.shed.to_string(),
+        ]);
+    }
+    table.note(format!(
+        "{requests} requests per combo over loopback, stub backend at {BENCH_TIME_SCALE:.0}x \
+         time compression ({BENCH_MAX_TOKENS} tokens per completion, batch 1, default \
+         connection pool); Threads = client connections; keep-alive unary reuses one \
+         socket per thread, close opens one per request, streaming reads the SSE frames \
+         to [DONE] (an SSE stream always terminates its connection, so its keep-alive \
+         and close rows differ only in the request header); allocs/req is the \
+         process-wide allocation-counter delta / requests — client buffers included, \
+         so an upper bound on server-side pressure (0 when the counting allocator \
+         is not registered, i.e. outside the verdant binary); the CI gate holds the \
+         keep-alive rows' req/s within 25% of BENCH_http_baseline.json"
+    ));
+    (rows, table)
+}
+
+/// Bind a fresh server, fire `requests` across `conns` client threads,
+/// drain, and fold the server's report into one row.
+fn run_combo(
+    cluster: &Cluster,
+    db: &std::sync::Arc<crate::coordinator::BenchmarkDb>,
+    conns: usize,
+    keep: bool,
+    streaming: bool,
+    requests: usize,
+) -> HttpRow {
+    let opts = ServeOptions::builder()
+        .cluster(cluster)
+        .batch_size(1)
+        .batch_timeout(std::time::Duration::from_millis(1))
+        .max_new_tokens(BENCH_MAX_TOKENS)
+        .time_scale(BENCH_TIME_SCALE)
+        .strategy("latency-aware")
+        .execution(crate::config::ExecutionMode::Stub)
+        .db(Some(std::sync::Arc::clone(db)))
+        .build()
+        .expect("bench serve options validate");
+    let http = HttpOptions { addr: "127.0.0.1:0".into(), ..HttpOptions::default() };
+    let server = HttpServer::bind(cluster, &opts, &http).expect("bench server binds");
+    let addr = server.local_addr().expect("bound address");
+    let server = std::thread::spawn(move || server.run());
+
+    let body = format!(
+        "{{\"messages\":[{{\"role\":\"user\",\"content\":\"bench\"}}],\
+         \"stream\":{streaming},\"max_tokens\":{BENCH_MAX_TOKENS}}}"
+    );
+    let request = format!(
+        "POST /v1/chat/completions HTTP/1.1\r\nHost: bench\r\n\
+         Content-Type: application/json\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n{}",
+        body.len(),
+        if keep { "keep-alive" } else { "close" },
+        body
+    );
+    let per_thread = requests.div_ceil(conns);
+    let total = per_thread * conns;
+
+    let allocs_before = allocation_count();
+    let t0 = Instant::now();
+    let mut clients = Vec::new();
+    for _ in 0..conns {
+        let request = request.clone();
+        clients.push(std::thread::spawn(move || -> Vec<f64> {
+            let mut lat = Vec::with_capacity(per_thread);
+            let mut buf: Vec<u8> = Vec::with_capacity(8192);
+            // keep-alive unary rides one socket for the whole thread;
+            // everything else (close, and every SSE stream — the
+            // server ends those connections) reconnects per request
+            let reuse = keep && !streaming;
+            let mut conn: Option<TcpStream> = None;
+            for _ in 0..per_thread {
+                let r0 = Instant::now();
+                if conn.is_none() {
+                    conn = Some(connect_retry(addr));
+                }
+                let s = conn.as_mut().expect("client connected");
+                s.write_all(request.as_bytes()).expect("bench request write");
+                buf.clear();
+                if reuse {
+                    read_framed(s, &mut buf);
+                } else {
+                    s.read_to_end(&mut buf).expect("bench response read");
+                    conn = None;
+                }
+                assert!(
+                    buf.starts_with(b"HTTP/1.1 200"),
+                    "bench request failed: {}",
+                    String::from_utf8_lossy(&buf[..buf.len().min(120)])
+                );
+                if streaming {
+                    assert!(
+                        buf.windows(13).any(|w| w == b"data: [DONE]\n"),
+                        "SSE stream did not finish"
+                    );
+                }
+                lat.push(r0.elapsed().as_secs_f64());
+            }
+            lat
+        }));
+    }
+    let mut hist = Histogram::latency();
+    for c in clients {
+        for l in c.join().expect("bench client thread") {
+            hist.add(l);
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let allocs = allocation_count().saturating_sub(allocs_before);
+
+    // drain and collect the server's own accounting
+    let mut s = connect_retry(addr);
+    s.write_all(b"POST /admin/drain HTTP/1.1\r\nContent-Length: 0\r\n\r\n")
+        .expect("drain write");
+    let mut sink = Vec::new();
+    let _ = s.read_to_end(&mut sink);
+    let report = server.join().expect("server thread").expect("server run");
+    assert_eq!(report.completed, total, "bench dropped requests");
+
+    HttpRow {
+        plane: "http",
+        strategy: format!(
+            "{} {}",
+            if keep { "keep-alive" } else { "close" },
+            if streaming { "streaming" } else { "unary" }
+        ),
+        prompts: total,
+        threads: conns,
+        wall_s: wall,
+        req_per_s: total as f64 / wall.max(1e-9),
+        p50_ms: hist.p50() * 1000.0,
+        p95_ms: hist.p95() * 1000.0,
+        p99_ms: hist.p99() * 1000.0,
+        allocs_per_req: allocs as f64 / total as f64,
+        shed: report.shed,
+    }
+}
+
+/// Connect with a short retry loop — the accept thread polls at 5 ms,
+/// and a SYN burst right at bind time can race the first poll.
+fn connect_retry(addr: std::net::SocketAddr) -> TcpStream {
+    for _ in 0..200 {
+        if let Ok(s) = TcpStream::connect(addr) {
+            s.set_nodelay(true).expect("nodelay");
+            return s;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+    panic!("bench client could not connect to {addr}");
+}
+
+/// Read exactly one `Content-Length`-framed response from a kept-alive
+/// socket into `buf`.
+fn read_framed(s: &mut TcpStream, buf: &mut Vec<u8>) {
+    let mut tmp = [0u8; 4096];
+    let header_end = loop {
+        if let Some(pos) = buf.windows(4).position(|w| w == b"\r\n\r\n") {
+            break pos + 4;
+        }
+        let n = s.read(&mut tmp).expect("bench header read");
+        assert!(n > 0, "connection closed mid-headers");
+        buf.extend_from_slice(&tmp[..n]);
+    };
+    let head = String::from_utf8_lossy(&buf[..header_end]);
+    let cl: usize = head
+        .lines()
+        .find_map(|l| {
+            let (k, v) = l.split_once(':')?;
+            k.eq_ignore_ascii_case("content-length").then(|| v.trim().parse().ok())?
+        })
+        .expect("framed response has Content-Length");
+    while buf.len() < header_end + cl {
+        let n = s.read(&mut tmp).expect("bench body read");
+        assert!(n > 0, "connection closed mid-body");
+        buf.extend_from_slice(&tmp[..n]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_sweep_completes_with_zero_shed() {
+        let env = Env::small(4);
+        let (rows, table) = run_with(&env, &[2], 8);
+        assert_eq!(rows.len(), 4, "2 strategies x 2 modes at one connection count");
+        for r in &rows {
+            assert_eq!(r.plane, "http");
+            assert_eq!(r.prompts, 8);
+            assert_eq!(r.threads, 2);
+            assert_eq!(r.shed, 0, "{}: default pool must not shed", r.strategy);
+            assert!(r.req_per_s > 0.0, "{}: throughput measured", r.strategy);
+            // library tests run without the counting allocator
+            assert_eq!(r.allocs_per_req, 0.0);
+        }
+        assert_eq!(table.rows.len(), 4);
+    }
+}

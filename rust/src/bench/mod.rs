@@ -12,6 +12,7 @@
 //! | [`shifting`] | temporal-shifting sweep: strategy × grid trace × deferrable fraction |
 //! | [`scale`] | hot-path scale harness: decisions/sec at 1k/10k/100k prompts (perf trajectory) |
 //! | [`churn`] | availability: strategy × outage scenario (failover vs shed, DES plane) |
+//! | [`http`] | network fast path: loopback req/s by connections × keep-alive × streaming |
 //!
 //! [`harness`] is the in-tree micro-benchmark timer used by
 //! `rust/benches/*` (criterion is not available offline).
@@ -21,6 +22,7 @@ pub mod churn;
 pub mod fig1;
 pub mod fig2;
 pub mod harness;
+pub mod http;
 pub mod load;
 pub mod scale;
 pub mod shifting;

@@ -247,11 +247,21 @@ pub struct HttpConfig {
     pub max_queue_depth: usize,
     /// Non-streaming requests time out with HTTP 504 after this long.
     pub request_timeout_s: f64,
+    /// Connection worker threads; `0` = auto (2×available cores).
+    pub conn_workers: usize,
+    /// Kept-alive connections idle this long are closed.
+    pub idle_timeout_s: f64,
 }
 
 impl Default for HttpConfig {
     fn default() -> Self {
-        HttpConfig { addr: "127.0.0.1:8080".into(), max_queue_depth: 256, request_timeout_s: 30.0 }
+        HttpConfig {
+            addr: "127.0.0.1:8080".into(),
+            max_queue_depth: 256,
+            request_timeout_s: 30.0,
+            conn_workers: 0,
+            idle_timeout_s: 5.0,
+        }
     }
 }
 
@@ -609,6 +619,12 @@ impl ExperimentConfig {
                 if let Some(x) = h.get("request_timeout_s").and_then(Value::as_f64) {
                     cfg.serving.http.request_timeout_s = x;
                 }
+                if let Some(n) = h.get("conn_workers").and_then(Value::as_usize) {
+                    cfg.serving.http.conn_workers = n;
+                }
+                if let Some(x) = h.get("idle_timeout_s").and_then(Value::as_f64) {
+                    cfg.serving.http.idle_timeout_s = x;
+                }
             }
             if let Some(c) = s.get("churn") {
                 if let Some(list) = c.get("outages").and_then(Value::as_arr) {
@@ -722,6 +738,13 @@ impl ExperimentConfig {
             bail!(
                 "[serving.http] request_timeout_s must be positive and finite, got {}",
                 self.serving.http.request_timeout_s
+            );
+        }
+        if !(self.serving.http.idle_timeout_s > 0.0 && self.serving.http.idle_timeout_s.is_finite())
+        {
+            bail!(
+                "[serving.http] idle_timeout_s must be positive and finite, got {}",
+                self.serving.http.idle_timeout_s
             );
         }
         self.serving.failure.validate()?;
@@ -1188,16 +1211,22 @@ seed = 9
 addr = "0.0.0.0:9001"
 max_queue_depth = 8
 request_timeout_s = 2.5
+conn_workers = 4
+idle_timeout_s = 0.25
 "#;
         let c = ExperimentConfig::from_value(&toml::parse(doc).unwrap()).unwrap();
         assert_eq!(c.serving.http.addr, "0.0.0.0:9001");
         assert_eq!(c.serving.http.max_queue_depth, 8);
         assert_eq!(c.serving.http.request_timeout_s, 2.5);
+        assert_eq!(c.serving.http.conn_workers, 4);
+        assert_eq!(c.serving.http.idle_timeout_s, 0.25);
 
         let parse = |doc: &str| ExperimentConfig::from_value(&toml::parse(doc).unwrap());
         assert!(parse("[serving.http]\naddr = \"\"\n").is_err());
         assert!(parse("[serving.http]\nrequest_timeout_s = 0.0\n").is_err());
         assert!(parse("[serving.http]\nrequest_timeout_s = -1.0\n").is_err());
+        assert!(parse("[serving.http]\nidle_timeout_s = 0.0\n").is_err());
+        assert!(parse("[serving.http]\nidle_timeout_s = -2.0\n").is_err());
     }
 
     #[test]

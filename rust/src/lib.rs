@@ -214,9 +214,9 @@
 //!
 //! `verdant serve --http <addr>` puts a real socket in front of the
 //! wallclock plane ([`server::http`]): a dependency-light HTTP/1.1
-//! server (std `TcpListener`, thread-per-connection — the same offline
-//! substitution the crate makes for tokio) speaking the OpenAI wire
-//! shape. `POST /v1/chat/completions` accepts a typed
+//! server (std `TcpListener` — the same offline substitution the crate
+//! makes for tokio) speaking the OpenAI wire shape. `POST
+//! /v1/chat/completions` accepts a typed
 //! [`server::api::ChatCompletionRequest`] and answers either one JSON
 //! document or a Server-Sent-Events stream, one `data:` chunk per
 //! generated token, closed by `data: [DONE]`; `GET /v1/models` lists
@@ -225,22 +225,47 @@
 //! `--metrics-json` uses. Each network request becomes a synthetic
 //! arrival on the virtual clock and flows through the *same*
 //! [`coordinator::policy`] core as the replay planes — deferrable
-//! requests (`"deferrable": true`) are held for forecast clean windows
-//! exactly like corpus prompts, and every response's `usage` block
-//! carries an `x_carbon` extension (calibrated energy kWh, gCO2e at
-//! the completion instant's grid intensity, serving device,
-//! deferred-for seconds): the ledger's per-request attribution,
-//! surfaced on the wire. Admission is bounded (`[serving.http]
-//! max_queue_depth`; beyond it requests shed with HTTP 429, counted
-//! and flight-recorded), and SIGTERM or `POST /admin/drain` triggers a
-//! graceful drain — deferred holds flush, in-flight requests finish,
-//! and the server returns the same `ServeReport` the replay plane
-//! produces. Construction is validated once:
-//! [`server::ServeOptions::builder`] is the single fallible path the
-//! CLI, the HTTP layer and `bench scale` all build options through,
-//! and every plane's result converts into one [`report::PlaneSummary`]
-//! so the CLI printers, the metrics dump and the HTTP endpoint cannot
-//! drift apart.
+//! requests (`"deferrable": true` in the body, or an `x-slo:
+//! deferrable[:deadline_s]` header, which outranks the body) are held
+//! for forecast clean windows exactly like corpus prompts, and every
+//! response's `usage` block carries an `x_carbon` extension
+//! (calibrated energy kWh, gCO2e at the completion instant's grid
+//! intensity, serving device, deferred-for seconds, resolved SLO
+//! class): the ledger's per-request attribution, surfaced on the wire.
+//!
+//! The connection plane is built for sustained load rather than
+//! one-shot curls. A **bounded worker pool** (`[serving.http]
+//! conn_workers`, default `2 × cores`) multiplexes every open socket
+//! across a fixed thread count — no thread-per-connection, so 64 idle
+//! keep-alive clients cost polling, not stacks. Connections are
+//! **HTTP/1.1 keep-alive with pipelining**: requests ride one socket
+//! back-to-back (responses in request order), idle sockets expire
+//! after `idle_timeout_s`, and `Connection: close`, HTTP/1.0, or an
+//! SSE stream end the connection explicitly. Per-worker read/parse/
+//! write buffers are reused across requests — the steady-state hot
+//! path allocates only what the response itself needs — and SSE frames
+//! are coalesced into one `write_all` per token batch. Chunked request
+//! bodies are decoded (bounded at 1 MiB; oversized/malformed framing
+//! is a 4xx, never a panic). Admission is bounded twice: per-request
+//! (`max_queue_depth`; beyond it requests shed with HTTP 429 +
+//! `Retry-After`, counted and flight-recorded) and accept-side (a
+//! connection backlog over the same limit is turned away 429 before
+//! parsing). Scripted churn and fault injection run on this plane too
+//! — with every device down the server sheds 503, audited like any
+//! other shed. SIGTERM or `POST /admin/drain` triggers a graceful
+//! drain — deferred holds flush, in-flight requests finish, kept-alive
+//! idle sockets close — and the server returns the same `ServeReport`
+//! the replay plane produces. `verdant bench http` drives a loopback
+//! load sweep ({1,8,64} connections × keep-alive/close × streaming/
+//! unary) over the stub backend, reporting req/s, latency percentiles
+//! and allocations per request; the CI `http-bench` job gates the
+//! keep-alive rows at 25% regression tolerance through the same
+//! `bench_gate.py` that guards the scale sweep. Construction is
+//! validated once: [`server::ServeOptions::builder`] is the single
+//! fallible path the CLI, the HTTP layer and `bench scale` all build
+//! options through, and every plane's result converts into one
+//! [`report::PlaneSummary`] so the CLI printers, the metrics dump and
+//! the HTTP endpoint cannot drift apart.
 //!
 //! ## Observability: decision flight recorder + metrics registry
 //!

@@ -1,19 +1,20 @@
 //! Verdant CLI — the launcher.
 //!
 //! ```text
-//! verdant bench <fig1|fig2|table2|table3|sweep|ablation|load|shifting|scale|all>
+//! verdant bench <fig1|fig2|table2|table3|sweep|ablation|load|shifting|scale|http|all>
 //!         [--prompts N] [--config path] [--save dir] [--json dir] [--extensions]
 //! verdant run   [--strategy S] [--batch B] [--prompts N] [--execution M]
 //!         [--seed N] [--config path]      one closed-loop run, full report
 //! verdant serve [--prompts N] [--batch B] [--strategy S] [--timeout-ms T]
 //!         [--max-new N] [--execution real|hybrid|stub]
 //!         [--http addr] [--max-queue-depth N] [--request-timeout-s S]
+//!         [--conn-workers N] [--idle-timeout-s S]
 //!                                         real-time serving demo; `stub`
 //!                                         swaps PJRT for the calibrated
 //!                                         backend (no artifacts needed);
 //!                                         --http replaces the corpus replay
-//!                                         with an OpenAI-compatible socket
-//!                                         (see server::http)
+//!                                         with an OpenAI-compatible
+//!                                         keep-alive socket (see server::http)
 //!
 //! `run` and `serve` accept the SLO/carbon knobs (--defer-frac,
 //! --deadline-s, --sizing, --no-defer): with a time-varying
@@ -32,7 +33,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use verdant::bench::{
-    ablation, churn, fig1, fig2, harness, load, scale, shifting, sweep, table2, table3, Env,
+    ablation, churn, fig1, fig2, harness, http, load, scale, shifting, sweep, table2, table3, Env,
 };
 use verdant::cluster::Cluster;
 use verdant::config::{ExecutionMode, ExperimentConfig};
@@ -44,6 +45,12 @@ use verdant::runtime::{CalibratedBackend, HybridBackend, InferenceBackend, PjrtB
 use verdant::server::{serve, HttpOptions, HttpServer, ServeOptions, ServeReport};
 use verdant::telemetry::{normalize, MetricsRegistry, TraceSink};
 use verdant::workload::{trace, Corpus};
+
+/// Count allocations process-wide so `bench http` can report the
+/// steady-state allocations per request (library tests run on the
+/// plain system allocator and see a flat counter).
+#[global_allocator]
+static ALLOC: verdant::util::alloc::CountingAllocator = verdant::util::alloc::CountingAllocator;
 
 fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -262,11 +269,12 @@ fn dispatch(args: &[String]) -> anyhow::Result<()> {
 fn print_usage() {
     println!(
         "verdant {} — sustainability-aware LLM inference on edge clusters\n\n\
-         USAGE:\n  verdant bench <fig1|fig2|table2|table3|sweep|ablation|load|shifting|scale|churn|all> [--prompts N] [--save dir] [--json dir] [--extensions]\n  \
+         USAGE:\n  verdant bench <fig1|fig2|table2|table3|sweep|ablation|load|shifting|scale|churn|http|all> [--prompts N] [--save dir] [--json dir] [--extensions]\n  \
          verdant run   [--strategy S] [--batch B] [--prompts N] [--execution real|calibrated|hybrid|stub]\n  \
          verdant serve [--prompts N] [--batch B] [--strategy S] [--timeout-ms T] [--max-new N]\n          \
          [--execution real|hybrid|stub]  (stub: deterministic no-PJRT backend, runs anywhere)\n          \
-         [--http addr[:port]] [--max-queue-depth N] [--request-timeout-s S]\n  \
+         [--http addr[:port]] [--max-queue-depth N] [--request-timeout-s S]\n          \
+         [--conn-workers N] [--idle-timeout-s S]\n  \
          verdant inspect <corpus|cluster|manifest>\n  \
          verdant trace diff <a.jsonl> <b.jsonl>   compare two decision traces after\n          \
          normalization (exit 1 on divergence)\n  \
@@ -308,8 +316,18 @@ fn print_usage() {
          OpenAI-compatible HTTP front (POST /v1/chat/completions with SSE\n\
          streaming, GET /v1/models, GET /metrics); runs until SIGTERM or\n\
          POST /admin/drain, then drains in-flight work and prints the usual\n\
-         serving report. [serving.http] sets addr/max_queue_depth/\n\
-         request_timeout_s; over-depth requests are shed with HTTP 429.\n\
+         serving report. HTTP/1.1 keep-alive with pipelining and chunked\n\
+         request bodies; a bounded pool of connection workers (--conn-workers,\n\
+         0 = 2x cores) multiplexes kept-alive sockets, closing them after\n\
+         --idle-timeout-s of silence; an x-slo header\n\
+         (interactive|deferrable[:deadline_s]) sets the SLO class per request\n\
+         and the resolved class is echoed in usage.x_carbon.slo.\n\
+         [serving.http] sets addr/max_queue_depth/request_timeout_s/\n\
+         conn_workers/idle_timeout_s; over-depth requests (and over-depth\n\
+         pending connections) are shed with HTTP 429 + Retry-After.\n\
+         bench http drives a loopback load sweep over the stub backend\n\
+         (connections x keep-alive x streaming) and reports req/s,\n\
+         latency percentiles and allocations per request.\n\
          Example:\n  \
          verdant serve --http 127.0.0.1:8099 --execution stub &\n  \
          curl -N http://127.0.0.1:8099/v1/chat/completions \\\n    \
@@ -375,6 +393,13 @@ fn cmd_bench(which: &str, flags: &Flags) -> anyhow::Result<()> {
     // paper artefact — strategies × outage scenarios through the DES
     if which == "churn" {
         emit(churn::run(&env).1)?;
+    }
+    // not part of `all`: loopback HTTP load sweep (connections ×
+    // keep-alive × streaming over the stub backend) — times the
+    // network fast path, not a paper artefact; gated in CI against
+    // BENCH_http_baseline.json
+    if which == "http" {
+        emit(http::run(&env).1)?;
     }
     // not part of `all`: sweeps its own 1k..1M corpora and exists to
     // time the hot path, not to reproduce a paper artefact
@@ -625,13 +650,24 @@ fn cmd_serve(flags: &Flags) -> anyhow::Result<()> {
                     .map_err(|e| anyhow::anyhow!("--request-timeout-s wants a number: {e}"))?
                     .unwrap_or(cfg.serving.http.request_timeout_s),
             ),
+            conn_workers: flags.usize("conn-workers", cfg.serving.http.conn_workers)?,
+            idle_timeout: Duration::from_secs_f64(
+                flags
+                    .get("idle-timeout-s")
+                    .map(str::parse::<f64>)
+                    .transpose()
+                    .map_err(|e| anyhow::anyhow!("--idle-timeout-s wants a number: {e}"))?
+                    .unwrap_or(cfg.serving.http.idle_timeout_s),
+            ),
         };
         let server = HttpServer::bind(&cluster, &opts, &http)?;
         println!(
-            "listening on http://{} ({} workers, {} backend, strategy {}); \
+            "listening on http://{} ({} inference workers, {} connection workers, \
+             {} backend, strategy {}); \
              SIGTERM or POST /admin/drain stops after draining in-flight requests",
             server.local_addr()?,
             cluster.devices.len(),
+            http.resolved_conn_workers(),
             opts.execution.name(),
             opts.strategy
         );

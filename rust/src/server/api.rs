@@ -136,6 +136,11 @@ pub struct CarbonUsage {
     /// How long the scheduler intentionally deferred the request for a
     /// cleaner window (virtual seconds; 0 = dispatched at arrival).
     pub deferred_for_s: f64,
+    /// The SLO class the request resolved to (`"interactive"` or
+    /// `"deferrable"`), after the `x-slo` header and the body's
+    /// `deferrable`/`deadline_s` fields were reconciled — echoed so a
+    /// client can see which deferral contract its request ran under.
+    pub slo: String,
 }
 
 /// The `usage` block of a completion response.
@@ -153,6 +158,7 @@ impl Usage {
         carbon.insert("carbon_g".into(), Value::Num(self.x_carbon.carbon_g));
         carbon.insert("device".into(), Value::Str(self.x_carbon.device.clone()));
         carbon.insert("deferred_for_s".into(), Value::Num(self.x_carbon.deferred_for_s));
+        carbon.insert("slo".into(), Value::Str(self.x_carbon.slo.clone()));
         let mut u = BTreeMap::new();
         u.insert("prompt_tokens".into(), Value::Num(self.prompt_tokens as f64));
         u.insert("completion_tokens".into(), Value::Num(self.completion_tokens as f64));
@@ -226,6 +232,123 @@ pub fn chunk_json(
         top.insert("usage".into(), u.to_value());
     }
     json::to_string(&Value::Obj(top))
+}
+
+// ---------------------------------------------------------------------
+// Direct formatters: the serving fast path writes responses into a
+// reused per-connection-worker buffer with zero intermediate
+// allocation. Each writer is pinned byte-identical to its BTreeMap
+// counterpart above (`chunk_json`, `ChatCompletionResponse::to_json`)
+// by the `direct_writers_match_the_value_tree` test, so the wire shape
+// cannot fork between the hot path and the typed path.
+
+/// Append `s` as a JSON string literal — the same escaping rules as
+/// the serializer in [`crate::util::json`].
+fn push_json_str(out: &mut String, s: &str) {
+    use std::fmt::Write as _;
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+/// Append `n` with the serializer's integer-vs-float formatting rule.
+fn push_json_num(out: &mut String, n: f64) {
+    use std::fmt::Write as _;
+    if n.fract() == 0.0 && n.abs() < 1e15 {
+        let _ = write!(out, "{}", n as i64);
+    } else {
+        let _ = write!(out, "{n}");
+    }
+}
+
+/// Format the `usage` block directly into `out` (keys in the same
+/// sorted order the BTreeMap serializer emits).
+pub fn write_usage_into(out: &mut String, u: &Usage) {
+    out.push_str("{\"completion_tokens\":");
+    push_json_num(out, u.completion_tokens as f64);
+    out.push_str(",\"prompt_tokens\":");
+    push_json_num(out, u.prompt_tokens as f64);
+    out.push_str(",\"total_tokens\":");
+    push_json_num(out, (u.prompt_tokens + u.completion_tokens) as f64);
+    out.push_str(",\"x_carbon\":{\"carbon_g\":");
+    push_json_num(out, u.x_carbon.carbon_g);
+    out.push_str(",\"deferred_for_s\":");
+    push_json_num(out, u.x_carbon.deferred_for_s);
+    out.push_str(",\"device\":");
+    push_json_str(out, &u.x_carbon.device);
+    out.push_str(",\"energy_kwh\":");
+    push_json_num(out, u.x_carbon.energy_kwh);
+    out.push_str(",\"slo\":");
+    push_json_str(out, &u.x_carbon.slo);
+    out.push_str("}}");
+}
+
+/// [`chunk_json`] formatted directly into `out` — the per-token SSE
+/// hot path.
+pub fn write_chunk_into(
+    out: &mut String,
+    id: &str,
+    model: &str,
+    created: u64,
+    token: Option<&str>,
+    usage: Option<&Usage>,
+) {
+    out.push_str("{\"choices\":[{\"delta\":{");
+    if let Some(t) = token {
+        out.push_str("\"content\":");
+        push_json_str(out, t);
+    }
+    out.push_str("},\"finish_reason\":");
+    out.push_str(if token.is_some() { "null" } else { "\"stop\"" });
+    out.push_str(",\"index\":0}],\"created\":");
+    push_json_num(out, created as f64);
+    out.push_str(",\"id\":");
+    push_json_str(out, id);
+    out.push_str(",\"model\":");
+    push_json_str(out, model);
+    out.push_str(",\"object\":\"chat.completion.chunk\"");
+    if let Some(u) = usage {
+        out.push_str(",\"usage\":");
+        write_usage_into(out, u);
+    }
+    out.push('}');
+}
+
+/// [`ChatCompletionResponse::to_json`] formatted directly into `out` —
+/// the non-streaming completion hot path.
+pub fn write_response_into(
+    out: &mut String,
+    id: &str,
+    model: &str,
+    created: u64,
+    content: &str,
+    usage: &Usage,
+) {
+    out.push_str(
+        "{\"choices\":[{\"finish_reason\":\"stop\",\"index\":0,\"message\":{\"content\":",
+    );
+    push_json_str(out, content);
+    out.push_str(",\"role\":\"assistant\"}}],\"created\":");
+    push_json_num(out, created as f64);
+    out.push_str(",\"id\":");
+    push_json_str(out, id);
+    out.push_str(",\"model\":");
+    push_json_str(out, model);
+    out.push_str(",\"object\":\"chat.completion\",\"usage\":");
+    write_usage_into(out, usage);
+    out.push('}');
 }
 
 /// `GET /v1/models` body: one entry per cluster device, `id` = the
@@ -338,6 +461,7 @@ mod tests {
                     carbon_g: 1e-4,
                     device: "jetson-orin-nx".into(),
                     deferred_for_s: 0.0,
+                    slo: "interactive".into(),
                 },
             },
         };
@@ -354,6 +478,53 @@ mod tests {
         let carbon = usage.get("x_carbon").unwrap();
         assert_eq!(carbon.get("device").and_then(Value::as_str), Some("jetson-orin-nx"));
         assert!(carbon.get("energy_kwh").and_then(Value::as_f64).unwrap() > 0.0);
+        assert_eq!(carbon.get("slo").and_then(Value::as_str), Some("interactive"));
+    }
+
+    #[test]
+    fn direct_writers_match_the_value_tree() {
+        // the fast-path formatters must stay byte-identical to the
+        // BTreeMap serializer; exercise escapes, floats, and integers
+        let usage = Usage {
+            prompt_tokens: 12,
+            completion_tokens: 34,
+            x_carbon: CarbonUsage {
+                energy_kwh: 1.5e-6,
+                carbon_g: 0.000_437,
+                device: "rpi-5\"edge\\".into(),
+                deferred_for_s: 120.0,
+                slo: "deferrable".into(),
+            },
+        };
+        let mut out = String::new();
+        write_usage_into(&mut out, &usage);
+        assert_eq!(out, crate::util::json::to_string(&usage.to_value()));
+
+        for (token, with_usage) in
+            [(Some("he\tl\"lo\n"), None), (None, Some(&usage)), (Some("x"), Some(&usage))]
+        {
+            out.clear();
+            write_chunk_into(&mut out, "chatcmpl-9", "edge-1b\\sim", 1_700_000_001, token, with_usage);
+            assert_eq!(out, chunk_json("chatcmpl-9", "edge-1b\\sim", 1_700_000_001, token, with_usage));
+        }
+
+        let resp = ChatCompletionResponse {
+            id: "chatcmpl-\u{1}".into(),
+            model: "m".into(),
+            created: 1_700_000_002,
+            content: "line1\nline2\t\"quoted\"".into(),
+            usage: usage.clone(),
+        };
+        out.clear();
+        write_response_into(
+            &mut out,
+            &resp.id,
+            &resp.model,
+            resp.created,
+            &resp.content,
+            &resp.usage,
+        );
+        assert_eq!(out, resp.to_json());
     }
 
     #[test]

@@ -2,71 +2,106 @@
 //! wallclock plane.
 //!
 //! ```text
-//!  accept thread ──► handler threads ──(mpsc)──► ingest (caller thread)
-//!   (one per TCP        parse + admit             defer + route via the
-//!    connection)        or shed w/ 429            shared policy core
-//!                            ▲                          │
-//!            per-request     │            per-device DeviceQueues
-//!            reply channel   │                          │
-//!                            └──── worker threads ◄─────┘
-//!                                   (own InferenceBackend; stream
-//!                                    tokens back, then Done with the
-//!                                    calibrated x_carbon numbers)
+//!  accept thread ──► connection pool ──► conn workers ──(mpsc)──► ingest
+//!   (bounded: over-     (VecDeque of        (N = conn_workers;       (defer +
+//!    depth conns shed    pending conns)      each multiplexes its     route via
+//!    429 at accept)                          adopted sockets)         the policy
+//!                                                 ▲                   core)
+//!                                 per-request     │                      │
+//!                                 reply channel   │        per-device DeviceQueues
+//!                                                 │                      │
+//!                                                 └── inference workers ◄┘
+//!                                                      (own InferenceBackend;
+//!                                                       stream tokens back, then
+//!                                                       Done with x_carbon)
 //! ```
 //!
 //! The server is dependency-light on purpose: `std::net::TcpListener`,
-//! thread-per-connection, hand-rolled HTTP/1.1 — the same offline
-//! substitution the rest of the crate makes for serde/clap/tokio. One
-//! request per connection (`Connection: close`), which keeps the
-//! protocol surface a strict, auditable subset.
+//! hand-rolled HTTP/1.1 — the same offline substitution the rest of
+//! the crate makes for serde/clap/tokio.
+//!
+//! **Connection model.** HTTP/1.1 keep-alive with pipelining: a
+//! connection carries any number of requests (`Connection: close`, an
+//! HTTP/1.0 request line, drain, or [`HttpOptions::idle_timeout`]
+//! ends it; an SSE stream always terminates its connection after
+//! `data: [DONE]`). Accepted sockets land in a bounded pool drained by
+//! [`HttpOptions::conn_workers`] worker threads (default 2×cores) —
+//! never an unbounded `thread::spawn` per connection. Each conn worker
+//! multiplexes the connections it has adopted with non-blocking polls,
+//! so a handful of workers serve many kept-alive sockets; while a
+//! worker blocks on an in-flight completion its other connections
+//! wait, which bounds concurrency at exactly the pool size. When the
+//! pending pool is deeper than [`HttpOptions::max_queue_depth`] the
+//! accept loop itself sheds (429 + `Retry-After`, counted in
+//! `http_accept_shed_total` but not in the report's `shed` — no prompt
+//! id exists yet), so overload is repelled before it ties up a worker.
+//!
+//! **Buffer reuse.** Each conn worker owns one [`WorkBufs`] — request
+//! line, header line, body, and response/JSON staging buffers — reused
+//! across every request it ever serves; each connection owns one
+//! receive window reused across its requests. Responses are formatted
+//! into the staging buffer and sent with a single `write_all`; SSE
+//! frames are coalesced (every reply already queued is formatted into
+//! one batch per flush) through the allocation-free writers in
+//! [`crate::server::api`] (`write_chunk_into`/`write_response_into`,
+//! pinned byte-identical to the `Value`-tree serializers). Steady
+//! state, the request path allocates only what decode itself requires
+//! — request JSON parse, prompt text, reply channel, token strings;
+//! `verdant bench http` reports the measured allocations per request.
+//!
+//! **Bodies.** `Content-Length` (≤ 1 MiB) and `Transfer-Encoding:
+//! chunked` both work; a chunked size over the cap is rejected 413
+//! *before* its data is read, malformed chunk framing is a 400, and
+//! both close the connection (framing is unrecoverable).
 //!
 //! Routes:
 //! - `POST /v1/chat/completions` — [`ChatCompletionRequest`] in;
-//!   either one [`ChatCompletionResponse`] JSON document or an SSE
+//!   either one `ChatCompletionResponse` JSON document or an SSE
 //!   stream of `data:` chunks (`"stream": true`), one chunk per
 //!   generated token, closed by a usage chunk and `data: [DONE]`. The
 //!   usage block carries `x_carbon` (calibrated energy kWh, gCO2e at
 //!   the completion instant's grid intensity, serving device,
-//!   deferred-for virtual seconds) — the ledger's per-request
-//!   attribution surfaced on the wire.
+//!   deferred-for virtual seconds, resolved SLO class). An `x-slo`
+//!   header (`interactive` or `deferrable[:deadline_s]`) overrides the
+//!   body's `deferrable`/`deadline_s` fields, so plain OpenAI clients
+//!   can opt into temporal shifting without touching the body.
 //! - `GET /v1/models` — one entry per cluster device.
 //! - `GET /metrics` — the live [`MetricsRegistry`] rendered through
-//!   [`crate::report::summary::metrics_document`], the same code path
-//!   `--metrics-json` uses.
+//!   [`crate::report::summary::metrics_document`].
 //! - `POST /admin/drain` — begin graceful drain (see below).
 //!
 //! **Admission and backpressure.** A parsed request becomes a
 //! synthetic [`Prompt`] arriving "now" on the virtual clock and is
 //! handed to the ingest loop, which defers deferrable requests into
 //! forecast clean windows ([`PlacementPolicy::plan_release`]) and
-//! routes through the shared policy core — network traffic exercises
-//! exactly the decision path the replay planes pin. When admitted
-//! work in flight reaches [`HttpOptions::max_queue_depth`] the
-//! request is shed with HTTP 429, counted in `shed_total` and audited
-//! as a [`TraceEvent::Shed`] (`queue_full`) — explicit load-shedding,
-//! never a silent drop.
+//! routes through the shared policy core. When admitted work in
+//! flight reaches [`HttpOptions::max_queue_depth`] the request is
+//! shed with HTTP 429 + `Retry-After`, counted in `shed_total` and
+//! audited as a [`TraceEvent::Shed`] (`queue_full`) — explicit
+//! load-shedding, never a silent drop.
+//!
+//! **Churn.** With a churn schedule or fault injection the PR-8
+//! health machinery runs here too: workers heartbeat, a checker
+//! thread marks Down devices, re-homes their queued requests onto
+//! survivors and sheds (503, audited `Shed`) what cannot move;
+//! arrivals route around the health mask, and a request arriving when
+//! no healthy device survives is shed 503 (`no_healthy_device`)
+//! before it is admitted. Churn-free serving spawns none of this.
 //!
 //! **Drain.** SIGTERM or `POST /admin/drain` stops the accept loop
-//! and new admissions (503), flushes every deferred hold, and lets
-//! in-flight requests complete before [`HttpServer::run`] returns the
-//! final [`ServeReport`] — the PR-8 graceful-degradation contract on
-//! a real socket.
-//!
-//! Not yet wired on this plane: device churn / fault injection
-//! (rejected at [`HttpServer::bind`]), worker-side carbon sizing and
-//! continuous batching (workers run plain dynamic batching). The
-//! replay plane (`verdant serve` without `--http`) keeps full
-//! coverage of those paths.
+//! and new admissions (503), flushes every deferred hold, closes idle
+//! kept-alive connections, and lets in-flight requests complete
+//! before [`HttpServer::run`] returns the final [`ServeReport`].
 
 use anyhow::{anyhow, Result};
-use std::collections::HashMap;
-use std::io::{BufRead, BufReader, Read, Write};
+use std::collections::{HashMap, VecDeque};
+use std::io::{self, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-use crate::cluster::Cluster;
+use crate::cluster::{Cluster, HealthState};
 use crate::config::ExecutionMode;
 use crate::coordinator::estimator::BenchmarkDb;
 use crate::coordinator::policy::PlacementPolicy;
@@ -74,8 +109,10 @@ use crate::report::summary;
 use crate::runtime::{
     backend::no_batch_err, CalibratedBackend, HybridBackend, InferenceBackend, PjrtBackend,
 };
-use crate::server::api::{self, ChatCompletionRequest, ChatCompletionResponse};
-use crate::server::service::{DeviceQueue, QueueItem, ServeOptions, ServeReport};
+use crate::server::api::{self, ChatCompletionRequest};
+use crate::server::service::{
+    mask_of, DeviceQueue, HeartbeatGuard, QueueItem, ServeOptions, ServeReport,
+};
 use crate::telemetry::trace::TraceEvent;
 use crate::telemetry::{EnergyLedger, MetricsRegistry};
 use crate::util::json;
@@ -86,8 +123,20 @@ use crate::workload::{complexity, tokenizer, Category, Prompt, SloClass};
 /// requests that set no `deadline_s` of their own.
 const DEFAULT_DEADLINE_S: f64 = 600.0;
 
-/// Largest accepted request body; a hostile Content-Length cannot OOM.
+/// Largest accepted request body; a hostile Content-Length (or chunked
+/// stream) cannot OOM.
 const MAX_BODY_BYTES: usize = 1 << 20;
+
+/// Longest accepted request/header/chunk-size line.
+const MAX_HEADER_BYTES: usize = 8 * 1024;
+
+/// Per-connection receive window (must exceed [`MAX_HEADER_BYTES`] so
+/// a maximal header line always fits without growing).
+const RECV_WINDOW: usize = 16 * 1024;
+
+/// Read/write timeout while a request is mid-flight on the socket; a
+/// client that stalls longer mid-request loses the connection.
+const BLOCKING_IO_TIMEOUT: Duration = Duration::from_secs(5);
 
 /// Process-wide SIGTERM latch (see [`install_sigterm`]); polled by the
 /// accept and ingest loops.
@@ -100,11 +149,16 @@ pub struct HttpOptions {
     /// one — the loopback tests bind that way).
     pub addr: String,
     /// Admitted-but-unfinished requests allowed before new ones shed
-    /// with 429. `0` sheds everything (backpressure tests).
+    /// with 429 (`0` sheds everything — backpressure tests); pending
+    /// *connections* beyond this depth shed at accept.
     pub max_queue_depth: usize,
     /// How long a handler waits for its completion before giving up
     /// (504 non-streaming; stream truncation after headers).
     pub request_timeout: Duration,
+    /// Connection worker threads (`0` = auto: 2×available cores).
+    pub conn_workers: usize,
+    /// A kept-alive connection idle this long is closed.
+    pub idle_timeout: Duration,
 }
 
 impl Default for HttpOptions {
@@ -113,17 +167,34 @@ impl Default for HttpOptions {
             addr: "127.0.0.1:8080".into(),
             max_queue_depth: 256,
             request_timeout: Duration::from_secs(30),
+            conn_workers: 0,
+            idle_timeout: Duration::from_secs(5),
         }
     }
 }
 
-/// State every handler thread shares with the ingest loop and workers.
+impl HttpOptions {
+    /// The worker-pool size after resolving `0` = auto (2×cores; the
+    /// sweet spot for blocking handlers: enough to hide reply waits,
+    /// bounded so a connection flood cannot exhaust threads).
+    pub fn resolved_conn_workers(&self) -> usize {
+        if self.conn_workers > 0 {
+            self.conn_workers
+        } else {
+            2 * std::thread::available_parallelism().map(|n| n.get()).unwrap_or(2)
+        }
+    }
+}
+
+/// State every conn worker shares with the ingest loop and the
+/// inference workers.
 struct Shared {
     started: Instant,
     time_scale: f64,
     max_new_tokens: usize,
     max_queue_depth: usize,
     request_timeout: Duration,
+    idle_timeout: Duration,
     /// Graceful drain: set by SIGTERM, `/admin/drain`, or shutdown.
     drain: AtomicBool,
     next_id: AtomicU64,
@@ -135,6 +206,16 @@ struct Shared {
     batches: AtomicUsize,
     shed: AtomicUsize,
     shed_ids: Mutex<Vec<u64>>,
+    /// Live device health codes (0 Up / 1 Degraded / 2 Down) written
+    /// by the checker; `None` when churn is off, so the churn-free
+    /// path carries no mask at all.
+    health: Option<Arc<Vec<AtomicUsize>>>,
+    outages: AtomicUsize,
+    failovers: AtomicUsize,
+    /// True while the checker holds drained items it has not yet
+    /// re-homed — the settle barrier must not declare the queues empty
+    /// in that window.
+    rehoming: AtomicBool,
     /// Per-request reply channels, keyed by prompt id; the worker that
     /// serves the prompt removes the slot and streams into it.
     replies: Mutex<HashMap<u64, ReplySlot>>,
@@ -175,6 +256,7 @@ struct DoneInfo {
     energy_kwh: f64,
     carbon_g: f64,
     deferred_for_s: f64,
+    slo: &'static str,
 }
 
 struct Completion {
@@ -186,6 +268,235 @@ struct Completion {
     arrival_s: f64,
     vfinish_s: f64,
     deadline_s: Option<f64>,
+}
+
+// ---------------------------------------------------------------------
+// Connection pool and per-worker buffers
+
+/// Accepted-but-unclaimed connections, handed from the accept loop to
+/// the conn workers. Bounded in effect by the accept loop's depth
+/// check, not by blocking the producer.
+struct ConnPool {
+    pending: Mutex<VecDeque<TcpStream>>,
+    available: Condvar,
+}
+
+impl ConnPool {
+    fn new() -> Self {
+        ConnPool { pending: Mutex::new(VecDeque::new()), available: Condvar::new() }
+    }
+
+    fn depth(&self) -> usize {
+        self.pending.lock().unwrap().len()
+    }
+
+    fn push(&self, s: TcpStream) {
+        self.pending.lock().unwrap().push_back(s);
+        self.available.notify_one();
+    }
+
+    fn try_pop(&self) -> Option<TcpStream> {
+        self.pending.lock().unwrap().pop_front()
+    }
+
+    /// Block until a connection is pending or `shutdown` is set (the
+    /// 50 ms re-check bounds shutdown latency without a notify storm).
+    fn pop_wait(&self, shutdown: &AtomicBool) -> Option<TcpStream> {
+        let mut g = self.pending.lock().unwrap();
+        loop {
+            if let Some(s) = g.pop_front() {
+                return Some(s);
+            }
+            if shutdown.load(Ordering::Acquire) {
+                return None;
+            }
+            let (ng, _) = self.available.wait_timeout(g, Duration::from_millis(50)).unwrap();
+            g = ng;
+        }
+    }
+}
+
+/// A connection's receive window: one buffer reused across all its
+/// requests, surviving pipelined bytes between them.
+struct RecvBuf {
+    buf: Vec<u8>,
+    start: usize,
+    end: usize,
+}
+
+impl RecvBuf {
+    fn new() -> Self {
+        RecvBuf { buf: vec![0; RECV_WINDOW], start: 0, end: 0 }
+    }
+
+    fn has_data(&self) -> bool {
+        self.start < self.end
+    }
+
+    /// One `read` into the free tail (compacting first); `Ok(0)` = EOF.
+    fn fill(&mut self, stream: &mut TcpStream) -> io::Result<usize> {
+        if self.start > 0 {
+            self.buf.copy_within(self.start..self.end, 0);
+            self.end -= self.start;
+            self.start = 0;
+        }
+        if self.end == self.buf.len() {
+            // callers cap lines at MAX_HEADER_BYTES < RECV_WINDOW, so a
+            // full window means a protocol violation, not real load
+            return Err(io::Error::new(io::ErrorKind::InvalidData, "receive window full"));
+        }
+        let n = stream.read(&mut self.buf[self.end..])?;
+        self.end += n;
+        Ok(n)
+    }
+
+    /// Read one CRLF/LF-terminated line into `out` (terminator
+    /// stripped). `Ok(false)` = clean EOF at a line boundary; EOF
+    /// mid-line is an error.
+    fn read_line_into(&mut self, stream: &mut TcpStream, out: &mut Vec<u8>) -> io::Result<bool> {
+        out.clear();
+        loop {
+            if let Some(pos) = self.buf[self.start..self.end].iter().position(|&b| b == b'\n') {
+                let line = &self.buf[self.start..self.start + pos];
+                let line = line.strip_suffix(b"\r").unwrap_or(line);
+                out.extend_from_slice(line);
+                self.start += pos + 1;
+                return Ok(true);
+            }
+            if self.end - self.start > MAX_HEADER_BYTES {
+                return Err(io::Error::new(io::ErrorKind::InvalidData, "header line over 8 KiB"));
+            }
+            if self.fill(stream)? == 0 {
+                return if self.start == self.end {
+                    Ok(false)
+                } else {
+                    Err(io::Error::new(
+                        io::ErrorKind::UnexpectedEof,
+                        "connection closed mid-line",
+                    ))
+                };
+            }
+        }
+    }
+
+    /// Append exactly `n` body bytes to `out`, draining the window
+    /// first (pipelined bytes), then reading from the socket.
+    fn read_exact_into(
+        &mut self,
+        stream: &mut TcpStream,
+        out: &mut Vec<u8>,
+        n: usize,
+    ) -> io::Result<()> {
+        let take = n.min(self.end - self.start);
+        out.extend_from_slice(&self.buf[self.start..self.start + take]);
+        self.start += take;
+        let mut remaining = n - take;
+        while remaining > 0 {
+            let m = out.len();
+            out.resize(m + remaining, 0);
+            let r = stream.read(&mut out[m..])?;
+            out.truncate(m + r);
+            if r == 0 {
+                return Err(io::Error::new(
+                    io::ErrorKind::UnexpectedEof,
+                    "connection closed mid-body",
+                ));
+            }
+            remaining -= r;
+        }
+        Ok(())
+    }
+}
+
+/// One adopted connection: socket, its receive window, and its idle
+/// clock.
+struct Conn {
+    stream: TcpStream,
+    recv: RecvBuf,
+    last_active: Instant,
+}
+
+impl Conn {
+    fn adopt(stream: TcpStream) -> Option<Conn> {
+        stream.set_nodelay(true).ok()?;
+        stream.set_read_timeout(Some(BLOCKING_IO_TIMEOUT)).ok()?;
+        stream.set_write_timeout(Some(BLOCKING_IO_TIMEOUT)).ok()?;
+        Some(Conn { stream, recv: RecvBuf::new(), last_active: Instant::now() })
+    }
+}
+
+/// Response staging split out of [`WorkBufs`] so a handler can borrow
+/// the body buffer and the write buffers disjointly.
+struct WriteBufs {
+    /// Head + body of the next flush: exactly one `write_all` per
+    /// response (or per coalesced SSE batch).
+    out: String,
+    /// JSON document staging for the direct writers.
+    json: String,
+    /// Decoded completion text (non-streaming).
+    content: String,
+}
+
+/// Per-conn-worker scratch, reused across every request the worker
+/// ever serves — the buffer-reuse invariant the module doc describes.
+struct WorkBufs {
+    reqline: Vec<u8>,
+    line: Vec<u8>,
+    body: Vec<u8>,
+    w: WriteBufs,
+}
+
+impl WorkBufs {
+    fn new() -> Self {
+        WorkBufs {
+            reqline: Vec::with_capacity(256),
+            line: Vec::with_capacity(256),
+            body: Vec::with_capacity(4096),
+            w: WriteBufs {
+                out: String::with_capacity(4096),
+                json: String::with_capacity(2048),
+                content: String::with_capacity(1024),
+            },
+        }
+    }
+}
+
+/// Resolved `x-slo` header.
+enum SloSpec {
+    Interactive,
+    Deferrable(Option<f64>),
+}
+
+/// Parse an `x-slo` header value: `interactive`, `deferrable`, or
+/// `deferrable:<deadline_s>`.
+fn parse_slo(v: &str) -> Result<SloSpec, String> {
+    let v = v.trim();
+    if v.eq_ignore_ascii_case("interactive") {
+        return Ok(SloSpec::Interactive);
+    }
+    if v.eq_ignore_ascii_case("deferrable") {
+        return Ok(SloSpec::Deferrable(None));
+    }
+    if let Some((class, dl)) = v.split_once(':') {
+        if class.trim().eq_ignore_ascii_case("deferrable") {
+            let x: f64 = dl
+                .trim()
+                .parse()
+                .map_err(|_| format!("x-slo deadline {:?} is not a number", dl.trim()))?;
+            if !(x > 0.0 && x.is_finite()) {
+                return Err(format!("x-slo deadline must be positive and finite, got {x}"));
+            }
+            return Ok(SloSpec::Deferrable(Some(x)));
+        }
+    }
+    Err(format!("unrecognized x-slo value {v:?}; use interactive or deferrable[:deadline_s]"))
+}
+
+fn slo_name(s: &SloClass) -> &'static str {
+    match s {
+        SloClass::Interactive => "interactive",
+        SloClass::Deferrable { .. } => "deferrable",
+    }
 }
 
 /// A bound-but-not-yet-serving HTTP server. [`Self::bind`] validates
@@ -206,13 +517,8 @@ impl HttpServer {
             return Err(anyhow!("nothing to serve: cluster has no devices"));
         }
         opts.validate(Some(cluster.devices.len()))?;
-        if opts.churn.as_ref().is_some_and(|c| !c.is_empty())
-            || opts.fail_device_after_batches.is_some()
-        {
-            return Err(anyhow!(
-                "churn/fault injection is not supported on the HTTP plane yet; \
-                 use the `verdant serve` replay mode for availability scenarios"
-            ));
+        if http.idle_timeout.is_zero() {
+            return Err(anyhow!("[serving.http] idle_timeout_s must be positive"));
         }
         // resolve the strategy at bind time: an unknown name must error
         // before the listener is handed out, exactly as `serve` does
@@ -249,6 +555,15 @@ impl HttpServer {
             Some(db) => Arc::clone(db),
             None => Arc::new(BenchmarkDb::build(&self.cluster, &[1, 4, 8], 2, 69.0, 7)),
         };
+        // churn machinery exists only when a schedule or injected fault
+        // asks for it — the churn-free path spawns no checker and
+        // routes unmasked, exactly like the replay plane
+        let churn = self.opts.churn.as_ref().filter(|c| !c.is_empty());
+        let churn_enabled = churn.is_some() || self.opts.fail_device_after_batches.is_some();
+        let health: Option<Arc<Vec<AtomicUsize>>> =
+            churn_enabled.then(|| Arc::new((0..n_dev).map(|_| AtomicUsize::new(0)).collect()));
+        let heartbeats: Arc<Vec<AtomicU64>> =
+            Arc::new((0..n_dev).map(|_| AtomicU64::new(0)).collect());
         let started = Instant::now();
         let shared = Arc::new(Shared {
             started,
@@ -256,6 +571,7 @@ impl HttpServer {
             max_new_tokens: self.opts.max_new_tokens,
             max_queue_depth: self.http.max_queue_depth,
             request_timeout: self.http.request_timeout,
+            idle_timeout: self.http.idle_timeout,
             drain: AtomicBool::new(false),
             next_id: AtomicU64::new(0),
             admitted: AtomicU64::new(0),
@@ -263,6 +579,10 @@ impl HttpServer {
             batches: AtomicUsize::new(0),
             shed: AtomicUsize::new(0),
             shed_ids: Mutex::new(Vec::new()),
+            health: health.clone(),
+            outages: AtomicUsize::new(0),
+            failovers: AtomicUsize::new(0),
+            rehoming: AtomicBool::new(false),
             replies: Mutex::new(HashMap::new()),
             deferred_for: Mutex::new(HashMap::new()),
             metrics: Mutex::new(MetricsRegistry::new()),
@@ -280,7 +600,7 @@ impl HttpServer {
         let (tx, rx) = mpsc::channel::<Completion>();
         let (ingest_tx, ingest_rx) = mpsc::channel::<Prompt>();
 
-        // --- workers: the same per-device loop the replay plane runs,
+        // --- inference workers: the replay plane's per-device loop,
         // minus sizing/continuous batching, plus the reply streams ----
         let mut workers = Vec::new();
         for d in 0..n_dev {
@@ -293,7 +613,14 @@ impl HttpServer {
             let opts = self.opts.clone();
             let shared = Arc::clone(&shared);
             let worker_trace = policy.trace_sink().cloned();
+            let hb = Arc::clone(&heartbeats);
+            let worker_health = health.clone();
+            let worker_churn = self.opts.churn.clone().unwrap_or_default();
             workers.push(std::thread::spawn(move || -> Result<()> {
+                // however this thread exits — clean return, backend
+                // error, injected fault or panic — the sentinel tells
+                // the health checker the device is gone
+                let _pulse = HeartbeatGuard { hb: Arc::clone(&hb), d };
                 let backend: Box<dyn InferenceBackend> = match opts.execution {
                     ExecutionMode::Real => {
                         Box::new(PjrtBackend::load(&opts.artifacts_dir, &[dev.model.as_str()])?)
@@ -307,9 +634,43 @@ impl HttpServer {
                         Box::new(CalibratedBackend::from_cluster(&cluster))
                     }
                 };
+                let mut batches_done = 0usize;
                 loop {
-                    let items =
-                        queues[d].pull_batch(opts.batch_size, opts.batch_timeout, &done, None);
+                    hb[d].fetch_add(1, Ordering::Relaxed);
+                    // a scripted outage idles this worker: its queue is
+                    // the checker's to drain, new arrivals route around
+                    // the mask. Keep heartbeating — down is not dead.
+                    let scripted_down = !worker_churn.is_empty() && {
+                        let vnow = started.elapsed().as_secs_f64() * opts.time_scale;
+                        worker_churn.state_at(d, vnow).is_down()
+                    };
+                    if scripted_down
+                        || worker_health
+                            .as_ref()
+                            .is_some_and(|h| h[d].load(Ordering::Acquire) == 2)
+                    {
+                        if done.load(Ordering::Acquire) && queues[d].queued() == 0 {
+                            return Ok(());
+                        }
+                        std::thread::sleep(Duration::from_millis(2));
+                        continue;
+                    }
+                    // the chaos hook: die *between* batches, so no
+                    // pulled item is ever lost to the injected fault
+                    if let Some((fd, after)) = opts.fail_device_after_batches {
+                        if fd == d && batches_done >= after {
+                            return Err(anyhow!(
+                                "injected fault: worker {} stopped after {after} batches",
+                                dev.name
+                            ));
+                        }
+                    }
+                    let items = queues[d].pull_batch(
+                        opts.batch_size,
+                        opts.batch_timeout,
+                        &done,
+                        Some(&hb[d]),
+                    );
                     if items.is_empty() {
                         return Ok(());
                     }
@@ -333,6 +694,7 @@ impl HttpServer {
                         .ok_or_else(|| no_batch_err(backend.as_ref(), &dev.model, texts.len()))?;
                     let out =
                         backend.generate(&dev.model, exec_batch, &texts, opts.max_new_tokens)?;
+                    batches_done += 1;
                     let vfinish_s = started.elapsed().as_secs_f64() * opts.time_scale;
                     if let Some(sink) = worker_trace.as_deref() {
                         let batch_kwh: f64 = items
@@ -376,6 +738,7 @@ impl HttpServer {
                                 energy_kwh: energy,
                                 carbon_g: carbon_kg * 1000.0,
                                 deferred_for_s: deferred_for,
+                                slo: slo_name(&item.prompt.slo),
                             }));
                         }
                         shared.in_flight.fetch_sub(1, Ordering::AcqRel);
@@ -395,12 +758,145 @@ impl HttpServer {
         }
         drop(tx);
 
+        // --- health checker: heartbeats, outage windows, re-homing ----
+        // (the service plane's loop, plus reply-slot cleanup so a shed
+        // request's blocked handler resolves to 503 instead of 504)
+        let stop = Arc::new(AtomicBool::new(false));
+        let checker = health.as_ref().map(|health| {
+            let health = Arc::clone(health);
+            let hb = Arc::clone(&heartbeats);
+            let queues = Arc::clone(&queues);
+            let stop = Arc::clone(&stop);
+            let shared = Arc::clone(&shared);
+            let sink = policy.trace_sink().cloned();
+            let schedule = self.opts.churn.clone().unwrap_or_default();
+            let names: Vec<String> = cluster.devices.iter().map(|d| d.name.clone()).collect();
+            let max_attempts = self.opts.failure.max_attempts as u32;
+            let timeout = self.opts.heartbeat_timeout;
+            let time_scale = self.opts.time_scale;
+            std::thread::spawn(move || {
+                let n = names.len();
+                // (last heartbeat value, when it last changed)
+                let mut seen: Vec<(u64, Instant)> =
+                    (0..n).map(|d| (hb[d].load(Ordering::Acquire), Instant::now())).collect();
+                while !stop.load(Ordering::Acquire) {
+                    let vnow = started.elapsed().as_secs_f64() * time_scale;
+                    for d in 0..n {
+                        let beat = hb[d].load(Ordering::Acquire);
+                        if beat != seen[d].0 && beat != crate::server::service::HEARTBEAT_DEAD {
+                            seen[d] = (beat, Instant::now());
+                        }
+                        let dead = beat == crate::server::service::HEARTBEAT_DEAD
+                            || seen[d].1.elapsed() > timeout;
+                        let state =
+                            if dead { HealthState::Down } else { schedule.state_at(d, vnow) };
+                        let code = if state.is_down() {
+                            2
+                        } else if state.is_impaired() {
+                            1
+                        } else {
+                            0
+                        };
+                        let prev = health[d].swap(code, Ordering::AcqRel);
+                        if code == 2 && prev != 2 {
+                            shared.outages.fetch_add(1, Ordering::Relaxed);
+                            if let Some(s) = sink.as_deref() {
+                                s.emit(&TraceEvent::DeviceDown {
+                                    t: vnow,
+                                    device: names[d].clone(),
+                                });
+                            }
+                        } else if code != 2 && prev == 2 {
+                            if let Some(s) = sink.as_deref() {
+                                s.emit(&TraceEvent::DeviceUp {
+                                    t: vnow,
+                                    device: names[d].clone(),
+                                    state: state.name().to_string(),
+                                });
+                            }
+                        }
+                        if code != 2 {
+                            continue;
+                        }
+                        // re-home the down device's queue onto the
+                        // least-loaded survivor; shed (and unblock the
+                        // waiting handler) what cannot move
+                        shared.rehoming.store(true, Ordering::SeqCst);
+                        for mut item in queues[d].try_drain(usize::MAX) {
+                            item.attempts += 1;
+                            let survivor = (0..n)
+                                .filter(|&e| health[e].load(Ordering::Acquire) != 2)
+                                .min_by(|&a, &b| {
+                                    queues[a]
+                                        .backlog_s()
+                                        .partial_cmp(&queues[b].backlog_s())
+                                        .unwrap_or(std::cmp::Ordering::Equal)
+                                });
+                            match survivor {
+                                Some(e) if item.attempts <= max_attempts => {
+                                    shared.failovers.fetch_add(1, Ordering::Relaxed);
+                                    if let Some(s) = sink.as_deref() {
+                                        s.emit(&TraceEvent::Failover {
+                                            t: vnow,
+                                            prompt: item.prompt.id,
+                                            from: names[d].clone(),
+                                            to: names[e].clone(),
+                                        });
+                                    }
+                                    queues[e].push(item);
+                                }
+                                survivor => {
+                                    let reason = if survivor.is_none() {
+                                        "no_surviving_device"
+                                    } else {
+                                        "retry_budget_exhausted"
+                                    };
+                                    let id = item.prompt.id;
+                                    shared.shed.fetch_add(1, Ordering::Relaxed);
+                                    shared.shed_ids.lock().unwrap().push(id);
+                                    // dropping the slot's sender turns
+                                    // the handler's blocked recv into a
+                                    // Disconnected → 503
+                                    shared.replies.lock().unwrap().remove(&id);
+                                    shared.deferred_for.lock().unwrap().remove(&id);
+                                    shared.in_flight.fetch_sub(1, Ordering::AcqRel);
+                                    if let Some(s) = sink.as_deref() {
+                                        s.emit(&TraceEvent::Shed {
+                                            t: vnow,
+                                            prompt: id,
+                                            reason: reason.to_string(),
+                                        });
+                                    }
+                                }
+                            }
+                        }
+                        shared.rehoming.store(false, Ordering::SeqCst);
+                    }
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+            })
+        });
+
+        // --- connection workers: the bounded pool ---------------------
+        let pool = Arc::new(ConnPool::new());
+        let conn_shutdown = Arc::new(AtomicBool::new(false));
+        let mut conn_threads = Vec::new();
+        for _ in 0..self.http.resolved_conn_workers() {
+            let pool = Arc::clone(&pool);
+            let shared = Arc::clone(&shared);
+            let ingest = ingest_tx.clone();
+            let shutdown = Arc::clone(&conn_shutdown);
+            conn_threads.push(std::thread::spawn(move || {
+                conn_worker(&pool, &shared, &ingest, &shutdown);
+            }));
+        }
+        drop(ingest_tx);
+
         // --- accept loop: nonblocking poll so drain is observed -------
         let listener = self.listener;
         let accept_shared = Arc::clone(&shared);
-        let accept_tx = ingest_tx.clone();
+        let accept_pool = Arc::clone(&pool);
         let accept = std::thread::spawn(move || {
-            let mut handlers: Vec<std::thread::JoinHandle<()>> = Vec::new();
             loop {
                 if TERM.load(Ordering::SeqCst) {
                     accept_shared.drain.store(true, Ordering::SeqCst);
@@ -410,24 +906,41 @@ impl HttpServer {
                 }
                 match listener.accept() {
                     Ok((stream, _)) => {
-                        let shared = Arc::clone(&accept_shared);
-                        let tx = accept_tx.clone();
-                        handlers.push(std::thread::spawn(move || {
-                            let _ = serve_connection(stream, &shared, &tx);
-                        }));
+                        if accept_pool.depth() > accept_shared.max_queue_depth {
+                            // accept-side overload: more unclaimed
+                            // connections than the depth limit — shed
+                            // before a worker is tied up (metrics only;
+                            // no prompt id exists for the report)
+                            {
+                                let mut m = accept_shared.metrics.lock().unwrap();
+                                m.inc("http_429_total");
+                                m.inc("http_accept_shed_total");
+                            }
+                            let mut stream = stream;
+                            let body = api::error_json(
+                                "connection backlog at the configured limit; retry later",
+                                "overloaded",
+                            );
+                            let head = format!(
+                                "HTTP/1.1 429 Too Many Requests\r\n\
+                                 Content-Type: application/json\r\nContent-Length: {}\r\n\
+                                 Retry-After: 1\r\nConnection: close\r\n\r\n",
+                                body.len()
+                            );
+                            let _ = stream
+                                .write_all(head.as_bytes())
+                                .and_then(|()| stream.write_all(body.as_bytes()));
+                        } else {
+                            accept_pool.push(stream);
+                        }
                     }
-                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
                         std::thread::sleep(Duration::from_millis(5));
                     }
                     Err(_) => std::thread::sleep(Duration::from_millis(5)),
                 }
-                // reap finished handlers so a long-lived server does
-                // not accumulate join handles
-                handlers.retain(|h| !h.is_finished());
             }
-            handlers
         });
-        drop(ingest_tx);
 
         // --- ingest (this thread): defer, route, drain barrier --------
         let mut held: Vec<(f64, Prompt)> = Vec::new();
@@ -453,7 +966,7 @@ impl HttpServer {
                     }
                     dispatch_http(
                         p, &cluster, &db, &policy, &queues, self.opts.batch_size, now_v,
-                        &mut assignment,
+                        &mut assignment, shared.health.as_ref(),
                     );
                     dispatched += 1;
                 } else {
@@ -484,7 +997,7 @@ impl HttpServer {
                         let now_v = shared.vnow();
                         dispatch_http(
                             p, &cluster, &db, &policy, &queues, self.opts.batch_size, now_v,
-                            &mut assignment,
+                            &mut assignment, shared.health.as_ref(),
                         );
                         dispatched += 1;
                     }
@@ -504,10 +1017,29 @@ impl HttpServer {
         }
         drop(ingest_rx);
 
+        // settle barrier (churn only): a re-homed item must never land
+        // on a queue whose worker already observed `done`
+        if churn_enabled {
+            loop {
+                let busy = shared.rehoming.load(Ordering::SeqCst)
+                    || queues.iter().any(|q| q.queued() > 0);
+                if !busy {
+                    std::thread::sleep(Duration::from_millis(5));
+                    if !shared.rehoming.load(Ordering::SeqCst)
+                        && queues.iter().all(|q| q.queued() == 0)
+                    {
+                        break;
+                    }
+                } else {
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+            }
+        }
+
         // --- shutdown: workers drain their queues, then everything
         // joins in dependency order ------------------------------------
         done.store(true, Ordering::Release);
-        let handlers = accept.join().unwrap_or_default();
+        accept.join().map_err(|_| anyhow!("accept thread panicked"))?;
         let mut errors: Vec<String> = Vec::new();
         for w in workers {
             match w.join() {
@@ -522,6 +1054,10 @@ impl HttpServer {
                     errors.push(format!("worker panicked: {msg}"));
                 }
             }
+        }
+        stop.store(true, Ordering::Release);
+        if let Some(h) = checker {
+            let _ = h.join();
         }
         // backstop: with every worker gone, anything still queued (a
         // dead worker's leftovers) can only be shed — counted, audited,
@@ -572,13 +1108,23 @@ impl HttpServer {
                 &[c.arrival_s],
             );
         }
-        for h in handlers {
+        // with every reply slot resolved the conn workers can only be
+        // serving idle or draining sockets; tell them to stop and join
+        conn_shutdown.store(true, Ordering::Release);
+        pool.available.notify_all();
+        for h in conn_threads {
             let _ = h.join();
         }
 
+        let outages = shared.outages.load(Ordering::Acquire);
+        let failovers = shared.failovers.load(Ordering::Acquire);
         let shed = shared.shed.load(Ordering::Acquire);
         let mut shed_ids = shared.shed_ids.lock().unwrap().clone();
         shed_ids.sort_unstable();
+        for _ in 0..outages {
+            ledger.post_outage();
+        }
+        ledger.post_failover(failovers as u64);
         ledger.post_shed(shed as u64);
         let wallclock = started.elapsed().as_secs_f64();
         let batches = shared.batches.load(Ordering::Acquire);
@@ -599,6 +1145,10 @@ impl HttpServer {
         metrics.observe_summary("batch_fill", &fills);
         metrics.record_ledger(&ledger);
         metrics.add("shed_total", shed as u64);
+        if churn_enabled {
+            metrics.add("outages_total", outages as u64);
+            metrics.add("failovers_total", failovers as u64);
+        }
         if !errors.is_empty() {
             metrics.add("worker_errors_total", errors.len() as u64);
         }
@@ -639,8 +1189,8 @@ impl HttpServer {
             est_carbon_kg,
             est_saved_kg: ledger.realized_savings_kg(),
             device_accounts,
-            outages: 0,
-            failovers: 0,
+            outages,
+            failovers,
             shed,
             shed_ids,
             errors,
@@ -658,9 +1208,8 @@ pub fn serve_http(
     HttpServer::bind(cluster, opts, http)?.run()
 }
 
-/// Route one synthetic arrival through the shared policy core and
-/// enqueue it on the routed device (mirror of the replay plane's
-/// `dispatch`).
+/// Route one synthetic arrival through the shared policy core (masked
+/// when churn is live) and enqueue it on the routed device.
 #[allow(clippy::too_many_arguments)]
 fn dispatch_http(
     p: Prompt,
@@ -671,9 +1220,18 @@ fn dispatch_http(
     batch_size: usize,
     now_v: f64,
     assignment: &mut Vec<(u64, usize)>,
+    health: Option<&Arc<Vec<AtomicUsize>>>,
 ) {
     let backlog: Vec<f64> = queues.iter().map(|q| q.backlog_s()).collect();
-    let d = policy.route_arrival(&p, cluster, db, batch_size, &backlog, now_v);
+    let d = policy.route_arrival_masked(
+        &p,
+        cluster,
+        db,
+        batch_size,
+        &backlog,
+        now_v,
+        mask_of(health).as_ref(),
+    );
     assignment.push((p.id, d));
     let est = db.cost(&cluster.devices[d], &p, batch_size).e2e_s;
     queues[d].push(QueueItem {
@@ -704,103 +1262,385 @@ fn install_sigterm() {
 #[cfg(not(unix))]
 fn install_sigterm() {}
 
-/// Read one HTTP/1.1 request and dispatch it to a route handler.
-fn serve_connection(
-    mut stream: TcpStream,
+// ---------------------------------------------------------------------
+// Connection workers
+
+enum Step {
+    /// Served one request; the connection stays (keep-alive).
+    Served,
+    /// No data and not yet idle-expired; poll again later.
+    Idle,
+    /// Close the connection (explicit, idle, drain, EOF, or error).
+    Close,
+}
+
+enum PollOutcome {
+    Ready,
+    Empty,
+    Closed,
+}
+
+/// One conn worker: adopt pending connections from the pool and
+/// multiplex them with non-blocking polls, serving at most one request
+/// per connection per sweep (which keeps pipelined requests in order).
+fn conn_worker(
+    pool: &ConnPool,
     shared: &Shared,
     ingest: &mpsc::Sender<Prompt>,
-) -> std::io::Result<()> {
-    stream.set_read_timeout(Some(Duration::from_secs(5)))?;
-    let mut reader = BufReader::new(stream.try_clone()?);
-    let mut line = String::new();
-    reader.read_line(&mut line)?;
-    let mut parts = line.split_whitespace();
-    let method = parts.next().unwrap_or("").to_string();
-    let path = parts.next().unwrap_or("").to_string();
-    let mut content_length = 0usize;
+    shutdown: &AtomicBool,
+) {
+    let mut bufs = WorkBufs::new();
+    let mut conns: Vec<Conn> = Vec::new();
     loop {
-        let mut h = String::new();
-        if reader.read_line(&mut h)? == 0 {
+        // adopt one pending connection per sweep while busy, so the
+        // pool spreads across workers instead of piling onto the first
+        if let Some(s) = pool.try_pop() {
+            if let Some(c) = Conn::adopt(s) {
+                conns.push(c);
+            }
+        }
+        if conns.is_empty() {
+            match pool.pop_wait(shutdown) {
+                Some(s) => {
+                    if let Some(c) = Conn::adopt(s) {
+                        conns.push(c);
+                    }
+                }
+                None => return,
+            }
+            continue;
+        }
+        let mut progressed = false;
+        let mut i = 0;
+        while i < conns.len() {
+            match step_conn(&mut conns[i], shared, ingest, &mut bufs) {
+                Step::Served => {
+                    progressed = true;
+                    i += 1;
+                }
+                Step::Idle => i += 1,
+                Step::Close => {
+                    conns.swap_remove(i);
+                }
+            }
+        }
+        if !progressed {
+            if shutdown.load(Ordering::Acquire) {
+                return;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+}
+
+/// Non-blocking peek for request bytes on an idle connection.
+fn poll_fill(conn: &mut Conn) -> PollOutcome {
+    if conn.recv.has_data() {
+        return PollOutcome::Ready;
+    }
+    if conn.stream.set_nonblocking(true).is_err() {
+        return PollOutcome::Closed;
+    }
+    let r = conn.recv.fill(&mut conn.stream);
+    let restored = conn.stream.set_nonblocking(false).is_ok();
+    match r {
+        Ok(0) => PollOutcome::Closed,
+        Ok(_) if restored => {
+            conn.last_active = Instant::now();
+            PollOutcome::Ready
+        }
+        Ok(_) => PollOutcome::Closed,
+        Err(e)
+            if restored
+                && matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut) =>
+        {
+            PollOutcome::Empty
+        }
+        Err(_) => PollOutcome::Closed,
+    }
+}
+
+/// Advance one connection: poll for a request, serve it if present,
+/// expire it if idle or draining.
+fn step_conn(
+    conn: &mut Conn,
+    shared: &Shared,
+    ingest: &mpsc::Sender<Prompt>,
+    bufs: &mut WorkBufs,
+) -> Step {
+    match poll_fill(conn) {
+        PollOutcome::Ready => {}
+        PollOutcome::Empty => {
+            if shared.drain.load(Ordering::SeqCst) {
+                return Step::Close;
+            }
+            if conn.last_active.elapsed() >= shared.idle_timeout {
+                return Step::Close;
+            }
+            return Step::Idle;
+        }
+        PollOutcome::Closed => return Step::Close,
+    }
+    match serve_one(conn, shared, ingest, bufs) {
+        Ok(true) => {
+            conn.last_active = Instant::now();
+            Step::Served
+        }
+        Ok(false) | Err(_) => Step::Close,
+    }
+}
+
+/// Read, parse and answer exactly one HTTP/1.1 request. Returns
+/// whether the connection survives (keep-alive).
+fn serve_one(
+    conn: &mut Conn,
+    shared: &Shared,
+    ingest: &mpsc::Sender<Prompt>,
+    bufs: &mut WorkBufs,
+) -> io::Result<bool> {
+    let WorkBufs { reqline, line, body, w } = bufs;
+    let stream = &mut conn.stream;
+    let recv = &mut conn.recv;
+    if !recv.read_line_into(stream, reqline)? {
+        return Ok(false); // clean EOF at a request boundary
+    }
+    if reqline.is_empty() {
+        return Ok(true); // tolerate a stray CRLF between requests
+    }
+    let Ok(first) = std::str::from_utf8(reqline) else {
+        respond(stream, w, 400, "Bad Request",
+            &api::error_json("request line is not valid UTF-8", "invalid_request_error"),
+            false, "")?;
+        return Ok(false);
+    };
+    let mut parts = first.split_whitespace();
+    let method = parts.next().unwrap_or("");
+    let path = parts.next().unwrap_or("");
+    let version = parts.next().unwrap_or("HTTP/1.1");
+    if method.is_empty() || path.is_empty() {
+        respond(stream, w, 400, "Bad Request",
+            &api::error_json("malformed request line", "invalid_request_error"), false, "")?;
+        return Ok(false);
+    }
+    // HTTP/1.1 defaults to keep-alive; HTTP/1.0 to close
+    let mut keep = !version.eq_ignore_ascii_case("HTTP/1.0");
+    let mut content_length = 0usize;
+    let mut chunked = false;
+    let mut slo_header: Option<Result<SloSpec, String>> = None;
+    loop {
+        if !recv.read_line_into(stream, line)? {
+            return Err(io::Error::new(
+                io::ErrorKind::UnexpectedEof,
+                "connection closed mid-headers",
+            ));
+        }
+        if line.is_empty() {
             break;
         }
-        let h = h.trim();
-        if h.is_empty() {
-            break;
-        }
+        let Ok(h) = std::str::from_utf8(line) else { continue };
         if let Some((k, v)) = h.split_once(':') {
-            if k.trim().eq_ignore_ascii_case("content-length") {
-                content_length = v.trim().parse().unwrap_or(0);
+            let (k, v) = (k.trim(), v.trim());
+            if k.eq_ignore_ascii_case("content-length") {
+                content_length = v.parse().unwrap_or(0);
+            } else if k.eq_ignore_ascii_case("transfer-encoding") {
+                chunked = v.split(',').any(|t| t.trim().eq_ignore_ascii_case("chunked"));
+            } else if k.eq_ignore_ascii_case("connection") {
+                if v.eq_ignore_ascii_case("close") {
+                    keep = false;
+                } else if v.eq_ignore_ascii_case("keep-alive") {
+                    keep = true;
+                }
+            } else if k.eq_ignore_ascii_case("x-slo") {
+                slo_header = Some(parse_slo(v));
             }
         }
     }
     shared.metrics.lock().unwrap().inc("http_requests_total");
-    if content_length > MAX_BODY_BYTES {
-        return write_simple(
-            &mut stream,
-            413,
-            "Payload Too Large",
-            &api::error_json("request body over 1 MiB", "invalid_request_error"),
-        );
+    body.clear();
+    if chunked {
+        match read_chunked_body(recv, stream, line, body) {
+            Ok(()) => {}
+            Err(ChunkErr::TooLarge) => {
+                // the size line promised more than the cap: rejected
+                // before its data is read, so the socket is a goner
+                respond(stream, w, 413, "Payload Too Large",
+                    &api::error_json("chunked request body over 1 MiB", "invalid_request_error"),
+                    false, "")?;
+                return Ok(false);
+            }
+            Err(ChunkErr::Malformed(m)) => {
+                shared.metrics.lock().unwrap().inc("http_400_total");
+                respond(stream, w, 400, "Bad Request",
+                    &api::error_json(&m, "invalid_request_error"), false, "")?;
+                return Ok(false);
+            }
+            Err(ChunkErr::Io(e)) => return Err(e),
+        }
+    } else {
+        if content_length > MAX_BODY_BYTES {
+            // the body is unread, so the connection cannot be reused
+            respond(stream, w, 413, "Payload Too Large",
+                &api::error_json("request body over 1 MiB", "invalid_request_error"),
+                false, "")?;
+            return Ok(false);
+        }
+        recv.read_exact_into(stream, body, content_length)?;
     }
-    let mut body = vec![0u8; content_length];
-    if content_length > 0 {
-        reader.read_exact(&mut body)?;
-    }
-    let body = String::from_utf8_lossy(&body).into_owned();
-    match (method.as_str(), path.as_str()) {
-        ("POST", "/v1/chat/completions") => handle_chat(stream, shared, ingest, &body),
+    // a response during drain is the connection's last
+    let keep = keep && !shared.drain.load(Ordering::SeqCst);
+    match (method, path) {
+        ("POST", "/v1/chat/completions") => {
+            let Ok(body_str) = std::str::from_utf8(body) else {
+                shared.metrics.lock().unwrap().inc("http_400_total");
+                respond(stream, w, 400, "Bad Request",
+                    &api::error_json("request body is not valid UTF-8", "invalid_request_error"),
+                    keep, "")?;
+                return Ok(keep);
+            };
+            handle_chat(stream, shared, ingest, body_str, slo_header, w, keep)
+        }
         ("GET", "/v1/models") => {
-            write_simple(&mut stream, 200, "OK", &api::models_json(&shared.models))
+            respond(stream, w, 200, "OK", &api::models_json(&shared.models), keep, "")?;
+            Ok(keep)
         }
         ("GET", "/metrics") => {
             let doc = {
                 let reg = shared.metrics.lock().unwrap();
                 json::to_string(&summary::metrics_document(None, &reg))
             };
-            write_simple(&mut stream, 200, "OK", &doc)
+            respond(stream, w, 200, "OK", &doc, keep, "")?;
+            Ok(keep)
         }
         ("POST", "/admin/drain") => {
             shared.drain.store(true, Ordering::SeqCst);
-            write_simple(&mut stream, 200, "OK", "{\"status\":\"draining\"}")
+            respond(stream, w, 200, "OK", "{\"status\":\"draining\"}", false, "")?;
+            Ok(false)
         }
-        _ => write_simple(
-            &mut stream,
-            404,
-            "Not Found",
-            &api::error_json(&format!("no route {method} {path}"), "invalid_request_error"),
-        ),
+        _ => {
+            respond(stream, w, 404, "Not Found",
+                &api::error_json(&format!("no route {method} {path}"), "invalid_request_error"),
+                keep, "")?;
+            Ok(keep)
+        }
+    }
+}
+
+enum ChunkErr {
+    TooLarge,
+    Malformed(String),
+    Io(io::Error),
+}
+
+impl From<io::Error> for ChunkErr {
+    fn from(e: io::Error) -> Self {
+        ChunkErr::Io(e)
+    }
+}
+
+/// Decode a `Transfer-Encoding: chunked` body into `out`. The size
+/// line is validated against [`MAX_BODY_BYTES`] *before* any chunk
+/// data is read, so an oversized claim costs nothing.
+fn read_chunked_body(
+    recv: &mut RecvBuf,
+    stream: &mut TcpStream,
+    line: &mut Vec<u8>,
+    out: &mut Vec<u8>,
+) -> Result<(), ChunkErr> {
+    loop {
+        if !recv.read_line_into(stream, line)? {
+            return Err(ChunkErr::Malformed("unexpected EOF in chunked body".into()));
+        }
+        let sz = std::str::from_utf8(line)
+            .ok()
+            .map(|t| t.split(';').next().unwrap_or("").trim())
+            .and_then(|t| usize::from_str_radix(t, 16).ok())
+            .ok_or_else(|| {
+                ChunkErr::Malformed(format!(
+                    "malformed chunk size line {:?}",
+                    String::from_utf8_lossy(line)
+                ))
+            })?;
+        if sz == 0 {
+            // trailers (ignored) until the blank line
+            loop {
+                if !recv.read_line_into(stream, line)? {
+                    return Err(ChunkErr::Malformed("unexpected EOF in chunk trailers".into()));
+                }
+                if line.is_empty() {
+                    return Ok(());
+                }
+            }
+        }
+        if sz > MAX_BODY_BYTES || out.len() + sz > MAX_BODY_BYTES {
+            return Err(ChunkErr::TooLarge);
+        }
+        recv.read_exact_into(stream, out, sz)?;
+        // chunk data is terminated by its own CRLF
+        if !recv.read_line_into(stream, line)? || !line.is_empty() {
+            return Err(ChunkErr::Malformed("chunk data not terminated by CRLF".into()));
+        }
     }
 }
 
 /// `POST /v1/chat/completions`: admit (or shed), then stream or block
-/// on the per-request reply channel.
+/// on the per-request reply channel. Returns whether the connection
+/// survives (SSE always closes it).
+#[allow(clippy::too_many_arguments)]
 fn handle_chat(
-    mut stream: TcpStream,
+    stream: &mut TcpStream,
     shared: &Shared,
     ingest: &mpsc::Sender<Prompt>,
     body: &str,
-) -> std::io::Result<()> {
+    slo_header: Option<Result<SloSpec, String>>,
+    w: &mut WriteBufs,
+    keep: bool,
+) -> io::Result<bool> {
     if shared.drain.load(Ordering::SeqCst) {
-        return write_simple(
-            &mut stream,
-            503,
-            "Service Unavailable",
-            &api::error_json("server is draining", "overloaded"),
-        );
+        respond(stream, w, 503, "Service Unavailable",
+            &api::error_json("server is draining", "overloaded"), false, "")?;
+        return Ok(false);
     }
+    let slo_spec = match slo_header {
+        None => None,
+        Some(Ok(s)) => Some(s),
+        Some(Err(e)) => {
+            shared.metrics.lock().unwrap().inc("http_400_total");
+            respond(stream, w, 400, "Bad Request",
+                &api::error_json(&e, "invalid_request_error"), keep, "")?;
+            return Ok(keep);
+        }
+    };
     let req = match ChatCompletionRequest::parse(body) {
         Ok(r) => r,
         Err(e) => {
             shared.metrics.lock().unwrap().inc("http_400_total");
-            return write_simple(
-                &mut stream,
-                400,
-                "Bad Request",
-                &api::error_json(&e, "invalid_request_error"),
-            );
+            respond(stream, w, 400, "Bad Request",
+                &api::error_json(&e, "invalid_request_error"), keep, "")?;
+            return Ok(keep);
         }
     };
     let now_v = shared.vnow();
+    // churn: a request arriving while no device is routable is shed
+    // before admission — audited like every other shed, answered 503
+    if let Some(h) = &shared.health {
+        if h.iter().all(|s| s.load(Ordering::Acquire) == 2) {
+            let id = shared.next_id.fetch_add(1, Ordering::Relaxed);
+            shared.shed.fetch_add(1, Ordering::Relaxed);
+            shared.shed_ids.lock().unwrap().push(id);
+            if let Some(sink) = &shared.trace {
+                sink.emit(&TraceEvent::Shed {
+                    t: now_v,
+                    prompt: id,
+                    reason: "no_healthy_device".into(),
+                });
+            }
+            shared.metrics.lock().unwrap().inc("http_503_total");
+            respond(stream, w, 503, "Service Unavailable",
+                &api::error_json("no healthy device to serve the request", "overloaded"),
+                keep, "")?;
+            return Ok(keep);
+        }
+    }
     let depth = shared.in_flight.load(Ordering::Acquire);
     let id = shared.next_id.fetch_add(1, Ordering::Relaxed);
     if depth >= shared.max_queue_depth {
@@ -812,10 +1652,7 @@ fn handle_chat(
             sink.emit(&TraceEvent::Shed { t: now_v, prompt: id, reason: "queue_full".into() });
         }
         shared.metrics.lock().unwrap().inc("http_429_total");
-        return write_simple(
-            &mut stream,
-            429,
-            "Too Many Requests",
+        respond(stream, w, 429, "Too Many Requests",
             &api::error_json(
                 &format!(
                     "queue depth {depth} at the configured limit {}; retry later",
@@ -823,17 +1660,30 @@ fn handle_chat(
                 ),
                 "overloaded",
             ),
-        );
+            keep, "Retry-After: 1\r\n")?;
+        return Ok(keep);
     }
     let text = req.prompt_text();
     let prompt_tokens = tokenizer::count(&text);
     let cap = req.max_tokens.unwrap_or(shared.max_new_tokens).min(shared.max_new_tokens);
     let output_demand = cap.max(1);
     let cs = complexity::score(&text, output_demand);
-    let slo = if req.deferrable {
-        SloClass::Deferrable { deadline_s: req.deadline_s.unwrap_or(DEFAULT_DEADLINE_S) }
-    } else {
-        SloClass::Interactive
+    // the `x-slo` header outranks the body's deferrable/deadline_s
+    // fields; a header deadline outranks the body deadline
+    let slo = match slo_spec {
+        Some(SloSpec::Interactive) => SloClass::Interactive,
+        Some(SloSpec::Deferrable(dl)) => SloClass::Deferrable {
+            deadline_s: dl.or(req.deadline_s).unwrap_or(DEFAULT_DEADLINE_S),
+        },
+        None => {
+            if req.deferrable {
+                SloClass::Deferrable {
+                    deadline_s: req.deadline_s.unwrap_or(DEFAULT_DEADLINE_S),
+                }
+            } else {
+                SloClass::Interactive
+            }
+        }
     };
     let prompt = Prompt {
         id,
@@ -854,12 +1704,10 @@ fn handle_chat(
     if ingest.send(prompt).is_err() {
         shared.replies.lock().unwrap().remove(&id);
         shared.in_flight.fetch_sub(1, Ordering::AcqRel);
-        return write_simple(
-            &mut stream,
-            503,
-            "Service Unavailable",
+        respond(stream, w, 503, "Service Unavailable",
             &api::error_json("ingest stopped; server is shutting down", "overloaded"),
-        );
+            false, "")?;
+        return Ok(false);
     }
     let created = std::time::SystemTime::now()
         .duration_since(std::time::UNIX_EPOCH)
@@ -869,73 +1717,114 @@ fn handle_chat(
     let id_str = format!("chatcmpl-{id}");
     let model = req.model.clone().unwrap_or_else(|| shared.models[0].0.clone());
     if req.stream {
-        stream.write_all(
-            b"HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\n\
-              Cache-Control: no-cache\r\nConnection: close\r\n\r\n",
-        )?;
+        // SSE: stage the headers, then coalesce every reply already
+        // queued into one buffer per flush — one write_all per batch
+        // instead of three per token
+        w.out.clear();
+        w.out.push_str(
+            "HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\n\
+             Cache-Control: no-cache\r\nConnection: close\r\n\r\n",
+        );
         loop {
             let Some(rem) =
                 deadline.checked_duration_since(Instant::now()).filter(|r| !r.is_zero())
             else {
-                return stream.flush(); // headers are out; stop the stream
+                // deadline: emit what is staged (at least the headers)
+                stream.write_all(w.out.as_bytes())?;
+                stream.flush()?;
+                return Ok(false);
             };
             match rrx.recv_timeout(rem) {
-                Ok(Reply::Token(t)) => {
-                    let chunk = api::chunk_json(&id_str, &model, created, Some(&t), None);
-                    write_sse(&mut stream, &chunk)?;
-                }
-                Ok(Reply::Done(d)) => {
-                    let usage = usage_of(&d);
-                    write_sse(
-                        &mut stream,
-                        &api::chunk_json(&id_str, &model, created, None, Some(&usage)),
-                    )?;
-                    stream.write_all(b"data: [DONE]\n\n")?;
-                    return stream.flush();
+                Ok(first) => {
+                    let mut finished = append_frame(w, &id_str, &model, created, first);
+                    while !finished {
+                        match rrx.try_recv() {
+                            Ok(r) => finished = append_frame(w, &id_str, &model, created, r),
+                            Err(_) => break,
+                        }
+                    }
+                    stream.write_all(w.out.as_bytes())?;
+                    stream.flush()?;
+                    w.out.clear();
+                    if finished {
+                        return Ok(false);
+                    }
                 }
                 Err(mpsc::RecvTimeoutError::Timeout) => {}
-                Err(mpsc::RecvTimeoutError::Disconnected) => return stream.flush(),
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    stream.write_all(w.out.as_bytes())?;
+                    stream.flush()?;
+                    return Ok(false);
+                }
             }
         }
     } else {
-        let mut toks: Vec<String> = Vec::new();
+        w.content.clear();
         loop {
             let Some(rem) =
                 deadline.checked_duration_since(Instant::now()).filter(|r| !r.is_zero())
             else {
-                return write_simple(
-                    &mut stream,
-                    504,
-                    "Gateway Timeout",
+                respond(stream, w, 504, "Gateway Timeout",
                     &api::error_json(
                         "request timed out in queue; raise [serving.http] request_timeout_s \
                          or shed load",
                         "timeout",
                     ),
-                );
+                    keep, "")?;
+                return Ok(keep);
             };
             match rrx.recv_timeout(rem) {
-                Ok(Reply::Token(t)) => toks.push(t),
+                Ok(Reply::Token(t)) => w.content.push_str(&t),
                 Ok(Reply::Done(d)) => {
-                    let resp = ChatCompletionResponse {
-                        id: id_str,
-                        model,
+                    let usage = usage_of(&d);
+                    w.json.clear();
+                    api::write_response_into(
+                        &mut w.json,
+                        &id_str,
+                        &model,
                         created,
-                        content: toks.concat(),
-                        usage: usage_of(&d),
-                    };
-                    return write_simple(&mut stream, 200, "OK", &resp.to_json());
+                        &w.content,
+                        &usage,
+                    );
+                    respond_prepared(stream, w, 200, "OK", keep, "")?;
+                    return Ok(keep);
                 }
                 Err(mpsc::RecvTimeoutError::Timeout) => {}
                 Err(mpsc::RecvTimeoutError::Disconnected) => {
-                    return write_simple(
-                        &mut stream,
-                        503,
-                        "Service Unavailable",
-                        &api::error_json("request dropped during shutdown", "overloaded"),
-                    );
+                    respond(stream, w, 503, "Service Unavailable",
+                        &api::error_json(
+                            "request dropped: serving device lost or server shutting down",
+                            "overloaded",
+                        ),
+                        keep, "")?;
+                    return Ok(keep);
                 }
             }
+        }
+    }
+}
+
+/// Format one reply into the staged SSE batch; `true` = stream ended
+/// (the final usage chunk and `[DONE]` are staged).
+fn append_frame(w: &mut WriteBufs, id: &str, model: &str, created: u64, r: Reply) -> bool {
+    match r {
+        Reply::Token(t) => {
+            w.json.clear();
+            api::write_chunk_into(&mut w.json, id, model, created, Some(&t), None);
+            w.out.push_str("data: ");
+            w.out.push_str(&w.json);
+            w.out.push_str("\n\n");
+            false
+        }
+        Reply::Done(d) => {
+            let usage = usage_of(&d);
+            w.json.clear();
+            api::write_chunk_into(&mut w.json, id, model, created, None, Some(&usage));
+            w.out.push_str("data: ");
+            w.out.push_str(&w.json);
+            w.out.push_str("\n\n");
+            w.out.push_str("data: [DONE]\n\n");
+            true
         }
     }
 }
@@ -949,31 +1838,57 @@ fn usage_of(d: &DoneInfo) -> api::Usage {
             carbon_g: d.carbon_g,
             device: d.device.clone(),
             deferred_for_s: d.deferred_for_s,
+            slo: d.slo.to_string(),
         },
     }
 }
 
-/// One SSE frame: `data: <json>\n\n`, flushed so streaming is live.
-fn write_sse(stream: &mut TcpStream, payload: &str) -> std::io::Result<()> {
-    stream.write_all(b"data: ")?;
-    stream.write_all(payload.as_bytes())?;
-    stream.write_all(b"\n\n")?;
-    stream.flush()
-}
-
-/// One complete JSON (or plain) response with Content-Length.
-fn write_simple(
+/// Stage head + body into the reused buffer and send with one
+/// `write_all`. `extra` carries additional header lines (each
+/// `\r\n`-terminated), e.g. `Retry-After`.
+fn respond(
     stream: &mut TcpStream,
+    w: &mut WriteBufs,
     status: u16,
     reason: &str,
     body: &str,
-) -> std::io::Result<()> {
-    let head = format!(
+    keep: bool,
+    extra: &str,
+) -> io::Result<()> {
+    use std::fmt::Write as _;
+    w.out.clear();
+    let _ = write!(
+        w.out,
         "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\n\
-         Content-Length: {}\r\nConnection: close\r\n\r\n",
-        body.len()
+         Content-Length: {}\r\n{extra}Connection: {}\r\n\r\n",
+        body.len(),
+        if keep { "keep-alive" } else { "close" }
     );
-    stream.write_all(head.as_bytes())?;
-    stream.write_all(body.as_bytes())?;
+    w.out.push_str(body);
+    stream.write_all(w.out.as_bytes())?;
+    stream.flush()
+}
+
+/// [`respond`] with the body already staged in `w.json` (the hot 200
+/// path: zero copies out of the reused buffers).
+fn respond_prepared(
+    stream: &mut TcpStream,
+    w: &mut WriteBufs,
+    status: u16,
+    reason: &str,
+    keep: bool,
+    extra: &str,
+) -> io::Result<()> {
+    use std::fmt::Write as _;
+    w.out.clear();
+    let _ = write!(
+        w.out,
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\n{extra}Connection: {}\r\n\r\n",
+        w.json.len(),
+        if keep { "keep-alive" } else { "close" }
+    );
+    w.out.push_str(&w.json);
+    stream.write_all(w.out.as_bytes())?;
     stream.flush()
 }

@@ -18,12 +18,15 @@
 //! [`http`] puts a network front on the same machinery: an
 //! OpenAI-compatible HTTP/1.1 server (`POST /v1/chat/completions`
 //! streaming and non-streaming, `GET /v1/models`, `GET /metrics`) over
-//! `std::net::TcpListener`, thread-per-connection, feeding live
-//! requests into the same deferral queue / device-worker pipeline and
-//! streaming per-token SSE chunks back with `x_carbon` usage metadata.
-//! [`api`] holds the hand-rolled wire types. Options are built through
-//! [`ServeOptions::builder`], the one validated construction path the
-//! CLI, benches and the HTTP layer all share.
+//! `std::net::TcpListener`, feeding live requests into the same
+//! deferral queue / device-worker pipeline and streaming per-token SSE
+//! chunks back with `x_carbon` usage metadata. Connections are
+//! keep-alive with pipelining, multiplexed across a bounded worker
+//! pool with per-worker reusable buffers (no thread-per-connection);
+//! `verdant bench http` measures the resulting fast path and CI gates
+//! it. [`api`] holds the hand-rolled wire types. Options are built
+//! through [`ServeOptions::builder`], the one validated construction
+//! path the CLI, benches and the HTTP layer all share.
 
 pub mod api;
 pub mod http;

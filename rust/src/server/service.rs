@@ -607,12 +607,13 @@ struct FailShared {
 
 /// Zeroing a worker's heartbeat to the sentinel on drop means death —
 /// panic, backend error or injected fault — is detected immediately,
-/// not after the staleness timeout.
-const HEARTBEAT_DEAD: u64 = u64::MAX;
+/// not after the staleness timeout. (`pub(crate)`: the HTTP plane's
+/// worker loop and health checker reuse the same machinery.)
+pub(crate) const HEARTBEAT_DEAD: u64 = u64::MAX;
 
-struct HeartbeatGuard {
-    hb: Arc<Vec<AtomicU64>>,
-    d: usize,
+pub(crate) struct HeartbeatGuard {
+    pub(crate) hb: Arc<Vec<AtomicU64>>,
+    pub(crate) d: usize,
 }
 
 impl Drop for HeartbeatGuard {
@@ -624,7 +625,7 @@ impl Drop for HeartbeatGuard {
 /// Snapshot the live health codes into the policy core's mask (None
 /// when churn is off, which keeps routing bit-for-bit the unmasked
 /// path). Codes: 0 = Up, 1 = Degraded, 2 = Down.
-fn mask_of(health: Option<&Arc<Vec<AtomicUsize>>>) -> Option<HealthMask> {
+pub(crate) fn mask_of(health: Option<&Arc<Vec<AtomicUsize>>>) -> Option<HealthMask> {
     let h = health?;
     let mut m = HealthMask::all_up(h.len());
     for (d, s) in h.iter().enumerate() {

@@ -1,0 +1,72 @@
+//! Allocation counter: a counting wrapper around the system allocator.
+//!
+//! The HTTP fast path claims "zero steady-state heap allocation outside
+//! token decode" — a claim that rots silently unless something counts.
+//! [`CountingAllocator`] increments a process-wide counter on every
+//! `alloc`/`realloc`/`alloc_zeroed` (frees are not counted: the figure
+//! of merit is allocation *pressure*, and malloc/free pairs would just
+//! double it). `verdant bench http` samples [`allocation_count`] around
+//! each load combo and reports the per-request delta.
+//!
+//! The wrapper is only installed by the `verdant` **binary**
+//! (`#[global_allocator]` in `main.rs`); library unit tests run on the
+//! plain system allocator and [`allocation_count`] stays 0 there, so
+//! tests must never assert a nonzero count.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static ALLOCATIONS: AtomicU64 = AtomicU64::new(0);
+
+/// Allocations observed so far (0 unless [`CountingAllocator`] is the
+/// registered global allocator). Monotone; diff two samples to measure
+/// a window.
+pub fn allocation_count() -> u64 {
+    ALLOCATIONS.load(Ordering::Relaxed)
+}
+
+/// `System` plus a relaxed atomic increment per allocation. The
+/// counter costs one uncontended atomic add — negligible against the
+/// allocation itself, and the whole point is to prove the hot path
+/// performs none.
+pub struct CountingAllocator;
+
+// SAFETY: pure delegation to `System`; the only addition is a relaxed
+// counter increment, which cannot affect the returned memory.
+unsafe impl GlobalAlloc for CountingAllocator {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn count_is_monotone_and_zero_without_registration() {
+        // the library test binary does not register the allocator, so
+        // the counter must stay flat no matter how much we allocate
+        let before = allocation_count();
+        let v: Vec<u64> = (0..1024).collect();
+        std::hint::black_box(&v);
+        let after = allocation_count();
+        assert!(after >= before, "monotone");
+        assert_eq!(after, before, "unregistered wrapper must not count");
+    }
+}

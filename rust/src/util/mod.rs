@@ -1,10 +1,11 @@
 //! Shared utilities: deterministic RNG, statistics, JSON, property
-//! tests, lock-free snapshot publication.
+//! tests, lock-free snapshot publication, allocation counting.
 //!
 //! Everything here replaces a crate we cannot fetch offline (rand,
 //! serde_json, proptest, arc-swap); each submodule is small,
 //! dependency-free and unit-tested.
 
+pub mod alloc;
 pub mod check;
 pub mod json;
 pub mod rng;

@@ -13,6 +13,11 @@
 //!    event; nothing is silently dropped.
 //! 4. **Graceful drain** — a request admitted before `/admin/drain`
 //!    still completes, and `run()` returns only after it has.
+//! 5. **Keep-alive** — sequential and pipelined requests ride one
+//!    socket, idle connections expire, drain closes kept-alive
+//!    connections, chunked bodies round-trip (and malformed ones are
+//!    client errors), `x-slo` resolves and echoes, and churn on the
+//!    HTTP plane sheds 503 when no device is healthy.
 
 use std::io::{Read, Write};
 use std::net::TcpStream;
@@ -22,6 +27,7 @@ use std::time::Duration;
 use verdant::cluster::Cluster;
 use verdant::config::{ExecutionMode, ExperimentConfig};
 use verdant::server::{HttpOptions, HttpServer, ServeOptions, ServeReport};
+use verdant::simulator::{ChurnSchedule, OutageWindow};
 use verdant::telemetry::TraceSink;
 
 /// Stub-backed options compressed hard enough that a test request
@@ -51,7 +57,42 @@ fn spawn_server(
 }
 
 fn ephemeral() -> HttpOptions {
-    HttpOptions { addr: "127.0.0.1:0".into(), ..HttpOptions::default() }
+    HttpOptions {
+        addr: "127.0.0.1:0".into(),
+        // short idle expiry so helpers that read to EOF on a kept-alive
+        // socket (no Connection: close header) return quickly
+        idle_timeout: Duration::from_millis(150),
+        ..HttpOptions::default()
+    }
+}
+
+/// Read exactly one `Content-Length`-framed response off a kept-alive
+/// socket (which stays open, so EOF-reads would hang until idle expiry).
+fn read_framed(s: &mut TcpStream) -> String {
+    let mut buf: Vec<u8> = Vec::new();
+    let mut tmp = [0u8; 4096];
+    let header_end = loop {
+        if let Some(pos) = buf.windows(4).position(|w| w == b"\r\n\r\n") {
+            break pos + 4;
+        }
+        let n = s.read(&mut tmp).expect("read headers");
+        assert!(n > 0, "connection closed mid-headers");
+        buf.extend_from_slice(&tmp[..n]);
+    };
+    let head = String::from_utf8_lossy(&buf[..header_end]).to_string();
+    let cl: usize = head
+        .lines()
+        .find_map(|l| {
+            let (k, v) = l.split_once(':')?;
+            k.eq_ignore_ascii_case("content-length").then(|| v.trim().parse().ok())?
+        })
+        .expect("response has Content-Length");
+    while buf.len() < header_end + cl {
+        let n = s.read(&mut tmp).expect("read body");
+        assert!(n > 0, "connection closed mid-body");
+        buf.extend_from_slice(&tmp[..n]);
+    }
+    String::from_utf8_lossy(&buf).to_string()
 }
 
 /// One full HTTP/1.1 exchange (`Connection: close`), raw response back.
@@ -208,4 +249,258 @@ fn drain_completes_requests_admitted_before_it() {
     let report = handle.join().unwrap().expect("clean drain");
     assert_eq!(report.completed, 1, "drained, not dropped");
     assert_eq!(report.shed, 0);
+}
+
+#[test]
+fn keep_alive_serves_sequential_requests_on_one_socket() {
+    let cluster = Cluster::from_config(&ExperimentConfig::default().cluster);
+    let (addr, handle) = spawn_server(test_opts(&cluster), ephemeral());
+
+    let body = chat_body(false);
+    let mut s = TcpStream::connect(&addr).expect("connect");
+    s.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let mut ids = Vec::new();
+    for _ in 0..2 {
+        write!(
+            s,
+            "POST /v1/chat/completions HTTP/1.1\r\nHost: {addr}\r\n\
+             Connection: keep-alive\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        )
+        .expect("write request");
+        let resp = read_framed(&mut s);
+        assert!(resp.starts_with("HTTP/1.1 200"), "{resp}");
+        let id_at = resp.find("chatcmpl-").expect("response carries an id");
+        let id: String =
+            resp[id_at..].chars().take_while(|c| *c != '"').collect();
+        ids.push(id);
+    }
+    assert_ne!(ids[0], ids[1], "two distinct completions on one socket: {ids:?}");
+
+    request(&addr, "POST", "/admin/drain", "");
+    let report = handle.join().unwrap().expect("clean drain");
+    assert_eq!(report.completed, 2, "both kept-alive requests served");
+    assert_eq!(report.shed, 0);
+}
+
+#[test]
+fn pipelined_requests_answer_in_order() {
+    let cluster = Cluster::from_config(&ExperimentConfig::default().cluster);
+    let (addr, handle) = spawn_server(test_opts(&cluster), ephemeral());
+
+    // both requests in one write before reading anything back
+    let body = chat_body(false);
+    let one = format!(
+        "POST /v1/chat/completions HTTP/1.1\r\nHost: {addr}\r\n\
+         Connection: keep-alive\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    let mut s = TcpStream::connect(&addr).expect("connect");
+    s.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    s.write_all(format!("{one}{one}").as_bytes()).expect("write pipeline");
+
+    // a fresh server numbers requests from 0, so arrival order is
+    // observable in the ids: responses must come back in request order
+    let first = read_framed(&mut s);
+    let second = read_framed(&mut s);
+    assert!(first.starts_with("HTTP/1.1 200"), "{first}");
+    assert!(second.starts_with("HTTP/1.1 200"), "{second}");
+    assert!(first.contains("\"id\":\"chatcmpl-0\""), "{first}");
+    assert!(second.contains("\"id\":\"chatcmpl-1\""), "{second}");
+
+    request(&addr, "POST", "/admin/drain", "");
+    let report = handle.join().unwrap().expect("clean drain");
+    assert_eq!(report.completed, 2);
+}
+
+#[test]
+fn idle_keep_alive_connection_times_out() {
+    let cluster = Cluster::from_config(&ExperimentConfig::default().cluster);
+    let (addr, handle) = spawn_server(test_opts(&cluster), ephemeral());
+
+    // connect and send nothing: the server must close the socket after
+    // idle_timeout (150 ms here) rather than hold it forever
+    let mut s = TcpStream::connect(&addr).expect("connect");
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let mut out = String::new();
+    s.read_to_string(&mut out).expect("EOF, not a read timeout");
+    assert!(out.is_empty(), "idle close sends no bytes: {out:?}");
+
+    request(&addr, "POST", "/admin/drain", "");
+    let report = handle.join().unwrap().expect("clean drain");
+    assert_eq!(report.completed, 0);
+}
+
+#[test]
+fn chunked_request_bodies_round_trip() {
+    let cluster = Cluster::from_config(&ExperimentConfig::default().cluster);
+    let (addr, handle) = spawn_server(test_opts(&cluster), ephemeral());
+
+    let body = chat_body(false);
+    let (a, b) = body.split_at(body.len() / 2);
+    let mut s = TcpStream::connect(&addr).expect("connect");
+    s.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    write!(
+        s,
+        "POST /v1/chat/completions HTTP/1.1\r\nHost: {addr}\r\n\
+         Transfer-Encoding: chunked\r\nConnection: close\r\n\r\n\
+         {:x}\r\n{a}\r\n{:x}\r\n{b}\r\n0\r\n\r\n",
+        a.len(),
+        b.len()
+    )
+    .expect("write chunked request");
+    let mut resp = String::new();
+    s.read_to_string(&mut resp).expect("read response");
+    assert!(resp.starts_with("HTTP/1.1 200"), "{resp}");
+    assert!(resp.contains("\"x_carbon\""), "{resp}");
+
+    request(&addr, "POST", "/admin/drain", "");
+    let report = handle.join().unwrap().expect("clean drain");
+    assert_eq!(report.completed, 1, "chunked body decoded and served");
+}
+
+#[test]
+fn malformed_and_oversized_chunked_bodies_are_client_errors() {
+    let cluster = Cluster::from_config(&ExperimentConfig::default().cluster);
+    let (addr, handle) = spawn_server(test_opts(&cluster), ephemeral());
+
+    // a chunk-size line that is not hex is a 400, not a panic or hang
+    let mut s = TcpStream::connect(&addr).expect("connect");
+    s.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    write!(
+        s,
+        "POST /v1/chat/completions HTTP/1.1\r\nHost: {addr}\r\n\
+         Transfer-Encoding: chunked\r\n\r\nzz\r\n"
+    )
+    .expect("write malformed chunk");
+    let mut resp = String::new();
+    s.read_to_string(&mut resp).expect("read response");
+    assert!(resp.starts_with("HTTP/1.1 400"), "{resp}");
+
+    // a chunk claiming 2 MiB is rejected before any data is read
+    let mut s = TcpStream::connect(&addr).expect("connect");
+    s.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    write!(
+        s,
+        "POST /v1/chat/completions HTTP/1.1\r\nHost: {addr}\r\n\
+         Transfer-Encoding: chunked\r\n\r\n200000\r\n"
+    )
+    .expect("write oversized chunk header");
+    let mut resp = String::new();
+    s.read_to_string(&mut resp).expect("read response");
+    assert!(resp.starts_with("HTTP/1.1 413"), "{resp}");
+
+    request(&addr, "POST", "/admin/drain", "");
+    let report = handle.join().unwrap().expect("clean drain");
+    assert_eq!(report.completed, 0);
+    assert_eq!(report.shed, 0, "framing errors are not admission sheds");
+}
+
+#[test]
+fn drain_closes_idle_keep_alive_connections() {
+    let cluster = Cluster::from_config(&ExperimentConfig::default().cluster);
+    // a long idle timeout, so only drain-awareness can close the socket
+    let http = HttpOptions { idle_timeout: Duration::from_secs(30), ..ephemeral() };
+    let (addr, handle) = spawn_server(test_opts(&cluster), http);
+
+    // park a kept-alive connection with one completed exchange on it
+    let body = chat_body(false);
+    let mut s = TcpStream::connect(&addr).expect("connect");
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    write!(
+        s,
+        "POST /v1/chat/completions HTTP/1.1\r\nHost: {addr}\r\n\
+         Connection: keep-alive\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .expect("write request");
+    let resp = read_framed(&mut s);
+    assert!(resp.starts_with("HTTP/1.1 200"), "{resp}");
+
+    let drain = request(&addr, "POST", "/admin/drain", "");
+    assert!(drain.contains("draining"), "{drain}");
+
+    // the parked connection must see EOF well before its 30 s idle
+    // expiry — run() cannot return while a conn worker still owns it
+    let mut rest = String::new();
+    s.read_to_string(&mut rest).expect("EOF after drain");
+    assert!(rest.is_empty(), "drain close sends no bytes: {rest:?}");
+    let report = handle.join().unwrap().expect("clean drain");
+    assert_eq!(report.completed, 1);
+}
+
+#[test]
+fn x_slo_header_resolves_and_echoes_the_class() {
+    let cluster = Cluster::from_config(&ExperimentConfig::default().cluster);
+    let (addr, handle) = spawn_server(test_opts(&cluster), ephemeral());
+
+    let body = chat_body(false);
+    let slo_request = |header: &str| -> String {
+        let mut s = TcpStream::connect(&addr).expect("connect");
+        s.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        write!(
+            s,
+            "POST /v1/chat/completions HTTP/1.1\r\nHost: {addr}\r\n\
+             {header}Connection: close\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        )
+        .expect("write request");
+        let mut out = String::new();
+        s.read_to_string(&mut out).expect("read response");
+        out
+    };
+
+    // no header: interactive by default, echoed in the usage block
+    let plain = slo_request("");
+    assert!(plain.starts_with("HTTP/1.1 200"), "{plain}");
+    assert!(plain.contains("\"slo\":\"interactive\""), "{plain}");
+
+    // header outranks the body default and carries its deadline
+    let deferred = slo_request("x-slo: deferrable:120\r\n");
+    assert!(deferred.starts_with("HTTP/1.1 200"), "{deferred}");
+    assert!(deferred.contains("\"slo\":\"deferrable\""), "{deferred}");
+
+    // an unrecognized class is a 400 before admission
+    let bad = slo_request("x-slo: best-effort\r\n");
+    assert!(bad.starts_with("HTTP/1.1 400"), "{bad}");
+    assert!(bad.contains("x-slo"), "{bad}");
+
+    request(&addr, "POST", "/admin/drain", "");
+    let report = handle.join().unwrap().expect("clean drain");
+    assert_eq!(report.completed, 2, "the 400 was never admitted");
+    assert_eq!(report.shed, 0);
+}
+
+#[test]
+fn churn_with_no_healthy_device_sheds_503() {
+    let cluster = Cluster::from_config(&ExperimentConfig::default().cluster);
+    // script every device down from t=0 through the whole test (virtual
+    // time runs at 5000x wall, so the windows must be generous)
+    let windows: Vec<OutageWindow> = (0..cluster.devices.len())
+        .map(|d| OutageWindow { device: d, start_s: 0.0, end_s: 1.0e9 })
+        .collect();
+    let schedule = ChurnSchedule::scripted(windows).expect("valid schedule");
+    let opts = ServeOptions::builder()
+        .cluster(&cluster)
+        .execution(ExecutionMode::Stub)
+        .batch_timeout(Duration::from_millis(20))
+        .max_new_tokens(8)
+        .time_scale(5000.0)
+        .churn(Some(schedule))
+        .build()
+        .expect("test options validate");
+    let (addr, handle) = spawn_server(opts, ephemeral());
+
+    // let the health checker observe the scripted outage first
+    std::thread::sleep(Duration::from_millis(300));
+
+    let resp = request(&addr, "POST", "/v1/chat/completions", &chat_body(false));
+    assert!(resp.starts_with("HTTP/1.1 503"), "{resp}");
+    assert!(resp.contains("no healthy device"), "{resp}");
+
+    request(&addr, "POST", "/admin/drain", "");
+    let report = handle.join().unwrap().expect("clean drain");
+    assert_eq!(report.completed, 0);
+    assert_eq!(report.shed, 1, "the 503 is audited as a shed");
+    assert_eq!(report.outages, cluster.devices.len(), "one outage per device");
 }
